@@ -1,0 +1,59 @@
+//! Fig. 17: chain matrix multiplication — error growth per data type and
+//! the FP16 overflow cliff, on the PJRT artifacts when available.
+//!
+//! ```sh
+//! cargo run --release --example chain_matmul [N] [trials]
+//! ```
+
+use tcbench::numerics::{chain_errors, MmaExec, NativeExec, NumericCfg};
+use tcbench::report::render_sparkline;
+use tcbench::runtime::{ArtifactExec, ArtifactStore};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(14);
+    let trials: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(250);
+    let mut store = ArtifactStore::open_default().ok();
+    println!(
+        "chain D = A@B, N = {n}, {trials} trials, backend: {}",
+        if store.is_some() { "pjrt" } else { "native" }
+    );
+
+    for (label, cfg, init_low) in [
+        ("TF32 (init TF32)", NumericCfg::new("tf32", "f32", 16, 8, 8), true),
+        ("FP16 (init FP16)", NumericCfg::new("fp16", "f16", 16, 8, 8), true),
+        ("BF16 (init BF16)", NumericCfg::new("bf16", "f32", 16, 8, 8), true),
+        ("BF16 (init FP32)", NumericCfg::new("bf16", "f32", 16, 8, 8), false),
+    ] {
+        let mut native;
+        let mut artifact;
+        let exec: &mut dyn MmaExec = match store.as_mut() {
+            Some(s) => {
+                artifact = ArtifactExec::new(s, cfg).expect("artifact");
+                &mut artifact
+            }
+            None => {
+                native = NativeExec::new(cfg);
+                &mut native
+            }
+        };
+        let r = chain_errors(exec, n, trials, init_low, 11);
+        let last_finite = r
+            .rel_err
+            .iter()
+            .rev()
+            .find(|e| e.is_finite())
+            .copied()
+            .unwrap_or(f64::NAN);
+        print!(
+            "{label:>18}  {}  err(1)={:.1e} err(end)={:.1e}",
+            render_sparkline(&r.rel_err),
+            r.rel_err[0],
+            last_finite
+        );
+        match r.overflow_at {
+            Some(at) => println!("  OVERFLOW at N={at} (paper: FP16 stops at N=10)"),
+            None => println!(),
+        }
+    }
+}

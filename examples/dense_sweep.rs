@@ -1,0 +1,52 @@
+//! Regenerate the Fig. 6 / Fig. 7 sweeps on any calibrated device and
+//! print the latency/throughput grids plus the table-style convergence
+//! points.
+//!
+//! ```sh
+//! cargo run --release --example dense_sweep [device] [shape]
+//! cargo run --release --example dense_sweep rtx3070ti m16n8k8
+//! ```
+
+use tcbench::device;
+use tcbench::isa::{AbType, CdType, MmaInstr, MmaShape};
+use tcbench::microbench::{convergence_point, sweep_mma};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let dev_name = args.get(1).map(String::as_str).unwrap_or("a100");
+    let shape: MmaShape = args
+        .get(2)
+        .map(String::as_str)
+        .unwrap_or("m16n8k16")
+        .parse()
+        .expect("shape like m16n8k16");
+
+    let dev = device::by_name(dev_name).expect("device: a100|rtx3070ti|rtx2080ti");
+    let ab = if dev.peaks.bf16 > 0 { AbType::Bf16 } else { AbType::Fp16 };
+    let instr = MmaInstr::dense(ab, CdType::Fp32, shape);
+    assert!(dev.supports(&instr), "{instr} unsupported on {}", dev.name);
+
+    let sweep = sweep_mma(&dev, &instr);
+    println!("== {} on {} ==", instr, dev.product);
+    print!("{:>6}", "w\\ilp");
+    for ilp in &sweep.ilp_axis {
+        print!("{ilp:>16}");
+    }
+    println!();
+    for &w in &sweep.warps_axis {
+        print!("{w:>6}");
+        for &ilp in &sweep.ilp_axis {
+            let c = sweep.cell(w, ilp).unwrap();
+            print!("{:>8.1}/{:<7.0}", c.latency, c.throughput);
+        }
+        println!();
+    }
+    println!("(cells are latency-cycles / FMA-per-clk-per-SM)");
+    for warps in [4, 8] {
+        let c = convergence_point(&sweep, warps);
+        println!(
+            "convergence at {warps} warps: ILP {} -> {:.1} cy, {:.1} FMA/clk/SM",
+            c.ilp, c.latency, c.throughput
+        );
+    }
+}

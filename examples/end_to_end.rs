@@ -1,0 +1,81 @@
+//! End-to-end driver: exercises the **whole stack on a real workload** —
+//! the complete paper campaign (every table and figure) with the §8
+//! numeric experiments executed through the PJRT runtime on the
+//! AOT-compiled Pallas/JAX artifacts, all orchestrated by the
+//! coordinator's worker pool, and a final scorecard of paper-vs-measured
+//! headline numbers.
+//!
+//! This is the EXPERIMENTS.md driver:
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end [--out results]
+//! ```
+
+use std::time::Instant;
+
+use tcbench::coordinator::{run_experiment, Backend, EXPERIMENTS};
+use tcbench::device::a100;
+use tcbench::isa::shapes::*;
+use tcbench::isa::{AbType, CdType, MmaInstr};
+use tcbench::microbench::measure_mma;
+use tcbench::numerics::{profile_op, InitKind, NativeExec, NumericCfg, ProfileOp};
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::args()
+        .skip_while(|a| a != "--out")
+        .nth(1)
+        .unwrap_or_else(|| "results".to_string());
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut backend = Backend::auto();
+    println!(
+        "== tcbench end-to-end campaign ({} experiments, numeric backend: {}) ==\n",
+        EXPERIMENTS.len(),
+        backend.name()
+    );
+
+    let t0 = Instant::now();
+    let mut failures = 0;
+    for e in EXPERIMENTS {
+        let t = Instant::now();
+        match run_experiment(e.id, &mut backend) {
+            Ok(report) => {
+                std::fs::write(format!("{out_dir}/{}.txt", e.id), &report)?;
+                println!("[{:>6.2?}] {:<6} {}", t.elapsed(), e.id, e.description);
+            }
+            Err(err) => {
+                failures += 1;
+                eprintln!("[FAILED ] {:<6} {err:#}", e.id);
+            }
+        }
+    }
+    println!("\ncampaign finished in {:.2?}; reports in {out_dir}/", t0.elapsed());
+
+    // ------------------------------------------------ scorecard
+    println!("\n== scorecard (paper vs reproduced) ==");
+    let d = a100();
+    let m = measure_mma(&d, &MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16), 8, 2);
+    score("mma.m16n8k16 (8,2) thr FMA/clk", 1004.2, m.throughput);
+    let s = measure_mma(&d, &MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32), 8, 2);
+    score("mma.sp.m16n8k32 (8,2) thr", 1979.1, s.throughput);
+    let anom = measure_mma(&d, &MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K16), 8, 2);
+    score("mma.sp small-k anomaly thr", 1290.5, anom.throughput);
+    let acc = profile_op(
+        &mut NativeExec::new(NumericCfg::new("bf16", "f32", 16, 8, 8)),
+        ProfileOp::Accumulation,
+        InitKind::LowPrecision,
+        1000,
+        7,
+    );
+    score("BF16 accumulation error", 1.89e-8, acc.mean_abs_err);
+
+    if failures > 0 {
+        anyhow::bail!("{failures} experiments failed");
+    }
+    Ok(())
+}
+
+fn score(what: &str, paper: f64, measured: f64) {
+    let dev = (measured - paper) / paper * 100.0;
+    println!("{what:<36} paper {paper:>10.4e}  ours {measured:>10.4e}  ({dev:+.1}%)");
+}

@@ -1,0 +1,55 @@
+//! §8.1 element-wise numeric profiling (Tables 12-15) on the real
+//! request path: the Pallas-kernel AOT artifacts executed through PJRT
+//! (falls back to the native softfloat datapath if artifacts are not
+//! built).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example numeric_profile
+//! ```
+
+use tcbench::numerics::{profile_op, InitKind, MmaExec, NativeExec, NumericCfg, ProfileOp};
+use tcbench::runtime::{ArtifactExec, ArtifactStore};
+
+fn main() {
+    let mut store = ArtifactStore::open_default().ok();
+    println!(
+        "backend: {}",
+        if store.is_some() { "pjrt (AOT artifacts)" } else { "native softfloat" }
+    );
+
+    for (label, cfg, paper_low_acc) in [
+        ("Table 12 — BF16 (C/D FP32)", NumericCfg::new("bf16", "f32", 16, 8, 8), 1.89e-8),
+        ("Table 13 — FP16 (C/D FP32)", NumericCfg::new("fp16", "f32", 16, 8, 8), 0.0),
+        ("Table 14 — FP16 (C/D FP16)", NumericCfg::new("fp16", "f16", 16, 8, 8), f64::NAN),
+        ("Table 15 — TF32 (C/D FP32)", NumericCfg::new("tf32", "f32", 16, 8, 8), 0.0),
+    ] {
+        println!("\n{label}");
+        let mut native;
+        let mut artifact;
+        let exec: &mut dyn MmaExec = match store.as_mut() {
+            Some(s) => {
+                artifact = ArtifactExec::new(s, cfg).expect("artifact");
+                &mut artifact
+            }
+            None => {
+                native = NativeExec::new(cfg);
+                &mut native
+            }
+        };
+        for init in [InitKind::LowPrecision, InitKind::Fp32] {
+            for op in ProfileOp::ALL {
+                let r = profile_op(exec, op, init, 1000, 7);
+                println!(
+                    "  {:<22} {:<14} err {:>9.2e}   (vs cvtFP16: {:>9.2e})",
+                    op.paper_name(),
+                    format!("{init:?}"),
+                    r.mean_abs_err,
+                    r.mean_abs_err_vs_cvt_fp16,
+                );
+            }
+        }
+        if paper_low_acc.is_finite() && paper_low_acc > 0.0 {
+            println!("  (paper: accumulation error {paper_low_acc:.2e} under low-precision init)");
+        }
+    }
+}

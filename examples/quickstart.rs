@@ -1,0 +1,39 @@
+//! Quickstart: measure one Tensor-Core instruction the way the paper
+//! does (§4) — completion latency, then a (warps, ILP) point — and print
+//! the numbers next to the paper's.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use tcbench::device::a100;
+use tcbench::isa::shapes::M16N8K16;
+use tcbench::isa::{AbType, CdType, MmaInstr};
+use tcbench::microbench::{completion_latency_mma, measure_mma};
+
+fn main() {
+    // 1. pick a calibrated device and an instruction
+    let device = a100();
+    let instr = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16);
+    println!("device: {}", device.product);
+    println!("instr:  {}", instr.ptx());
+
+    // 2. completion/issue latency: ILP=1, one warp per SM
+    let completion = completion_latency_mma(&device, &instr);
+    println!("completion latency: {completion:.1} cycles   (paper: 24.7)");
+
+    // 3. a saturated configuration: 8 warps, ILP=2
+    let m = measure_mma(&device, &instr, 8, 2);
+    println!(
+        "(8 warps, ILP 2):   {:.1} cycles, {:.1} FMA/clk/SM   (paper: 32.6, 1004.2; vendor peak 1024)",
+        m.latency, m.throughput
+    );
+
+    // 4. the 6-warp anomaly (Fig. 6 finding 5)
+    let m4 = measure_mma(&device, &instr, 4, 3);
+    let m6 = measure_mma(&device, &instr, 6, 3);
+    println!(
+        "6-warp dip at ILP 3: 4 warps -> {:.0} FMA/clk, 6 warps -> {:.0} (drops: sub-cores 0/1 carry two warps)",
+        m4.throughput, m6.throughput
+    );
+}

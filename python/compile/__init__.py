@@ -1,0 +1,2 @@
+"""Build-time compile package: L1 Pallas kernels, L2 JAX model, AOT
+lowering to HLO-text artifacts. Never imported on the Rust request path."""

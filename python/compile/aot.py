@@ -1,0 +1,79 @@
+"""AOT lowering: L2 model -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Writes one `<name>.hlo.txt` per artifact plus `manifest.json` describing
+every artifact (shape, batch, numeric config) for the Rust loader.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+# The kernel's high-precision inner product is f64; enable x64 before any
+# tracing happens.
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import ARTIFACTS, build_model, example_args  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(spec) -> str:
+    model = build_model(spec)
+    lowered = jax.jit(model).lower(*example_args(spec))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated artifact names (default: all)"
+    )
+    args = parser.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = args.only.split(",") if args.only else list(ARTIFACTS)
+
+    manifest = {}
+    for name in names:
+        spec = ARTIFACTS[name]
+        text = lower_artifact(spec)
+        path = out_dir / spec.filename
+        path.write_text(text)
+        manifest[name] = {
+            "file": spec.filename,
+            "ab": spec.cfg.ab,
+            "cd": spec.cfg.cd,
+            "acc_rnd": spec.cfg.acc_rnd,
+            "m": spec.m,
+            "n": spec.n,
+            "k": spec.k,
+            "batch": spec.batch,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {out_dir / 'manifest.json'} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

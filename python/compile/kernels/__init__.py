@@ -1,0 +1,15 @@
+"""L1: Pallas kernel(s) for the paper's compute hot-spot (emulated
+Tensor-Core MMA) plus the quantization primitives and the pure-numpy
+correctness oracle."""
+
+from .quantize import (  # noqa: F401
+    AB_DTYPES,
+    quantize,
+    quantize_bf16,
+    quantize_fp16,
+    quantize_tf32,
+    round_f64_to_f32,
+    round_f64_to_f32_rne,
+    round_f64_to_f32_rz,
+)
+from .tcmma import CONFIGS, TcMmaConfig, tcmma, tcmma_tile  # noqa: F401

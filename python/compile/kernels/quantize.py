@@ -1,0 +1,113 @@
+"""Precision-quantization primitives for the emulated Tensor-Core datapath.
+
+The paper (Section 8, Table 11) studies three low-precision floating-point
+input types supported by Ampere Tensor Cores:
+
+    ===========  ====  ========  ========  ========
+    type         sign  exponent  mantissa  register
+    ===========  ====  ========  ========  ========
+    FP32          1       8         23       32b
+    TF32          1       8         10       32b
+    FP16          1       5         10       16b
+    BF16          1       8          7       16b
+    ===========  ====  ========  ========  ========
+
+The hardware quantizes FP32 inputs to the operand type with
+round-to-nearest-even (RNE), multiplies exactly, adds the k-term inner
+product at high precision, and performs the accumulation `[A@B] + C` in
+FP32 with a type-dependent rounding mode (RNE for the FP16/TF32 paths, RZ
+for the BF16 path — the calibration that reproduces the paper's Table 12;
+see DESIGN.md §4).
+
+Everything here is pure jax.numpy so it can be used both inside the Pallas
+kernel (L1) and in the plain-jnp model (L2), and lowers to ordinary HLO
+ops under `interpret=True`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_bf16",
+    "quantize_fp16",
+    "quantize_tf32",
+    "quantize",
+    "round_f64_to_f32_rne",
+    "round_f64_to_f32_rz",
+    "round_f64_to_f32",
+    "AB_DTYPES",
+]
+
+# Operand (A/B) types supported by the emulated datapath.
+AB_DTYPES = ("bf16", "fp16", "tf32")
+
+
+def quantize_bf16(x: jax.Array) -> jax.Array:
+    """FP32 -> BF16 -> FP32 (RNE). BF16 keeps FP32's 8-bit exponent."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def quantize_fp16(x: jax.Array) -> jax.Array:
+    """FP32 -> FP16 -> FP32 (RNE). Values beyond ±65504 overflow to ±inf,
+    which is exactly the paper's Fig. 17 failure mode for FP16 chains."""
+    return x.astype(jnp.float16).astype(jnp.float32)
+
+
+def quantize_tf32(x: jax.Array) -> jax.Array:
+    """FP32 -> TF32 -> FP32 (RNE ties-to-even on the 10-bit mantissa).
+
+    TF32 is stored in a 32-bit register (Table 11): same 8-bit exponent as
+    FP32, mantissa truncated from 23 to 10 bits. Implemented with integer
+    bit manipulation; NaN/Inf (exponent all-ones) pass through untouched.
+    """
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    exp_all_ones = (bits >> jnp.uint32(23)) & jnp.uint32(0xFF) == jnp.uint32(0xFF)
+    # RNE on the low 13 bits: add 0x0FFF + lsb-of-kept-part, then mask.
+    lsb = (bits >> jnp.uint32(13)) & jnp.uint32(1)
+    rounded = (bits + jnp.uint32(0x0FFF) + lsb) & ~jnp.uint32(0x1FFF)
+    out = jnp.where(exp_all_ones, bits, rounded)
+    return jax.lax.bitcast_convert_type(out, jnp.float32)
+
+
+_QUANTIZERS = {
+    "bf16": quantize_bf16,
+    "fp16": quantize_fp16,
+    "tf32": quantize_tf32,
+    # identity is handy for oracles / ablations
+    "fp32": lambda x: x,
+}
+
+
+def quantize(x: jax.Array, dtype: str) -> jax.Array:
+    """Quantize an FP32 array to `dtype` and back (RNE)."""
+    try:
+        return _QUANTIZERS[dtype](x)
+    except KeyError:
+        raise ValueError(f"unknown operand dtype {dtype!r}") from None
+
+
+def round_f64_to_f32_rne(x: jax.Array) -> jax.Array:
+    """Round a float64 array to float32, round-to-nearest-even."""
+    return x.astype(jnp.float32)
+
+
+def round_f64_to_f32_rz(x: jax.Array) -> jax.Array:
+    """Round a float64 array to float32, round-toward-zero (truncation).
+
+    The default f64->f32 cast is RNE; when it rounded *away* from zero we
+    step one ulp back toward zero with nextafter. (If the cast rounded
+    toward zero, RNE and RZ agree.)
+    """
+    y = x.astype(jnp.float32)
+    stepped = jnp.nextafter(y, jnp.zeros_like(y))
+    away = jnp.abs(y.astype(jnp.float64)) > jnp.abs(x)
+    return jnp.where(away, stepped, y)
+
+
+def round_f64_to_f32(x: jax.Array, mode: str) -> jax.Array:
+    """Round f64 -> f32 with the named mode ('rne' | 'rz')."""
+    if mode == "rne":
+        return round_f64_to_f32_rne(x)
+    if mode == "rz":
+        return round_f64_to_f32_rz(x)
+    raise ValueError(f"unknown rounding mode {mode!r}")

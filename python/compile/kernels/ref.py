@@ -1,0 +1,97 @@
+"""Pure-numpy correctness oracle for the emulated Tensor-Core MMA kernel.
+
+Deliberately *independent* of the jnp/Pallas implementation: quantization
+is done through ml_dtypes casts / explicit integer bit twiddling, the
+inner product is an explicit per-element Python loop over float64, and the
+RZ rounding is implemented via nextafter on the RNE cast. pytest compares
+the Pallas kernel against this oracle (python/tests/test_kernel.py).
+"""
+
+import math
+
+import ml_dtypes
+import numpy as np
+
+__all__ = [
+    "ref_quantize",
+    "ref_round_f64_to_f32",
+    "ref_tcmma_tile",
+    "ref_tcmma",
+]
+
+
+def _quantize_tf32_scalar(x: np.float32) -> np.float32:
+    bits = np.float32(x).view(np.uint32)
+    exp = (int(bits) >> 23) & 0xFF
+    if exp == 0xFF:  # inf / nan pass through
+        return np.float32(x)
+    b = int(bits)
+    lsb = (b >> 13) & 1
+    b = (b + 0x0FFF + lsb) & 0xFFFFFFFF
+    b &= ~0x1FFF & 0xFFFFFFFF
+    return np.uint32(b).view(np.float32)
+
+
+def ref_quantize(x: np.ndarray, dtype: str) -> np.ndarray:
+    """FP32 -> low precision -> FP32, RNE. x is a float32 ndarray."""
+    x = np.asarray(x, dtype=np.float32)
+    if dtype == "bf16":
+        return x.astype(ml_dtypes.bfloat16).astype(np.float32)
+    if dtype == "fp16":
+        return x.astype(np.float16).astype(np.float32)
+    if dtype == "tf32":
+        out = np.empty_like(x)
+        flat_in, flat_out = x.ravel(), out.ravel()
+        for i, v in enumerate(flat_in):
+            flat_out[i] = _quantize_tf32_scalar(v)
+        return out
+    if dtype == "fp32":
+        return x
+    raise ValueError(f"unknown operand dtype {dtype!r}")
+
+
+def ref_round_f64_to_f32(x: float, mode: str) -> np.float32:
+    """Round a python/f64 scalar to f32 with 'rne' or 'rz'."""
+    y = np.float32(x)
+    if mode == "rne":
+        return y
+    if mode == "rz":
+        if math.isinf(float(y)) and math.isfinite(x):
+            # RZ never rounds a finite value to infinity.
+            return np.float32(math.copysign(float(np.finfo(np.float32).max), x))
+        if not math.isfinite(float(y)):
+            return y
+        if abs(float(y)) > abs(x):
+            return np.nextafter(y, np.float32(0.0), dtype=np.float32)
+        return y
+    raise ValueError(f"unknown rounding mode {mode!r}")
+
+
+def ref_tcmma_tile(a, b, c, ab: str, cd: str, acc_rnd: str) -> np.ndarray:
+    """One (m,k)x(k,n)+(m,n) tile through the reference datapath."""
+    a = ref_quantize(np.asarray(a, np.float32), ab)
+    b = ref_quantize(np.asarray(b, np.float32), ab)
+    c = np.asarray(c, np.float32)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k2 == k and c.shape == (m, n)
+    out = np.empty((m, n), dtype=np.float32)
+    for i in range(m):
+        for j in range(n):
+            s = 0.0  # float64 accumulator — the "wide adder"
+            for p in range(k):
+                s += float(a[i, p]) * float(b[p, j])
+            s32 = np.float32(s)  # inner product rounds once, RNE
+            d = ref_round_f64_to_f32(float(s32) + float(c[i, j]), acc_rnd)
+            if cd == "f16":
+                d = np.float32(np.float16(d))
+            out[i, j] = d
+    return out
+
+
+def ref_tcmma(a, b, c, ab: str, cd: str, acc_rnd: str) -> np.ndarray:
+    """Batched reference: f32[B,m,k] x f32[B,k,n] + f32[B,m,n]."""
+    a, b, c = (np.asarray(x, np.float32) for x in (a, b, c))
+    return np.stack(
+        [ref_tcmma_tile(a[i], b[i], c[i], ab, cd, acc_rnd) for i in range(a.shape[0])]
+    )

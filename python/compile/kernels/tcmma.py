@@ -1,0 +1,139 @@
+"""L1 Pallas kernel: emulated Tensor-Core fused MMA (`D = A @ B + C`).
+
+This is the compute hot-spot of the paper's Section 8 numeric experiments:
+one `mma`-shaped tile FMA with the Tensor-Core datapath model
+
+    1. quantize A and B to the operand type (RNE),
+    2. multiply exactly,
+    3. add the k-term inner product at high precision (f64 here),
+    4. round the accumulation `[A@B] + C` to FP32 once, with the
+       type-dependent accumulation rounding mode,
+    5. cast D to the C/D type (FP32 or FP16).
+
+The kernel is batched over independent trials (the paper averages 1000
+random trials); the Pallas grid walks the batch dimension so each grid
+step keeps one (m,k)x(k,n)+(m,n) working set in VMEM.
+
+Hardware adaptation (DESIGN.md §2): the paper's per-warp register
+fragments + `ldmatrix` staging become a BlockSpec index_map that stages
+one trial tile per grid step — the HBM->VMEM schedule is the TPU analogue
+of the smem->register-file movement the paper microbenchmarks.
+
+Pallas runs with `interpret=True` so the lowered HLO executes on the CPU
+PJRT client (real TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot run).
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import AB_DTYPES, quantize, round_f64_to_f32
+
+__all__ = ["TcMmaConfig", "CONFIGS", "tcmma", "tcmma_tile"]
+
+
+@dataclass(frozen=True)
+class TcMmaConfig:
+    """Numeric configuration of one emulated Tensor-Core instruction.
+
+    `ab`      — operand type of matrices A and B ('bf16' | 'fp16' | 'tf32')
+    `cd`      — accumulator/result type of C and D ('f32' | 'f16')
+    `acc_rnd` — rounding mode of the FP32 accumulation step. Calibrated to
+                the paper's Table 12/13/15: 'rz' for the BF16 path, 'rne'
+                for FP16/TF32 (DESIGN.md §4).
+    """
+
+    ab: str
+    cd: str = "f32"
+
+    def __post_init__(self):
+        if self.ab not in AB_DTYPES:
+            raise ValueError(f"operand dtype must be one of {AB_DTYPES}")
+        if self.cd not in ("f32", "f16"):
+            raise ValueError("C/D dtype must be 'f32' or 'f16'")
+        if self.ab != "fp16" and self.cd == "f16":
+            raise ValueError("FP16 C/D is only supported for FP16 operands")
+
+    @property
+    def acc_rnd(self) -> str:
+        return "rz" if self.ab == "bf16" else "rne"
+
+    @property
+    def name(self) -> str:
+        return f"{self.ab}_{self.cd}"
+
+
+#: The paper's Section-8 instruction variants (Tables 12-15, Fig. 17).
+CONFIGS = {
+    "bf16_f32": TcMmaConfig("bf16", "f32"),
+    "fp16_f32": TcMmaConfig("fp16", "f32"),
+    "fp16_f16": TcMmaConfig("fp16", "f16"),
+    "tf32_f32": TcMmaConfig("tf32", "f32"),
+}
+
+
+def tcmma_tile(a: jax.Array, b: jax.Array, c: jax.Array, cfg: TcMmaConfig) -> jax.Array:
+    """The datapath on one (m,k)x(k,n)+(m,n) tile, plain jnp (f32 in/out).
+
+    Shared by the Pallas kernel body and the L2 model; all arrays are f32
+    (FP16 C/D values travel as their exact f32 images).
+    """
+    aq = quantize(a, cfg.ab)
+    bq = quantize(b, cfg.ab)
+    # Exact products + high-precision inner product: quantized operands
+    # have <=11-bit significands, so the f64 dot is the "infinitely
+    # precise multiply + wide adder" stand-in (DESIGN.md §4). The k-term
+    # inner product is rounded once (RNE) into an FP32 result register…
+    prod = jnp.dot(
+        aq.astype(jnp.float64), bq.astype(jnp.float64),
+        preferred_element_type=jnp.float64,
+    )
+    s32 = prod.astype(jnp.float32)
+    # …and the accumulation `[A@B] + C` is a second FP32 step with the
+    # type-dependent rounding mode (RZ on the BF16 path — Table 12).
+    acc = s32.astype(jnp.float64) + c.astype(jnp.float64)
+    d32 = round_f64_to_f32(acc, cfg.acc_rnd)
+    if cfg.cd == "f16":
+        # The hardware computes at high precision and converts the final
+        # result to FP16 at the end (paper Table 14 finding).
+        d32 = d32.astype(jnp.float16).astype(jnp.float32)
+    return d32
+
+
+def _kernel(a_ref, b_ref, c_ref, o_ref, *, cfg: TcMmaConfig):
+    a = a_ref[0]  # (m, k)
+    b = b_ref[0]  # (k, n)
+    c = c_ref[0]  # (m, n)
+    o_ref[0] = tcmma_tile(a, b, c, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def tcmma(a: jax.Array, b: jax.Array, c: jax.Array, cfg: TcMmaConfig) -> jax.Array:
+    """Batched emulated Tensor-Core MMA.
+
+    a: f32[B, m, k]   b: f32[B, k, n]   c: f32[B, m, n]  ->  f32[B, m, n]
+    """
+    if a.ndim != 3 or b.ndim != 3 or c.ndim != 3:
+        raise ValueError("tcmma expects batched rank-3 operands")
+    batch, m, k = a.shape
+    _, k2, n = b.shape
+    if k2 != k or b.shape[0] != batch or c.shape != (batch, m, n):
+        raise ValueError(
+            f"inconsistent operand shapes a={a.shape} b={b.shape} c={c.shape}"
+        )
+    return pl.pallas_call(
+        partial(_kernel, cfg=cfg),
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, m, n), jnp.float32),
+        interpret=True,
+    )(a, b, c)

@@ -1,0 +1,93 @@
+"""L2: the JAX compute graphs AOT-lowered for the Rust coordinator.
+
+Each artifact is one batched emulated-Tensor-Core MMA `D = A @ B + C`
+(the paper's `mma` instruction, Fig. 5/8) at a fixed numeric config and
+operand shape, calling the L1 Pallas kernel. The same executable serves
+all of the paper's Section-8 experiments:
+
+  * element-wise profiling (Fig. 16 a/b/c) — the Rust side constructs the
+    sparse one-element / one-row input patterns,
+  * chain matrix multiplication (Fig. 17) — the Rust side feeds D back as
+    the next A with C = 0,
+
+batched over independent random trials.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import CONFIGS, TcMmaConfig, tcmma
+
+__all__ = ["ArtifactSpec", "ARTIFACTS", "build_model", "example_args"]
+
+#: Number of independent trials executed per call. The paper averages
+#: 1000 trials; the Rust coordinator runs ceil(1000/TRIALS) executions.
+TRIALS = 256
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT artifact: a numeric config at an `mma` operand shape."""
+
+    name: str
+    cfg: TcMmaConfig
+    m: int
+    n: int
+    k: int
+    batch: int = TRIALS
+
+    @property
+    def filename(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+
+def _specs() -> list[ArtifactSpec]:
+    """The paper's Section-5/8 instruction variants.
+
+    Shapes follow Table 3's dtype->shape support matrix: BF16/FP16 have
+    m16n8k16 and m16n8k8; TF32 has m16n8k8 and m16n8k4. The chain study
+    (Fig. 17) uses m16n8k8 for all three types ("this common shape is
+    supported by BF16, FP16, and TF32").
+    """
+    out = []
+    for cfg_name, shapes in [
+        ("bf16_f32", [(16, 8, 16), (16, 8, 8)]),
+        ("fp16_f32", [(16, 8, 16), (16, 8, 8)]),
+        ("fp16_f16", [(16, 8, 16), (16, 8, 8)]),
+        ("tf32_f32", [(16, 8, 8), (16, 8, 4)]),
+    ]:
+        cfg = CONFIGS[cfg_name]
+        for m, n, k in shapes:
+            out.append(
+                ArtifactSpec(f"tcmma_{cfg_name}_m{m}n{n}k{k}", cfg, m, n, k)
+            )
+    return out
+
+
+ARTIFACTS: dict[str, ArtifactSpec] = {s.name: s for s in _specs()}
+
+
+def build_model(spec: ArtifactSpec):
+    """Return the jittable batched MMA for `spec`.
+
+    f32[B,m,k] x f32[B,k,n] + f32[B,m,n] -> (f32[B,m,n],)
+    (1-tuple: the AOT bridge lowers with return_tuple=True and the Rust
+    side unwraps with to_tuple1 — see /opt/xla-example/README.md.)
+    """
+
+    def model(a, b, c):
+        return (tcmma(a, b, c, spec.cfg),)
+
+    return model
+
+
+def example_args(spec: ArtifactSpec):
+    """ShapeDtypeStructs used to lower `spec`."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((spec.batch, spec.m, spec.k), f32),
+        jax.ShapeDtypeStruct((spec.batch, spec.k, spec.n), f32),
+        jax.ShapeDtypeStruct((spec.batch, spec.m, spec.n), f32),
+    )

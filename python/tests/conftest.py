@@ -1,0 +1,5 @@
+import jax
+
+# The kernel's high-precision inner product is f64; must be enabled
+# before any tracing in any test module.
+jax.config.update("jax_enable_x64", True)

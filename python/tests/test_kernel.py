@@ -1,0 +1,144 @@
+"""Kernel-vs-oracle: the CORE correctness signal for L1.
+
+The Pallas kernel (interpret=True) must match the independent pure-numpy
+oracle bit-exactly on every numeric config, including under a hypothesis
+sweep of shapes and value ranges."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import CONFIGS, TcMmaConfig, tcmma, tcmma_tile
+from compile.kernels.ref import ref_tcmma
+
+ALL_CFGS = sorted(CONFIGS)
+
+
+def run_both(a, b, c, cfg):
+    got = np.asarray(tcmma(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), cfg))
+    want = ref_tcmma(a, b, c, cfg.ab, cfg.cd, cfg.acc_rnd)
+    return got, want
+
+
+@pytest.mark.parametrize("cfg_name", ALL_CFGS)
+@pytest.mark.parametrize("shape", [(16, 8, 16), (16, 8, 8), (16, 8, 4), (8, 8, 4)])
+def test_kernel_matches_oracle(cfg_name, shape):
+    cfg = CONFIGS[cfg_name]
+    m, n, k = shape
+    rng = np.random.default_rng(hash((cfg_name, shape)) % 2**32)
+    a = rng.standard_normal((8, m, k)).astype(np.float32)
+    b = rng.standard_normal((8, k, n)).astype(np.float32)
+    c = rng.standard_normal((8, m, n)).astype(np.float32)
+    got, want = run_both(a, b, c, cfg)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    cfg_name=st.sampled_from(ALL_CFGS),
+    m=st.sampled_from([1, 4, 8, 16]),
+    n=st.sampled_from([1, 4, 8]),
+    k=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    batch=st.integers(1, 4),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_kernel_matches_oracle_hypothesis(cfg_name, m, n, k, batch, scale, seed):
+    cfg = CONFIGS[cfg_name]
+    rng = np.random.default_rng(seed)
+    a = (rng.standard_normal((batch, m, k)) * scale).astype(np.float32)
+    b = (rng.standard_normal((batch, k, n)) * scale).astype(np.float32)
+    c = (rng.standard_normal((batch, m, n)) * scale).astype(np.float32)
+    got, want = run_both(a, b, c, cfg)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_zero_inputs():
+    cfg = CONFIGS["bf16_f32"]
+    z = np.zeros((2, 16, 8), np.float32)
+    got, want = run_both(z, np.zeros((2, 8, 8), np.float32), np.zeros((2, 16, 8), np.float32), cfg)
+    np.testing.assert_array_equal(got, np.zeros_like(got))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_identity_times_b_is_quantized_b():
+    """A = I (exactly representable) -> D = quantize(B) for f32 C/D."""
+    cfg = CONFIGS["tf32_f32"]
+    rng = np.random.default_rng(2)
+    eye = np.broadcast_to(np.eye(8, dtype=np.float32), (3, 8, 8)).copy()
+    b = rng.standard_normal((3, 8, 8)).astype(np.float32)
+    c = np.zeros((3, 8, 8), np.float32)
+    got = np.asarray(tcmma(jnp.asarray(eye), jnp.asarray(b), jnp.asarray(c), cfg))
+    from compile.kernels.ref import ref_quantize
+
+    np.testing.assert_array_equal(got, ref_quantize(b, "tf32"))
+
+
+def test_fp16_overflow_propagates_to_inf():
+    """FP16 C/D saturates to inf — the Fig. 17 chain failure mode."""
+    cfg = CONFIGS["fp16_f16"]
+    a = np.full((1, 16, 8), 100.0, np.float32)
+    b = np.full((1, 8, 8), 100.0, np.float32)
+    c = np.zeros((1, 16, 8), np.float32)
+    got = np.asarray(tcmma(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), cfg))
+    assert np.isinf(got).all()  # 8 * 1e4 = 8e4 > 65504
+
+
+def test_fp16_f32_no_overflow_at_same_magnitude():
+    cfg = CONFIGS["fp16_f32"]
+    a = np.full((1, 16, 8), 100.0, np.float32)
+    b = np.full((1, 8, 8), 100.0, np.float32)
+    c = np.zeros((1, 16, 8), np.float32)
+    got = np.asarray(tcmma(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), cfg))
+    assert np.isfinite(got).all()
+
+
+def test_bf16_rz_vs_fp16_rne_accumulation_differs():
+    """The BF16 path accumulates with RZ: on identical (representable)
+    inputs, its |D| can never exceed the exact result, while RNE can."""
+    rng = np.random.default_rng(13)
+    # values exactly representable in BOTH bf16 and fp16 (7-bit mantissa)
+    import ml_dtypes
+
+    a = rng.standard_normal((64, 16, 8)).astype(ml_dtypes.bfloat16).astype(np.float16).astype(np.float32)
+    b = rng.standard_normal((64, 8, 8)).astype(ml_dtypes.bfloat16).astype(np.float16).astype(np.float32)
+    c = rng.standard_normal((64, 16, 8)).astype(np.float32)
+    d_bf = np.asarray(tcmma(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), CONFIGS["bf16_f32"]))
+    d_fp = np.asarray(tcmma(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), CONFIGS["fp16_f32"]))
+    exact = np.einsum("bij,bjk->bik", a.astype(np.float64), b.astype(np.float64))
+    s32 = exact.astype(np.float32).astype(np.float64) + c.astype(np.float64)
+    assert (np.abs(d_bf.astype(np.float64)) <= np.abs(s32)).all()
+    assert not np.array_equal(d_bf, d_fp)  # RZ vs RNE visible
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        TcMmaConfig("fp8")
+    with pytest.raises(ValueError):
+        TcMmaConfig("bf16", "f16")  # fp16-only C/D
+    with pytest.raises(ValueError):
+        TcMmaConfig("bf16", "f64")
+
+
+def test_tcmma_shape_validation():
+    cfg = CONFIGS["bf16_f32"]
+    with pytest.raises(ValueError):
+        tcmma(jnp.zeros((2, 2)), jnp.zeros((2, 2)), jnp.zeros((2, 2)), cfg)
+    with pytest.raises(ValueError):
+        tcmma(
+            jnp.zeros((1, 16, 8)), jnp.zeros((1, 4, 8)), jnp.zeros((1, 16, 8)), cfg
+        )
+
+
+def test_tile_matches_batched():
+    """tcmma_tile (L2 building block) agrees with the batched Pallas path."""
+    cfg = CONFIGS["fp16_f32"]
+    rng = np.random.default_rng(21)
+    a = rng.standard_normal((1, 16, 16)).astype(np.float32)
+    b = rng.standard_normal((1, 16, 8)).astype(np.float32)
+    c = rng.standard_normal((1, 16, 8)).astype(np.float32)
+    batched = np.asarray(tcmma(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), cfg))
+    tile = np.asarray(tcmma_tile(jnp.asarray(a[0]), jnp.asarray(b[0]), jnp.asarray(c[0]), cfg))
+    np.testing.assert_array_equal(batched[0], tile)

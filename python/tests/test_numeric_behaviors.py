@@ -1,0 +1,208 @@
+"""Section-8 numeric-behavior signatures, asserted at the Python level
+(the Rust coordinator re-runs these through the AOT artifacts; this file
+is the build-time gate that the datapath reproduces the paper).
+
+Paper targets:
+  Table 12 (BF16):  init_BF16 -> mul 0, inner-product 0, accumulation ~1.9e-8
+                    init_FP32 -> all ops ~1e-3
+  Table 13 (FP16, C/D=FP32): init_FP16 -> all 0; init_FP32 -> ~1e-4
+  Table 14 (FP16, C/D=FP16): vs CPU_FP32 nonzero; vs CPU_FP32cvtFP16 with
+                    init_FP16 -> 0
+  Table 15 (TF32):  init_TF32 -> all 0; init_FP32 -> ~1e-4 (same level as
+                    FP16 — both have 10 mantissa bits)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import CONFIGS, tcmma
+from compile.kernels.ref import ref_quantize
+
+B, M, N, K = 1000, 16, 8, 8
+RNG_SEED = 7
+
+
+def cpu_f32_baseline(a, b, c):
+    """'FP32 on CPU': exact products, inner product rounded once to f32,
+    then an RNE f32 accumulate — the paper's CPU reference."""
+    r = np.einsum("bij,bjk->bik", a.astype(np.float64), b.astype(np.float64))
+    s32 = r.astype(np.float32)
+    return (s32.astype(np.float64) + c.astype(np.float64)).astype(np.float32)
+
+
+def profile(cfg, init: str, op: str):
+    """Fig. 16 a/b/c input patterns; returns (tc_d00, cpu_d00) arrays."""
+    rng = np.random.default_rng(RNG_SEED + hash(op) % 1000)
+    a = np.zeros((B, M, K), np.float32)
+    b = np.zeros((B, K, N), np.float32)
+    c = np.zeros((B, M, N), np.float32)
+    maybe_q = (lambda x: ref_quantize(x, init)) if init != "fp32" else (lambda x: x)
+    if op == "mul":
+        a[:, 0, 0] = maybe_q(rng.standard_normal(B).astype(np.float32))
+        b[:, 0, 0] = maybe_q(rng.standard_normal(B).astype(np.float32))
+    elif op == "inner":
+        a[:, 0, :] = maybe_q(rng.standard_normal((B, K)).astype(np.float32))
+        b[:, :, 0] = maybe_q(rng.standard_normal((B, K)).astype(np.float32))
+    elif op == "accum":
+        a[:, 0, 0] = maybe_q(rng.standard_normal(B).astype(np.float32))
+        b[:, 0, 0] = maybe_q(rng.standard_normal(B).astype(np.float32))
+        cv = rng.standard_normal(B).astype(np.float32)
+        # C/D type is FP32 for *_f32 configs -> no quantization of C;
+        # for the fp16_f16 config C itself is FP16.
+        c[:, 0, 0] = ref_quantize(cv, "fp16") if cfg.cd == "f16" else cv
+    else:
+        raise ValueError(op)
+    tc = np.asarray(tcmma(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), cfg))
+    cpu = cpu_f32_baseline(a, b, c)
+    return tc[:, 0, 0], cpu[:, 0, 0]
+
+
+def mean_abs_err(cfg, init, op):
+    tc, cpu = profile(cfg, init, op)
+    return float(np.mean(np.abs(tc - cpu)))
+
+
+# ------------------------------------------------------------- Table 12
+
+
+def test_table12_bf16_init_bf16():
+    cfg = CONFIGS["bf16_f32"]
+    assert mean_abs_err(cfg, "bf16", "mul") == 0.0
+    assert mean_abs_err(cfg, "bf16", "inner") == 0.0
+    acc = mean_abs_err(cfg, "bf16", "accum")
+    assert 1e-9 < acc < 1e-7  # paper: 1.89e-8
+
+
+def test_table12_bf16_init_fp32():
+    cfg = CONFIGS["bf16_f32"]
+    for op in ("mul", "inner", "accum"):
+        err = mean_abs_err(cfg, "fp32", op)
+        assert 1e-4 < err < 1e-2  # paper: ~1.1-1.7e-3
+
+
+# ------------------------------------------------------------- Table 13
+
+
+def test_table13_fp16_f32_init_fp16_all_zero():
+    cfg = CONFIGS["fp16_f32"]
+    for op in ("mul", "inner", "accum"):
+        assert mean_abs_err(cfg, "fp16", op) == 0.0
+
+
+def test_table13_fp16_f32_init_fp32():
+    cfg = CONFIGS["fp16_f32"]
+    for op in ("mul", "inner", "accum"):
+        err = mean_abs_err(cfg, "fp32", op)
+        assert 1e-5 < err < 1e-3  # paper: ~1.4-3e-4
+
+
+# ------------------------------------------------------------- Table 14
+
+
+def test_table14_fp16_f16_vs_fp32_baseline_nonzero():
+    cfg = CONFIGS["fp16_f16"]
+    for op in ("mul", "inner", "accum"):
+        assert mean_abs_err(cfg, "fp16", op) > 0.0  # D is FP16
+
+
+def test_table14_fp16_f16_vs_cvt_fp16_baseline_zero():
+    """Compared against the CPU FP32 result *converted to FP16*, errors
+    vanish under init_FP16: the hardware computes at high precision and
+    converts only the final result (the paper's Table 14 finding)."""
+    cfg = CONFIGS["fp16_f16"]
+    for op in ("mul", "inner", "accum"):
+        tc, cpu = profile(cfg, "fp16", op)
+        cpu_cvt = cpu.astype(np.float16).astype(np.float32)
+        np.testing.assert_array_equal(tc, cpu_cvt)
+
+
+# ------------------------------------------------------------- Table 15
+
+
+def test_table15_tf32_init_tf32_all_zero():
+    cfg = CONFIGS["tf32_f32"]
+    for op in ("mul", "inner", "accum"):
+        assert mean_abs_err(cfg, "tf32", op) == 0.0
+
+
+def test_table15_tf32_same_error_level_as_fp16():
+    """TF32 and FP16 have the same 10 mantissa bits -> same error level
+    under init_FP32 (paper: Tables 13 vs 15 are near-identical)."""
+    e_tf32 = mean_abs_err(CONFIGS["tf32_f32"], "fp32", "mul")
+    e_fp16 = mean_abs_err(CONFIGS["fp16_f32"], "fp32", "mul")
+    assert 0.5 < e_tf32 / e_fp16 < 2.0
+
+
+def test_bf16_error_level_higher_than_fp16():
+    """BF16 (7 mantissa bits) errs ~8x more than FP16/TF32 (10 bits)."""
+    e_bf16 = mean_abs_err(CONFIGS["bf16_f32"], "fp32", "mul")
+    e_fp16 = mean_abs_err(CONFIGS["fp16_f32"], "fp32", "mul")
+    assert e_bf16 / e_fp16 > 4.0
+
+
+# ------------------------------------------------------ Fig. 17 (chain)
+
+
+def chain_errors(cfg, init: str, n_steps: int, trials=64, seed=3):
+    """l2 relative error of the chain D=A@B, D->A, vs the FP32 CPU chain."""
+    rng = np.random.default_rng(seed)
+    m, n, k = 16, 8, 8
+    a32 = rng.standard_normal((trials, m, k)).astype(np.float32)
+    if init != "fp32":
+        a32 = ref_quantize(a32, init)
+    a_tc = a32.copy()
+    a_cpu = a32.astype(np.float64)
+    errs = []
+    zero_c = np.zeros((trials, m, n), np.float32)
+    for _ in range(n_steps):
+        b32 = rng.standard_normal((trials, k, n)).astype(np.float32)
+        if init != "fp32":
+            b32 = ref_quantize(b32, init)
+        d_tc = np.asarray(
+            tcmma(jnp.asarray(a_tc), jnp.asarray(b32), jnp.asarray(zero_c), cfg)
+        )
+        d_cpu = np.einsum("bij,bjk->bik", a_cpu, b32.astype(np.float64)).astype(
+            np.float32
+        )
+        num = np.sqrt(np.sum((d_tc - d_cpu).astype(np.float64) ** 2, axis=(1, 2)))
+        den = np.sqrt(np.sum(d_tc.astype(np.float64) ** 2, axis=(1, 2)))
+        errs.append(float(np.mean(num / np.maximum(den, 1e-300))))
+        a_tc, a_cpu = d_tc, d_cpu.astype(np.float64)
+    return errs
+
+
+def test_fig17_errors_grow_with_chain_length():
+    errs = chain_errors(CONFIGS["tf32_f32"], "tf32", 6)
+    assert errs[-1] > errs[0]
+    assert errs[0] < 1e-5  # "almost zero when chain length is one"
+
+
+def test_fig17_bf16_worse_than_tf32():
+    e_bf16 = chain_errors(CONFIGS["bf16_f32"], "bf16", 5)
+    e_tf32 = chain_errors(CONFIGS["tf32_f32"], "tf32", 5)
+    assert e_bf16[-1] > 3.0 * e_tf32[-1]
+
+
+def test_fig17_fp16_overflows_by_n10():
+    """FP16 runs into overflow (infinity) around N >= 10 (paper Fig. 17)."""
+    cfg = CONFIGS["fp16_f16"]
+    rng = np.random.default_rng(4)
+    m, n, k = 16, 8, 8
+    trials = 32
+    a = ref_quantize(rng.standard_normal((trials, m, k)).astype(np.float32), "fp16")
+    zero_c = np.zeros((trials, m, n), np.float32)
+    overflowed_at = None
+    for step in range(1, 15):
+        b = ref_quantize(rng.standard_normal((trials, k, n)).astype(np.float32), "fp16")
+        a = np.asarray(tcmma(jnp.asarray(a), jnp.asarray(b), jnp.asarray(zero_c), cfg))
+        if not np.isfinite(a).all():
+            overflowed_at = step
+            break
+    assert overflowed_at is not None and overflowed_at <= 12
+
+
+def test_fig17_init_fp32_worse_than_init_low():
+    e_fp32 = chain_errors(CONFIGS["tf32_f32"], "fp32", 3)
+    e_low = chain_errors(CONFIGS["tf32_f32"], "tf32", 3)
+    assert e_fp32[0] > 10 * e_low[0]

@@ -1,0 +1,15 @@
+//! Bench: simulator design-choice ablations — each calibrated knob of
+//! tcsim is disabled in turn and the deviation from the paper's numbers
+//! is reported (DESIGN.md §4's evidence table).
+
+use tcbench::device::a100;
+use tcbench::microbench::ablation;
+use tcbench::util::Bencher;
+
+fn main() {
+    let d = a100();
+    let mut b = Bencher::new();
+    b.bench("ablation/all_knobs", || ablation::run_all(&d));
+    let (_, table) = ablation::run_all(&d);
+    println!("\n{table}");
+}

@@ -1,0 +1,30 @@
+//! Bench: §7 data movement — ldmatrix table (Table 9), the Fig. 15
+//! sweep and the ld.shared conflict probe (Table 10).
+
+use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::device::a100;
+use tcbench::isa::{LdMatrixNum, LdSharedWidth};
+use tcbench::microbench::{measure_ld_shared, measure_ldmatrix, sweep_ldmatrix};
+use tcbench::util::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let d = a100();
+
+    b.bench("fig15/sweep_ldmatrix_x4_a100", || sweep_ldmatrix(&d, LdMatrixNum::X4));
+    b.bench("ldmatrix/x4_8w_ilp1", || measure_ldmatrix(&d, LdMatrixNum::X4, 8, 1));
+    b.bench("ld_shared/u32_4way", || measure_ld_shared(&d, LdSharedWidth::U32, 4));
+
+    let mut backend = Backend::Native;
+    for id in ["t9", "t10", "fig15"] {
+        b.bench(&format!("{id}/full_regeneration"), || {
+            run_experiment(id, &mut backend).unwrap()
+        });
+    }
+
+    let m = measure_ldmatrix(&d, LdMatrixNum::X4, 8, 1);
+    println!(
+        "\nheadline: ldmatrix.x4 (8,1) -> {:.1} cy, {:.1} B/clk/SM (paper: 32.6, 125.9; fabric bound 128)",
+        m.latency, m.throughput
+    );
+}

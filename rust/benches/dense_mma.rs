@@ -1,0 +1,35 @@
+//! Bench: regenerate the dense-mma tables (paper Tables 3/4/5) and the
+//! Fig. 6/7 sweeps end-to-end, reporting both the wall time of the
+//! regeneration and the headline reproduced numbers.
+
+use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::device::a100;
+use tcbench::isa::shapes::{M16N8K16, M16N8K8};
+use tcbench::isa::{AbType, CdType, MmaInstr};
+use tcbench::microbench::{measure_mma, sweep_mma};
+use tcbench::util::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let d = a100();
+    let k16 = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16);
+    let k8 = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K8);
+
+    b.bench("fig6/sweep_mma_m16n8k16_a100", || sweep_mma(&d, &k16));
+    b.bench("fig7/sweep_mma_m16n8k8_a100", || sweep_mma(&d, &k8));
+    b.bench("mma/single_config_8w_ilp2", || measure_mma(&d, &k16, 8, 2));
+
+    let mut backend = Backend::Native;
+    for id in ["t3", "t4", "t5"] {
+        b.bench(&format!("table{}/full_regeneration", &id[1..]), || {
+            run_experiment(id, &mut backend).unwrap()
+        });
+    }
+
+    // headline numbers (paper vs reproduced)
+    let m = measure_mma(&d, &k16, 8, 2);
+    println!(
+        "\nheadline: mma.m16n8k16 (8,2) on A100 -> {:.1} cy, {:.1} FMA/clk/SM (paper: 32.6, 1004.2)",
+        m.latency, m.throughput
+    );
+}

@@ -1,0 +1,27 @@
+//! Bench: Appendix-A ablations (Tables 16/17) — the three GEMM kernels
+//! on tcsim at the paper's 2048^3 problem and a fast 512^3 variant.
+
+use tcbench::device::a100;
+use tcbench::gemm::{run_gemm, table16, table17, GemmConfig, Variant};
+use tcbench::util::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let d = a100();
+    let small = GemmConfig { size: 512, ..GemmConfig::default() };
+    let full = GemmConfig::default();
+
+    b.bench("gemm512/baseline", || run_gemm(&d, small, Variant::Baseline));
+    b.bench("gemm512/pipeline", || run_gemm(&d, small, Variant::Pipeline));
+    b.bench("gemm512/permuted", || run_gemm(&d, small, Variant::Permuted));
+    b.bench("table16/2048_pair", || table16(&d, full));
+    b.bench("table17/2048_pair", || table17(&d, full));
+
+    let (b16, p16) = table16(&d, full);
+    let (b17, p17) = table17(&d, full);
+    println!(
+        "\nheadline: async speedup {:.2}x (paper 2.02x); permuted speedup {:.2}x (paper 3.01x)",
+        b16.total_cycles as f64 / p16.total_cycles as f64,
+        b17.total_cycles as f64 / p17.total_cycles as f64,
+    );
+}

@@ -1,0 +1,64 @@
+//! Bench: §8 numeric experiments — Tables 12–15 profiling and the
+//! Fig. 17 chain study, on the native backend and (when artifacts are
+//! built) through the PJRT runtime, so the hot numeric path of both
+//! backends is tracked.
+
+use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::numerics::{
+    chain_errors, profile_op, InitKind, NativeExec, NumericCfg, ProfileOp,
+};
+use tcbench::runtime::{ArtifactExec, ArtifactStore};
+use tcbench::util::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = NumericCfg::new("bf16", "f32", 16, 8, 8);
+
+    b.bench("native/profile_accumulation_1000", || {
+        profile_op(
+            &mut NativeExec::new(cfg),
+            ProfileOp::Accumulation,
+            InitKind::LowPrecision,
+            1000,
+            7,
+        )
+    });
+    b.bench("native/chain_n14_x250", || {
+        chain_errors(&mut NativeExec::new(cfg), 14, 250, true, 11)
+    });
+
+    match ArtifactStore::open_default() {
+        Ok(mut store) => {
+            // compile once outside the timed region
+            let _ = ArtifactExec::new(&mut store, cfg).expect("artifact");
+            b.bench("pjrt/profile_accumulation_1000", || {
+                let mut exec = ArtifactExec::new(&mut store, cfg).unwrap();
+                profile_op(&mut exec, ProfileOp::Accumulation, InitKind::LowPrecision, 1000, 7)
+            });
+            b.bench("pjrt/chain_n14_x250", || {
+                let mut exec = ArtifactExec::new(&mut store, cfg).unwrap();
+                chain_errors(&mut exec, 14, 250, true, 11)
+            });
+        }
+        Err(e) => eprintln!("skipping PJRT benches: {e:#}"),
+    }
+
+    let mut backend = Backend::Native;
+    for id in ["t12", "t13", "t14", "t15", "fig17"] {
+        b.bench(&format!("{id}/full_regeneration"), || {
+            run_experiment(id, &mut backend).unwrap()
+        });
+    }
+
+    let r = profile_op(
+        &mut NativeExec::new(cfg),
+        ProfileOp::Accumulation,
+        InitKind::LowPrecision,
+        1000,
+        7,
+    );
+    println!(
+        "\nheadline: BF16 accumulation error (init_BF16) = {:.2e} (paper: 1.89e-8)",
+        r.mean_abs_err
+    );
+}

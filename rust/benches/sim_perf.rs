@@ -1,0 +1,30 @@
+//! Bench: tcsim engine performance itself (§Perf target: a full Fig-6
+//! sweep well under a second). Tracks the simulator hot loop across
+//! optimization iterations.
+
+use tcbench::device::a100;
+use tcbench::isa::shapes::M16N8K16;
+use tcbench::isa::{AbType, CdType, MmaInstr};
+use tcbench::microbench::{measure_mma, mma_program, sweep_mma, ITERS};
+use tcbench::sim::SmSim;
+use tcbench::util::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let d = a100();
+    let i = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16);
+
+    // single 32-warp simulation — the most expensive sweep cell
+    b.bench("sim/32w_ilp6_single_run", || {
+        let p = mma_program(&d, &i, 6, ITERS);
+        SmSim::new(&d, vec![p; 32]).run()
+    });
+    // one cell with measurement plumbing
+    b.bench("sim/measure_8w_ilp2", || measure_mma(&d, &i, 8, 2));
+    // the full 48-cell grid (the §Perf headline target)
+    let stats = b.bench("sim/full_fig6_sweep", || sweep_mma(&d, &i));
+    println!(
+        "\nheadline: full Fig-6 sweep in {:.1} ms (target < 1000 ms)",
+        stats.median.as_secs_f64() * 1e3
+    );
+}

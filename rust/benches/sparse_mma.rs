@@ -1,0 +1,37 @@
+//! Bench: sparse-mma tables (paper Tables 6/7) and Fig. 10/11 sweeps,
+//! including the A100 small-k anomaly check.
+
+use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::device::{a100, rtx3070ti};
+use tcbench::isa::shapes::{M16N8K16, M16N8K32};
+use tcbench::isa::{AbType, CdType, MmaInstr};
+use tcbench::microbench::{measure_mma, sweep_mma};
+use tcbench::util::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let d = a100();
+    let g = rtx3070ti();
+    let sp32 = MmaInstr::sp(AbType::Bf16, CdType::Fp32, M16N8K32);
+    let sp16 = MmaInstr::sp(AbType::Bf16, CdType::Fp32, M16N8K16);
+
+    b.bench("fig10/sweep_mma_sp_m16n8k32_a100", || sweep_mma(&d, &sp32));
+    b.bench("fig11/sweep_mma_sp_m16n8k16_a100", || sweep_mma(&d, &sp16));
+
+    let mut backend = Backend::Native;
+    for id in ["t6", "t7"] {
+        b.bench(&format!("table{}/full_regeneration", &id[1..]), || {
+            run_experiment(id, &mut backend).unwrap()
+        });
+    }
+
+    let big = measure_mma(&d, &sp32, 8, 2);
+    let small = measure_mma(&d, &sp16, 8, 2);
+    let fp16_small = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K16);
+    let g_small = measure_mma(&g, &fp16_small, 8, 1);
+    println!(
+        "\nheadline: A100 sparse large-k {:.0} vs small-k {:.0} FMA/clk (paper 1979 vs 1290);\n\
+         RTX3070Ti small-k {:.0} (paper 506 — no anomaly)",
+        big.throughput, small.throughput, g_small.throughput
+    );
+}

@@ -1,0 +1,165 @@
+//! Campaign coordinator: every paper table/figure is a registered
+//! experiment; a worker pool runs simulator jobs in parallel; results
+//! are rendered with paper-vs-measured columns and optionally persisted
+//! under `results/`.
+
+mod experiments;
+mod pool;
+
+pub use pool::{default_threads, run_parallel};
+
+use anyhow::Result;
+
+use crate::runtime::ArtifactStore;
+
+/// Numeric-experiment backend: the native softfloat datapath or the
+/// PJRT-executed AOT artifacts (L1/L2). Both produce identical numbers —
+/// integration tests assert it — so the campaign defaults to whichever
+/// is available.
+pub enum Backend {
+    Native,
+    Pjrt(ArtifactStore),
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Prefer PJRT artifacts when present, else native.
+    pub fn auto() -> Backend {
+        match ArtifactStore::open_default() {
+            Ok(store) => Backend::Pjrt(store),
+            Err(_) => Backend::Native,
+        }
+    }
+}
+
+/// A registered experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExperimentId {
+    pub id: &'static str,
+    pub description: &'static str,
+    /// Needs a numeric backend (vs pure-simulator experiments).
+    pub numeric: bool,
+}
+
+/// Every table and figure of the paper's evaluation (DESIGN.md §3).
+pub const EXPERIMENTS: &[ExperimentId] = &[
+    ExperimentId { id: "fig6", description: "mma.m16n8k16 sweep on A100", numeric: false },
+    ExperimentId { id: "fig7", description: "mma.m16n8k8 sweep on A100", numeric: false },
+    ExperimentId { id: "t3", description: "dense mma table, A100", numeric: false },
+    ExperimentId { id: "t4", description: "dense mma table, RTX3070Ti", numeric: false },
+    ExperimentId { id: "t5", description: "dense mma table, RTX2080Ti", numeric: false },
+    ExperimentId { id: "fig10", description: "mma.sp.m16n8k32 sweep on A100", numeric: false },
+    ExperimentId { id: "fig11", description: "mma.sp.m16n8k16 sweep (small-k anomaly)", numeric: false },
+    ExperimentId { id: "t6", description: "sparse mma table, A100", numeric: false },
+    ExperimentId { id: "t7", description: "sparse mma table, RTX3070Ti", numeric: false },
+    ExperimentId { id: "fig15", description: "ldmatrix.x4 sweep on A100", numeric: false },
+    ExperimentId { id: "t9", description: "ldmatrix table, A100", numeric: false },
+    ExperimentId { id: "t10", description: "ld.shared bank-conflict latency", numeric: false },
+    ExperimentId { id: "t12", description: "BF16 numeric profiling", numeric: true },
+    ExperimentId { id: "t13", description: "FP16 (C/D=FP32) numeric profiling", numeric: true },
+    ExperimentId { id: "t14", description: "FP16 (C/D=FP16) numeric profiling", numeric: true },
+    ExperimentId { id: "t15", description: "TF32 numeric profiling", numeric: true },
+    ExperimentId { id: "fig17", description: "chain matmul relative error", numeric: true },
+    ExperimentId { id: "t16", description: "sync vs cp.async GEMM (Appendix A.1)", numeric: false },
+    ExperimentId { id: "t17", description: "naive vs permuted layout (Appendix A.2)", numeric: false },
+];
+
+/// Run one experiment by id, returning the rendered report.
+pub fn run_experiment(id: &str, backend: &mut Backend) -> Result<String> {
+    let report = match id {
+        "t3" => experiments::run_table3(),
+        "t4" => experiments::run_table4(),
+        "t5" => experiments::run_table5(),
+        "t6" => experiments::run_table6(),
+        "t7" => experiments::run_table7(),
+        "t9" => experiments::run_table9(),
+        "t10" => experiments::run_table10(),
+        "t12" => experiments::run_table12(backend),
+        "t13" => experiments::run_table13(backend),
+        "t14" => experiments::run_table14(backend),
+        "t15" => experiments::run_table15(backend),
+        "t16" => experiments::run_table16(),
+        "t17" => experiments::run_table17(),
+        "fig6" => experiments::run_fig6(),
+        "fig7" => experiments::run_fig7(),
+        "fig10" => experiments::run_fig10(),
+        "fig11" => experiments::run_fig11(),
+        "fig15" => experiments::run_fig15(),
+        "fig17" => experiments::run_fig17(backend),
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; known: {}",
+            EXPERIMENTS.iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    Ok(report)
+}
+
+/// Run the whole campaign; returns (id, report) pairs in registry order.
+pub fn run_all(backend: &mut Backend) -> Result<Vec<(&'static str, String)>> {
+    let mut out = Vec::new();
+    for e in EXPERIMENTS {
+        let report = run_experiment(e.id, backend)?;
+        out.push((e.id, report));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_paper_artifacts() {
+        let ids: Vec<&str> = EXPERIMENTS.iter().map(|e| e.id).collect();
+        for want in [
+            "fig6", "fig7", "fig10", "fig11", "fig15", "fig17", "t3", "t4", "t5", "t6",
+            "t7", "t9", "t10", "t12", "t13", "t14", "t15", "t16", "t17",
+        ] {
+            assert!(ids.contains(&want), "{want} missing");
+        }
+        assert_eq!(ids.len(), 19);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let mut b = Backend::Native;
+        assert!(run_experiment("t99", &mut b).is_err());
+    }
+
+    #[test]
+    fn table5_runs_quickly_and_mentions_turing_rows() {
+        let mut b = Backend::Native;
+        let r = run_experiment("t5", &mut b).unwrap();
+        assert!(r.contains("m16n8k8"));
+        assert!(r.contains("INT8"));
+    }
+
+    #[test]
+    fn table10_deviations_small() {
+        let mut b = Backend::Native;
+        let r = run_experiment("t10", &mut b).unwrap();
+        // every deviation row within a few percent
+        for line in r.lines().skip(2) {
+            if let Some(dev) = line.split('|').next_back() {
+                let dev = dev.trim().trim_start_matches('+').trim_end_matches('%');
+                if let Ok(pct) = dev.parse::<f64>() {
+                    assert!(pct.abs() < 6.0, "line {line}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn numeric_table_on_native_backend() {
+        let mut b = Backend::Native;
+        let r = run_experiment("t13", &mut b).unwrap();
+        assert!(r.contains("multiplication"));
+        assert!(r.contains("0.00e0"), "init_fp16 rows must be exactly zero:\n{r}");
+    }
+}

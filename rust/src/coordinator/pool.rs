@@ -1,0 +1,92 @@
+//! Worker pool: run a batch of independent jobs across threads with a
+//! shared work queue (no external crates; scoped threads + atomics).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run every job, in parallel, preserving output order.
+///
+/// Jobs are pulled from a shared atomic cursor so long jobs do not
+/// stall the queue (the coordinator's sweeps vary 100x in cost).
+pub fn run_parallel<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return jobs.into_iter().map(|f| f()).collect();
+    }
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().expect("job taken twice");
+                let out = job();
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<_> = (0..100).map(|i| move || i * 2).collect();
+        let out = run_parallel(jobs, 8);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let jobs: Vec<_> = (0..5).map(|i| move || i).collect();
+        assert_eq!(run_parallel(jobs, 1), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![];
+        assert!(run_parallel(jobs, 4).is_empty());
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        let jobs: Vec<_> = (0..32)
+            .map(|i| {
+                move || {
+                    // one job 100x the others
+                    let spins = if i == 0 { 2_000_000 } else { 20_000 };
+                    let mut acc = 0u64;
+                    for j in 0..spins {
+                        acc = acc.wrapping_add(j);
+                    }
+                    acc
+                }
+            })
+            .collect();
+        let out = run_parallel(jobs, 8);
+        assert_eq!(out.len(), 32);
+    }
+}

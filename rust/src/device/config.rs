@@ -1,0 +1,213 @@
+//! Device configuration schema: SM structure + calibrated pipeline table.
+
+
+use crate::isa::{AbType, CdType, MmaInstr};
+
+/// Tensor-Core architecture generation (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Volta,
+    Turing,
+    Ampere,
+}
+
+impl Arch {
+    /// Tensor Cores per SM (Table 1: 8 on Volta/Turing doing 4x4x4 each,
+    /// 4 on Ampere doing 8x4x8 each).
+    pub fn tensor_cores_per_sm(self) -> u32 {
+        match self {
+            Arch::Volta | Arch::Turing => 8,
+            Arch::Ampere => 4,
+        }
+    }
+
+    /// Per-Tensor-Core MM shape (m, n, k) from Table 1.
+    pub fn tc_unit_shape(self) -> (u32, u32, u32) {
+        match self {
+            Arch::Volta | Arch::Turing => (4, 4, 4),
+            Arch::Ampere => (8, 4, 8),
+        }
+    }
+
+    pub fn supports_sparse(self) -> bool {
+        matches!(self, Arch::Ampere)
+    }
+
+    pub fn supports_ldmatrix(self) -> bool {
+        matches!(self, Arch::Turing | Arch::Ampere)
+    }
+
+    /// Is `cp.async` (asynchronous global->shared copy) available?
+    pub fn supports_cp_async(self) -> bool {
+        matches!(self, Arch::Ampere)
+    }
+}
+
+/// Whether an `mma` variant executes on CUDA-core FPUs instead of the
+/// Tensor Cores (`mma.m8n8k4` on Ampere, §2.2), with ~10x lower rate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpuFallback {
+    No,
+    Yes,
+}
+
+/// Calibrated pipeline timing of one `mma`/`mma.sp` variant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MmaTiming {
+    /// Pipeline depth in cycles; the microbenchmark's measured completion
+    /// latency is `latency + sync_cost` (paper's Tables report ≈ this).
+    pub latency: u32,
+    /// Initiation interval per sub-core pipeline: sustained acceptance of
+    /// one instruction every `ii` cycles.
+    pub ii: u32,
+    pub fpu_fallback: FpuFallback,
+}
+
+/// Vendor peak dense throughput per data type, FMA/clk/SM
+/// (captions of Tables 3/4; [30]/[31] whitepapers).
+#[derive(Debug, Clone)]
+pub struct PeakTable {
+    pub fp16_fp32: u64,
+    pub fp16_fp16: u64,
+    pub bf16: u64,
+    pub tf32: u64,
+    pub int8: u64,
+    pub int4: u64,
+    pub binary: u64,
+}
+
+impl PeakTable {
+    pub fn dense_peak(&self, ab: AbType, cd: CdType) -> u64 {
+        match (ab, cd) {
+            (AbType::Fp16, CdType::Fp16) => self.fp16_fp16,
+            (AbType::Fp16, _) => self.fp16_fp32,
+            (AbType::Bf16, _) => self.bf16,
+            (AbType::Tf32, _) => self.tf32,
+            (AbType::Int8, _) => self.int8,
+            (AbType::Int4, _) => self.int4,
+            (AbType::Binary, _) => self.binary,
+            (AbType::Fp64, _) => 0,
+        }
+    }
+
+    /// Sparse `mma.sp` doubles the dense peak (§6, Fig. 9).
+    pub fn sparse_peak(&self, ab: AbType, cd: CdType) -> u64 {
+        2 * self.dense_peak(ab, cd)
+    }
+}
+
+/// A calibrated GPU device.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    pub product: &'static str,
+    pub arch: Arch,
+    /// Streaming multiprocessors on the die (throughput scaling only —
+    /// the microbenchmarks run on a single SM like the paper's).
+    pub sms: u32,
+    /// Warp schedulers / sub-cores per SM (four on every generation).
+    pub subcores: u32,
+    /// Data-movement units between shared memory and the register file
+    /// (§7 finding 2: "there could be two data movement units").
+    pub lsu_units: u32,
+    /// Cycles one 128-byte shared-memory transaction occupies an LSU
+    /// (2 ⇒ 64 B/clk per unit, 128 B/clk/SM with two units).
+    pub lsu_txn_cycles: u32,
+    /// Pipe latency after the last transaction of a load completes
+    /// (calibrated: `23 = txn(2) + tail(21)` for a conflict-free u32).
+    pub lsu_tail: u32,
+    /// Maximum outstanding loads per warp before issue stalls
+    /// (calibrated from Table 9's ldmatrix.x1 4-warp point).
+    pub lsu_pending_per_warp: u32,
+    /// Shared-memory banks x bank width (32 x 4 B on Volta..Ampere, §7).
+    pub smem_banks: u32,
+    pub smem_bank_bytes: u32,
+    /// Issue-side cost of `__syncwarp()` per loop iteration.
+    pub sync_cost: u32,
+    /// Global-memory round-trip latency in cycles (Appendix A model).
+    pub gmem_latency: u32,
+    /// Sustained global-memory bandwidth per SM, bytes/clk (Appendix A).
+    pub gmem_bytes_per_cycle: u32,
+    pub peaks: PeakTable,
+    /// Calibrated (instruction -> timing) table; also the legality
+    /// matrix: an instruction absent here is not supported on the device.
+    pub mma_timings: Vec<(MmaInstr, MmaTiming)>,
+    /// Exact dense rows of the paper's Table 3/4/5 for this device, in
+    /// paper order (BF16 rows exist in `mma_timings` for the Fig. 6/7
+    /// sweeps but are not separate table rows — the paper found BF16 and
+    /// FP16 performance identical).
+    pub paper_dense_rows: Vec<MmaInstr>,
+    /// Exact sparse rows of the paper's Table 6/7, in paper order.
+    pub paper_sparse_rows: Vec<MmaInstr>,
+}
+
+impl Device {
+    pub fn timing(&self, instr: &MmaInstr) -> Option<MmaTiming> {
+        self.mma_timings.iter().find(|(i, _)| i == instr).map(|(_, t)| *t)
+    }
+
+    pub fn supports(&self, instr: &MmaInstr) -> bool {
+        self.timing(instr).is_some()
+    }
+
+    /// Theoretical peak FMA/clk/SM for an instruction on this device.
+    pub fn peak(&self, instr: &MmaInstr) -> u64 {
+        if instr.sparse {
+            self.peaks.sparse_peak(instr.ab, instr.cd)
+        } else {
+            self.peaks.dense_peak(instr.ab, instr.cd)
+        }
+    }
+
+    /// Shared-memory fabric bandwidth bound, bytes/clk/SM (§7: 32 banks
+    /// x 4 B = 128 B/clk — "also the bandwidth bound of ldmatrix").
+    pub fn smem_peak_bytes_per_clk(&self) -> u32 {
+        self.smem_banks * self.smem_bank_bytes
+    }
+
+    /// The ideal initiation interval for an instruction from the vendor
+    /// peak: `fmas / (peak / subcores)`, i.e. the cycles one sub-core
+    /// pipeline must spend per instruction to sustain the peak.
+    pub fn ideal_ii(&self, instr: &MmaInstr) -> u32 {
+        let peak = self.peak(instr);
+        if peak == 0 {
+            return u32::MAX;
+        }
+        let per_subcore = peak as f64 / self.subcores as f64;
+        (instr.fmas() as f64 / per_subcore).round().max(1.0) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::shapes::*;
+
+    #[test]
+    fn arch_table1_facts() {
+        assert_eq!(Arch::Ampere.tensor_cores_per_sm(), 4);
+        assert_eq!(Arch::Turing.tensor_cores_per_sm(), 8);
+        assert_eq!(Arch::Ampere.tc_unit_shape(), (8, 4, 8));
+        assert!(Arch::Ampere.supports_sparse());
+        assert!(!Arch::Turing.supports_sparse());
+        assert!(Arch::Turing.supports_ldmatrix());
+        assert!(!Arch::Volta.supports_ldmatrix());
+        assert!(!Arch::Turing.supports_cp_async());
+    }
+
+    #[test]
+    fn ideal_ii_from_peak() {
+        let d = crate::device::a100();
+        // FP16 m16n8k16: 2048 FMA / (1024/4 per subcore) = 8
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+        assert_eq!(d.ideal_ii(&i), 8);
+        // sparse m16n8k32: 4096 FMA / (2048/4) = 8
+        let s = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32);
+        assert_eq!(d.ideal_ii(&s), 8);
+    }
+
+    #[test]
+    fn smem_peak_is_128() {
+        assert_eq!(crate::device::a100().smem_peak_bytes_per_clk(), 128);
+    }
+}

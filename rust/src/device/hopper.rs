@@ -1,0 +1,121 @@
+//! **Projected** H100 (Hopper) device — a forward-looking extension.
+//!
+//! The paper's Table 1 lists Hopper's preliminary features ("Hopper GPUs
+//! are not publicly released yet"): FP8 joins the menu, INT4/Binary are
+//! dropped, sparsity and the mma/ldmatrix interface carry over. This
+//! configuration projects the paper's methodology onto that device:
+//! peaks follow the H100 whitepaper (~2x A100 per SM at iso-clock
+//! accounting), latencies carry over from Ampere (the paper observed
+//! completion latency did not improve Turing -> Ampere).
+//!
+//! It is *not* part of the paper's evaluation: `device::registry()`
+//! returns only the three measured GPUs; this one is opt-in via
+//! [`hopper_projected`].
+
+use crate::isa::shapes::*;
+use crate::isa::{AbType, CdType, MmaInstr};
+
+use super::config::{Arch, Device, FpuFallback, MmaTiming, PeakTable};
+
+fn t(latency: u32, ii: u32) -> MmaTiming {
+    MmaTiming { latency, ii, fpu_fallback: FpuFallback::No }
+}
+
+/// Build the projected Hopper device.
+pub fn hopper_projected() -> Device {
+    use AbType::*;
+    use CdType::{Fp16 as C16, Fp32 as C32, Int32 as I32};
+
+    // Peaks: 2x A100 dense per SM (989 TFLOPS FP16 dense / 132 SM / 1.98
+    // GHz ≈ 1890 FMA/clk/SM -> 2048 nominal).
+    let dense: Vec<(MmaInstr, MmaTiming)> = vec![
+        (MmaInstr::dense(Fp16, C32, M16N8K16), t(24, 4)),
+        (MmaInstr::dense(Fp16, C32, M16N8K8), t(17, 2)),
+        (MmaInstr::dense(Fp16, C16, M16N8K16), t(23, 4)),
+        (MmaInstr::dense(Fp16, C16, M16N8K8), t(17, 2)),
+        (MmaInstr::dense(Bf16, C32, M16N8K16), t(24, 4)),
+        (MmaInstr::dense(Bf16, C32, M16N8K8), t(17, 2)),
+        (MmaInstr::dense(Tf32, C32, M16N8K8), t(24, 4)),
+        (MmaInstr::dense(Tf32, C32, M16N8K4), t(17, 2)),
+        (MmaInstr::dense(Int8, I32, M16N8K32), t(24, 4)),
+        (MmaInstr::dense(Int8, I32, M16N8K16), t(17, 2)),
+    ];
+    let sparse: Vec<(MmaInstr, MmaTiming)> = vec![
+        (MmaInstr::sp(Fp16, C32, M16N8K32), t(24, 4)),
+        (MmaInstr::sp(Fp16, C32, M16N8K16), t(17, 2)),
+        (MmaInstr::sp(Bf16, C32, M16N8K32), t(24, 4)),
+        (MmaInstr::sp(Bf16, C32, M16N8K16), t(17, 2)),
+        (MmaInstr::sp(Tf32, C32, M16N8K16), t(24, 4)),
+        (MmaInstr::sp(Int8, I32, M16N8K64), t(24, 4)),
+    ];
+    let paper_dense_rows = dense.iter().map(|(i, _)| *i).collect();
+    let paper_sparse_rows = sparse.iter().map(|(i, _)| *i).collect();
+    let mut mma_timings = dense;
+    mma_timings.extend(sparse);
+
+    Device {
+        name: "hopper-projected",
+        product: "NVIDIA H100 (projected — not measured by the paper)",
+        arch: Arch::Ampere, // same SM organization: 4 sub-cores, 4 TCs
+        sms: 132,
+        subcores: 4,
+        lsu_units: 2,
+        lsu_txn_cycles: 2,
+        lsu_tail: 21,
+        lsu_pending_per_warp: 4,
+        smem_banks: 32,
+        smem_bank_bytes: 4,
+        sync_cost: 1,
+        gmem_latency: 400,
+        gmem_bytes_per_cycle: 12,
+        peaks: PeakTable {
+            fp16_fp32: 2048,
+            fp16_fp16: 2048,
+            bf16: 2048,
+            tf32: 1024,
+            int8: 4096,
+            int4: 0,   // dropped on Hopper (Table 1)
+            binary: 0, // dropped on Hopper
+        },
+        mma_timings,
+        paper_dense_rows,
+        paper_sparse_rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::microbench::measure_mma;
+
+    #[test]
+    fn projected_peaks_double_a100() {
+        let h = hopper_projected();
+        let a = crate::device::a100();
+        assert_eq!(h.peaks.fp16_fp32, 2 * a.peaks.fp16_fp32);
+        assert_eq!(h.peaks.int4, 0, "INT4 dropped on Hopper (Table 1)");
+    }
+
+    #[test]
+    fn projected_throughput_reaches_2x() {
+        let h = hopper_projected();
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+        let m = measure_mma(&h, &i, 8, 4);
+        assert!(m.throughput > 1900.0, "{m:?}");
+    }
+
+    #[test]
+    fn latency_carries_over_from_ampere() {
+        // the paper: completion latency did not improve Turing->Ampere;
+        // we project the same for Hopper.
+        let h = hopper_projected();
+        let a = crate::device::a100();
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+        assert_eq!(h.timing(&i).unwrap().latency, a.timing(&i).unwrap().latency);
+    }
+
+    #[test]
+    fn not_in_paper_registry() {
+        assert!(crate::device::by_name("hopper-projected").is_none());
+    }
+}

@@ -1,0 +1,80 @@
+//! Calibrated device descriptions.
+//!
+//! Each [`Device`] carries the *structural* parameters of one GPU's SM
+//! (sub-core count, LSU count, shared-memory banks, …) and a calibrated
+//! per-instruction pipeline table (completion latency + initiation
+//! interval). Completion latencies are the quantity the paper measured
+//! (its Tables 3–7); initiation intervals follow from the vendor peak
+//! throughput (`ii = FMAs/instr ÷ peak-FMA/clk/sub-core`) except for the
+//! documented anomalies (DESIGN.md §4):
+//!
+//! * A100 `mma.sp` small-k shapes run at ii≈6 instead of the ideal
+//!   (the paper's "can not reach the theoretical peak" finding, Fig. 11);
+//! * A100 INT8 `m8n8k16` runs at half rate ("old shape optimized for
+//!   Turing Tensor Cores");
+//! * RTX3070Ti halves the FP16 rate when the accumulator is FP32
+//!   (the GA102 gaming-die rule, Table 4);
+//! * Ampere `mma.m8n8k4` FP16 compiles to FPU code ~10x slower (§2.2).
+
+mod a100;
+mod config;
+mod hopper;
+mod rtx2080ti;
+mod rtx3070ti;
+
+pub use a100::a100;
+pub use config::{Arch, Device, FpuFallback, MmaTiming, PeakTable};
+pub use hopper::hopper_projected;
+pub use rtx2080ti::rtx2080ti;
+pub use rtx3070ti::rtx3070ti;
+
+use crate::isa::MmaInstr;
+
+/// All calibrated devices, by CLI name.
+pub fn registry() -> Vec<Device> {
+    vec![a100(), rtx3070ti(), rtx2080ti()]
+}
+
+/// Look up a device by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Device> {
+    let lower = name.to_ascii_lowercase();
+    registry().into_iter().find(|d| d.name.to_ascii_lowercase() == lower)
+}
+
+/// The dense instruction rows of the paper's Table 3/4/5 for a device.
+pub fn dense_table_rows(device: &Device) -> Vec<MmaInstr> {
+    device.paper_dense_rows.clone()
+}
+
+/// The sparse instruction rows of the paper's Table 6/7 for a device.
+pub fn sparse_table_rows(device: &Device) -> Vec<MmaInstr> {
+    device.paper_sparse_rows.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_paper_devices() {
+        let names: Vec<_> = registry().into_iter().map(|d| d.name).collect();
+        assert_eq!(names, vec!["a100", "rtx3070ti", "rtx2080ti"]);
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert!(by_name("A100").is_some());
+        assert!(by_name("RTX3070Ti").is_some());
+        assert!(by_name("h100").is_none());
+    }
+
+    #[test]
+    fn table_row_counts_match_paper() {
+        assert_eq!(dense_table_rows(&a100()).len(), 13); // Table 3
+        assert_eq!(sparse_table_rows(&a100()).len(), 8); // Table 6
+        assert_eq!(dense_table_rows(&rtx3070ti()).len(), 13); // Table 4
+        assert_eq!(sparse_table_rows(&rtx3070ti()).len(), 8); // Table 7
+        assert_eq!(dense_table_rows(&rtx2080ti()).len(), 3); // Table 5
+        assert_eq!(sparse_table_rows(&rtx2080ti()).len(), 0); // no mma.sp on Turing
+    }
+}

@@ -1,0 +1,95 @@
+//! NVIDIA RTX 2080 Ti (TU102, Turing) calibration — paper Table 5.
+//!
+//! The Turing predecessor: fewer shapes and data types, no `mma.sp`,
+//! no `cp.async`. The paper's observation that "Dense FMA latency of
+//! Ampere Tensor Cores does not improve compared to Turing" shows up as
+//! near-identical completion latencies for the shared shapes.
+
+use crate::isa::shapes::*;
+use crate::isa::{AbType, CdType, MmaInstr};
+
+use super::config::{Arch, Device, FpuFallback, MmaTiming, PeakTable};
+
+fn t(latency: u32, ii: u32) -> MmaTiming {
+    MmaTiming { latency, ii, fpu_fallback: FpuFallback::No }
+}
+
+/// Build the calibrated RTX 2080 Ti device.
+pub fn rtx2080ti() -> Device {
+    use AbType::*;
+    use CdType::{Fp16 as C16, Fp32 as C32, Int32 as I32};
+
+    let dense: Vec<(MmaInstr, MmaTiming)> = vec![
+        // Table 5 rows. Peaks: FP16/FP32 256, FP16/FP16 512, INT8 1024.
+        (MmaInstr::dense(Fp16, C32, M16N8K8), t(17, 16)),
+        (MmaInstr::dense(Fp16, C16, M16N8K8), t(14, 8)),
+        (MmaInstr::dense(Int8, I32, M8N8K16), t(10, 4)),
+        // m8n8k4 compiles to HMMA.884 pairs on Turing (§2.2) — still on
+        // the Tensor Cores, at the FP16/FP32 rate.
+        (MmaInstr::dense(Fp16, C32, M8N8K4), t(14, 4)),
+    ];
+
+    let paper_dense_rows = dense[..3].iter().map(|(i, _)| *i).collect();
+
+    Device {
+        name: "rtx2080ti",
+        product: "NVIDIA RTX 2080 Ti (TU102)",
+        arch: Arch::Turing,
+        sms: 68,
+        subcores: 4,
+        lsu_units: 2,
+        lsu_txn_cycles: 2,
+        lsu_tail: 21,
+        lsu_pending_per_warp: 4,
+        smem_banks: 32,
+        smem_bank_bytes: 4,
+        sync_cost: 1,
+        gmem_latency: 440,
+        gmem_bytes_per_cycle: 10,
+        peaks: PeakTable {
+            fp16_fp32: 256,
+            fp16_fp16: 512,
+            bf16: 0, // no BF16 on Turing (Table 1)
+            tf32: 0, // no TF32 on Turing
+            int8: 1024,
+            int4: 2048,
+            binary: 8192,
+        },
+        mma_timings: dense,
+        paper_dense_rows,
+        paper_sparse_rows: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn turing_has_no_sparse_or_ampere_dtypes() {
+        let d = rtx2080ti();
+        assert!(d.paper_sparse_rows.is_empty());
+        assert!(!d.supports(&MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K8)));
+        assert!(!d.supports(&MmaInstr::dense(AbType::Tf32, CdType::Fp32, M16N8K8)));
+        assert!(!d.supports(&MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32)));
+    }
+
+    #[test]
+    fn latency_close_to_ampere_counterpart() {
+        // paper: 17.3 cycles (Turing) vs 17.7 (A100) for mma.m16n8k8
+        let turing = rtx2080ti();
+        let ampere = crate::device::a100();
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K8);
+        assert_eq!(
+            turing.timing(&i).unwrap().latency,
+            ampere.timing(&i).unwrap().latency
+        );
+    }
+
+    #[test]
+    fn m8n8k4_stays_on_tensor_cores_on_turing() {
+        let d = rtx2080ti();
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M8N8K4);
+        assert_eq!(d.timing(&i).unwrap().fpu_fallback, FpuFallback::No);
+    }
+}

@@ -1,0 +1,139 @@
+//! NVIDIA RTX 3070 Ti (GA104, Ampere gaming die) calibration —
+//! paper Tables 4 and 7.
+//!
+//! Two structural differences from the A100 (paper §5):
+//! * lower Tensor-Core peaks across all data types;
+//! * FP16 `mma` with an FP32 accumulator runs at **half** the FP16-
+//!   accumulator rate (the GA10x gaming rule) — encoded as doubled ii.
+//!
+//! Notably the sparse small-k anomaly of the A100 does **not** occur
+//! here (Table 7): every `mma.sp` shape reaches its ideal ii.
+
+use crate::isa::shapes::*;
+use crate::isa::{AbType, CdType, MmaInstr};
+
+use super::config::{Arch, Device, FpuFallback, MmaTiming, PeakTable};
+
+fn t(latency: u32, ii: u32) -> MmaTiming {
+    MmaTiming { latency, ii, fpu_fallback: FpuFallback::No }
+}
+
+/// Build the calibrated RTX 3070 Ti device.
+pub fn rtx3070ti() -> Device {
+    use AbType::*;
+    use CdType::{Fp16 as C16, Fp32 as C32, Int32 as I32};
+
+    let dense: Vec<(MmaInstr, MmaTiming)> = vec![
+        // Table 4 rows. Peaks: FP16/FP16 512, FP16/FP32 256 (half rate),
+        // TF32 128, INT8 1024, INT4 2048, Binary 8192 FMA/clk/SM.
+        (MmaInstr::dense(Fp16, C32, M16N8K16), t(32, 32)),
+        (MmaInstr::dense(Fp16, C32, M16N8K8), t(18, 16)),
+        (MmaInstr::dense(Fp16, C16, M16N8K16), t(23, 16)),
+        (MmaInstr::dense(Fp16, C16, M16N8K8), t(17, 8)),
+        (MmaInstr::dense(Tf32, C32, M16N8K8), t(32, 32)),
+        (MmaInstr::dense(Tf32, C32, M16N8K4), t(18, 16)),
+        (MmaInstr::dense(Int8, I32, M8N8K16), t(15, 4)), // full rate here
+        (MmaInstr::dense(Int8, I32, M16N8K32), t(23, 16)),
+        (MmaInstr::dense(Int8, I32, M16N8K16), t(17, 8)),
+        (MmaInstr::dense(Int4, I32, M16N8K32), t(16, 8)),
+        (MmaInstr::dense(Int4, I32, M16N8K64), t(24, 16)),
+        (MmaInstr::dense(Binary, I32, M16N8K128), t(16, 8)),
+        (MmaInstr::dense(Binary, I32, M16N8K256), t(24, 16)),
+        // BF16 == FP16 timing (with FP32 accumulator, so half rate).
+        (MmaInstr::dense(Bf16, C32, M16N8K16), t(32, 32)),
+        (MmaInstr::dense(Bf16, C32, M16N8K8), t(18, 16)),
+        (
+            MmaInstr::dense(Fp16, C32, M8N8K4),
+            MmaTiming { latency: 30, ii: 20, fpu_fallback: FpuFallback::Yes },
+        ),
+    ];
+
+    let sparse: Vec<(MmaInstr, MmaTiming)> = vec![
+        // Table 7 rows — no small-k anomaly: ideal ii throughout.
+        (MmaInstr::sp(Fp16, C32, M16N8K32), t(32, 32)),
+        (MmaInstr::sp(Fp16, C32, M16N8K16), t(18, 16)),
+        (MmaInstr::sp(Fp16, C16, M16N8K32), t(23, 16)),
+        (MmaInstr::sp(Fp16, C16, M16N8K16), t(17, 8)),
+        (MmaInstr::sp(Tf32, C32, M16N8K16), t(32, 32)),
+        (MmaInstr::sp(Tf32, C32, M16N8K8), t(18, 16)),
+        (MmaInstr::sp(Int8, I32, M16N8K64), t(23, 16)),
+        (MmaInstr::sp(Int8, I32, M16N8K32), t(17, 8)),
+        (MmaInstr::sp(Bf16, C32, M16N8K32), t(32, 32)),
+        (MmaInstr::sp(Bf16, C32, M16N8K16), t(18, 16)),
+    ];
+
+    let paper_dense_rows = dense[..13].iter().map(|(i, _)| *i).collect();
+    let paper_sparse_rows = sparse[..8].iter().map(|(i, _)| *i).collect();
+
+    let mut mma_timings = dense;
+    mma_timings.extend(sparse);
+
+    Device {
+        name: "rtx3070ti",
+        product: "NVIDIA RTX 3070 Ti (GA104)",
+        arch: Arch::Ampere,
+        sms: 48,
+        subcores: 4,
+        lsu_units: 2,
+        lsu_txn_cycles: 2,
+        lsu_tail: 21,
+        lsu_pending_per_warp: 4,
+        smem_banks: 32,
+        smem_bank_bytes: 4,
+        sync_cost: 1,
+        gmem_latency: 420,
+        gmem_bytes_per_cycle: 10,
+        peaks: PeakTable {
+            fp16_fp32: 256,
+            fp16_fp16: 512,
+            bf16: 256,
+            tf32: 128,
+            int8: 1024,
+            int4: 2048,
+            binary: 8192,
+        },
+        mma_timings,
+        paper_dense_rows,
+        paper_sparse_rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_accumulator_runs_at_half_rate() {
+        // Table 4 key finding: C/D=FP32 halves throughput vs C/D=FP16.
+        let d = rtx3070ti();
+        let f32acc = d.timing(&MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16)).unwrap();
+        let f16acc = d.timing(&MmaInstr::dense(AbType::Fp16, CdType::Fp16, M16N8K16)).unwrap();
+        assert_eq!(f32acc.ii, 2 * f16acc.ii);
+    }
+
+    #[test]
+    fn no_sparse_small_k_anomaly() {
+        // Table 7: unlike the A100, small-k sparse shapes hit ideal ii.
+        let d = rtx3070ti();
+        for (instr, timing) in &d.mma_timings {
+            if instr.sparse {
+                assert_eq!(timing.ii, d.ideal_ii(instr), "{instr}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_m8n8k16_full_rate_unlike_a100() {
+        let d = rtx3070ti();
+        let i = MmaInstr::dense(AbType::Int8, CdType::Int32, M8N8K16);
+        assert_eq!(d.timing(&i).unwrap().ii, d.ideal_ii(&i));
+    }
+
+    #[test]
+    fn peaks_below_a100() {
+        let d = rtx3070ti();
+        let a = crate::device::a100();
+        assert!(d.peaks.fp16_fp32 < a.peaks.fp16_fp32);
+        assert!(d.peaks.int8 < a.peaks.int8);
+    }
+}

@@ -1,0 +1,189 @@
+//! Operand and accumulator data types of Tensor-Core MMA instructions
+//! (paper Tables 1 and 11).
+
+use std::fmt;
+
+/// Data type of the A/B input operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AbType {
+    /// IEEE half: 1+5+10, 16-bit registers.
+    Fp16,
+    /// bfloat16: 1+8+7 — FP32's range, 7-bit mantissa (Ampere+).
+    Bf16,
+    /// TF32: 1+8+10, stored in 32-bit registers (Ampere+).
+    Tf32,
+    /// IEEE double on the FP64 Tensor Core path (A100 only; not swept
+    /// by the paper's tables, kept for the legality matrix).
+    Fp64,
+    /// 8-bit integer (Turing+).
+    Int8,
+    /// 4-bit integer (Turing+).
+    Int4,
+    /// 1-bit (binary) operands, XOR+POPC semantics (Turing+).
+    Binary,
+}
+
+impl AbType {
+    /// Storage bits per element in the register file (Table 11: TF32
+    /// occupies a full 32-bit register despite its 19 payload bits).
+    pub fn storage_bits(self) -> u32 {
+        match self {
+            AbType::Fp16 | AbType::Bf16 => 16,
+            AbType::Tf32 => 32,
+            AbType::Fp64 => 64,
+            AbType::Int8 => 8,
+            AbType::Int4 => 4,
+            AbType::Binary => 1,
+        }
+    }
+
+    /// Significand bits including the implicit leading one (floats only).
+    pub fn mantissa_bits(self) -> Option<u32> {
+        match self {
+            AbType::Fp16 | AbType::Tf32 => Some(10),
+            AbType::Bf16 => Some(7),
+            AbType::Fp64 => Some(52),
+            _ => None,
+        }
+    }
+
+    /// Exponent bits (floats only).
+    pub fn exponent_bits(self) -> Option<u32> {
+        match self {
+            AbType::Fp16 => Some(5),
+            AbType::Bf16 | AbType::Tf32 => Some(8),
+            AbType::Fp64 => Some(11),
+            _ => None,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, AbType::Fp16 | AbType::Bf16 | AbType::Tf32 | AbType::Fp64)
+    }
+
+    pub fn is_integer(self) -> bool {
+        !self.is_float()
+    }
+
+    /// PTX spelling used in instruction names.
+    pub fn ptx(self) -> &'static str {
+        match self {
+            AbType::Fp16 => "f16",
+            AbType::Bf16 => "bf16",
+            AbType::Tf32 => "tf32",
+            AbType::Fp64 => "f64",
+            AbType::Int8 => "s8",
+            AbType::Int4 => "s4",
+            AbType::Binary => "b1",
+        }
+    }
+
+    /// Human name as printed in the paper's tables.
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            AbType::Fp16 => "FP16",
+            AbType::Bf16 => "BF16",
+            AbType::Tf32 => "TF32",
+            AbType::Fp64 => "FP64",
+            AbType::Int8 => "INT8",
+            AbType::Int4 => "INT4",
+            AbType::Binary => "Binary",
+        }
+    }
+}
+
+impl fmt::Display for AbType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.paper_name())
+    }
+}
+
+/// Data type of the C accumulator / D result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CdType {
+    Fp16,
+    Fp32,
+    Fp64,
+    Int32,
+}
+
+impl CdType {
+    pub fn storage_bits(self) -> u32 {
+        match self {
+            CdType::Fp16 => 16,
+            CdType::Fp32 | CdType::Int32 => 32,
+            CdType::Fp64 => 64,
+        }
+    }
+
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            CdType::Fp16 => "FP16",
+            CdType::Fp32 => "FP32",
+            CdType::Fp64 => "FP64",
+            CdType::Int32 => "INT32",
+        }
+    }
+
+    /// Is `self` a legal accumulator for the given operand type?
+    /// (PTX ISA: float ops accumulate in FP16/FP32, FP64 in FP64,
+    /// integer/binary ops in INT32.)
+    pub fn legal_for(self, ab: AbType) -> bool {
+        match ab {
+            AbType::Fp16 => matches!(self, CdType::Fp16 | CdType::Fp32),
+            AbType::Bf16 | AbType::Tf32 => matches!(self, CdType::Fp32),
+            AbType::Fp64 => matches!(self, CdType::Fp64),
+            AbType::Int8 | AbType::Int4 | AbType::Binary => matches!(self, CdType::Int32),
+        }
+    }
+}
+
+impl fmt::Display for CdType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.paper_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storage_bits_match_table11() {
+        assert_eq!(AbType::Fp16.storage_bits(), 16);
+        assert_eq!(AbType::Bf16.storage_bits(), 16);
+        assert_eq!(AbType::Tf32.storage_bits(), 32); // 19 payload, 32 stored
+        assert_eq!(AbType::Int4.storage_bits(), 4);
+        assert_eq!(AbType::Binary.storage_bits(), 1);
+    }
+
+    #[test]
+    fn mantissa_bits_match_table11() {
+        assert_eq!(AbType::Fp16.mantissa_bits(), Some(10));
+        assert_eq!(AbType::Tf32.mantissa_bits(), Some(10));
+        assert_eq!(AbType::Bf16.mantissa_bits(), Some(7));
+        assert_eq!(AbType::Int8.mantissa_bits(), None);
+    }
+
+    #[test]
+    fn bf16_tf32_share_fp32_exponent() {
+        assert_eq!(AbType::Bf16.exponent_bits(), Some(8));
+        assert_eq!(AbType::Tf32.exponent_bits(), Some(8));
+        assert_eq!(AbType::Fp16.exponent_bits(), Some(5));
+    }
+
+    #[test]
+    fn accumulator_legality() {
+        assert!(CdType::Fp32.legal_for(AbType::Fp16));
+        assert!(CdType::Fp16.legal_for(AbType::Fp16));
+        assert!(!CdType::Fp16.legal_for(AbType::Bf16)); // BF16 needs FP32 C/D
+        assert!(CdType::Int32.legal_for(AbType::Binary));
+        assert!(!CdType::Fp32.legal_for(AbType::Int8));
+    }
+
+    #[test]
+    fn float_integer_split() {
+        assert!(AbType::Tf32.is_float());
+        assert!(AbType::Binary.is_integer());
+    }
+}

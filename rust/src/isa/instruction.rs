@@ -1,0 +1,222 @@
+//! Instruction descriptors: the semantic identity of an `mma`/`mma.sp`
+//! instruction and of the data-movement instructions (§7, Table 8).
+
+use std::fmt;
+
+use super::{AbType, CdType, MmaShape};
+
+/// Peak dense Tensor-Core throughput fraction that an instruction is
+/// expected to reach ("near peak performance", Table 3 caption).
+pub const MMA_FULL_THROUGHPUT: f64 = 0.95;
+
+/// One dense or sparse Tensor-Core FMA instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MmaInstr {
+    pub ab: AbType,
+    pub cd: CdType,
+    pub shape: MmaShape,
+    /// `mma.sp` — fine-grained 2:4 structured sparsity on A (§6).
+    pub sparse: bool,
+}
+
+impl MmaInstr {
+    pub const fn dense(ab: AbType, cd: CdType, shape: MmaShape) -> Self {
+        Self { ab, cd, shape, sparse: false }
+    }
+
+    pub const fn sp(ab: AbType, cd: CdType, shape: MmaShape) -> Self {
+        Self { ab, cd, shape, sparse: true }
+    }
+
+    /// Dense-equivalent FMAs per instruction executed (paper §4).
+    pub fn fmas(&self) -> u64 {
+        self.shape.fmas()
+    }
+
+    /// Register-file footprint of the A operand in bytes per warp.
+    /// For `mma.sp`, A is compressed to `m x k/2` non-zeros plus 2-bit
+    /// metadata per element of the original k (Fig. 8/9).
+    pub fn a_reg_bytes(&self) -> u64 {
+        let dense = self.shape.a_bytes(self.ab.storage_bits());
+        if self.sparse {
+            let meta_bits = self.shape.m as u64 * self.shape.k as u64 * 2;
+            dense / 2 + meta_bits / 8
+        } else {
+            dense
+        }
+    }
+
+    /// Does the operand/accumulator pairing satisfy the PTX ISA?
+    pub fn is_well_formed(&self) -> bool {
+        self.cd.legal_for(self.ab) && self.shape.m > 0 && self.shape.n > 0 && self.shape.k > 0
+    }
+
+    /// PTX mnemonic, e.g. `mma.sync.aligned.m16n8k16.row.col.f32.bf16.bf16.f32`.
+    pub fn ptx(&self) -> String {
+        let op = if self.sparse { "mma.sp" } else { "mma" };
+        let cd = match self.cd {
+            CdType::Fp16 => "f16",
+            CdType::Fp32 => "f32",
+            CdType::Fp64 => "f64",
+            CdType::Int32 => "s32",
+        };
+        let ab = self.ab.ptx();
+        format!("{op}.sync.aligned.{}.row.col.{cd}.{ab}.{ab}.{cd}", self.shape)
+    }
+}
+
+impl fmt::Display for MmaInstr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}{} {}/{} {}",
+            if self.sparse { "mma.sp" } else { "mma" },
+            if self.sparse { " (2:4)" } else { "" },
+            self.ab,
+            self.cd,
+            self.shape
+        )
+    }
+}
+
+/// `ldmatrix` fragment count (Fig. 13): N x 128 bytes per warp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LdMatrixNum {
+    X1,
+    X2,
+    X4,
+}
+
+impl LdMatrixNum {
+    pub fn count(self) -> u32 {
+        match self {
+            LdMatrixNum::X1 => 1,
+            LdMatrixNum::X2 => 2,
+            LdMatrixNum::X4 => 4,
+        }
+    }
+
+    /// Bytes loaded per warp (Table 8).
+    pub fn bytes_per_warp(self) -> u64 {
+        128 * self.count() as u64
+    }
+}
+
+impl fmt::Display for LdMatrixNum {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ldmatrix.x{}", self.count())
+    }
+}
+
+/// `ld.shared` access width (Table 8/10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LdSharedWidth {
+    U32,
+    U64,
+}
+
+impl LdSharedWidth {
+    pub fn bytes_per_thread(self) -> u64 {
+        match self {
+            LdSharedWidth::U32 => 4,
+            LdSharedWidth::U64 => 8,
+        }
+    }
+
+    pub fn bytes_per_warp(self) -> u64 {
+        32 * self.bytes_per_thread()
+    }
+
+    /// Minimum shared-memory transactions a warp-wide access needs even
+    /// when conflict-free: u64 moves 256 B against a 128 B/clk fabric.
+    pub fn min_transactions(self) -> u32 {
+        match self {
+            LdSharedWidth::U32 => 1,
+            LdSharedWidth::U64 => 2,
+        }
+    }
+}
+
+impl fmt::Display for LdSharedWidth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LdSharedWidth::U32 => f.write_str("ld.shared.u32"),
+            LdSharedWidth::U64 => f.write_str("ld.shared.u64"),
+        }
+    }
+}
+
+/// A data-movement instruction as swept by §7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataMovement {
+    LdMatrix(LdMatrixNum),
+    LdShared { width: LdSharedWidth, conflict_ways: u32 },
+}
+
+impl DataMovement {
+    pub fn bytes_per_warp(&self) -> u64 {
+        match self {
+            DataMovement::LdMatrix(n) => n.bytes_per_warp(),
+            DataMovement::LdShared { width, .. } => width.bytes_per_warp(),
+        }
+    }
+}
+
+impl fmt::Display for DataMovement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DataMovement::LdMatrix(n) => n.fmt(f),
+            DataMovement::LdShared { width, conflict_ways } => {
+                write!(f, "{width} ({conflict_ways}-way)")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::shape::shapes::*;
+    use super::*;
+
+    #[test]
+    fn ptx_mnemonics() {
+        let i = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K8);
+        assert_eq!(
+            i.ptx(),
+            "mma.sync.aligned.m16n8k8.row.col.f32.bf16.bf16.f32"
+        );
+        let s = MmaInstr::sp(AbType::Fp16, CdType::Fp16, M16N8K32);
+        assert!(s.ptx().starts_with("mma.sp.sync.aligned.m16n8k32"));
+    }
+
+    #[test]
+    fn sparse_halves_a_footprint_plus_metadata() {
+        let d = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K32);
+        let s = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32);
+        assert_eq!(d.a_reg_bytes(), 1024); // 16x32 fp16
+        // 16x16 non-zeros (512 B) + 16x32x2 bits metadata (128 B)
+        assert_eq!(s.a_reg_bytes(), 512 + 128);
+    }
+
+    #[test]
+    fn sparse_fma_accounting_is_dense_equivalent() {
+        let s = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32);
+        assert_eq!(s.fmas(), 4096); // not halved — paper Table 6 convention
+    }
+
+    #[test]
+    fn well_formedness() {
+        assert!(MmaInstr::dense(AbType::Tf32, CdType::Fp32, M16N8K8).is_well_formed());
+        assert!(!MmaInstr::dense(AbType::Tf32, CdType::Fp16, M16N8K8).is_well_formed());
+        assert!(!MmaInstr::dense(AbType::Int8, CdType::Fp32, M8N8K16).is_well_formed());
+    }
+
+    #[test]
+    fn ldmatrix_bytes_match_table8() {
+        assert_eq!(LdMatrixNum::X1.bytes_per_warp(), 128);
+        assert_eq!(LdMatrixNum::X2.bytes_per_warp(), 256);
+        assert_eq!(LdMatrixNum::X4.bytes_per_warp(), 512);
+        assert_eq!(LdSharedWidth::U32.bytes_per_warp(), 128);
+        assert_eq!(LdSharedWidth::U64.bytes_per_warp(), 256);
+    }
+}

@@ -1,0 +1,18 @@
+//! PTX-level instruction model for Tensor-Core GPUs.
+//!
+//! Covers the three instruction families the paper microbenchmarks —
+//! `mma` (§5), `mma.sp` (§6) and the data-movement family `ldmatrix` /
+//! `ld.shared` (§7) — plus `cp.async` for the Appendix-A pipeline
+//! ablation. The module owns *semantics-level* facts: operand shapes,
+//! data types, FMA and byte accounting, and the per-architecture
+//! legality matrix (paper Tables 1 and 3–7).
+
+mod dtype;
+mod instruction;
+mod shape;
+
+pub use dtype::{AbType, CdType};
+pub use instruction::{
+    DataMovement, LdMatrixNum, LdSharedWidth, MmaInstr, MMA_FULL_THROUGHPUT,
+};
+pub use shape::{shapes, MmaShape};

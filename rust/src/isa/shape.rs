@@ -1,0 +1,116 @@
+//! `mma` operand shapes (`mMnNkK` segments, paper Fig. 5/8).
+
+use std::fmt;
+use std::str::FromStr;
+
+/// The `m16n8k16`-style shape segment of an `mma`/`mma.sp` instruction:
+/// A is `m x k`, B is `k x n`, C/D are `m x n`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MmaShape {
+    pub m: u32,
+    pub n: u32,
+    pub k: u32,
+}
+
+impl MmaShape {
+    pub const fn new(m: u32, n: u32, k: u32) -> Self {
+        Self { m, n, k }
+    }
+
+    /// FMA count of one instruction: an `m x n x k` matrix multiplication
+    /// counts as `m*n*k` FMAs (paper §4). For `mma.sp` the FMA accounting
+    /// uses the *dense-equivalent* k — the paper reports sparse
+    /// throughput that way (Table 6 reaches ~2x the dense peak).
+    pub fn fmas(&self) -> u64 {
+        self.m as u64 * self.n as u64 * self.k as u64
+    }
+
+    /// Bytes of A at the given element width, dense storage.
+    pub fn a_bytes(&self, elem_bits: u32) -> u64 {
+        (self.m as u64 * self.k as u64 * elem_bits as u64) / 8
+    }
+
+    /// Bytes of B at the given element width.
+    pub fn b_bytes(&self, elem_bits: u32) -> u64 {
+        (self.k as u64 * self.n as u64 * elem_bits as u64) / 8
+    }
+
+    /// Bytes of C/D at the given element width.
+    pub fn cd_bytes(&self, elem_bits: u32) -> u64 {
+        (self.m as u64 * self.n as u64 * elem_bits as u64) / 8
+    }
+}
+
+impl fmt::Display for MmaShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "m{}n{}k{}", self.m, self.n, self.k)
+    }
+}
+
+/// Parse `"m16n8k16"` (as printed in the paper's tables).
+impl FromStr for MmaShape {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let err = || format!("invalid mma shape {s:?} (expected mMnNkK)");
+        let rest = s.strip_prefix('m').ok_or_else(err)?;
+        let (m, rest) = rest.split_once('n').ok_or_else(err)?;
+        let (n, k) = rest.split_once('k').ok_or_else(err)?;
+        Ok(MmaShape {
+            m: m.parse().map_err(|_| err())?,
+            n: n.parse().map_err(|_| err())?,
+            k: k.parse().map_err(|_| err())?,
+        })
+    }
+}
+
+/// Common shapes from the paper's tables.
+pub mod shapes {
+    use super::MmaShape;
+
+    pub const M16N8K16: MmaShape = MmaShape::new(16, 8, 16);
+    pub const M16N8K8: MmaShape = MmaShape::new(16, 8, 8);
+    pub const M16N8K4: MmaShape = MmaShape::new(16, 8, 4);
+    pub const M8N8K16: MmaShape = MmaShape::new(8, 8, 16);
+    pub const M8N8K4: MmaShape = MmaShape::new(8, 8, 4);
+    pub const M16N8K32: MmaShape = MmaShape::new(16, 8, 32);
+    pub const M16N8K64: MmaShape = MmaShape::new(16, 8, 64);
+    pub const M16N8K128: MmaShape = MmaShape::new(16, 8, 128);
+    pub const M16N8K256: MmaShape = MmaShape::new(16, 8, 256);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["m16n8k16", "m8n8k4", "m16n8k256"] {
+            let shape: MmaShape = s.parse().unwrap();
+            assert_eq!(shape.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!("16n8k16".parse::<MmaShape>().is_err());
+        assert!("m16n8".parse::<MmaShape>().is_err());
+        assert!("m16nXk8".parse::<MmaShape>().is_err());
+    }
+
+    #[test]
+    fn fma_accounting() {
+        // paper §4: m x n x k MM counts as m*n*k FMAs
+        assert_eq!(MmaShape::new(16, 8, 16).fmas(), 2048);
+        assert_eq!(MmaShape::new(16, 8, 8).fmas(), 1024);
+        assert_eq!(MmaShape::new(16, 8, 256).fmas(), 32768);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let s = MmaShape::new(16, 8, 16);
+        assert_eq!(s.a_bytes(16), 512); // 16x16 fp16
+        assert_eq!(s.b_bytes(16), 256);
+        assert_eq!(s.cd_bytes(32), 512); // 16x8 fp32
+    }
+}

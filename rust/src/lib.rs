@@ -1,0 +1,47 @@
+//! # tcbench — Dissecting Tensor Cores via Microbenchmarks (TPDS 2022)
+//!
+//! Full-system reproduction of Sun et al., *Dissecting Tensor Cores via
+//! Microbenchmarks: Latency, Throughput and Numeric Behaviors*.
+//!
+//! The paper measures real Ampere/Turing silicon; this crate substitutes a
+//! **cycle-level Tensor-Core SM simulator** ([`sim`]) calibrated from the
+//! paper's published tables, driven by the same instruction-level
+//! microbenchmark methodology ([`microbench`], paper §4), and a
+//! **bit-accurate emulated-MMA numeric datapath** for the §8 studies —
+//! implemented twice: natively in Rust ([`numerics`]) and as JAX/Pallas
+//! AOT artifacts executed through PJRT ([`runtime`]); the two are
+//! cross-checked in integration tests.
+//!
+//! Layer map (DESIGN.md §2):
+//! - [`isa`]      — PTX-level instruction model (`mma`, `mma.sp`,
+//!   `ldmatrix`, `ld.shared`, `cp.async`), shapes, data types, FMA/byte
+//!   accounting and per-architecture legality.
+//! - [`device`]   — calibrated device descriptions (A100, RTX3070Ti,
+//!   RTX2080Ti).
+//! - [`sim`]      — tcsim: sub-cores, warp schedulers, scoreboards,
+//!   Tensor-Core token-bucket pipelines, shared-memory banks, LSUs,
+//!   global-memory pipe with `cp.async`.
+//! - [`microbench`] — the §4 harness: kernel builder, (ILP, #warps)
+//!   sweeps, convergence-point detection.
+//! - [`numerics`] — §8: softfloat quantization, emulated MMA, chain
+//!   matmul, error metrics.
+//! - [`runtime`]  — PJRT client wrapper that loads `artifacts/*.hlo.txt`.
+//! - [`gemm`]     — Appendix-A ablation kernels (sync vs async copy,
+//!   naive vs permuted shared-memory layout).
+//! - [`coordinator`] — campaign orchestration: every paper table/figure
+//!   is a registered experiment run by a tokio worker pool.
+//! - [`report`]   — table/figure renderers + the paper's expected values.
+
+pub mod coordinator;
+pub mod device;
+pub mod gemm;
+pub mod isa;
+pub mod microbench;
+pub mod numerics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use device::Device;
+pub use isa::{AbType, CdType, MmaShape};

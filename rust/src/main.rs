@@ -1,0 +1,200 @@
+//! `repro` — the tcbench campaign CLI (L3 leader entrypoint).
+//!
+//! ```text
+//! repro list                         # show every registered experiment
+//! repro run <id>... [--backend B]    # regenerate specific tables/figures
+//! repro all [--backend B] [--out D]  # the full campaign
+//! repro sweep --device D --instr I   # ad-hoc instruction sweep
+//! repro devices                      # calibrated devices
+//! ```
+//!
+//! Backends for the §8 numeric experiments: `native` (Rust softfloat),
+//! `pjrt` (AOT artifacts through the PJRT CPU client; requires
+//! `make artifacts`), or `auto` (default: pjrt if artifacts exist).
+
+use std::io::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+use tcbench::coordinator::{run_experiment, Backend, EXPERIMENTS};
+use tcbench::device;
+use tcbench::isa::MmaInstr;
+use tcbench::microbench::{convergence_point, sweep_mma};
+use tcbench::runtime::ArtifactStore;
+
+fn usage() -> &'static str {
+    "repro — Dissecting Tensor Cores, reproduction CLI\n\
+     \n\
+     USAGE:\n\
+       repro list\n\
+       repro devices\n\
+       repro run <id>... [--backend native|pjrt|auto] [--out DIR]\n\
+       repro all [--backend native|pjrt|auto] [--out DIR]\n\
+       repro sweep --device <a100|rtx3070ti|rtx2080ti> --instr \"<ab> <cd> <shape> [sparse]\"\n\
+     \n\
+     EXAMPLES:\n\
+       repro run t3 t6 fig11\n\
+       repro all --out results\n\
+       repro sweep --device a100 --instr \"bf16 f32 m16n8k16\"\n"
+}
+
+/// Minimal flag parser: positional args + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let value = it
+                    .next()
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?
+                    .clone();
+                flags.push((key.to_string(), value));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+fn make_backend(kind: &str) -> Result<Backend> {
+    match kind {
+        "native" => Ok(Backend::Native),
+        "pjrt" => Ok(Backend::Pjrt(ArtifactStore::open_default()?)),
+        "auto" => Ok(Backend::auto()),
+        other => bail!("unknown backend {other:?} (native|pjrt|auto)"),
+    }
+}
+
+fn parse_instr(spec: &str) -> Result<MmaInstr> {
+    use tcbench::isa::{AbType, CdType};
+    let parts: Vec<&str> = spec.split_whitespace().collect();
+    if parts.len() < 3 {
+        bail!("instr spec must be \"<ab> <cd> <shape> [sparse]\", got {spec:?}");
+    }
+    let ab = match parts[0].to_ascii_lowercase().as_str() {
+        "fp16" | "f16" => AbType::Fp16,
+        "bf16" => AbType::Bf16,
+        "tf32" => AbType::Tf32,
+        "int8" | "s8" => AbType::Int8,
+        "int4" | "s4" => AbType::Int4,
+        "binary" | "b1" => AbType::Binary,
+        other => bail!("unknown A/B type {other:?}"),
+    };
+    let cd = match parts[1].to_ascii_lowercase().as_str() {
+        "fp16" | "f16" => CdType::Fp16,
+        "fp32" | "f32" => CdType::Fp32,
+        "int32" | "s32" => CdType::Int32,
+        other => bail!("unknown C/D type {other:?}"),
+    };
+    let shape = parts[2].parse().map_err(|e: String| anyhow!(e))?;
+    let sparse = parts.get(3).is_some_and(|s| *s == "sparse" || *s == "sp");
+    Ok(if sparse { MmaInstr::sp(ab, cd, shape) } else { MmaInstr::dense(ab, cd, shape) })
+}
+
+fn emit(out_dir: Option<&str>, id: &str, report: &str) -> Result<()> {
+    println!("{report}");
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{id}.txt");
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(report.as_bytes())?;
+        eprintln!("[repro] wrote {path}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+
+    match cmd {
+        "list" => {
+            println!("{:<8} {:<8} {}", "id", "backend", "description");
+            for e in EXPERIMENTS {
+                println!(
+                    "{:<8} {:<8} {}",
+                    e.id,
+                    if e.numeric { "numeric" } else { "sim" },
+                    e.description
+                );
+            }
+        }
+        "devices" => {
+            for d in device::registry() {
+                println!(
+                    "{:<10} {} — {:?}, {} SMs, {} TCs/SM, sparse: {}",
+                    d.name,
+                    d.product,
+                    d.arch,
+                    d.sms,
+                    d.arch.tensor_cores_per_sm(),
+                    d.arch.supports_sparse()
+                );
+            }
+        }
+        "run" | "all" => {
+            let ids: Vec<&str> = if cmd == "all" {
+                EXPERIMENTS.iter().map(|e| e.id).collect()
+            } else {
+                let ids: Vec<&str> = args.positional.iter().map(String::as_str).collect();
+                if ids.is_empty() {
+                    bail!("`repro run` needs experiment ids; see `repro list`");
+                }
+                ids
+            };
+            let mut backend = make_backend(args.flag("backend").unwrap_or("auto"))?;
+            eprintln!("[repro] numeric backend: {}", backend.name());
+            for id in ids {
+                let t0 = std::time::Instant::now();
+                let report = run_experiment(id, &mut backend)?;
+                emit(args.flag("out"), id, &report)?;
+                eprintln!("[repro] {id} done in {:.2?}", t0.elapsed());
+            }
+        }
+        "sweep" => {
+            let dev_name = args.flag("device").unwrap_or("a100");
+            let dev = device::by_name(dev_name)
+                .ok_or_else(|| anyhow!("unknown device {dev_name:?}; see `repro devices`"))?;
+            let instr = parse_instr(args.flag("instr").ok_or_else(|| anyhow!("--instr required"))?)?;
+            if !dev.supports(&instr) {
+                bail!("{instr} is not supported on {}", dev.name);
+            }
+            let sweep = sweep_mma(&dev, &instr);
+            println!("sweep of {instr} on {}:", dev.name);
+            println!("{:>6} {:>4} {:>10} {:>14}", "warps", "ILP", "lat(cy)", "thr(FMA/clk)");
+            for c in &sweep.cells {
+                println!("{:>6} {:>4} {:>10.1} {:>14.1}", c.warps, c.ilp, c.latency, c.throughput);
+            }
+            for warps in [4, 8] {
+                let c = convergence_point(&sweep, warps);
+                println!(
+                    "convergence at {warps} warps: ILP {} -> {:.1} cy, {:.1} FMA/clk/SM",
+                    c.ilp, c.latency, c.throughput
+                );
+            }
+        }
+        "help" | "--help" | "-h" => print!("{}", usage()),
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{}", usage());
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

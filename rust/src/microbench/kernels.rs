@@ -1,0 +1,166 @@
+//! Microbenchmark kernel builders — the Fig. 4 loop structure compiled
+//! to tcsim warp programs.
+//!
+//! `mma`: each ILP slot is an independent accumulator chain
+//! (`D_s = A*B + D_s`, RAW across iterations), `__syncwarp()` closes
+//! each iteration, `clock64()` is an IterMark.
+//!
+//! Loads: each ILP slot is a pointer-chase chain (the next address
+//! depends on the loaded value) so the completion latency is observable,
+//! exactly like classic shared-memory latency microbenchmarks [25].
+//! Transactions are derived from real byte addresses via the bank model
+//! in [`crate::sim::smem`].
+
+use crate::device::Device;
+use crate::isa::{LdMatrixNum, LdSharedWidth, MmaInstr};
+use crate::sim::{ld_shared_transactions, ldmatrix_transactions, Op, ProgramBuilder, WarpProgram};
+
+/// Loop iterations per measurement (the paper's ITERS; enough for a
+/// steady state with the warm-up half discarded).
+pub const ITERS: usize = 96;
+
+/// Build the `mma`/`mma.sp` microbenchmark program for one warp.
+pub fn mma_program(device: &Device, instr: &MmaInstr, ilp: u32, iters: usize) -> WarpProgram {
+    let timing = device
+        .timing(instr)
+        .unwrap_or_else(|| panic!("{instr} not supported on {}", device.name));
+    let mut b = ProgramBuilder::new();
+    let slots: Vec<u32> = (0..ilp).map(|_| b.alloc_reg()).collect();
+    for _ in 0..iters {
+        for &d in &slots {
+            // D_s = A x B + D_s: the accumulator is both src and dst.
+            b.push(
+                Op::Mma {
+                    ii: timing.ii,
+                    latency: timing.latency,
+                    fmas: instr.fmas(),
+                    fpu: timing.fpu_fallback == crate::device::FpuFallback::Yes,
+                },
+                Some(d),
+                vec![d],
+            );
+        }
+        b.sync_warp();
+        b.iter_mark();
+    }
+    b.build()
+}
+
+/// Byte addresses of the 16-byte rows one `ldmatrix.xN` touches when the
+/// fragments are packed consecutively in shared memory (the §7 layout —
+/// conflict-free by construction).
+fn packed_ldmatrix_addrs(num: LdMatrixNum) -> Vec<u32> {
+    (0..num.count() * 8).map(|r| r * 16).collect()
+}
+
+/// Build the `ldmatrix` microbenchmark program for one warp.
+pub fn ldmatrix_program(
+    _device: &Device,
+    num: LdMatrixNum,
+    ilp: u32,
+    iters: usize,
+) -> WarpProgram {
+    let txns = ldmatrix_transactions(&packed_ldmatrix_addrs(num));
+    debug_assert_eq!(txns, num.count());
+    let bytes = num.bytes_per_warp();
+    let mut b = ProgramBuilder::new();
+    let slots: Vec<u32> = (0..ilp).map(|_| b.alloc_reg()).collect();
+    for _ in 0..iters {
+        for &d in &slots {
+            // pointer-chase: the next fragment address comes from the
+            // previously loaded data.
+            b.push(Op::SmemLoad { txns, bytes }, Some(d), vec![d]);
+        }
+        b.sync_warp();
+        b.iter_mark();
+    }
+    b.build()
+}
+
+/// Per-thread byte addresses producing a `ways`-way conflict for
+/// `ld.shared` (stride pattern; Table 10's probe).
+fn strided_ld_shared_addrs(width: LdSharedWidth, ways: u32) -> Vec<u32> {
+    let stride = match width {
+        LdSharedWidth::U32 => 4 * ways,
+        // u64 is intrinsically 2-way (256 B); `ways` counts total
+        // transactions, so the address stride contributes ways/2.
+        LdSharedWidth::U64 => 8 * (ways / 2).max(1),
+    };
+    (0..32).map(|t| t * stride).collect()
+}
+
+/// Build the `ld.shared` conflict microbenchmark program for one warp.
+pub fn ld_shared_program(
+    _device: &Device,
+    width: LdSharedWidth,
+    ways: u32,
+    ilp: u32,
+    iters: usize,
+) -> WarpProgram {
+    let addrs = strided_ld_shared_addrs(width, ways);
+    let txns = ld_shared_transactions(&addrs, width.bytes_per_thread() as u32);
+    assert_eq!(txns, ways.max(width.min_transactions()), "address pattern must produce the requested conflict");
+    let bytes = width.bytes_per_warp();
+    let mut b = ProgramBuilder::new();
+    let slots: Vec<u32> = (0..ilp).map(|_| b.alloc_reg()).collect();
+    for _ in 0..iters {
+        for &d in &slots {
+            b.push(Op::SmemLoad { txns, bytes }, Some(d), vec![d]);
+        }
+        b.sync_warp();
+        b.iter_mark();
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::a100;
+    use crate::isa::shapes::*;
+    use crate::isa::{AbType, CdType};
+
+    #[test]
+    fn mma_program_shape() {
+        let d = a100();
+        let i = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16);
+        let p = mma_program(&d, &i, 3, 10);
+        assert_eq!(p.iter_marks(), 10);
+        assert_eq!(p.fmas_per_iteration(), 3 * 2048);
+        // slots chain on themselves
+        let first = &p.instrs[0];
+        assert_eq!(first.srcs, vec![first.dst.unwrap()]);
+    }
+
+    #[test]
+    fn ldmatrix_txns_from_addresses() {
+        let d = a100();
+        for (num, want) in [(LdMatrixNum::X1, 1), (LdMatrixNum::X2, 2), (LdMatrixNum::X4, 4)] {
+            let p = ldmatrix_program(&d, num, 1, 2);
+            match p.instrs[0].op {
+                Op::SmemLoad { txns, .. } => assert_eq!(txns, want),
+                ref other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn ld_shared_address_patterns_hit_requested_ways() {
+        for ways in [1u32, 2, 4, 8] {
+            let addrs = strided_ld_shared_addrs(LdSharedWidth::U32, ways);
+            assert_eq!(ld_shared_transactions(&addrs, 4), ways);
+        }
+        for ways in [2u32, 4, 8] {
+            let addrs = strided_ld_shared_addrs(LdSharedWidth::U64, ways);
+            assert_eq!(ld_shared_transactions(&addrs, 8), ways);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported")]
+    fn unsupported_instruction_panics() {
+        let d = crate::device::rtx2080ti();
+        let i = MmaInstr::dense(AbType::Tf32, CdType::Fp32, M16N8K8);
+        mma_program(&d, &i, 1, 1);
+    }
+}

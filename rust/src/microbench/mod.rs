@@ -1,0 +1,182 @@
+//! The paper's §4 microbenchmark methodology, ported to tcsim.
+//!
+//! For every instruction we measure
+//! 1. the completion/issue latency (ILP=1, one warp), and
+//! 2. latency/throughput under a full (ILP, #warps) sweep,
+//! exactly as Fig. 4 does on silicon (ITERS-iteration loop of ILP
+//! independent accumulator chains, `__syncwarp()` per iteration,
+//! `clock64()` timestamps).
+
+pub mod ablation;
+mod kernels;
+mod sweep;
+pub mod wmma;
+
+pub use kernels::{ld_shared_program, ldmatrix_program, mma_program, ITERS};
+pub use sweep::{
+    convergence_point, sweep_ldmatrix, sweep_mma, ConvergencePoint, Sweep, SweepCell,
+};
+
+use crate::device::Device;
+use crate::isa::{LdMatrixNum, LdSharedWidth, MmaInstr};
+use crate::sim::SmSim;
+
+/// One measured configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    pub warps: u32,
+    pub ilp: u32,
+    /// Cycles per loop iteration (bottleneck warp, steady state).
+    pub latency: f64,
+    /// FMA/clk/SM for compute, bytes/clk/SM for data movement.
+    pub throughput: f64,
+}
+
+/// Run the dense/sparse `mma` microbenchmark at one configuration.
+pub fn measure_mma(device: &Device, instr: &MmaInstr, warps: u32, ilp: u32) -> Measurement {
+    let program = mma_program(device, instr, ilp, ITERS);
+    let per_iter_fmas: u64 = program.fmas_per_iteration() * warps as u64;
+    let programs = vec![program; warps as usize];
+    let results = SmSim::new(device, programs).run();
+    let latency = results.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
+    Measurement { warps, ilp, latency, throughput: per_iter_fmas as f64 / latency }
+}
+
+/// Completion/issue latency: ILP = 1, one warp per SM (§4 step 1).
+pub fn completion_latency_mma(device: &Device, instr: &MmaInstr) -> f64 {
+    measure_mma(device, instr, 1, 1).latency
+}
+
+/// Run the `ldmatrix` microbenchmark at one configuration.
+pub fn measure_ldmatrix(
+    device: &Device,
+    num: LdMatrixNum,
+    warps: u32,
+    ilp: u32,
+) -> Measurement {
+    let program = ldmatrix_program(device, num, ilp, ITERS);
+    let per_iter_bytes = program.smem_bytes_per_iteration() * warps as u64;
+    let programs = vec![program; warps as usize];
+    let results = SmSim::new(device, programs).run();
+    let latency = results.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
+    Measurement { warps, ilp, latency, throughput: per_iter_bytes as f64 / latency }
+}
+
+pub fn completion_latency_ldmatrix(device: &Device, num: LdMatrixNum) -> f64 {
+    measure_ldmatrix(device, num, 1, 1).latency
+}
+
+/// Run the `ld.shared` bank-conflict probe (Table 10): one warp, ILP=1,
+/// addresses strided to produce `ways`-way conflicts.
+pub fn measure_ld_shared(device: &Device, width: LdSharedWidth, ways: u32) -> Measurement {
+    let program = ld_shared_program(device, width, ways, 1, ITERS);
+    let per_iter_bytes = program.smem_bytes_per_iteration();
+    let results = SmSim::new(device, vec![program]).run();
+    let latency = results[0].latency_per_iteration();
+    Measurement { warps: 1, ilp: 1, latency, throughput: per_iter_bytes as f64 / latency }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::a100;
+    use crate::isa::shapes::*;
+    use crate::isa::{AbType, CdType};
+
+    #[test]
+    fn completion_latency_matches_paper_fp16_k16() {
+        // paper Table 3: 24.7 cycles
+        let d = a100();
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+        let lat = completion_latency_mma(&d, &i);
+        assert!((24.0..26.0).contains(&lat), "got {lat}");
+    }
+
+    #[test]
+    fn table3_key_point_8_2() {
+        // paper: (8,2) -> 32.6 cycles, 1004.2 FMA/clk/SM
+        let d = a100();
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+        let m = measure_mma(&d, &i, 8, 2);
+        assert!((31.5..34.0).contains(&m.latency), "{m:?}");
+        assert!((960.0..1030.0).contains(&m.throughput), "{m:?}");
+    }
+
+    #[test]
+    fn table3_key_point_4_3() {
+        // paper: (4,3) -> 27.4 cycles, 897.6 FMA/clk/SM
+        let d = a100();
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+        let m = measure_mma(&d, &i, 4, 3);
+        assert!((26.0..29.0).contains(&m.latency), "{m:?}");
+        assert!((850.0..950.0).contains(&m.throughput), "{m:?}");
+    }
+
+    #[test]
+    fn sparse_doubles_dense_throughput_large_k() {
+        let d = a100();
+        let dense = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16);
+        let sp = MmaInstr::sp(AbType::Bf16, CdType::Fp32, M16N8K32);
+        let md = measure_mma(&d, &dense, 8, 2);
+        let ms = measure_mma(&d, &sp, 8, 2);
+        // same latency, ~2x throughput (§6 findings 1-2)
+        assert!((ms.latency - md.latency).abs() < 2.0, "{md:?} {ms:?}");
+        let ratio = ms.throughput / md.throughput;
+        assert!((1.85..2.15).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn sparse_small_k_underperforms_on_a100() {
+        // Fig. 11: peak only ~1300 of the theoretical 2000
+        let d = a100();
+        let sp = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K16);
+        let m = measure_mma(&d, &sp, 8, 2);
+        assert!(m.throughput < 1450.0, "{m:?}");
+        assert!(m.throughput > 1150.0, "{m:?}");
+    }
+
+    #[test]
+    fn ldmatrix_completion_latencies() {
+        // Table 9: 23.1 / 25.1 / 29.3 cycles
+        let d = a100();
+        for (num, want) in [
+            (LdMatrixNum::X1, 23.0),
+            (LdMatrixNum::X2, 25.0),
+            (LdMatrixNum::X4, 29.0),
+        ] {
+            let lat = completion_latency_ldmatrix(&d, num);
+            assert!((lat - want).abs() < 1.5, "{num}: got {lat}, want ~{want}");
+        }
+    }
+
+    #[test]
+    fn ldmatrix_peak_needs_two_warps() {
+        // §7 finding 2: one warp caps at ~64 B/clk, two reach ~128.
+        let d = a100();
+        let one = measure_ldmatrix(&d, LdMatrixNum::X4, 1, 4);
+        let two = measure_ldmatrix(&d, LdMatrixNum::X4, 2, 4);
+        assert!((58.0..70.0).contains(&one.throughput), "{one:?}");
+        assert!(two.throughput > 115.0, "{two:?}");
+    }
+
+    #[test]
+    fn ld_shared_conflict_latencies_match_table10() {
+        let d = a100();
+        for (ways, want) in [(1u32, 23.0), (2, 25.0), (4, 29.0), (8, 37.0)] {
+            let m = measure_ld_shared(&d, LdSharedWidth::U32, ways);
+            assert!(
+                (m.latency - want).abs() < 1.5,
+                "u32 {ways}-way: got {}, want ~{want}",
+                m.latency
+            );
+        }
+        for (ways, want) in [(2u32, 25.0), (4, 29.0), (8, 37.0)] {
+            let m = measure_ld_shared(&d, LdSharedWidth::U64, ways);
+            assert!(
+                (m.latency - want).abs() < 1.5,
+                "u64 {ways}-way: got {}, want ~{want}",
+                m.latency
+            );
+        }
+    }
+}

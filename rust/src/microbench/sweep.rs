@@ -1,0 +1,191 @@
+//! (ILP, #warps) sweeps and convergence-point detection (§4 step 2).
+//!
+//! The paper's figures plot latency and throughput over
+//! ILP ∈ {1..6} x #warps ∈ {1, 2, 4, 6, 8, 12, 16, 32}; its tables
+//! summarize each instruction by two *convergence points* — the smallest
+//! ILP at 4 warps and at 8 warps beyond which throughput stops improving.
+
+use crate::device::Device;
+use crate::isa::{LdMatrixNum, MmaInstr};
+
+use super::{measure_ldmatrix, measure_mma, Measurement};
+
+/// Default sweep axes (Fig. 6/7/10/11/15).
+pub const SWEEP_WARPS: [u32; 8] = [1, 2, 4, 6, 8, 12, 16, 32];
+pub const SWEEP_ILPS: [u32; 6] = [1, 2, 3, 4, 5, 6];
+
+/// One sweep cell.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepCell {
+    pub warps: u32,
+    pub ilp: u32,
+    pub latency: f64,
+    pub throughput: f64,
+}
+
+/// A full latency/throughput grid for one instruction.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub label: String,
+    pub warps_axis: Vec<u32>,
+    pub ilp_axis: Vec<u32>,
+    /// Row-major: `cells[w_idx * ilp_axis.len() + ilp_idx]`.
+    pub cells: Vec<SweepCell>,
+}
+
+impl Sweep {
+    pub fn cell(&self, warps: u32, ilp: u32) -> Option<&SweepCell> {
+        let wi = self.warps_axis.iter().position(|&w| w == warps)?;
+        let ii = self.ilp_axis.iter().position(|&i| i == ilp)?;
+        self.cells.get(wi * self.ilp_axis.len() + ii)
+    }
+
+    /// Highest throughput anywhere in the grid.
+    pub fn peak_throughput(&self) -> f64 {
+        self.cells.iter().map(|c| c.throughput).fold(0.0, f64::max)
+    }
+}
+
+fn sweep_grid(
+    label: String,
+    warps_axis: &[u32],
+    ilp_axis: &[u32],
+    mut f: impl FnMut(u32, u32) -> Measurement,
+) -> Sweep {
+    let mut cells = Vec::with_capacity(warps_axis.len() * ilp_axis.len());
+    for &w in warps_axis {
+        for &ilp in ilp_axis {
+            let m = f(w, ilp);
+            cells.push(SweepCell { warps: w, ilp, latency: m.latency, throughput: m.throughput });
+        }
+    }
+    Sweep { label, warps_axis: warps_axis.to_vec(), ilp_axis: ilp_axis.to_vec(), cells }
+}
+
+/// Full §5/§6 sweep of an `mma`/`mma.sp` instruction.
+pub fn sweep_mma(device: &Device, instr: &MmaInstr) -> Sweep {
+    sweep_grid(instr.to_string(), &SWEEP_WARPS, &SWEEP_ILPS, |w, ilp| {
+        measure_mma(device, instr, w, ilp)
+    })
+}
+
+/// Full §7 sweep of an `ldmatrix` instruction.
+pub fn sweep_ldmatrix(device: &Device, num: LdMatrixNum) -> Sweep {
+    sweep_grid(num.to_string(), &SWEEP_WARPS, &SWEEP_ILPS, |w, ilp| {
+        measure_ldmatrix(device, num, w, ilp)
+    })
+}
+
+/// A table-style convergence summary at a fixed #warps.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvergencePoint {
+    pub warps: u32,
+    pub ilp: u32,
+    pub latency: f64,
+    pub throughput: f64,
+}
+
+/// The smallest ILP at `warps` whose throughput is within 2% of the best
+/// achieved at that warp count — the paper's "(#warp, ILP)" table points.
+pub fn convergence_point(sweep: &Sweep, warps: u32) -> ConvergencePoint {
+    let row: Vec<&SweepCell> = sweep
+        .cells
+        .iter()
+        .filter(|c| c.warps == warps)
+        .collect();
+    assert!(!row.is_empty(), "warp count {warps} not in sweep");
+    let best = row.iter().map(|c| c.throughput).fold(0.0, f64::max);
+    let cell = row
+        .iter()
+        .find(|c| c.throughput >= 0.98 * best)
+        .expect("at least one cell reaches 98% of the row max");
+    ConvergencePoint {
+        warps,
+        ilp: cell.ilp,
+        latency: cell.latency,
+        throughput: cell.throughput,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::a100;
+    use crate::isa::shapes::*;
+    use crate::isa::{AbType, CdType};
+
+    fn k16() -> MmaInstr {
+        MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16)
+    }
+
+    #[test]
+    fn sweep_has_full_grid() {
+        let d = a100();
+        let s = sweep_mma(&d, &k16());
+        assert_eq!(s.cells.len(), SWEEP_WARPS.len() * SWEEP_ILPS.len());
+        assert!(s.cell(8, 2).is_some());
+        assert!(s.cell(5, 1).is_none());
+    }
+
+    #[test]
+    fn peak_near_vendor_claim() {
+        // Fig. 6 finding 1: measured peak ~1000 vs vendor 1024.
+        let d = a100();
+        let s = sweep_mma(&d, &k16());
+        let peak = s.peak_throughput();
+        assert!((960.0..1030.0).contains(&peak), "peak {peak}");
+    }
+
+    #[test]
+    fn throughput_scales_with_warps_up_to_four() {
+        // Fig. 6 finding 3: 1 -> 2 -> 4 warps scales, latency flat.
+        let d = a100();
+        let s = sweep_mma(&d, &k16());
+        let t1 = s.cell(1, 2).unwrap();
+        let t2 = s.cell(2, 2).unwrap();
+        let t4 = s.cell(4, 2).unwrap();
+        assert!((t2.throughput / t1.throughput - 2.0).abs() < 0.15);
+        assert!((t4.throughput / t1.throughput - 4.0).abs() < 0.3);
+        assert!((t1.latency - t4.latency).abs() < 1.5);
+    }
+
+    #[test]
+    fn six_warp_throughput_dip_at_high_ilp() {
+        // Fig. 6 finding 5: at ILP >= 3, 6 warps < 4 warps throughput.
+        let d = a100();
+        let s = sweep_mma(&d, &k16());
+        let t4 = s.cell(4, 3).unwrap().throughput;
+        let t6 = s.cell(6, 3).unwrap().throughput;
+        assert!(t6 < t4, "t4={t4} t6={t6}");
+        // and latency(6) == latency(8):
+        let l6 = s.cell(6, 3).unwrap().latency;
+        let l8 = s.cell(8, 3).unwrap().latency;
+        assert!((l6 - l8).abs() < 1.0, "l6={l6} l8={l8}");
+    }
+
+    #[test]
+    fn twelve_warps_one_extra_cycle_sixteen_significant() {
+        // Fig. 6 finding 4 at ILP=1.
+        let d = a100();
+        let s = sweep_mma(&d, &k16());
+        let l4 = s.cell(4, 1).unwrap().latency;
+        let l12 = s.cell(12, 1).unwrap().latency;
+        let l16 = s.cell(16, 1).unwrap().latency;
+        assert!(l12 - l4 <= 2.0, "l4={l4} l12={l12}");
+        assert!(l16 - l12 >= 4.0, "l12={l12} l16={l16}");
+    }
+
+    #[test]
+    fn convergence_points_match_table3() {
+        let d = a100();
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+        let s = sweep_mma(&d, &i);
+        let c4 = convergence_point(&s, 4);
+        let c8 = convergence_point(&s, 8);
+        // paper: (4,3) 897.6 and (8,2) 1004.2
+        assert!(c4.ilp >= 3, "{c4:?}");
+        assert!((c4.throughput - 897.6).abs() < 100.0, "{c4:?}");
+        assert_eq!(c8.ilp, 2, "{c8:?}");
+        assert!((c8.throughput - 1004.2).abs() < 50.0, "{c8:?}");
+    }
+}

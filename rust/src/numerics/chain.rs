@@ -1,0 +1,145 @@
+//! Chain matrix multiplication (§8.2, Fig. 17).
+//!
+//! `D = A x B` repeated N times: D feeds the next step's A, B is fresh
+//! N(0,1) each step. The l2 relative error (Eq. 1) of the low-precision
+//! chain against the FP32 CPU chain is averaged over trials. FP16 runs
+//! into ±inf around N >= 10 (fewer exponent bits); BF16 accumulates the
+//! largest error (fewer mantissa bits); TF32 and FP16 track each other
+//! while FP16 stays in range.
+
+use crate::util::Prng;
+
+use super::rounding::quantize;
+use super::tcmma::MmaExec;
+
+/// Per-step output of a chain run.
+#[derive(Debug, Clone)]
+pub struct ChainResult {
+    /// Mean l2 relative error after each step (Eq. 1), NaN once the
+    /// low-precision chain has overflowed to inf.
+    pub rel_err: Vec<f64>,
+    /// First step (1-based) at which any trial produced a non-finite
+    /// value, if any — Fig. 17's FP16 cut-off.
+    pub overflow_at: Option<usize>,
+}
+
+/// Eq. 1: ||D_l - D_fp32||_2 / ||D_l||_2 (note: the paper normalizes by
+/// the low-precision result).
+fn l2_relative_error(d_low: &[f32], d_ref: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&l, &r) in d_low.iter().zip(d_ref) {
+        num += ((l as f64) - (r as f64)).powi(2);
+        den += (l as f64).powi(2);
+    }
+    (num.sqrt()) / den.sqrt().max(f64::MIN_POSITIVE)
+}
+
+/// Run the chain study on any executor backend.
+///
+/// `init_low`: pre-round the initial A and each fresh B to the operand
+/// type (the "init with low precision" strategy); otherwise FP32 init.
+pub fn chain_errors(
+    exec: &mut dyn MmaExec,
+    n_steps: usize,
+    trials: usize,
+    init_low: bool,
+    seed: u64,
+) -> ChainResult {
+    let cfg = exec.cfg();
+    let (m, n, k) = (cfg.m, cfg.n, cfg.k);
+    assert_eq!(n, k, "chain feeds D (m x n) back as A (m x k): need n == k");
+    let mut rng = Prng::new(seed);
+
+    let mut a_tc = vec![0.0f32; trials * m * k];
+    rng.fill_normal(&mut a_tc);
+    if init_low {
+        for v in a_tc.iter_mut() {
+            *v = quantize(*v, cfg.ab);
+        }
+    }
+    // CPU FP32 chain starts from the *same* initial values.
+    let mut a_cpu = a_tc.clone();
+
+    let zero_c = vec![0.0f32; trials * m * n];
+    let mut rel_err = Vec::with_capacity(n_steps);
+    let mut overflow_at = None;
+
+    for step in 1..=n_steps {
+        let mut b = vec![0.0f32; trials * k * n];
+        rng.fill_normal(&mut b);
+        if init_low {
+            for v in b.iter_mut() {
+                *v = quantize(*v, cfg.ab);
+            }
+        }
+        let d_tc = exec.run(trials, &a_tc, &b, &zero_c);
+        let d_cpu = super::tcmma::cpu_f32_baseline(trials, m, n, k, &a_cpu, &b, &zero_c);
+
+        if overflow_at.is_none() && d_tc.iter().any(|v| !v.is_finite()) {
+            overflow_at = Some(step);
+        }
+        // average Eq.1 over trials
+        let mut err = 0.0f64;
+        for t in 0..trials {
+            err += l2_relative_error(
+                &d_tc[t * m * n..(t + 1) * m * n],
+                &d_cpu[t * m * n..(t + 1) * m * n],
+            );
+        }
+        rel_err.push(err / trials as f64);
+
+        a_tc = d_tc;
+        a_cpu = d_cpu;
+    }
+    ChainResult { rel_err, overflow_at }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tcmma::{NativeExec, NumericCfg};
+    use super::*;
+
+    fn exec(ab: &'static str, cd: &'static str) -> NativeExec {
+        NativeExec::new(NumericCfg::new(ab, cd, 16, 8, 8))
+    }
+
+    #[test]
+    fn errors_grow_with_chain_length() {
+        let r = chain_errors(&mut exec("tf32", "f32"), 6, 48, true, 3);
+        assert!(r.rel_err[5] > r.rel_err[0]);
+        assert!(r.rel_err[0] < 1e-5, "first step ~zero: {:e}", r.rel_err[0]);
+        assert!(r.overflow_at.is_none());
+    }
+
+    #[test]
+    fn bf16_worst_precision() {
+        let bf = chain_errors(&mut exec("bf16", "f32"), 5, 48, true, 3);
+        let tf = chain_errors(&mut exec("tf32", "f32"), 5, 48, true, 3);
+        assert!(bf.rel_err[4] > 3.0 * tf.rel_err[4], "{} vs {}", bf.rel_err[4], tf.rel_err[4]);
+    }
+
+    #[test]
+    fn fp16_overflows_near_n10() {
+        let r = chain_errors(&mut exec("fp16", "f16"), 14, 48, true, 4);
+        let at = r.overflow_at.expect("FP16 chain must overflow");
+        assert!((8..=12).contains(&at), "overflow at {at}");
+    }
+
+    #[test]
+    fn tf32_and_fp16_same_error_level_in_range() {
+        let fp = chain_errors(&mut exec("fp16", "f32"), 4, 48, true, 5);
+        let tf = chain_errors(&mut exec("tf32", "f32"), 4, 48, true, 5);
+        let ratio = fp.rel_err[3] / tf.rel_err[3];
+        assert!((0.4..2.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn fp32_init_always_worse() {
+        let low = chain_errors(&mut exec("tf32", "f32"), 3, 48, true, 6);
+        let f32i = chain_errors(&mut exec("tf32", "f32"), 3, 48, false, 6);
+        for (l, h) in low.rel_err.iter().zip(&f32i.rel_err) {
+            assert!(h > l, "init_fp32 {h:e} must exceed init_low {l:e}");
+        }
+    }
+}

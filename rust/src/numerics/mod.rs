@@ -1,0 +1,18 @@
+//! §8 numeric behaviors: quantization, the emulated Tensor-Core MMA
+//! datapath, the element-wise profiling experiments (Tables 12–15) and
+//! the chain matrix multiplication study (Fig. 17).
+//!
+//! The datapath exists twice in this repo: here (native Rust softfloat)
+//! and as JAX/Pallas AOT artifacts executed through [`crate::runtime`].
+//! Integration tests assert the two agree bit-exactly; the experiments
+//! can run on either backend via the [`MmaExec`] trait.
+
+mod chain;
+mod profiling;
+mod rounding;
+mod tcmma;
+
+pub use chain::{chain_errors, ChainResult};
+pub use profiling::{profile_op, InitKind, ProfileOp, ProfileResult};
+pub use rounding::{f64_to_f32_rne, f64_to_f32_rz, quantize, quantize_bf16, quantize_fp16, quantize_tf32, Rounding};
+pub use tcmma::{cpu_f32_baseline, NativeExec, NumericCfg, MmaExec};

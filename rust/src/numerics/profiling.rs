@@ -1,0 +1,201 @@
+//! Element-wise numeric profiling (§8.1, Fig. 16, Tables 12–15).
+//!
+//! Three operations are isolated by sparse input patterns:
+//! * multiplication:       `a00 x b00` (all else zero),
+//! * inner-product add:    first row of A x first column of B,
+//! * accumulation:         `a00 x b00 + c00`.
+//!
+//! Inputs are N(0,1) with a fixed seed; "init_<type>" pre-rounds the
+//! operands to the low-precision type (eliminating conversion loss) while
+//! "init_FP32" leaves them full-precision. Errors are mean |TC - CPU|
+//! over the trial batch, with the CPU FP32 baseline of
+//! [`super::cpu_f32_baseline`].
+
+use crate::util::Prng;
+
+use super::tcmma::{cpu_f32_baseline, MmaExec};
+use super::rounding::{quantize, quantize_fp16};
+
+/// Which of the three Fig. 16 operations to isolate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileOp {
+    Multiplication,
+    InnerProduct,
+    Accumulation,
+}
+
+impl ProfileOp {
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            ProfileOp::Multiplication => "multiplication",
+            ProfileOp::InnerProduct => "add - Inner Product",
+            ProfileOp::Accumulation => "accumulation",
+        }
+    }
+
+    pub const ALL: [ProfileOp; 3] =
+        [ProfileOp::Multiplication, ProfileOp::InnerProduct, ProfileOp::Accumulation];
+}
+
+/// Initialization strategy (§8.1: low-precision init eliminates the
+/// conversion loss; FP32 init exposes it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    /// Pre-round A/B (and a FP16 C when C/D is FP16) to the operand type.
+    LowPrecision,
+    /// Full FP32 initialization.
+    Fp32,
+}
+
+/// Result of one profiling experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct ProfileResult {
+    pub op: ProfileOp,
+    pub init: InitKind,
+    /// mean |D_tc - D_cpu32| over the trials.
+    pub mean_abs_err: f64,
+    /// mean |D_tc - fp16(D_cpu32)| — the Table 14 extra baseline.
+    pub mean_abs_err_vs_cvt_fp16: f64,
+    pub trials: usize,
+}
+
+/// Run one §8.1 experiment on any executor backend.
+pub fn profile_op(
+    exec: &mut dyn MmaExec,
+    op: ProfileOp,
+    init: InitKind,
+    trials: usize,
+    seed: u64,
+) -> ProfileResult {
+    let cfg = exec.cfg();
+    let (m, n, k) = (cfg.m, cfg.n, cfg.k);
+    let mut rng = Prng::new(seed);
+    let mut a = vec![0.0f32; trials * m * k];
+    let mut b = vec![0.0f32; trials * k * n];
+    let mut c = vec![0.0f32; trials * m * n];
+
+    let q = |rng: &mut Prng, init: InitKind, ab: &str| -> f32 {
+        let v = rng.normal_f32();
+        match init {
+            InitKind::LowPrecision => quantize(v, ab),
+            InitKind::Fp32 => v,
+        }
+    };
+
+    for t in 0..trials {
+        match op {
+            ProfileOp::Multiplication => {
+                a[t * m * k] = q(&mut rng, init, cfg.ab);
+                b[t * k * n] = q(&mut rng, init, cfg.ab);
+            }
+            ProfileOp::InnerProduct => {
+                for p in 0..k {
+                    a[t * m * k + p] = q(&mut rng, init, cfg.ab); // row 0
+                    b[t * k * n + p * n] = q(&mut rng, init, cfg.ab); // col 0
+                }
+            }
+            ProfileOp::Accumulation => {
+                a[t * m * k] = q(&mut rng, init, cfg.ab);
+                b[t * k * n] = q(&mut rng, init, cfg.ab);
+                let cv = rng.normal_f32();
+                // C/D type is FP32 for the *_f32 configs (never
+                // quantized); for fp16_f16, C itself is FP16 and the
+                // low-precision init pre-rounds it.
+                c[t * m * n] = if cfg.cd == "f16" && init == InitKind::LowPrecision {
+                    quantize_fp16(cv)
+                } else {
+                    cv
+                };
+            }
+        }
+    }
+
+    let tc = exec.run(trials, &a, &b, &c);
+    let cpu = cpu_f32_baseline(trials, m, n, k, &a, &b, &c);
+
+    // Only d00 of each trial is populated — matching the paper's
+    // element-wise profiling.
+    let mut err = 0.0f64;
+    let mut err_cvt = 0.0f64;
+    for t in 0..trials {
+        let d_tc = tc[t * m * n] as f64;
+        let d_cpu = cpu[t * m * n] as f64;
+        err += (d_tc - d_cpu).abs();
+        err_cvt += (d_tc - quantize_fp16(d_cpu as f32) as f64).abs();
+    }
+    ProfileResult {
+        op,
+        init,
+        mean_abs_err: err / trials as f64,
+        mean_abs_err_vs_cvt_fp16: err_cvt / trials as f64,
+        trials,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tcmma::{NativeExec, NumericCfg};
+    use super::*;
+
+    const TRIALS: usize = 1000;
+
+    fn run(cfg: NumericCfg, op: ProfileOp, init: InitKind) -> ProfileResult {
+        profile_op(&mut NativeExec::new(cfg), op, init, TRIALS, 7)
+    }
+
+    #[test]
+    fn table12_bf16() {
+        let cfg = NumericCfg::new("bf16", "f32", 16, 8, 8);
+        assert_eq!(run(cfg, ProfileOp::Multiplication, InitKind::LowPrecision).mean_abs_err, 0.0);
+        assert_eq!(run(cfg, ProfileOp::InnerProduct, InitKind::LowPrecision).mean_abs_err, 0.0);
+        let acc = run(cfg, ProfileOp::Accumulation, InitKind::LowPrecision).mean_abs_err;
+        assert!((1e-9..1e-7).contains(&acc), "paper 1.89e-8, got {acc:e}");
+        for op in ProfileOp::ALL {
+            let e = run(cfg, op, InitKind::Fp32).mean_abs_err;
+            assert!((1e-4..1e-2).contains(&e), "{op:?}: {e:e}");
+        }
+    }
+
+    #[test]
+    fn table13_fp16_f32() {
+        let cfg = NumericCfg::new("fp16", "f32", 16, 8, 8);
+        for op in ProfileOp::ALL {
+            assert_eq!(run(cfg, op, InitKind::LowPrecision).mean_abs_err, 0.0, "{op:?}");
+            let e = run(cfg, op, InitKind::Fp32).mean_abs_err;
+            assert!((1e-5..1e-3).contains(&e), "{op:?}: {e:e}");
+        }
+    }
+
+    #[test]
+    fn table14_fp16_f16() {
+        let cfg = NumericCfg::new("fp16", "f16", 16, 8, 8);
+        for op in ProfileOp::ALL {
+            let r = run(cfg, op, InitKind::LowPrecision);
+            assert!(r.mean_abs_err > 0.0, "{op:?} vs CPU_FP32 must be nonzero");
+            assert_eq!(r.mean_abs_err_vs_cvt_fp16, 0.0, "{op:?} vs cvtFP16 must be zero");
+        }
+    }
+
+    #[test]
+    fn table15_tf32() {
+        let cfg = NumericCfg::new("tf32", "f32", 16, 8, 8);
+        for op in ProfileOp::ALL {
+            assert_eq!(run(cfg, op, InitKind::LowPrecision).mean_abs_err, 0.0, "{op:?}");
+        }
+        // same error level as FP16 (10 mantissa bits each)
+        let fp16 = NumericCfg::new("fp16", "f32", 16, 8, 8);
+        let e_tf32 = run(cfg, ProfileOp::Multiplication, InitKind::Fp32).mean_abs_err;
+        let e_fp16 = run(fp16, ProfileOp::Multiplication, InitKind::Fp32).mean_abs_err;
+        let ratio = e_tf32 / e_fp16;
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn bf16_error_level_exceeds_fp16() {
+        let bf = NumericCfg::new("bf16", "f32", 16, 8, 8);
+        let fp = NumericCfg::new("fp16", "f32", 16, 8, 8);
+        let e_bf = run(bf, ProfileOp::Multiplication, InitKind::Fp32).mean_abs_err;
+        let e_fp = run(fp, ProfileOp::Multiplication, InitKind::Fp32).mean_abs_err;
+        assert!(e_bf / e_fp > 4.0, "bf16 {e_bf:e} vs fp16 {e_fp:e}");
+    }
+}

@@ -1,0 +1,346 @@
+//! Softfloat building blocks: FP32 -> {BF16, FP16, TF32} quantization
+//! (round-to-nearest-even) and f64 -> f32 rounding with RNE / RZ.
+//!
+//! Bit-for-bit identical to `python/compile/kernels/quantize.py` — the
+//! integration tests compare this module against the PJRT artifacts.
+
+/// Rounding mode of the FP32 accumulation step (DESIGN.md §4: RZ on the
+/// BF16 path, RNE elsewhere — the calibration that reproduces Table 12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    Rne,
+    Rz,
+}
+
+/// FP32 -> BF16 -> FP32, RNE ties-to-even. BF16 = upper 16 bits of FP32.
+pub fn quantize_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if (bits >> 23) & 0xFF == 0xFF {
+        return x; // inf / NaN pass through
+    }
+    let lsb = (bits >> 16) & 1;
+    let r = bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000;
+    f32::from_bits(r)
+}
+
+/// FP32 -> TF32 -> FP32: same 8-bit exponent, mantissa cut to 10 bits
+/// (RNE ties-to-even). TF32 still occupies a 32-bit register (Table 11).
+pub fn quantize_tf32(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if (bits >> 23) & 0xFF == 0xFF {
+        return x;
+    }
+    let lsb = (bits >> 13) & 1;
+    let r = bits.wrapping_add(0x0FFF + lsb) & !0x1FFF;
+    f32::from_bits(r)
+}
+
+/// FP32 -> IEEE binary16 -> FP32, RNE, with overflow to ±inf and
+/// gradual underflow (subnormals) — the Fig. 17 overflow behaviour
+/// depends on the 65504 ceiling.
+pub fn quantize_fp16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Canonical f32 -> binary16 conversion (RNE).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf / NaN
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal f16: round 23-bit mantissa to 10 bits, RNE
+        let mut m = man >> 13;
+        let rem = man & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e >= -25 {
+        // subnormal f16
+        let full = man | 0x0080_0000; // implicit one
+        let shift = (-14 - e) as u32 + 13;
+        let m = full >> shift;
+        let rem = full & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut m = m;
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        return sign | (m as u16); // may carry into the exponent: still valid
+    }
+    sign // underflow to zero
+}
+
+/// Canonical binary16 -> f32 conversion (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: normalize
+            let lead = m.leading_zeros() - 22; // zeros within the 10-bit field
+            let shift = lead + 1;
+            let man32 = (m << shift) & 0x03FF;
+            let exp32 = 127 - 15 - shift + 1;
+            sign | (exp32 << 23) | (man32 << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// FP32 -> FP8-E4M3 -> FP32 (RNE, saturating at ±448).
+///
+/// Forward-looking extension: Table 11 lists the two FP8 formats the
+/// (then-unreleased) Hopper Tensor Cores add. E4M3 follows the
+/// OCP/NVIDIA convention: no infinities, saturate to ±448.
+pub fn quantize_fp8_e4m3(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    const MAX: f32 = 448.0;
+    let clamped = x.clamp(-MAX, MAX);
+    if x.abs() > MAX {
+        return clamped; // saturating, no inf
+    }
+    round_to_format(clamped, 4, 3, 7)
+}
+
+/// FP32 -> FP8-E5M2 -> FP32 (RNE, overflow to ±inf like IEEE).
+pub fn quantize_fp8_e5m2(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    const MAX: f32 = 57344.0;
+    if x.abs() > MAX * (1.0 + 0.25) {
+        return f32::INFINITY.copysign(x);
+    }
+    let r = round_to_format(x, 5, 2, 15);
+    if r.abs() > MAX {
+        f32::INFINITY.copysign(x)
+    } else {
+        r
+    }
+}
+
+/// Round an f32 to a (exp_bits, man_bits, bias) mini-float with RNE and
+/// gradual underflow; the result is returned as f32 (every mini-float
+/// value is exactly representable in f32).
+fn round_to_format(x: f32, exp_bits: u32, man_bits: u32, bias: i32) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let _ = exp_bits;
+    let e = x.abs().log2().floor() as i32;
+    // normal range: e >= 1 - bias; subnormal ulp is fixed below that
+    let ulp_exp = if e >= 1 - bias {
+        e - man_bits as i32
+    } else {
+        1 - bias - man_bits as i32
+    };
+    let scale = (ulp_exp as f64).exp2();
+    let q = (x as f64 / scale).round_ties_even() * scale;
+    q as f32
+}
+
+/// Quantize by operand-type name (matching the Python config strings).
+pub fn quantize(x: f32, ab: &str) -> f32 {
+    match ab {
+        "bf16" => quantize_bf16(x),
+        "fp16" => quantize_fp16(x),
+        "tf32" => quantize_tf32(x),
+        "fp8e4m3" => quantize_fp8_e4m3(x),
+        "fp8e5m2" => quantize_fp8_e5m2(x),
+        "fp32" => x,
+        other => panic!("unknown operand dtype {other:?}"),
+    }
+}
+
+/// f64 -> f32, round-to-nearest-even (the hardware default).
+pub fn f64_to_f32_rne(x: f64) -> f32 {
+    x as f32
+}
+
+/// f64 -> f32, round-toward-zero. Mirrors the Pallas kernel: take the
+/// RNE cast and step one ulp toward zero if it rounded away.
+pub fn f64_to_f32_rz(x: f64) -> f32 {
+    let y = x as f32;
+    if y.is_infinite() && x.is_finite() {
+        return f32::MAX.copysign(x as f32);
+    }
+    if !y.is_finite() {
+        return y;
+    }
+    if (y as f64).abs() > x.abs() {
+        next_toward_zero(y)
+    } else {
+        y
+    }
+}
+
+fn next_toward_zero(y: f32) -> f32 {
+    if y == 0.0 {
+        return y;
+    }
+    f32::from_bits(y.to_bits() - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_resolution_and_ties() {
+        assert_eq!(quantize_bf16(1.0 + 2f32.powi(-8)), 1.0);
+        let y = 1.0 + 2f32.powi(-7);
+        assert_eq!(quantize_bf16(y), y);
+        // tie: 1 + 3*2^-8 is halfway -> even (1 + 2^-6)
+        assert_eq!(quantize_bf16(1.0 + 3.0 * 2f32.powi(-8)), 1.0 + 2f32.powi(-6));
+    }
+
+    #[test]
+    fn tf32_resolution() {
+        let y = 1.0 + 2f32.powi(-10);
+        assert_eq!(quantize_tf32(y), y);
+        assert_eq!(quantize_tf32(1.0 + 2f32.powi(-11)), 1.0);
+        assert!(quantize_tf32(f32::INFINITY).is_infinite());
+        assert!(quantize_tf32(f32::NAN).is_nan());
+        assert_eq!(quantize_tf32(3e38), quantize_tf32(quantize_tf32(3e38)));
+    }
+
+    #[test]
+    fn fp16_basics() {
+        assert_eq!(quantize_fp16(1.0), 1.0);
+        assert_eq!(quantize_fp16(65504.0), 65504.0);
+        assert!(quantize_fp16(70000.0).is_infinite());
+        assert!(quantize_fp16(-70000.0).is_infinite());
+        assert_eq!(quantize_fp16(1.0 + 2f32.powi(-11)), 1.0);
+        let y = 1.0 + 2f32.powi(-10);
+        assert_eq!(quantize_fp16(y), y);
+        // subnormals survive
+        let sub = 2f32.powi(-20);
+        assert_eq!(quantize_fp16(sub), sub);
+        // below half the smallest subnormal -> 0
+        assert_eq!(quantize_fp16(2f32.powi(-26)), 0.0);
+        assert!(quantize_fp16(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn fp16_idempotent_on_random() {
+        let mut p = crate::util::Prng::new(5);
+        for _ in 0..10_000 {
+            let x = p.normal_f32() * 100.0;
+            let q1 = quantize_fp16(x);
+            assert_eq!(q1, quantize_fp16(q1), "x={x}");
+        }
+    }
+
+    #[test]
+    fn rz_properties() {
+        // rounds magnitude down where RNE rounds up
+        let x = 1.0f64 + 1.5 * 2f64.powi(-24);
+        assert_eq!(f64_to_f32_rne(x), 1.0 + 2f32.powi(-23));
+        assert_eq!(f64_to_f32_rz(x), 1.0);
+        assert_eq!(f64_to_f32_rz(-x), -1.0);
+        // exact values unchanged
+        assert_eq!(f64_to_f32_rz(0.5), 0.5);
+        assert_eq!(f64_to_f32_rz(0.0), 0.0);
+        // never exceeds |x|
+        let mut p = crate::util::Prng::new(9);
+        for _ in 0..50_000 {
+            let v = p.normal() * 1e3;
+            assert!((f64_to_f32_rz(v) as f64).abs() <= v.abs(), "v={v}");
+        }
+        // overflow clamps to MAX, not inf
+        assert_eq!(f64_to_f32_rz(3.5e38), f32::MAX);
+        assert_eq!(f64_to_f32_rz(-3.5e38), -f32::MAX);
+    }
+
+    #[test]
+    fn quantize_by_name() {
+        assert_eq!(quantize(1.5, "fp32"), 1.5);
+        assert_eq!(quantize(1.0 + 2f32.powi(-8), "bf16"), 1.0);
+    }
+
+    #[test]
+    fn fp8_e4m3_resolution_and_saturation() {
+        // 3 mantissa bits: 1 + 2^-3 representable, 1 + 2^-4 rounds to 1
+        let y = 1.0 + 2f32.powi(-3);
+        assert_eq!(quantize_fp8_e4m3(y), y);
+        assert_eq!(quantize_fp8_e4m3(1.0 + 2f32.powi(-4)), 1.0);
+        // saturating at 448, never inf
+        assert_eq!(quantize_fp8_e4m3(448.0), 448.0);
+        assert_eq!(quantize_fp8_e4m3(1e6), 448.0);
+        assert_eq!(quantize_fp8_e4m3(-1e6), -448.0);
+        assert!(quantize_fp8_e4m3(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn fp8_e5m2_resolution_and_overflow() {
+        let y = 1.0 + 2f32.powi(-2);
+        assert_eq!(quantize_fp8_e5m2(y), y);
+        assert_eq!(quantize_fp8_e5m2(1.0 + 2f32.powi(-3)), 1.0);
+        // IEEE-style overflow to inf
+        assert_eq!(quantize_fp8_e5m2(57344.0), 57344.0);
+        assert!(quantize_fp8_e5m2(1e6).is_infinite());
+    }
+
+    #[test]
+    fn fp8_idempotent() {
+        let mut p = crate::util::Prng::new(31);
+        for _ in 0..5_000 {
+            let x = p.normal_f32() * 10.0;
+            for f in [quantize_fp8_e4m3 as fn(f32) -> f32, quantize_fp8_e5m2] {
+                let q = f(x);
+                assert_eq!(q, f(q), "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_error_hierarchy() {
+        // fewer mantissa bits -> larger quantization error:
+        // e5m2 (2) > e4m3 (3) > bf16 (7) > fp16/tf32 (10)
+        let mut p = crate::util::Prng::new(8);
+        let mut errs = [0.0f64; 4];
+        let n = 20_000;
+        for _ in 0..n {
+            let x = p.normal_f32();
+            errs[0] += (quantize_fp8_e5m2(x) - x).abs() as f64;
+            errs[1] += (quantize_fp8_e4m3(x) - x).abs() as f64;
+            errs[2] += (quantize_bf16(x) - x).abs() as f64;
+            errs[3] += (quantize_fp16(x) - x).abs() as f64;
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown operand dtype")]
+    fn quantize_unknown_panics() {
+        quantize(1.0, "fp8");
+    }
+}

@@ -1,0 +1,256 @@
+//! The emulated Tensor-Core MMA datapath (native implementation) and the
+//! execution-backend abstraction shared with the PJRT runtime.
+
+use super::rounding::{f64_to_f32_rne, f64_to_f32_rz, quantize, quantize_fp16, Rounding};
+
+/// Numeric configuration of one emulated instruction — mirrors the
+/// Python `TcMmaConfig` (and the artifact manifest entries).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NumericCfg {
+    /// Operand type: "bf16" | "fp16" | "tf32".
+    pub ab: &'static str,
+    /// Accumulator/result type: "f32" | "f16".
+    pub cd: &'static str,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl NumericCfg {
+    pub const fn new(ab: &'static str, cd: &'static str, m: usize, n: usize, k: usize) -> Self {
+        Self { ab, cd, m, n, k }
+    }
+
+    /// Accumulation rounding: RZ on the BF16 path (Table 12), RNE else.
+    pub fn acc_rounding(&self) -> Rounding {
+        if self.ab == "bf16" {
+            Rounding::Rz
+        } else {
+            Rounding::Rne
+        }
+    }
+
+    /// The artifact name this config lowers to.
+    pub fn artifact_name(&self) -> String {
+        format!("tcmma_{}_{}_m{}n{}k{}", self.ab, self.cd, self.m, self.n, self.k)
+    }
+}
+
+/// A batched emulated-MMA executor: `d = tcmma(a, b, c)` over
+/// `batch x (m,k) x (k,n) + (m,n)` f32 buffers (row-major, batch-major).
+pub trait MmaExec {
+    fn cfg(&self) -> NumericCfg;
+
+    /// Execute one batch. Slice lengths must match the config/batch.
+    fn run(&mut self, batch: usize, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32>;
+}
+
+/// Native softfloat implementation of the datapath:
+/// quantize (RNE) -> exact products -> f64 inner product -> one RNE
+/// rounding into the FP32 result register -> accumulation of `+C` with
+/// the type's rounding mode -> optional final FP16 conversion.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeExec {
+    pub cfg: NumericCfg,
+}
+
+impl NativeExec {
+    pub fn new(cfg: NumericCfg) -> Self {
+        Self { cfg }
+    }
+
+    /// One tile (no batch) — the core datapath.
+    pub fn tile(&self, a: &[f32], b: &[f32], c: &[f32], out: &mut [f32]) {
+        let NumericCfg { m, n, k, ab, cd } = self.cfg;
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        assert_eq!(out.len(), m * n);
+        let rnd = self.cfg.acc_rounding();
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64; // the wide adder
+                for p in 0..k {
+                    let aq = quantize(a[i * k + p], ab) as f64;
+                    let bq = quantize(b[p * n + j], ab) as f64;
+                    s += aq * bq;
+                }
+                let s32 = f64_to_f32_rne(s); // inner product rounds once
+                let acc = s32 as f64 + c[i * n + j] as f64;
+                let mut d = match rnd {
+                    Rounding::Rne => f64_to_f32_rne(acc),
+                    Rounding::Rz => f64_to_f32_rz(acc),
+                };
+                if cd == "f16" {
+                    // high-precision compute, final conversion only
+                    // (Table 14 finding)
+                    d = quantize_fp16(d);
+                }
+                out[i * n + j] = d;
+            }
+        }
+    }
+}
+
+impl MmaExec for NativeExec {
+    fn cfg(&self) -> NumericCfg {
+        self.cfg
+    }
+
+    fn run(&mut self, batch: usize, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+        let NumericCfg { m, n, k, .. } = self.cfg;
+        assert_eq!(a.len(), batch * m * k);
+        assert_eq!(b.len(), batch * k * n);
+        assert_eq!(c.len(), batch * m * n);
+        let mut out = vec![0.0f32; batch * m * n];
+        for t in 0..batch {
+            self.tile(
+                &a[t * m * k..(t + 1) * m * k],
+                &b[t * k * n..(t + 1) * k * n],
+                &c[t * m * n..(t + 1) * m * n],
+                &mut out[t * m * n..(t + 1) * m * n],
+            );
+        }
+        out
+    }
+}
+
+/// The paper's CPU reference: plain FP32 `D = A@B + C` — exact products,
+/// the inner product rounded once to f32, then an RNE f32 accumulate.
+pub fn cpu_f32_baseline(
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * m * n];
+    for t in 0..batch {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for p in 0..k {
+                    s += a[t * m * k + i * k + p] as f64 * b[t * k * n + p * n + j] as f64;
+                }
+                let s32 = s as f32;
+                out[t * m * n + i * n + j] =
+                    (s32 as f64 + c[t * m * n + i * n + j] as f64) as f32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    const BF16: NumericCfg = NumericCfg::new("bf16", "f32", 16, 8, 8);
+    const FP16: NumericCfg = NumericCfg::new("fp16", "f32", 16, 8, 8);
+    const FP16_F16: NumericCfg = NumericCfg::new("fp16", "f16", 16, 8, 8);
+    const TF32: NumericCfg = NumericCfg::new("tf32", "f32", 16, 8, 8);
+
+    fn random_batch(cfg: NumericCfg, batch: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut p = Prng::new(seed);
+        let mut a = vec![0.0; batch * cfg.m * cfg.k];
+        let mut b = vec![0.0; batch * cfg.k * cfg.n];
+        let mut c = vec![0.0; batch * cfg.m * cfg.n];
+        p.fill_normal(&mut a);
+        p.fill_normal(&mut b);
+        p.fill_normal(&mut c);
+        (a, b, c)
+    }
+
+    #[test]
+    fn acc_rounding_per_type() {
+        assert_eq!(BF16.acc_rounding(), Rounding::Rz);
+        assert_eq!(FP16.acc_rounding(), Rounding::Rne);
+        assert_eq!(TF32.acc_rounding(), Rounding::Rne);
+    }
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(BF16.artifact_name(), "tcmma_bf16_f32_m16n8k8");
+        assert_eq!(FP16_F16.artifact_name(), "tcmma_fp16_f16_m16n8k8");
+    }
+
+    #[test]
+    fn quantized_inputs_give_zero_error_vs_cpu_when_c_zero() {
+        // Table 13/15 init_low rows: multiplication and inner product
+        // match the CPU FP32 baseline exactly.
+        for cfg in [FP16, TF32] {
+            let batch = 32;
+            let (mut a, mut b, _) = random_batch(cfg, batch, 3);
+            for v in a.iter_mut() {
+                *v = quantize(*v, cfg.ab);
+            }
+            for v in b.iter_mut() {
+                *v = quantize(*v, cfg.ab);
+            }
+            let c = vec![0.0f32; batch * cfg.m * cfg.n];
+            let tc = NativeExec::new(cfg).run(batch, &a, &b, &c);
+            let cpu = cpu_f32_baseline(batch, cfg.m, cfg.n, cfg.k, &a, &b, &c);
+            assert_eq!(tc, cpu, "{}", cfg.ab);
+        }
+    }
+
+    #[test]
+    fn bf16_rz_accumulation_differs_from_cpu() {
+        // Table 12's nonzero accumulation error under init_BF16.
+        let cfg = BF16;
+        let batch = 64;
+        let (mut a, mut b, c) = random_batch(cfg, batch, 4);
+        for v in a.iter_mut() {
+            *v = quantize(*v, "bf16");
+        }
+        for v in b.iter_mut() {
+            *v = quantize(*v, "bf16");
+        }
+        let tc = NativeExec::new(cfg).run(batch, &a, &b, &c);
+        let cpu = cpu_f32_baseline(batch, cfg.m, cfg.n, cfg.k, &a, &b, &c);
+        let err: f64 = tc
+            .iter()
+            .zip(&cpu)
+            .map(|(x, y)| (x - y).abs() as f64)
+            .sum::<f64>()
+            / tc.len() as f64;
+        assert!(err > 0.0, "RZ accumulation must differ from RNE");
+        assert!(err < 1e-6, "but only at the last-ulp level: {err}");
+        // and |tc| <= |exact| everywhere (RZ property)
+        for (x, y) in tc.iter().zip(&cpu) {
+            if x != y {
+                assert!(x.abs() <= y.abs() + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_cd_saturates_to_inf() {
+        let cfg = FP16_F16;
+        let batch = 1;
+        let a = vec![100.0f32; cfg.m * cfg.k];
+        let b = vec![100.0f32; cfg.k * cfg.n];
+        let c = vec![0.0f32; cfg.m * cfg.n];
+        let out = NativeExec::new(cfg).run(batch, &a, &b, &c);
+        assert!(out.iter().all(|v| v.is_infinite()));
+    }
+
+    #[test]
+    fn identity_passthrough_is_quantization() {
+        let cfg = NumericCfg::new("tf32", "f32", 8, 8, 8);
+        let mut eye = vec![0.0f32; 64];
+        for i in 0..8 {
+            eye[i * 8 + i] = 1.0;
+        }
+        let mut p = Prng::new(7);
+        let mut b = vec![0.0f32; 64];
+        p.fill_normal(&mut b);
+        let c = vec![0.0f32; 64];
+        let out = NativeExec::new(cfg).run(1, &eye, &b, &c);
+        let want: Vec<f32> = b.iter().map(|&v| quantize(v, "tf32")).collect();
+        assert_eq!(out, want);
+    }
+}

@@ -1,0 +1,249 @@
+//! The paper's published numbers, embedded for side-by-side comparison
+//! in every regenerated table (EXPERIMENTS.md is generated from these).
+
+use crate::isa::{shapes::*, AbType, CdType, LdMatrixNum, MmaInstr};
+
+/// One row of a Table 3/4/5/6/7-style instruction table.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperMmaRow {
+    pub instr: MmaInstr,
+    pub completion: f64,
+    pub p4: (u32, f64, f64), // (ILP, latency, throughput) at 4 warps
+    pub p8: (u32, f64, f64), // at 8 warps
+}
+
+fn row(
+    instr: MmaInstr,
+    completion: f64,
+    p4: (u32, f64, f64),
+    p8: (u32, f64, f64),
+) -> PaperMmaRow {
+    PaperMmaRow { instr, completion, p4, p8 }
+}
+
+/// Table 3: dense mma on A100.
+pub fn table3() -> Vec<PaperMmaRow> {
+    use AbType::*;
+    use CdType::{Fp16 as C16, Fp32 as C32, Int32 as I32};
+    vec![
+        row(MmaInstr::dense(Fp16, C32, M16N8K16), 24.7, (3, 27.4, 897.6), (2, 32.6, 1004.2)),
+        row(MmaInstr::dense(Fp16, C32, M16N8K8), 17.7, (4, 20.5, 800.2), (3, 25.3, 974.1)),
+        row(MmaInstr::dense(Fp16, C16, M16N8K16), 24.4, (3, 27.1, 907.1), (2, 32.9, 996.6)),
+        row(MmaInstr::dense(Fp16, C16, M16N8K8), 17.7, (4, 19.1, 860.9), (3, 24.5, 1002.6)),
+        row(MmaInstr::dense(Tf32, C32, M16N8K8), 25.0, (3, 28.2, 435.9), (2, 33.3, 492.4)),
+        row(MmaInstr::dense(Tf32, C32, M16N8K4), 18.1, (4, 20.9, 392.6), (3, 25.7, 477.5)),
+        row(MmaInstr::dense(Int8, I32, M8N8K16), 15.9, (4, 20.1, 813.2), (2, 16.4, 998.3)),
+        row(MmaInstr::dense(Int8, I32, M16N8K32), 24.7, (3, 27.1, 1812.4), (2, 32.9, 1986.5)),
+        row(MmaInstr::dense(Int8, I32, M16N8K16), 17.6, (4, 20.9, 1570.1), (3, 25.1, 1965.1)),
+        row(MmaInstr::dense(Int4, I32, M16N8K32), 18.1, (4, 22.1, 2971.1), (3, 27.1, 3630.0)),
+        row(MmaInstr::dense(Int4, I32, M16N8K64), 26.1, (3, 28.1, 3497.9), (2, 35.8, 3660.8)),
+        row(MmaInstr::dense(Binary, I32, M16N8K128), 18.1, (4, 22.1, 11884.3), (3, 27.1, 14515.1)),
+        row(MmaInstr::dense(Binary, I32, M16N8K256), 26.0, (3, 28.1, 13985.4), (2, 35.8, 14643.4)),
+    ]
+}
+
+/// Table 4: dense mma on RTX3070Ti.
+pub fn table4() -> Vec<PaperMmaRow> {
+    use AbType::*;
+    use CdType::{Fp16 as C16, Fp32 as C32, Int32 as I32};
+    vec![
+        row(MmaInstr::dense(Fp16, C32, M16N8K16), 33.0, (1, 33.0, 248.2), (1, 64.8, 252.7)),
+        row(MmaInstr::dense(Fp16, C32, M16N8K8), 18.8, (2, 32.3, 253.9), (1, 32.4, 253.2)),
+        row(MmaInstr::dense(Fp16, C16, M16N8K16), 24.0, (2, 32.2, 509.4), (1, 32.3, 506.9)),
+        row(MmaInstr::dense(Fp16, C16, M16N8K8), 17.7, (3, 24.0, 511.8), (2, 32.3, 507.8)),
+        row(MmaInstr::dense(Tf32, C32, M16N8K8), 33.3, (1, 33.4, 122.6), (1, 64.6, 126.8)),
+        row(MmaInstr::dense(Tf32, C32, M16N8K4), 19.1, (2, 32.7, 125.3), (1, 32.6, 125.7)),
+        row(MmaInstr::dense(Int8, I32, M8N8K16), 15.9, (4, 19.3, 848.9), (2, 16.2, 1008.5)),
+        row(MmaInstr::dense(Int8, I32, M16N8K32), 24.3, (2, 32.2, 1017.2), (1, 32.1, 1023.2)),
+        row(MmaInstr::dense(Int8, I32, M16N8K16), 17.7, (3, 24.1, 1018.2), (2, 32.6, 1005.4)),
+        row(MmaInstr::dense(Int4, I32, M16N8K32), 17.3, (3, 24.9, 1967.9), (2, 32.3, 2031.7)),
+        row(MmaInstr::dense(Int4, I32, M16N8K64), 24.5, (2, 33.3, 1967.9), (1, 32.5, 2013.5)),
+        row(MmaInstr::dense(Binary, I32, M16N8K128), 17.3, (3, 24.8, 7908.3), (2, 32.3, 8127.2)),
+        row(MmaInstr::dense(Binary, I32, M16N8K256), 24.6, (2, 33.3, 7871.9), (1, 32.5, 8053.9)),
+    ]
+}
+
+/// Table 5: dense mma on RTX2080Ti (Turing).
+pub fn table5() -> Vec<PaperMmaRow> {
+    use AbType::*;
+    use CdType::{Fp16 as C16, Fp32 as C32, Int32 as I32};
+    vec![
+        row(MmaInstr::dense(Fp16, C32, M16N8K8), 17.3, (2, 32.5, 252.4), (1, 32.1, 255.1)),
+        row(MmaInstr::dense(Fp16, C16, M16N8K8), 14.7, (2, 17.5, 467.9), (1, 16.1, 509.4)),
+        row(MmaInstr::dense(Int8, I32, M8N8K16), 11.0, (3, 14.5, 846.1), (2, 16.2, 1012.6)),
+    ]
+}
+
+/// Table 6: sparse mma on A100.
+pub fn table6() -> Vec<PaperMmaRow> {
+    use AbType::*;
+    use CdType::{Fp16 as C16, Fp32 as C32, Int32 as I32};
+    vec![
+        row(MmaInstr::sp(Fp16, C32, M16N8K32), 24.7, (3, 27.4, 1791.9), (2, 33.1, 1979.1)),
+        row(MmaInstr::sp(Fp16, C32, M16N8K16), 17.8, (3, 20.4, 1024.5), (2, 25.4, 1290.5)),
+        row(MmaInstr::sp(Fp16, C16, M16N8K32), 24.3, (3, 26.6, 1850.9), (2, 32.4, 2019.8)),
+        row(MmaInstr::sp(Fp16, C16, M16N8K16), 17.6, (3, 19.8, 1242.9), (2, 24.9, 1318.2)),
+        row(MmaInstr::sp(Tf32, C32, M16N8K16), 24.9, (3, 28.3, 868.2), (2, 33.9, 981.2)),
+        row(MmaInstr::sp(Tf32, C32, M16N8K8), 18.2, (3, 20.6, 597.8), (2, 25.5, 643.6)),
+        row(MmaInstr::sp(Int8, I32, M16N8K64), 24.7, (3, 27.7, 3544.7), (2, 33.1, 3961.5)),
+        row(MmaInstr::sp(Int8, I32, M16N8K32), 17.9, (3, 20.4, 2403.9), (2, 25.4, 2665.2)),
+    ]
+}
+
+/// Table 7: sparse mma on RTX3070Ti.
+pub fn table7() -> Vec<PaperMmaRow> {
+    use AbType::*;
+    use CdType::{Fp16 as C16, Fp32 as C32, Int32 as I32};
+    vec![
+        row(MmaInstr::sp(Fp16, C32, M16N8K32), 33.0, (1, 33.0, 496.5), (1, 64.1, 511.2)),
+        row(MmaInstr::sp(Fp16, C32, M16N8K16), 18.8, (2, 32.3, 507.8), (1, 32.4, 506.2)),
+        row(MmaInstr::sp(Fp16, C16, M16N8K32), 24.3, (2, 32.0, 1022.2), (1, 32.1, 1022.3)),
+        row(MmaInstr::sp(Fp16, C16, M16N8K16), 17.7, (3, 24.2, 1013.4), (2, 32.0, 1023.1)),
+        row(MmaInstr::sp(Tf32, C32, M16N8K16), 33.2, (1, 33.2, 247.0), (1, 64.2, 255.1)),
+        row(MmaInstr::sp(Tf32, C32, M16N8K8), 19.0, (2, 32.5, 252.5), (1, 32.4, 253.2)),
+        // NB: the paper prints (4,2) latency 64.2 with throughput 2040.2
+        // for INT8 m16n8k64 — internally inconsistent (thr*lat != W*ILP*
+        // FMA); we carry the throughput and the consistent latency 32.1.
+        row(MmaInstr::sp(Int8, I32, M16N8K64), 24.3, (2, 32.1, 2040.2), (1, 32.1, 2039.5)),
+        row(MmaInstr::sp(Int8, I32, M16N8K32), 17.7, (3, 24.2, 2028.8), (2, 32.3, 2031.8)),
+    ]
+}
+
+/// One row of Table 9 (ldmatrix on A100).
+#[derive(Debug, Clone, Copy)]
+pub struct PaperLdmatrixRow {
+    pub num: LdMatrixNum,
+    pub bytes_per_warp: u64,
+    pub completion: f64,
+    pub p4: (u32, f64, f64),
+    pub p8: (u32, f64, f64),
+}
+
+/// Table 9: ldmatrix performance on A100.
+pub fn table9() -> Vec<PaperLdmatrixRow> {
+    vec![
+        PaperLdmatrixRow {
+            num: LdMatrixNum::X1,
+            bytes_per_warp: 128,
+            completion: 23.1,
+            p4: (5, 26.8, 95.4),
+            p8: (4, 32.1, 127.7),
+        },
+        PaperLdmatrixRow {
+            num: LdMatrixNum::X2,
+            bytes_per_warp: 256,
+            completion: 25.1,
+            p4: (4, 32.1, 127.8),
+            p8: (2, 32.1, 127.7),
+        },
+        PaperLdmatrixRow {
+            num: LdMatrixNum::X4,
+            bytes_per_warp: 512,
+            completion: 29.3,
+            p4: (2, 32.2, 127.3),
+            p8: (1, 32.6, 125.9),
+        },
+    ]
+}
+
+/// Table 10: ld.shared latency (cycles) under bank conflicts.
+/// (width, ways, latency); u64 has no conflict-free configuration.
+pub fn table10() -> Vec<(&'static str, u32, f64)> {
+    vec![
+        ("u32", 1, 23.0),
+        ("u32", 2, 25.0),
+        ("u32", 4, 29.0),
+        ("u32", 8, 37.0),
+        ("u64", 2, 25.1),
+        ("u64", 4, 29.1),
+        ("u64", 8, 37.0),
+    ]
+}
+
+/// Tables 12/13/15: mean |error| of (multiplication, inner product,
+/// accumulation) per (config, init strategy).
+pub struct PaperNumericRow {
+    pub table: &'static str,
+    pub cfg: &'static str,
+    pub init: &'static str,
+    pub mul: f64,
+    pub inner: f64,
+    pub accum: f64,
+}
+
+pub fn numeric_tables() -> Vec<PaperNumericRow> {
+    vec![
+        PaperNumericRow { table: "12", cfg: "bf16_f32", init: "low", mul: 0.0, inner: 0.0, accum: 1.89e-8 },
+        PaperNumericRow { table: "12", cfg: "bf16_f32", init: "fp32", mul: 1.29e-3, inner: 1.72e-3, accum: 1.13e-3 },
+        PaperNumericRow { table: "13", cfg: "fp16_f32", init: "low", mul: 0.0, inner: 0.0, accum: 0.0 },
+        PaperNumericRow { table: "13", cfg: "fp16_f32", init: "fp32", mul: 1.59e-4, inner: 2.18e-4, accum: 1.36e-4 },
+        PaperNumericRow { table: "14", cfg: "fp16_f16", init: "low", mul: 1.22e-4, inner: 1.81e-4, accum: 1.81e-4 },
+        PaperNumericRow { table: "15", cfg: "tf32_f32", init: "low", mul: 0.0, inner: 0.0, accum: 0.0 },
+        PaperNumericRow { table: "15", cfg: "tf32_f32", init: "fp32", mul: 1.59e-4, inner: 2.17e-4, accum: 1.36e-4 },
+    ]
+}
+
+/// Tables 16/17: Appendix-A GPU cycle counts.
+pub const TABLE16_BASELINE: u64 = 913_363;
+pub const TABLE16_PIPELINE: u64 = 451_560;
+pub const TABLE17_PERMUTED: u64 = 303_227;
+
+/// Figure 17: FP16 chains overflow at N >= 10.
+pub const FIG17_FP16_OVERFLOW_N: usize = 10;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_counts_match_paper() {
+        assert_eq!(table3().len(), 13);
+        assert_eq!(table4().len(), 13);
+        assert_eq!(table5().len(), 3);
+        assert_eq!(table6().len(), 8);
+        assert_eq!(table7().len(), 8);
+        assert_eq!(table9().len(), 3);
+        assert_eq!(table10().len(), 7);
+    }
+
+    #[test]
+    fn paper_rows_are_internally_consistent() {
+        // thr ≈ warps*ILP*FMA / latency for every published point
+        // (±6%, reflecting the paper's own measurement noise).
+        for (rows, warps4, warps8) in [(table3(), 4.0, 8.0), (table6(), 4.0, 8.0)] {
+            for r in rows {
+                let f = r.instr.fmas() as f64;
+                let t4 = warps4 * r.p4.0 as f64 * f / r.p4.1;
+                let t8 = warps8 * r.p8.0 as f64 * f / r.p8.1;
+                // Known exception: Table 6's mma.sp FP16/FP32 m16n8k16
+                // (4,3) point prints 1024.5 where W*ILP*FMA/lat = 1204.7
+                // — the paper's own cell is inconsistent (cf. the Table 7
+                // INT8 m16n8k64 latency typo).
+                let tol4 = if r.instr.sparse && r.instr.shape.k == 16 && r.instr.cd == CdType::Fp32
+                {
+                    0.20
+                } else {
+                    0.06
+                };
+                assert!((t4 / r.p4.2 - 1.0).abs() < tol4, "{}: {t4} vs {}", r.instr, r.p4.2);
+                assert!((t8 / r.p8.2 - 1.0).abs() < 0.06, "{}: {t8} vs {}", r.instr, r.p8.2);
+            }
+        }
+    }
+
+    #[test]
+    fn expected_rows_supported_by_devices() {
+        let a100 = crate::device::a100();
+        for r in table3().iter().chain(table6().iter()) {
+            assert!(a100.supports(&r.instr), "{}", r.instr);
+        }
+        let ga104 = crate::device::rtx3070ti();
+        for r in table4().iter().chain(table7().iter()) {
+            assert!(ga104.supports(&r.instr), "{}", r.instr);
+        }
+        let tu102 = crate::device::rtx2080ti();
+        for r in table5() {
+            assert!(tu102.supports(&r.instr), "{}", r.instr);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Report rendering: ASCII tables in the paper's layout, figure series
+//! (CSV + sparkline), and the paper's published values for side-by-side
+//! comparison in every regenerated table.
+
+pub mod expected;
+mod render;
+
+pub use render::{render_figure_csv, render_sparkline, Table};
+
+/// Relative deviation string for paper-vs-measured columns.
+pub fn deviation(measured: f64, paper: f64) -> String {
+    if paper == 0.0 {
+        return "-".to_string();
+    }
+    let pct = (measured - paper) / paper * 100.0;
+    format!("{pct:+.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deviation_formatting() {
+        assert_eq!(deviation(110.0, 100.0), "+10.0%");
+        assert_eq!(deviation(97.0, 100.0), "-3.0%");
+        assert_eq!(deviation(1.0, 0.0), "-");
+    }
+}

@@ -1,0 +1,208 @@
+//! Artifact loading, compilation caching and typed execution.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::numerics::{MmaExec, NumericCfg};
+use crate::util::Json;
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub ab: String,
+    pub cd: String,
+    pub acc_rnd: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+}
+
+impl ManifestEntry {
+    fn from_json(name: &str, j: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest[{name}].{k} missing"))?
+                .to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            Ok(j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("manifest[{name}].{k} missing"))? as usize)
+        };
+        Ok(Self {
+            name: name.to_string(),
+            file: s("file")?,
+            ab: s("ab")?,
+            cd: s("cd")?,
+            acc_rnd: s("acc_rnd")?,
+            m: u("m")?,
+            n: u("n")?,
+            k: u("k")?,
+            batch: u("batch")?,
+        })
+    }
+}
+
+/// Loads + compiles artifacts on demand and caches the executables.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: HashMap<String, ManifestEntry>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactStore {
+    /// Open the artifact directory (usually `artifacts/`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", manifest_path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let obj = json.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+        let mut manifest = HashMap::new();
+        for (name, entry) in obj {
+            manifest.insert(name.clone(), ManifestEntry::from_json(name, entry)?);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { dir, client, manifest, executables: HashMap::new() })
+    }
+
+    /// Default artifact directory: `$TCBENCH_ARTIFACTS` or `artifacts/`
+    /// relative to the working directory.
+    pub fn open_default() -> Result<Self> {
+        let dir =
+            std::env::var("TCBENCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn manifest(&self) -> &HashMap<String, ManifestEntry> {
+        &self.manifest
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let entry = self.entry(name)?.clone();
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute one batched MMA artifact: `a[batch,m,k] b[batch,k,n]
+    /// c[batch,m,n] -> d[batch,m,n]` (f32, row-major flattened).
+    pub fn run_tcmma(
+        &mut self,
+        name: &str,
+        a: &[f32],
+        b: &[f32],
+        c: &[f32],
+    ) -> Result<Vec<f32>> {
+        let entry = self.entry(name)?.clone();
+        let (bt, m, n, k) = (entry.batch, entry.m, entry.n, entry.k);
+        if a.len() != bt * m * k || b.len() != bt * k * n || c.len() != bt * m * n {
+            bail!(
+                "operand sizes {}x{}x{} do not match artifact {name} (batch {bt}, m{m} n{n} k{k})",
+                a.len(),
+                b.len(),
+                c.len()
+            );
+        }
+        let lit_a = xla::Literal::vec1(a).reshape(&[bt as i64, m as i64, k as i64])
+            .map_err(|e| anyhow!("reshape a: {e:?}"))?;
+        let lit_b = xla::Literal::vec1(b).reshape(&[bt as i64, k as i64, n as i64])
+            .map_err(|e| anyhow!("reshape b: {e:?}"))?;
+        let lit_c = xla::Literal::vec1(c).reshape(&[bt as i64, m as i64, n as i64])
+            .map_err(|e| anyhow!("reshape c: {e:?}"))?;
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit_a, lit_b, lit_c])
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // lowered with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// [`MmaExec`] backend running on the PJRT executables — the §8
+/// experiments run identically on this and on the native softfloat path.
+///
+/// The artifact batch size is fixed at AOT time; `run` splits larger
+/// batches into artifact-sized executions and zero-pads the tail.
+pub struct ArtifactExec<'s> {
+    store: &'s mut ArtifactStore,
+    name: String,
+    cfg: NumericCfg,
+    batch: usize,
+}
+
+impl<'s> ArtifactExec<'s> {
+    pub fn new(store: &'s mut ArtifactStore, cfg: NumericCfg) -> Result<Self> {
+        let name = cfg.artifact_name();
+        let entry = store.entry(&name)?;
+        if entry.m != cfg.m || entry.n != cfg.n || entry.k != cfg.k {
+            bail!("artifact {name} shape mismatch");
+        }
+        let batch = entry.batch;
+        // Pre-compile eagerly so the request path never pays it.
+        store.load(&name)?;
+        Ok(Self { store, name, cfg, batch })
+    }
+}
+
+impl MmaExec for ArtifactExec<'_> {
+    fn cfg(&self) -> NumericCfg {
+        self.cfg
+    }
+
+    fn run(&mut self, batch: usize, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+        let (m, n, k) = (self.cfg.m, self.cfg.n, self.cfg.k);
+        let bs = self.batch;
+        let mut out = Vec::with_capacity(batch * m * n);
+        let mut t = 0;
+        let (mut pa, mut pb, mut pc) =
+            (vec![0.0f32; bs * m * k], vec![0.0f32; bs * k * n], vec![0.0f32; bs * m * n]);
+        while t < batch {
+            let chunk = (batch - t).min(bs);
+            pa[..chunk * m * k].copy_from_slice(&a[t * m * k..(t + chunk) * m * k]);
+            pb[..chunk * k * n].copy_from_slice(&b[t * k * n..(t + chunk) * k * n]);
+            pc[..chunk * m * n].copy_from_slice(&c[t * m * n..(t + chunk) * m * n]);
+            if chunk < bs {
+                pa[chunk * m * k..].fill(0.0);
+                pb[chunk * k * n..].fill(0.0);
+                pc[chunk * m * n..].fill(0.0);
+            }
+            let d = self
+                .store
+                .run_tcmma(&self.name, &pa, &pb, &pc)
+                .expect("artifact execution failed");
+            out.extend_from_slice(&d[..chunk * m * n]);
+            t += chunk;
+        }
+        out
+    }
+}

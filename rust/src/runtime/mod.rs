@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and execute them on the request path.
+//!
+//! Python never runs here — the artifacts are compiled once by
+//! `make artifacts`; this module parses `manifest.json`, loads each
+//! `*.hlo.txt` through `HloModuleProto::from_text_file`, compiles it on
+//! the PJRT CPU client and caches the executable
+//! (see /opt/xla-example/load_hlo for the reference wiring).
+
+mod artifact;
+
+pub use artifact::{ArtifactExec, ArtifactStore, ManifestEntry};

@@ -1,0 +1,145 @@
+//! Closed-form steady-state model of the microbenchmark loop.
+//!
+//! Used as a property-test oracle for tcsim and to sanity-check the
+//! calibration: for an `mma` loop the measured iteration latency is
+//!
+//! ```text
+//! P = max( L + (ILP-1) + sync ,  W_sc * ILP * ii )        [per sub-core]
+//! latency    = max over sub-cores of P
+//! throughput = total FMAs per iteration / latency
+//! ```
+//!
+//! (dependency/issue path vs token-bucket rate path), and for a
+//! data-movement loop
+//!
+//! ```text
+//! P = max( L_load + sync ,  W_lsu * ILP * txns * txn_cycles )  [per LSU]
+//! ```
+//!
+//! with `L_load = lsu_tail + txn_cycles * txns` and the pending-cap
+//! correction when `ILP >= lsu_pending_per_warp`.
+
+use crate::device::Device;
+use crate::isa::{LdMatrixNum, MmaInstr};
+
+/// Prediction for one (#warps, ILP) configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnalyticPrediction {
+    /// Cycles per loop iteration (bottleneck warp).
+    pub latency: f64,
+    /// FMA/clk/SM for mma loops; bytes/clk/SM for data movement.
+    pub throughput: f64,
+}
+
+/// Warps resident on the most loaded of `n_units` units under
+/// round-robin assignment.
+fn worst_unit_load(warps: u32, n_units: u32) -> u32 {
+    warps.div_ceil(n_units)
+}
+
+/// Steady-state prediction of the §5/§6 mma microbenchmark.
+pub fn predict_mma(device: &Device, instr: &MmaInstr, warps: u32, ilp: u32) -> AnalyticPrediction {
+    let timing = device
+        .timing(instr)
+        .unwrap_or_else(|| panic!("{instr} unsupported on {}", device.name));
+    let l = timing.latency as f64;
+    let ii = timing.ii as f64;
+    let sync = device.sync_cost as f64;
+    let w_sc = worst_unit_load(warps, device.subcores) as f64;
+
+    let dep_path = l + (ilp as f64 - 1.0) + sync;
+    let rate_path = w_sc * ilp as f64 * ii;
+    // Per-warp dispatch recovery: one warp alone sustains 1/(ii+1).
+    let warp_path = ilp as f64 * (ii + 1.0);
+    let latency = dep_path.max(rate_path).max(warp_path);
+    let fmas = warps as f64 * ilp as f64 * instr.fmas() as f64;
+    AnalyticPrediction { latency, throughput: fmas / latency }
+}
+
+/// Steady-state prediction of the §7 ldmatrix microbenchmark.
+pub fn predict_ldmatrix(
+    device: &Device,
+    num: LdMatrixNum,
+    warps: u32,
+    ilp: u32,
+) -> AnalyticPrediction {
+    let txns = num.count() as f64;
+    let txn_cy = device.lsu_txn_cycles as f64;
+    let tail = device.lsu_tail as f64;
+    let w_lsu = worst_unit_load(warps, device.lsu_units) as f64;
+
+    // Each ILP slot is a pointer-chase chain: the next load's address
+    // depends on the previous result, so a slot's period is bounded by
+    // the load completion latency.
+    let completion = txns * txn_cy + tail;
+    let rate_path = w_lsu * ilp as f64 * txns * txn_cy;
+    // Pending-cap stall: beyond `lsu_pending_per_warp` outstanding
+    // loads, each extra slot waits for an older completion (completions
+    // are spaced one LSU round apart) — Table 9's ldmatrix.x1 4-warp
+    // point.
+    let cap = device.lsu_pending_per_warp as f64;
+    let pend = (ilp as f64 - cap).max(0.0) * txns * txn_cy * w_lsu;
+    let latency = rate_path.max(completion + pend);
+    let bytes = warps as f64 * ilp as f64 * num.bytes_per_warp() as f64;
+    AnalyticPrediction { latency, throughput: bytes / latency }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::a100;
+    use crate::isa::shapes::*;
+    use crate::isa::{AbType, CdType};
+
+    #[test]
+    fn table3_key_points_fp16_f32_k16() {
+        // paper: (4,3) -> 27.4 cy / 897.6 FMA/clk; (8,2) -> 32.6 / 1004.2
+        let d = a100();
+        let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+        let p43 = predict_mma(&d, &i, 4, 3);
+        assert!((p43.latency - 27.4).abs() < 1.5, "{p43:?}");
+        assert!((p43.throughput - 897.6).abs() < 60.0, "{p43:?}");
+        let p82 = predict_mma(&d, &i, 8, 2);
+        assert!((p82.latency - 32.6).abs() < 1.5, "{p82:?}");
+        assert!((p82.throughput - 1004.2).abs() < 40.0, "{p82:?}");
+    }
+
+    #[test]
+    fn table6_sparse_small_k_anomaly() {
+        // paper: mma.sp m16n8k16 FP16/FP32 (8,2) -> 25.4 cy, 1290 FMA/clk
+        // (far below the 2000 sparse peak).
+        let d = a100();
+        let i = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K16);
+        let p = predict_mma(&d, &i, 8, 2);
+        assert!((p.latency - 25.4).abs() < 1.5, "{p:?}");
+        assert!((p.throughput - 1290.5).abs() < 80.0, "{p:?}");
+        // and the large-k shape does reach ~2x dense:
+        let big = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32);
+        let pb = predict_mma(&d, &big, 8, 2);
+        assert!(pb.throughput > 1900.0, "{pb:?}");
+    }
+
+    #[test]
+    fn ldmatrix_saturation_points() {
+        // Table 9: x4 (4,2) -> 32.2 cy / 127 B/clk; x4 (1,4) -> 64 B/clk.
+        let d = a100();
+        let p42 = predict_ldmatrix(&d, LdMatrixNum::X4, 4, 2);
+        assert!((p42.latency - 32.0).abs() < 1.0, "{p42:?}");
+        assert!((p42.throughput - 127.0).abs() < 4.0, "{p42:?}");
+        let p14 = predict_ldmatrix(&d, LdMatrixNum::X4, 1, 4);
+        assert!((p14.throughput - 64.0).abs() < 3.0, "{p14:?}");
+    }
+
+    #[test]
+    fn six_warps_match_eight_warps_latency() {
+        // §5 finding 5: latency(6 warps) == latency(8 warps) at any ILP.
+        let d = a100();
+        let i = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16);
+        for ilp in 1..=4 {
+            let p6 = predict_mma(&d, &i, 6, ilp);
+            let p8 = predict_mma(&d, &i, 8, ilp);
+            assert_eq!(p6.latency, p8.latency, "ILP={ilp}");
+            assert!(p6.throughput <= p8.throughput);
+        }
+    }
+}

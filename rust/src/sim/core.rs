@@ -1,0 +1,619 @@
+//! The tcsim cycle loop: sub-core schedulers, scoreboards, token-bucket
+//! Tensor-Core engines, LSUs, global-memory pipe, barriers, clocks.
+
+use crate::device::Device;
+
+use super::program::{Op, WarpProgram};
+
+/// Per-warp measurement output.
+#[derive(Debug, Clone)]
+pub struct WarpResult {
+    pub warp_id: usize,
+    /// Cycle of every IterMark.
+    pub iter_marks: Vec<u64>,
+    /// Cycle the warp retired its last instruction.
+    pub finish: u64,
+}
+
+impl WarpResult {
+    /// Steady-state cycles per iteration: mean over the back half of the
+    /// marks (first half treated as warm-up), matching the paper's
+    /// `Δclock64 / ITERS` with enough ITERS to hide the ramp.
+    pub fn latency_per_iteration(&self) -> f64 {
+        let n = self.iter_marks.len();
+        if n < 2 {
+            return self.finish as f64;
+        }
+        // Δclock64 / ITERS like the paper (Fig. 4), skipping only a short
+        // pipeline-fill prefix. Averaging a long window matters: the
+        // token-bucket engine can oscillate between burst and stall
+        // phases, and a short window would alias with them.
+        let i0 = (n - 1) / 8;
+        let span = self.iter_marks[n - 1] - self.iter_marks[i0];
+        span as f64 / (n - 1 - i0) as f64
+    }
+}
+
+/// Token-bucket compute engine (one Tensor-Core pipeline per sub-core;
+/// a second instance models the CUDA-core FPU fallback path).
+#[derive(Debug, Clone, Default)]
+struct Engine {
+    /// Work credit in cycles; refills 1/cycle up to `cap`.
+    level: f64,
+    cap: f64,
+    last_update: u64,
+}
+
+impl Engine {
+    fn refill(&mut self, now: u64, cap: u32) {
+        let cap = cap as f64;
+        if cap > self.cap {
+            // Burst window follows the deepest pipeline seen so far; the
+            // newly visible capacity is immediately available (an empty
+            // pipeline holds full burst credit).
+            self.level += cap - self.cap;
+            self.cap = cap;
+        }
+        self.level = (self.level + (now - self.last_update) as f64).min(self.cap);
+        self.last_update = now;
+    }
+
+    fn can_accept(&self, ii: u32) -> bool {
+        self.level + 1e-9 >= ii as f64
+    }
+
+    fn accept(&mut self, ii: u32) {
+        self.level -= ii as f64;
+    }
+}
+
+/// One shared-memory data-movement unit.
+#[derive(Debug, Clone, Default)]
+struct Lsu {
+    free_at: u64,
+}
+
+#[derive(Debug, Clone)]
+struct WarpState {
+    pc: usize,
+    /// Earliest cycle the warp may issue its next instruction.
+    next_issue: u64,
+    /// reg -> ready cycle (indexed by register id; grown on demand).
+    scoreboard: Vec<u64>,
+    /// Outstanding MMA completion times (what SyncWarp waits for).
+    mma_inflight: Vec<u64>,
+    /// Per-warp dispatch bucket (rate 1/(ii+1), burst = pipeline depth):
+    /// one warp alone sustains only 1/(ii+1) — the paper's ~230-of-256
+    /// single-warp ceiling; a co-resident warp fills the bubble, which
+    /// is why small-k shapes need 8 warps (§5 finding 8).
+    dispatch: Engine,
+    /// Outstanding load completion times (pending-cap bookkeeping).
+    loads_inflight: Vec<u64>,
+    /// Completion cycles of committed-but-unwaited cp.async groups.
+    cpasync_groups: Vec<u64>,
+    /// Latest completion among cp.asyncs not yet committed to a group.
+    cpasync_open: u64,
+    iter_marks: Vec<u64>,
+    finish: u64,
+}
+
+impl WarpState {
+    fn set_ready(&mut self, reg: u32, at: u64) {
+        let idx = reg as usize;
+        if idx >= self.scoreboard.len() {
+            self.scoreboard.resize(idx + 1, 0);
+        }
+        self.scoreboard[idx] = at;
+    }
+
+    fn new() -> Self {
+        Self {
+            pc: 0,
+            next_issue: 0,
+            scoreboard: Vec::new(),
+            mma_inflight: Vec::new(),
+            dispatch: Engine::default(),
+            loads_inflight: Vec::new(),
+            cpasync_groups: Vec::new(),
+            cpasync_open: 0,
+            iter_marks: Vec::new(),
+            finish: 0,
+        }
+    }
+
+    fn gc(&mut self, now: u64) {
+        self.mma_inflight.retain(|&t| t > now);
+        self.loads_inflight.retain(|&t| t > now);
+    }
+}
+
+/// Cycle-level simulator of one SM running `programs` (warp i runs
+/// `programs[i]`; warp -> sub-core assignment is `i % subcores`, warp ->
+/// LSU assignment `i % lsu_units`, both round-robin like the hardware's
+/// even distribution).
+pub struct SmSim<'d> {
+    device: &'d Device,
+    programs: Vec<WarpProgram>,
+    tc_engines: Vec<Engine>,
+    fpu_engines: Vec<Engine>,
+    lsus: Vec<Lsu>,
+    gmem_free_at: u64,
+    warps: Vec<WarpState>,
+    /// Per-sub-core LRR pointer (index into that sub-core's warp list).
+    lrr: Vec<usize>,
+    /// Precomputed warp lists per sub-core (round-robin residency).
+    subcore_warps: Vec<Vec<usize>>,
+    now: u64,
+    /// Hard cap to catch deadlocked programs in tests.
+    max_cycles: u64,
+}
+
+impl<'d> SmSim<'d> {
+    pub fn new(device: &'d Device, programs: Vec<WarpProgram>) -> Self {
+        assert!(!programs.is_empty(), "need at least one warp");
+        let warps: Vec<WarpState> = programs.iter().map(|_| WarpState::new()).collect();
+        Self {
+            device,
+            tc_engines: vec![Engine::default(); device.subcores as usize],
+            fpu_engines: vec![Engine::default(); device.subcores as usize],
+            lsus: vec![Lsu::default(); device.lsu_units as usize],
+            gmem_free_at: 0,
+            subcore_warps: {
+                let mut m = vec![Vec::new(); device.subcores as usize];
+                for w in 0..warps.len() {
+                    m[w % device.subcores as usize].push(w);
+                }
+                m
+            },
+            warps,
+            lrr: vec![0; device.subcores as usize],
+            programs,
+            now: 0,
+            max_cycles: 200_000_000,
+        }
+    }
+
+    pub fn with_max_cycles(mut self, max: u64) -> Self {
+        self.max_cycles = max;
+        self
+    }
+
+    fn subcore_of(&self, warp: usize) -> usize {
+        warp % self.device.subcores as usize
+    }
+
+    fn lsu_of(&self, warp: usize) -> usize {
+        warp % self.device.lsu_units as usize
+    }
+
+    fn all_done(&self) -> bool {
+        self.warps
+            .iter()
+            .zip(&self.programs)
+            .all(|(w, p)| w.pc >= p.instrs.len())
+    }
+
+    /// Can `warp` issue its next instruction at `now`? Returns the
+    /// stall-release lower bound when blocked (for event skipping).
+    fn issue_block(&mut self, warp: usize) -> Result<(), u64> {
+        let now = self.now;
+        // Retire completed in-flight entries first — a warp blocked on
+        // the pending cap must see completions even while not issuing.
+        self.warps[warp].gc(now);
+        let st = &self.warps[warp];
+        if st.pc >= self.programs[warp].instrs.len() {
+            return Err(u64::MAX);
+        }
+        if st.next_issue > now {
+            return Err(st.next_issue);
+        }
+        let instr = &self.programs[warp].instrs[st.pc];
+        // Operand readiness.
+        let mut ready_at = now;
+        for s in &instr.srcs {
+            if let Some(&t) = st.scoreboard.get(*s as usize) {
+                ready_at = ready_at.max(t);
+            }
+        }
+        if ready_at > now {
+            return Err(ready_at);
+        }
+        match &instr.op {
+            Op::Mma { ii, latency, fpu, .. } => {
+                let (ii, latency) = (*ii, *latency);
+                let wd = &mut self.warps[warp].dispatch;
+                wd.refill(now, latency.max(ii + 1));
+                if !wd.can_accept(ii + 1) {
+                    let deficit = (ii + 1) as f64 - wd.level;
+                    return Err(now + deficit.ceil() as u64);
+                }
+                let sc = self.subcore_of(warp);
+                let eng = if *fpu { &mut self.fpu_engines[sc] } else { &mut self.tc_engines[sc] };
+                eng.refill(now, latency.max(ii));
+                if !eng.can_accept(ii) {
+                    let deficit = ii as f64 - eng.level;
+                    return Err(now + deficit.ceil() as u64);
+                }
+                Ok(())
+            }
+            Op::SmemLoad { .. } | Op::GmemLoad { .. } => {
+                let st = &self.warps[warp];
+                if st.loads_inflight.len() >= self.device.lsu_pending_per_warp as usize {
+                    let earliest = st.loads_inflight.iter().copied().min().unwrap();
+                    return Err(earliest);
+                }
+                Ok(())
+            }
+            Op::SmemStore { .. } | Op::CpAsync { .. } | Op::CpAsyncCommit => Ok(()),
+            Op::CpAsyncWait { max_pending } => {
+                let st = &self.warps[warp];
+                let pending: Vec<u64> =
+                    st.cpasync_groups.iter().copied().filter(|&t| t > now).collect();
+                if pending.len() > *max_pending as usize {
+                    // Wait for the oldest groups to complete.
+                    let mut sorted = pending;
+                    sorted.sort_unstable();
+                    let release = sorted[sorted.len() - 1 - *max_pending as usize];
+                    return Err(release);
+                }
+                Ok(())
+            }
+            Op::SyncWarp => {
+                let st = &self.warps[warp];
+                let last_mma = st.mma_inflight.iter().copied().max().unwrap_or(0);
+                if last_mma > now {
+                    return Err(last_mma);
+                }
+                Ok(())
+            }
+            Op::BarSync => {
+                // Handled collectively in `try_release_barrier`.
+                Err(u64::MAX - 1)
+            }
+            Op::IterMark => Ok(()),
+        }
+    }
+
+    /// Execute the (already admissible) instruction of `warp`.
+    fn issue(&mut self, warp: usize) {
+        let now = self.now;
+        let lsu_idx = self.lsu_of(warp);
+        let sc = self.subcore_of(warp);
+        let pc = self.warps[warp].pc;
+        // Only the (plain-data) op and the dst register are needed here —
+        // never clone the src Vec on the hot path.
+        let (op, dst) = {
+            let i = &self.programs[warp].instrs[pc];
+            (i.op.clone(), i.dst)
+        };
+        let device = self.device;
+        let st = &mut self.warps[warp];
+        st.pc += 1;
+        st.next_issue = now + 1;
+        match op {
+            Op::Mma { ii, latency, fpu, .. } => {
+                let eng = if fpu { &mut self.fpu_engines[sc] } else { &mut self.tc_engines[sc] };
+                eng.refill(now, latency.max(ii));
+                eng.accept(ii);
+                // per-warp dispatch recovery (1 extra cycle per mma)
+                st.dispatch.refill(now, latency.max(ii + 1));
+                st.dispatch.accept(ii + 1);
+                let done = now + latency as u64;
+                st.mma_inflight.push(done);
+                if let Some(d) = dst {
+                    st.set_ready(d, done);
+                }
+            }
+            Op::SmemLoad { txns, .. } => {
+                let lsu = &mut self.lsus[lsu_idx];
+                let start = lsu.free_at.max(now);
+                lsu.free_at = start + (txns as u64) * device.lsu_txn_cycles as u64;
+                let done = lsu.free_at + device.lsu_tail as u64;
+                st.loads_inflight.push(done);
+                if let Some(d) = dst {
+                    st.set_ready(d, done);
+                }
+            }
+            Op::SmemStore { txns, .. } => {
+                // Stores occupy the fabric but have no writeback tail.
+                let lsu = &mut self.lsus[lsu_idx];
+                let start = lsu.free_at.max(now);
+                lsu.free_at = start + (txns as u64) * device.lsu_txn_cycles as u64;
+            }
+            Op::GmemLoad { bytes } => {
+                let occupancy = bytes.div_ceil(device.gmem_bytes_per_cycle as u64).max(1);
+                let start = self.gmem_free_at.max(now);
+                self.gmem_free_at = start + occupancy;
+                let done = self.gmem_free_at + device.gmem_latency as u64;
+                st.loads_inflight.push(done);
+                if let Some(d) = dst {
+                    st.set_ready(d, done);
+                }
+            }
+            Op::CpAsync { bytes } => {
+                let occupancy = bytes.div_ceil(device.gmem_bytes_per_cycle as u64).max(1);
+                let start = self.gmem_free_at.max(now + 1);
+                self.gmem_free_at = start + occupancy;
+                let done = self.gmem_free_at + device.gmem_latency as u64;
+                st.cpasync_open = st.cpasync_open.max(done);
+            }
+            Op::CpAsyncCommit => {
+                let open = std::mem::take(&mut st.cpasync_open);
+                st.cpasync_groups.push(open);
+            }
+            Op::CpAsyncWait { .. } => {
+                st.cpasync_groups.retain(|&t| t > now);
+            }
+            Op::SyncWarp => {
+                st.mma_inflight.clear();
+                st.next_issue = now + device.sync_cost as u64;
+            }
+            Op::BarSync => unreachable!("BarSync released collectively"),
+            Op::IterMark => {
+                // clock64() read: free in the timing model.
+                st.iter_marks.push(now);
+                st.next_issue = now;
+            }
+        }
+        st.finish = st.finish.max(now);
+        st.gc(now);
+    }
+
+    /// Release the CTA barrier if every unfinished warp is parked on one.
+    fn try_release_barrier(&mut self) -> bool {
+        let mut arrivals = Vec::new();
+        for (i, (st, p)) in self.warps.iter().zip(&self.programs).enumerate() {
+            if st.pc >= p.instrs.len() {
+                continue; // retired warps do not participate
+            }
+            match p.instrs[st.pc].op {
+                Op::BarSync => arrivals.push(i),
+                _ => return false,
+            }
+        }
+        if arrivals.is_empty() {
+            return false;
+        }
+        // All active warps arrived: everyone must also have drained its
+        // issue stalls; release one cycle later.
+        let release = self
+            .warps
+            .iter()
+            .zip(&self.programs)
+            .filter(|(st, p)| st.pc < p.instrs.len())
+            .map(|(st, _)| st.next_issue)
+            .max()
+            .unwrap_or(self.now)
+            .max(self.now)
+            + 1;
+        for i in arrivals {
+            let st = &mut self.warps[i];
+            st.pc += 1;
+            st.next_issue = release;
+            st.finish = st.finish.max(release);
+        }
+        true
+    }
+
+    /// Run to completion; returns per-warp measurements.
+    pub fn run(mut self) -> Vec<WarpResult> {
+        while !self.all_done() {
+            if self.now >= self.max_cycles {
+                panic!("tcsim exceeded max_cycles — deadlocked program?");
+            }
+            // clock64() reads are free: drain any IterMarks first so a
+            // mark never steals an issue slot from a real instruction.
+            for w in 0..self.warps.len() {
+                let st = &mut self.warps[w];
+                while st.pc < self.programs[w].instrs.len()
+                    && matches!(self.programs[w].instrs[st.pc].op, Op::IterMark)
+                    && st.next_issue <= self.now
+                {
+                    st.iter_marks.push(self.now.max(st.next_issue));
+                    st.finish = st.finish.max(self.now);
+                    st.pc += 1;
+                }
+            }
+            if self.all_done() {
+                break;
+            }
+            let mut issued_any = false;
+            let mut next_event = u64::MAX;
+            // Each sub-core issues at most one instruction per cycle,
+            // round-robin over its resident warps (LRR).
+            for sc in 0..self.device.subcores as usize {
+                let warps_here = std::mem::take(&mut self.subcore_warps[sc]);
+                if warps_here.is_empty() {
+                    self.subcore_warps[sc] = warps_here;
+                    continue;
+                }
+                // Loose round-robin: resume scanning just after the warp
+                // that issued last so one warp cannot monopolize the
+                // pipeline (a `now % n` rotation aliases with the token
+                // refill period and convoys the warps).
+                let rot = self.lrr[sc] % warps_here.len();
+                let mut issued = false;
+                for off in 0..warps_here.len() {
+                    let idx = (rot + off) % warps_here.len();
+                    let w = warps_here[idx];
+                    match self.issue_block(w) {
+                        Ok(()) => {
+                            self.issue(w);
+                            self.lrr[sc] = idx + 1;
+                            issued = true;
+                            issued_any = true;
+                            break;
+                        }
+                        Err(t) => next_event = next_event.min(t),
+                    }
+                }
+                if issued {
+                    next_event = next_event.min(self.now + 1);
+                }
+                self.subcore_warps[sc] = warps_here;
+            }
+            if !issued_any && self.try_release_barrier() {
+                continue;
+            }
+            if issued_any {
+                self.now += 1;
+            } else {
+                // Event skip: jump to the earliest stall release.
+                let target = next_event.max(self.now + 1);
+                if target >= u64::MAX - 1 {
+                    panic!("tcsim deadlock: no warp can ever issue");
+                }
+                self.now = target;
+            }
+        }
+        self.warps
+            .iter()
+            .enumerate()
+            .map(|(i, st)| WarpResult {
+                warp_id: i,
+                iter_marks: st.iter_marks.clone(),
+                finish: st.finish,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::program::ProgramBuilder;
+    use super::*;
+    use crate::device::a100;
+
+    fn mma_loop(iters: usize, ilp: usize, ii: u32, lat: u32) -> WarpProgram {
+        let mut b = ProgramBuilder::new();
+        let slots: Vec<u32> = (0..ilp).map(|_| b.alloc_reg()).collect();
+        for _ in 0..iters {
+            for &d in &slots {
+                b.mma(ii, lat, 2048, d, vec![d]);
+            }
+            b.sync_warp();
+            b.iter_mark();
+        }
+        b.build()
+    }
+
+    #[test]
+    fn single_warp_completion_latency() {
+        // ILP=1, 1 warp: iteration period == pipeline depth + sync cost.
+        let d = a100();
+        let res = SmSim::new(&d, vec![mma_loop(64, 1, 8, 24)]).run();
+        let lat = res[0].latency_per_iteration();
+        assert!((lat - 25.0).abs() < 1.0, "got {lat}");
+    }
+
+    #[test]
+    fn ilp3_unsaturated_period_is_latency_bound() {
+        // 1 warp, ILP=3, k16-like (ii=8, L=24): period ≈ L + ILP - 1 + 1.
+        let d = a100();
+        let res = SmSim::new(&d, vec![mma_loop(64, 3, 8, 24)]).run();
+        let lat = res[0].latency_per_iteration();
+        assert!((26.0..29.0).contains(&lat), "got {lat}");
+    }
+
+    #[test]
+    fn ilp4_rate_bound() {
+        // 1 warp, ILP=4: the token bucket caps at one instr per ii.
+        let d = a100();
+        let res = SmSim::new(&d, vec![mma_loop(64, 4, 8, 24)]).run();
+        let lat = res[0].latency_per_iteration();
+        assert!((32.0..38.0).contains(&lat), "got {lat}");
+    }
+
+    #[test]
+    fn two_warps_per_subcore_saturate() {
+        // 8 warps ILP=2 on 4 sub-cores: period = 2*2*8 = 32 (+ε).
+        let d = a100();
+        let progs = vec![mma_loop(64, 2, 8, 24); 8];
+        let res = SmSim::new(&d, progs).run();
+        let worst = res.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
+        assert!((32.0..34.5).contains(&worst), "got {worst}");
+    }
+
+    #[test]
+    fn six_warp_dip() {
+        // 6 warps ILP=3: sub-cores 0,1 carry two warps (period ~48),
+        // sub-cores 2,3 one (≈27) — the paper's Fig. 6 anomaly.
+        let d = a100();
+        let progs = vec![mma_loop(64, 3, 8, 24); 6];
+        let res = SmSim::new(&d, progs).run();
+        let worst = res.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
+        let best = res.iter().map(|r| r.latency_per_iteration()).fold(f64::MAX, f64::min);
+        assert!((46.0..51.0).contains(&worst), "got {worst}");
+        assert!((26.0..30.0).contains(&best), "got {best}");
+    }
+
+    #[test]
+    fn barrier_releases_all_warps_together() {
+        let d = a100();
+        let mk = |n_mma: usize| {
+            let mut b = ProgramBuilder::new();
+            for _ in 0..n_mma {
+                let r = b.alloc_reg();
+                b.mma(8, 24, 2048, r, vec![r]);
+            }
+            b.sync_warp();
+            b.push(Op::BarSync, None, vec![]);
+            b.iter_mark();
+            b.build()
+        };
+        // Unbalanced warps: the barrier holds the fast one back.
+        let res = SmSim::new(&d, vec![mk(1), mk(8)]).run();
+        assert_eq!(res[0].iter_marks.len(), 1);
+        let delta = res[0].iter_marks[0].abs_diff(res[1].iter_marks[0]);
+        assert!(delta <= 1, "barrier skew {delta}");
+    }
+
+    #[test]
+    fn smem_load_loop_throughput() {
+        // 8 warps x ldmatrix.x4 (4 txns): 4 warps per LSU, period
+        // = 4 warps * 4 txns * 2 cycles = 32 -> 128 B/clk/SM.
+        let d = a100();
+        let mk = || {
+            let mut b = ProgramBuilder::new();
+            let r = b.alloc_reg();
+            for _ in 0..64 {
+                // pointer-chase: next address depends on the last result
+                b.push(Op::SmemLoad { txns: 4, bytes: 512 }, Some(r), vec![r]);
+                b.sync_warp();
+                b.iter_mark();
+            }
+            b.build()
+        };
+        let res = SmSim::new(&d, vec![mk(); 8]).run();
+        let worst = res.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
+        let thr = 8.0 * 512.0 / worst;
+        assert!((115.0..132.0).contains(&thr), "thr {thr} lat {worst}");
+    }
+
+    #[test]
+    fn gmem_load_has_long_latency() {
+        let d = a100();
+        let mut b = ProgramBuilder::new();
+        let r = b.alloc_reg();
+        b.push(Op::GmemLoad { bytes: 128 }, Some(r), vec![]);
+        // consume the loaded value so the dependency is exercised
+        b.mma(8, 24, 2048, r, vec![r]);
+        b.sync_warp();
+        b.iter_mark();
+        let res = SmSim::new(&d, vec![b.build()]).run();
+        assert!(res[0].iter_marks[0] > d.gmem_latency as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_cycles")]
+    fn runaway_detection() {
+        let d = a100();
+        let mut b = ProgramBuilder::new();
+        for _ in 0..100 {
+            let r = b.alloc_reg();
+            b.mma(8, 24, 2048, r, vec![r]);
+        }
+        let sim = SmSim::new(&d, vec![b.build()]).with_max_cycles(10);
+        sim.run();
+    }
+}

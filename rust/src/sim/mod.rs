@@ -1,0 +1,36 @@
+//! tcsim — a cycle-level model of one Tensor-Core SM.
+//!
+//! Structure (paper Fig. 1): four sub-cores, each with its own warp
+//! scheduler and Tensor-Core pipeline; SM-level data-movement units
+//! (LSUs) in front of a 32-bank shared memory; a global-memory pipe with
+//! synchronous loads and Ampere `cp.async`.
+//!
+//! Calibrated mechanisms (derived from the paper's tables, DESIGN.md §4):
+//!
+//! * **Tensor-Core engine = token bucket** per sub-core: work credit
+//!   refills 1 cycle/cycle up to a burst cap of `latency` cycles; an
+//!   `mma` consumes `ii` credits at issue and completes `latency` cycles
+//!   later. This yields a sustained rate of one instruction per `ii`
+//!   cycles with a burst window of `latency/ii` in flight — exactly the
+//!   pipeline behaviour behind the paper's ILP/#warp convergence points,
+//!   the 6-warp throughput dip, and the 12-vs-16-warp latency step.
+//! * **`mma.sync` completion barrier**: `__syncwarp()` after an ILP
+//!   group waits for the warp's outstanding MMA results (the intra-warp
+//!   synchronization stalls of §5 finding 3), then costs `sync_cost`.
+//! * **LSU pair**: a warp's shared-memory transactions go to LSU
+//!   `warp_id % 2`; each 128-byte transaction occupies its unit for 2
+//!   cycles (64 B/clk/unit, 128 B/clk/SM); a load completes `lsu_tail`
+//!   cycles after its last transaction; a warp may have at most
+//!   `lsu_pending_per_warp` loads outstanding. Loads do *not* block
+//!   `__syncwarp` (they are `ld`-style asynchronous writebacks), which
+//!   is why `ldmatrix` throughput saturates while `mma` does not.
+
+mod analytic;
+mod core;
+mod program;
+mod smem;
+
+pub use analytic::{predict_ldmatrix, predict_mma, AnalyticPrediction};
+pub use core::{SmSim, WarpResult};
+pub use program::{Instr, Op, ProgramBuilder, Reg, WarpProgram};
+pub use smem::{ld_shared_transactions, ldmatrix_transactions, ldmatrix_x4_row_addrs, Swizzle};

@@ -1,0 +1,170 @@
+//! Warp programs: the unrolled instruction traces tcsim executes.
+//!
+//! The microbenchmark harness and the Appendix-A GEMM kernels both
+//! compile down to this tiny IR. Timing-relevant facts (engine class,
+//! ii/latency, transaction counts) are resolved at build time so the
+//! simulator core stays a pure scheduler.
+
+/// Virtual per-warp register id.
+pub type Reg = u32;
+
+/// One dynamic instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instr {
+    pub op: Op,
+    /// Destination register (written at completion).
+    pub dst: Option<Reg>,
+    /// Source registers (must be ready at issue).
+    pub srcs: Vec<Reg>,
+}
+
+/// Operation kinds, pre-resolved against a device.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Tensor-Core (or FPU-fallback) MMA.
+    Mma { ii: u32, latency: u32, fmas: u64, fpu: bool },
+    /// Shared-memory load (`ldmatrix` / `ld.shared`): `txns` serialized
+    /// 128-byte transactions on the warp's LSU.
+    SmemLoad { txns: u32, bytes: u64 },
+    /// Shared-memory store (same fabric; used by the GEMM staging path).
+    SmemStore { txns: u32, bytes: u64 },
+    /// Synchronous global-memory load.
+    GmemLoad { bytes: u64 },
+    /// Ampere asynchronous global->shared copy (no register writeback).
+    CpAsync { bytes: u64 },
+    /// Close the current cp.async group.
+    CpAsyncCommit,
+    /// Stall until at most `max_pending` cp.async groups are in flight.
+    CpAsyncWait { max_pending: u32 },
+    /// `__syncwarp()`: wait for the warp's outstanding MMA results, then
+    /// `sync_cost` cycles of issue stall.
+    SyncWarp,
+    /// CTA-wide barrier (`bar.sync`): all warps arrive, release together.
+    BarSync,
+    /// Measurement-iteration boundary (`clock64()` read, paper Fig. 4).
+    IterMark,
+}
+
+impl Op {
+    pub fn fmas(&self) -> u64 {
+        match self {
+            Op::Mma { fmas, .. } => *fmas,
+            _ => 0,
+        }
+    }
+
+    pub fn smem_bytes(&self) -> u64 {
+        match self {
+            Op::SmemLoad { bytes, .. } | Op::SmemStore { bytes, .. } => *bytes,
+            _ => 0,
+        }
+    }
+}
+
+/// The full trace one warp executes.
+#[derive(Debug, Clone, Default)]
+pub struct WarpProgram {
+    pub instrs: Vec<Instr>,
+}
+
+impl WarpProgram {
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Total FMAs between consecutive IterMarks (assumes a uniform loop
+    /// body, which every generated program has).
+    pub fn fmas_per_iteration(&self) -> u64 {
+        let iters = self.iter_marks().max(1) as u64;
+        let total: u64 = self.instrs.iter().map(|i| i.op.fmas()).sum();
+        total / iters
+    }
+
+    /// Total shared-memory bytes moved between consecutive IterMarks.
+    pub fn smem_bytes_per_iteration(&self) -> u64 {
+        let iters = self.iter_marks().max(1) as u64;
+        let total: u64 = self.instrs.iter().map(|i| i.op.smem_bytes()).sum();
+        total / iters
+    }
+
+    pub fn iter_marks(&self) -> usize {
+        self.instrs.iter().filter(|i| matches!(i.op, Op::IterMark)).count()
+    }
+}
+
+/// Convenience builder with automatic register allocation.
+#[derive(Debug, Default)]
+pub struct ProgramBuilder {
+    instrs: Vec<Instr>,
+    next_reg: Reg,
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc_reg(&mut self) -> Reg {
+        let r = self.next_reg;
+        self.next_reg += 1;
+        r
+    }
+
+    pub fn push(&mut self, op: Op, dst: Option<Reg>, srcs: Vec<Reg>) -> &mut Self {
+        self.instrs.push(Instr { op, dst, srcs });
+        self
+    }
+
+    pub fn mma(&mut self, ii: u32, latency: u32, fmas: u64, dst: Reg, srcs: Vec<Reg>) -> &mut Self {
+        self.push(Op::Mma { ii, latency, fmas, fpu: false }, Some(dst), srcs)
+    }
+
+    pub fn smem_load(&mut self, txns: u32, bytes: u64, dst: Reg) -> &mut Self {
+        self.push(Op::SmemLoad { txns, bytes }, Some(dst), vec![])
+    }
+
+    pub fn sync_warp(&mut self) -> &mut Self {
+        self.push(Op::SyncWarp, None, vec![])
+    }
+
+    pub fn iter_mark(&mut self) -> &mut Self {
+        self.push(Op::IterMark, None, vec![])
+    }
+
+    pub fn build(self) -> WarpProgram {
+        WarpProgram { instrs: self.instrs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_allocates_unique_regs() {
+        let mut b = ProgramBuilder::new();
+        let r0 = b.alloc_reg();
+        let r1 = b.alloc_reg();
+        assert_ne!(r0, r1);
+    }
+
+    #[test]
+    fn per_iteration_accounting() {
+        let mut b = ProgramBuilder::new();
+        for _ in 0..4 {
+            let d = b.alloc_reg();
+            b.mma(8, 24, 2048, d, vec![d]);
+            b.mma(8, 24, 2048, d, vec![d]);
+            b.sync_warp();
+            b.iter_mark();
+        }
+        let p = b.build();
+        assert_eq!(p.iter_marks(), 4);
+        assert_eq!(p.fmas_per_iteration(), 4096);
+        assert_eq!(p.smem_bytes_per_iteration(), 0);
+    }
+}

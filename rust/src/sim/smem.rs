@@ -1,0 +1,190 @@
+//! Shared-memory bank model (paper §7).
+//!
+//! Modern NVIDIA shared memory has 32 banks x 4 bytes (128 B/clk
+//! theoretical bandwidth). A warp-wide access is split into transactions:
+//! within one transaction each bank can serve one 4-byte word (broadcast
+//! if every request to the bank hits the same word). The transaction
+//! count is what the simulator charges the LSU with, and each extra
+//! transaction costs ~2 cycles of latency (Table 10's 2 cycles/way).
+//!
+//! Address math lives here — the microbenchmark and GEMM kernel builders
+//! generate real byte addresses and this module derives the conflict
+//! degree, including the CUTLASS-style permuted (swizzled) layout of
+//! Appendix A.2.
+
+use std::collections::HashMap;
+
+pub const BANKS: u32 = 32;
+pub const BANK_BYTES: u32 = 4;
+
+/// Transactions needed to serve per-thread word accesses of
+/// `access_bytes` (4 for u32, 8 for u64) at the given byte addresses.
+///
+/// u64 (and wider) accesses are decomposed into 4-byte words first; the
+/// fabric then needs `max over banks of distinct words per bank`
+/// transactions *per 128-byte wavefront*, and at least
+/// `total_bytes / 128` wavefronts.
+pub fn ld_shared_transactions(addrs: &[u32], access_bytes: u32) -> u32 {
+    assert!(access_bytes % BANK_BYTES == 0, "accesses must be word-multiples");
+    let words_per_access = access_bytes / BANK_BYTES;
+    // bank -> set of distinct word addresses requested from it
+    let mut per_bank: HashMap<u32, Vec<u32>> = HashMap::new();
+    for &addr in addrs {
+        assert!(addr % access_bytes == 0, "misaligned shared-memory access");
+        for w in 0..words_per_access {
+            let word_addr = addr / BANK_BYTES + w;
+            let bank = word_addr % BANKS;
+            let words = per_bank.entry(bank).or_default();
+            if !words.contains(&word_addr) {
+                words.push(word_addr);
+            }
+        }
+    }
+    per_bank.values().map(|w| w.len() as u32).max().unwrap_or(0)
+}
+
+/// Transactions for one `ldmatrix.xN` (N = `row_addrs.len() / 8`): each
+/// address points at a 16-byte row fragment held by a group of four
+/// threads (Fig. 13). A conflict-free `ldmatrix.xN` needs exactly N
+/// transactions (N x 128 bytes over a 128 B/clk fabric); layouts that
+/// map multiple rows onto the same banks need proportionally more.
+pub fn ldmatrix_transactions(row_addrs: &[u32]) -> u32 {
+    assert!(
+        row_addrs.len() % 8 == 0 && !row_addrs.is_empty(),
+        "ldmatrix loads 8 rows per 128-byte fragment"
+    );
+    // Each 16-byte row covers 4 consecutive banks.
+    let mut per_bank: HashMap<u32, Vec<u32>> = HashMap::new();
+    for &addr in row_addrs {
+        assert!(addr % 16 == 0, "ldmatrix rows must be 16-byte aligned");
+        for w in 0..4 {
+            let word_addr = addr / BANK_BYTES + w;
+            let bank = word_addr % BANKS;
+            let words = per_bank.entry(bank).or_default();
+            if !words.contains(&word_addr) {
+                words.push(word_addr);
+            }
+        }
+    }
+    per_bank.values().map(|w| w.len() as u32).max().unwrap_or(0)
+}
+
+/// Shared-memory layout transform for a staged tile (Appendix A.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Swizzle {
+    /// Naive row-major staging: rows with a stride that aliases banks.
+    None,
+    /// CUTLASS-style permuted layout: the 16-byte column slot is XORed
+    /// with the row index so consecutive rows spread over all banks.
+    Permuted,
+}
+
+impl Swizzle {
+    /// Byte address of the 16-byte chunk `(row, col16)` of a staged tile
+    /// whose row stride is `row_bytes`.
+    pub fn address(self, row: u32, col16: u32, row_bytes: u32) -> u32 {
+        assert!(row_bytes % 16 == 0);
+        let chunks_per_row = row_bytes / 16;
+        let col = match self {
+            Swizzle::None => col16,
+            Swizzle::Permuted => (col16 ^ row) % chunks_per_row,
+        };
+        row * row_bytes + col * 16
+    }
+}
+
+/// The row addresses one `ldmatrix.x4` issues against a staged tile:
+/// 4 fragments x 8 rows starting at `(row0 + 8*f, col16)`.
+pub fn ldmatrix_x4_row_addrs(
+    swz: Swizzle,
+    row0: u32,
+    col16: u32,
+    row_bytes: u32,
+) -> Vec<u32> {
+    let mut out = Vec::with_capacity(32);
+    for frag in 0..4 {
+        for r in 0..8 {
+            out.push(swz.address(row0 + frag * 8 + r, col16, row_bytes));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Conflict-free: thread t reads word t.
+    #[test]
+    fn u32_conflict_free() {
+        let addrs: Vec<u32> = (0..32).map(|t| t * 4).collect();
+        assert_eq!(ld_shared_transactions(&addrs, 4), 1);
+    }
+
+    /// Classic n-way conflict: stride of n words.
+    #[test]
+    fn u32_strided_conflicts() {
+        for ways in [2u32, 4, 8] {
+            let addrs: Vec<u32> = (0..32).map(|t| t * 4 * ways).collect();
+            assert_eq!(ld_shared_transactions(&addrs, 4), ways, "{ways}-way");
+        }
+    }
+
+    /// Broadcast: all threads read the same word -> one transaction.
+    #[test]
+    fn u32_broadcast() {
+        let addrs = vec![64u32; 32];
+        assert_eq!(ld_shared_transactions(&addrs, 4), 1);
+    }
+
+    /// u64 needs at least two transactions (256 B through a 128 B/clk
+    /// fabric) even when conflict-free per wavefront.
+    #[test]
+    fn u64_minimum_two() {
+        let addrs: Vec<u32> = (0..32).map(|t| t * 8).collect();
+        assert_eq!(ld_shared_transactions(&addrs, 8), 2);
+    }
+
+    #[test]
+    fn u64_strided_conflicts() {
+        // stride 2*8B = 4 words: banks repeat every 8 threads over 2
+        // words each -> 4 distinct words on the hottest bank... verify
+        // against Table 10's u64 rows (ways == transactions).
+        let addrs: Vec<u32> = (0..32).map(|t| t * 16).collect();
+        assert_eq!(ld_shared_transactions(&addrs, 8), 4);
+    }
+
+    #[test]
+    fn ldmatrix_x1_conflict_free() {
+        // 8 rows of 16 B packed consecutively: covers all 32 banks once.
+        let addrs: Vec<u32> = (0..8).map(|r| r * 16).collect();
+        assert_eq!(ldmatrix_transactions(&addrs), 1);
+    }
+
+    #[test]
+    fn ldmatrix_x4_packed_is_four() {
+        let addrs: Vec<u32> = (0..32).map(|r| r * 16).collect();
+        assert_eq!(ldmatrix_transactions(&addrs), 4);
+    }
+
+    /// Naive row-major staging of a bf16 tile with 32-byte rows: rows 4
+    /// apart alias the same banks -> 8 transactions instead of 4
+    /// (the Appendix-A.2 baseline).
+    #[test]
+    fn ldmatrix_x4_naive_layout_conflicts() {
+        let addrs = ldmatrix_x4_row_addrs(Swizzle::None, 0, 0, 32);
+        assert_eq!(ldmatrix_transactions(&addrs), 8);
+    }
+
+    /// The permuted layout restores the conflict-free 4 transactions
+    /// when the row holds enough 16-byte chunks to spread across banks.
+    #[test]
+    fn ldmatrix_x4_permuted_layout_conflict_free() {
+        let addrs = ldmatrix_x4_row_addrs(Swizzle::Permuted, 0, 0, 128);
+        assert_eq!(ldmatrix_transactions(&addrs), 4);
+        // while the naive layout at the same 128-byte row stride still
+        // conflicts (all rows hit the same 4 banks):
+        let naive = ldmatrix_x4_row_addrs(Swizzle::None, 0, 0, 128);
+        assert_eq!(ldmatrix_transactions(&naive), 32);
+    }
+}

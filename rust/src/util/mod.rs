@@ -1,0 +1,11 @@
+//! In-repo substrates for what would normally be external crates — the
+//! build is fully offline, so the PRNG, JSON handling, CLI parsing and
+//! the micro-bench harness are implemented from scratch here.
+
+pub mod bench;
+pub mod json;
+pub mod prng;
+
+pub use bench::Bencher;
+pub use json::Json;
+pub use prng::Prng;

@@ -1,0 +1,134 @@
+//! Deterministic PRNG (xoshiro256**) with uniform/normal helpers.
+//!
+//! The paper's §8 experiments draw from N(0, 1) with a fixed seed so the
+//! same sequence initializes every data type; this PRNG provides that
+//! reproducibility on the Rust side (Box–Muller for normals).
+
+/// xoshiro256** — fast, high-quality, no dependencies.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    s: [u64; 4],
+    /// cached second Box–Muller variate
+    spare: Option<f64>,
+}
+
+impl Prng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed.
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Self { s, spare: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let [s0, s1, s2, s3] = self.s;
+        let result = s1.wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s1 << 17;
+        let mut s = [s0, s1, s2, s3];
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        self.s = s;
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // multiply-shift; bias is negligible for our n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal (Box–Muller), f64.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Standard normal rounded to f32 (the experiments' native type).
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a buffer with N(0,1) f32 samples.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.normal_f32();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Prng::new(7);
+        let mut b = Prng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Prng::new(8);
+        assert_ne!(Prng::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut p = Prng::new(1);
+        for _ in 0..10_000 {
+            let u = p.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(42);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = p.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut p = Prng::new(3);
+        for _ in 0..10_000 {
+            assert!(p.below(17) < 17);
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Integration: the PJRT-executed AOT artifacts (L1 Pallas kernel
+//! lowered through L2 jax) must agree **bit-exactly** with the native
+//! Rust softfloat datapath on random batches, for every numeric config —
+//! this is the cross-layer contract of the whole stack.
+//!
+//! Requires `make artifacts`; tests are skipped (with a note) otherwise.
+
+use tcbench::numerics::{profile_op, InitKind, MmaExec, NativeExec, NumericCfg, ProfileOp};
+use tcbench::runtime::{ArtifactExec, ArtifactStore};
+use tcbench::util::Prng;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping PJRT integration test: {e:#}");
+            None
+        }
+    }
+}
+
+const CFGS: [NumericCfg; 5] = [
+    NumericCfg::new("bf16", "f32", 16, 8, 16),
+    NumericCfg::new("bf16", "f32", 16, 8, 8),
+    NumericCfg::new("fp16", "f32", 16, 8, 16),
+    NumericCfg::new("fp16", "f16", 16, 8, 8),
+    NumericCfg::new("tf32", "f32", 16, 8, 8),
+];
+
+#[test]
+fn pjrt_matches_native_bit_exactly() {
+    let Some(mut store) = store() else { return };
+    for cfg in CFGS {
+        let batch = 256;
+        let mut rng = Prng::new(0xC0FFEE ^ cfg.k as u64);
+        let mut a = vec![0.0f32; batch * cfg.m * cfg.k];
+        let mut b = vec![0.0f32; batch * cfg.k * cfg.n];
+        let mut c = vec![0.0f32; batch * cfg.m * cfg.n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        rng.fill_normal(&mut c);
+
+        let native = NativeExec::new(cfg).run(batch, &a, &b, &c);
+        let mut artifact = ArtifactExec::new(&mut store, cfg).expect("artifact load");
+        let pjrt = artifact.run(batch, &a, &b, &c);
+
+        assert_eq!(native.len(), pjrt.len());
+        for (i, (x, y)) in native.iter().zip(&pjrt).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{}: element {i} differs: native {x:e} vs pjrt {y:e}",
+                cfg.artifact_name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_on_extreme_values() {
+    let Some(mut store) = store() else { return };
+    let cfg = NumericCfg::new("fp16", "f16", 16, 8, 8);
+    let batch = 4;
+    // Large magnitudes drive the FP16 saturation path.
+    let a = vec![300.0f32; batch * cfg.m * cfg.k];
+    let b = vec![300.0f32; batch * cfg.k * cfg.n];
+    let c = vec![0.5f32; batch * cfg.m * cfg.n];
+    let native = NativeExec::new(cfg).run(batch, &a, &b, &c);
+    let mut artifact = ArtifactExec::new(&mut store, cfg).expect("artifact load");
+    let pjrt = artifact.run(batch, &a, &b, &c);
+    for (x, y) in native.iter().zip(&pjrt) {
+        assert!(x.is_infinite() && y.is_infinite() && x.signum() == y.signum());
+    }
+}
+
+#[test]
+fn pjrt_batch_splitting_handles_odd_sizes() {
+    let Some(mut store) = store() else { return };
+    let cfg = NumericCfg::new("tf32", "f32", 16, 8, 8);
+    for batch in [1usize, 255, 256, 257, 600] {
+        let mut rng = Prng::new(batch as u64);
+        let mut a = vec![0.0f32; batch * cfg.m * cfg.k];
+        let mut b = vec![0.0f32; batch * cfg.k * cfg.n];
+        let mut c = vec![0.0f32; batch * cfg.m * cfg.n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        rng.fill_normal(&mut c);
+        let native = NativeExec::new(cfg).run(batch, &a, &b, &c);
+        let mut artifact = ArtifactExec::new(&mut store, cfg).expect("artifact load");
+        let pjrt = artifact.run(batch, &a, &b, &c);
+        assert_eq!(native, pjrt, "batch {batch}");
+    }
+}
+
+#[test]
+fn profiling_results_identical_across_backends() {
+    let Some(mut store) = store() else { return };
+    let cfg = NumericCfg::new("bf16", "f32", 16, 8, 8);
+    for op in ProfileOp::ALL {
+        for init in [InitKind::LowPrecision, InitKind::Fp32] {
+            let n = profile_op(&mut NativeExec::new(cfg), op, init, 500, 7);
+            let mut artifact = ArtifactExec::new(&mut store, cfg).expect("artifact load");
+            let p = profile_op(&mut artifact, op, init, 500, 7);
+            assert_eq!(
+                n.mean_abs_err.to_bits(),
+                p.mean_abs_err.to_bits(),
+                "{op:?}/{init:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! End-to-end assertions of the paper's *conclusions* (§9): each bullet
+//! of the paper's summary must hold in the reproduced system.
+
+use tcbench::device::{a100, rtx2080ti, rtx3070ti};
+use tcbench::gemm::{table16, table17, GemmConfig};
+use tcbench::isa::shapes::*;
+use tcbench::isa::{AbType, CdType, MmaInstr};
+use tcbench::microbench::{completion_latency_mma, measure_mma, sweep_mma};
+use tcbench::numerics::{chain_errors, NativeExec, NumericCfg};
+
+/// "Sparse operation doubles the throughput … while using the same
+/// number of execution cycles."
+#[test]
+fn conclusion_sparse_doubles_throughput_same_latency() {
+    let d = a100();
+    let dense = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+    let sp = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32);
+    assert_eq!(
+        completion_latency_mma(&d, &dense),
+        completion_latency_mma(&d, &sp)
+    );
+    let md = measure_mma(&d, &dense, 8, 2);
+    let ms = measure_mma(&d, &sp, 8, 2);
+    let ratio = ms.throughput / md.throughput;
+    assert!((1.9..2.1).contains(&ratio), "ratio {ratio}");
+}
+
+/// "For some instructions peak performance can only be achieved when
+/// there are at least eight warps" (Fig. 7 / m16n8k8).
+#[test]
+fn conclusion_eight_warps_needed_for_small_k() {
+    let d = a100();
+    let i = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K8);
+    let s = sweep_mma(&d, &i);
+    let best4: f64 = (1..=6)
+        .map(|ilp| s.cell(4, ilp).unwrap().throughput)
+        .fold(0.0, f64::max);
+    let best8: f64 = (1..=6)
+        .map(|ilp| s.cell(8, ilp).unwrap().throughput)
+        .fold(0.0, f64::max);
+    assert!(
+        best8 > 1.15 * best4,
+        "8-warp best {best8} must clearly beat 4-warp best {best4}"
+    );
+}
+
+/// "The instructions with smaller k give an undesired performance on
+/// A100 … However [on RTX3070Ti] the instruction with a smaller k can
+/// also reach the same throughput."
+#[test]
+fn conclusion_sparse_small_k_device_dependent() {
+    let a = a100();
+    let g = rtx3070ti();
+    let small = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K16);
+    let big = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32);
+    // A100: small k well below the sparse peak
+    let a_small = measure_mma(&a, &small, 8, 2).throughput;
+    let a_big = measure_mma(&a, &big, 8, 2).throughput;
+    assert!(a_small < 0.75 * a_big, "A100 {a_small} vs {a_big}");
+    // RTX3070Ti: both reach the same converged throughput
+    let g_small = measure_mma(&g, &small, 8, 1).throughput;
+    let g_big = measure_mma(&g, &big, 8, 1).throughput;
+    assert!(
+        (g_small / g_big - 1.0).abs() < 0.05,
+        "3070Ti {g_small} vs {g_big}"
+    );
+}
+
+/// "RTX3070Ti Tensor Cores favor FP16 as an accumulation data type …
+/// but there is no difference … on A100."
+#[test]
+fn conclusion_accumulator_type_rule() {
+    let a = a100();
+    let g = rtx3070ti();
+    let f32acc = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+    let f16acc = MmaInstr::dense(AbType::Fp16, CdType::Fp16, M16N8K16);
+    let a32 = measure_mma(&a, &f32acc, 8, 2).throughput;
+    let a16 = measure_mma(&a, &f16acc, 8, 2).throughput;
+    assert!((a32 / a16 - 1.0).abs() < 0.05, "A100: {a32} vs {a16}");
+    let g32 = measure_mma(&g, &f32acc, 8, 1).throughput;
+    let g16 = measure_mma(&g, &f16acc, 8, 1).throughput;
+    assert!((g16 / g32 - 2.0).abs() < 0.2, "3070Ti: {g16} vs {g32}");
+}
+
+/// "Dense FMA latency of Ampere … does not improve compared to Turing."
+#[test]
+fn conclusion_latency_stagnant_across_generations() {
+    let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K8);
+    let turing = completion_latency_mma(&rtx2080ti(), &i);
+    let ampere = completion_latency_mma(&a100(), &i);
+    assert!((turing - ampere).abs() <= 1.0, "{turing} vs {ampere}");
+}
+
+/// "BF16 … performance same as FP16; FP16 suffers from a smaller range
+/// and BF16 from higher numeric errors."
+#[test]
+fn conclusion_bf16_vs_fp16_tradeoff() {
+    let d = a100();
+    // identical performance
+    let bf = measure_mma(&d, &MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16), 8, 2);
+    let fp = measure_mma(&d, &MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16), 8, 2);
+    assert_eq!(bf.latency, fp.latency);
+    assert_eq!(bf.throughput, fp.throughput);
+    // numeric trade-off (chain study)
+    let bf_chain = chain_errors(
+        &mut NativeExec::new(NumericCfg::new("bf16", "f32", 16, 8, 8)),
+        8, 64, true, 3,
+    );
+    let fp_chain = chain_errors(
+        &mut NativeExec::new(NumericCfg::new("fp16", "f16", 16, 8, 8)),
+        14, 64, true, 3,
+    );
+    assert!(bf_chain.overflow_at.is_none(), "BF16 keeps FP32's range");
+    let at = fp_chain.overflow_at.expect("FP16 overflows");
+    assert!(at >= 7, "overflow at {at}");
+    // compare error levels safely before the overflow region
+    assert!(
+        bf_chain.rel_err[5] > 2.0 * fp_chain.rel_err[5],
+        "bf16 {} vs fp16 {}",
+        bf_chain.rel_err[5],
+        fp_chain.rel_err[5]
+    );
+}
+
+/// Appendix A: async staging ≈2x and permuted layout ≈3x (shape-level:
+/// both clearly win, permuted wins the most per its table).
+#[test]
+fn conclusion_appendix_ablations() {
+    let d = a100();
+    let cfg = GemmConfig { size: 512, ..GemmConfig::default() };
+    let (b16, p16) = table16(&d, cfg);
+    let s_async = b16.cta_cycles as f64 / p16.cta_cycles as f64;
+    assert!((1.4..2.6).contains(&s_async), "async {s_async}");
+    let (b17, p17) = table17(&d, cfg);
+    let s_perm = b17.cta_cycles as f64 / p17.cta_cycles as f64;
+    assert!((1.8..3.8).contains(&s_perm), "permuted {s_perm}");
+}
+
+/// The m8n8k4 FPU fallback on Ampere runs far below Tensor-Core rates
+/// (§2.2: "10x slower than the expected Tensor Cores performance").
+#[test]
+fn conclusion_m8n8k4_fpu_fallback() {
+    let d = a100();
+    let fallback = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M8N8K4);
+    let m = measure_mma(&d, &fallback, 8, 2);
+    // 256 FMA/instr at FPU rates: far below the 1024 FMA/clk TC peak.
+    assert!(m.throughput < 150.0, "fpu fallback too fast: {}", m.throughput);
+    // Turing executes the same shape on its Tensor Cores.
+    let t = rtx2080ti();
+    let mt = measure_mma(&t, &fallback, 8, 2);
+    assert!(mt.throughput > 2.0 * m.throughput);
+}

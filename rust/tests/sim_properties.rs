@@ -1,0 +1,173 @@
+//! Property tests over tcsim (hand-rolled generator — proptest is not
+//! vendored): the cycle simulator must agree with the closed-form
+//! analytic model on the microbenchmark family, and obey structural
+//! invariants (work conservation, monotonicity, sub-core isolation).
+
+use tcbench::device::{self, Device, FpuFallback};
+use tcbench::isa::{LdMatrixNum, MmaInstr};
+use tcbench::microbench::{measure_ldmatrix, measure_mma};
+use tcbench::sim::{predict_ldmatrix, predict_mma};
+use tcbench::util::Prng;
+
+fn mma_cases(device: &Device, rng: &mut Prng, n: usize) -> Vec<(MmaInstr, u32, u32)> {
+    let instrs: Vec<MmaInstr> = device
+        .mma_timings
+        .iter()
+        .filter(|(_, t)| t.fpu_fallback == FpuFallback::No)
+        .map(|(i, _)| *i)
+        .collect();
+    let warps_axis = [1u32, 2, 4, 6, 8, 12, 16, 32];
+    (0..n)
+        .map(|_| {
+            let i = instrs[rng.below(instrs.len() as u64) as usize];
+            let w = warps_axis[rng.below(warps_axis.len() as u64) as usize];
+            let ilp = 1 + rng.below(6) as u32;
+            (i, w, ilp)
+        })
+        .collect()
+}
+
+/// Simulated latency within 15% (or 3 cycles) of the analytic model for
+/// randomly drawn configurations on every device.
+#[test]
+fn sim_agrees_with_analytic_model() {
+    let mut rng = Prng::new(2024);
+    for dev in device::registry() {
+        for (instr, warps, ilp) in mma_cases(&dev, &mut rng, 60) {
+            let sim = measure_mma(&dev, &instr, warps, ilp);
+            let ana = predict_mma(&dev, &instr, warps, ilp);
+            let abs = (sim.latency - ana.latency).abs();
+            let rel = abs / ana.latency;
+            assert!(
+                rel < 0.15 || abs <= 3.0,
+                "{}: {instr} w={warps} ilp={ilp}: sim {} vs analytic {}",
+                dev.name,
+                sim.latency,
+                ana.latency
+            );
+        }
+    }
+}
+
+/// Throughput never exceeds the device's theoretical peak (plus a small
+/// integer-rounding allowance).
+#[test]
+fn throughput_never_exceeds_peak() {
+    let mut rng = Prng::new(7);
+    for dev in device::registry() {
+        for (instr, warps, ilp) in mma_cases(&dev, &mut rng, 60) {
+            let sim = measure_mma(&dev, &instr, warps, ilp);
+            // The calibrated ii defines the practically reachable peak
+            // (anomalous instructions cannot reach the vendor number).
+            let ii = dev.timing(&instr).unwrap().ii as f64;
+            let reachable = dev.subcores as f64 * instr.fmas() as f64 / ii;
+            assert!(
+                sim.throughput <= reachable * 1.05,
+                "{}: {instr} w={warps} ilp={ilp}: {} > {reachable}",
+                dev.name,
+                sim.throughput
+            );
+        }
+    }
+}
+
+/// More warps at fixed ILP never *reduces* total throughput by more than
+/// the 6-warp-style imbalance bound (worst sub-core load ratio).
+#[test]
+fn warp_scaling_monotone_up_to_imbalance() {
+    let mut rng = Prng::new(99);
+    let dev = device::a100();
+    for (instr, _, ilp) in mma_cases(&dev, &mut rng, 25) {
+        let mut last = 0.0;
+        for warps in [1u32, 2, 4, 8, 16] {
+            let thr = measure_mma(&dev, &instr, warps, ilp).throughput;
+            assert!(
+                thr >= last * 0.99,
+                "{instr} ilp={ilp}: thr dropped {last} -> {thr} at {warps} warps"
+            );
+            last = thr;
+        }
+    }
+}
+
+/// Latency is non-decreasing in ILP at fixed #warps (adding independent
+/// chains can only lengthen an iteration).
+#[test]
+fn latency_monotone_in_ilp() {
+    let dev = device::a100();
+    let mut rng = Prng::new(5);
+    for (instr, warps, _) in mma_cases(&dev, &mut rng, 25) {
+        let mut last = 0.0;
+        for ilp in 1..=6 {
+            let lat = measure_mma(&dev, &instr, warps, ilp).latency;
+            assert!(
+                lat + 1e-9 >= last,
+                "{instr} w={warps}: latency dropped {last} -> {lat} at ILP {ilp}"
+            );
+            last = lat;
+        }
+    }
+}
+
+/// Sub-core isolation: K warps spread over K sub-cores must scale
+/// throughput K-fold vs one warp (the paper's finding 3).
+#[test]
+fn subcore_isolation_scaling() {
+    let dev = device::a100();
+    for instr in [
+        MmaInstr::dense(tcbench::isa::AbType::Bf16, tcbench::isa::CdType::Fp32, tcbench::isa::shapes::M16N8K16),
+        MmaInstr::sp(tcbench::isa::AbType::Bf16, tcbench::isa::CdType::Fp32, tcbench::isa::shapes::M16N8K32),
+    ] {
+        let t1 = measure_mma(&dev, &instr, 1, 2).throughput;
+        for warps in [2u32, 4] {
+            let t = measure_mma(&dev, &instr, warps, 2).throughput;
+            let ratio = t / t1;
+            assert!(
+                (ratio - warps as f64).abs() < 0.25,
+                "{instr}: {warps}-warp scaling {ratio}"
+            );
+        }
+    }
+}
+
+/// ldmatrix: simulated latency within 15% of the analytic LSU model.
+#[test]
+fn ldmatrix_sim_agrees_with_analytic() {
+    let dev = device::a100();
+    let mut rng = Prng::new(3);
+    for _ in 0..40 {
+        let num = [LdMatrixNum::X1, LdMatrixNum::X2, LdMatrixNum::X4]
+            [rng.below(3) as usize];
+        let warps = [1u32, 2, 4, 8, 16][rng.below(5) as usize];
+        let ilp = 1 + rng.below(5) as u32;
+        let sim = measure_ldmatrix(&dev, num, warps, ilp);
+        let ana = predict_ldmatrix(&dev, num, warps, ilp);
+        let rel = (sim.latency - ana.latency).abs() / ana.latency;
+        assert!(
+            rel < 0.18 || (sim.latency - ana.latency).abs() <= 4.0,
+            "{num} w={warps} ilp={ilp}: sim {} vs analytic {}",
+            sim.latency,
+            ana.latency
+        );
+    }
+}
+
+/// Shared-memory bandwidth is conserved: bytes/clk never exceeds the
+/// 128 B/clk fabric bound.
+#[test]
+fn smem_bandwidth_bound() {
+    let dev = device::a100();
+    let mut rng = Prng::new(17);
+    for _ in 0..40 {
+        let num = [LdMatrixNum::X1, LdMatrixNum::X2, LdMatrixNum::X4]
+            [rng.below(3) as usize];
+        let warps = 1 + rng.below(32) as u32;
+        let ilp = 1 + rng.below(6) as u32;
+        let m = measure_ldmatrix(&dev, num, warps, ilp);
+        assert!(
+            m.throughput <= dev.smem_peak_bytes_per_clk() as f64 * 1.02,
+            "{num} w={warps} ilp={ilp}: {}",
+            m.throughput
+        );
+    }
+}
