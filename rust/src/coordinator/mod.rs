@@ -8,9 +8,70 @@ mod pool;
 
 pub use pool::{default_threads, run_parallel};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::runtime::ArtifactStore;
+
+/// Requested numeric backend, parsed from a CLI flag or an HTTP query
+/// parameter. Unlike [`Backend`] this is `Copy` + `Send`, so per-request
+/// jobs can carry it into worker threads and instantiate the actual
+/// backend where it runs — the tcserved request path and the parallel
+/// campaign both rely on this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+    /// PJRT when artifacts are available, native otherwise.
+    Auto,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "auto" => Ok(BackendKind::Auto),
+            other => bail!("unknown backend {other:?} (native|pjrt|auto)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Auto => "auto",
+        }
+    }
+
+    /// Open the backend this kind describes (`Pjrt` fails when the
+    /// artifacts — or the PJRT runtime itself — are unavailable).
+    pub fn instantiate(self) -> Result<Backend> {
+        match self {
+            BackendKind::Native => Ok(Backend::Native),
+            BackendKind::Pjrt => Ok(Backend::Pjrt(ArtifactStore::open_default()?)),
+            BackendKind::Auto => Ok(Backend::auto()),
+        }
+    }
+
+    /// Resolve `Auto` to the concrete backend it would use *right now*
+    /// (a cheap artifact-availability stat, not a full store open);
+    /// `Native`/`Pjrt` pass through. tcserved keys its result cache on
+    /// the resolved kind so `?backend=auto` shares content addresses
+    /// with the backend that actually runs, instead of caching
+    /// environment-dependent results under an unstable name.
+    pub fn resolve(self) -> BackendKind {
+        match self {
+            BackendKind::Auto => {
+                if ArtifactStore::available() {
+                    BackendKind::Pjrt
+                } else {
+                    BackendKind::Native
+                }
+            }
+            concrete => concrete,
+        }
+    }
+}
 
 /// Numeric-experiment backend: the native softfloat datapath or the
 /// PJRT-executed AOT artifacts (L1/L2). Both produce identical numbers —
@@ -100,14 +161,63 @@ pub fn run_experiment(id: &str, backend: &mut Backend) -> Result<String> {
     Ok(report)
 }
 
-/// Run the whole campaign; returns (id, report) pairs in registry order.
-pub fn run_all(backend: &mut Backend) -> Result<Vec<(&'static str, String)>> {
-    let mut out = Vec::new();
-    for e in EXPERIMENTS {
-        let report = run_experiment(e.id, backend)?;
-        out.push((e.id, report));
+/// Look up a registered experiment by id.
+pub fn experiment(id: &str) -> Option<&'static ExperimentId> {
+    EXPERIMENTS.iter().find(|e| e.id == id)
+}
+
+/// One completed campaign entry.
+#[derive(Debug, Clone)]
+pub struct ExperimentRun {
+    pub id: &'static str,
+    pub report: String,
+    pub wall_ms: f64,
+}
+
+/// Run the whole campaign, in registry order.
+///
+/// The pure-simulator experiments are independent `Send` jobs and are
+/// dispatched across the worker pool (each job runs against its own
+/// `Backend::Native`, which those experiments never touch); the numeric
+/// experiments then run serially on the caller's `backend`, since a PJRT
+/// artifact store is a single stateful compilation cache.
+pub fn run_all(backend: &mut Backend) -> Result<Vec<ExperimentRun>> {
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    let sim: Vec<&'static ExperimentId> = EXPERIMENTS.iter().filter(|e| !e.numeric).collect();
+    let jobs: Vec<_> = sim
+        .iter()
+        .map(|e| {
+            let id = e.id;
+            move || {
+                let t0 = Instant::now();
+                let report = run_experiment(id, &mut Backend::Native);
+                (id, report, t0.elapsed().as_secs_f64() * 1e3)
+            }
+        })
+        .collect();
+    // Cap the outer pool well below the core count: the table
+    // experiments fan out over `run_parallel(default_threads())`
+    // internally, and two uncapped levels would oversubscribe the CPU
+    // quadratically (outer x inner threads).
+    let outer_threads = default_threads().min(4);
+    let mut done: HashMap<&'static str, ExperimentRun> = HashMap::new();
+    for (id, report, wall_ms) in run_parallel(jobs, outer_threads) {
+        done.insert(id, ExperimentRun { id, report: report?, wall_ms });
     }
-    Ok(out)
+    for e in EXPERIMENTS.iter().filter(|e| e.numeric) {
+        let t0 = Instant::now();
+        let report = run_experiment(e.id, backend)?;
+        done.insert(
+            e.id,
+            ExperimentRun { id: e.id, report, wall_ms: t0.elapsed().as_secs_f64() * 1e3 },
+        );
+    }
+    Ok(EXPERIMENTS
+        .iter()
+        .map(|e| done.remove(e.id).expect("every registered experiment ran"))
+        .collect())
 }
 
 #[cfg(test)]
@@ -130,6 +240,43 @@ mod tests {
     fn unknown_experiment_errors() {
         let mut b = Backend::Native;
         assert!(run_experiment("t99", &mut b).is_err());
+    }
+
+    #[test]
+    fn experiment_lookup() {
+        assert_eq!(experiment("t3").unwrap().id, "t3");
+        assert!(experiment("t3").unwrap().description.contains("A100"));
+        assert!(experiment("t99").is_none());
+    }
+
+    #[test]
+    fn backend_kind_parses_and_instantiates() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("auto").unwrap().name(), "auto");
+        assert!(BackendKind::parse("cuda").is_err());
+        assert_eq!(BackendKind::Native.instantiate().unwrap().name(), "native");
+        // auto never fails: it falls back to native when PJRT artifacts
+        // (or the PJRT runtime itself) are unavailable
+        let auto = BackendKind::Auto.instantiate().unwrap();
+        assert!(matches!(auto.name(), "native" | "pjrt"));
+        // resolve() pins auto to the backend that would actually run
+        let resolved = BackendKind::Auto.resolve();
+        assert_ne!(resolved, BackendKind::Auto);
+        assert_eq!(resolved.name(), auto.name());
+        assert_eq!(BackendKind::Native.resolve(), BackendKind::Native);
+        assert_eq!(BackendKind::Pjrt.resolve(), BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn run_all_parallel_preserves_registry_order() {
+        let mut b = Backend::Native;
+        let runs = run_all(&mut b).unwrap();
+        assert_eq!(runs.len(), EXPERIMENTS.len());
+        for (r, e) in runs.iter().zip(EXPERIMENTS) {
+            assert_eq!(r.id, e.id);
+            assert!(r.report.contains("##"), "{} report missing title", r.id);
+            assert!(r.wall_ms >= 0.0);
+        }
     }
 
     #[test]

@@ -63,6 +63,45 @@ impl MmaInstr {
         let ab = self.ab.ptx();
         format!("{op}.sync.aligned.{}.row.col.{cd}.{ab}.{ab}.{cd}", self.shape)
     }
+
+    /// Parse a user-facing instruction spec `"<ab> <cd> <shape> [sparse]"`
+    /// with whitespace or `,` separators — shared by the `repro sweep`
+    /// CLI and the tcserved `/v1/sweep` endpoint (where commas survive
+    /// URL encoding untouched), e.g. `"bf16 f32 m16n8k16"` or
+    /// `"fp16,f32,m16n8k32,sparse"`.
+    pub fn parse_spec(spec: &str) -> Result<MmaInstr, String> {
+        let parts: Vec<&str> = spec
+            .split(|c: char| c.is_whitespace() || c == ',')
+            .filter(|s| !s.is_empty())
+            .collect();
+        if parts.len() < 3 || parts.len() > 4 {
+            return Err(format!(
+                "instr spec must be \"<ab> <cd> <shape> [sparse]\", got {spec:?}"
+            ));
+        }
+        let ab = match parts[0].to_ascii_lowercase().as_str() {
+            "fp16" | "f16" => AbType::Fp16,
+            "bf16" => AbType::Bf16,
+            "tf32" => AbType::Tf32,
+            "int8" | "s8" => AbType::Int8,
+            "int4" | "s4" => AbType::Int4,
+            "binary" | "b1" => AbType::Binary,
+            other => return Err(format!("unknown A/B type {other:?}")),
+        };
+        let cd = match parts[1].to_ascii_lowercase().as_str() {
+            "fp16" | "f16" => CdType::Fp16,
+            "fp32" | "f32" => CdType::Fp32,
+            "int32" | "s32" => CdType::Int32,
+            other => return Err(format!("unknown C/D type {other:?}")),
+        };
+        let shape: MmaShape = parts[2].parse()?;
+        let sparse = match parts.get(3).map(|s| s.to_ascii_lowercase()) {
+            None => false,
+            Some(tok) if tok == "sparse" || tok == "sp" => true,
+            Some(other) => return Err(format!("unexpected trailing token {other:?}")),
+        };
+        Ok(if sparse { MmaInstr::sp(ab, cd, shape) } else { MmaInstr::dense(ab, cd, shape) })
+    }
 }
 
 impl fmt::Display for MmaInstr {
@@ -218,5 +257,27 @@ mod tests {
         assert_eq!(LdMatrixNum::X4.bytes_per_warp(), 512);
         assert_eq!(LdSharedWidth::U32.bytes_per_warp(), 128);
         assert_eq!(LdSharedWidth::U64.bytes_per_warp(), 256);
+    }
+
+    #[test]
+    fn parse_spec_accepts_cli_and_url_styles() {
+        let a = MmaInstr::parse_spec("bf16 f32 m16n8k16").unwrap();
+        assert_eq!(a, MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16));
+        let b = MmaInstr::parse_spec("fp16,f32,m16n8k32,sparse").unwrap();
+        assert_eq!(b, MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32));
+        let c = MmaInstr::parse_spec("  int8  s32  m16n8k32  sp ").unwrap();
+        assert!(c.sparse);
+        assert_eq!(c.ab, AbType::Int8);
+    }
+
+    #[test]
+    fn parse_spec_rejects_garbage() {
+        assert!(MmaInstr::parse_spec("").is_err());
+        assert!(MmaInstr::parse_spec("bf16 f32").is_err());
+        assert!(MmaInstr::parse_spec("qf8 f32 m16n8k16").is_err());
+        assert!(MmaInstr::parse_spec("bf16 f99 m16n8k16").is_err());
+        assert!(MmaInstr::parse_spec("bf16 f32 m16n8").is_err());
+        assert!(MmaInstr::parse_spec("bf16 f32 m16n8k16 dense").is_err());
+        assert!(MmaInstr::parse_spec("bf16 f32 m16n8k16 sparse extra").is_err());
     }
 }

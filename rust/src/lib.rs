@@ -29,8 +29,12 @@
 //! - [`gemm`]     — Appendix-A ablation kernels (sync vs async copy,
 //!   naive vs permuted shared-memory layout).
 //! - [`coordinator`] — campaign orchestration: every paper table/figure
-//!   is a registered experiment run by a tokio worker pool.
-//! - [`report`]   — table/figure renderers + the paper's expected values.
+//!   is a registered experiment run by a scoped-thread worker pool.
+//! - [`report`]   — table/figure renderers (text + machine-readable
+//!   JSON) + the paper's expected values.
+//! - [`server`]   — tcserved: an embedded campaign service (std-only
+//!   HTTP/1.1) with a content-addressed result cache and single-flight
+//!   request coalescing, started via `repro serve`.
 
 pub mod coordinator;
 pub mod device;
@@ -40,6 +44,7 @@ pub mod microbench;
 pub mod numerics;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod util;
 

@@ -3,9 +3,10 @@
 //! ```text
 //! repro list                         # show every registered experiment
 //! repro run <id>... [--backend B]    # regenerate specific tables/figures
-//! repro all [--backend B] [--out D]  # the full campaign
+//! repro all [--backend B] [--out D]  # the full campaign (+ summary.json)
 //! repro sweep --device D --instr I   # ad-hoc instruction sweep
 //! repro devices                      # calibrated devices
+//! repro serve [--addr A] [--threads N] [--warm]   # tcserved campaign service
 //! ```
 //!
 //! Backends for the §8 numeric experiments: `native` (Rust softfloat),
@@ -16,11 +17,15 @@ use std::io::Write as _;
 
 use anyhow::{anyhow, bail, Result};
 
-use tcbench::coordinator::{run_experiment, Backend, EXPERIMENTS};
+use tcbench::coordinator::{
+    default_threads, run_all, run_experiment, Backend, BackendKind, EXPERIMENTS,
+};
 use tcbench::device;
 use tcbench::isa::MmaInstr;
 use tcbench::microbench::{convergence_point, sweep_mma};
-use tcbench::runtime::ArtifactStore;
+use tcbench::report;
+use tcbench::server::{serve_blocking, ServerConfig};
+use tcbench::util::Json;
 
 fn usage() -> &'static str {
     "repro — Dissecting Tensor Cores, reproduction CLI\n\
@@ -31,14 +36,23 @@ fn usage() -> &'static str {
        repro run <id>... [--backend native|pjrt|auto] [--out DIR]\n\
        repro all [--backend native|pjrt|auto] [--out DIR]\n\
        repro sweep --device <a100|rtx3070ti|rtx2080ti> --instr \"<ab> <cd> <shape> [sparse]\"\n\
+       repro serve [--addr HOST:PORT] [--threads N] [--warm]\n\
      \n\
      EXAMPLES:\n\
        repro run t3 t6 fig11\n\
-       repro all --out results\n\
-       repro sweep --device a100 --instr \"bf16 f32 m16n8k16\"\n"
+       repro all --out results          # also writes results/summary.json\n\
+       repro sweep --device a100 --instr \"bf16 f32 m16n8k16\"\n\
+       repro serve --addr 127.0.0.1:8321 --warm\n\
+     \n\
+     SERVE ENDPOINTS:\n\
+       /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep /v1/metrics\n"
 }
 
-/// Minimal flag parser: positional args + `--key value` pairs.
+/// Flags that take no value (presence means `true`).
+const BOOL_FLAGS: &[&str] = &["warm"];
+
+/// Minimal flag parser: positional args + `--key value` pairs, plus
+/// valueless boolean flags ([`BOOL_FLAGS`]).
 struct Args {
     positional: Vec<String>,
     flags: Vec<(String, String)>,
@@ -51,6 +65,10 @@ impl Args {
         let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&key) {
+                    flags.push((key.to_string(), "true".to_string()));
+                    continue;
+                }
                 let value = it
                     .next()
                     .ok_or_else(|| anyhow!("flag --{key} needs a value"))?
@@ -69,38 +87,11 @@ impl Args {
 }
 
 fn make_backend(kind: &str) -> Result<Backend> {
-    match kind {
-        "native" => Ok(Backend::Native),
-        "pjrt" => Ok(Backend::Pjrt(ArtifactStore::open_default()?)),
-        "auto" => Ok(Backend::auto()),
-        other => bail!("unknown backend {other:?} (native|pjrt|auto)"),
-    }
+    BackendKind::parse(kind)?.instantiate()
 }
 
 fn parse_instr(spec: &str) -> Result<MmaInstr> {
-    use tcbench::isa::{AbType, CdType};
-    let parts: Vec<&str> = spec.split_whitespace().collect();
-    if parts.len() < 3 {
-        bail!("instr spec must be \"<ab> <cd> <shape> [sparse]\", got {spec:?}");
-    }
-    let ab = match parts[0].to_ascii_lowercase().as_str() {
-        "fp16" | "f16" => AbType::Fp16,
-        "bf16" => AbType::Bf16,
-        "tf32" => AbType::Tf32,
-        "int8" | "s8" => AbType::Int8,
-        "int4" | "s4" => AbType::Int4,
-        "binary" | "b1" => AbType::Binary,
-        other => bail!("unknown A/B type {other:?}"),
-    };
-    let cd = match parts[1].to_ascii_lowercase().as_str() {
-        "fp16" | "f16" => CdType::Fp16,
-        "fp32" | "f32" => CdType::Fp32,
-        "int32" | "s32" => CdType::Int32,
-        other => bail!("unknown C/D type {other:?}"),
-    };
-    let shape = parts[2].parse().map_err(|e: String| anyhow!(e))?;
-    let sparse = parts.get(3).is_some_and(|s| *s == "sparse" || *s == "sp");
-    Ok(if sparse { MmaInstr::sp(ab, cd, shape) } else { MmaInstr::dense(ab, cd, shape) })
+    MmaInstr::parse_spec(spec).map_err(|e| anyhow!(e))
 }
 
 fn emit(out_dir: Option<&str>, id: &str, report: &str) -> Result<()> {
@@ -148,16 +139,11 @@ fn main() -> Result<()> {
                 );
             }
         }
-        "run" | "all" => {
-            let ids: Vec<&str> = if cmd == "all" {
-                EXPERIMENTS.iter().map(|e| e.id).collect()
-            } else {
-                let ids: Vec<&str> = args.positional.iter().map(String::as_str).collect();
-                if ids.is_empty() {
-                    bail!("`repro run` needs experiment ids; see `repro list`");
-                }
-                ids
-            };
+        "run" => {
+            let ids: Vec<&str> = args.positional.iter().map(String::as_str).collect();
+            if ids.is_empty() {
+                bail!("`repro run` needs experiment ids; see `repro list`");
+            }
             let mut backend = make_backend(args.flag("backend").unwrap_or("auto"))?;
             eprintln!("[repro] numeric backend: {}", backend.name());
             for id in ids {
@@ -166,6 +152,57 @@ fn main() -> Result<()> {
                 emit(args.flag("out"), id, &report)?;
                 eprintln!("[repro] {id} done in {:.2?}", t0.elapsed());
             }
+        }
+        "all" => {
+            let mut backend = make_backend(args.flag("backend").unwrap_or("auto"))?;
+            eprintln!("[repro] numeric backend: {}", backend.name());
+            let t0 = std::time::Instant::now();
+            // simulator experiments fan out over the worker pool
+            let runs = run_all(&mut backend)?;
+            let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let mut entries = Vec::new();
+            for r in &runs {
+                emit(args.flag("out"), r.id, &r.report)?;
+                eprintln!("[repro] {} done in {:.1} ms", r.id, r.wall_ms);
+                let deviation = match report::deviation_stats(&r.report) {
+                    Some(d) => d.to_json(),
+                    None => Json::Null,
+                };
+                entries.push(Json::obj(vec![
+                    ("id", Json::str(r.id)),
+                    ("wall_ms", Json::num(r.wall_ms)),
+                    ("deviation", deviation),
+                ]));
+            }
+            eprintln!("[repro] campaign finished in {total_ms:.1} ms");
+            if let Some(dir) = args.flag("out") {
+                let summary = Json::obj(vec![
+                    ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+                    ("backend", Json::str(backend.name())),
+                    ("total_wall_ms", Json::num(total_ms)),
+                    ("experiments", Json::Arr(entries)),
+                ]);
+                std::fs::create_dir_all(dir)?;
+                let path = format!("{dir}/summary.json");
+                std::fs::write(&path, summary.pretty())?;
+                eprintln!("[repro] wrote {path}");
+            }
+        }
+        "serve" => {
+            let threads = match args.flag("threads") {
+                Some(t) => t
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("--threads must be a positive integer, got {t:?}"))?
+                    .max(1),
+                None => default_threads(),
+            };
+            let cfg = ServerConfig {
+                addr: args.flag("addr").unwrap_or("127.0.0.1:8321").to_string(),
+                threads,
+                warm: args.flag("warm").is_some(),
+                ..ServerConfig::default()
+            };
+            serve_blocking(cfg)?;
         }
         "sweep" => {
             let dev_name = args.flag("device").unwrap_or("a100");

@@ -1,0 +1,247 @@
+//! Machine-readable rendering of experiment reports.
+//!
+//! The experiment functions return the paper-styled plain-text reports
+//! (ASCII tables, sparklines, embedded CSV). This module lifts that
+//! exact format — which [`crate::report::render`] fully controls — into
+//! structured [`Json`]: tables become `{title, headers, rows}`, the
+//! `csv:` figure blocks become `{columns, rows}`, and the `dev` columns
+//! are summarized into paper-vs-simulator deviation statistics. The
+//! tcserved `/v1/run` endpoint and `repro all --out DIR`'s
+//! `summary.json` are both built on this path.
+
+use crate::util::Json;
+
+/// Is this line a table separator (`----+-----+----`)?
+fn is_separator(line: &str) -> bool {
+    !line.is_empty() && line.chars().all(|c| c == '-' || c == '+') && line.contains('-')
+}
+
+fn split_cells(line: &str) -> Vec<String> {
+    line.split('|').map(|c| c.trim().to_string()).collect()
+}
+
+/// Extract every ASCII table of a rendered report as
+/// `{title, headers, rows}` objects (rows are arrays of cell strings).
+pub fn parse_tables(text: &str) -> Vec<Json> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::new();
+    let mut last_title = "";
+    let mut i = 0;
+    while i < lines.len() {
+        if let Some(t) = lines[i].strip_prefix("## ") {
+            last_title = t.trim();
+            i += 1;
+            continue;
+        }
+        if is_separator(lines[i]) && i > 0 && lines[i - 1].contains('|') {
+            let headers: Vec<Json> =
+                split_cells(lines[i - 1]).into_iter().map(Json::Str).collect();
+            let mut rows = Vec::new();
+            let mut j = i + 1;
+            while j < lines.len() && lines[j].contains('|') && !is_separator(lines[j]) {
+                rows.push(Json::Arr(split_cells(lines[j]).into_iter().map(Json::Str).collect()));
+                j += 1;
+            }
+            out.push(Json::obj(vec![
+                ("title", Json::str(last_title)),
+                ("headers", Json::Arr(headers)),
+                ("rows", Json::Arr(rows)),
+            ]));
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+fn csv_cell(s: &str) -> Json {
+    let s = s.trim();
+    if s.is_empty() {
+        return Json::Null;
+    }
+    match s.parse::<f64>() {
+        // keep "inf" (what render_figure_csv emits for overflow) as a
+        // string: bare infinity is not valid JSON
+        Ok(v) if v.is_finite() => Json::Num(v),
+        _ => Json::str(s),
+    }
+}
+
+/// Extract every `csv:` figure block as `{columns, rows}` (numeric cells
+/// parsed, empty cells `null`, non-finite kept as strings).
+pub fn parse_csv_blocks(text: &str) -> Vec<Json> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].trim() != "csv:" {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if j < lines.len() && lines[j].contains(',') {
+            let columns: Vec<Json> =
+                lines[j].split(',').map(|s| Json::str(s.trim())).collect();
+            j += 1;
+            let mut rows = Vec::new();
+            while j < lines.len() && lines[j].contains(',') {
+                rows.push(Json::Arr(lines[j].split(',').map(csv_cell).collect()));
+                j += 1;
+            }
+            out.push(Json::obj(vec![
+                ("columns", Json::Arr(columns)),
+                ("rows", Json::Arr(rows)),
+            ]));
+        }
+        i = j.max(i + 1);
+    }
+    out
+}
+
+/// Paper-vs-simulator deviation summary of one report, aggregated over
+/// every `±x.y%` cell its tables contain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviationStats {
+    /// Number of deviation cells found.
+    pub cells: usize,
+    pub mean_abs_pct: f64,
+    pub max_abs_pct: f64,
+}
+
+impl DeviationStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cells", Json::num(self.cells as f64)),
+            ("mean_abs_pct", Json::num(self.mean_abs_pct)),
+            ("max_abs_pct", Json::num(self.max_abs_pct)),
+        ])
+    }
+}
+
+/// Scan a rendered report for deviation cells (`+1.2%` / `-0.3%`, the
+/// format [`super::deviation`] emits) and summarize them. `None` when the
+/// report has no deviation column (pure figures, numeric tables).
+pub fn deviation_stats(text: &str) -> Option<DeviationStats> {
+    let mut devs: Vec<f64> = Vec::new();
+    for table in parse_tables(text) {
+        let Some(rows) = table.get("rows").and_then(Json::as_arr) else { continue };
+        for row in rows {
+            let Some(cells) = row.as_arr() else { continue };
+            for cell in cells {
+                let Some(s) = cell.as_str() else { continue };
+                if let Some(stripped) = s.strip_suffix('%') {
+                    if let Ok(v) = stripped.trim().trim_start_matches('+').parse::<f64>() {
+                        devs.push(v.abs());
+                    }
+                }
+            }
+        }
+    }
+    if devs.is_empty() {
+        return None;
+    }
+    let mean = devs.iter().sum::<f64>() / devs.len() as f64;
+    let max = devs.iter().copied().fold(0.0, f64::max);
+    Some(DeviationStats { cells: devs.len(), mean_abs_pct: mean, max_abs_pct: max })
+}
+
+/// Full machine-readable rendering of one experiment report.
+pub fn report_to_json(id: &str, description: &str, text: &str) -> Json {
+    let title = text
+        .lines()
+        .find_map(|l| l.strip_prefix("## "))
+        .unwrap_or(description)
+        .trim();
+    let deviation = match deviation_stats(text) {
+        Some(d) => d.to_json(),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("description", Json::str(description)),
+        ("title", Json::str(title)),
+        ("tables", Json::Arr(parse_tables(text))),
+        ("figures", Json::Arr(parse_csv_blocks(text))),
+        ("deviation", deviation),
+        ("text", Json::str(text)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::{deviation, render_figure_csv, Table};
+
+    fn sample_table() -> String {
+        let mut t = Table::new("Table X: demo", &["instr", "paper", "sim", "dev"]);
+        t.row(vec!["a".into(), "100.0".into(), "110.0".into(), deviation(110.0, 100.0)]);
+        t.row(vec!["b".into(), "50.0".into(), "49.0".into(), deviation(49.0, 50.0)]);
+        t.render()
+    }
+
+    #[test]
+    fn tables_round_trip_through_json() {
+        let parsed = parse_tables(&sample_table());
+        assert_eq!(parsed.len(), 1);
+        let t = &parsed[0];
+        assert_eq!(t.get_str("title"), Some("Table X: demo"));
+        let headers = t.get("headers").unwrap().as_arr().unwrap();
+        assert_eq!(headers.len(), 4);
+        assert_eq!(headers[3].as_str(), Some("dev"));
+        let rows = t.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].as_arr().unwrap()[3].as_str(), Some("+10.0%"));
+    }
+
+    #[test]
+    fn csv_blocks_parse_numbers_and_inf() {
+        let csv = render_figure_csv(
+            "ilp",
+            &[1.0, 2.0],
+            &[("4w", vec![10.0, 20.0]), ("8w", vec![30.0, f64::INFINITY])],
+        );
+        let text = format!("## Fig\n\ncsv:\n{csv}\nafter\n");
+        let blocks = parse_csv_blocks(&text);
+        assert_eq!(blocks.len(), 1);
+        let rows = blocks[0].get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].as_arr().unwrap()[1].as_f64(), Some(20.0));
+        assert_eq!(rows[1].as_arr().unwrap()[2].as_str(), Some("inf"));
+    }
+
+    #[test]
+    fn deviation_stats_aggregate() {
+        let stats = deviation_stats(&sample_table()).unwrap();
+        assert_eq!(stats.cells, 2);
+        assert!((stats.mean_abs_pct - 6.0).abs() < 1e-9, "{stats:?}");
+        assert!((stats.max_abs_pct - 10.0).abs() < 1e-9, "{stats:?}");
+        assert!(deviation_stats("no tables here\n").is_none());
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let j = report_to_json("tX", "demo table", &sample_table());
+        assert_eq!(j.get_str("id"), Some("tX"));
+        assert_eq!(j.get_str("title"), Some("Table X: demo"));
+        assert_eq!(j.get("tables").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.get("deviation").unwrap().get_f64("max_abs_pct").is_some());
+        // and it serializes to parseable JSON
+        let s = j.to_string();
+        assert!(crate::util::Json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn real_experiment_reports_structure() {
+        // a sim experiment with a dev column and a figure with csv
+        let mut b = crate::coordinator::Backend::Native;
+        let t10 = crate::coordinator::run_experiment("t10", &mut b).unwrap();
+        let j = report_to_json("t10", "ld.shared bank-conflict latency", &t10);
+        assert!(!j.get("tables").unwrap().as_arr().unwrap().is_empty());
+        assert!(j.get("deviation").unwrap().get_f64("mean_abs_pct").is_some());
+
+        let fig7 = crate::coordinator::run_experiment("fig7", &mut b).unwrap();
+        let j = report_to_json("fig7", "mma.m16n8k8 sweep on A100", &fig7);
+        assert!(!j.get("figures").unwrap().as_arr().unwrap().is_empty());
+    }
+}

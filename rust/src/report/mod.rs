@@ -1,10 +1,13 @@
 //! Report rendering: ASCII tables in the paper's layout, figure series
-//! (CSV + sparkline), and the paper's published values for side-by-side
-//! comparison in every regenerated table.
+//! (CSV + sparkline), the paper's published values for side-by-side
+//! comparison in every regenerated table, and a machine-readable JSON
+//! rendering of every report ([`json`]).
 
 pub mod expected;
+pub mod json;
 mod render;
 
+pub use json::{deviation_stats, report_to_json, DeviationStats};
 pub use render::{render_figure_csv, render_sparkline, Table};
 
 /// Relative deviation string for paper-vs-measured columns.

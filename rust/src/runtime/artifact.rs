@@ -82,6 +82,15 @@ impl ArtifactStore {
         Self::open(dir)
     }
 
+    /// Cheap availability probe: does the default manifest exist? Used
+    /// on request hot paths where opening the store (and creating a
+    /// PJRT client) per request would be wasteful.
+    pub fn available() -> bool {
+        let dir =
+            std::env::var("TCBENCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Path::new(&dir).join("manifest.json").is_file()
+    }
+
     pub fn manifest(&self) -> &HashMap<String, ManifestEntry> {
         &self.manifest
     }

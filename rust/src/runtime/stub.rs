@@ -1,0 +1,105 @@
+//! Offline stand-in for the PJRT artifact runtime (built when the
+//! `pjrt` feature is off, i.e. whenever the `xla` crate is unavailable).
+//!
+//! [`ArtifactStore::open`] always fails, so [`ArtifactStore`] — and with
+//! it [`ArtifactExec`] — can never be constructed: the store holds an
+//! uninhabited field and every method body is an empty `match` on it.
+//! Callers keep type-checking against the same API as the real runtime,
+//! and at run time they all take their native-backend fallback paths.
+
+use std::collections::HashMap;
+use std::convert::Infallible;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::numerics::{MmaExec, NumericCfg};
+
+/// One entry of `artifacts/manifest.json` (API parity with the real
+/// runtime; never constructed in this build).
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub ab: String,
+    pub cd: String,
+    pub acc_rnd: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+}
+
+/// Uninhabited stand-in for the PJRT artifact store.
+pub struct ArtifactStore {
+    never: Infallible,
+}
+
+impl ArtifactStore {
+    /// Always fails in this build: the PJRT runtime needs the `xla`
+    /// crate, which is unavailable offline.
+    pub fn open(_dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "PJRT runtime not compiled in (the `xla` crate is unavailable offline); \
+             build with `--features pjrt` after vendoring it, or use the native backend"
+        )
+    }
+
+    /// Same default lookup as the real runtime; always fails here.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("TCBENCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    /// Cheap availability probe (no I/O beyond a stat in the real
+    /// runtime; constant `false` here) — used on request hot paths
+    /// where opening the store per request would be wasteful.
+    pub fn available() -> bool {
+        false
+    }
+
+    pub fn manifest(&self) -> &HashMap<String, ManifestEntry> {
+        match self.never {}
+    }
+
+    pub fn entry(&self, _name: &str) -> Result<&ManifestEntry> {
+        match self.never {}
+    }
+
+    pub fn run_tcmma(&mut self, _name: &str, _a: &[f32], _b: &[f32], _c: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}
+
+/// Uninhabited stand-in for the PJRT-backed [`MmaExec`] executor.
+pub struct ArtifactExec<'s> {
+    store: &'s mut ArtifactStore,
+}
+
+impl<'s> ArtifactExec<'s> {
+    pub fn new(store: &'s mut ArtifactStore, _cfg: NumericCfg) -> Result<Self> {
+        match store.never {}
+    }
+}
+
+impl MmaExec for ArtifactExec<'_> {
+    fn cfg(&self) -> NumericCfg {
+        match self.store.never {}
+    }
+
+    fn run(&mut self, _batch: usize, _a: &[f32], _b: &[f32], _c: &[f32]) -> Vec<f32> {
+        match self.store.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_fails_with_actionable_message() {
+        let err = ArtifactStore::open("artifacts").unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+        assert!(ArtifactStore::open_default().is_err());
+    }
+}

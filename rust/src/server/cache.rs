@@ -1,0 +1,388 @@
+//! Content-addressed result cache with single-flight request coalescing.
+//!
+//! Every cacheable unit of work (an experiment run, an ad-hoc sweep) is
+//! identified by a canonical coordinate string — crate version,
+//! experiment id, backend name, device, instruction — hashed (FNV-1a 64)
+//! into its content address. Lookups go memory → disk → compute:
+//!
+//! * **memory**: a mutex-guarded LRU map (capacity-bounded, O(n) evict —
+//!   the key space is tiny: 19 experiments x backends + sweeps);
+//! * **disk**: optional write-through store under `results/cache/`,
+//!   one `<hash>.json` per entry, surviving restarts;
+//! * **compute**: exactly one thread runs the closure per key at a time
+//!   — concurrent requesters of the same key block on a condvar and
+//!   receive the leader's result (single-flight dedup), so a stampede
+//!   of identical requests costs one simulation.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// 64-bit FNV-1a — the content-address hash (stable, dependency-free).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The content address of one cacheable computation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Human-readable canonical coordinates (stable field order).
+    pub canonical: String,
+    /// Hex content address: `fnv1a(canonical)`.
+    pub hash: String,
+}
+
+/// Build the canonical key for (experiment, backend, device, instruction)
+/// under this crate version. Experiments that bind their own devices
+/// pass `"-"` for the free coordinates.
+pub fn cache_key(experiment: &str, backend: &str, device: &str, instr: &str) -> CacheKey {
+    let canonical = format!(
+        "v={}|exp={}|backend={}|device={}|instr={}",
+        env!("CARGO_PKG_VERSION"),
+        experiment,
+        backend,
+        device,
+        instr
+    );
+    let hash = format!("{:016x}", fnv1a(canonical.as_bytes()));
+    CacheKey { canonical, hash }
+}
+
+/// Where a served result came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Origin {
+    /// In-memory LRU hit.
+    Memory,
+    /// On-disk store hit (promoted into memory).
+    Disk,
+    /// This request ran the computation.
+    Computed,
+    /// Another in-flight request computed it; this one waited.
+    Coalesced,
+}
+
+impl Origin {
+    pub fn name(self) -> &'static str {
+        match self {
+            Origin::Memory => "memory",
+            Origin::Disk => "disk",
+            Origin::Computed => "computed",
+            Origin::Coalesced => "coalesced",
+        }
+    }
+}
+
+struct Entry {
+    value: String,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    tick: u64,
+    evictions: u64,
+}
+
+struct Flight {
+    result: Mutex<Option<Result<String, String>>>,
+    done: Condvar,
+}
+
+/// Cache occupancy counters for `/v1/metrics`.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub capacity: usize,
+    pub evictions: u64,
+}
+
+pub struct ResultCache {
+    capacity: usize,
+    disk_dir: Option<PathBuf>,
+    inner: Mutex<Inner>,
+    inflight: Mutex<HashMap<String, Arc<Flight>>>,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize, disk_dir: Option<PathBuf>) -> ResultCache {
+        ResultCache {
+            capacity: capacity.max(1),
+            disk_dir,
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0, evictions: 0 }),
+            inflight: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats { entries: inner.map.len(), capacity: self.capacity, evictions: inner.evictions }
+    }
+
+    /// Is the key already materialized (memory or disk)?
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        if self.inner.lock().unwrap().map.contains_key(&key.hash) {
+            return true;
+        }
+        self.disk_path(key).map(|p| p.is_file()).unwrap_or(false)
+    }
+
+    fn disk_path(&self, key: &CacheKey) -> Option<PathBuf> {
+        self.disk_dir.as_ref().map(|d| d.join(format!("{}.json", key.hash)))
+    }
+
+    fn lookup_memory(&self, key: &CacheKey) -> Option<String> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry = inner.map.get_mut(&key.hash)?;
+        entry.last_used = tick;
+        Some(entry.value.clone())
+    }
+
+    fn insert_memory(&self, key: &CacheKey, value: String) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(key.hash.clone(), Entry { value, last_used: tick });
+        while inner.map.len() > self.capacity {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map");
+            inner.map.remove(&oldest);
+            inner.evictions += 1;
+        }
+    }
+
+    fn lookup_disk(&self, key: &CacheKey) -> Option<String> {
+        let value = std::fs::read_to_string(self.disk_path(key)?).ok()?;
+        // Every cached value is a JSON document; a truncated or corrupt
+        // file (crash mid-write, concurrent writers) must not be served
+        // — and must not shadow recomputation — forever.
+        if crate::util::Json::parse(&value).is_err() {
+            return None;
+        }
+        Some(value)
+    }
+
+    fn write_disk(&self, key: &CacheKey, value: &str) {
+        let Some(path) = self.disk_path(key) else { return };
+        if let Some(parent) = path.parent() {
+            if std::fs::create_dir_all(parent).is_err() {
+                return;
+            }
+        }
+        // Best-effort (the disk store is an optimization, not a ledger),
+        // but atomic: write a temp file and rename it into place so a
+        // crash mid-write never leaves a truncated entry.
+        let tmp = path.with_extension("tmp");
+        if std::fs::write(&tmp, value).is_ok() {
+            let _ = std::fs::rename(&tmp, &path);
+        }
+    }
+
+    /// Serve `key` from cache, or run `compute` — at most once across
+    /// all concurrent callers of the same key (single-flight).
+    ///
+    /// Invariant: `compute` must not panic (callers wrap fallible work
+    /// in `catch_unwind` and return `Err`); a panicking closure would
+    /// strand coalesced waiters on the condvar.
+    pub fn get_or_compute<F>(&self, key: &CacheKey, compute: F) -> (Result<String, String>, Origin)
+    where
+        F: FnOnce() -> Result<String, String>,
+    {
+        if let Some(v) = self.lookup_memory(key) {
+            return (Ok(v), Origin::Memory);
+        }
+        if let Some(v) = self.lookup_disk(key) {
+            self.insert_memory(key, v.clone());
+            return (Ok(v), Origin::Disk);
+        }
+
+        let (flight, leader) = {
+            let mut inflight = self.inflight.lock().unwrap();
+            match inflight.get(&key.hash) {
+                Some(f) => (Arc::clone(f), false),
+                None => {
+                    let f = Arc::new(Flight {
+                        result: Mutex::new(None),
+                        done: Condvar::new(),
+                    });
+                    inflight.insert(key.hash.clone(), Arc::clone(&f));
+                    (f, true)
+                }
+            }
+        };
+
+        if !leader {
+            let mut guard = flight.result.lock().unwrap();
+            while guard.is_none() {
+                guard = flight.done.wait(guard).unwrap();
+            }
+            return (guard.clone().expect("flight resolved"), Origin::Coalesced);
+        }
+
+        // Leader path. Re-check memory first: a previous leader may have
+        // finished between our miss and our in-flight registration.
+        let (result, origin) = match self.lookup_memory(key) {
+            Some(v) => (Ok(v), Origin::Memory),
+            None => {
+                let result = compute();
+                if let Ok(v) = &result {
+                    self.insert_memory(key, v.clone());
+                    self.write_disk(key, v);
+                }
+                (result, Origin::Computed)
+            }
+        };
+
+        *flight.result.lock().unwrap() = Some(result.clone());
+        flight.done.notify_all();
+        self.inflight.lock().unwrap().remove(&key.hash);
+        (result, origin)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn key(tag: &str) -> CacheKey {
+        cache_key(tag, "native", "-", "-")
+    }
+
+    #[test]
+    fn content_address_is_stable_and_distinct() {
+        let a = cache_key("t3", "native", "-", "-");
+        let b = cache_key("t3", "native", "-", "-");
+        let c = cache_key("t3", "auto", "-", "-");
+        assert_eq!(a, b);
+        assert_ne!(a.hash, c.hash);
+        assert_eq!(a.hash.len(), 16);
+        assert!(a.canonical.contains("exp=t3"));
+    }
+
+    #[test]
+    fn compute_once_then_memory_hits() {
+        let cache = ResultCache::new(8, None);
+        let calls = AtomicUsize::new(0);
+        let k = key("a");
+        let (r1, o1) = cache.get_or_compute(&k, || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Ok("value".to_string())
+        });
+        assert_eq!(r1.unwrap(), "value");
+        assert_eq!(o1, Origin::Computed);
+        let (r2, o2) = cache.get_or_compute(&k, || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Ok("other".to_string())
+        });
+        assert_eq!(r2.unwrap(), "value");
+        assert_eq!(o2, Origin::Memory);
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        assert!(cache.contains(&k));
+        assert!(!cache.contains(&key("b")));
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache = ResultCache::new(8, None);
+        let k = key("err");
+        let (r, o) = cache.get_or_compute(&k, || Err("boom".to_string()));
+        assert_eq!(r.unwrap_err(), "boom");
+        assert_eq!(o, Origin::Computed);
+        let (r, o) = cache.get_or_compute(&k, || Ok("recovered".to_string()));
+        assert_eq!(r.unwrap(), "recovered");
+        assert_eq!(o, Origin::Computed);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let cache = ResultCache::new(2, None);
+        for tag in ["a", "b"] {
+            cache.get_or_compute(&key(tag), || Ok(tag.to_string()));
+        }
+        // touch "a" so "b" is the LRU victim
+        assert_eq!(cache.get_or_compute(&key("a"), || Ok("x".into())).1, Origin::Memory);
+        cache.get_or_compute(&key("c"), || Ok("c".to_string()));
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 2);
+        assert_eq!(stats.evictions, 1);
+        assert!(cache.contains(&key("a")));
+        assert!(!cache.contains(&key("b")));
+        assert!(cache.contains(&key("c")));
+    }
+
+    #[test]
+    fn single_flight_coalesces_concurrent_requests() {
+        let cache = ResultCache::new(8, None);
+        let calls = AtomicUsize::new(0);
+        let k = key("slow");
+        let origins: Vec<Origin> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let (r, o) = cache.get_or_compute(&k, || {
+                            calls.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_millis(50));
+                            Ok("slow result".to_string())
+                        });
+                        assert_eq!(r.unwrap(), "slow result");
+                        o
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "exactly one computation");
+        assert_eq!(origins.iter().filter(|o| **o == Origin::Computed).count(), 1);
+        assert!(origins
+            .iter()
+            .all(|o| matches!(o, Origin::Computed | Origin::Coalesced | Origin::Memory)));
+    }
+
+    #[test]
+    fn disk_store_survives_a_fresh_cache() {
+        let dir = std::env::temp_dir().join(format!("tcbench_cache_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let k = key("persist");
+        let value = r#"{"report":"persisted"}"#;
+        {
+            let cache = ResultCache::new(8, Some(dir.clone()));
+            cache.get_or_compute(&k, || Ok(value.to_string()));
+        }
+        let fresh = ResultCache::new(8, Some(dir.clone()));
+        assert!(fresh.contains(&k));
+        let (r, o) = fresh.get_or_compute(&k, || Err("should not recompute".to_string()));
+        assert_eq!(r.unwrap(), value);
+        assert_eq!(o, Origin::Disk);
+        // now promoted to memory
+        let (_, o) = fresh.get_or_compute(&k, || Err("no".to_string()));
+        assert_eq!(o, Origin::Memory);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_disk_entries_are_ignored_and_recomputed() {
+        let dir =
+            std::env::temp_dir().join(format!("tcbench_cache_corrupt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = key("corrupt");
+        // simulate a crash mid-write: truncated, unparseable JSON
+        std::fs::write(dir.join(format!("{}.json", k.hash)), "{\"trunc").unwrap();
+        let cache = ResultCache::new(8, Some(dir.clone()));
+        let (r, o) = cache.get_or_compute(&k, || Ok("{\"ok\":true}".to_string()));
+        assert_eq!(r.unwrap(), "{\"ok\":true}");
+        assert_eq!(o, Origin::Computed, "corrupt entry must not be served");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

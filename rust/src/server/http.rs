@@ -1,0 +1,204 @@
+//! Minimal HTTP/1.1 request parsing and response writing over
+//! `std::net::TcpStream` — no external crates, matching the repo's
+//! offline-substrate convention (`util::json`, `util::bench`).
+//!
+//! Scope: exactly what tcserved needs. GET-only request line + headers
+//! (header values are not interpreted), percent-decoded query strings,
+//! `Connection: close` responses with an explicit `Content-Length`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::util::Json;
+
+/// Longest accepted request/header line, in bytes.
+const MAX_LINE: usize = 16 * 1024;
+/// Most accepted header lines per request.
+const MAX_HEADERS: usize = 128;
+/// Hard cap on the bytes read per request head. `read_line` is only
+/// length-checked after it returns, so the reader itself must be
+/// bounded or a client streaming an endless line would grow the buffer
+/// without limit.
+const MAX_REQUEST_BYTES: u64 = 64 * 1024;
+
+/// A parsed request: method, decoded path, decoded query parameters.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Vec<(String, String)>,
+}
+
+impl Request {
+    /// Last value of a query parameter (so `?a=1&a=2` resolves to `2`).
+    pub fn param(&self, key: &str) -> Option<&str> {
+        self.query.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Decode `%XX` escapes and `+` (as space). Malformed escapes pass
+/// through literally rather than failing the whole request.
+pub fn percent_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'%' if i + 2 < b.len() => {
+                let hex = std::str::from_utf8(&b[i + 1..i + 3]).unwrap_or("!");
+                match u8::from_str_radix(hex, 16) {
+                    Ok(v) => {
+                        out.push(v);
+                        i += 3;
+                    }
+                    Err(_) => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Read and parse one request from the stream. Header fields are read to
+/// the blank line but not interpreted (tcserved is GET-only and
+/// closes the connection after each response).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
+    use std::io::Read as _;
+    let mut reader = BufReader::new(stream.take(MAX_REQUEST_BYTES));
+
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| format!("reading request line: {e}"))?;
+    if line.is_empty() {
+        return Err("empty request (connection closed)".to_string());
+    }
+    if line.len() > MAX_LINE {
+        return Err("request line too long".to_string());
+    }
+
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let target = parts.next().ok_or("missing request target")?.to_string();
+    let version = parts.next().ok_or("missing HTTP version")?;
+    if !version.starts_with("HTTP/") {
+        return Err(format!("bad HTTP version {version:?}"));
+    }
+
+    for _ in 0..MAX_HEADERS {
+        let mut header = String::new();
+        let n = reader.read_line(&mut header).map_err(|e| format!("reading header: {e}"))?;
+        if n == 0 || header == "\r\n" || header == "\n" {
+            break;
+        }
+        if header.len() > MAX_LINE {
+            return Err("header line too long".to_string());
+        }
+    }
+
+    let (path_raw, query_raw) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target.as_str(), None),
+    };
+    let mut query = Vec::new();
+    if let Some(q) = query_raw {
+        for pair in q.split('&') {
+            if pair.is_empty() {
+                continue;
+            }
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            query.push((percent_decode(k), percent_decode(v)));
+        }
+    }
+    Ok(Request { method, path: percent_decode(path_raw), query })
+}
+
+/// A response ready to serialize.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response { status, content_type: "application/json", body: body.to_string() }
+    }
+
+    /// A JSON error body: `{"error": ..., "status": ...}`.
+    pub fn error(status: u16, message: impl Into<String>) -> Response {
+        Response::json(
+            status,
+            &Json::obj(vec![
+                ("error", Json::Str(message.into())),
+                ("status", Json::num(status as f64)),
+            ]),
+        )
+    }
+
+    pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        write!(
+            stream,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            status_text(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        stream.write_all(self.body.as_bytes())?;
+        stream.flush()
+    }
+}
+
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("bf16+f32+m16n8k16"), "bf16 f32 m16n8k16");
+        assert_eq!(percent_decode("bf16%20f32"), "bf16 f32");
+        assert_eq!(percent_decode("a%2Cb"), "a,b");
+        assert_eq!(percent_decode("100%"), "100%"); // malformed escape passes through
+        assert_eq!(percent_decode("%zz"), "%zz");
+        assert_eq!(percent_decode(""), "");
+    }
+
+    #[test]
+    fn error_bodies_are_json() {
+        let r = Response::error(404, "nope");
+        assert_eq!(r.status, 404);
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get_str("error"), Some("nope"));
+        assert_eq!(j.get_u64("status"), Some(404));
+    }
+
+    #[test]
+    fn status_texts() {
+        assert_eq!(status_text(200), "OK");
+        assert_eq!(status_text(404), "Not Found");
+        assert_eq!(status_text(599), "Unknown");
+    }
+}

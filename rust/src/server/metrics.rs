@@ -1,0 +1,189 @@
+//! tcserved observability: request counters, cache hit rates and
+//! per-experiment compute cost, exported as JSON at `/v1/metrics`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::Json;
+
+use super::cache::CacheStats;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ComputeStat {
+    pub count: u64,
+    pub total_ms: f64,
+}
+
+pub struct Metrics {
+    started: Instant,
+    requests_total: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_coalesced: AtomicU64,
+    by_endpoint: Mutex<BTreeMap<&'static str, u64>>,
+    by_status: Mutex<BTreeMap<u16, u64>>,
+    computes: Mutex<BTreeMap<String, ComputeStat>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            requests_total: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_coalesced: AtomicU64::new(0),
+            by_endpoint: Mutex::new(BTreeMap::new()),
+            by_status: Mutex::new(BTreeMap::new()),
+            computes: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn record_request(&self, endpoint: &'static str) {
+        self.requests_total.fetch_add(1, Ordering::Relaxed);
+        *self.by_endpoint.lock().unwrap().entry(endpoint).or_insert(0) += 1;
+    }
+
+    pub fn record_status(&self, status: u16) {
+        *self.by_status.lock().unwrap().entry(status).or_insert(0) += 1;
+    }
+
+    pub fn record_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_coalesced(&self) {
+        self.cache_coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One completed computation of `id`, taking `ms` milliseconds.
+    pub fn record_compute(&self, id: &str, ms: f64) {
+        let mut computes = self.computes.lock().unwrap();
+        let stat = computes.entry(id.to_string()).or_default();
+        stat.count += 1;
+        stat.total_ms += ms;
+    }
+
+    pub fn requests_total(&self) -> u64 {
+        self.requests_total.load(Ordering::Relaxed)
+    }
+
+    pub fn to_json(&self, cache: CacheStats) -> Json {
+        let hits = self.cache_hits.load(Ordering::Relaxed);
+        let misses = self.cache_misses.load(Ordering::Relaxed);
+        let coalesced = self.cache_coalesced.load(Ordering::Relaxed);
+        let looked_up = hits + misses + coalesced;
+        let hit_rate = if looked_up == 0 {
+            0.0
+        } else {
+            // coalesced requests were served without recomputation too
+            (hits + coalesced) as f64 / looked_up as f64
+        };
+
+        let by_endpoint = Json::Obj(
+            self.by_endpoint
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let by_status = Json::Obj(
+            self.by_status
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let experiments = Json::Obj(
+            self.computes
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(id, s)| {
+                    (
+                        id.clone(),
+                        Json::obj(vec![
+                            ("computes", Json::num(s.count as f64)),
+                            ("total_ms", Json::num(s.total_ms)),
+                            (
+                                "mean_ms",
+                                Json::num(if s.count == 0 { 0.0 } else { s.total_ms / s.count as f64 }),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+
+        Json::obj(vec![
+            ("uptime_ms", Json::num(self.started.elapsed().as_secs_f64() * 1e3)),
+            ("requests_total", Json::num(self.requests_total() as f64)),
+            ("by_endpoint", by_endpoint),
+            ("by_status", by_status),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(hits as f64)),
+                    ("misses", Json::num(misses as f64)),
+                    ("coalesced", Json::num(coalesced as f64)),
+                    ("hit_rate", Json::num(hit_rate)),
+                    ("entries", Json::num(cache.entries as f64)),
+                    ("capacity", Json::num(cache.capacity as f64)),
+                    ("evictions", Json::num(cache.evictions as f64)),
+                ]),
+            ),
+            ("experiments", experiments),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_aggregate_into_json() {
+        let m = Metrics::new();
+        m.record_request("run");
+        m.record_request("run");
+        m.record_request("metrics");
+        m.record_status(200);
+        m.record_status(200);
+        m.record_status(404);
+        m.record_miss();
+        m.record_hit();
+        m.record_hit();
+        m.record_coalesced();
+        m.record_compute("t3", 10.0);
+        m.record_compute("t3", 20.0);
+
+        let j = m.to_json(CacheStats { entries: 1, capacity: 8, evictions: 0 });
+        assert_eq!(j.get_u64("requests_total"), Some(3));
+        assert_eq!(j.get("by_endpoint").unwrap().get_u64("run"), Some(2));
+        assert_eq!(j.get("by_status").unwrap().get_u64("404"), Some(1));
+        let cache = j.get("cache").unwrap();
+        assert_eq!(cache.get_u64("hits"), Some(2));
+        assert_eq!(cache.get_u64("misses"), Some(1));
+        assert_eq!(cache.get_u64("coalesced"), Some(1));
+        assert!((cache.get_f64("hit_rate").unwrap() - 0.75).abs() < 1e-9);
+        let t3 = j.get("experiments").unwrap().get("t3").unwrap();
+        assert_eq!(t3.get_u64("computes"), Some(2));
+        assert!((t3.get_f64("mean_ms").unwrap() - 15.0).abs() < 1e-9);
+        // the whole document serializes to valid JSON
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

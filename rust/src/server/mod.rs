@@ -1,0 +1,221 @@
+//! tcserved — the embedded campaign-serving subsystem.
+//!
+//! A dependency-light HTTP/1.1 service (std `TcpListener` + the
+//! coordinator's scoped-thread worker pool; no external crates, like
+//! `coordinator::pool`) that turns the one-shot `repro` campaign into a
+//! query layer: expensive simulator/numeric computations run at most
+//! once per content address and are then served from cache.
+//!
+//! ```text
+//! repro serve [--addr 127.0.0.1:8321] [--threads N] [--warm]
+//!
+//! GET /healthz              liveness + registry size
+//! GET /v1/experiments       the 19 registered experiments (+cache state)
+//! GET /v1/devices           calibrated devices
+//! GET /v1/run/<id>          one experiment, cached  [?backend=native|pjrt|auto]
+//! GET /v1/sweep             ad-hoc (ILP, warps) sweep [?device=&instr=&sparse=]
+//! GET /v1/metrics           request counts, cache hit rate, compute times
+//! ```
+//!
+//! Layering: [`http`] parses/writes the wire format, [`router`] maps
+//! requests onto the campaign ([`cache`]-backed, single-flight),
+//! [`metrics`] counts everything, and this module owns sockets and
+//! threads.
+
+pub mod cache;
+pub mod http;
+pub mod metrics;
+pub mod router;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{default_threads, EXPERIMENTS};
+
+use cache::ResultCache;
+use http::Response;
+use router::AppState;
+
+/// tcserved configuration (CLI flags map onto this 1:1).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (used by tests).
+    pub addr: String,
+    /// Connection worker threads (also the `--warm` pool width).
+    pub threads: usize,
+    /// Precompute all registered experiments before accepting traffic.
+    pub warm: bool,
+    /// On-disk cache directory (`None` disables persistence).
+    pub disk_cache: Option<PathBuf>,
+    /// In-memory LRU capacity (entries).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:8321".to_string(),
+            threads: default_threads(),
+            warm: false,
+            disk_cache: Some(PathBuf::from("results/cache")),
+            cache_capacity: 256,
+        }
+    }
+}
+
+/// A running tcserved instance.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    state: Arc<AppState>,
+}
+
+impl Server {
+    /// Bind, optionally warm the cache, and start accepting connections
+    /// on background threads. Returns once the socket is live.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(cfg.addr.as_str())
+            .with_context(|| format!("binding tcserved to {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(AppState::new(ResultCache::new(
+            cfg.cache_capacity,
+            cfg.disk_cache.clone(),
+        )));
+        if cfg.warm {
+            let warmed = router::warm(&state, cfg.threads);
+            eprintln!("[tcserved] warmed {warmed}/{} experiments", EXPERIMENTS.len());
+        }
+
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        for _ in 0..cfg.threads.max(1) {
+            let rx = Arc::clone(&rx);
+            let state = Arc::clone(&state);
+            thread::spawn(move || worker_loop(rx, state));
+        }
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = Arc::clone(&shutdown);
+        let acceptor = thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    if tx.send(stream).is_err() {
+                        break;
+                    }
+                }
+            }
+            // dropping `tx` lets the workers drain and exit
+        });
+
+        Ok(Server { addr, shutdown, acceptor: Some(acceptor), state })
+    }
+
+    /// The bound address (resolves the ephemeral port for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared state (cache + metrics) of this instance.
+    pub fn state(&self) -> &AppState {
+        &self.state
+    }
+
+    /// Block on the acceptor (i.e. forever, for the CLI).
+    pub fn join(mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting connections and join the acceptor. In-flight
+    /// worker requests finish on their own threads.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // unblock the acceptor with a no-op connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>, state: Arc<AppState>) {
+    loop {
+        // Lock only around `recv`: the guard is a temporary of this
+        // statement, so request handling below runs unlocked and
+        // connections are processed concurrently across workers.
+        let stream = rx.lock().unwrap().recv();
+        match stream {
+            Ok(s) => handle_connection(&state, s),
+            Err(_) => break, // acceptor gone
+        }
+    }
+}
+
+fn handle_connection(state: &AppState, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
+    let _ = stream.set_nodelay(true);
+    let response = match http::read_request(&mut stream) {
+        Ok(req) => router::handle(state, &req),
+        // A connection closed without sending anything (port probe,
+        // stop()'s wake-up socket) is not a request — no response to
+        // write, nothing to count.
+        Err(e) if e.starts_with("empty request") => return,
+        Err(e) => {
+            // keep requests_total/by_endpoint reconciled with by_status
+            state.metrics.record_request("malformed");
+            Response::error(400, e)
+        }
+    };
+    state.metrics.record_status(response.status);
+    let _ = response.write_to(&mut stream);
+}
+
+/// CLI entrypoint: start and serve until the process is killed.
+pub fn serve_blocking(cfg: ServerConfig) -> Result<()> {
+    let threads = cfg.threads;
+    let server = Server::start(cfg)?;
+    eprintln!(
+        "[tcserved] listening on http://{} ({threads} workers, {} experiments registered)",
+        server.addr(),
+        EXPERIMENTS.len()
+    );
+    eprintln!(
+        "[tcserved] endpoints: /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep /v1/metrics"
+    );
+    server.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_binds_ephemeral_port_and_stops() {
+        let server = Server::start(ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 2,
+            warm: false,
+            disk_cache: None,
+            cache_capacity: 8,
+        })
+        .unwrap();
+        let addr = server.addr();
+        assert_ne!(addr.port(), 0);
+        assert_eq!(server.state().metrics.requests_total(), 0);
+        // stop() must not hang (it unblocks the acceptor itself)
+        server.stop();
+    }
+}

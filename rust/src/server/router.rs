@@ -1,0 +1,442 @@
+//! tcserved request routing: the `/v1` JSON API over the campaign.
+//!
+//! Heavy endpoints (`/v1/run/<id>`, `/v1/sweep`) go through the
+//! content-addressed [`ResultCache`]: the first request computes via
+//! `coordinator::run_experiment` / `microbench::sweep_mma` (which fan
+//! out over the coordinator's worker pool internally), every identical
+//! later request is a cache hit, and concurrent identical requests are
+//! coalesced into a single computation.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Instant;
+
+use crate::coordinator::{self, run_parallel, BackendKind, ExperimentId, EXPERIMENTS};
+use crate::device;
+use crate::isa::MmaInstr;
+use crate::microbench::{convergence_point, sweep_mma};
+use crate::report;
+use crate::util::Json;
+
+use super::cache::{cache_key, CacheKey, Origin, ResultCache};
+use super::http::{Request, Response};
+use super::metrics::Metrics;
+
+/// Shared state of one tcserved instance.
+pub struct AppState {
+    pub cache: ResultCache,
+    pub metrics: Metrics,
+}
+
+impl AppState {
+    pub fn new(cache: ResultCache) -> AppState {
+        AppState { cache, metrics: Metrics::new() }
+    }
+}
+
+fn endpoint_label(path: &str) -> &'static str {
+    match path {
+        "/healthz" => "healthz",
+        "/v1/experiments" => "experiments",
+        "/v1/devices" => "devices",
+        "/v1/metrics" => "metrics",
+        "/v1/sweep" => "sweep",
+        p if p.starts_with("/v1/run/") => "run",
+        _ => "other",
+    }
+}
+
+/// Dispatch one parsed request.
+pub fn handle(state: &AppState, req: &Request) -> Response {
+    state.metrics.record_request(endpoint_label(&req.path));
+    if req.method != "GET" {
+        return Response::error(405, format!("method {} not allowed; this API is GET-only", req.method));
+    }
+    match req.path.as_str() {
+        "/healthz" => healthz(),
+        "/v1/experiments" => experiments(state),
+        "/v1/devices" => devices(),
+        "/v1/metrics" => metrics(state),
+        "/v1/sweep" => sweep(state, req),
+        p if p.starts_with("/v1/run/") => run(state, req, &p["/v1/run/".len()..]),
+        other => Response::error(404, format!("no route for {other:?}")),
+    }
+}
+
+fn healthz() -> Response {
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("status", Json::str("ok")),
+            ("service", Json::str("tcserved")),
+            ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+            ("experiments", Json::num(EXPERIMENTS.len() as f64)),
+        ]),
+    )
+}
+
+fn experiments(state: &AppState) -> Response {
+    // report cache state for the default-backend key (auto, resolved —
+    // the same key a parameterless /v1/run/<id> uses)
+    let default_backend = BackendKind::Auto.resolve();
+    let list: Vec<Json> = EXPERIMENTS
+        .iter()
+        .map(|e| {
+            let key = cache_key(e.id, default_backend.name(), "-", "-");
+            Json::obj(vec![
+                ("id", Json::str(e.id)),
+                ("description", Json::str(e.description)),
+                ("kind", Json::str(if e.numeric { "numeric" } else { "sim" })),
+                ("cached", Json::Bool(state.cache.contains(&key))),
+                ("url", Json::Str(format!("/v1/run/{}", e.id))),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("count", Json::num(EXPERIMENTS.len() as f64)),
+            ("experiments", Json::Arr(list)),
+        ]),
+    )
+}
+
+fn devices() -> Response {
+    let list: Vec<Json> = device::registry()
+        .into_iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("name", Json::str(d.name)),
+                ("product", Json::str(d.product)),
+                ("arch", Json::Str(format!("{:?}", d.arch))),
+                ("sms", Json::num(d.sms as f64)),
+                ("tensor_cores_per_sm", Json::num(d.arch.tensor_cores_per_sm() as f64)),
+                ("supports_sparse", Json::Bool(d.arch.supports_sparse())),
+                ("supports_ldmatrix", Json::Bool(d.arch.supports_ldmatrix())),
+            ])
+        })
+        .collect();
+    Response::json(200, &Json::obj(vec![("devices", Json::Arr(list))]))
+}
+
+fn metrics(state: &AppState) -> Response {
+    Response::json(200, &state.metrics.to_json(state.cache.stats()))
+}
+
+fn note_origin(state: &AppState, origin: Origin) {
+    match origin {
+        Origin::Memory | Origin::Disk => state.metrics.record_hit(),
+        Origin::Computed => state.metrics.record_miss(),
+        Origin::Coalesced => state.metrics.record_coalesced(),
+    }
+}
+
+/// Wrap a cached payload for the wire: the payload is the content-addressed
+/// value; `cached`/`origin` describe how this particular request got it.
+fn respond_cached(result: Result<String, String>, origin: Origin) -> Response {
+    match result {
+        Ok(body) => {
+            let inner = Json::parse(&body).unwrap_or(Json::Str(body));
+            Response::json(
+                200,
+                &Json::obj(vec![
+                    ("cached", Json::Bool(origin != Origin::Computed)),
+                    ("origin", Json::str(origin.name())),
+                    ("result", inner),
+                ]),
+            )
+        }
+        Err(e) => Response::error(500, e),
+    }
+}
+
+// ------------------------------------------------------------ /v1/run/<id>
+
+fn run(state: &AppState, req: &Request, id: &str) -> Response {
+    let Some(exp) = coordinator::experiment(id) else {
+        return Response::error(
+            404,
+            format!("unknown experiment {id:?}; see /v1/experiments for the registry"),
+        );
+    };
+    // default matches the CLI: `auto` (pjrt when artifacts exist, else
+    // native); the cache key uses whatever it resolves to
+    let kind = match BackendKind::parse(req.param("backend").unwrap_or("auto")) {
+        Ok(k) => k,
+        Err(e) => return Response::error(400, format!("{e:#}")),
+    };
+    let (result, origin) = run_cached(state, exp, kind);
+    respond_cached(result, origin)
+}
+
+/// Cached execution of one experiment — shared by the HTTP handler and
+/// `--warm` precomputation.
+pub fn run_cached(
+    state: &AppState,
+    exp: &'static ExperimentId,
+    kind: BackendKind,
+) -> (Result<String, String>, Origin) {
+    // `auto` is keyed as whatever it resolves to, so its cache entries
+    // are shared with the concrete backend and never go stale when the
+    // environment (artifact availability) changes.
+    let kind = kind.resolve();
+    let key = cache_key(exp.id, kind.name(), "-", "-");
+    let (result, origin) =
+        state.cache.get_or_compute(&key, || compute_experiment(state, exp, kind, &key));
+    note_origin(state, origin);
+    (result, origin)
+}
+
+fn compute_experiment(
+    state: &AppState,
+    exp: &'static ExperimentId,
+    kind: BackendKind,
+    key: &CacheKey,
+) -> Result<String, String> {
+    let t0 = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<(String, String), String> {
+        let mut backend = kind.instantiate().map_err(|e| format!("{e:#}"))?;
+        let backend_name = backend.name().to_string();
+        let text = coordinator::run_experiment(exp.id, &mut backend).map_err(|e| format!("{e:#}"))?;
+        Ok((backend_name, text))
+    }));
+    let (backend_name, text) = match outcome {
+        Ok(Ok(pair)) => pair,
+        Ok(Err(e)) => return Err(e),
+        Err(_) => return Err(format!("experiment {} panicked during computation", exp.id)),
+    };
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    state.metrics.record_compute(exp.id, ms);
+    Ok(Json::obj(vec![
+        ("id", Json::str(exp.id)),
+        ("backend", Json::Str(backend_name)),
+        ("compute_ms", Json::num(ms)),
+        ("key", Json::str(key.hash.clone())),
+        ("report", report::report_to_json(exp.id, exp.description, &text)),
+    ])
+    .to_string())
+}
+
+/// Precompute every registered experiment through the worker pool so
+/// steady-state request latency is cache-bound. Returns how many warmed
+/// successfully.
+pub fn warm(state: &AppState, threads: usize) -> usize {
+    let jobs: Vec<_> = EXPERIMENTS
+        .iter()
+        .map(|e| move || run_cached(state, e, BackendKind::Auto).0.is_ok())
+        .collect();
+    // The table experiments parallelize internally; cap the outer pool
+    // so warm-up does not oversubscribe the CPU quadratically.
+    run_parallel(jobs, threads.min(4)).into_iter().filter(|ok| *ok).count()
+}
+
+// ---------------------------------------------------------------- /v1/sweep
+
+fn sweep(state: &AppState, req: &Request) -> Response {
+    let dev_name = req.param("device").unwrap_or("a100");
+    let Some(dev) = device::by_name(dev_name) else {
+        return Response::error(404, format!("unknown device {dev_name:?}; see /v1/devices"));
+    };
+    let Some(spec) = req.param("instr") else {
+        return Response::error(
+            400,
+            "missing required query parameter `instr` (e.g. ?instr=bf16,f32,m16n8k16)",
+        );
+    };
+    let parsed = match MmaInstr::parse_spec(spec) {
+        Ok(i) => i,
+        Err(e) => return Response::error(400, e),
+    };
+    let instr = match req.param("sparse") {
+        None => parsed,
+        Some("1") | Some("true") | Some("yes") => {
+            MmaInstr::sp(parsed.ab, parsed.cd, parsed.shape)
+        }
+        Some("0") | Some("false") | Some("no") => {
+            MmaInstr::dense(parsed.ab, parsed.cd, parsed.shape)
+        }
+        Some(other) => {
+            return Response::error(400, format!("bad sparse flag {other:?} (true|false)"))
+        }
+    };
+    if !dev.supports(&instr) {
+        return Response::error(400, format!("{instr} is not supported on {}", dev.name));
+    }
+    let key = cache_key("sweep", "sim", dev.name, &instr.ptx());
+    let (result, origin) =
+        state.cache.get_or_compute(&key, || compute_sweep(state, &dev, &instr, &key));
+    note_origin(state, origin);
+    respond_cached(result, origin)
+}
+
+fn compute_sweep(
+    state: &AppState,
+    dev: &device::Device,
+    instr: &MmaInstr,
+    key: &CacheKey,
+) -> Result<String, String> {
+    let t0 = Instant::now();
+    let sweep = match catch_unwind(AssertUnwindSafe(|| sweep_mma(dev, instr))) {
+        Ok(s) => s,
+        Err(_) => return Err(format!("sweep of {instr} on {} panicked", dev.name)),
+    };
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    state.metrics.record_compute("sweep", ms);
+    // one serializer for every measured point (grid cells and the
+    // table-style convergence summaries share the field layout)
+    fn point_json(warps: u32, ilp: u32, latency: f64, throughput: f64) -> Json {
+        Json::obj(vec![
+            ("warps", Json::num(warps as f64)),
+            ("ilp", Json::num(ilp as f64)),
+            ("latency", Json::num(latency)),
+            ("throughput", Json::num(throughput)),
+        ])
+    }
+    let cells: Vec<Json> = sweep
+        .cells
+        .iter()
+        .map(|c| point_json(c.warps, c.ilp, c.latency, c.throughput))
+        .collect();
+    let convergence: Vec<Json> = [4u32, 8]
+        .iter()
+        .map(|&w| {
+            let c = convergence_point(&sweep, w);
+            point_json(c.warps, c.ilp, c.latency, c.throughput)
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("device", Json::str(dev.name)),
+        ("instr", Json::Str(instr.to_string())),
+        ("ptx", Json::Str(instr.ptx())),
+        ("sparse", Json::Bool(instr.sparse)),
+        (
+            "warps_axis",
+            Json::Arr(sweep.warps_axis.iter().map(|&w| Json::num(w as f64)).collect()),
+        ),
+        ("ilp_axis", Json::Arr(sweep.ilp_axis.iter().map(|&i| Json::num(i as f64)).collect())),
+        ("cells", Json::Arr(cells)),
+        ("convergence", Json::Arr(convergence)),
+        ("peak_throughput", Json::num(sweep.peak_throughput())),
+        ("compute_ms", Json::num(ms)),
+        ("key", Json::str(key.hash.clone())),
+    ])
+    .to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> AppState {
+        AppState::new(ResultCache::new(32, None))
+    }
+
+    fn get(state: &AppState, target: &str) -> Response {
+        let (path, query_raw) = match target.split_once('?') {
+            Some((p, q)) => (p, Some(q)),
+            None => (target, None),
+        };
+        let query = query_raw
+            .map(|q| {
+                q.split('&')
+                    .filter(|p| !p.is_empty())
+                    .map(|p| {
+                        let (k, v) = p.split_once('=').unwrap_or((p, ""));
+                        (k.to_string(), v.to_string())
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let req = Request { method: "GET".to_string(), path: path.to_string(), query };
+        handle(state, &req)
+    }
+
+    #[test]
+    fn healthz_and_registry_endpoints() {
+        let s = state();
+        let r = get(&s, "/healthz");
+        assert_eq!(r.status, 200);
+        assert_eq!(Json::parse(&r.body).unwrap().get_str("status"), Some("ok"));
+
+        let r = get(&s, "/v1/experiments");
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get_u64("count"), Some(19));
+        assert_eq!(
+            j.get("experiments").unwrap().as_arr().unwrap()[2].get_str("id"),
+            Some("t3")
+        );
+
+        let r = get(&s, "/v1/devices");
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get("devices").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn unknown_routes_and_methods() {
+        let s = state();
+        assert_eq!(get(&s, "/nope").status, 404);
+        assert_eq!(get(&s, "/v1/run/t99").status, 404);
+        let req = Request { method: "POST".to_string(), path: "/healthz".to_string(), query: vec![] };
+        assert_eq!(handle(&s, &req).status, 405);
+    }
+
+    #[test]
+    fn run_caches_by_content_address() {
+        let s = state();
+        let r1 = get(&s, "/v1/run/t10");
+        assert_eq!(r1.status, 200, "{}", r1.body);
+        let j1 = Json::parse(&r1.body).unwrap();
+        assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
+        assert_eq!(j1.get("result").unwrap().get_str("id"), Some("t10"));
+
+        let r2 = get(&s, "/v1/run/t10");
+        let j2 = Json::parse(&r2.body).unwrap();
+        assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
+        assert_eq!(j2.get_str("origin"), Some("memory"));
+
+        // `auto` resolves to native here (no PJRT offline), so it shares
+        // the native content address and hits the same cache entry
+        let r3 = get(&s, "/v1/run/t10?backend=auto");
+        let j3 = Json::parse(&r3.body).unwrap();
+        assert_eq!(j3.get("cached").and_then(Json::as_bool), Some(true));
+
+        let m = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let t10 = m.get("experiments").unwrap().get("t10").unwrap();
+        assert_eq!(t10.get_u64("computes"), Some(1)); // auto coalesced onto native
+        assert_eq!(m.get("cache").unwrap().get_u64("hits"), Some(2));
+    }
+
+    #[test]
+    fn sweep_validation() {
+        let s = state();
+        assert_eq!(get(&s, "/v1/sweep").status, 400);
+        assert_eq!(get(&s, "/v1/sweep?instr=garbage").status, 400);
+        assert_eq!(get(&s, "/v1/sweep?device=h100&instr=bf16,f32,m16n8k16").status, 404);
+        // Turing has no sparse support
+        assert_eq!(
+            get(&s, "/v1/sweep?device=rtx2080ti&instr=fp16,f32,m16n8k16,sparse").status,
+            400
+        );
+        assert_eq!(
+            get(&s, "/v1/sweep?device=a100&instr=bf16,f32,m16n8k16&sparse=maybe").status,
+            400
+        );
+    }
+
+    #[test]
+    fn sweep_returns_full_grid_and_caches() {
+        let s = state();
+        let r = get(&s, "/v1/sweep?device=a100&instr=bf16,f32,m16n8k16");
+        assert_eq!(r.status, 200, "{}", r.body);
+        let j = Json::parse(&r.body).unwrap();
+        let result = j.get("result").unwrap();
+        assert_eq!(result.get_str("device"), Some("a100"));
+        assert_eq!(result.get("cells").unwrap().as_arr().unwrap().len(), 48);
+        assert_eq!(result.get("convergence").unwrap().as_arr().unwrap().len(), 2);
+        let peak = result.get_f64("peak_throughput").unwrap();
+        assert!((960.0..1030.0).contains(&peak), "peak {peak}");
+
+        let r2 = get(&s, "/v1/sweep?device=a100&instr=bf16,f32,m16n8k16");
+        let j2 = Json::parse(&r2.body).unwrap();
+        assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
+    }
+}

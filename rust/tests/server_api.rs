@@ -1,0 +1,242 @@
+//! Integration: tcserved end-to-end over real sockets — boot the server
+//! on an ephemeral port, drive it with raw HTTP/1.1 GETs, and verify
+//! the content-addressed cache (second request is a hit, concurrent
+//! identical requests compute once) plus the error contract (404/400
+//! with JSON bodies).
+
+use std::io::{Read, Write};
+use std::net::SocketAddr;
+use std::net::TcpStream;
+
+use tcbench::server::{Server, ServerConfig};
+use tcbench::util::Json;
+
+fn start() -> Server {
+    Server::start(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 8,
+        warm: false,
+        disk_cache: None,
+        cache_capacity: 64,
+    })
+    .expect("tcserved start")
+}
+
+/// One raw HTTP exchange; returns (status, body).
+fn request_raw(addr: SocketAddr, request: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(request.as_bytes()).expect("send request");
+    stream.flush().unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read response");
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in {response:?}"))
+        .parse()
+        .expect("numeric status");
+    let body = response.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn get_raw(addr: SocketAddr, target: &str) -> (u16, String) {
+    request_raw(
+        addr,
+        &format!("GET {target} HTTP/1.1\r\nHost: tcserved\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+/// GET and parse the JSON body (every tcserved response is JSON).
+fn get(addr: SocketAddr, target: &str) -> (u16, Json) {
+    let (status, body) = get_raw(addr, target);
+    let json = Json::parse(&body)
+        .unwrap_or_else(|e| panic!("GET {target}: body is not JSON ({e}): {body:?}"));
+    (status, json)
+}
+
+#[test]
+fn healthz_and_registry_endpoints() {
+    let server = start();
+    let addr = server.addr();
+
+    let (status, j) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert_eq!(j.get_str("status"), Some("ok"));
+    assert_eq!(j.get_u64("experiments"), Some(19));
+
+    let (status, j) = get(addr, "/v1/experiments");
+    assert_eq!(status, 200);
+    assert_eq!(j.get_u64("count"), Some(19));
+    let list = j.get("experiments").unwrap().as_arr().unwrap();
+    assert_eq!(list.len(), 19);
+    assert!(list.iter().any(|e| e.get_str("id") == Some("t3")));
+    assert!(list.iter().all(|e| e.get("cached").and_then(Json::as_bool) == Some(false)));
+
+    let (status, j) = get(addr, "/v1/devices");
+    assert_eq!(status, 200);
+    let devices = j.get("devices").unwrap().as_arr().unwrap();
+    assert_eq!(devices.len(), 3);
+    assert!(devices.iter().any(|d| d.get_str("name") == Some("a100")));
+
+    let (status, j) = get(addr, "/v1/nope");
+    assert_eq!(status, 404);
+    assert!(j.get_str("error").is_some());
+
+    server.stop();
+}
+
+#[test]
+fn second_run_request_is_served_from_cache() {
+    let server = start();
+    let addr = server.addr();
+
+    // first hit computes t3 (the paper's dense A100 table)
+    let (status, j1) = get(addr, "/v1/run/t3");
+    assert_eq!(status, 200, "{j1:?}");
+    assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
+    assert_eq!(j1.get_str("origin"), Some("computed"));
+    let r1 = j1.get("result").unwrap();
+    assert_eq!(r1.get_str("id"), Some("t3"));
+    assert_eq!(r1.get_str("backend"), Some("native"));
+    assert!(r1.get_f64("compute_ms").unwrap() > 0.0);
+    let report = r1.get("report").unwrap();
+    assert!(report.get_str("text").unwrap().contains("Table 3"));
+    assert!(!report.get("tables").unwrap().as_arr().unwrap().is_empty());
+
+    // second hit is served from the content-addressed cache
+    let (status, j2) = get(addr, "/v1/run/t3");
+    assert_eq!(status, 200);
+    assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
+    assert_eq!(j2.get_str("origin"), Some("memory"));
+    // identical payload — same content address, no recomputation
+    assert_eq!(j2.get("result").unwrap().to_string(), r1.to_string());
+
+    // /v1/metrics proves it: one computation, one cache hit
+    let (status, m) = get(addr, "/v1/metrics");
+    assert_eq!(status, 200);
+    let t3 = m.get("experiments").unwrap().get("t3").unwrap();
+    assert_eq!(t3.get_u64("computes"), Some(1), "t3 must have computed exactly once: {m}");
+    assert!(m.get("cache").unwrap().get_u64("hits").unwrap() >= 1, "{m}");
+    let cached_flag = get(addr, "/v1/experiments").1;
+    let t3_entry = cached_flag
+        .get("experiments")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|e| e.get_str("id") == Some("t3"))
+        .unwrap()
+        .clone();
+    assert_eq!(t3_entry.get("cached").and_then(Json::as_bool), Some(true));
+
+    server.stop();
+}
+
+#[test]
+fn concurrent_identical_requests_compute_once() {
+    let server = start();
+    let addr = server.addr();
+
+    const CLIENTS: usize = 6;
+    let origins: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                scope.spawn(move || {
+                    let (status, j) = get(addr, "/v1/run/fig7");
+                    assert_eq!(status, 200, "{j:?}");
+                    assert_eq!(j.get("result").unwrap().get_str("id"), Some("fig7"));
+                    j.get_str("origin").unwrap().to_string()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    assert!(origins
+        .iter()
+        .all(|o| matches!(o.as_str(), "computed" | "coalesced" | "memory")), "{origins:?}");
+    assert_eq!(origins.iter().filter(|o| *o == "computed").count(), 1, "{origins:?}");
+
+    // single-flight: six concurrent identical requests, one computation
+    let (_, m) = get(addr, "/v1/metrics");
+    let fig7 = m.get("experiments").unwrap().get("fig7").unwrap();
+    assert_eq!(fig7.get_u64("computes"), Some(1), "single-flight violated: {m}");
+    let cache = m.get("cache").unwrap();
+    let served_without_compute =
+        cache.get_u64("hits").unwrap() + cache.get_u64("coalesced").unwrap();
+    assert_eq!(served_without_compute, (CLIENTS - 1) as u64, "{m}");
+
+    server.stop();
+}
+
+#[test]
+fn unknown_experiment_is_404_with_json_error() {
+    let server = start();
+    let addr = server.addr();
+
+    let (status, j) = get(addr, "/v1/run/t99");
+    assert_eq!(status, 404);
+    let err = j.get_str("error").unwrap();
+    assert!(err.contains("t99"), "{err}");
+    assert_eq!(j.get_u64("status"), Some(404));
+
+    // an unknown experiment never reaches the compute path
+    let (_, m) = get(addr, "/v1/metrics");
+    assert!(m.get("experiments").unwrap().get("t99").is_none());
+
+    server.stop();
+}
+
+#[test]
+fn malformed_requests_are_4xx_with_json_errors() {
+    let server = start();
+    let addr = server.addr();
+
+    // missing required parameter
+    let (status, j) = get(addr, "/v1/sweep");
+    assert_eq!(status, 400);
+    assert!(j.get_str("error").unwrap().contains("instr"));
+
+    // unparseable instruction spec
+    let (status, _) = get(addr, "/v1/sweep?device=a100&instr=garbage");
+    assert_eq!(status, 400);
+
+    // unknown device / unknown backend
+    let (status, _) = get(addr, "/v1/sweep?device=h100&instr=bf16,f32,m16n8k16");
+    assert_eq!(status, 404);
+    let (status, _) = get(addr, "/v1/run/t3?backend=cuda");
+    assert_eq!(status, 400);
+
+    // wrong method
+    let (status, j) =
+        request_raw(addr, "POST /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
+    assert_eq!(status, 405);
+    assert!(Json::parse(&j).is_ok());
+
+    // garbage request line
+    let (status, _) = request_raw(addr, "NONSENSE\r\n\r\n");
+    assert_eq!(status, 400);
+
+    server.stop();
+}
+
+#[test]
+fn sweep_endpoint_end_to_end() {
+    let server = start();
+    let addr = server.addr();
+
+    // '+'-separated spec exercises percent-decoding of query params
+    let (status, j) = get(addr, "/v1/sweep?device=a100&instr=bf16+f32+m16n8k16");
+    assert_eq!(status, 200, "{j:?}");
+    let result = j.get("result").unwrap();
+    assert_eq!(result.get_str("device"), Some("a100"));
+    assert_eq!(result.get("cells").unwrap().as_arr().unwrap().len(), 48);
+    let peak = result.get_f64("peak_throughput").unwrap();
+    assert!((960.0..1030.0).contains(&peak), "peak {peak}");
+
+    // same coordinates -> same content address -> cache hit
+    let (_, j2) = get(addr, "/v1/sweep?device=a100&instr=bf16,f32,m16n8k16");
+    assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
+
+    server.stop();
+}

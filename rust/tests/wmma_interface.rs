@@ -1,0 +1,84 @@
+//! Integration: the legacy `wmma` interface model (paper §2.2, Fig. 2/3).
+//!
+//! The paper's guidance is to program Tensor Cores through the new
+//! `mma` interface: a legacy `wmma.mma.m16n16k16` is compiled into two
+//! new-style `m16n8k16` HMMAs (Fig. 3), so its *compute* throughput can
+//! only match — never beat — the directly-programmed mma sequence,
+//! while its chained issue costs extra single-warp latency (and its
+//! `wmma.load` forfeits `ldmatrix`'s conflict-avoiding layouts, which
+//! this simulator scores separately in §7).
+
+use tcbench::device::a100;
+use tcbench::isa::shapes::M16N8K16;
+use tcbench::isa::{AbType, CdType, MmaInstr, MmaShape};
+use tcbench::microbench::wmma::{
+    measure_wmma, wmma_program, wmma_vs_mma, WmmaShape, WMMA_M16N16K16,
+};
+use tcbench::microbench::{measure_mma, ITERS};
+
+#[test]
+fn m16n16k16_lowers_to_exactly_two_m16n8k16_hmmas() {
+    let parts = WMMA_M16N16K16.compiled_mmas(AbType::Fp16, CdType::Fp32);
+    assert_eq!(parts.len(), 2, "Fig. 3: fragments along n into m16n8 pieces");
+    for p in &parts {
+        assert_eq!(p.shape, M16N8K16);
+        assert_eq!(p.ab, AbType::Fp16);
+        assert_eq!(p.cd, CdType::Fp32);
+        assert!(!p.sparse);
+    }
+    // FMA totals match: 2 x (16*8*16) == 16*16*16
+    let piece_fmas: u64 = parts.iter().map(MmaInstr::fmas).sum();
+    assert_eq!(piece_fmas, WMMA_M16N16K16.fmas());
+    assert_eq!(WMMA_M16N16K16.fmas(), 4096);
+}
+
+#[test]
+fn lowering_scales_with_n_and_keeps_fma_totals() {
+    for n in [8u32, 16, 32] {
+        let shape = WmmaShape { m: 16, n, k: 16 };
+        let parts = shape.compiled_mmas(AbType::Bf16, CdType::Fp32);
+        assert_eq!(parts.len(), (n / 8) as usize);
+        assert_eq!(parts.iter().map(MmaInstr::fmas).sum::<u64>(), shape.fmas());
+    }
+}
+
+#[test]
+fn compiled_program_accounts_every_fma() {
+    let d = a100();
+    for ilp in [1u32, 2, 3] {
+        let p = wmma_program(&d, WMMA_M16N16K16, AbType::Fp16, CdType::Fp32, ilp, ITERS);
+        assert_eq!(
+            p.fmas_per_iteration(),
+            WMMA_M16N16K16.fmas() * ilp as u64,
+            "ilp {ilp}"
+        );
+    }
+}
+
+#[test]
+fn wmma_never_beats_the_direct_mma_sequence() {
+    // §2.2/Fig. 3: at the same FMA volume the wmma interface is at best
+    // equal to the new mma interface — the gap has one sign only.
+    let d = a100();
+    let (wmma, mma) = wmma_vs_mma(&d, AbType::Fp16, CdType::Fp32);
+    assert!(
+        wmma.throughput <= mma.throughput * 1.005,
+        "wmma {wmma:?} must not outperform mma {mma:?}"
+    );
+    // and both are in the saturated regime of Table 3 (~1000 FMA/clk/SM)
+    assert!((900.0..1030.0).contains(&mma.throughput), "{mma:?}");
+    assert!(wmma.throughput > 850.0, "compute path itself is not the loss: {wmma:?}");
+}
+
+#[test]
+fn wmma_costs_extra_single_warp_latency() {
+    // One wmma issues two chained HMMAs: strictly slower per iteration
+    // than a single piece at one warp, but well under 2x (the pieces
+    // are independent of each other).
+    let d = a100();
+    let w = measure_wmma(&d, WMMA_M16N16K16, AbType::Fp16, CdType::Fp32, 1, 1);
+    let piece = MmaInstr::dense(AbType::Fp16, CdType::Fp32, MmaShape::new(16, 8, 16));
+    let m = measure_mma(&d, &piece, 1, 1);
+    assert!(w.latency > m.latency, "wmma {w:?} vs mma {m:?}");
+    assert!(w.latency < 2.0 * m.latency, "wmma {w:?} vs mma {m:?}");
+}
