@@ -4,16 +4,17 @@
 
 use crate::device::{self, Device};
 use crate::gemm::{self, GemmConfig};
-use crate::isa::{LdMatrixNum, LdSharedWidth, MmaInstr};
-use crate::microbench::{
-    completion_latency_ldmatrix, completion_latency_mma, convergence_point, measure_ld_shared,
-    sweep_ldmatrix, sweep_mma, Sweep,
-};
+use crate::isa::shapes::{M16N8K16, M16N8K32, M16N8K8};
+use crate::isa::{AbType, CdType, LdMatrixNum, LdSharedWidth};
+use crate::microbench::Measurement;
 use crate::numerics::{
     chain_errors, profile_op, InitKind, MmaExec, NativeExec, NumericCfg, ProfileOp,
 };
 use crate::report::expected::{self, PaperLdmatrixRow, PaperMmaRow};
-use crate::report::{deviation, render_figure_csv, render_sparkline, Table};
+use crate::report::{
+    deviation, render_figure_csv, render_sparkline, render_sweep_figure, Table,
+};
+use crate::workload::{Plan, SimRunner, Workload};
 
 use super::pool::{default_threads, run_parallel};
 use super::Backend;
@@ -28,28 +29,41 @@ fn fmt1(x: f64) -> String {
 ///
 /// Latency/throughput are measured at the paper's own (#warps, ILP)
 /// points for an apples-to-apples comparison; the sweep-based
-/// convergence detector's pick is shown alongside (`conv`).
+/// convergence detector's pick is shown alongside (`conv`). Each row is
+/// one compiled [`Plan`] — completion probe, two fixed points, and the
+/// sweep with its 4/8-warp convergence summaries — run on the shared
+/// workload path.
 pub fn mma_table(device: &Device, rows: &[PaperMmaRow], title: &str) -> String {
     struct RowData {
         cmpl: f64,
-        at4: crate::microbench::Measurement,
-        at8: crate::microbench::Measurement,
+        at4: Measurement,
+        at8: Measurement,
         conv4: u32,
         conv8: u32,
     }
+    let device_name = device.name;
     let measured: Vec<RowData> = run_parallel(
         rows.iter()
             .map(|r| {
-                let d = device.clone();
                 let r = *r;
                 move || {
-                    let sweep = sweep_mma(&d, &r.instr);
+                    let plan = Plan::new(Workload::from_instr(r.instr))
+                        .device(device_name)
+                        .completion_latency()
+                        .point(4, r.p4.0)
+                        .point(8, r.p8.0)
+                        .sweep()
+                        .compile()
+                        .expect("paper table rows are valid workloads");
+                    // units run serially: the rows themselves are the
+                    // parallel axis here
+                    let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");
                     RowData {
-                        cmpl: completion_latency_mma(&d, &r.instr),
-                        at4: crate::microbench::measure_mma(&d, &r.instr, 4, r.p4.0),
-                        at8: crate::microbench::measure_mma(&d, &r.instr, 8, r.p8.0),
-                        conv4: convergence_point(&sweep, 4).ilp,
-                        conv8: convergence_point(&sweep, 8).ilp,
+                        cmpl: res.completion().expect("completion unit requested"),
+                        at4: *res.point(4, r.p4.0).expect("(4, ILP) point requested"),
+                        at8: *res.point(8, r.p8.0).expect("(8, ILP) point requested"),
+                        conv4: res.convergence(4).expect("4-warp convergence").ilp,
+                        conv8: res.convergence(8).expect("8-warp convergence").ilp,
                     }
                 }
             })
@@ -108,111 +122,70 @@ pub fn run_table7() -> String {
 
 // ------------------------------------------------------- mma/ld figures
 
-/// Render a Fig. 6/7/10/11/15-style grid: latency and throughput versus
-/// ILP, one series per #warps.
-fn render_sweep_figure(title: &str, sweep: &Sweep) -> String {
-    let xs: Vec<f64> = sweep.ilp_axis.iter().map(|&i| i as f64).collect();
-    let mut out = format!("## {title}\n\n");
-    for metric in ["throughput", "latency"] {
-        let series: Vec<(String, Vec<f64>)> = sweep
-            .warps_axis
-            .iter()
-            .map(|&w| {
-                let ys: Vec<f64> = sweep
-                    .ilp_axis
-                    .iter()
-                    .map(|&ilp| {
-                        let c = sweep.cell(w, ilp).unwrap();
-                        if metric == "throughput" {
-                            c.throughput
-                        } else {
-                            c.latency
-                        }
-                    })
-                    .collect();
-                (format!("{w}w"), ys)
-            })
-            .collect();
-        out.push_str(&format!("### {metric} vs ILP\n"));
-        for (name, ys) in &series {
-            out.push_str(&format!("{name:>4} {}  {}\n", render_sparkline(ys),
-                ys.iter().map(|y| format!("{y:.0}")).collect::<Vec<_>>().join(" ")));
-        }
-        let named: Vec<(&str, Vec<f64>)> =
-            series.iter().map(|(n, y)| (n.as_str(), y.clone())).collect();
-        out.push_str("\ncsv:\n");
-        out.push_str(&render_figure_csv("ilp", &xs, &named));
-        out.push('\n');
-    }
-    out
-}
-
-fn figure_mma(device: &Device, instr: MmaInstr, title: &str) -> String {
-    let sweep = sweep_mma(device, &instr);
-    render_sweep_figure(title, &sweep)
+/// Run a sweep-only plan for `workload` and render the Fig. 6/7/10/11/15
+/// grid — one shared path regardless of the instruction family.
+fn figure_sweep(workload: Workload, title: &str) -> String {
+    let plan = Plan::new(workload)
+        .device("a100")
+        .sweep()
+        .compile()
+        .expect("figure workloads are valid on a100");
+    let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");
+    render_sweep_figure(title, res.sweep().expect("sweep unit requested"))
 }
 
 pub fn run_fig6() -> String {
-    let i: MmaInstr = "m16n8k16".parse::<crate::isa::MmaShape>().map(|s| {
-        MmaInstr::dense(crate::isa::AbType::Bf16, crate::isa::CdType::Fp32, s)
-    }).unwrap();
-    figure_mma(&device::a100(), i, "Fig. 6: mma.m16n8k16 (BF16) on A100")
+    let w = Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 };
+    figure_sweep(w, "Fig. 6: mma.m16n8k16 (BF16) on A100")
 }
 
 pub fn run_fig7() -> String {
-    let i = MmaInstr::dense(
-        crate::isa::AbType::Bf16,
-        crate::isa::CdType::Fp32,
-        "m16n8k8".parse().unwrap(),
-    );
-    figure_mma(&device::a100(), i, "Fig. 7: mma.m16n8k8 (BF16) on A100")
+    let w = Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K8 };
+    figure_sweep(w, "Fig. 7: mma.m16n8k8 (BF16) on A100")
 }
 
 pub fn run_fig10() -> String {
-    let i = MmaInstr::sp(
-        crate::isa::AbType::Bf16,
-        crate::isa::CdType::Fp32,
-        "m16n8k32".parse().unwrap(),
-    );
-    figure_mma(&device::a100(), i, "Fig. 10: mma.sp.m16n8k32 (BF16) on A100")
+    let w = Workload::MmaSp { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K32 };
+    figure_sweep(w, "Fig. 10: mma.sp.m16n8k32 (BF16) on A100")
 }
 
 pub fn run_fig11() -> String {
-    let i = MmaInstr::sp(
-        crate::isa::AbType::Bf16,
-        crate::isa::CdType::Fp32,
-        "m16n8k16".parse().unwrap(),
-    );
-    figure_mma(&device::a100(), i, "Fig. 11: mma.sp.m16n8k16 (BF16) on A100 — small-k anomaly")
+    let w = Workload::MmaSp { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 };
+    figure_sweep(w, "Fig. 11: mma.sp.m16n8k16 (BF16) on A100 — small-k anomaly")
 }
 
 pub fn run_fig15() -> String {
-    let sweep = sweep_ldmatrix(&device::a100(), LdMatrixNum::X4);
-    render_sweep_figure("Fig. 15: ldmatrix.x4 on A100 (bytes/clk/SM)", &sweep)
+    let w = Workload::Ldmatrix { num: LdMatrixNum::X4 };
+    figure_sweep(w, "Fig. 15: ldmatrix.x4 on A100 (bytes/clk/SM)")
 }
 
 // ---------------------------------------------------------- §7 tables
 
 pub fn run_table9() -> String {
-    let d = device::a100();
     let rows: Vec<PaperLdmatrixRow> = expected::table9();
-    let measured: Vec<(f64, crate::microbench::Measurement, crate::microbench::Measurement)> =
-        run_parallel(
-            rows.iter()
-                .map(|r| {
-                    let d = d.clone();
-                    let r = *r;
-                    move || {
-                        (
-                            completion_latency_ldmatrix(&d, r.num),
-                            crate::microbench::measure_ldmatrix(&d, r.num, 4, r.p4.0),
-                            crate::microbench::measure_ldmatrix(&d, r.num, 8, r.p8.0),
-                        )
-                    }
-                })
-                .collect(),
-            default_threads(),
-        );
+    let measured: Vec<(f64, Measurement, Measurement)> = run_parallel(
+        rows.iter()
+            .map(|r| {
+                let r = *r;
+                move || {
+                    let plan = Plan::new(Workload::Ldmatrix { num: r.num })
+                        .device("a100")
+                        .completion_latency()
+                        .point(4, r.p4.0)
+                        .point(8, r.p8.0)
+                        .compile()
+                        .expect("ldmatrix rows are valid on a100");
+                    let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");
+                    (
+                        res.completion().expect("completion unit requested"),
+                        *res.point(4, r.p4.0).expect("(4, ILP) point requested"),
+                        *res.point(8, r.p8.0).expect("(8, ILP) point requested"),
+                    )
+                }
+            })
+            .collect(),
+        default_threads(),
+    );
     let mut t = Table::new(
         "Table 9: ldmatrix on A100 (bytes/clk/SM at the paper's points)",
         &["instr", "B/warp", "Cmpl p/s", "(4,ILP) thr p/s", "(8,ILP) thr p/s"],
@@ -230,14 +203,19 @@ pub fn run_table9() -> String {
 }
 
 pub fn run_table10() -> String {
-    let d = device::a100();
     let mut t = Table::new(
         "Table 10: ld.shared latency under bank conflicts (cycles)",
         &["instr", "ways", "paper", "sim", "dev"],
     );
     for (width_name, ways, paper) in expected::table10() {
         let width = if width_name == "u32" { LdSharedWidth::U32 } else { LdSharedWidth::U64 };
-        let m = measure_ld_shared(&d, width, ways);
+        let plan = Plan::new(Workload::LdShared { width, ways })
+            .device("a100")
+            .point(1, 1)
+            .compile()
+            .expect("Table 10 probes are valid on a100");
+        let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");
+        let m = res.point(1, 1).expect("(1,1) point requested");
         t.row(vec![
             width.to_string(),
             format!("{ways}-way"),

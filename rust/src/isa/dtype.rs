@@ -90,6 +90,37 @@ impl AbType {
             AbType::Binary => "Binary",
         }
     }
+
+    /// Canonical token in user-facing workload/instruction specs; the
+    /// exact inverse of [`AbType::parse_spec`].
+    pub fn spec_name(self) -> &'static str {
+        match self {
+            AbType::Fp16 => "fp16",
+            AbType::Bf16 => "bf16",
+            AbType::Tf32 => "tf32",
+            AbType::Fp64 => "fp64",
+            AbType::Int8 => "int8",
+            AbType::Int4 => "int4",
+            AbType::Binary => "binary",
+        }
+    }
+
+    /// Parse one A/B-type token of an instruction/workload spec
+    /// (case-insensitive; accepts both the spec and the PTX spelling).
+    pub fn parse_spec(token: &str) -> Result<AbType, String> {
+        match token.to_ascii_lowercase().as_str() {
+            "fp16" | "f16" => Ok(AbType::Fp16),
+            "bf16" => Ok(AbType::Bf16),
+            "tf32" => Ok(AbType::Tf32),
+            "fp64" | "f64" => Ok(AbType::Fp64),
+            "int8" | "s8" => Ok(AbType::Int8),
+            "int4" | "s4" => Ok(AbType::Int4),
+            "binary" | "b1" => Ok(AbType::Binary),
+            other => Err(format!(
+                "unknown A/B type {other:?} (fp16|bf16|tf32|fp64|int8|int4|binary)"
+            )),
+        }
+    }
 }
 
 impl fmt::Display for AbType {
@@ -122,6 +153,28 @@ impl CdType {
             CdType::Fp32 => "FP32",
             CdType::Fp64 => "FP64",
             CdType::Int32 => "INT32",
+        }
+    }
+
+    /// Canonical token in user-facing workload/instruction specs; the
+    /// exact inverse of [`CdType::parse_spec`].
+    pub fn spec_name(self) -> &'static str {
+        match self {
+            CdType::Fp16 => "f16",
+            CdType::Fp32 => "f32",
+            CdType::Fp64 => "f64",
+            CdType::Int32 => "s32",
+        }
+    }
+
+    /// Parse one C/D-type token of an instruction/workload spec.
+    pub fn parse_spec(token: &str) -> Result<CdType, String> {
+        match token.to_ascii_lowercase().as_str() {
+            "fp16" | "f16" => Ok(CdType::Fp16),
+            "fp32" | "f32" => Ok(CdType::Fp32),
+            "fp64" | "f64" => Ok(CdType::Fp64),
+            "int32" | "s32" => Ok(CdType::Int32),
+            other => Err(format!("unknown C/D type {other:?} (f16|f32|f64|s32)")),
         }
     }
 
@@ -185,5 +238,28 @@ mod tests {
     fn float_integer_split() {
         assert!(AbType::Tf32.is_float());
         assert!(AbType::Binary.is_integer());
+    }
+
+    #[test]
+    fn spec_tokens_round_trip() {
+        for ab in [
+            AbType::Fp16,
+            AbType::Bf16,
+            AbType::Tf32,
+            AbType::Fp64,
+            AbType::Int8,
+            AbType::Int4,
+            AbType::Binary,
+        ] {
+            assert_eq!(AbType::parse_spec(ab.spec_name()), Ok(ab));
+        }
+        for cd in [CdType::Fp16, CdType::Fp32, CdType::Fp64, CdType::Int32] {
+            assert_eq!(CdType::parse_spec(cd.spec_name()), Ok(cd));
+        }
+        // PTX spellings are accepted too; garbage is not
+        assert_eq!(AbType::parse_spec("S8"), Ok(AbType::Int8));
+        assert_eq!(CdType::parse_spec("INT32"), Ok(CdType::Int32));
+        assert!(AbType::parse_spec("qf8").is_err());
+        assert!(CdType::parse_spec("f99").is_err());
     }
 }

@@ -68,39 +68,61 @@ impl MmaInstr {
     /// with whitespace or `,` separators — shared by the `repro sweep`
     /// CLI and the tcserved `/v1/sweep` endpoint (where commas survive
     /// URL encoding untouched), e.g. `"bf16 f32 m16n8k16"` or
-    /// `"fp16,f32,m16n8k32,sparse"`.
+    /// `"fp16,f32,m16n8k32,sparse"`. The exact inverse of
+    /// [`MmaInstr::to_spec`].
     pub fn parse_spec(spec: &str) -> Result<MmaInstr, String> {
         let parts: Vec<&str> = spec
             .split(|c: char| c.is_whitespace() || c == ',')
             .filter(|s| !s.is_empty())
             .collect();
-        if parts.len() < 3 || parts.len() > 4 {
+        if parts.len() < 3 {
             return Err(format!(
                 "instr spec must be \"<ab> <cd> <shape> [sparse]\", got {spec:?}"
             ));
         }
-        let ab = match parts[0].to_ascii_lowercase().as_str() {
-            "fp16" | "f16" => AbType::Fp16,
-            "bf16" => AbType::Bf16,
-            "tf32" => AbType::Tf32,
-            "int8" | "s8" => AbType::Int8,
-            "int4" | "s4" => AbType::Int4,
-            "binary" | "b1" => AbType::Binary,
-            other => return Err(format!("unknown A/B type {other:?}")),
-        };
-        let cd = match parts[1].to_ascii_lowercase().as_str() {
-            "fp16" | "f16" => CdType::Fp16,
-            "fp32" | "f32" => CdType::Fp32,
-            "int32" | "s32" => CdType::Int32,
-            other => return Err(format!("unknown C/D type {other:?}")),
-        };
+        let ab = AbType::parse_spec(parts[0])?;
+        let cd = CdType::parse_spec(parts[1])?;
         let shape: MmaShape = parts[2].parse()?;
-        let sparse = match parts.get(3).map(|s| s.to_ascii_lowercase()) {
-            None => false,
-            Some(tok) if tok == "sparse" || tok == "sp" => true,
-            Some(other) => return Err(format!("unexpected trailing token {other:?}")),
+        let trailing: Vec<String> = parts[3..].iter().map(|t| t.to_ascii_lowercase()).collect();
+        let sparse = match trailing.as_slice() {
+            [] => false,
+            [tok] if tok == "sparse" || tok == "sp" => true,
+            [tok] => {
+                return Err(format!(
+                    "unknown 4th token {tok:?} after the shape: the only accepted \
+                     trailing token is \"sparse\" (or \"sp\"); dense is the default"
+                ))
+            }
+            many if many.iter().all(|t| t == "sparse" || t == "sp") => {
+                return Err(format!(
+                    "duplicate \"sparse\" tokens in instr spec {spec:?}: \
+                     \"sparse\" may appear at most once"
+                ))
+            }
+            _ => {
+                return Err(format!(
+                    "too many tokens in instr spec {spec:?}: expected \
+                     \"<ab> <cd> <shape> [sparse]\""
+                ))
+            }
         };
         Ok(if sparse { MmaInstr::sp(ab, cd, shape) } else { MmaInstr::dense(ab, cd, shape) })
+    }
+
+    /// Canonical spec string, e.g. `"bf16 f32 m16n8k16"` or
+    /// `"fp16 f32 m16n8k32 sparse"` — round-trips through
+    /// [`MmaInstr::parse_spec`].
+    pub fn to_spec(&self) -> String {
+        let mut s = format!(
+            "{} {} {}",
+            self.ab.spec_name(),
+            self.cd.spec_name(),
+            self.shape
+        );
+        if self.sparse {
+            s.push_str(" sparse");
+        }
+        s
     }
 }
 
@@ -279,5 +301,58 @@ mod tests {
         assert!(MmaInstr::parse_spec("bf16 f32 m16n8").is_err());
         assert!(MmaInstr::parse_spec("bf16 f32 m16n8k16 dense").is_err());
         assert!(MmaInstr::parse_spec("bf16 f32 m16n8k16 sparse extra").is_err());
+    }
+
+    #[test]
+    fn parse_spec_trailing_token_errors_are_specific() {
+        // unknown 4th token: names the token and what is accepted
+        let err = MmaInstr::parse_spec("bf16 f32 m16n8k16 dense").unwrap_err();
+        assert!(err.contains("dense") && err.contains("sparse"), "{err}");
+        // duplicate sparse tokens get their own diagnosis
+        let err = MmaInstr::parse_spec("bf16 f32 m16n8k16 sparse sparse").unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        let err = MmaInstr::parse_spec("bf16 f32 m16n8k16 sp sparse").unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        // anything else past the 4th token is a count problem
+        let err = MmaInstr::parse_spec("bf16 f32 m16n8k16 sparse extra").unwrap_err();
+        assert!(err.contains("too many"), "{err}");
+    }
+
+    #[test]
+    fn spec_round_trips_for_every_legal_instr() {
+        // proptest-style: enumerate the full (ab, cd, shape, sparse)
+        // grid and require spec -> instr -> spec to be the identity on
+        // every well-formed combination.
+        let abs = [
+            AbType::Fp16,
+            AbType::Bf16,
+            AbType::Tf32,
+            AbType::Fp64,
+            AbType::Int8,
+            AbType::Int4,
+            AbType::Binary,
+        ];
+        let cds = [CdType::Fp16, CdType::Fp32, CdType::Fp64, CdType::Int32];
+        let shapes = [M16N8K4, M16N8K8, M16N8K16, M16N8K32, M16N8K64, M8N8K16, M8N8K4];
+        let mut checked = 0;
+        for ab in abs {
+            for cd in cds {
+                for shape in shapes {
+                    for sparse in [false, true] {
+                        let instr = MmaInstr { ab, cd, shape, sparse };
+                        if !instr.is_well_formed() {
+                            continue;
+                        }
+                        let spec = instr.to_spec();
+                        let parsed = MmaInstr::parse_spec(&spec)
+                            .unwrap_or_else(|e| panic!("{spec:?} failed to re-parse: {e}"));
+                        assert_eq!(parsed, instr, "{spec:?}");
+                        assert_eq!(parsed.to_spec(), spec);
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 50, "grid too small ({checked})");
     }
 }

@@ -28,6 +28,11 @@
 //! - [`runtime`]  — PJRT client wrapper that loads `artifacts/*.hlo.txt`.
 //! - [`gemm`]     — Appendix-A ablation kernels (sync vs async copy,
 //!   naive vs permuted shared-memory layout).
+//! - [`workload`] — the unified workload API: one typed [`Workload`]
+//!   enum for all five microbenchmarked instruction families, a
+//!   `BenchPlan` builder compiling to runnable units, and the `Runner`
+//!   backend seam — the single execution path behind the CLI, the
+//!   coordinator experiments and tcserved's `POST /v1/plan`.
 //! - [`coordinator`] — campaign orchestration: every paper table/figure
 //!   is a registered experiment run by a scoped-thread worker pool.
 //! - [`report`]   — table/figure renderers (text + machine-readable
@@ -47,6 +52,8 @@ pub mod runtime;
 pub mod server;
 pub mod sim;
 pub mod util;
+pub mod workload;
 
 pub use device::Device;
 pub use isa::{AbType, CdType, MmaShape};
+pub use workload::Workload;

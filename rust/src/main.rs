@@ -21,11 +21,10 @@ use tcbench::coordinator::{
     default_threads, run_all, run_experiment, Backend, BackendKind, EXPERIMENTS,
 };
 use tcbench::device;
-use tcbench::isa::MmaInstr;
-use tcbench::microbench::{convergence_point, sweep_mma};
 use tcbench::report;
 use tcbench::server::{serve_blocking, ServerConfig};
 use tcbench::util::Json;
+use tcbench::workload::{Plan, SimRunner, Workload};
 
 fn usage() -> &'static str {
     "repro — Dissecting Tensor Cores, reproduction CLI\n\
@@ -35,17 +34,26 @@ fn usage() -> &'static str {
        repro devices\n\
        repro run <id>... [--backend native|pjrt|auto] [--out DIR]\n\
        repro all [--backend native|pjrt|auto] [--out DIR]\n\
-       repro sweep --device <a100|rtx3070ti|rtx2080ti> --instr \"<ab> <cd> <shape> [sparse]\"\n\
+       repro sweep --device <a100|rtx3070ti|rtx2080ti> --instr \"<workload>\"\n\
        repro serve [--addr HOST:PORT] [--threads N] [--warm]\n\
+     \n\
+     WORKLOAD SPECS (repro sweep, POST /v1/plan):\n\
+       mma <ab> <cd> <shape>        e.g. \"mma bf16 f32 m16n8k16\"\n\
+       mma.sp <ab> <cd> <shape>     e.g. \"mma.sp fp16 f32 m16n8k32\"\n\
+       ldmatrix <x1|x2|x4>          e.g. \"ldmatrix x4\"\n\
+       ld.shared <u32|u64> <ways>   e.g. \"ld.shared u32 8\"\n\
+       wmma <ab> <cd> <shape>       e.g. \"wmma fp16 f32 m16n16k16\"\n\
+       (legacy \"<ab> <cd> <shape> [sparse]\" mma specs still work)\n\
      \n\
      EXAMPLES:\n\
        repro run t3 t6 fig11\n\
-       repro all --out results          # also writes results/summary.json\n\
+       repro all --out results          # also writes summary.json + bench_summary.json\n\
        repro sweep --device a100 --instr \"bf16 f32 m16n8k16\"\n\
+       repro sweep --device a100 --instr \"ldmatrix x4\"\n\
        repro serve --addr 127.0.0.1:8321 --warm\n\
      \n\
      SERVE ENDPOINTS:\n\
-       /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep /v1/metrics\n"
+       /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep POST:/v1/plan /v1/metrics\n"
 }
 
 /// Flags that take no value (presence means `true`).
@@ -88,10 +96,6 @@ impl Args {
 
 fn make_backend(kind: &str) -> Result<Backend> {
     BackendKind::parse(kind)?.instantiate()
-}
-
-fn parse_instr(spec: &str) -> Result<MmaInstr> {
-    MmaInstr::parse_spec(spec).map_err(|e| anyhow!(e))
 }
 
 fn emit(out_dir: Option<&str>, id: &str, report: &str) -> Result<()> {
@@ -186,6 +190,33 @@ fn main() -> Result<()> {
                 let path = format!("{dir}/summary.json");
                 std::fs::write(&path, summary.pretty())?;
                 eprintln!("[repro] wrote {path}");
+
+                // machine-readable perf snapshot: per-plan wall time
+                // only, in a stable schema meant to be archived as
+                // BENCH_<rev>.json and diffed across PRs
+                let bench = Json::obj(vec![
+                    ("schema", Json::str("tcbench/bench_summary/v1")),
+                    ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+                    ("backend", Json::str(backend.name())),
+                    ("threads", Json::num(default_threads() as f64)),
+                    ("total_wall_ms", Json::num(total_ms)),
+                    (
+                        "plans",
+                        Json::Arr(
+                            runs.iter()
+                                .map(|r| {
+                                    Json::obj(vec![
+                                        ("id", Json::str(r.id)),
+                                        ("wall_ms", Json::num(r.wall_ms)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                let path = format!("{dir}/bench_summary.json");
+                std::fs::write(&path, bench.pretty())?;
+                eprintln!("[repro] wrote {path}");
             }
         }
         "serve" => {
@@ -205,26 +236,24 @@ fn main() -> Result<()> {
             serve_blocking(cfg)?;
         }
         "sweep" => {
+            // a thin translator into the unified plan path: parse the
+            // workload spec, compile a completion+sweep plan, run it on
+            // the simulator runner and render the uniform result
             let dev_name = args.flag("device").unwrap_or("a100");
-            let dev = device::by_name(dev_name)
-                .ok_or_else(|| anyhow!("unknown device {dev_name:?}; see `repro devices`"))?;
-            let instr = parse_instr(args.flag("instr").ok_or_else(|| anyhow!("--instr required"))?)?;
-            if !dev.supports(&instr) {
-                bail!("{instr} is not supported on {}", dev.name);
-            }
-            let sweep = sweep_mma(&dev, &instr);
-            println!("sweep of {instr} on {}:", dev.name);
-            println!("{:>6} {:>4} {:>10} {:>14}", "warps", "ILP", "lat(cy)", "thr(FMA/clk)");
-            for c in &sweep.cells {
-                println!("{:>6} {:>4} {:>10.1} {:>14.1}", c.warps, c.ilp, c.latency, c.throughput);
-            }
-            for warps in [4, 8] {
-                let c = convergence_point(&sweep, warps);
-                println!(
-                    "convergence at {warps} warps: ILP {} -> {:.1} cy, {:.1} FMA/clk/SM",
-                    c.ilp, c.latency, c.throughput
-                );
-            }
+            let spec = args
+                .flag("instr")
+                .ok_or_else(|| anyhow!("--instr required (a workload spec; see `repro help`)"))?;
+            let workload = Workload::parse_spec(spec).map_err(|e| anyhow!(e))?;
+            let plan = Plan::new(workload)
+                .device(dev_name)
+                .completion_latency()
+                .sweep()
+                .compile()
+                .map_err(|e| anyhow!(e))?;
+            let result = plan
+                .run(&SimRunner, default_threads().min(4))
+                .map_err(|e| anyhow!(e))?;
+            println!("{}", report::render_bench(&result));
         }
         "help" | "--help" | "-h" => print!("{}", usage()),
         other => {

@@ -15,6 +15,7 @@ pub mod wmma;
 pub use kernels::{ld_shared_program, ldmatrix_program, mma_program, ITERS};
 pub use sweep::{
     convergence_point, sweep_ldmatrix, sweep_mma, ConvergencePoint, Sweep, SweepCell,
+    SWEEP_ILPS, SWEEP_WARPS,
 };
 
 use crate::device::Device;
@@ -69,11 +70,25 @@ pub fn completion_latency_ldmatrix(device: &Device, num: LdMatrixNum) -> f64 {
 /// Run the `ld.shared` bank-conflict probe (Table 10): one warp, ILP=1,
 /// addresses strided to produce `ways`-way conflicts.
 pub fn measure_ld_shared(device: &Device, width: LdSharedWidth, ways: u32) -> Measurement {
-    let program = ld_shared_program(device, width, ways, 1, ITERS);
-    let per_iter_bytes = program.smem_bytes_per_iteration();
-    let results = SmSim::new(device, vec![program]).run();
-    let latency = results[0].latency_per_iteration();
-    Measurement { warps: 1, ilp: 1, latency, throughput: per_iter_bytes as f64 / latency }
+    measure_ld_shared_at(device, width, ways, 1, 1)
+}
+
+/// Run the `ld.shared` conflict microbenchmark at an arbitrary
+/// (#warps, ILP) point — the general form behind [`measure_ld_shared`],
+/// used by the unified workload sweep path.
+pub fn measure_ld_shared_at(
+    device: &Device,
+    width: LdSharedWidth,
+    ways: u32,
+    warps: u32,
+    ilp: u32,
+) -> Measurement {
+    let program = ld_shared_program(device, width, ways, ilp, ITERS);
+    let per_iter_bytes = program.smem_bytes_per_iteration() * warps as u64;
+    let programs = vec![program; warps as usize];
+    let results = SmSim::new(device, programs).run();
+    let latency = results.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
+    Measurement { warps, ilp, latency, throughput: per_iter_bytes as f64 / latency }
 }
 
 #[cfg(test)]

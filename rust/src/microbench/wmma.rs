@@ -15,7 +15,7 @@ use crate::sim::{Op, ProgramBuilder, SmSim, WarpProgram};
 use super::{measure_mma, Measurement, ITERS};
 
 /// A legacy wmma.mma operand shape (m16n16k16 is the canonical one).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct WmmaShape {
     pub m: u32,
     pub n: u32,

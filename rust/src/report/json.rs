@@ -9,7 +9,9 @@
 //! tcserved `/v1/run` endpoint and `repro all --out DIR`'s
 //! `summary.json` are both built on this path.
 
+use crate::microbench::{ConvergencePoint, Sweep};
 use crate::util::Json;
+use crate::workload::{BenchResult, UnitOutput};
 
 /// Is this line a table separator (`----+-----+----`)?
 fn is_separator(line: &str) -> bool {
@@ -146,6 +148,105 @@ pub fn deviation_stats(text: &str) -> Option<DeviationStats> {
     Some(DeviationStats { cells: devs.len(), mean_abs_pct: mean, max_abs_pct: max })
 }
 
+/// One measured (warps, ILP, latency, throughput) record — the shared
+/// field layout of sweep cells, convergence summaries and plan points.
+fn point_json(warps: u32, ilp: u32, latency: f64, throughput: f64) -> Json {
+    Json::obj(vec![
+        ("warps", Json::num(warps as f64)),
+        ("ilp", Json::num(ilp as f64)),
+        ("latency", Json::num(latency)),
+        ("throughput", Json::num(throughput)),
+    ])
+}
+
+/// Machine-readable rendering of one sweep grid plus its convergence
+/// summaries — the payload core of `/v1/sweep` and of sweep plan units.
+pub fn sweep_to_json(sweep: &Sweep, convergence: &[ConvergencePoint]) -> Json {
+    Json::obj(vec![
+        (
+            "warps_axis",
+            Json::Arr(sweep.warps_axis.iter().map(|&w| Json::num(w as f64)).collect()),
+        ),
+        (
+            "ilp_axis",
+            Json::Arr(sweep.ilp_axis.iter().map(|&i| Json::num(i as f64)).collect()),
+        ),
+        (
+            "cells",
+            Json::Arr(
+                sweep
+                    .cells
+                    .iter()
+                    .map(|c| point_json(c.warps, c.ilp, c.latency, c.throughput))
+                    .collect(),
+            ),
+        ),
+        (
+            "convergence",
+            Json::Arr(
+                convergence
+                    .iter()
+                    .map(|c| point_json(c.warps, c.ilp, c.latency, c.throughput))
+                    .collect(),
+            ),
+        ),
+        ("peak_throughput", Json::num(sweep.peak_throughput())),
+    ])
+}
+
+/// Machine-readable rendering of one executed plan unit.
+pub fn unit_output_to_json(output: &UnitOutput) -> Json {
+    match output {
+        UnitOutput::Completion(latency) => Json::obj(vec![
+            ("unit", Json::str("completion")),
+            ("warps", Json::num(1.0)),
+            ("ilp", Json::num(1.0)),
+            ("latency", Json::num(*latency)),
+        ]),
+        UnitOutput::Point(m) => {
+            let Json::Obj(mut fields) = point_json(m.warps, m.ilp, m.latency, m.throughput)
+            else {
+                unreachable!("point_json returns an object")
+            };
+            fields.insert("unit".to_string(), Json::str("point"));
+            Json::Obj(fields)
+        }
+        UnitOutput::Sweep { sweep, convergence } => {
+            let Json::Obj(mut fields) = sweep_to_json(sweep, convergence) else {
+                unreachable!("sweep_to_json returns an object")
+            };
+            fields.insert("unit".to_string(), Json::str("sweep"));
+            Json::Obj(fields)
+        }
+    }
+}
+
+/// Full machine-readable rendering of one plan result — the JSON twin
+/// of [`render_bench`](crate::report::render_bench), consumed by
+/// `POST /v1/plan` responses and `repro` output files.
+pub fn bench_to_json(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("workload", Json::Str(r.workload.to_spec())),
+        ("kind", Json::str(r.workload.kind())),
+        ("display", Json::Str(r.workload.to_string())),
+        (
+            "device",
+            Json::obj(vec![
+                ("name", Json::str(r.device_name)),
+                ("arch", Json::Str(r.arch.clone())),
+                ("sms", Json::num(r.sms as f64)),
+            ]),
+        ),
+        ("runner", Json::str(r.runner)),
+        ("throughput_unit", Json::str(r.throughput_unit)),
+        ("wall_ms", Json::num(r.wall_ms)),
+        (
+            "units",
+            Json::Arr(r.units.iter().map(|(_, out)| unit_output_to_json(out)).collect()),
+        ),
+    ])
+}
+
 /// Full machine-readable rendering of one experiment report.
 pub fn report_to_json(id: &str, description: &str, text: &str) -> Json {
     let title = text
@@ -229,6 +330,25 @@ mod tests {
         // and it serializes to parseable JSON
         let s = j.to_string();
         assert!(crate::util::Json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        use crate::workload::{Plan, SimRunner, Workload};
+        let w = Workload::parse_spec("ld.shared u32 4").unwrap();
+        let r = Plan::new(w).point(1, 1).compile().unwrap().run(&SimRunner, 1).unwrap();
+        let j = bench_to_json(&r);
+        assert_eq!(j.get_str("workload"), Some("ld.shared u32 4"));
+        assert_eq!(j.get_str("kind"), Some("ld.shared"));
+        assert_eq!(j.get_str("throughput_unit"), Some("bytes/clk/SM"));
+        assert_eq!(j.get("device").unwrap().get_str("name"), Some("a100"));
+        let units = j.get("units").unwrap().as_arr().unwrap();
+        assert_eq!(units.len(), 1);
+        assert_eq!(units[0].get_str("unit"), Some("point"));
+        // Table 10: a 4-way conflicted u32 load takes ~29 cycles
+        let lat = units[0].get_f64("latency").unwrap();
+        assert!((lat - 29.0).abs() < 1.5, "{lat}");
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

@@ -1,14 +1,23 @@
 //! Report rendering: ASCII tables in the paper's layout, figure series
 //! (CSV + sparkline), the paper's published values for side-by-side
-//! comparison in every regenerated table, and a machine-readable JSON
-//! rendering of every report ([`json`]).
+//! comparison in every regenerated table, a machine-readable JSON
+//! rendering of every report ([`json`]), and the uniform text/JSON
+//! renderers over the workload layer's [`BenchResult`]
+//! ([`render_bench`] / [`bench_to_json`]).
+//!
+//! [`BenchResult`]: crate::workload::BenchResult
 
 pub mod expected;
 pub mod json;
 mod render;
 
-pub use json::{deviation_stats, report_to_json, DeviationStats};
-pub use render::{render_figure_csv, render_sparkline, Table};
+pub use json::{
+    bench_to_json, deviation_stats, report_to_json, sweep_to_json, unit_output_to_json,
+    DeviationStats,
+};
+pub use render::{
+    render_bench, render_figure_csv, render_sparkline, render_sweep_figure, Table,
+};
 
 /// Relative deviation string for paper-vs-measured columns.
 pub fn deviation(measured: f64, paper: f64) -> String {

@@ -1,4 +1,9 @@
-//! Plain-text table / figure rendering (no external crates).
+//! Plain-text table / figure rendering (no external crates), including
+//! the uniform renderers over the workload layer's sweeps
+//! ([`render_sweep_figure`]) and plan results ([`render_bench`]).
+
+use crate::microbench::Sweep;
+use crate::workload::{BenchResult, UnitOutput};
 
 /// A simple column-aligned ASCII table.
 #[derive(Debug, Clone, Default)]
@@ -89,6 +94,112 @@ pub fn render_figure_csv(
     out
 }
 
+/// Render a Fig. 6/7/10/11/15-style grid: latency and throughput versus
+/// ILP, one sparkline series per #warps, plus the embedded CSV block
+/// `report::json` parses back out.
+pub fn render_sweep_figure(title: &str, sweep: &Sweep) -> String {
+    let xs: Vec<f64> = sweep.ilp_axis.iter().map(|&i| i as f64).collect();
+    let mut out = format!("## {title}\n\n");
+    for metric in ["throughput", "latency"] {
+        let series: Vec<(String, Vec<f64>)> = sweep
+            .warps_axis
+            .iter()
+            .map(|&w| {
+                let ys: Vec<f64> = sweep
+                    .ilp_axis
+                    .iter()
+                    .map(|&ilp| {
+                        let c = sweep.cell(w, ilp).expect("full sweep grid");
+                        if metric == "throughput" {
+                            c.throughput
+                        } else {
+                            c.latency
+                        }
+                    })
+                    .collect();
+                (format!("{w}w"), ys)
+            })
+            .collect();
+        out.push_str(&format!("### {metric} vs ILP\n"));
+        for (name, ys) in &series {
+            out.push_str(&format!(
+                "{name:>4} {}  {}\n",
+                render_sparkline(ys),
+                ys.iter().map(|y| format!("{y:.0}")).collect::<Vec<_>>().join(" ")
+            ));
+        }
+        let named: Vec<(&str, Vec<f64>)> =
+            series.iter().map(|(n, y)| (n.as_str(), y.clone())).collect();
+        out.push_str("\ncsv:\n");
+        out.push_str(&render_figure_csv("ilp", &xs, &named));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a workload plan result: a summary table over the completion /
+/// point / convergence units, followed by the sweep figure when the
+/// plan requested one. The text twin of
+/// [`bench_to_json`](crate::report::bench_to_json).
+pub fn render_bench(r: &BenchResult) -> String {
+    let mut out = format!(
+        "## {} on {} [{}] — {} runner\n\n",
+        r.workload, r.device_name, r.arch, r.runner
+    );
+    let thr_hdr = format!("thr ({})", r.throughput_unit);
+    let mut t = Table::new("", &["unit", "warps", "ILP", "latency (cy)", thr_hdr.as_str()]);
+    let mut rows = 0usize;
+    for (_, output) in &r.units {
+        match output {
+            UnitOutput::Completion(latency) => {
+                t.row(vec![
+                    "completion".into(),
+                    "1".into(),
+                    "1".into(),
+                    format!("{latency:.1}"),
+                    "-".into(),
+                ]);
+                rows += 1;
+            }
+            UnitOutput::Point(m) => {
+                t.row(vec![
+                    "point".into(),
+                    m.warps.to_string(),
+                    m.ilp.to_string(),
+                    format!("{:.1}", m.latency),
+                    format!("{:.1}", m.throughput),
+                ]);
+                rows += 1;
+            }
+            UnitOutput::Sweep { convergence, .. } => {
+                for c in convergence {
+                    t.row(vec![
+                        "convergence".into(),
+                        c.warps.to_string(),
+                        c.ilp.to_string(),
+                        format!("{:.1}", c.latency),
+                        format!("{:.1}", c.throughput),
+                    ]);
+                    rows += 1;
+                }
+            }
+        }
+    }
+    if rows > 0 {
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    for (_, output) in &r.units {
+        if let UnitOutput::Sweep { sweep, .. } = output {
+            out.push_str(&render_sweep_figure(
+                &format!("{} sweep on {}", r.workload, r.device_name),
+                sweep,
+            ));
+        }
+    }
+    out
+}
+
 /// Unicode sparkline of a series (terminal "figure").
 pub fn render_sparkline(values: &[f64]) -> String {
     const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
@@ -135,6 +246,27 @@ mod tests {
     #[should_panic(expected = "row arity")]
     fn arity_checked() {
         Table::new("t", &["a", "b"]).row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn bench_result_renders_table_and_sweep() {
+        use crate::workload::{Plan, SimRunner, Workload};
+        let w = Workload::parse_spec("mma bf16 f32 m16n8k16").unwrap();
+        let plan = Plan::new(w)
+            .completion_latency()
+            .point(8, 2)
+            .sweep()
+            .compile()
+            .unwrap();
+        let r = plan.run(&SimRunner, 1).unwrap();
+        let text = render_bench(&r);
+        assert!(text.contains("a100"), "{text}");
+        assert!(text.contains("completion"));
+        assert!(text.contains("convergence"));
+        assert!(text.contains("csv:"));
+        // the summary table parses back out through report::json
+        let tables = crate::report::json::parse_tables(&text);
+        assert!(!tables.is_empty());
     }
 
     #[test]

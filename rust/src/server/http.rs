@@ -2,8 +2,9 @@
 //! `std::net::TcpStream` — no external crates, matching the repo's
 //! offline-substrate convention (`util::json`, `util::bench`).
 //!
-//! Scope: exactly what tcserved needs. GET-only request line + headers
-//! (header values are not interpreted), percent-decoded query strings,
+//! Scope: exactly what tcserved needs. Request line + headers (only
+//! `Content-Length` is interpreted, for the `POST /v1/plan` body),
+//! percent-decoded query strings, bounded JSON bodies,
 //! `Connection: close` responses with an explicit `Content-Length`.
 
 use std::io::{BufRead, BufReader, Write};
@@ -15,18 +16,22 @@ use crate::util::Json;
 const MAX_LINE: usize = 16 * 1024;
 /// Most accepted header lines per request.
 const MAX_HEADERS: usize = 128;
-/// Hard cap on the bytes read per request head. `read_line` is only
-/// length-checked after it returns, so the reader itself must be
+/// Largest accepted request body (a JSON `BenchPlan` is well under this).
+const MAX_BODY_BYTES: usize = 32 * 1024;
+/// Hard cap on the bytes read per request (head + body). `read_line` is
+/// only length-checked after it returns, so the reader itself must be
 /// bounded or a client streaming an endless line would grow the buffer
 /// without limit.
 const MAX_REQUEST_BYTES: u64 = 64 * 1024;
 
-/// A parsed request: method, decoded path, decoded query parameters.
+/// A parsed request: method, decoded path, decoded query parameters,
+/// and the raw body (empty for bodyless requests).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub method: String,
     pub path: String,
     pub query: Vec<(String, String)>,
+    pub body: String,
 }
 
 impl Request {
@@ -70,11 +75,15 @@ pub fn percent_decode(s: &str) -> String {
     String::from_utf8_lossy(&out).into_owned()
 }
 
-/// Read and parse one request from the stream. Header fields are read to
-/// the blank line but not interpreted (tcserved is GET-only and
-/// closes the connection after each response).
+/// Read and parse one request from the stream. Header fields are read
+/// to the blank line; only `Content-Length` is interpreted, to read the
+/// body of `POST /v1/plan` (tcserved closes the connection after each
+/// response, so there is no pipelining to account for).
 pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
     use std::io::Read as _;
+    // An OS-level dup for writing the interim `100 Continue` while the
+    // buffered reader below owns the `&mut` borrow.
+    let interim_writer = stream.try_clone();
     let mut reader = BufReader::new(stream.take(MAX_REQUEST_BYTES));
 
     let mut line = String::new();
@@ -94,15 +103,62 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
         return Err(format!("bad HTTP version {version:?}"));
     }
 
+    let mut content_length: usize = 0;
+    let mut expect_continue = false;
+    let mut headers_done = false;
     for _ in 0..MAX_HEADERS {
         let mut header = String::new();
         let n = reader.read_line(&mut header).map_err(|e| format!("reading header: {e}"))?;
         if n == 0 || header == "\r\n" || header == "\n" {
+            headers_done = true;
             break;
         }
         if header.len() > MAX_LINE {
             return Err("header line too long".to_string());
         }
+        if let Some((name, value)) = header.split_once(':') {
+            let name = name.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad Content-Length {:?}", value.trim()))?;
+            } else if name.eq_ignore_ascii_case("expect")
+                && value.trim().eq_ignore_ascii_case("100-continue")
+            {
+                expect_continue = true;
+            }
+        }
+    }
+    // Never fall through with unread header lines: the body reader below
+    // would consume them as the request body.
+    if !headers_done {
+        return Err(format!("too many header lines (limit {MAX_HEADERS})"));
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(format!(
+            "request body too large ({content_length} bytes; limit {MAX_BODY_BYTES})"
+        ));
+    }
+
+    let mut body = String::new();
+    if content_length > 0 {
+        // Clients like curl wait for the interim response before sending
+        // bodies over ~1 KB; without it every such POST stalls on the
+        // client's ~1 s expect timeout. Best-effort: the client falls
+        // back to its own timer if the write fails.
+        if expect_continue {
+            if let Ok(w) = &interim_writer {
+                let mut w: &TcpStream = w;
+                let _ = w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+                let _ = w.flush();
+            }
+        }
+        let mut buf = vec![0u8; content_length];
+        reader
+            .read_exact(&mut buf)
+            .map_err(|e| format!("reading {content_length}-byte request body: {e}"))?;
+        body = String::from_utf8(buf).map_err(|_| "request body is not UTF-8".to_string())?;
     }
 
     let (path_raw, query_raw) = match target.split_once('?') {
@@ -119,7 +175,7 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
             query.push((percent_decode(k), percent_decode(v)));
         }
     }
-    Ok(Request { method, path: percent_decode(path_raw), query })
+    Ok(Request { method, path: percent_decode(path_raw), query, body })
 }
 
 /// A response ready to serialize.

@@ -9,12 +9,13 @@
 //! ```text
 //! repro serve [--addr 127.0.0.1:8321] [--threads N] [--warm]
 //!
-//! GET /healthz              liveness + registry size
-//! GET /v1/experiments       the 19 registered experiments (+cache state)
-//! GET /v1/devices           calibrated devices
-//! GET /v1/run/<id>          one experiment, cached  [?backend=native|pjrt|auto]
-//! GET /v1/sweep             ad-hoc (ILP, warps) sweep [?device=&instr=&sparse=]
-//! GET /v1/metrics           request counts, cache hit rate, compute times
+//! GET  /healthz             liveness + registry size
+//! GET  /v1/experiments      the 19 registered experiments (+cache state)
+//! GET  /v1/devices          calibrated devices
+//! GET  /v1/run/<id>         one experiment, cached  [?backend=native|pjrt|auto]
+//! GET  /v1/sweep            ad-hoc (ILP, warps) sweep [?device=&instr=&sparse=]
+//! POST /v1/plan             run a JSON BenchPlan; batched, cached per unit
+//! GET  /v1/metrics          request counts, cache hit rate, compute times
 //! ```
 //!
 //! Layering: [`http`] parses/writes the wire format, [`router`] maps
@@ -192,7 +193,8 @@ pub fn serve_blocking(cfg: ServerConfig) -> Result<()> {
         EXPERIMENTS.len()
     );
     eprintln!(
-        "[tcserved] endpoints: /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep /v1/metrics"
+        "[tcserved] endpoints: /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep \
+         POST:/v1/plan /v1/metrics"
     );
     server.join();
     Ok(())

@@ -1,21 +1,23 @@
 //! tcserved request routing: the `/v1` JSON API over the campaign.
 //!
-//! Heavy endpoints (`/v1/run/<id>`, `/v1/sweep`) go through the
-//! content-addressed [`ResultCache`]: the first request computes via
-//! `coordinator::run_experiment` / `microbench::sweep_mma` (which fan
-//! out over the coordinator's worker pool internally), every identical
-//! later request is a cache hit, and concurrent identical requests are
-//! coalesced into a single computation.
+//! Heavy endpoints (`/v1/run/<id>`, `/v1/sweep`, `POST /v1/plan`) go
+//! through the content-addressed [`ResultCache`]: the first request
+//! computes via `coordinator::run_experiment` or the unified workload
+//! layer ([`crate::workload`]), every identical later request is a
+//! cache hit, and concurrent identical requests are coalesced into a
+//! single computation. Plans are cached *per unit* — the unit token
+//! carries every workload parameter — so two plans sharing units share
+//! their cache entries, and the single-flight machinery dedups at unit
+//! granularity.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 use crate::coordinator::{self, run_parallel, BackendKind, ExperimentId, EXPERIMENTS};
 use crate::device;
-use crate::isa::MmaInstr;
-use crate::microbench::{convergence_point, sweep_mma};
 use crate::report;
 use crate::util::Json;
+use crate::workload::{self, BenchPlan, Plan, Runner, SimRunner, UnitKind, Workload};
 
 use super::cache::{cache_key, CacheKey, Origin, ResultCache};
 use super::http::{Request, Response};
@@ -40,6 +42,7 @@ fn endpoint_label(path: &str) -> &'static str {
         "/v1/devices" => "devices",
         "/v1/metrics" => "metrics",
         "/v1/sweep" => "sweep",
+        "/v1/plan" => "plan",
         p if p.starts_with("/v1/run/") => "run",
         _ => "other",
     }
@@ -48,8 +51,26 @@ fn endpoint_label(path: &str) -> &'static str {
 /// Dispatch one parsed request.
 pub fn handle(state: &AppState, req: &Request) -> Response {
     state.metrics.record_request(endpoint_label(&req.path));
+    if req.path == "/v1/plan" {
+        if req.method != "POST" {
+            return Response::error(
+                405,
+                format!(
+                    "method {} not allowed; /v1/plan takes a POST with a JSON BenchPlan body",
+                    req.method
+                ),
+            );
+        }
+        return plan(state, req);
+    }
     if req.method != "GET" {
-        return Response::error(405, format!("method {} not allowed; this API is GET-only", req.method));
+        return Response::error(
+            405,
+            format!(
+                "method {} not allowed; this API is GET-only (except POST /v1/plan)",
+                req.method
+            ),
+        );
     }
     match req.path.as_str() {
         "/healthz" => healthz(),
@@ -231,6 +252,10 @@ pub fn warm(state: &AppState, threads: usize) -> usize {
 
 // ---------------------------------------------------------------- /v1/sweep
 
+/// `GET /v1/sweep?device=&instr=&sparse=` — a thin translator onto the
+/// workload layer: the `instr` parameter accepts any [`Workload`] spec
+/// (legacy mma specs included), the sweep runs as a one-unit
+/// [`BenchPlan`] on the simulator runner.
 fn sweep(state: &AppState, req: &Request) -> Response {
     let dev_name = req.param("device").unwrap_or("a100");
     let Some(dev) = device::by_name(dev_name) else {
@@ -239,87 +264,198 @@ fn sweep(state: &AppState, req: &Request) -> Response {
     let Some(spec) = req.param("instr") else {
         return Response::error(
             400,
-            "missing required query parameter `instr` (e.g. ?instr=bf16,f32,m16n8k16)",
+            "missing required query parameter `instr` (e.g. ?instr=bf16,f32,m16n8k16 \
+             or ?instr=ldmatrix,x4)",
         );
     };
-    let parsed = match MmaInstr::parse_spec(spec) {
-        Ok(i) => i,
+    let parsed = match Workload::parse_spec(spec) {
+        Ok(w) => w,
         Err(e) => return Response::error(400, e),
     };
-    let instr = match req.param("sparse") {
-        None => parsed,
-        Some("1") | Some("true") | Some("yes") => {
-            MmaInstr::sp(parsed.ab, parsed.cd, parsed.shape)
-        }
-        Some("0") | Some("false") | Some("no") => {
-            MmaInstr::dense(parsed.ab, parsed.cd, parsed.shape)
-        }
+    let sparse = match req.param("sparse") {
+        None => None,
+        Some("1") | Some("true") | Some("yes") => Some(true),
+        Some("0") | Some("false") | Some("no") => Some(false),
         Some(other) => {
             return Response::error(400, format!("bad sparse flag {other:?} (true|false)"))
         }
     };
-    if !dev.supports(&instr) {
-        return Response::error(400, format!("{instr} is not supported on {}", dev.name));
+    let load = match (sparse, parsed) {
+        (None, w) => w,
+        (
+            Some(sparse),
+            Workload::Mma { ab, cd, shape } | Workload::MmaSp { ab, cd, shape },
+        ) => {
+            if sparse {
+                Workload::MmaSp { ab, cd, shape }
+            } else {
+                Workload::Mma { ab, cd, shape }
+            }
+        }
+        (Some(_), w) => {
+            return Response::error(
+                400,
+                format!("the sparse flag only applies to mma workloads, not {}", w.kind()),
+            )
+        }
+    };
+    let plan = match Plan::new(load).device(dev.name).sweep().compile() {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, e),
+    };
+    // shared content address with the sweep unit of POST /v1/plan: a
+    // plan that already swept this workload makes this a cache hit (and
+    // vice versa) — the request-specific envelope (device, workload,
+    // ptx, …) is added outside the cached payload
+    let (result, origin) = unit_cached(state, &plan, UnitKind::Sweep, &SimRunner, "sweep");
+    let body = match result {
+        Ok(body) => body,
+        Err(e) => return Response::error(500, e),
+    };
+    let Ok(Json::Obj(mut fields)) = Json::parse(&body) else {
+        return Response::error(500, format!("corrupt cached sweep payload for {load}"));
+    };
+    fields.insert("device".to_string(), Json::str(plan.device.name));
+    fields.insert("workload".to_string(), Json::Str(plan.workload.to_spec()));
+    fields.insert("instr".to_string(), Json::Str(plan.workload.to_string()));
+    if let Some(instr) = plan.workload.mma_instr() {
+        fields.insert("ptx".to_string(), Json::Str(instr.ptx()));
+        fields.insert("sparse".to_string(), Json::Bool(instr.sparse));
     }
-    let key = cache_key("sweep", "sim", dev.name, &instr.ptx());
-    let (result, origin) =
-        state.cache.get_or_compute(&key, || compute_sweep(state, &dev, &instr, &key));
-    note_origin(state, origin);
-    respond_cached(result, origin)
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("cached", Json::Bool(origin != Origin::Computed)),
+            ("origin", Json::str(origin.name())),
+            ("result", Json::Obj(fields)),
+        ]),
+    )
 }
 
-fn compute_sweep(
+// ----------------------------------------------------------------- /v1/plan
+
+/// `POST /v1/plan` — run a JSON [`BenchPlan`] and return the batched
+/// unit results. Every unit is content-addressed individually (the
+/// token carries all workload parameters and the exec point), so the
+/// cache and single-flight machinery apply per workload unit and plans
+/// sharing units share work.
+fn plan(state: &AppState, req: &Request) -> Response {
+    let body = match Json::parse(&req.body) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, format!("invalid JSON body: {e}")),
+    };
+    let plan = match Plan::from_json(&body) {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, e),
+    };
+    let backend_name = match body.get("backend") {
+        None => "auto",
+        Some(Json::Str(s)) => s.as_str(),
+        Some(other) => {
+            return Response::error(
+                400,
+                format!("\"backend\" must be a string (native|pjrt|auto), got {other}"),
+            )
+        }
+    };
+    let kind = match BackendKind::parse(backend_name) {
+        Ok(k) => k,
+        Err(e) => return Response::error(400, format!("{e:#}")),
+    };
+    let runner = match workload::runner_for(kind) {
+        Ok(r) => r,
+        Err(e) => return Response::error(500, e),
+    };
+    let bench = match plan.compile() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, e),
+    };
+
+    let bench_ref = &bench;
+    let runner_ref: &dyn Runner = runner.as_ref();
+    let jobs: Vec<_> = bench
+        .units
+        .iter()
+        .map(|&unit| move || unit_cached(state, bench_ref, unit, runner_ref, "plan"))
+        .collect();
+    let outcomes = run_parallel(jobs, coordinator::default_threads().min(4));
+
+    let mut units = Vec::with_capacity(outcomes.len());
+    let mut all_cached = true;
+    for (unit, (result, origin)) in bench.units.iter().zip(outcomes) {
+        let body = match result {
+            Ok(body) => body,
+            Err(e) => return Response::error(500, e),
+        };
+        all_cached &= origin != Origin::Computed;
+        units.push(Json::obj(vec![
+            ("unit", Json::Str(unit.label())),
+            ("cached", Json::Bool(origin != Origin::Computed)),
+            ("origin", Json::str(origin.name())),
+            ("result", Json::parse(&body).unwrap_or(Json::Str(body))),
+        ]));
+    }
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("workload", Json::Str(bench.workload.to_spec())),
+            ("device", Json::str(bench.device.name)),
+            ("backend", Json::str(runner.name())),
+            ("cached", Json::Bool(all_cached)),
+            ("count", Json::num(units.len() as f64)),
+            ("units", Json::Arr(units)),
+        ]),
+    )
+}
+
+/// Cached execution of one plan unit (content-addressed by the unit
+/// token, which includes every workload parameter). `metrics_label`
+/// attributes the compute time to the endpoint that paid for it
+/// (`"plan"` or `"sweep"`) in `/v1/metrics`.
+fn unit_cached(
     state: &AppState,
-    dev: &device::Device,
-    instr: &MmaInstr,
+    bench: &BenchPlan,
+    unit: UnitKind,
+    runner: &dyn Runner,
+    metrics_label: &'static str,
+) -> (Result<String, String>, Origin) {
+    let key = cache_key("plan", runner.name(), bench.device.name, &bench.unit_token(&unit));
+    let (result, origin) = state
+        .cache
+        .get_or_compute(&key, || compute_unit(state, bench, unit, runner, &key, metrics_label));
+    note_origin(state, origin);
+    (result, origin)
+}
+
+fn compute_unit(
+    state: &AppState,
+    bench: &BenchPlan,
+    unit: UnitKind,
+    runner: &dyn Runner,
     key: &CacheKey,
+    metrics_label: &'static str,
 ) -> Result<String, String> {
     let t0 = Instant::now();
-    let sweep = match catch_unwind(AssertUnwindSafe(|| sweep_mma(dev, instr))) {
-        Ok(s) => s,
-        Err(_) => return Err(format!("sweep of {instr} on {} panicked", dev.name)),
+    let outcome = catch_unwind(AssertUnwindSafe(|| runner.run_unit(bench, &unit)));
+    let output = match outcome {
+        Ok(Ok(o)) => o,
+        Ok(Err(e)) => return Err(e),
+        Err(_) => {
+            return Err(format!(
+                "plan unit {} of {} panicked during computation",
+                unit.label(),
+                bench.workload
+            ))
+        }
     };
     let ms = t0.elapsed().as_secs_f64() * 1e3;
-    state.metrics.record_compute("sweep", ms);
-    // one serializer for every measured point (grid cells and the
-    // table-style convergence summaries share the field layout)
-    fn point_json(warps: u32, ilp: u32, latency: f64, throughput: f64) -> Json {
-        Json::obj(vec![
-            ("warps", Json::num(warps as f64)),
-            ("ilp", Json::num(ilp as f64)),
-            ("latency", Json::num(latency)),
-            ("throughput", Json::num(throughput)),
-        ])
-    }
-    let cells: Vec<Json> = sweep
-        .cells
-        .iter()
-        .map(|c| point_json(c.warps, c.ilp, c.latency, c.throughput))
-        .collect();
-    let convergence: Vec<Json> = [4u32, 8]
-        .iter()
-        .map(|&w| {
-            let c = convergence_point(&sweep, w);
-            point_json(c.warps, c.ilp, c.latency, c.throughput)
-        })
-        .collect();
-    Ok(Json::obj(vec![
-        ("device", Json::str(dev.name)),
-        ("instr", Json::Str(instr.to_string())),
-        ("ptx", Json::Str(instr.ptx())),
-        ("sparse", Json::Bool(instr.sparse)),
-        (
-            "warps_axis",
-            Json::Arr(sweep.warps_axis.iter().map(|&w| Json::num(w as f64)).collect()),
-        ),
-        ("ilp_axis", Json::Arr(sweep.ilp_axis.iter().map(|&i| Json::num(i as f64)).collect())),
-        ("cells", Json::Arr(cells)),
-        ("convergence", Json::Arr(convergence)),
-        ("peak_throughput", Json::num(sweep.peak_throughput())),
-        ("compute_ms", Json::num(ms)),
-        ("key", Json::str(key.hash.clone())),
-    ])
-    .to_string())
+    state.metrics.record_compute(metrics_label, ms);
+    let Json::Obj(mut fields) = report::unit_output_to_json(&output) else {
+        unreachable!("unit_output_to_json returns an object")
+    };
+    fields.insert("compute_ms".to_string(), Json::num(ms));
+    fields.insert("key".to_string(), Json::str(key.hash.clone()));
+    Ok(Json::Obj(fields).to_string())
 }
 
 #[cfg(test)]
@@ -346,7 +482,22 @@ mod tests {
                     .collect()
             })
             .unwrap_or_default();
-        let req = Request { method: "GET".to_string(), path: path.to_string(), query };
+        let req = Request {
+            method: "GET".to_string(),
+            path: path.to_string(),
+            query,
+            body: String::new(),
+        };
+        handle(state, &req)
+    }
+
+    fn post(state: &AppState, path: &str, body: &str) -> Response {
+        let req = Request {
+            method: "POST".to_string(),
+            path: path.to_string(),
+            query: vec![],
+            body: body.to_string(),
+        };
         handle(state, &req)
     }
 
@@ -375,8 +526,9 @@ mod tests {
         let s = state();
         assert_eq!(get(&s, "/nope").status, 404);
         assert_eq!(get(&s, "/v1/run/t99").status, 404);
-        let req = Request { method: "POST".to_string(), path: "/healthz".to_string(), query: vec![] };
-        assert_eq!(handle(&s, &req).status, 405);
+        assert_eq!(post(&s, "/healthz", "").status, 405);
+        // /v1/plan is POST-only
+        assert_eq!(get(&s, "/v1/plan").status, 405);
     }
 
     #[test]
@@ -430,6 +582,7 @@ mod tests {
         let j = Json::parse(&r.body).unwrap();
         let result = j.get("result").unwrap();
         assert_eq!(result.get_str("device"), Some("a100"));
+        assert_eq!(result.get_str("workload"), Some("mma bf16 f32 m16n8k16"));
         assert_eq!(result.get("cells").unwrap().as_arr().unwrap().len(), 48);
         assert_eq!(result.get("convergence").unwrap().as_arr().unwrap().len(), 2);
         let peak = result.get_f64("peak_throughput").unwrap();
@@ -438,5 +591,88 @@ mod tests {
         let r2 = get(&s, "/v1/sweep?device=a100&instr=bf16,f32,m16n8k16");
         let j2 = Json::parse(&r2.body).unwrap();
         assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn sweep_accepts_every_workload_kind() {
+        // the endpoint is a thin translator onto the workload layer, so
+        // data-movement sweeps work through the same route
+        let s = state();
+        let r = get(&s, "/v1/sweep?device=a100&instr=ldmatrix,x1");
+        assert_eq!(r.status, 200, "{}", r.body);
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get("result").unwrap().get_str("workload"), Some("ldmatrix x1"));
+        // sparse flag is mma-only
+        assert_eq!(get(&s, "/v1/sweep?device=a100&instr=ldmatrix,x1&sparse=true").status, 400);
+    }
+
+    #[test]
+    fn sweep_endpoint_shares_cache_with_plan_sweep_units() {
+        let s = state();
+        // a plan's sweep unit computes the grid once...
+        let body = r#"{"workload":"ldmatrix x2","device":"a100","sweep":true,"backend":"native"}"#;
+        let r = post(&s, "/v1/plan", body);
+        assert_eq!(r.status, 200, "{}", r.body);
+        // ...and the sweep endpoint reuses it (same per-unit content address)
+        let r2 = get(&s, "/v1/sweep?device=a100&instr=ldmatrix,x2");
+        let j2 = Json::parse(&r2.body).unwrap();
+        assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true), "{}", r2.body);
+        assert_eq!(
+            j2.get("result").unwrap().get("cells").unwrap().as_arr().unwrap().len(),
+            48
+        );
+    }
+
+    #[test]
+    fn plan_endpoint_caches_per_unit() {
+        let s = state();
+        let body = r#"{"workload":"ld.shared u32 4","device":"a100",
+                       "points":[[1,1]],"completion_latency":true,"backend":"native"}"#;
+        let r = post(&s, "/v1/plan", body);
+        assert_eq!(r.status, 200, "{}", r.body);
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get_str("workload"), Some("ld.shared u32 4"));
+        assert_eq!(j.get_str("backend"), Some("sim"));
+        assert_eq!(j.get("cached").and_then(Json::as_bool), Some(false));
+        let units = j.get("units").unwrap().as_arr().unwrap();
+        assert_eq!(units.len(), 2);
+        assert!(units.iter().all(|u| u.get("cached").and_then(Json::as_bool) == Some(false)));
+
+        // identical plan: every unit is served from the cache
+        let r2 = post(&s, "/v1/plan", body);
+        let j2 = Json::parse(&r2.body).unwrap();
+        assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
+        let units2 = j2.get("units").unwrap().as_arr().unwrap();
+        assert!(units2.iter().all(|u| u.get("cached").and_then(Json::as_bool) == Some(true)));
+
+        // a plan differing only in ILP misses the cache (the exec point
+        // is part of the content address)
+        let body_ilp2 = r#"{"workload":"ld.shared u32 4","device":"a100",
+                            "points":[[1,2]],"backend":"native"}"#;
+        let r3 = post(&s, "/v1/plan", body_ilp2);
+        let j3 = Json::parse(&r3.body).unwrap();
+        let units3 = j3.get("units").unwrap().as_arr().unwrap();
+        assert_eq!(units3[0].get_str("origin"), Some("computed"), "{}", r3.body);
+    }
+
+    #[test]
+    fn plan_endpoint_rejects_bad_requests() {
+        let s = state();
+        // malformed JSON
+        let r = post(&s, "/v1/plan", "{not json");
+        assert_eq!(r.status, 400);
+        assert!(Json::parse(&r.body).unwrap().get_str("error").unwrap().contains("JSON"));
+        // schema violations and impossible plans
+        for body in [
+            r#"{}"#,
+            r#"{"workload":"nonsense"}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16"}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","points":[[4,1]],"device":"h100"}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","points":[[4,1]],"backend":"cuda"}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","points":[[4,1]],"backend":false}"#,
+            r#"{"workload":"fp16 f32 m16n8k16 sparse","points":[[4,1]],"device":"rtx2080ti"}"#,
+        ] {
+            assert_eq!(post(&s, "/v1/plan", body).status, 400, "{body}");
+        }
     }
 }

@@ -1,0 +1,569 @@
+//! Unified workload API — one typed execution layer for every
+//! microbenchmarked instruction family.
+//!
+//! The paper's central §2.2 contrast is between programming interfaces
+//! (legacy `wmma` vs. current `mma`/`mma.sp`); this module removes the
+//! same fragmentation from our own programming interface. Instead of a
+//! separate family of free functions per instruction kind
+//! (`measure_mma`, `sweep_ldmatrix`, `completion_latency_mma`, …) there
+//! is one [`Workload`] enum covering all five microbenchmarked kinds —
+//! `mma`, `mma.sp`, `ldmatrix`, `ld.shared` and `wmma` — with
+//! per-variant typed parameters, a shared [`ExecPoint`] (#warps, ILP)
+//! coordinate, and spec-string round-tripping
+//! ([`Workload::parse_spec`] / [`Workload::to_spec`]).
+//!
+//! On top of it, [`Plan`] builds a [`BenchPlan`] — a batch of runnable
+//! units (fixed points, a full sweep, a completion-latency probe) that a
+//! [`Runner`] executes, producing a uniform [`BenchResult`] consumed by
+//! [`crate::report::render_bench`] and [`crate::report::bench_to_json`].
+//! The CLI `repro sweep`, the coordinator's table/figure experiments and
+//! the tcserved `POST /v1/plan` endpoint are all thin translators into
+//! this one path.
+//!
+//! ```
+//! use tcbench::workload::{Plan, SimRunner, Workload};
+//!
+//! let w = Workload::parse_spec("mma bf16 f32 m16n8k16").unwrap();
+//! let plan = Plan::new(w)
+//!     .device("a100")
+//!     .point(8, 2)
+//!     .completion_latency()
+//!     .compile()
+//!     .unwrap();
+//! let result = plan.run(&SimRunner, 1).unwrap();
+//! assert!(result.point(8, 2).unwrap().throughput > 900.0);
+//! ```
+
+mod plan;
+mod runner;
+
+pub use plan::{BenchPlan, BenchResult, Plan, UnitKind, UnitOutput};
+pub use runner::{runner_for, ArtifactRunner, Runner, SimRunner};
+
+use std::fmt;
+
+use crate::device::Device;
+use crate::isa::{AbType, CdType, LdMatrixNum, LdSharedWidth, MmaInstr, MmaShape};
+use crate::microbench::wmma::{measure_wmma, WmmaShape};
+use crate::microbench::{
+    measure_ld_shared_at, measure_ldmatrix, measure_mma, Measurement, Sweep, SweepCell,
+    SWEEP_ILPS, SWEEP_WARPS,
+};
+
+/// One (#warps, ILP) execution coordinate — the paper's per-measurement
+/// configuration, shared by every workload kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExecPoint {
+    pub warps: u32,
+    pub ilp: u32,
+}
+
+impl ExecPoint {
+    pub const fn new(warps: u32, ilp: u32) -> ExecPoint {
+        ExecPoint { warps, ilp }
+    }
+
+    /// Range check against what the SM simulator meaningfully models
+    /// (the paper sweeps warps up to 32 and ILP up to 6).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1..=32).contains(&self.warps) {
+            return Err(format!("warps must be in 1..=32, got {}", self.warps));
+        }
+        if !(1..=8).contains(&self.ilp) {
+            return Err(format!("ilp must be in 1..=8, got {}", self.ilp));
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for ExecPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{})", self.warps, self.ilp)
+    }
+}
+
+/// One microbenchmarkable workload: the five instruction families of the
+/// paper, each with its typed parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// Dense Tensor-Core FMA (`mma.sync`, §5).
+    Mma { ab: AbType, cd: CdType, shape: MmaShape },
+    /// 2:4 structured-sparse FMA (`mma.sp.sync`, §6).
+    MmaSp { ab: AbType, cd: CdType, shape: MmaShape },
+    /// Fragment loads from shared memory (`ldmatrix.xN`, §7).
+    Ldmatrix { num: LdMatrixNum },
+    /// Plain shared-memory loads under `ways`-way bank conflicts
+    /// (`ld.shared`, Table 10).
+    LdShared { width: LdSharedWidth, ways: u32 },
+    /// The legacy `wmma.mma` interface, modeled as its compiled HMMA
+    /// sequence (§2.2, Fig. 2/3).
+    Wmma { ab: AbType, cd: CdType, shape: WmmaShape },
+}
+
+impl Workload {
+    /// Lift an [`MmaInstr`] into the workload space (`sparse` selects
+    /// [`Workload::MmaSp`]).
+    pub fn from_instr(instr: MmaInstr) -> Workload {
+        if instr.sparse {
+            Workload::MmaSp { ab: instr.ab, cd: instr.cd, shape: instr.shape }
+        } else {
+            Workload::Mma { ab: instr.ab, cd: instr.cd, shape: instr.shape }
+        }
+    }
+
+    /// The `mma`/`mma.sp` instruction behind this workload, if any.
+    pub fn mma_instr(&self) -> Option<MmaInstr> {
+        match *self {
+            Workload::Mma { ab, cd, shape } => Some(MmaInstr::dense(ab, cd, shape)),
+            Workload::MmaSp { ab, cd, shape } => Some(MmaInstr::sp(ab, cd, shape)),
+            _ => None,
+        }
+    }
+
+    /// The workload family keyword (first token of the spec).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Workload::Mma { .. } => "mma",
+            Workload::MmaSp { .. } => "mma.sp",
+            Workload::Ldmatrix { .. } => "ldmatrix",
+            Workload::LdShared { .. } => "ld.shared",
+            Workload::Wmma { .. } => "wmma",
+        }
+    }
+
+    /// Unit of the throughput column (paper convention: FMA/clk/SM for
+    /// compute, bytes/clk/SM for data movement).
+    pub fn throughput_unit(&self) -> &'static str {
+        match self {
+            Workload::Mma { .. } | Workload::MmaSp { .. } | Workload::Wmma { .. } => "FMA/clk/SM",
+            Workload::Ldmatrix { .. } | Workload::LdShared { .. } => "bytes/clk/SM",
+        }
+    }
+
+    /// Parse a workload spec: the kind keyword followed by its typed
+    /// parameters, whitespace- or comma-separated —
+    ///
+    /// ```text
+    /// mma <ab> <cd> <shape>          mma bf16 f32 m16n8k16
+    /// mma.sp <ab> <cd> <shape>       mma.sp fp16 f32 m16n8k32
+    /// ldmatrix <x1|x2|x4>            ldmatrix x4   (also "ldmatrix.x4")
+    /// ld.shared <u32|u64> <ways>     ld.shared u32 8
+    /// wmma <ab> <cd> <shape>         wmma fp16 f32 m16n16k16
+    /// ```
+    ///
+    /// A legacy `mma` spec without the keyword (`"<ab> <cd> <shape>
+    /// [sparse]"`, as accepted by [`MmaInstr::parse_spec`]) keeps
+    /// working. The exact inverse of [`Workload::to_spec`].
+    pub fn parse_spec(spec: &str) -> Result<Workload, String> {
+        let parts: Vec<&str> = spec
+            .split(|c: char| c.is_whitespace() || c == ',')
+            .filter(|s| !s.is_empty())
+            .collect();
+        let Some(&head) = parts.first() else {
+            return Err(format!("empty workload spec {spec:?}"));
+        };
+        let head_lower = head.to_ascii_lowercase();
+        match head_lower.as_str() {
+            "mma" | "mma.sp" => {
+                if parts.len() != 4 {
+                    return Err(format!(
+                        "{head_lower} workload spec must be \"{head_lower} <ab> <cd> <shape>\", \
+                         got {spec:?}"
+                    ));
+                }
+                let ab = AbType::parse_spec(parts[1])?;
+                let cd = CdType::parse_spec(parts[2])?;
+                let shape: MmaShape = parts[3].parse()?;
+                Ok(if head_lower == "mma.sp" {
+                    Workload::MmaSp { ab, cd, shape }
+                } else {
+                    Workload::Mma { ab, cd, shape }
+                })
+            }
+            "wmma" => {
+                if parts.len() != 4 {
+                    return Err(format!(
+                        "wmma workload spec must be \"wmma <ab> <cd> <shape>\", got {spec:?}"
+                    ));
+                }
+                let ab = AbType::parse_spec(parts[1])?;
+                let cd = CdType::parse_spec(parts[2])?;
+                let s: MmaShape = parts[3].parse()?;
+                Ok(Workload::Wmma { ab, cd, shape: WmmaShape { m: s.m, n: s.n, k: s.k } })
+            }
+            "ld.shared" => {
+                if parts.len() != 3 {
+                    return Err(format!(
+                        "ld.shared workload spec must be \"ld.shared <u32|u64> <ways>\", \
+                         got {spec:?}"
+                    ));
+                }
+                let width = match parts[1].to_ascii_lowercase().as_str() {
+                    "u32" => LdSharedWidth::U32,
+                    "u64" => LdSharedWidth::U64,
+                    other => return Err(format!("unknown ld.shared width {other:?} (u32|u64)")),
+                };
+                let ways: u32 = parts[2]
+                    .parse()
+                    .map_err(|_| format!("ld.shared conflict ways must be a number, got {:?}", parts[2]))?;
+                Ok(Workload::LdShared { width, ways })
+            }
+            tok if tok == "ldmatrix" || tok.starts_with("ldmatrix.") => {
+                let num_tok = if let Some(suffix) = tok.strip_prefix("ldmatrix.") {
+                    if parts.len() != 1 {
+                        return Err(format!(
+                            "ldmatrix workload spec must be \"ldmatrix <x1|x2|x4>\", got {spec:?}"
+                        ));
+                    }
+                    suffix.to_string()
+                } else {
+                    if parts.len() != 2 {
+                        return Err(format!(
+                            "ldmatrix workload spec must be \"ldmatrix <x1|x2|x4>\", got {spec:?}"
+                        ));
+                    }
+                    parts[1].to_ascii_lowercase()
+                };
+                let num = match num_tok.as_str() {
+                    "x1" | "1" => LdMatrixNum::X1,
+                    "x2" | "2" => LdMatrixNum::X2,
+                    "x4" | "4" => LdMatrixNum::X4,
+                    other => return Err(format!("unknown ldmatrix num {other:?} (x1|x2|x4)")),
+                };
+                Ok(Workload::Ldmatrix { num })
+            }
+            _ => MmaInstr::parse_spec(spec).map(Workload::from_instr).map_err(|e| {
+                format!(
+                    "{e} (or start the spec with a workload kind: \
+                     mma | mma.sp | ldmatrix | ld.shared | wmma)"
+                )
+            }),
+        }
+    }
+
+    /// Canonical spec string — round-trips through
+    /// [`Workload::parse_spec`] and carries *every* parameter of the
+    /// workload, so it is safe to use as a cache-key coordinate.
+    pub fn to_spec(&self) -> String {
+        match *self {
+            Workload::Mma { ab, cd, shape } => {
+                format!("mma {} {} {}", ab.spec_name(), cd.spec_name(), shape)
+            }
+            Workload::MmaSp { ab, cd, shape } => {
+                format!("mma.sp {} {} {}", ab.spec_name(), cd.spec_name(), shape)
+            }
+            Workload::Ldmatrix { num } => format!("ldmatrix x{}", num.count()),
+            Workload::LdShared { width, ways } => {
+                let w = match width {
+                    LdSharedWidth::U32 => "u32",
+                    LdSharedWidth::U64 => "u64",
+                };
+                format!("ld.shared {w} {ways}")
+            }
+            Workload::Wmma { ab, cd, shape } => format!(
+                "wmma {} {} m{}n{}k{}",
+                ab.spec_name(),
+                cd.spec_name(),
+                shape.m,
+                shape.n,
+                shape.k
+            ),
+        }
+    }
+
+    /// Is this workload well-formed and runnable on `device`? Returns a
+    /// user-facing reason when not.
+    pub fn validate(&self, device: &Device) -> Result<(), String> {
+        match *self {
+            Workload::Mma { .. } | Workload::MmaSp { .. } => {
+                let instr = self.mma_instr().expect("mma workload");
+                if !instr.is_well_formed() {
+                    Err(format!(
+                        "{instr} is not well-formed (illegal operand/accumulator pairing)"
+                    ))
+                } else if !device.supports(&instr) {
+                    Err(format!("{instr} is not supported on {}", device.name))
+                } else {
+                    Ok(())
+                }
+            }
+            Workload::Ldmatrix { .. } => {
+                if device.arch.supports_ldmatrix() {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "ldmatrix is not available on {} ({:?})",
+                        device.name, device.arch
+                    ))
+                }
+            }
+            Workload::LdShared { width, ways } => {
+                if !(1..=32).contains(&ways) || !ways.is_power_of_two() {
+                    return Err(format!(
+                        "ld.shared conflict ways must be a power of two in 1..=32, got {ways}"
+                    ));
+                }
+                if ways < width.min_transactions() {
+                    return Err(format!(
+                        "{width} is intrinsically {}-transaction wide; ways must be >= {}",
+                        width.min_transactions(),
+                        width.min_transactions()
+                    ));
+                }
+                Ok(())
+            }
+            Workload::Wmma { ab, cd, shape } => {
+                // compiled_mmas fragments along n into m x 8 x k pieces,
+                // so any other n would silently measure (and cache) a
+                // different workload than the one named
+                if shape.m == 0 || shape.k == 0 || shape.n == 0 || shape.n % 8 != 0 {
+                    return Err(format!(
+                        "wmma shape m{}n{}k{} is not fragmentable: m and k must be \
+                         positive and n a positive multiple of 8",
+                        shape.m, shape.n, shape.k
+                    ));
+                }
+                for piece in shape.compiled_mmas(ab, cd) {
+                    if !piece.is_well_formed() {
+                        return Err(format!(
+                            "wmma piece {piece} is not well-formed \
+                             (illegal operand/accumulator pairing)"
+                        ));
+                    }
+                    if !device.supports(&piece) {
+                        return Err(format!(
+                            "wmma compiles to {piece}, which is not supported on {}",
+                            device.name
+                        ));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Measure this workload at one (#warps, ILP) point on the cycle
+    /// simulator. Panics on workloads the device does not support — call
+    /// [`Workload::validate`] first (the [`Plan`] compiler does).
+    pub fn measure(&self, device: &Device, point: ExecPoint) -> Measurement {
+        let ExecPoint { warps, ilp } = point;
+        match *self {
+            Workload::Mma { .. } | Workload::MmaSp { .. } => {
+                measure_mma(device, &self.mma_instr().expect("mma workload"), warps, ilp)
+            }
+            Workload::Ldmatrix { num } => measure_ldmatrix(device, num, warps, ilp),
+            Workload::LdShared { width, ways } => {
+                measure_ld_shared_at(device, width, ways, warps, ilp)
+            }
+            Workload::Wmma { ab, cd, shape } => measure_wmma(device, shape, ab, cd, warps, ilp),
+        }
+    }
+
+    /// Completion/issue latency (§4 step 1): one warp, ILP = 1.
+    pub fn completion_latency(&self, device: &Device) -> f64 {
+        self.measure(device, ExecPoint::new(1, 1)).latency
+    }
+
+    /// Full (ILP, #warps) grid over the paper's sweep axes (§4 step 2) —
+    /// one code path for all five workload kinds.
+    pub fn sweep(&self, device: &Device) -> Sweep {
+        let mut cells = Vec::with_capacity(SWEEP_WARPS.len() * SWEEP_ILPS.len());
+        for &warps in &SWEEP_WARPS {
+            for &ilp in &SWEEP_ILPS {
+                let m = self.measure(device, ExecPoint::new(warps, ilp));
+                cells.push(SweepCell {
+                    warps,
+                    ilp,
+                    latency: m.latency,
+                    throughput: m.throughput,
+                });
+            }
+        }
+        Sweep {
+            label: self.to_string(),
+            warps_axis: SWEEP_WARPS.to_vec(),
+            ilp_axis: SWEEP_ILPS.to_vec(),
+            cells,
+        }
+    }
+}
+
+impl fmt::Display for Workload {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Workload::Mma { .. } | Workload::MmaSp { .. } => {
+                write!(f, "{}", self.mma_instr().expect("mma workload"))
+            }
+            Workload::Ldmatrix { num } => write!(f, "{num}"),
+            Workload::LdShared { width, ways } => write!(f, "{width} ({ways}-way)"),
+            Workload::Wmma { ab, cd, shape } => {
+                write!(f, "wmma.m{}n{}k{} {ab}/{cd}", shape.m, shape.n, shape.k)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{a100, rtx2080ti};
+    use crate::isa::shapes::*;
+    use crate::microbench::{measure_ld_shared, sweep_mma};
+
+    fn all_kinds() -> Vec<Workload> {
+        vec![
+            Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 },
+            Workload::MmaSp { ab: AbType::Fp16, cd: CdType::Fp32, shape: M16N8K32 },
+            Workload::Ldmatrix { num: LdMatrixNum::X4 },
+            Workload::LdShared { width: LdSharedWidth::U64, ways: 8 },
+            Workload::Wmma {
+                ab: AbType::Fp16,
+                cd: CdType::Fp32,
+                shape: WmmaShape { m: 16, n: 16, k: 16 },
+            },
+        ]
+    }
+
+    #[test]
+    fn spec_round_trips_for_all_five_kinds() {
+        for w in all_kinds() {
+            let spec = w.to_spec();
+            let parsed = Workload::parse_spec(&spec)
+                .unwrap_or_else(|e| panic!("{spec:?} failed to re-parse: {e}"));
+            assert_eq!(parsed, w, "{spec:?}");
+            assert_eq!(parsed.to_spec(), spec);
+        }
+    }
+
+    #[test]
+    fn parse_accepts_aliases_and_legacy_mma_specs() {
+        // legacy MmaInstr specs (no kind keyword) still parse
+        let legacy = Workload::parse_spec("bf16,f32,m16n8k16").unwrap();
+        assert_eq!(
+            legacy,
+            Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 }
+        );
+        let sp = Workload::parse_spec("fp16 f32 m16n8k32 sparse").unwrap();
+        assert_eq!(sp.kind(), "mma.sp");
+        // ldmatrix display form parses back
+        assert_eq!(
+            Workload::parse_spec("ldmatrix.x2").unwrap(),
+            Workload::Ldmatrix { num: LdMatrixNum::X2 }
+        );
+        assert_eq!(
+            Workload::parse_spec("ldmatrix 4").unwrap(),
+            Workload::Ldmatrix { num: LdMatrixNum::X4 }
+        );
+        // kind keywords are case-insensitive
+        assert_eq!(
+            Workload::parse_spec("LD.SHARED u32 8").unwrap(),
+            Workload::LdShared { width: LdSharedWidth::U32, ways: 8 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(Workload::parse_spec("").is_err());
+        assert!(Workload::parse_spec("mma bf16 f32").is_err());
+        assert!(Workload::parse_spec("mma.sp bf16 f32 m16n8k16 extra").is_err());
+        assert!(Workload::parse_spec("ldmatrix x8").is_err());
+        assert!(Workload::parse_spec("ld.shared u128 2").is_err());
+        assert!(Workload::parse_spec("ld.shared u32 many").is_err());
+        assert!(Workload::parse_spec("wmma fp16 f32").is_err());
+        // unknown head falls through to the legacy parser, whose error
+        // mentions the workload-kind syntax
+        let err = Workload::parse_spec("garbage").unwrap_err();
+        assert!(err.contains("mma | mma.sp | ldmatrix | ld.shared | wmma"), "{err}");
+    }
+
+    #[test]
+    fn validate_enforces_device_legality() {
+        let ampere = a100();
+        let turing = rtx2080ti();
+        for w in all_kinds() {
+            assert!(w.validate(&ampere).is_ok(), "{w} should be valid on a100");
+        }
+        // no sparse Tensor Cores on Turing
+        let sp = Workload::MmaSp { ab: AbType::Fp16, cd: CdType::Fp32, shape: M16N8K32 };
+        assert!(sp.validate(&turing).unwrap_err().contains("not supported"));
+        // wmma pieces must exist in the device's calibration
+        let wmma = Workload::Wmma {
+            ab: AbType::Fp16,
+            cd: CdType::Fp32,
+            shape: WmmaShape { m: 16, n: 16, k: 16 },
+        };
+        assert!(wmma.validate(&turing).unwrap_err().contains("wmma"));
+        // conflict ways must be a power of two, and u64 is 2-way minimum
+        let odd = Workload::LdShared { width: LdSharedWidth::U32, ways: 3 };
+        assert!(odd.validate(&ampere).unwrap_err().contains("power of two"));
+        let narrow = Workload::LdShared { width: LdSharedWidth::U64, ways: 1 };
+        assert!(narrow.validate(&ampere).unwrap_err().contains("ways must be >= 2"));
+        // wmma shapes must fragment exactly into n=8 pieces — anything
+        // else would mislabel the measured workload
+        for (m, n, k) in [(16, 9, 16), (16, 0, 16), (0, 16, 16), (16, 12, 16)] {
+            let w = Workload::Wmma {
+                ab: AbType::Fp16,
+                cd: CdType::Fp32,
+                shape: WmmaShape { m, n, k },
+            };
+            assert!(
+                w.validate(&ampere).unwrap_err().contains("fragmentable"),
+                "m{m}n{n}k{k} must be rejected"
+            );
+        }
+        // malformed pairing is caught before the device lookup
+        let bad = Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp16, shape: M16N8K16 };
+        assert!(bad.validate(&ampere).unwrap_err().contains("well-formed"));
+    }
+
+    #[test]
+    fn measure_matches_the_legacy_free_functions() {
+        let d = a100();
+        let w = Workload::Mma { ab: AbType::Fp16, cd: CdType::Fp32, shape: M16N8K16 };
+        let via_workload = w.measure(&d, ExecPoint::new(8, 2));
+        let via_free = crate::microbench::measure_mma(
+            &d,
+            &MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16),
+            8,
+            2,
+        );
+        assert_eq!(via_workload, via_free);
+
+        let ld = Workload::LdShared { width: LdSharedWidth::U32, ways: 4 };
+        assert_eq!(
+            ld.measure(&d, ExecPoint::new(1, 1)),
+            measure_ld_shared(&d, LdSharedWidth::U32, 4)
+        );
+    }
+
+    #[test]
+    fn workload_sweep_matches_legacy_sweep_mma() {
+        let d = a100();
+        let instr = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16);
+        let via_workload = Workload::from_instr(instr).sweep(&d);
+        let via_free = sweep_mma(&d, &instr);
+        assert_eq!(via_workload.cells.len(), via_free.cells.len());
+        for (a, b) in via_workload.cells.iter().zip(&via_free.cells) {
+            assert_eq!((a.warps, a.ilp), (b.warps, b.ilp));
+            assert_eq!(a.latency, b.latency);
+            assert_eq!(a.throughput, b.throughput);
+        }
+    }
+
+    #[test]
+    fn completion_latency_is_the_1_1_point() {
+        let d = a100();
+        let w = Workload::Ldmatrix { num: LdMatrixNum::X1 };
+        let lat = w.completion_latency(&d);
+        assert!((lat - 23.0).abs() < 1.5, "{lat}"); // Table 9
+    }
+
+    #[test]
+    fn exec_point_validation() {
+        assert!(ExecPoint::new(4, 3).validate().is_ok());
+        assert!(ExecPoint::new(0, 1).validate().is_err());
+        assert!(ExecPoint::new(33, 1).validate().is_err());
+        assert!(ExecPoint::new(4, 0).validate().is_err());
+        assert!(ExecPoint::new(4, 9).validate().is_err());
+    }
+}

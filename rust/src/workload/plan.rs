@@ -1,0 +1,591 @@
+//! [`Plan`] builder → [`BenchPlan`] (a compiled batch of runnable
+//! units) → [`BenchResult`] (a uniform, renderable result).
+//!
+//! A plan describes *what to measure* — fixed [`ExecPoint`]s, a full
+//! (ILP, #warps) sweep with convergence summaries, a completion-latency
+//! probe — for one [`Workload`] on one device. Compilation resolves the
+//! device, validates the workload against it and materializes the unit
+//! batch; execution hands each unit to a [`Runner`](super::Runner) over
+//! the coordinator worker pool. Every unit has a canonical token
+//! ([`BenchPlan::unit_token`]) carrying *all* workload parameters, which
+//! tcserved uses as the content-address coordinate for its per-unit
+//! result cache.
+
+use std::time::Instant;
+
+use crate::coordinator::run_parallel;
+use crate::device::{self, Device};
+use crate::microbench::{ConvergencePoint, Measurement, Sweep, SWEEP_WARPS};
+use crate::util::Json;
+
+use super::runner::Runner;
+use super::{ExecPoint, Workload};
+
+/// One runnable unit of a compiled plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnitKind {
+    /// Measure at one fixed (#warps, ILP) point.
+    Point(ExecPoint),
+    /// The full sweep grid plus convergence points.
+    Sweep,
+    /// Completion/issue latency (one warp, ILP = 1).
+    Completion,
+}
+
+impl UnitKind {
+    /// Short display label (`point(4,3)`, `sweep`, `completion`).
+    pub fn label(&self) -> String {
+        match self {
+            UnitKind::Point(p) => format!("point{p}"),
+            UnitKind::Sweep => "sweep".to_string(),
+            UnitKind::Completion => "completion".to_string(),
+        }
+    }
+}
+
+/// Builder for a [`BenchPlan`]. Defaults: device `a100`, convergence
+/// summaries at 4 and 8 warps when a sweep is requested.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    workload: Workload,
+    device: String,
+    points: Vec<ExecPoint>,
+    sweep: bool,
+    completion: bool,
+    convergence: Vec<u32>,
+}
+
+impl Plan {
+    pub fn new(workload: Workload) -> Plan {
+        Plan {
+            workload,
+            device: "a100".to_string(),
+            points: Vec::new(),
+            sweep: false,
+            completion: false,
+            convergence: Vec::new(),
+        }
+    }
+
+    /// Target device by registry name (see `repro devices`).
+    pub fn device(mut self, name: &str) -> Plan {
+        self.device = name.to_string();
+        self
+    }
+
+    /// Add one fixed measurement point.
+    pub fn point(mut self, warps: u32, ilp: u32) -> Plan {
+        self.points.push(ExecPoint::new(warps, ilp));
+        self
+    }
+
+    /// Add many fixed measurement points.
+    pub fn points<I: IntoIterator<Item = (u32, u32)>>(mut self, pts: I) -> Plan {
+        for (warps, ilp) in pts {
+            self.points.push(ExecPoint::new(warps, ilp));
+        }
+        self
+    }
+
+    /// Request the full (ILP, #warps) sweep grid.
+    pub fn sweep(mut self) -> Plan {
+        self.sweep = true;
+        self
+    }
+
+    /// Request convergence summaries at the given warp counts (implies
+    /// [`Plan::sweep`]; the default is 4 and 8, the paper's table
+    /// points).
+    pub fn convergence(mut self, warps: &[u32]) -> Plan {
+        self.sweep = true;
+        self.convergence = warps.to_vec();
+        self
+    }
+
+    /// Request the completion/issue-latency probe.
+    pub fn completion_latency(mut self) -> Plan {
+        self.completion = true;
+        self
+    }
+
+    /// Strict u32 from a JSON number: rejects fractions and
+    /// out-of-range values instead of silently truncating them (the
+    /// value becomes part of a cache key, so what the client sent and
+    /// what runs must be identical).
+    fn as_exact_u32(v: &Json, what: &str) -> Result<u32, String> {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| format!("{what} must be a number, got {v}"))?;
+        if n.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&n) {
+            return Err(format!("{what} must be a non-negative integer, got {v}"));
+        }
+        Ok(n as u32)
+    }
+
+    /// Parse a plan from its JSON wire form (the `POST /v1/plan` body):
+    ///
+    /// ```json
+    /// {"workload": "mma bf16 f32 m16n8k16", "device": "a100",
+    ///  "points": [[4,3],[8,2]], "sweep": true,
+    ///  "completion_latency": true, "convergence": [4,8]}
+    /// ```
+    ///
+    /// Points may also be objects: `{"warps": 4, "ilp": 3}`. A
+    /// `"backend"` field is tolerated (the server interprets it);
+    /// any other unknown field is rejected.
+    pub fn from_json(j: &Json) -> Result<Plan, String> {
+        let obj = j.as_obj().ok_or("plan must be a JSON object")?;
+        for key in obj.keys() {
+            if !matches!(
+                key.as_str(),
+                "workload" | "device" | "points" | "sweep" | "completion_latency"
+                    | "convergence" | "backend"
+            ) {
+                return Err(format!(
+                    "unknown plan field {key:?} (workload, device, points, sweep, \
+                     completion_latency, convergence, backend)"
+                ));
+            }
+        }
+        let spec = j
+            .get_str("workload")
+            .ok_or("plan needs a \"workload\" spec string")?;
+        let mut plan = Plan::new(Workload::parse_spec(spec)?);
+        match j.get("device") {
+            None => {}
+            Some(Json::Str(d)) => plan = plan.device(d),
+            Some(other) => {
+                return Err(format!("\"device\" must be a device-name string, got {other}"))
+            }
+        }
+        if let Some(points) = j.get("points") {
+            let arr = points.as_arr().ok_or("\"points\" must be an array")?;
+            for p in arr {
+                let (warps, ilp) = if let Some(pair) = p.as_arr() {
+                    if pair.len() != 2 {
+                        return Err(format!("each point must be [warps, ilp], got {p}"));
+                    }
+                    (
+                        Self::as_exact_u32(&pair[0], "point warps")?,
+                        Self::as_exact_u32(&pair[1], "point ilp")?,
+                    )
+                } else if p.as_obj().is_some() {
+                    (
+                        Self::as_exact_u32(
+                            p.get("warps").ok_or("point object needs \"warps\"")?,
+                            "point warps",
+                        )?,
+                        Self::as_exact_u32(
+                            p.get("ilp").ok_or("point object needs \"ilp\"")?,
+                            "point ilp",
+                        )?,
+                    )
+                } else {
+                    return Err(format!(
+                        "each point must be [warps, ilp] or {{\"warps\":..,\"ilp\":..}}, got {p}"
+                    ));
+                };
+                plan = plan.point(warps, ilp);
+            }
+        }
+        let mut sweep_declined = false;
+        match j.get("sweep") {
+            None => {}
+            Some(Json::Bool(true)) => plan = plan.sweep(),
+            Some(Json::Bool(false)) => sweep_declined = true,
+            Some(other) => return Err(format!("\"sweep\" must be a boolean, got {other}")),
+        }
+        match j.get("completion_latency") {
+            None | Some(Json::Bool(false)) => {}
+            Some(Json::Bool(true)) => plan = plan.completion_latency(),
+            Some(other) => {
+                return Err(format!("\"completion_latency\" must be a boolean, got {other}"))
+            }
+        }
+        if let Some(conv) = j.get("convergence") {
+            // convergence() implies sweep(), so honoring it after an
+            // explicit "sweep": false would run work the client declined
+            if sweep_declined {
+                return Err(
+                    "\"convergence\" requires a sweep; remove it or set \"sweep\": true"
+                        .to_string(),
+                );
+            }
+            let arr = conv.as_arr().ok_or("\"convergence\" must be an array of warp counts")?;
+            let mut warps = Vec::with_capacity(arr.len());
+            for w in arr {
+                warps.push(Self::as_exact_u32(w, "convergence warp count")?);
+            }
+            plan = plan.convergence(&warps);
+        }
+        Ok(plan)
+    }
+
+    /// The JSON wire form of this plan (inverse of [`Plan::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("workload", Json::Str(self.workload.to_spec())),
+            ("device", Json::Str(self.device.clone())),
+        ];
+        if !self.points.is_empty() {
+            fields.push((
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::Arr(vec![Json::num(p.warps as f64), Json::num(p.ilp as f64)])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if self.sweep {
+            fields.push(("sweep", Json::Bool(true)));
+        }
+        if self.completion {
+            fields.push(("completion_latency", Json::Bool(true)));
+        }
+        if !self.convergence.is_empty() {
+            fields.push((
+                "convergence",
+                Json::Arr(self.convergence.iter().map(|&w| Json::num(w as f64)).collect()),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Validate the plan and compile it into the runnable unit batch.
+    pub fn compile(self) -> Result<BenchPlan, String> {
+        let device = device::by_name(&self.device).ok_or_else(|| {
+            format!(
+                "unknown device {:?}; known: {}",
+                self.device,
+                device::registry()
+                    .iter()
+                    .map(|d| d.name)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        self.workload.validate(&device)?;
+        let mut units = Vec::new();
+        if self.completion {
+            units.push(UnitKind::Completion);
+        }
+        let mut seen: Vec<ExecPoint> = Vec::new();
+        for p in &self.points {
+            p.validate()?;
+            if seen.contains(p) {
+                continue; // identical points are one unit of work
+            }
+            seen.push(*p);
+            units.push(UnitKind::Point(*p));
+        }
+        let convergence_warps = if self.sweep {
+            let warps = if self.convergence.is_empty() { vec![4, 8] } else { self.convergence };
+            for &w in &warps {
+                if !SWEEP_WARPS.contains(&w) {
+                    return Err(format!(
+                        "convergence warp count {w} is not on the sweep axis {SWEEP_WARPS:?}"
+                    ));
+                }
+            }
+            units.push(UnitKind::Sweep);
+            warps
+        } else {
+            Vec::new()
+        };
+        if units.is_empty() {
+            return Err(
+                "empty plan: request at least one of points(), sweep() or completion_latency()"
+                    .to_string(),
+            );
+        }
+        Ok(BenchPlan { workload: self.workload, device, convergence_warps, units })
+    }
+}
+
+/// A validated, compiled plan: the workload, its resolved device, and
+/// the batch of units to run.
+#[derive(Debug, Clone)]
+pub struct BenchPlan {
+    pub workload: Workload,
+    pub device: Device,
+    /// Warp counts the sweep unit summarizes with convergence points.
+    pub convergence_warps: Vec<u32>,
+    pub units: Vec<UnitKind>,
+}
+
+impl BenchPlan {
+    /// Canonical coordinate of one unit, carrying every workload
+    /// parameter (type, shape, ldmatrix num, ld.shared width/ways, exec
+    /// point) — the content-address input of tcserved's per-unit cache.
+    ///
+    /// Sweep tokens include the convergence warp list deliberately: the
+    /// cached payload embeds the convergence summaries, so two plans
+    /// with different lists are different content. Plans using the
+    /// default list (4 and 8) all share one entry.
+    pub fn unit_token(&self, unit: &UnitKind) -> String {
+        let base = self.workload.to_spec();
+        match unit {
+            UnitKind::Completion => format!("{base}|completion"),
+            UnitKind::Point(p) => format!("{base}|point:w{}:i{}", p.warps, p.ilp),
+            UnitKind::Sweep => format!(
+                "{base}|sweep:conv={}",
+                self.convergence_warps
+                    .iter()
+                    .map(|w| w.to_string())
+                    .collect::<Vec<_>>()
+                    .join("+")
+            ),
+        }
+    }
+
+    /// Execute every unit on `runner` across `threads` pool workers,
+    /// collecting a uniform [`BenchResult`]. Unit order is preserved.
+    pub fn run(&self, runner: &dyn Runner, threads: usize) -> Result<BenchResult, String> {
+        let t0 = Instant::now();
+        let jobs: Vec<_> = self
+            .units
+            .iter()
+            .map(|&unit| move || runner.run_unit(self, &unit).map(|out| (unit, out)))
+            .collect();
+        let mut units = Vec::with_capacity(self.units.len());
+        for result in run_parallel(jobs, threads) {
+            units.push(result?);
+        }
+        Ok(BenchResult {
+            workload: self.workload,
+            runner: runner.name(),
+            device_name: self.device.name,
+            arch: format!("{:?}", self.device.arch),
+            sms: self.device.sms,
+            throughput_unit: self.workload.throughput_unit(),
+            units,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
+/// The output of one executed unit.
+#[derive(Debug, Clone)]
+pub enum UnitOutput {
+    Point(Measurement),
+    Sweep { sweep: Sweep, convergence: Vec<ConvergencePoint> },
+    Completion(f64),
+}
+
+/// A uniform plan result: measurements, convergence points and device
+/// metadata, consumed by [`crate::report::render_bench`] (text) and
+/// [`crate::report::bench_to_json`] (machine-readable).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub workload: Workload,
+    /// Name of the [`Runner`](super::Runner) that executed the plan.
+    pub runner: &'static str,
+    pub device_name: &'static str,
+    pub arch: String,
+    pub sms: u32,
+    pub throughput_unit: &'static str,
+    /// Unit outputs, in plan order.
+    pub units: Vec<(UnitKind, UnitOutput)>,
+    pub wall_ms: f64,
+}
+
+impl BenchResult {
+    /// The completion-latency probe's result, if the plan requested one.
+    pub fn completion(&self) -> Option<f64> {
+        self.units.iter().find_map(|(_, out)| match out {
+            UnitOutput::Completion(latency) => Some(*latency),
+            _ => None,
+        })
+    }
+
+    /// The measurement at one fixed point, if the plan requested it.
+    pub fn point(&self, warps: u32, ilp: u32) -> Option<&Measurement> {
+        self.units.iter().find_map(|(_, out)| match out {
+            UnitOutput::Point(m) if m.warps == warps && m.ilp == ilp => Some(m),
+            _ => None,
+        })
+    }
+
+    /// The sweep grid, if the plan requested one.
+    pub fn sweep(&self) -> Option<&Sweep> {
+        self.units.iter().find_map(|(_, out)| match out {
+            UnitOutput::Sweep { sweep, .. } => Some(sweep),
+            _ => None,
+        })
+    }
+
+    /// The sweep's convergence summary at `warps`, if computed.
+    pub fn convergence(&self, warps: u32) -> Option<&ConvergencePoint> {
+        self.units.iter().find_map(|(_, out)| match out {
+            UnitOutput::Sweep { convergence, .. } => {
+                convergence.iter().find(|c| c.warps == warps)
+            }
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SimRunner;
+    use super::*;
+    use crate::isa::{AbType, CdType, LdMatrixNum};
+    use crate::isa::shapes::*;
+    use crate::server::cache::cache_key;
+
+    fn k16() -> Workload {
+        Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 }
+    }
+
+    #[test]
+    fn builder_compiles_units_in_order() {
+        let plan = Plan::new(k16())
+            .completion_latency()
+            .point(4, 3)
+            .point(8, 2)
+            .point(4, 3) // duplicate collapses
+            .sweep()
+            .compile()
+            .unwrap();
+        assert_eq!(plan.units.len(), 4);
+        assert_eq!(plan.units[0], UnitKind::Completion);
+        assert_eq!(plan.units[1], UnitKind::Point(ExecPoint::new(4, 3)));
+        assert_eq!(plan.units[2], UnitKind::Point(ExecPoint::new(8, 2)));
+        assert_eq!(plan.units[3], UnitKind::Sweep);
+        assert_eq!(plan.convergence_warps, vec![4, 8]);
+    }
+
+    #[test]
+    fn builder_validation_errors() {
+        // empty plan
+        let err = Plan::new(k16()).compile().unwrap_err();
+        assert!(err.contains("empty plan"), "{err}");
+        // unknown device
+        let err = Plan::new(k16()).device("h100").point(4, 1).compile().unwrap_err();
+        assert!(err.contains("unknown device") && err.contains("a100"), "{err}");
+        // workload illegal on the device
+        let sp = Workload::MmaSp { ab: AbType::Fp16, cd: CdType::Fp32, shape: M16N8K32 };
+        let err = Plan::new(sp).device("rtx2080ti").point(4, 1).compile().unwrap_err();
+        assert!(err.contains("not supported"), "{err}");
+        // out-of-range point
+        let err = Plan::new(k16()).point(0, 1).compile().unwrap_err();
+        assert!(err.contains("warps"), "{err}");
+        // convergence warp off the sweep axis
+        let err = Plan::new(k16()).convergence(&[5]).compile().unwrap_err();
+        assert!(err.contains("sweep axis"), "{err}");
+    }
+
+    #[test]
+    fn run_produces_uniform_result_with_accessors() {
+        let plan = Plan::new(k16())
+            .completion_latency()
+            .point(8, 2)
+            .sweep()
+            .compile()
+            .unwrap();
+        let r = plan.run(&SimRunner, 2).unwrap();
+        assert_eq!(r.device_name, "a100");
+        assert_eq!(r.runner, "sim");
+        assert_eq!(r.throughput_unit, "FMA/clk/SM");
+        assert_eq!(r.units.len(), 3);
+        let cmpl = r.completion().unwrap();
+        assert!((24.0..27.0).contains(&cmpl), "{cmpl}");
+        let p = r.point(8, 2).unwrap();
+        assert!((960.0..1030.0).contains(&p.throughput), "{p:?}");
+        assert!(r.point(8, 3).is_none());
+        assert_eq!(r.sweep().unwrap().cells.len(), 48);
+        assert_eq!(r.convergence(8).unwrap().ilp, 2);
+        assert!(r.convergence(6).is_none());
+        assert!(r.wall_ms >= 0.0);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let body = r#"{"workload":"ldmatrix x4","device":"a100",
+                       "points":[[4,2],{"warps":8,"ilp":1}],
+                       "sweep":true,"completion_latency":true,"convergence":[4]}"#;
+        let plan = Plan::from_json(&Json::parse(body).unwrap()).unwrap();
+        let again = Plan::from_json(&plan.to_json()).unwrap();
+        let (a, b) = (plan.compile().unwrap(), again.compile().unwrap());
+        assert_eq!(a.units, b.units);
+        assert_eq!(a.convergence_warps, b.convergence_warps);
+        assert_eq!(a.workload, Workload::Ldmatrix { num: LdMatrixNum::X4 });
+    }
+
+    #[test]
+    fn json_rejects_malformed_plans() {
+        for body in [
+            r#"[]"#,
+            r#"{}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","typo":1}"#,
+            r#"{"workload":"nonsense"}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","points":[[4]]}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","points":["x"]}"#,
+            // non-integer coordinates must be rejected, not truncated:
+            // the value becomes a cache-key coordinate
+            r#"{"workload":"mma bf16 f32 m16n8k16","points":[[4.7,2]]}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","points":[{"warps":4,"ilp":2.5}]}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","points":[[-4,2]]}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","sweep":"yes"}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","convergence":"all"}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","points":[[4,1]],"device":3070}"#,
+            r#"{"workload":"mma bf16 f32 m16n8k16","convergence":[4.5]}"#,
+            // convergence implies a sweep the client explicitly declined
+            r#"{"workload":"mma bf16 f32 m16n8k16","sweep":false,"convergence":[4]}"#,
+        ] {
+            let j = Json::parse(body).unwrap();
+            assert!(Plan::from_json(&j).is_err(), "{body} should be rejected");
+        }
+    }
+
+    #[test]
+    fn unit_tokens_carry_every_workload_parameter() {
+        // two plans differing only in ILP address different cache slots
+        let a = Plan::new(k16()).point(4, 1).compile().unwrap();
+        let b = Plan::new(k16()).point(4, 2).compile().unwrap();
+        let ta = a.unit_token(&a.units[0]);
+        let tb = b.unit_token(&b.units[0]);
+        assert_ne!(ta, tb);
+        let ka = cache_key("plan", "sim", a.device.name, &ta);
+        let kb = cache_key("plan", "sim", b.device.name, &tb);
+        assert_ne!(ka.hash, kb.hash, "{ta} vs {tb}");
+
+        // ldmatrix num and ld.shared width/ways are in the address too
+        let x2 = Plan::new(Workload::Ldmatrix { num: LdMatrixNum::X2 })
+            .point(4, 1)
+            .compile()
+            .unwrap();
+        let x4 = Plan::new(Workload::Ldmatrix { num: LdMatrixNum::X4 })
+            .point(4, 1)
+            .compile()
+            .unwrap();
+        assert_ne!(x2.unit_token(&x2.units[0]), x4.unit_token(&x4.units[0]));
+
+        use crate::isa::LdSharedWidth;
+        let u32_4 = Plan::new(Workload::LdShared { width: LdSharedWidth::U32, ways: 4 })
+            .point(1, 1)
+            .compile()
+            .unwrap();
+        let u64_4 = Plan::new(Workload::LdShared { width: LdSharedWidth::U64, ways: 4 })
+            .point(1, 1)
+            .compile()
+            .unwrap();
+        let u32_8 = Plan::new(Workload::LdShared { width: LdSharedWidth::U32, ways: 8 })
+            .point(1, 1)
+            .compile()
+            .unwrap();
+        let t32_4 = u32_4.unit_token(&u32_4.units[0]);
+        assert_ne!(t32_4, u64_4.unit_token(&u64_4.units[0]));
+        assert_ne!(t32_4, u32_8.unit_token(&u32_8.units[0]));
+
+        // sweep tokens include the convergence warps
+        let s48 = Plan::new(k16()).sweep().compile().unwrap();
+        let s4 = Plan::new(k16()).convergence(&[4]).compile().unwrap();
+        let sweep_unit = UnitKind::Sweep;
+        assert_ne!(s48.unit_token(&sweep_unit), s4.unit_token(&sweep_unit));
+    }
+}

@@ -1,0 +1,112 @@
+//! [`Runner`] — the backend seam of the workload layer.
+//!
+//! A runner executes [`BenchPlan`] units. Backend selection happens
+//! exactly once, when a runner is constructed ([`runner_for`]), instead
+//! of per call site: [`SimRunner`] is the cycle-level simulator backend,
+//! [`ArtifactRunner`] is the PJRT artifact runtime (or its offline
+//! stub, whose construction fails with an actionable message, sending
+//! callers down the simulator path — the same contract as
+//! [`crate::coordinator::BackendKind::instantiate`]).
+
+use crate::coordinator::BackendKind;
+use crate::microbench::convergence_point;
+use crate::runtime::ArtifactStore;
+
+use super::plan::{BenchPlan, UnitKind, UnitOutput};
+
+/// Executes plan units against one backend. Implementations must be
+/// [`Sync`]: the plan executor and tcserved both fan units out across
+/// worker threads sharing one runner.
+pub trait Runner: Sync {
+    /// Stable backend name — a cache-key coordinate in tcserved.
+    fn name(&self) -> &'static str;
+
+    /// Execute one unit of a compiled plan.
+    fn run_unit(&self, plan: &BenchPlan, unit: &UnitKind) -> Result<UnitOutput, String>;
+}
+
+/// The cycle-level SM-simulator backend (always available).
+pub struct SimRunner;
+
+impl Runner for SimRunner {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn run_unit(&self, plan: &BenchPlan, unit: &UnitKind) -> Result<UnitOutput, String> {
+        Ok(match unit {
+            UnitKind::Completion => {
+                UnitOutput::Completion(plan.workload.completion_latency(&plan.device))
+            }
+            UnitKind::Point(p) => UnitOutput::Point(plan.workload.measure(&plan.device, *p)),
+            UnitKind::Sweep => {
+                let sweep = plan.workload.sweep(&plan.device);
+                let convergence = plan
+                    .convergence_warps
+                    .iter()
+                    .map(|&w| convergence_point(&sweep, w))
+                    .collect();
+                UnitOutput::Sweep { sweep, convergence }
+            }
+        })
+    }
+}
+
+/// The PJRT artifact-runtime backend. Construction proves the artifact
+/// store is openable (it is not in offline builds — the stub runtime
+/// returns an error, exactly like `BackendKind::Pjrt.instantiate()`).
+///
+/// Timing workloads are simulator-measured on every backend — the AOT
+/// artifacts cover the §8 numeric datapath, not cycle timing — so this
+/// runner delegates unit execution to [`SimRunner`] while keying results
+/// under its own backend name.
+pub struct ArtifactRunner {
+    _proof: (),
+}
+
+impl ArtifactRunner {
+    pub fn new() -> Result<ArtifactRunner, String> {
+        let _store = ArtifactStore::open_default().map_err(|e| format!("{e:#}"))?;
+        Ok(ArtifactRunner { _proof: () })
+    }
+}
+
+impl Runner for ArtifactRunner {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run_unit(&self, plan: &BenchPlan, unit: &UnitKind) -> Result<UnitOutput, String> {
+        SimRunner.run_unit(plan, unit)
+    }
+}
+
+/// Resolve a requested backend kind to a runner, once. `Auto` picks
+/// PJRT when artifacts are available and the simulator backend
+/// otherwise, mirroring [`BackendKind::resolve`].
+pub fn runner_for(kind: BackendKind) -> Result<Box<dyn Runner>, String> {
+    match kind.resolve() {
+        BackendKind::Native => Ok(Box::new(SimRunner)),
+        BackendKind::Pjrt => Ok(Box::new(ArtifactRunner::new()?)),
+        BackendKind::Auto => unreachable!("resolve() returns a concrete kind"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_resolves_to_the_sim_runner() {
+        assert_eq!(runner_for(BackendKind::Native).unwrap().name(), "sim");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_runner_unavailable_offline() {
+        let err = runner_for(BackendKind::Pjrt).unwrap_err();
+        assert!(err.contains("pjrt") || err.contains("PJRT"), "{err}");
+        // auto therefore falls back to the simulator backend
+        assert_eq!(runner_for(BackendKind::Auto).unwrap().name(), "sim");
+    }
+}

@@ -1,0 +1,251 @@
+//! Integration: the unified Workload/BenchPlan API, end to end —
+//! builder validation at the library level, `POST /v1/plan` over real
+//! sockets (happy path, malformed JSON, method errors), and the
+//! per-unit content-addressed cache observed through `/v1/metrics`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use tcbench::server::{Server, ServerConfig};
+use tcbench::util::Json;
+use tcbench::workload::{Plan, SimRunner, Workload};
+
+fn start() -> Server {
+    Server::start(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 8,
+        warm: false,
+        disk_cache: None,
+        cache_capacity: 64,
+    })
+    .expect("tcserved start")
+}
+
+/// One raw HTTP exchange; returns (status, body).
+fn request_raw(addr: SocketAddr, request: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(request.as_bytes()).expect("send request");
+    stream.flush().unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read response");
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in {response:?}"))
+        .parse()
+        .expect("numeric status");
+    let body = response.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn get(addr: SocketAddr, target: &str) -> (u16, Json) {
+    let (status, body) = request_raw(
+        addr,
+        &format!("GET {target} HTTP/1.1\r\nHost: tcserved\r\nConnection: close\r\n\r\n"),
+    );
+    (status, Json::parse(&body).expect("JSON body"))
+}
+
+fn post_plan(addr: SocketAddr, body: &str) -> (u16, Json) {
+    let (status, response) = request_raw(
+        addr,
+        &format!(
+            "POST /v1/plan HTTP/1.1\r\nHost: tcserved\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    let json = Json::parse(&response)
+        .unwrap_or_else(|e| panic!("POST /v1/plan: body is not JSON ({e}): {response:?}"));
+    (status, json)
+}
+
+// ------------------------------------------------------ library surface
+
+#[test]
+fn every_workload_kind_runs_through_one_plan_path() {
+    // the acceptance bar of the unified API: all five instruction
+    // families compile and run through the same Plan -> Runner pipeline
+    let paper_anchored: [(&str, Option<std::ops::Range<f64>>); 5] = [
+        ("mma fp16 f32 m16n8k16", Some(960.0..1030.0)), // Table 3 (8,2)
+        ("mma.sp bf16 f32 m16n8k32", Some(1850.0..2150.0)), // ~2x dense, §6
+        ("ldmatrix x4", Some(110.0..135.0)),            // §7: ~128 B/clk fabric bound
+        ("ld.shared u32 1", None),                      // sanity-only (no paper point at (8,2))
+        ("wmma fp16 f32 m16n16k16", Some(850.0..1030.0)), // compiled HMMA pair, §2.2
+    ];
+    for (spec, expect_thr) in paper_anchored {
+        let workload = Workload::parse_spec(spec).unwrap();
+        let plan = Plan::new(workload)
+            .device("a100")
+            .point(8, 2)
+            .completion_latency()
+            .compile()
+            .unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let result = plan.run(&SimRunner, 2).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        assert!(result.completion().unwrap() > 0.0, "{spec}");
+        let m = result.point(8, 2).unwrap_or_else(|| panic!("{spec}: missing point"));
+        assert!(m.throughput > 0.0 && m.latency > 0.0, "{spec}: {m:?}");
+        if let Some(range) = expect_thr {
+            assert!(
+                range.contains(&m.throughput),
+                "{spec}: throughput {} outside {range:?}",
+                m.throughput
+            );
+        }
+    }
+}
+
+#[test]
+fn builder_validation_errors_are_actionable() {
+    let k16 = Workload::parse_spec("mma bf16 f32 m16n8k16").unwrap();
+    let err = Plan::new(k16).compile().unwrap_err();
+    assert!(err.contains("empty plan"), "{err}");
+    let err = Plan::new(k16).device("h100").sweep().compile().unwrap_err();
+    assert!(err.contains("unknown device"), "{err}");
+    let sp = Workload::parse_spec("mma.sp fp16 f32 m16n8k32").unwrap();
+    let err = Plan::new(sp).device("rtx2080ti").sweep().compile().unwrap_err();
+    assert!(err.contains("not supported"), "{err}");
+}
+
+// ------------------------------------------------------- POST /v1/plan
+
+#[test]
+fn plan_endpoint_happy_path() {
+    let server = start();
+    let addr = server.addr();
+
+    let body = r#"{"workload":"mma bf16 f32 m16n8k16","device":"a100",
+                   "points":[[8,2]],"completion_latency":true,"backend":"native"}"#;
+    let (status, j) = post_plan(addr, body);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(j.get_str("workload"), Some("mma bf16 f32 m16n8k16"));
+    assert_eq!(j.get_str("device"), Some("a100"));
+    assert_eq!(j.get_str("backend"), Some("sim"));
+    assert_eq!(j.get_u64("count"), Some(2));
+    let units = j.get("units").unwrap().as_arr().unwrap();
+    assert_eq!(units.len(), 2);
+
+    let completion = units
+        .iter()
+        .find(|u| u.get_str("unit") == Some("completion"))
+        .expect("completion unit");
+    let lat = completion.get("result").unwrap().get_f64("latency").unwrap();
+    assert!((24.0..27.0).contains(&lat), "completion {lat}");
+
+    let point = units
+        .iter()
+        .find(|u| u.get_str("unit").map(|s| s.starts_with("point")) == Some(true))
+        .expect("point unit");
+    let result = point.get("result").unwrap();
+    assert_eq!(result.get_u64("warps"), Some(8));
+    assert_eq!(result.get_u64("ilp"), Some(2));
+    let thr = result.get_f64("throughput").unwrap();
+    assert!((960.0..1030.0).contains(&thr), "throughput {thr}");
+    assert!(result.get_str("key").is_some(), "per-unit content address: {result}");
+
+    server.stop();
+}
+
+#[test]
+fn plan_endpoint_sweep_unit_matches_sweep_endpoint_shape() {
+    let server = start();
+    let addr = server.addr();
+
+    let body = r#"{"workload":"ldmatrix x4","sweep":true,"convergence":[4],"backend":"native"}"#;
+    let (status, j) = post_plan(addr, body);
+    assert_eq!(status, 200, "{j}");
+    let units = j.get("units").unwrap().as_arr().unwrap();
+    assert_eq!(units.len(), 1);
+    let sweep = units[0].get("result").unwrap();
+    assert_eq!(sweep.get("cells").unwrap().as_arr().unwrap().len(), 48);
+    assert_eq!(sweep.get("convergence").unwrap().as_arr().unwrap().len(), 1);
+    let peak = sweep.get_f64("peak_throughput").unwrap();
+    assert!((115.0..135.0).contains(&peak), "ldmatrix peak {peak}");
+
+    server.stop();
+}
+
+#[test]
+fn plan_endpoint_malformed_json_is_400() {
+    let server = start();
+    let addr = server.addr();
+
+    let (status, j) = post_plan(addr, "{\"workload\": ");
+    assert_eq!(status, 400);
+    assert!(j.get_str("error").unwrap().contains("JSON"), "{j}");
+    assert_eq!(j.get_u64("status"), Some(400));
+
+    // schema-valid JSON but not a plan
+    let (status, j) = post_plan(addr, r#"{"workload":"mma bf16 f32 m16n8k16","typo":true}"#);
+    assert_eq!(status, 400);
+    assert!(j.get_str("error").unwrap().contains("typo"), "{j}");
+
+    // GET on the POST-only route
+    let (status, j) = get(addr, "/v1/plan");
+    assert_eq!(status, 405);
+    assert!(j.get_str("error").unwrap().contains("POST"), "{j}");
+
+    server.stop();
+}
+
+#[test]
+fn expect_100_continue_gets_an_interim_response() {
+    // curl sends `Expect: 100-continue` for larger -d bodies and waits
+    // ~1 s for the interim response; the server must provide it
+    let server = start();
+    let addr = server.addr();
+    let body = r#"{"workload":"ld.shared u32 2","points":[[1,1]],"backend":"native"}"#;
+    let request = format!(
+        "POST /v1/plan HTTP/1.1\r\nHost: tcserved\r\nExpect: 100-continue\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let (interim_status, rest) = request_raw(addr, &request);
+    assert_eq!(interim_status, 100, "interim response first: {rest:?}");
+    // the final response follows on the same connection
+    let (head, final_body) = rest.split_once("\r\n\r\n").expect("final response present");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    let j = Json::parse(final_body).expect("final body is JSON");
+    assert_eq!(j.get_u64("count"), Some(1));
+
+    server.stop();
+}
+
+#[test]
+fn plan_rerun_hits_the_per_unit_cache() {
+    let server = start();
+    let addr = server.addr();
+
+    let body = r#"{"workload":"ld.shared u64 8","device":"a100",
+                   "points":[[1,1]],"completion_latency":true,"backend":"native"}"#;
+    let (status, j1) = post_plan(addr, body);
+    assert_eq!(status, 200, "{j1}");
+    assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
+
+    let (_, j2) = post_plan(addr, body);
+    assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true), "{j2}");
+    for unit in j2.get("units").unwrap().as_arr().unwrap() {
+        assert_eq!(unit.get("cached").and_then(Json::as_bool), Some(true), "{unit}");
+        assert_eq!(unit.get_str("origin"), Some("memory"), "{unit}");
+    }
+
+    // /v1/metrics proves it: two plan units computed exactly once each,
+    // and the identical re-run produced only cache hits
+    let (_, m) = get(addr, "/v1/metrics");
+    let plan_stat = m.get("experiments").unwrap().get("plan").unwrap();
+    assert_eq!(plan_stat.get_u64("computes"), Some(2), "{m}");
+    assert!(m.get("cache").unwrap().get_u64("hits").unwrap() >= 2, "{m}");
+
+    // a plan differing only in ILP is a distinct content address:
+    // its unit computes instead of hitting the cache
+    let body_ilp2 = r#"{"workload":"ld.shared u64 8","device":"a100",
+                        "points":[[1,2]],"backend":"native"}"#;
+    let (_, j3) = post_plan(addr, body_ilp2);
+    let units3 = j3.get("units").unwrap().as_arr().unwrap();
+    assert_eq!(units3[0].get_str("origin"), Some("computed"), "{j3}");
+    let (_, m2) = get(addr, "/v1/metrics");
+    let plan_stat2 = m2.get("experiments").unwrap().get("plan").unwrap();
+    assert_eq!(plan_stat2.get_u64("computes"), Some(3), "{m2}");
+
+    server.stop();
+}
