@@ -8,6 +8,7 @@
 
 use tcbench::device::a100;
 use tcbench::gemm::{run_gemm, table16, table17, GemmConfig, Variant};
+use tcbench::workload::{Plan, SimRunner, Workload};
 
 fn main() {
     let size: u32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2048);
@@ -36,4 +37,25 @@ fn main() {
         "Table 17 (permuted layout): {:.2}x speedup   (paper: 913363/303227 = 3.01x)",
         b17.total_cycles as f64 / p17.total_cycles as f64
     );
+
+    // The same kernels through the unified workload path — what `repro
+    // sweep --instr "gemm ..."` and `POST /v1/plan` execute. Exec points
+    // are (CTA warps, cp.async stages), so a stage-depth ablation is
+    // just a plan with three points.
+    let spec = format!("gemm pipeline bf16 f32 {size} 128x128x32");
+    let workload = Workload::parse_spec(&spec).expect("gemm workload spec");
+    let plan = Plan::new(workload)
+        .device("a100")
+        .points([(8, 1), (8, 2), (8, 4)])
+        .compile()
+        .expect("size must be a multiple of the 128x128x32 tile");
+    let res = plan.run(&SimRunner, 2).expect("sim runner is infallible");
+    println!("\nworkload path ({spec}): cp.async stage ablation at 8 warps");
+    for stages in [1u32, 2, 4] {
+        let m = res.point(8, stages).expect("requested point");
+        println!(
+            "  stages={stages}: {:>9.1} cy/k-step   {:>7.1} FMA/clk/SM",
+            m.latency, m.throughput
+        );
+    }
 }

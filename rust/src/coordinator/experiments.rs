@@ -3,7 +3,7 @@
 //! rendered next to the paper's published values.
 
 use crate::device::{self, Device};
-use crate::gemm::{self, GemmConfig};
+use crate::gemm;
 use crate::isa::shapes::{M16N8K16, M16N8K32, M16N8K8};
 use crate::isa::{AbType, CdType, LdMatrixNum, LdSharedWidth};
 use crate::microbench::Measurement;
@@ -14,7 +14,7 @@ use crate::report::expected::{self, PaperLdmatrixRow, PaperMmaRow};
 use crate::report::{
     deviation, render_figure_csv, render_sparkline, render_sweep_figure, Table,
 };
-use crate::workload::{Plan, SimRunner, Workload};
+use crate::workload::{GemmParams, Plan, SimRunner, Workload};
 
 use super::pool::{default_threads, run_parallel};
 use super::Backend;
@@ -361,26 +361,49 @@ pub fn run_fig17(backend: &mut Backend) -> String {
 
 // ------------------------------------------------------ Appendix A
 
+/// Whole-GEMM cycle count of one Appendix-A kernel, measured through a
+/// plan-backed [`Workload::Gemm`] point unit — the same path `repro
+/// sweep` and `POST /v1/plan` take, so tcserved can serve these tables
+/// from its per-unit cache.
+fn gemm_total_cycles(variant: gemm::Variant, l2_resident: bool, stages: u32) -> u64 {
+    let params = GemmParams::paper(variant, l2_resident);
+    let plan = Plan::new(Workload::Gemm(params))
+        .device("a100")
+        .point(8, stages)
+        .compile()
+        .expect("the paper's gemm configuration is valid on a100");
+    let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");
+    let m = res.point(8, stages).expect("(8, stages) point requested");
+    // the measurement's latency is cycles per k-step; recover the CTA
+    // count and extrapolate over CTA waves like the paper's per-GPU
+    // clock64() measurement
+    let k_steps = (params.size / params.tile_k) as f64;
+    let cta_cycles = (m.latency * k_steps).round() as u64;
+    let ctas =
+        (params.size as u64 / params.tile_m as u64) * (params.size as u64 / params.tile_n as u64);
+    cta_cycles * ctas.div_ceil(res.sms as u64)
+}
+
 pub fn run_table16() -> String {
-    let d = device::a100();
-    let (base, pipe) = gemm::table16(&d, GemmConfig::default());
+    let base = gemm_total_cycles(gemm::Variant::Baseline, false, 1);
+    let pipe = gemm_total_cycles(gemm::Variant::Pipeline, false, 2);
     let mut t = Table::new(
         "Table 16: sync staging vs cp.async pipeline (2048^3 BF16)",
         &["implementation", "paper cycles", "sim cycles/SM", "speedup paper", "speedup sim"],
     );
     let paper_speedup = expected::TABLE16_BASELINE as f64 / expected::TABLE16_PIPELINE as f64;
-    let sim_speedup = base.total_cycles as f64 / pipe.total_cycles as f64;
+    let sim_speedup = base as f64 / pipe as f64;
     t.row(vec![
-        "mma_baseline.cu".into(),
+        gemm::Variant::Baseline.paper_name().into(),
         expected::TABLE16_BASELINE.to_string(),
-        base.total_cycles.to_string(),
+        base.to_string(),
         "1.00x".into(),
         "1.00x".into(),
     ]);
     t.row(vec![
-        "mma_pipeline.cu".into(),
+        gemm::Variant::Pipeline.paper_name().into(),
         expected::TABLE16_PIPELINE.to_string(),
-        pipe.total_cycles.to_string(),
+        pipe.to_string(),
         format!("{paper_speedup:.2}x"),
         format!("{sim_speedup:.2}x"),
     ]);
@@ -388,25 +411,25 @@ pub fn run_table16() -> String {
 }
 
 pub fn run_table17() -> String {
-    let d = device::a100();
-    let (base, perm) = gemm::table17(&d, GemmConfig::default());
+    let base = gemm_total_cycles(gemm::Variant::Baseline, true, 1);
+    let perm = gemm_total_cycles(gemm::Variant::Permuted, true, 1);
     let mut t = Table::new(
         "Table 17: naive vs permuted shared-memory layout (2048^3 BF16)",
         &["implementation", "paper cycles", "sim cycles/SM", "speedup paper", "speedup sim"],
     );
     let paper_speedup = expected::TABLE16_BASELINE as f64 / expected::TABLE17_PERMUTED as f64;
-    let sim_speedup = base.total_cycles as f64 / perm.total_cycles as f64;
+    let sim_speedup = base as f64 / perm as f64;
     t.row(vec![
-        "mma_baseline.cu".into(),
+        gemm::Variant::Baseline.paper_name().into(),
         expected::TABLE16_BASELINE.to_string(),
-        base.total_cycles.to_string(),
+        base.to_string(),
         "1.00x".into(),
         "1.00x".into(),
     ]);
     t.row(vec![
-        "mma_permuted.cu".into(),
+        gemm::Variant::Permuted.paper_name().into(),
         expected::TABLE17_PERMUTED.to_string(),
-        perm.total_cycles.to_string(),
+        perm.to_string(),
         format!("{paper_speedup:.2}x"),
         format!("{sim_speedup:.2}x"),
     ]);

@@ -1,25 +1,38 @@
-//! Appendix-A ablation kernels: a tiled BF16 GEMM on tcsim in three
+//! Appendix-A ablation kernels: a tiled 16-bit GEMM on tcsim in three
 //! variants —
 //!
 //! * `mma_baseline`: synchronous global->shared staging, naive row-major
 //!   shared-memory layout (bank conflicts on every `ldmatrix`),
-//! * `mma_pipeline`: Ampere `cp.async` double buffering (Table 16),
+//! * `mma_pipeline`: Ampere `cp.async` multi-buffering (Table 16; the
+//!   paper's kernel double-buffers, i.e. `stages = 2`),
 //! * `mma_permuted`: CUTLASS-style swizzled layout, conflict-free
 //!   `ldmatrix` (Table 17).
 //!
-//! One CTA (8 warps) computes a 128x128 output tile over the full K
-//! dimension in 32-wide k-steps; per-SM cycle counts are reported and
-//! the full-matrix count is extrapolated over the CTA grid, like the
+//! One CTA computes a `tile_m x tile_n` output tile over the full K
+//! dimension in `tile_k`-wide k-steps; per-SM cycle counts are reported
+//! and the full-matrix count is extrapolated over the CTA grid, like the
 //! paper's per-GPU `clock64()` measurement. Absolute cycles are
 //! simulator-scale; the reproduction targets are the *ratios*
 //! (~2x from async staging, ~3x from the permuted layout).
+//!
+//! Since the `Workload::Gemm` promotion the configuration space is open:
+//! CTA warp count (any power of two up to 32, mapped onto a near-square
+//! warp grid), `cp.async` pipeline depth (`stages`), tile shape and the
+//! A/B element type are all parameters. The Workload/Plan path runs
+//! [`GemmConfig::validate`] before building a program; [`run_gemm`]
+//! debug-asserts the same invariant for direct callers.
 
 use crate::device::Device;
 use crate::isa::{shapes, AbType, CdType, MmaInstr};
 use crate::sim::{ldmatrix_transactions, ldmatrix_x4_row_addrs, Op, ProgramBuilder, SmSim, Swizzle, WarpProgram};
 
+/// Effective global bandwidth (bytes/clk/SM) of the L2-resident regime
+/// Table 17 runs in: the layout experiment isolates *on-chip* behaviour,
+/// and its 2048^2 tiles are heavily reused across CTAs.
+pub const L2_RESIDENT_BYTES_PER_CYCLE: u32 = 64;
+
 /// GEMM kernel variant (the three Appendix-A CUDA kernels).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Variant {
     Baseline,
     Pipeline,
@@ -27,11 +40,35 @@ pub enum Variant {
 }
 
 impl Variant {
+    pub const ALL: [Variant; 3] = [Variant::Baseline, Variant::Pipeline, Variant::Permuted];
+
     pub fn paper_name(self) -> &'static str {
         match self {
             Variant::Baseline => "mma_baseline.cu",
             Variant::Pipeline => "mma_pipeline.cu",
             Variant::Permuted => "mma_permuted.cu",
+        }
+    }
+
+    /// Canonical token in workload specs; the exact inverse of
+    /// [`Variant::parse_spec`].
+    pub fn spec_name(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+            Variant::Pipeline => "pipeline",
+            Variant::Permuted => "permuted",
+        }
+    }
+
+    /// Parse one variant token of a gemm workload spec.
+    pub fn parse_spec(token: &str) -> Result<Variant, String> {
+        match token.to_ascii_lowercase().as_str() {
+            "baseline" => Ok(Variant::Baseline),
+            "pipeline" => Ok(Variant::Pipeline),
+            "permuted" => Ok(Variant::Permuted),
+            other => Err(format!(
+                "unknown gemm variant {other:?} (baseline|pipeline|permuted)"
+            )),
         }
     }
 
@@ -47,19 +84,38 @@ impl Variant {
     }
 }
 
-/// Problem + tiling configuration (defaults = the paper's 2048^3 BF16).
-#[derive(Debug, Clone, Copy)]
+/// Problem + tiling configuration (defaults = the paper's 2048^3 BF16,
+/// 8 warps per CTA, double-buffered `cp.async`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GemmConfig {
+    /// A/B element type (16-bit: BF16 or FP16 — the staged-byte
+    /// accounting assumes 2-byte elements).
+    pub ab: AbType,
+    /// Accumulator type.
+    pub cd: CdType,
     pub size: u32,   // square matrix dimension
     pub tile_m: u32, // CTA tile
     pub tile_n: u32,
     pub tile_k: u32,
     pub warps: u32,
+    /// `cp.async` pipeline depth (Pipeline variant only): the number of
+    /// smem tile buffers. 2 = the paper's double buffering; 1 degrades
+    /// to a fully synchronous `cp.async` wait each k-step.
+    pub stages: u32,
 }
 
 impl Default for GemmConfig {
     fn default() -> Self {
-        Self { size: 2048, tile_m: 128, tile_n: 128, tile_k: 32, warps: 8 }
+        Self {
+            ab: AbType::Bf16,
+            cd: CdType::Fp32,
+            size: 2048,
+            tile_m: 128,
+            tile_n: 128,
+            tile_k: 32,
+            warps: 8,
+            stages: 2,
+        }
     }
 }
 
@@ -73,17 +129,96 @@ impl GemmConfig {
         (self.size as u64 / self.tile_m as u64) * (self.size as u64 / self.tile_n as u64)
     }
 
-    /// Bytes of the A+B tiles staged per k-step (BF16).
+    /// The MMA instruction one warp issues (the paper's kernels are all
+    /// built on `mma.m16n8k16`).
+    pub fn instr(&self) -> MmaInstr {
+        MmaInstr::dense(self.ab, self.cd, shapes::M16N8K16)
+    }
+
+    /// Split `warps` into a near-square `(rows, cols)` warp grid over the
+    /// output tile — 8 warps map to the paper kernels' 4x2 grid. Assumes
+    /// a power-of-two warp count ([`GemmConfig::validate`] enforces it).
+    pub fn warp_grid(&self) -> (u32, u32) {
+        let k = self.warps.trailing_zeros();
+        (1u32 << k.div_ceil(2), 1u32 << (k / 2))
+    }
+
+    /// Is this configuration well-formed (device legality is checked
+    /// separately, against a [`Device`])? Returns a user-facing reason
+    /// when not.
+    pub fn validate(&self) -> Result<(), String> {
+        if !matches!(self.ab, AbType::Bf16 | AbType::Fp16) {
+            return Err(format!(
+                "gemm A/B type must be 16-bit (bf16|fp16), got {}",
+                self.ab.spec_name()
+            ));
+        }
+        if !(1..=32).contains(&self.warps) || !self.warps.is_power_of_two() {
+            return Err(format!(
+                "gemm warps must be a power of two in 1..=32, got {}",
+                self.warps
+            ));
+        }
+        if !(1..=8).contains(&self.stages) {
+            return Err(format!("gemm stages must be in 1..=8, got {}", self.stages));
+        }
+        let (wr, wc) = self.warp_grid();
+        if self.tile_m == 0 || self.tile_m % (wr * 16) != 0 {
+            return Err(format!(
+                "tile_m {} must be a positive multiple of {} ({} warp rows x mma m16)",
+                self.tile_m,
+                wr * 16,
+                wr
+            ));
+        }
+        if self.tile_n == 0 || self.tile_n % (wc * 8) != 0 {
+            return Err(format!(
+                "tile_n {} must be a positive multiple of {} ({} warp cols x mma n8)",
+                self.tile_n,
+                wc * 8,
+                wc
+            ));
+        }
+        if self.tile_k == 0 || self.tile_k % 16 != 0 {
+            return Err(format!(
+                "tile_k {} must be a positive multiple of the mma k16",
+                self.tile_k
+            ));
+        }
+        if self.size == 0
+            || self.size % self.tile_m != 0
+            || self.size % self.tile_n != 0
+            || self.size % self.tile_k != 0
+        {
+            return Err(format!(
+                "size {} must be a positive multiple of the {}x{}x{} tile",
+                self.size, self.tile_m, self.tile_n, self.tile_k
+            ));
+        }
+        // A pipeline deeper than the k-loop would prefetch tiles the
+        // matrix does not have, inflating the modeled global traffic.
+        if self.stages > self.k_steps() {
+            return Err(format!(
+                "gemm stages {} exceed the {} k-steps of a {}^3 problem with tile_k {}",
+                self.stages,
+                self.k_steps(),
+                self.size,
+                self.tile_k
+            ));
+        }
+        Ok(())
+    }
+
+    /// Bytes of the A+B tiles staged per k-step (2-byte elements).
     fn staged_bytes(&self) -> u64 {
         2 * (self.tile_m as u64 * self.tile_k as u64 + self.tile_k as u64 * self.tile_n as u64)
     }
 
     /// `mma.m16n8k16` instructions per warp per k-step: each warp owns a
-    /// (tile_m/4) x (tile_n/2) output slice (4x2 warp grid).
+    /// `(tile_m/rows) x (tile_n/cols)` output slice of the warp grid.
     fn mmas_per_warp_step(&self) -> u32 {
-        let wm = self.tile_m / 4;
-        let wn = self.tile_n / 2;
-        (wm / 16) * (wn / 8) * (self.tile_k / 16)
+        let (wr, wc) = self.warp_grid();
+        (self.tile_m / wr / 16) * (self.tile_n / wc / 8) * (self.tile_k / 16)
     }
 }
 
@@ -95,9 +230,10 @@ fn x4_txns(swz: Swizzle, row_bytes: u32) -> u32 {
 
 /// Build the per-warp trace of one CTA.
 pub fn build_program(device: &Device, cfg: GemmConfig, variant: Variant, warp: u32) -> WarpProgram {
-    let instr = MmaInstr::dense(AbType::Bf16, CdType::Fp32, shapes::M16N8K16);
-    let timing = device.timing(&instr).expect("BF16 m16n8k16 required");
+    let instr = cfg.instr();
+    let timing = device.timing(&instr).expect("16-bit m16n8k16 timing required");
     let swz = variant.swizzle();
+    let (wr, wc) = cfg.warp_grid();
 
     // A tile rows are tile_k elements (x2 bytes); B tile rows are tile_n
     // elements. The naive layouts alias banks; Permuted swizzles 16-byte
@@ -108,9 +244,10 @@ pub fn build_program(device: &Device, cfg: GemmConfig, variant: Variant, warp: u
     let b_txns = x4_txns(swz, b_row_bytes);
 
     // Fragment loads per warp per k-step: the warp's A slice
-    // (tile_m/4 x tile_k) and B slice (tile_k x tile_n/2), 512 B per x4.
-    let a_frag_bytes = (cfg.tile_m as u64 / 4) * cfg.tile_k as u64 * 2;
-    let b_frag_bytes = cfg.tile_k as u64 * (cfg.tile_n as u64 / 2) * 2;
+    // (tile_m/rows x tile_k) and B slice (tile_k x tile_n/cols), 512 B
+    // per x4.
+    let a_frag_bytes = (cfg.tile_m as u64 / wr as u64) * cfg.tile_k as u64 * 2;
+    let b_frag_bytes = cfg.tile_k as u64 * (cfg.tile_n as u64 / wc as u64) * 2;
     let a_loads = (a_frag_bytes / 512).max(1) as u32;
     let b_loads = (b_frag_bytes / 512).max(1) as u32;
 
@@ -130,12 +267,15 @@ pub fn build_program(device: &Device, cfg: GemmConfig, variant: Variant, warp: u
     let staged = b.alloc_reg();
 
     if variant.async_copy() {
-        // Prologue: stage the first tile asynchronously.
-        b.push(Op::CpAsync { bytes: gmem_slice }, None, vec![]);
-        b.push(Op::CpAsyncCommit, None, vec![]);
+        // Prologue: fill the pipeline — stage the first (stages - 1)
+        // tiles asynchronously.
+        for _ in 0..cfg.stages.saturating_sub(1) {
+            b.push(Op::CpAsync { bytes: gmem_slice }, None, vec![]);
+            b.push(Op::CpAsyncCommit, None, vec![]);
+        }
     }
 
-    for _step in 0..cfg.k_steps() {
+    for step in 0..cfg.k_steps() {
         match variant {
             Variant::Baseline | Variant::Permuted => {
                 // a. synchronous copy gmem -> registers -> smem
@@ -146,10 +286,20 @@ pub fn build_program(device: &Device, cfg: GemmConfig, variant: Variant, warp: u
                 b.push(Op::BarSync, None, vec![]);
             }
             Variant::Pipeline => {
-                // b. prefetch the *next* tile, then wait for the current.
-                b.push(Op::CpAsync { bytes: gmem_slice }, None, vec![]);
-                b.push(Op::CpAsyncCommit, None, vec![]);
-                b.push(Op::CpAsyncWait { max_pending: 1 }, None, vec![]);
+                // b. prefetch the tile (stages-1) steps ahead — guarded
+                // off in the loop tail once all k_steps tiles have been
+                // issued, like the real kernel's bounds check — then
+                // wait until the current one has landed (at most
+                // stages-1 groups keep flying).
+                if step + cfg.stages <= cfg.k_steps() {
+                    b.push(Op::CpAsync { bytes: gmem_slice }, None, vec![]);
+                    b.push(Op::CpAsyncCommit, None, vec![]);
+                }
+                b.push(
+                    Op::CpAsyncWait { max_pending: cfg.stages.saturating_sub(1) },
+                    None,
+                    vec![],
+                );
                 b.push(Op::BarSync, None, vec![]);
             }
         }
@@ -180,7 +330,7 @@ pub fn build_program(device: &Device, cfg: GemmConfig, variant: Variant, warp: u
         if !variant.async_copy() {
             // Single smem buffer: no warp may overwrite the tile (next
             // step's staging) until every warp has finished reading it.
-            // The cp.async variant double-buffers and skips this barrier.
+            // The cp.async variant multi-buffers and skips this barrier.
             b.push(Op::BarSync, None, vec![]);
         }
         b.iter_mark();
@@ -200,8 +350,15 @@ pub struct GemmResult {
     pub fma_per_clk: f64,
 }
 
-/// Simulate one variant.
+/// Simulate one variant. The configuration must satisfy
+/// [`GemmConfig::validate`] — the Workload/Plan path checks it before
+/// reaching here; direct callers get a debug assertion (an invalid warp
+/// grid would silently mis-account FMAs in release builds).
 pub fn run_gemm(device: &Device, cfg: GemmConfig, variant: Variant) -> GemmResult {
+    #[cfg(debug_assertions)]
+    if let Err(e) = cfg.validate() {
+        panic!("invalid GemmConfig {cfg:?}: {e}");
+    }
     let programs: Vec<WarpProgram> =
         (0..cfg.warps).map(|w| build_program(device, cfg, variant, w)).collect();
     let fmas: u64 = programs.iter().map(|p| p.fmas_per_iteration()).sum::<u64>()
@@ -225,11 +382,11 @@ pub fn table16(device: &Device, cfg: GemmConfig) -> (GemmResult, GemmResult) {
 /// Run the Table 17 pair (baseline vs permuted layout).
 ///
 /// The layout experiment isolates *on-chip* behaviour, so it runs in the
-/// L2-resident regime (the 2048^2 tiles are heavily reused across CTAs):
-/// effective global bandwidth is several times DRAM per SM.
+/// L2-resident regime ([`L2_RESIDENT_BYTES_PER_CYCLE`]): effective
+/// global bandwidth is several times DRAM per SM.
 pub fn table17(device: &Device, cfg: GemmConfig) -> (GemmResult, GemmResult) {
     let mut dev = device.clone();
-    dev.gmem_bytes_per_cycle = dev.gmem_bytes_per_cycle.max(64);
+    dev.gmem_bytes_per_cycle = dev.gmem_bytes_per_cycle.max(L2_RESIDENT_BYTES_PER_CYCLE);
     (run_gemm(&dev, cfg, Variant::Baseline), run_gemm(&dev, cfg, Variant::Permuted))
 }
 
@@ -280,6 +437,30 @@ mod tests {
     }
 
     #[test]
+    fn single_stage_pipeline_exposes_the_copy_latency() {
+        // stages = 1 waits for the k-step's own copy every iteration;
+        // double buffering (the paper's kernel) must be faster.
+        let d = a100();
+        let one = run_gemm(&d, GemmConfig { stages: 1, ..small() }, Variant::Pipeline);
+        let two = run_gemm(&d, small(), Variant::Pipeline);
+        assert!(
+            one.cta_cycles > two.cta_cycles,
+            "stages=1 {} vs stages=2 {}",
+            one.cta_cycles,
+            two.cta_cycles
+        );
+        // deeper pipelines never lose to double buffering (beyond the
+        // few extra prologue issue slots)
+        let four = run_gemm(&d, GemmConfig { stages: 4, ..small() }, Variant::Pipeline);
+        assert!(
+            four.cta_cycles <= two.cta_cycles * 101 / 100,
+            "{} > {}",
+            four.cta_cycles,
+            two.cta_cycles
+        );
+    }
+
+    #[test]
     fn extrapolation_scales_with_ctas() {
         let d = a100();
         let small_res = run_gemm(&d, small(), Variant::Pipeline);
@@ -291,9 +472,61 @@ mod tests {
 
     #[test]
     fn mma_count_covers_tile() {
-        let cfg = GemmConfig::default();
-        // 8 warps x mmas x 2048 FMA == tile_m * tile_n * tile_k
-        let per_step = 8 * cfg.mmas_per_warp_step() as u64 * 2048;
-        assert_eq!(per_step, 128 * 128 * 32);
+        // warps x mmas x 2048 FMA == tile_m * tile_n * tile_k, at every
+        // legal warp count
+        for warps in [1u32, 2, 4, 8, 16, 32] {
+            let cfg = GemmConfig { warps, ..GemmConfig::default() };
+            cfg.validate().unwrap_or_else(|e| panic!("warps {warps}: {e}"));
+            let per_step = warps as u64 * cfg.mmas_per_warp_step() as u64 * 2048;
+            assert_eq!(per_step, 128 * 128 * 32, "warps {warps}");
+        }
+    }
+
+    #[test]
+    fn warp_grid_is_near_square() {
+        for (warps, grid) in
+            [(1u32, (1, 1)), (2, (2, 1)), (4, (2, 2)), (8, (4, 2)), (16, (4, 4)), (32, (8, 4))]
+        {
+            let cfg = GemmConfig { warps, ..GemmConfig::default() };
+            assert_eq!(cfg.warp_grid(), grid, "warps {warps}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_malformed_configs() {
+        assert!(GemmConfig::default().validate().is_ok());
+        let bad = [
+            GemmConfig { ab: AbType::Tf32, ..GemmConfig::default() },
+            GemmConfig { warps: 6, ..GemmConfig::default() },
+            GemmConfig { warps: 0, ..GemmConfig::default() },
+            GemmConfig { stages: 0, ..GemmConfig::default() },
+            GemmConfig { stages: 9, ..GemmConfig::default() },
+            // a pipeline deeper than the k-loop (4 k-steps here)
+            GemmConfig {
+                size: 64,
+                tile_m: 16,
+                tile_n: 16,
+                tile_k: 16,
+                warps: 1,
+                stages: 5,
+                ..GemmConfig::default()
+            },
+            GemmConfig { tile_m: 100, ..GemmConfig::default() },
+            GemmConfig { tile_n: 12, ..GemmConfig::default() },
+            GemmConfig { tile_k: 8, ..GemmConfig::default() },
+            GemmConfig { size: 2000, ..GemmConfig::default() },
+            GemmConfig { size: 0, ..GemmConfig::default() },
+        ];
+        for cfg in bad {
+            assert!(cfg.validate().is_err(), "{cfg:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn variant_spec_round_trips() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse_spec(v.spec_name()), Ok(v));
+        }
+        assert!(Variant::parse_spec("fancy").is_err());
     }
 }

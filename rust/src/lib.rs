@@ -27,12 +27,14 @@
 //!   matmul, error metrics.
 //! - [`runtime`]  — PJRT client wrapper that loads `artifacts/*.hlo.txt`.
 //! - [`gemm`]     — Appendix-A ablation kernels (sync vs async copy,
-//!   naive vs permuted shared-memory layout).
+//!   naive vs permuted shared-memory layout), parameterized over tile
+//!   shape, warp grid, `cp.async` stage depth and 16-bit element type.
 //! - [`workload`] — the unified workload API: one typed [`Workload`]
-//!   enum for all five microbenchmarked instruction families, a
-//!   `BenchPlan` builder compiling to runnable units, and the `Runner`
-//!   backend seam — the single execution path behind the CLI, the
-//!   coordinator experiments and tcserved's `POST /v1/plan`.
+//!   enum for all six benchmarked families (the five instruction kinds
+//!   plus the Appendix-A `gemm` pipeline), a `BenchPlan` builder
+//!   compiling to runnable units, and the `Runner` backend seam — the
+//!   single execution path behind the CLI, the coordinator experiments
+//!   and tcserved's `POST /v1/plan`.
 //! - [`coordinator`] — campaign orchestration: every paper table/figure
 //!   is a registered experiment run by a scoped-thread worker pool.
 //! - [`report`]   — table/figure renderers (text + machine-readable

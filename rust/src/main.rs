@@ -43,6 +43,10 @@ fn usage() -> &'static str {
        ldmatrix <x1|x2|x4>          e.g. \"ldmatrix x4\"\n\
        ld.shared <u32|u64> <ways>   e.g. \"ld.shared u32 8\"\n\
        wmma <ab> <cd> <shape>       e.g. \"wmma fp16 f32 m16n16k16\"\n\
+       gemm <variant> <ab> <cd> <size> <MxNxK> [l2]\n\
+                                    e.g. \"gemm pipeline bf16 f32 2048 128x128x32\"\n\
+                                    (variant: baseline|pipeline|permuted; the sweep\n\
+                                    axes are CTA warps x cp.async stages)\n\
        (legacy \"<ab> <cd> <shape> [sparse]\" mma specs still work)\n\
      \n\
      EXAMPLES:\n\
@@ -50,6 +54,7 @@ fn usage() -> &'static str {
        repro all --out results          # also writes summary.json + bench_summary.json\n\
        repro sweep --device a100 --instr \"bf16 f32 m16n8k16\"\n\
        repro sweep --device a100 --instr \"ldmatrix x4\"\n\
+       repro sweep --device a100 --instr \"gemm pipeline bf16 f32 512 128x128x32\"\n\
        repro serve --addr 127.0.0.1:8321 --warm\n\
      \n\
      SERVE ENDPOINTS:\n\
@@ -163,7 +168,6 @@ fn main() -> Result<()> {
             let t0 = std::time::Instant::now();
             // simulator experiments fan out over the worker pool
             let runs = run_all(&mut backend)?;
-            let total_ms = t0.elapsed().as_secs_f64() * 1e3;
             let mut entries = Vec::new();
             for r in &runs {
                 emit(args.flag("out"), r.id, &r.report)?;
@@ -178,6 +182,45 @@ fn main() -> Result<()> {
                     ("deviation", deviation),
                 ]));
             }
+            // GEMM workload rows: the three Appendix-A kernels run as
+            // first-class plans through the same workload path that
+            // `repro sweep` and POST /v1/plan use, so their perf rows
+            // land in bench_summary.json next to the experiments
+            let gemm_plans = [
+                // (id, spec, stages): the paper's 8-warp CTA; only the
+                // pipeline variant has a stage axis (double-buffered)
+                ("gemm_baseline", "gemm baseline bf16 f32 2048 128x128x32", 1),
+                ("gemm_pipeline", "gemm pipeline bf16 f32 2048 128x128x32", 2),
+                ("gemm_permuted", "gemm permuted bf16 f32 2048 128x128x32 l2", 1),
+            ];
+            let mut gemm_rows = Vec::new();
+            for (id, spec, stages) in gemm_plans {
+                let workload = Workload::parse_spec(spec).map_err(|e| anyhow!(e))?;
+                let plan = Plan::new(workload)
+                    .device("a100")
+                    .point(8, stages)
+                    .completion_latency()
+                    .compile()
+                    .map_err(|e| anyhow!(e))?;
+                let result = plan.run(&SimRunner, 1).map_err(|e| anyhow!(e))?;
+                emit(args.flag("out"), id, &report::render_bench(&result))?;
+                eprintln!("[repro] {id} done in {:.1} ms", result.wall_ms);
+                if let Some(dir) = args.flag("out") {
+                    let path = format!("{dir}/{id}.json");
+                    std::fs::write(&path, report::bench_to_json(&result).pretty())?;
+                    eprintln!("[repro] wrote {path}");
+                }
+                gemm_rows.push(Json::obj(vec![
+                    ("id", Json::str(id)),
+                    ("workload", Json::str(spec)),
+                    // gemm plans are simulator-timed regardless of the
+                    // campaign's numeric --backend; label the row with
+                    // the runner that actually produced it
+                    ("backend", Json::str(result.runner)),
+                    ("wall_ms", Json::num(result.wall_ms)),
+                ]));
+            }
+            let total_ms = t0.elapsed().as_secs_f64() * 1e3;
             eprintln!("[repro] campaign finished in {total_ms:.1} ms");
             if let Some(dir) = args.flag("out") {
                 let summary = Json::obj(vec![
@@ -193,7 +236,8 @@ fn main() -> Result<()> {
 
                 // machine-readable perf snapshot: per-plan wall time
                 // only, in a stable schema meant to be archived as
-                // BENCH_<rev>.json and diffed across PRs
+                // bench_baseline.json and diffed across PRs (the CI
+                // bench job runs scripts/bench_diff.py over it)
                 let bench = Json::obj(vec![
                     ("schema", Json::str("tcbench/bench_summary/v1")),
                     ("version", Json::str(env!("CARGO_PKG_VERSION"))),
@@ -210,6 +254,7 @@ fn main() -> Result<()> {
                                         ("wall_ms", Json::num(r.wall_ms)),
                                     ])
                                 })
+                                .chain(gemm_rows)
                                 .collect(),
                         ),
                     ),

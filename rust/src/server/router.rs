@@ -656,6 +656,35 @@ mod tests {
     }
 
     #[test]
+    fn plan_endpoint_accepts_gemm_specs() {
+        let s = state();
+        let body = r#"{"workload":"gemm pipeline bf16 f32 256 128x128x32","device":"a100",
+                       "points":[[8,2]],"backend":"native"}"#;
+        let r = post(&s, "/v1/plan", body);
+        assert_eq!(r.status, 200, "{}", r.body);
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get_str("workload"), Some("gemm pipeline bf16 f32 256 128x128x32"));
+        let units = j.get("units").unwrap().as_arr().unwrap();
+        assert_eq!(units.len(), 1);
+        let result = units[0].get("result").unwrap();
+        assert!(result.get_f64("throughput").unwrap() > 0.0, "{result}");
+
+        // an invalid tile is a 400 with an actionable error, not a 500
+        let bad = r#"{"workload":"gemm pipeline bf16 f32 256 100x128x32","points":[[8,2]]}"#;
+        let r = post(&s, "/v1/plan", bad);
+        assert_eq!(r.status, 400, "{}", r.body);
+        let err = Json::parse(&r.body).unwrap();
+        assert!(err.get_str("error").unwrap().contains("tile_m"), "{}", r.body);
+
+        // the sparse flag stays mma-only on the sweep translator
+        let r = get(
+            &s,
+            "/v1/sweep?device=a100&instr=gemm,pipeline,bf16,f32,256,128x128x32&sparse=true",
+        );
+        assert_eq!(r.status, 400, "{}", r.body);
+    }
+
+    #[test]
     fn plan_endpoint_rejects_bad_requests() {
         let s = state();
         // malformed JSON

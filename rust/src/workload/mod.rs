@@ -6,11 +6,16 @@
 //! same fragmentation from our own programming interface. Instead of a
 //! separate family of free functions per instruction kind
 //! (`measure_mma`, `sweep_ldmatrix`, `completion_latency_mma`, …) there
-//! is one [`Workload`] enum covering all five microbenchmarked kinds —
-//! `mma`, `mma.sp`, `ldmatrix`, `ld.shared` and `wmma` — with
-//! per-variant typed parameters, a shared [`ExecPoint`] (#warps, ILP)
-//! coordinate, and spec-string round-tripping
+//! is one [`Workload`] enum covering all six benchmarked kinds —
+//! `mma`, `mma.sp`, `ldmatrix`, `ld.shared`, `wmma` and the Appendix-A
+//! `gemm` pipeline — with per-variant typed parameters, a shared
+//! [`ExecPoint`] coordinate, and spec-string round-tripping
 //! ([`Workload::parse_spec`] / [`Workload::to_spec`]).
+//!
+//! The exec point is (#warps, ILP) for the instruction families; for
+//! `gemm` the same coordinate reads as (CTA warps, `cp.async` pipeline
+//! stages), so tables 16/17 and arbitrary tile-pipeline sweeps run
+//! through the identical plan/cache machinery.
 //!
 //! On top of it, [`Plan`] builds a [`BenchPlan`] — a batch of runnable
 //! units (fixed points, a full sweep, a completion-latency probe) that a
@@ -43,6 +48,7 @@ pub use runner::{runner_for, ArtifactRunner, Runner, SimRunner};
 use std::fmt;
 
 use crate::device::Device;
+use crate::gemm::{self, GemmConfig};
 use crate::isa::{AbType, CdType, LdMatrixNum, LdSharedWidth, MmaInstr, MmaShape};
 use crate::microbench::wmma::{measure_wmma, WmmaShape};
 use crate::microbench::{
@@ -82,8 +88,67 @@ impl fmt::Display for ExecPoint {
     }
 }
 
-/// One microbenchmarkable workload: the five instruction families of the
-/// paper, each with its typed parameters.
+/// Pipeline-stage axis of a gemm sweep (the `ilp` coordinate of its
+/// [`Sweep`] grid): depths 1 (fully synchronous `cp.async`) through 4.
+pub const GEMM_SWEEP_STAGES: [u32; 4] = [1, 2, 3, 4];
+
+/// Typed parameters of a [`Workload::Gemm`]: everything that *names* the
+/// problem. The execution coordinates — CTA warp count and `cp.async`
+/// stage depth — ride in the [`ExecPoint`] instead, exactly like #warps
+/// and ILP do for the instruction families, so the per-unit cache token
+/// (spec + point) carries every parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmParams {
+    pub variant: gemm::Variant,
+    /// A/B element type (16-bit: bf16 or fp16).
+    pub ab: AbType,
+    /// Accumulator type.
+    pub cd: CdType,
+    /// Square problem dimension (the paper's experiment is 2048^3).
+    pub size: u32,
+    pub tile_m: u32,
+    pub tile_n: u32,
+    pub tile_k: u32,
+    /// Run in the L2-resident memory regime (Table 17's layout
+    /// experiment isolates on-chip behaviour).
+    pub l2_resident: bool,
+}
+
+impl GemmParams {
+    /// The paper's canonical Appendix-A problem: 2048^3 BF16/FP32 with a
+    /// 128x128x32 CTA tile.
+    pub fn paper(variant: gemm::Variant, l2_resident: bool) -> GemmParams {
+        GemmParams {
+            variant,
+            ab: AbType::Bf16,
+            cd: CdType::Fp32,
+            size: 2048,
+            tile_m: 128,
+            tile_n: 128,
+            tile_k: 32,
+            l2_resident,
+        }
+    }
+
+    /// Materialize the kernel configuration at one execution point
+    /// (warps = CTA warp count, ilp = pipeline stages).
+    pub fn config(&self, point: ExecPoint) -> GemmConfig {
+        GemmConfig {
+            ab: self.ab,
+            cd: self.cd,
+            size: self.size,
+            tile_m: self.tile_m,
+            tile_n: self.tile_n,
+            tile_k: self.tile_k,
+            warps: point.warps,
+            stages: point.ilp,
+        }
+    }
+}
+
+/// One benchmarkable workload: the five instruction families of the
+/// paper plus the Appendix-A GEMM pipeline, each with its typed
+/// parameters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Workload {
     /// Dense Tensor-Core FMA (`mma.sync`, §5).
@@ -98,6 +163,10 @@ pub enum Workload {
     /// The legacy `wmma.mma` interface, modeled as its compiled HMMA
     /// sequence (§2.2, Fig. 2/3).
     Wmma { ab: AbType, cd: CdType, shape: WmmaShape },
+    /// The Appendix-A tiled GEMM pipeline (tables 16/17): one kernel
+    /// variant at one problem/tile configuration, executed at
+    /// (CTA warps, stages) points.
+    Gemm(GemmParams),
 }
 
 impl Workload {
@@ -128,6 +197,7 @@ impl Workload {
             Workload::Ldmatrix { .. } => "ldmatrix",
             Workload::LdShared { .. } => "ld.shared",
             Workload::Wmma { .. } => "wmma",
+            Workload::Gemm { .. } => "gemm",
         }
     }
 
@@ -135,7 +205,10 @@ impl Workload {
     /// compute, bytes/clk/SM for data movement).
     pub fn throughput_unit(&self) -> &'static str {
         match self {
-            Workload::Mma { .. } | Workload::MmaSp { .. } | Workload::Wmma { .. } => "FMA/clk/SM",
+            Workload::Mma { .. }
+            | Workload::MmaSp { .. }
+            | Workload::Wmma { .. }
+            | Workload::Gemm { .. } => "FMA/clk/SM",
             Workload::Ldmatrix { .. } | Workload::LdShared { .. } => "bytes/clk/SM",
         }
     }
@@ -149,7 +222,14 @@ impl Workload {
     /// ldmatrix <x1|x2|x4>            ldmatrix x4   (also "ldmatrix.x4")
     /// ld.shared <u32|u64> <ways>     ld.shared u32 8
     /// wmma <ab> <cd> <shape>         wmma fp16 f32 m16n16k16
+    /// gemm <variant> <ab> <cd> <size> <MxNxK> [l2]
+    ///                                gemm pipeline bf16 f32 2048 128x128x32
     /// ```
+    ///
+    /// The gemm variant is `baseline`, `pipeline` or `permuted`; the
+    /// trailing `l2` token selects the L2-resident memory regime
+    /// (Table 17). CTA warps and pipeline stages are *not* part of the
+    /// spec — they are the plan's execution coordinates.
     ///
     /// A legacy `mma` spec without the keyword (`"<ab> <cd> <shape>
     /// [sparse]"`, as accepted by [`MmaInstr::parse_spec`]) keeps
@@ -190,6 +270,41 @@ impl Workload {
                 let cd = CdType::parse_spec(parts[2])?;
                 let s: MmaShape = parts[3].parse()?;
                 Ok(Workload::Wmma { ab, cd, shape: WmmaShape { m: s.m, n: s.n, k: s.k } })
+            }
+            "gemm" => {
+                if parts.len() != 6 && parts.len() != 7 {
+                    return Err(format!(
+                        "gemm workload spec must be \
+                         \"gemm <baseline|pipeline|permuted> <ab> <cd> <size> <MxNxK> [l2]\", \
+                         got {spec:?}"
+                    ));
+                }
+                let variant = gemm::Variant::parse_spec(parts[1])?;
+                let ab = AbType::parse_spec(parts[2])?;
+                let cd = CdType::parse_spec(parts[3])?;
+                let size: u32 = parts[4]
+                    .parse()
+                    .map_err(|_| format!("gemm size must be a number, got {:?}", parts[4]))?;
+                let (tile_m, tile_n, tile_k) = Self::parse_gemm_tile(parts[5])?;
+                let l2_resident = match parts.get(6) {
+                    None => false,
+                    Some(tok) if tok.eq_ignore_ascii_case("l2") => true,
+                    Some(other) => {
+                        return Err(format!(
+                            "unknown gemm spec token {other:?} (only \"l2\" may follow the tile)"
+                        ))
+                    }
+                };
+                Ok(Workload::Gemm(GemmParams {
+                    variant,
+                    ab,
+                    cd,
+                    size,
+                    tile_m,
+                    tile_n,
+                    tile_k,
+                    l2_resident,
+                }))
             }
             "ld.shared" => {
                 if parts.len() != 3 {
@@ -235,10 +350,23 @@ impl Workload {
             _ => MmaInstr::parse_spec(spec).map(Workload::from_instr).map_err(|e| {
                 format!(
                     "{e} (or start the spec with a workload kind: \
-                     mma | mma.sp | ldmatrix | ld.shared | wmma)"
+                     mma | mma.sp | ldmatrix | ld.shared | wmma | gemm)"
                 )
             }),
         }
+    }
+
+    /// Parse the `<M>x<N>x<K>` tile token of a gemm workload spec.
+    fn parse_gemm_tile(token: &str) -> Result<(u32, u32, u32), String> {
+        let dims: Vec<&str> = token.split(['x', 'X']).collect();
+        if dims.len() != 3 {
+            return Err(format!("gemm tile must be <M>x<N>x<K> (e.g. 128x128x32), got {token:?}"));
+        }
+        let parse = |s: &str, what: &str| -> Result<u32, String> {
+            s.parse::<u32>()
+                .map_err(|_| format!("gemm tile {what} must be a number, got {s:?} in {token:?}"))
+        };
+        Ok((parse(dims[0], "M")?, parse(dims[1], "N")?, parse(dims[2], "K")?))
     }
 
     /// Canonical spec string — round-trips through
@@ -267,6 +395,17 @@ impl Workload {
                 shape.m,
                 shape.n,
                 shape.k
+            ),
+            Workload::Gemm(g) => format!(
+                "gemm {} {} {} {} {}x{}x{}{}",
+                g.variant.spec_name(),
+                g.ab.spec_name(),
+                g.cd.spec_name(),
+                g.size,
+                g.tile_m,
+                g.tile_n,
+                g.tile_k,
+                if g.l2_resident { " l2" } else { "" }
             ),
         }
     }
@@ -339,6 +478,92 @@ impl Workload {
                 }
                 Ok(())
             }
+            Workload::Gemm(g) => {
+                // Static shape/size legality at the weakest (1-warp) grid;
+                // stricter warp-grid divisibility is per execution point
+                // (validate_point).
+                let cfg = g.config(ExecPoint::new(1, 1));
+                cfg.validate()?;
+                let instr = cfg.instr();
+                if !instr.is_well_formed() {
+                    return Err(format!(
+                        "gemm compute instruction {instr} is not well-formed \
+                         (illegal operand/accumulator pairing)"
+                    ));
+                }
+                if !device.supports(&instr) {
+                    return Err(format!(
+                        "gemm needs {instr}, which is not supported on {}",
+                        device.name
+                    ));
+                }
+                if g.variant == gemm::Variant::Pipeline && !device.arch.supports_cp_async() {
+                    return Err(format!(
+                        "the gemm pipeline variant needs cp.async, which {} ({:?}) lacks",
+                        device.name, device.arch
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Is `point` a legal execution coordinate for this workload? The
+    /// instruction families accept any in-range (#warps, ILP); gemm
+    /// additionally requires the warp count to map onto the tile's warp
+    /// grid (power of two, divisibility) with `ilp` read as the
+    /// `cp.async` stage depth.
+    pub fn validate_point(&self, point: ExecPoint) -> Result<(), String> {
+        point.validate()?;
+        if let Workload::Gemm(g) = self {
+            // the synchronous variants never read the stage depth;
+            // pinning it to 1 keeps one canonical cache token per
+            // computation instead of eight identical entries
+            if g.variant != gemm::Variant::Pipeline && point.ilp != 1 {
+                return Err(format!(
+                    "the gemm {} variant has no cp.async pipeline; stages (the ilp \
+                     coordinate) must be 1, got {}",
+                    g.variant.spec_name(),
+                    point.ilp
+                ));
+            }
+            g.config(point).validate()?;
+        }
+        Ok(())
+    }
+
+    /// The #warps axis a sweep of this workload covers: the paper's
+    /// [`SWEEP_WARPS`] for the instruction families, restricted to the
+    /// tile-legal warp counts for gemm.
+    pub fn sweep_warps_axis(&self) -> Vec<u32> {
+        match self {
+            Workload::Gemm(_) => SWEEP_WARPS
+                .iter()
+                .copied()
+                .filter(|&w| self.validate_point(ExecPoint::new(w, 1)).is_ok())
+                .collect(),
+            _ => SWEEP_WARPS.to_vec(),
+        }
+    }
+
+    /// The second sweep axis: ILP for the instruction families,
+    /// `cp.async` stage depth ([`GEMM_SWEEP_STAGES`], capped at the
+    /// problem's k-step count) for the gemm pipeline variant. The
+    /// synchronous variants never read the stage depth, so their axis
+    /// collapses to `[1]` instead of recomputing identical cells.
+    pub fn sweep_ilp_axis(&self) -> Vec<u32> {
+        match self {
+            Workload::Gemm(g) => {
+                if g.variant != gemm::Variant::Pipeline {
+                    return vec![1];
+                }
+                GEMM_SWEEP_STAGES
+                    .iter()
+                    .copied()
+                    .filter(|&s| self.validate_point(ExecPoint::new(1, s)).is_ok())
+                    .collect()
+            }
+            _ => SWEEP_ILPS.to_vec(),
         }
     }
 
@@ -356,6 +581,26 @@ impl Workload {
                 measure_ld_shared_at(device, width, ways, warps, ilp)
             }
             Workload::Wmma { ab, cd, shape } => measure_wmma(device, shape, ab, cd, warps, ilp),
+            Workload::Gemm(g) => {
+                let cfg = g.config(point);
+                let r = if g.l2_resident {
+                    let mut dev = device.clone();
+                    dev.gmem_bytes_per_cycle =
+                        dev.gmem_bytes_per_cycle.max(gemm::L2_RESIDENT_BYTES_PER_CYCLE);
+                    gemm::run_gemm(&dev, cfg, g.variant)
+                } else {
+                    gemm::run_gemm(device, cfg, g.variant)
+                };
+                // latency = cycles per k-step (the iteration of this
+                // kernel); throughput stays in FMA/clk/SM like the
+                // compute instruction families.
+                Measurement {
+                    warps: point.warps,
+                    ilp: point.ilp,
+                    latency: r.cta_cycles as f64 / cfg.k_steps() as f64,
+                    throughput: r.fma_per_clk,
+                }
+            }
         }
     }
 
@@ -364,12 +609,17 @@ impl Workload {
         self.measure(device, ExecPoint::new(1, 1)).latency
     }
 
-    /// Full (ILP, #warps) grid over the paper's sweep axes (§4 step 2) —
-    /// one code path for all five workload kinds.
+    /// Full grid over this workload's sweep axes (§4 step 2) — one code
+    /// path for all six workload kinds. Instruction families sweep
+    /// (ILP, #warps); gemm sweeps (stages, CTA warps) over the
+    /// tile-legal warp counts, with the stage depth riding the `ilp`
+    /// axis of the returned [`Sweep`].
     pub fn sweep(&self, device: &Device) -> Sweep {
-        let mut cells = Vec::with_capacity(SWEEP_WARPS.len() * SWEEP_ILPS.len());
-        for &warps in &SWEEP_WARPS {
-            for &ilp in &SWEEP_ILPS {
+        let warps_axis = self.sweep_warps_axis();
+        let ilp_axis = self.sweep_ilp_axis();
+        let mut cells = Vec::with_capacity(warps_axis.len() * ilp_axis.len());
+        for &warps in &warps_axis {
+            for &ilp in &ilp_axis {
                 let m = self.measure(device, ExecPoint::new(warps, ilp));
                 cells.push(SweepCell {
                     warps,
@@ -379,12 +629,7 @@ impl Workload {
                 });
             }
         }
-        Sweep {
-            label: self.to_string(),
-            warps_axis: SWEEP_WARPS.to_vec(),
-            ilp_axis: SWEEP_ILPS.to_vec(),
-            cells,
-        }
+        Sweep { label: self.to_string(), warps_axis, ilp_axis, cells }
     }
 }
 
@@ -399,6 +644,18 @@ impl fmt::Display for Workload {
             Workload::Wmma { ab, cd, shape } => {
                 write!(f, "wmma.m{}n{}k{} {ab}/{cd}", shape.m, shape.n, shape.k)
             }
+            Workload::Gemm(g) => write!(
+                f,
+                "gemm.{} {}^3 {}/{} t{}x{}x{}{}",
+                g.variant.spec_name(),
+                g.size,
+                g.ab,
+                g.cd,
+                g.tile_m,
+                g.tile_n,
+                g.tile_k,
+                if g.l2_resident { " (L2)" } else { "" }
+            ),
         }
     }
 }
@@ -421,11 +678,13 @@ mod tests {
                 cd: CdType::Fp32,
                 shape: WmmaShape { m: 16, n: 16, k: 16 },
             },
+            Workload::Gemm(GemmParams::paper(gemm::Variant::Pipeline, false)),
+            Workload::Gemm(GemmParams::paper(gemm::Variant::Permuted, true)),
         ]
     }
 
     #[test]
-    fn spec_round_trips_for_all_five_kinds() {
+    fn spec_round_trips_for_all_six_kinds() {
         for w in all_kinds() {
             let spec = w.to_spec();
             let parsed = Workload::parse_spec(&spec)
@@ -556,6 +815,120 @@ mod tests {
         let w = Workload::Ldmatrix { num: LdMatrixNum::X1 };
         let lat = w.completion_latency(&d);
         assert!((lat - 23.0).abs() < 1.5, "{lat}"); // Table 9
+    }
+
+    fn small_gemm(variant: gemm::Variant) -> Workload {
+        // 256^3 keeps measurement-driven tests fast (8 k-steps)
+        Workload::Gemm(GemmParams { size: 256, ..GemmParams::paper(variant, false) })
+    }
+
+    #[test]
+    fn gemm_spec_parsing() {
+        let w = Workload::parse_spec("gemm pipeline bf16 f32 2048 128x128x32").unwrap();
+        assert_eq!(w, Workload::Gemm(GemmParams::paper(gemm::Variant::Pipeline, false)));
+        assert_eq!(w.kind(), "gemm");
+        assert_eq!(w.throughput_unit(), "FMA/clk/SM");
+        let l2 = Workload::parse_spec("gemm permuted bf16 f32 2048 128X128X32 L2").unwrap();
+        assert_eq!(l2, Workload::Gemm(GemmParams::paper(gemm::Variant::Permuted, true)));
+        for bad in [
+            "gemm",
+            "gemm pipeline bf16 f32 2048",
+            "gemm fancy bf16 f32 2048 128x128x32",
+            "gemm pipeline qf8 f32 2048 128x128x32",
+            "gemm pipeline bf16 f32 big 128x128x32",
+            "gemm pipeline bf16 f32 2048 128x128",
+            "gemm pipeline bf16 f32 2048 128xNx32",
+            "gemm pipeline bf16 f32 2048 128x128x32 dram",
+            "gemm pipeline bf16 f32 2048 128x128x32 l2 extra",
+        ] {
+            assert!(Workload::parse_spec(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn gemm_validation() {
+        let ampere = a100();
+        let turing = rtx2080ti();
+        let pipe = Workload::Gemm(GemmParams::paper(gemm::Variant::Pipeline, false));
+        assert!(pipe.validate(&ampere).is_ok());
+        // Turing has neither cp.async nor the m16n8k16 shape
+        assert!(pipe.validate(&turing).is_err());
+        // int8 operands are rejected before any device lookup
+        let int8 = Workload::Gemm(GemmParams {
+            ab: AbType::Int8,
+            cd: CdType::Int32,
+            ..GemmParams::paper(gemm::Variant::Baseline, false)
+        });
+        assert!(int8.validate(&ampere).unwrap_err().contains("16-bit"));
+        // bf16 with an fp16 accumulator is an illegal pairing
+        let bad_cd = Workload::Gemm(GemmParams {
+            cd: CdType::Fp16,
+            ..GemmParams::paper(gemm::Variant::Baseline, false)
+        });
+        assert!(bad_cd.validate(&ampere).is_err());
+        // a size that does not tile is caught statically
+        let ragged = Workload::Gemm(GemmParams {
+            size: 2000,
+            ..GemmParams::paper(gemm::Variant::Baseline, false)
+        });
+        assert!(ragged.validate(&ampere).unwrap_err().contains("tile"));
+    }
+
+    #[test]
+    fn gemm_point_validation_and_sweep_axes() {
+        let w = small_gemm(gemm::Variant::Pipeline);
+        assert!(w.validate_point(ExecPoint::new(8, 2)).is_ok());
+        // 6 warps do not form a power-of-two warp grid
+        assert!(w.validate_point(ExecPoint::new(6, 2)).is_err());
+        assert!(w.validate_point(ExecPoint::new(8, 0)).is_err());
+        // the sweep axes drop the grid-illegal warp counts and ride the
+        // stage depths on the ilp axis
+        assert_eq!(w.sweep_warps_axis(), vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(w.sweep_ilp_axis(), GEMM_SWEEP_STAGES.to_vec());
+        // the synchronous variants never read the stage depth: one cell
+        // per warp count instead of four identical ones, and the stage
+        // coordinate is pinned to 1 so each computation has exactly one
+        // cache token
+        let sync_variant = small_gemm(gemm::Variant::Baseline);
+        assert_eq!(sync_variant.sweep_ilp_axis(), vec![1]);
+        assert!(sync_variant.validate_point(ExecPoint::new(8, 1)).is_ok());
+        let err = sync_variant.validate_point(ExecPoint::new(8, 2)).unwrap_err();
+        assert!(err.contains("stages"), "{err}");
+        // a pipeline deeper than the k-loop is not a legal point
+        let tiny = Workload::Gemm(GemmParams {
+            size: 64,
+            tile_m: 16,
+            tile_n: 16,
+            tile_k: 16,
+            ..GemmParams::paper(gemm::Variant::Pipeline, false)
+        });
+        assert!(tiny.validate_point(ExecPoint::new(1, 5)).is_err());
+        assert_eq!(tiny.sweep_ilp_axis(), vec![1, 2, 3, 4]); // k_steps = 4
+        // instruction families keep the paper's axes
+        let mma = Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 };
+        assert_eq!(mma.sweep_warps_axis(), SWEEP_WARPS.to_vec());
+        assert_eq!(mma.sweep_ilp_axis(), SWEEP_ILPS.to_vec());
+    }
+
+    #[test]
+    fn gemm_measure_matches_run_gemm() {
+        let d = a100();
+        let w = small_gemm(gemm::Variant::Pipeline);
+        let Workload::Gemm(g) = w else { unreachable!() };
+        let point = ExecPoint::new(8, 2);
+        let m = w.measure(&d, point);
+        let direct = gemm::run_gemm(&d, g.config(point), gemm::Variant::Pipeline);
+        let k_steps = g.config(point).k_steps() as f64;
+        assert!((m.latency - direct.cta_cycles as f64 / k_steps).abs() < 1e-9);
+        assert!((m.throughput - direct.fma_per_clk).abs() < 1e-9);
+        assert!(m.throughput > 0.0 && m.latency > 0.0, "{m:?}");
+        // the L2-resident regime must speed the memory-bound baseline up
+        let base = small_gemm(gemm::Variant::Baseline);
+        let Workload::Gemm(gb) = base else { unreachable!() };
+        let l2 = Workload::Gemm(GemmParams { l2_resident: true, ..gb });
+        let slow = base.measure(&d, ExecPoint::new(8, 1));
+        let fast = l2.measure(&d, ExecPoint::new(8, 1));
+        assert!(fast.latency < slow.latency, "{fast:?} vs {slow:?}");
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::time::Instant;
 
 use crate::coordinator::run_parallel;
 use crate::device::{self, Device};
-use crate::microbench::{ConvergencePoint, Measurement, Sweep, SWEEP_WARPS};
+use crate::microbench::{ConvergencePoint, Measurement, Sweep};
 use crate::util::Json;
 
 use super::runner::Runner;
@@ -275,7 +275,9 @@ impl Plan {
         }
         let mut seen: Vec<ExecPoint> = Vec::new();
         for p in &self.points {
-            p.validate()?;
+            // workload-aware: gemm additionally checks the warp grid and
+            // reads ilp as the cp.async stage depth
+            self.workload.validate_point(*p)?;
             if seen.contains(p) {
                 continue; // identical points are one unit of work
             }
@@ -283,11 +285,26 @@ impl Plan {
             units.push(UnitKind::Point(*p));
         }
         let convergence_warps = if self.sweep {
-            let warps = if self.convergence.is_empty() { vec![4, 8] } else { self.convergence };
+            let axis = self.workload.sweep_warps_axis();
+            let warps = if self.convergence.is_empty() {
+                // default summaries at the paper's 4/8 warps, restricted
+                // to this workload's axis (a small gemm tile may not
+                // admit them); fall back to the axis maximum so a sweep
+                // the user never parameterized always compiles
+                let defaults: Vec<u32> =
+                    [4, 8].into_iter().filter(|w| axis.contains(w)).collect();
+                if defaults.is_empty() {
+                    axis.iter().copied().max().into_iter().collect()
+                } else {
+                    defaults
+                }
+            } else {
+                self.convergence
+            };
             for &w in &warps {
-                if !SWEEP_WARPS.contains(&w) {
+                if !axis.contains(&w) {
                     return Err(format!(
-                        "convergence warp count {w} is not on the sweep axis {SWEEP_WARPS:?}"
+                        "convergence warp count {w} is not on the sweep axis {axis:?}"
                     ));
                 }
             }
@@ -540,6 +557,53 @@ mod tests {
             let j = Json::parse(body).unwrap();
             assert!(Plan::from_json(&j).is_err(), "{body} should be rejected");
         }
+    }
+
+    #[test]
+    fn gemm_plans_compile_and_run_like_instruction_plans() {
+        use super::super::GemmParams;
+        use crate::gemm::Variant;
+        let w = Workload::Gemm(GemmParams {
+            size: 256,
+            ..GemmParams::paper(Variant::Pipeline, false)
+        });
+        let plan = Plan::new(w).completion_latency().point(8, 2).compile().unwrap();
+        let r = plan.run(&SimRunner, 2).unwrap();
+        assert!(r.completion().unwrap() > 0.0);
+        assert!(r.point(8, 2).unwrap().throughput > 0.0);
+        assert_eq!(r.throughput_unit, "FMA/clk/SM");
+
+        // tile params are cache-key coordinates: two tiles address
+        // different slots, and the stage depth is in the token too
+        let w2 = Workload::Gemm(GemmParams {
+            size: 256,
+            tile_n: 64,
+            ..GemmParams::paper(Variant::Pipeline, false)
+        });
+        let a = Plan::new(w).point(8, 2).compile().unwrap();
+        let b = Plan::new(w2).point(8, 2).compile().unwrap();
+        let c = Plan::new(w).point(8, 3).compile().unwrap();
+        assert_ne!(a.unit_token(&a.units[0]), b.unit_token(&b.units[0]));
+        assert_ne!(a.unit_token(&a.units[0]), c.unit_token(&c.units[0]));
+
+        // a warp count off the tile's grid is rejected at compile time,
+        // as is a convergence warp off the gemm sweep axis
+        let err = Plan::new(w).point(6, 2).compile().unwrap_err();
+        assert!(err.contains("power of two"), "{err}");
+        let err = Plan::new(w).convergence(&[6]).compile().unwrap_err();
+        assert!(err.contains("sweep axis"), "{err}");
+
+        // a tile too small to admit the default 4/8-warp convergence
+        // points still sweeps: the default falls back to the axis max
+        let tiny = Workload::Gemm(GemmParams {
+            size: 64,
+            tile_m: 16,
+            tile_n: 16,
+            tile_k: 16,
+            ..GemmParams::paper(Variant::Pipeline, false)
+        });
+        let plan = Plan::new(tiny).sweep().compile().unwrap();
+        assert_eq!(plan.convergence_warps, vec![1]);
     }
 
     #[test]

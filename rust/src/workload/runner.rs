@@ -101,6 +101,22 @@ mod tests {
         assert_eq!(runner_for(BackendKind::Native).unwrap().name(), "sim");
     }
 
+    #[test]
+    fn sim_runner_executes_gemm_units() {
+        use crate::gemm::Variant;
+        use crate::workload::{GemmParams, Plan, Workload};
+        let w = Workload::Gemm(GemmParams {
+            size: 256,
+            ..GemmParams::paper(Variant::Baseline, false)
+        });
+        let plan = Plan::new(w).point(8, 1).compile().unwrap();
+        let out = SimRunner.run_unit(&plan, &plan.units[0]).unwrap();
+        match out {
+            UnitOutput::Point(m) => assert!(m.throughput > 0.0 && m.latency > 0.0, "{m:?}"),
+            other => panic!("expected a point output, got {other:?}"),
+        }
+    }
+
     #[cfg(not(feature = "pjrt"))]
     #[test]
     fn pjrt_runner_unavailable_offline() {

@@ -1,0 +1,93 @@
+//! Integration: the GEMM workload family end to end — the plan-backed
+//! tables 16/17 pinned against `report::expected` and against the
+//! legacy `gemm::table16`/`table17` direct path (the Workload promotion
+//! must not change the numbers), plus (CTA warps, stages) sweeps with
+//! the shared convergence machinery.
+
+use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::device::a100;
+use tcbench::gemm::{self, GemmConfig};
+use tcbench::report::expected;
+use tcbench::workload::{Plan, SimRunner, Workload};
+
+#[test]
+fn table16_report_is_plan_backed_and_pinned() {
+    let mut b = Backend::Native;
+    let report = run_experiment("t16", &mut b).unwrap();
+    // the paper's published cycle counts are in the table
+    assert!(report.contains(&expected::TABLE16_BASELINE.to_string()), "{report}");
+    assert!(report.contains(&expected::TABLE16_PIPELINE.to_string()), "{report}");
+    assert!(report.contains("mma_baseline.cu") && report.contains("mma_pipeline.cu"));
+
+    // the plan-backed cycles equal the legacy direct path exactly
+    let d = a100();
+    let (base, pipe) = gemm::table16(&d, GemmConfig::default());
+    assert!(
+        report.contains(&base.total_cycles.to_string()),
+        "baseline {} missing:\n{report}",
+        base.total_cycles
+    );
+    assert!(
+        report.contains(&pipe.total_cycles.to_string()),
+        "pipeline {} missing:\n{report}",
+        pipe.total_cycles
+    );
+    let speedup = base.total_cycles as f64 / pipe.total_cycles as f64;
+    assert!((1.4..3.0).contains(&speedup), "async speedup {speedup}");
+}
+
+#[test]
+fn table17_report_is_plan_backed_and_pinned() {
+    let mut b = Backend::Native;
+    let report = run_experiment("t17", &mut b).unwrap();
+    assert!(report.contains(&expected::TABLE16_BASELINE.to_string()), "{report}");
+    assert!(report.contains(&expected::TABLE17_PERMUTED.to_string()), "{report}");
+    assert!(report.contains("mma_baseline.cu") && report.contains("mma_permuted.cu"));
+
+    let d = a100();
+    let (base, perm) = gemm::table17(&d, GemmConfig::default());
+    assert!(
+        report.contains(&base.total_cycles.to_string()),
+        "baseline {} missing:\n{report}",
+        base.total_cycles
+    );
+    assert!(
+        report.contains(&perm.total_cycles.to_string()),
+        "permuted {} missing:\n{report}",
+        perm.total_cycles
+    );
+    let speedup = base.total_cycles as f64 / perm.total_cycles as f64;
+    assert!((1.8..4.5).contains(&speedup), "permuted speedup {speedup}");
+}
+
+#[test]
+fn gemm_sweep_covers_tile_legal_axes_with_convergence() {
+    // the `repro sweep --instr "gemm ..."` shape: completion + full
+    // sweep through the one plan path, at a fast 256^3 problem
+    let w = Workload::parse_spec("gemm pipeline bf16 f32 256 128x128x32").unwrap();
+    let plan = Plan::new(w)
+        .device("a100")
+        .completion_latency()
+        .sweep()
+        .compile()
+        .unwrap();
+    let r = plan.run(&SimRunner, 4).unwrap();
+    assert!(r.completion().unwrap() > 0.0);
+    let sweep = r.sweep().unwrap();
+    // warp axis drops the non-power-of-two counts; the ilp axis carries
+    // the cp.async stage depths
+    assert_eq!(sweep.warps_axis, vec![1, 2, 4, 8, 16, 32]);
+    assert_eq!(sweep.ilp_axis, vec![1, 2, 3, 4]);
+    assert_eq!(sweep.cells.len(), 24);
+    // the compute scales with warps: the paper's 8-warp CTA beats 1 warp
+    let t1 = sweep.cell(1, 2).unwrap().throughput;
+    let t8 = sweep.cell(8, 2).unwrap().throughput;
+    assert!(t8 > t1, "t1={t1} t8={t8}");
+    // double buffering beats the synchronous single stage at 8 warps
+    let s1 = sweep.cell(8, 1).unwrap().latency;
+    let s2 = sweep.cell(8, 2).unwrap().latency;
+    assert!(s2 < s1, "stages=1 {s1} vs stages=2 {s2}");
+    // the shared convergence machinery summarizes the default 4/8 warps
+    assert!(r.convergence(4).is_some());
+    assert!(r.convergence(8).is_some());
+}

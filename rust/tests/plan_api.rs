@@ -66,12 +66,13 @@ fn post_plan(addr: SocketAddr, body: &str) -> (u16, Json) {
 fn every_workload_kind_runs_through_one_plan_path() {
     // the acceptance bar of the unified API: all five instruction
     // families compile and run through the same Plan -> Runner pipeline
-    let paper_anchored: [(&str, Option<std::ops::Range<f64>>); 5] = [
+    let paper_anchored: [(&str, Option<std::ops::Range<f64>>); 6] = [
         ("mma fp16 f32 m16n8k16", Some(960.0..1030.0)), // Table 3 (8,2)
         ("mma.sp bf16 f32 m16n8k32", Some(1850.0..2150.0)), // ~2x dense, §6
         ("ldmatrix x4", Some(110.0..135.0)),            // §7: ~128 B/clk fabric bound
         ("ld.shared u32 1", None),                      // sanity-only (no paper point at (8,2))
         ("wmma fp16 f32 m16n16k16", Some(850.0..1030.0)), // compiled HMMA pair, §2.2
+        ("gemm pipeline bf16 f32 256 128x128x32", None), // Appendix A, (warps, stages) point
     ];
     for (spec, expect_thr) in paper_anchored {
         let workload = Workload::parse_spec(spec).unwrap();
@@ -207,6 +208,56 @@ fn expect_100_continue_gets_an_interim_response() {
     assert!(head.starts_with("HTTP/1.1 200"), "{head}");
     let j = Json::parse(final_body).expect("final body is JSON");
     assert_eq!(j.get_u64("count"), Some(1));
+
+    server.stop();
+}
+
+#[test]
+fn gemm_plan_round_trip_and_cache() {
+    let server = start();
+    let addr = server.addr();
+
+    let body = r#"{"workload":"gemm pipeline bf16 f32 256 128x128x32","device":"a100",
+                   "points":[[8,2]],"backend":"native"}"#;
+    let (status, j1) = post_plan(addr, body);
+    assert_eq!(status, 200, "{j1}");
+    assert_eq!(j1.get_str("workload"), Some("gemm pipeline bf16 f32 256 128x128x32"));
+    assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
+    let units = j1.get("units").unwrap().as_arr().unwrap();
+    assert_eq!(units.len(), 1);
+    let result = units[0].get("result").unwrap();
+    assert_eq!(result.get_u64("warps"), Some(8));
+    assert_eq!(result.get_u64("ilp"), Some(2)); // = cp.async stage depth
+    assert!(result.get_f64("throughput").unwrap() > 0.0, "{result}");
+    assert!(result.get_str("key").is_some(), "per-unit content address: {result}");
+
+    // the identical request is served from the per-unit cache...
+    let (_, j2) = post_plan(addr, body);
+    assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true), "{j2}");
+    // ...observably: /v1/metrics shows exactly one plan compute
+    let (_, m) = get(addr, "/v1/metrics");
+    let plan_stat = m.get("experiments").unwrap().get("plan").unwrap();
+    assert_eq!(plan_stat.get_u64("computes"), Some(1), "{m}");
+    assert!(m.get("cache").unwrap().get_u64("hits").unwrap() >= 1, "{m}");
+
+    // a different stage depth is a different content address
+    let deeper = r#"{"workload":"gemm pipeline bf16 f32 256 128x128x32","device":"a100",
+                     "points":[[8,3]],"backend":"native"}"#;
+    let (_, j3) = post_plan(addr, deeper);
+    let units3 = j3.get("units").unwrap().as_arr().unwrap();
+    assert_eq!(units3[0].get_str("origin"), Some("computed"), "{j3}");
+
+    // malformed gemm plans are 400s (parse-time, compile-time, off-grid
+    // warp counts), never 500s
+    for bad in [
+        r#"{"workload":"gemm pipeline bf16 f32 256 100x128x32","points":[[8,2]]}"#,
+        r#"{"workload":"gemm pipeline bf16 f32 256 128x128","points":[[8,2]]}"#,
+        r#"{"workload":"gemm pipeline bf16 f32 256 128x128x32","points":[[6,2]]}"#,
+    ] {
+        let (status, j) = post_plan(addr, bad);
+        assert_eq!(status, 400, "{bad}: {j}");
+        assert!(j.get_str("error").is_some(), "{j}");
+    }
 
     server.stop();
 }

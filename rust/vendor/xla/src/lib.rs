@@ -1,0 +1,134 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The real crate needs a vendored XLA toolchain and is unavailable in
+//! the offline build environment. This shim exposes the exact API
+//! surface `tcbench::runtime::artifact` uses, so `cargo build --features
+//! pjrt` type-checks the real runtime wiring — the CI feature-matrix leg
+//! builds it on every push, keeping the gated code from rotting unbuilt.
+//!
+//! At run time, [`PjRtClient::cpu`] (the only entry point into the rest
+//! of the API) always fails with an actionable message, which sends
+//! every caller down the same native-backend fallback path as the
+//! feature-off stub: `ArtifactStore::open` errors, `Backend::auto()`
+//! picks native, and the PJRT integration tests skip themselves.
+
+use std::fmt;
+
+/// The error every shim operation returns.
+pub struct XlaError(String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn offline() -> XlaError {
+    XlaError(
+        "offline xla shim: no PJRT runtime is linked in this build — \
+         vendor the real xla crate to execute artifacts"
+            .to_string(),
+    )
+}
+
+/// A PJRT client. [`PjRtClient::cpu`] always fails in the shim, so no
+/// instance is ever constructed.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(offline())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(offline())
+    }
+}
+
+/// A compiled executable (never constructed in the shim).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(offline())
+    }
+}
+
+/// A device buffer returned by execution (never constructed).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(offline())
+    }
+}
+
+/// An HLO module parsed from its text form.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(offline())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A host-side literal (tensor value).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Err(offline())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
+        Err(offline())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(offline())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_actionably() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err:?}").contains("offline xla shim"));
+        assert!(Literal::vec1(&[1.0]).reshape(&[1]).is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Per-plan wall-time regression gate over bench_summary.json.
+
+Usage:
+    python3 scripts/bench_diff.py BASELINE NEW [--threshold PCT]
+                                  [--min-share PCT] [--absolute]
+
+Compares each plan's wall time between a committed baseline
+(`bench_baseline.json`, produced by `repro all --out DIR`) and a fresh
+run. Each plan's growth ratio (new/base) is normalized by the campaign's
+*median* growth ratio, so a uniform machine-speed difference between the
+baseline runner and this runner cancels out while a single regressed
+plan stands out whatever its weight (pass --absolute to compare raw
+wall_ms instead). A plan fails the gate when its normalized time grows
+by more than --threshold percent (default 25). Plans below --min-share
+percent of the baseline campaign (default 0.5) are reported but never
+fail: their wall times are noise-dominated.
+
+A baseline with `"bootstrap": true` or an empty plan list passes with a
+notice — refresh it with the one-liner:
+
+    target/release/repro all --backend native --out out && cp out/bench_summary.json bench_baseline.json
+
+Exit codes: 0 = ok (or bootstrap baseline), 1 = regression, 2 = bad input.
+"""
+
+import argparse
+import json
+import statistics
+import sys
+
+REFRESH = (
+    "target/release/repro all --backend native --out out "
+    "&& cp out/bench_summary.json bench_baseline.json"
+)
+
+
+def load_plans(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    schema = doc.get("schema", "")
+    if not schema.startswith("tcbench/bench_summary/"):
+        print(f"bench_diff: {path} has unexpected schema {schema!r}", file=sys.stderr)
+        sys.exit(2)
+    plans = {}
+    for p in doc.get("plans", []):
+        pid, wall = p.get("id"), p.get("wall_ms")
+        if isinstance(pid, str) and isinstance(wall, (int, float)) and wall >= 0:
+            plans[pid] = float(wall)
+    return doc, plans
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=25.0,
+                    help="max allowed per-plan growth beyond the campaign's "
+                         "median drift, percent (default 25)")
+    ap.add_argument("--min-share", type=float, default=0.5,
+                    help="plans below this share of the baseline campaign "
+                         "(percent) never fail the gate (default 0.5)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw wall_ms (no median-drift normalization)")
+    args = ap.parse_args()
+
+    base_doc, base = load_plans(args.baseline)
+    _, new = load_plans(args.new)
+
+    if base_doc.get("bootstrap") or not base:
+        print(f"bench_diff: baseline {args.baseline} is a bootstrap placeholder — "
+              f"nothing to gate on.\nRefresh it with:\n    {REFRESH}")
+        return 0
+
+    base_total = sum(base.values()) or 1.0
+    common = [pid for pid in base if pid in new and base[pid] > 0]
+    ratios = {pid: new[pid] / base[pid] for pid in common}
+    eligible = [pid for pid in common
+                if base[pid] / base_total * 100.0 >= args.min_share]
+    if args.absolute or not eligible:
+        scale = 1.0
+    else:
+        scale = statistics.median(ratios[pid] for pid in eligible) or 1.0
+
+    regressions, notes = [], []
+    print(f"bench_diff: {len(base)} baseline plans vs {len(new)} new "
+          f"(median drift x{scale:.2f}, threshold +{args.threshold:.0f}%)")
+    print(f"{'plan':<16} {'base ms':>10} {'new ms':>10} {'vs median':>10}")
+    for pid in sorted(base):
+        if pid not in new:
+            regressions.append(f"{pid}: present in baseline but missing from the new run")
+            continue
+        if base[pid] <= 0:
+            continue
+        pct = (ratios[pid] / scale - 1.0) * 100.0
+        flag = ""
+        if pct > args.threshold:
+            if pid not in eligible:
+                flag = f"  (ignored: <{args.min_share:.1f}% of campaign)"
+            else:
+                flag = "  REGRESSION"
+                regressions.append(f"{pid}: +{pct:.1f}% beyond the campaign's median drift")
+        print(f"{pid:<16} {base[pid]:>10.1f} {new[pid]:>10.1f} {pct:>+9.1f}%{flag}")
+    for pid in sorted(set(new) - set(base)):
+        notes.append(f"{pid}: new plan not in the baseline (refresh to start gating it)")
+
+    for note in notes:
+        print(f"note: {note}")
+    if regressions:
+        print(f"\nbench_diff: {len(regressions)} regression(s) beyond "
+              f"+{args.threshold:.0f}%:", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        print(f"\nIf intentional, refresh the baseline:\n    {REFRESH}", file=sys.stderr)
+        return 1
+    print("bench_diff: no per-plan regressions beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
