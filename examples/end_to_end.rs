@@ -13,12 +13,13 @@
 
 use std::time::Instant;
 
-use tcbench::coordinator::{run_experiment, Backend, EXPERIMENTS};
+use tcbench::coordinator::{BackendKind, run_experiment, EXPERIMENTS};
 use tcbench::device::a100;
 use tcbench::isa::shapes::*;
 use tcbench::isa::{AbType, CdType, MmaInstr};
 use tcbench::microbench::measure_mma;
 use tcbench::numerics::{profile_op, InitKind, NativeExec, NumericCfg, ProfileOp};
+use tcbench::workload::runner_for;
 
 fn main() -> anyhow::Result<()> {
     let out_dir = std::env::args()
@@ -27,18 +28,18 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or_else(|| "results".to_string());
     std::fs::create_dir_all(&out_dir)?;
 
-    let mut backend = Backend::auto();
+    let runner = runner_for(BackendKind::Auto).map_err(anyhow::Error::msg)?;
     println!(
         "== tcbench end-to-end campaign ({} experiments, numeric backend: {}) ==\n",
         EXPERIMENTS.len(),
-        backend.name()
+        runner.name()
     );
 
     let t0 = Instant::now();
     let mut failures = 0;
     for e in EXPERIMENTS {
         let t = Instant::now();
-        match run_experiment(e.id, &mut backend) {
+        match run_experiment(e.id, runner.as_ref()) {
             Ok(report) => {
                 std::fs::write(format!("{out_dir}/{}.txt", e.id), &report)?;
                 println!("[{:>6.2?}] {:<6} {}", t.elapsed(), e.id, e.description);

@@ -1,44 +1,38 @@
 //! §8.1 element-wise numeric profiling (Tables 12-15) on the real
-//! request path: the Pallas-kernel AOT artifacts executed through PJRT
-//! (falls back to the native softfloat datapath if artifacts are not
-//! built).
+//! request path: every probe is a first-class `Workload::Numeric` plan
+//! executed through the `Runner` backend seam — the PJRT artifact
+//! runtime when `make artifacts` has been run, the native softfloat
+//! datapath otherwise (`runner_for(Auto)` resolves exactly like the
+//! `repro` CLI and tcserved do).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example numeric_profile
 //! ```
 
-use tcbench::numerics::{profile_op, InitKind, MmaExec, NativeExec, NumericCfg, ProfileOp};
-use tcbench::runtime::{ArtifactExec, ArtifactStore};
+use tcbench::coordinator::BackendKind;
+use tcbench::numerics::{InitKind, ProfileOp};
+use tcbench::workload::{runner_for, AccDtype, NumericProbe, Plan, ProbeDtype, Workload};
 
 fn main() {
-    let mut store = ArtifactStore::open_default().ok();
-    println!(
-        "backend: {}",
-        if store.is_some() { "pjrt (AOT artifacts)" } else { "native softfloat" }
-    );
+    let runner = runner_for(BackendKind::Auto).expect("auto never fails");
+    println!("backend: {}", runner.name());
 
-    for (label, cfg, paper_low_acc) in [
-        ("Table 12 — BF16 (C/D FP32)", NumericCfg::new("bf16", "f32", 16, 8, 8), 1.89e-8),
-        ("Table 13 — FP16 (C/D FP32)", NumericCfg::new("fp16", "f32", 16, 8, 8), 0.0),
-        ("Table 14 — FP16 (C/D FP16)", NumericCfg::new("fp16", "f16", 16, 8, 8), f64::NAN),
-        ("Table 15 — TF32 (C/D FP32)", NumericCfg::new("tf32", "f32", 16, 8, 8), 0.0),
+    for (label, ab, cd, paper_low_acc) in [
+        ("Table 12 — BF16 (C/D FP32)", ProbeDtype::Bf16, AccDtype::F32, 1.89e-8),
+        ("Table 13 — FP16 (C/D FP32)", ProbeDtype::Fp16, AccDtype::F32, 0.0),
+        ("Table 14 — FP16 (C/D FP16)", ProbeDtype::Fp16, AccDtype::F16, f64::NAN),
+        ("Table 15 — TF32 (C/D FP32)", ProbeDtype::Tf32, AccDtype::F32, 0.0),
     ] {
         println!("\n{label}");
-        let mut native;
-        let mut artifact;
-        let exec: &mut dyn MmaExec = match store.as_mut() {
-            Some(s) => {
-                artifact = ArtifactExec::new(s, cfg).expect("artifact");
-                &mut artifact
-            }
-            None => {
-                native = NativeExec::new(cfg);
-                &mut native
-            }
-        };
         for init in [InitKind::LowPrecision, InitKind::Fp32] {
             for op in ProfileOp::ALL {
-                let r = profile_op(exec, op, init, 1000, 7);
+                let w = Workload::Numeric(NumericProbe::profile(ab, cd, op, init));
+                let plan = Plan::new(w)
+                    .point(1, 1)
+                    .compile()
+                    .expect("paper probes are valid workloads");
+                let res = plan.run(runner.as_ref(), 1).expect("probe execution");
+                let r = res.profile().expect("profile point unit requested");
                 println!(
                     "  {:<22} {:<14} err {:>9.2e}   (vs cvtFP16: {:>9.2e})",
                     op.paper_name(),

@@ -1,7 +1,8 @@
 //! Bench: §7 data movement — ldmatrix table (Table 9), the Fig. 15
 //! sweep and the ld.shared conflict probe (Table 10).
 
-use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::coordinator::run_experiment;
+use tcbench::workload::SimRunner;
 use tcbench::device::a100;
 use tcbench::isa::{LdMatrixNum, LdSharedWidth};
 use tcbench::microbench::{measure_ld_shared, measure_ldmatrix, sweep_ldmatrix};
@@ -15,10 +16,9 @@ fn main() {
     b.bench("ldmatrix/x4_8w_ilp1", || measure_ldmatrix(&d, LdMatrixNum::X4, 8, 1));
     b.bench("ld_shared/u32_4way", || measure_ld_shared(&d, LdSharedWidth::U32, 4));
 
-    let mut backend = Backend::Native;
     for id in ["t9", "t10", "fig15"] {
         b.bench(&format!("{id}/full_regeneration"), || {
-            run_experiment(id, &mut backend).unwrap()
+            run_experiment(id, &SimRunner).unwrap()
         });
     }
 

@@ -2,7 +2,8 @@
 //! Fig. 6/7 sweeps end-to-end, reporting both the wall time of the
 //! regeneration and the headline reproduced numbers.
 
-use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::coordinator::run_experiment;
+use tcbench::workload::SimRunner;
 use tcbench::device::a100;
 use tcbench::isa::shapes::{M16N8K16, M16N8K8};
 use tcbench::isa::{AbType, CdType, MmaInstr};
@@ -19,10 +20,9 @@ fn main() {
     b.bench("fig7/sweep_mma_m16n8k8_a100", || sweep_mma(&d, &k8));
     b.bench("mma/single_config_8w_ilp2", || measure_mma(&d, &k16, 8, 2));
 
-    let mut backend = Backend::Native;
     for id in ["t3", "t4", "t5"] {
         b.bench(&format!("table{}/full_regeneration", &id[1..]), || {
-            run_experiment(id, &mut backend).unwrap()
+            run_experiment(id, &SimRunner).unwrap()
         });
     }
 

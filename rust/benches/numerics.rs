@@ -3,7 +3,8 @@
 //! built) through the PJRT runtime, so the hot numeric path of both
 //! backends is tracked.
 
-use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::coordinator::run_experiment;
+use tcbench::workload::SimRunner;
 use tcbench::numerics::{
     chain_errors, profile_op, InitKind, NativeExec, NumericCfg, ProfileOp,
 };
@@ -43,10 +44,9 @@ fn main() {
         Err(e) => eprintln!("skipping PJRT benches: {e:#}"),
     }
 
-    let mut backend = Backend::Native;
     for id in ["t12", "t13", "t14", "t15", "fig17"] {
         b.bench(&format!("{id}/full_regeneration"), || {
-            run_experiment(id, &mut backend).unwrap()
+            run_experiment(id, &SimRunner).unwrap()
         });
     }
 

@@ -1,7 +1,8 @@
 //! Bench: sparse-mma tables (paper Tables 6/7) and Fig. 10/11 sweeps,
 //! including the A100 small-k anomaly check.
 
-use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::coordinator::run_experiment;
+use tcbench::workload::SimRunner;
 use tcbench::device::{a100, rtx3070ti};
 use tcbench::isa::shapes::{M16N8K16, M16N8K32};
 use tcbench::isa::{AbType, CdType, MmaInstr};
@@ -18,10 +19,9 @@ fn main() {
     b.bench("fig10/sweep_mma_sp_m16n8k32_a100", || sweep_mma(&d, &sp32));
     b.bench("fig11/sweep_mma_sp_m16n8k16_a100", || sweep_mma(&d, &sp16));
 
-    let mut backend = Backend::Native;
     for id in ["t6", "t7"] {
         b.bench(&format!("table{}/full_regeneration", &id[1..]), || {
-            run_experiment(id, &mut backend).unwrap()
+            run_experiment(id, &SimRunner).unwrap()
         });
     }
 

@@ -7,17 +7,16 @@ use crate::gemm;
 use crate::isa::shapes::{M16N8K16, M16N8K32, M16N8K8};
 use crate::isa::{AbType, CdType, LdMatrixNum, LdSharedWidth};
 use crate::microbench::Measurement;
-use crate::numerics::{
-    chain_errors, profile_op, InitKind, MmaExec, NativeExec, NumericCfg, ProfileOp,
-};
+use crate::numerics::{InitKind, ProfileOp, ProfileResult};
 use crate::report::expected::{self, PaperLdmatrixRow, PaperMmaRow};
 use crate::report::{
     deviation, render_figure_csv, render_sparkline, render_sweep_figure, Table,
 };
-use crate::workload::{GemmParams, Plan, SimRunner, Workload};
+use crate::workload::{
+    AccDtype, GemmParams, NumericProbe, Plan, ProbeDtype, Runner, SimRunner, Workload,
+};
 
 use super::pool::{default_threads, run_parallel};
-use super::Backend;
 
 fn fmt1(x: f64) -> String {
     format!("{x:.1}")
@@ -229,35 +228,40 @@ pub fn run_table10() -> String {
 
 // ------------------------------------------------------- §8 numerics
 
-fn make_exec<'a>(
-    backend: &'a mut Backend,
-    cfg: NumericCfg,
-) -> Box<dyn MmaExec + 'a> {
-    match backend {
-        Backend::Native => Box::new(NativeExec::new(cfg)),
-        Backend::Pjrt(store) => Box::new(
-            crate::runtime::ArtifactExec::new(store, cfg)
-                .expect("artifact missing — run `make artifacts`"),
-        ),
-    }
+/// Run one §8.1 profile probe as a plan-backed `(1,1)` point unit on
+/// `runner` — the same path `POST /v1/plan` takes, so tcserved serves
+/// these tables from its per-unit cache and the runner's numeric leg
+/// (native softfloat or PJRT artifacts) does the arithmetic.
+fn profile_result(
+    runner: &dyn Runner,
+    ab: ProbeDtype,
+    cd: AccDtype,
+    op: ProfileOp,
+    init: InitKind,
+) -> ProfileResult {
+    let probe = NumericProbe::profile(ab, cd, op, init);
+    let plan = Plan::new(Workload::Numeric(probe))
+        .point(1, 1)
+        .compile()
+        .expect("the paper's profile probes are valid workloads");
+    let res = plan.run(runner, 1).expect("numeric probe execution failed");
+    *res.profile().expect("profile point unit requested")
 }
 
-const TRIALS: usize = 1000;
-
 fn numeric_table(
-    backend: &mut Backend,
+    runner: &dyn Runner,
     title: &str,
-    cfg: NumericCfg,
+    ab: ProbeDtype,
+    cd: AccDtype,
     paper_low: [f64; 3],
     paper_fp32: Option<[f64; 3]>,
 ) -> String {
     let mut t = Table::new(title, &["operation", "init", "paper", "measured"]);
-    let mut exec = make_exec(backend, cfg);
     for (init, paper) in [(InitKind::LowPrecision, Some(paper_low)), (InitKind::Fp32, paper_fp32)]
     {
         let Some(paper) = paper else { continue };
         for (i, op) in ProfileOp::ALL.iter().enumerate() {
-            let r = profile_op(exec.as_mut(), *op, init, TRIALS, 7);
+            let r = profile_result(runner, ab, cd, *op, init);
             t.row(vec![
                 op.paper_name().to_string(),
                 format!("{init:?}"),
@@ -269,36 +273,42 @@ fn numeric_table(
     t.render()
 }
 
-pub fn run_table12(backend: &mut Backend) -> String {
+pub fn run_table12(runner: &dyn Runner) -> String {
     numeric_table(
-        backend,
+        runner,
         "Table 12: BF16 numeric profiling (w.r.t. FP32 CPU)",
-        NumericCfg::new("bf16", "f32", 16, 8, 8),
+        ProbeDtype::Bf16,
+        AccDtype::F32,
         [0.0, 0.0, 1.89e-8],
         Some([1.29e-3, 1.72e-3, 1.13e-3]),
     )
 }
 
-pub fn run_table13(backend: &mut Backend) -> String {
+pub fn run_table13(runner: &dyn Runner) -> String {
     numeric_table(
-        backend,
+        runner,
         "Table 13: FP16 (C/D=FP32) numeric profiling",
-        NumericCfg::new("fp16", "f32", 16, 8, 8),
+        ProbeDtype::Fp16,
+        AccDtype::F32,
         [0.0, 0.0, 0.0],
         Some([1.59e-4, 2.18e-4, 1.36e-4]),
     )
 }
 
-pub fn run_table14(backend: &mut Backend) -> String {
-    let cfg = NumericCfg::new("fp16", "f16", 16, 8, 8);
+pub fn run_table14(runner: &dyn Runner) -> String {
     let mut t = Table::new(
         "Table 14: FP16 (C/D=FP16) vs CPU_FP32 and CPU_FP32cvtFP16",
         &["operation", "vs FP32 (paper/meas)", "vs cvtFP16 (paper/meas)"],
     );
     let paper = [(1.22e-4, 0.0), (1.81e-4, 0.0), (1.81e-4, 0.0)];
-    let mut exec = make_exec(backend, cfg);
     for (op, (p32, pcvt)) in ProfileOp::ALL.iter().zip(paper) {
-        let r = profile_op(exec.as_mut(), *op, InitKind::LowPrecision, TRIALS, 7);
+        let r = profile_result(
+            runner,
+            ProbeDtype::Fp16,
+            AccDtype::F16,
+            *op,
+            InitKind::LowPrecision,
+        );
         t.row(vec![
             op.paper_name().to_string(),
             format!("{:.2e} / {:.2e}", p32, r.mean_abs_err),
@@ -308,45 +318,41 @@ pub fn run_table14(backend: &mut Backend) -> String {
     t.render()
 }
 
-pub fn run_table15(backend: &mut Backend) -> String {
+pub fn run_table15(runner: &dyn Runner) -> String {
     numeric_table(
-        backend,
+        runner,
         "Table 15: TF32 numeric profiling",
-        NumericCfg::new("tf32", "f32", 16, 8, 8),
+        ProbeDtype::Tf32,
+        AccDtype::F32,
         [0.0, 0.0, 0.0],
         Some([1.59e-4, 2.17e-4, 1.36e-4]),
     )
 }
 
-pub fn run_fig17(backend: &mut Backend) -> String {
-    const N: usize = 14;
-    const CHAIN_TRIALS: usize = 250; // x4 artifact batches ≈ paper's 1000
+pub fn run_fig17(runner: &dyn Runner) -> String {
+    const N: u32 = 14;
     let mut out = String::from("## Fig. 17: chain matrix multiplication relative error\n\n");
     let mut series: Vec<(String, Vec<f64>)> = Vec::new();
-    for (label, ab, cd, init_low) in [
-        ("TF32 (init TF32)", "tf32", "f32", true),
-        ("BF16 (init BF16)", "bf16", "f32", true),
-        ("FP16 (init FP16)", "fp16", "f16", true),
-        ("TF32 (init FP32)", "tf32", "f32", false),
-        ("BF16 (init FP32)", "bf16", "f32", false),
+    for (label, ab, cd, init) in [
+        ("TF32 (init TF32)", ProbeDtype::Tf32, AccDtype::F32, InitKind::LowPrecision),
+        ("BF16 (init BF16)", ProbeDtype::Bf16, AccDtype::F32, InitKind::LowPrecision),
+        ("FP16 (init FP16)", ProbeDtype::Fp16, AccDtype::F16, InitKind::LowPrecision),
+        ("TF32 (init FP32)", ProbeDtype::Tf32, AccDtype::F32, InitKind::Fp32),
+        ("BF16 (init FP32)", ProbeDtype::Bf16, AccDtype::F32, InitKind::Fp32),
     ] {
-        let cfg = NumericCfg::new(
-            match ab {
-                "tf32" => "tf32",
-                "bf16" => "bf16",
-                _ => "fp16",
-            },
-            if cd == "f16" { "f16" } else { "f32" },
-            16,
-            8,
-            8,
-        );
-        let mut exec = make_exec(backend, cfg);
-        let r = chain_errors(exec.as_mut(), N, CHAIN_TRIALS, init_low, 11);
+        // one plan-backed chain probe per series; the full per-step
+        // error series and the overflow step ride in the typed output
+        let probe = NumericProbe::chain(ab, cd, N, init);
+        let plan = Plan::new(Workload::Numeric(probe))
+            .point(1, 1)
+            .compile()
+            .expect("the Fig. 17 chain probes are valid workloads");
+        let res = plan.run(runner, 1).expect("numeric probe execution failed");
+        let r = res.chain().expect("chain point unit requested");
         if let Some(at) = r.overflow_at {
             out.push_str(&format!("{label}: overflow (inf) at N = {at} (paper: N >= 10 for FP16)\n"));
         }
-        series.push((label.to_string(), r.rel_err));
+        series.push((label.to_string(), r.rel_err.clone()));
     }
     out.push('\n');
     for (name, ys) in &series {

@@ -11,12 +11,13 @@ pub use pool::{default_threads, run_parallel};
 use anyhow::{bail, Result};
 
 use crate::runtime::ArtifactStore;
+use crate::workload::Runner;
 
 /// Requested numeric backend, parsed from a CLI flag or an HTTP query
-/// parameter. Unlike [`Backend`] this is `Copy` + `Send`, so per-request
-/// jobs can carry it into worker threads and instantiate the actual
-/// backend where it runs — the tcserved request path and the parallel
-/// campaign both rely on this.
+/// parameter. `Copy` + `Send`, so per-request jobs can carry it into
+/// worker threads and construct the actual [`Runner`] where it runs
+/// ([`crate::workload::runner_for`]) — the tcserved request path and
+/// the parallel campaign both rely on this.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
     Native,
@@ -43,16 +44,6 @@ impl BackendKind {
         }
     }
 
-    /// Open the backend this kind describes (`Pjrt` fails when the
-    /// artifacts — or the PJRT runtime itself — are unavailable).
-    pub fn instantiate(self) -> Result<Backend> {
-        match self {
-            BackendKind::Native => Ok(Backend::Native),
-            BackendKind::Pjrt => Ok(Backend::Pjrt(ArtifactStore::open_default()?)),
-            BackendKind::Auto => Ok(Backend::auto()),
-        }
-    }
-
     /// Resolve `Auto` to the concrete backend it would use *right now*
     /// (a cheap artifact-availability stat, not a full store open);
     /// `Native`/`Pjrt` pass through. tcserved keys its result cache on
@@ -73,38 +64,15 @@ impl BackendKind {
     }
 }
 
-/// Numeric-experiment backend: the native softfloat datapath or the
-/// PJRT-executed AOT artifacts (L1/L2). Both produce identical numbers —
-/// integration tests assert it — so the campaign defaults to whichever
-/// is available.
-pub enum Backend {
-    Native,
-    Pjrt(ArtifactStore),
-}
-
-impl Backend {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Backend::Native => "native",
-            Backend::Pjrt(_) => "pjrt",
-        }
-    }
-
-    /// Prefer PJRT artifacts when present, else native.
-    pub fn auto() -> Backend {
-        match ArtifactStore::open_default() {
-            Ok(store) => Backend::Pjrt(store),
-            Err(_) => Backend::Native,
-        }
-    }
-}
-
 /// A registered experiment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExperimentId {
     pub id: &'static str,
     pub description: &'static str,
-    /// Needs a numeric backend (vs pure-simulator experiments).
+    /// Exercises the backend-sensitive numeric datapath (descriptive
+    /// metadata for `repro list` and `/v1/experiments`; dispatch no
+    /// longer forks on it — every experiment runs through the same
+    /// [`Runner`]-based path).
     pub numeric: bool,
 }
 
@@ -131,8 +99,11 @@ pub const EXPERIMENTS: &[ExperimentId] = &[
     ExperimentId { id: "t17", description: "naive vs permuted layout (Appendix A.2)", numeric: false },
 ];
 
-/// Run one experiment by id, returning the rendered report.
-pub fn run_experiment(id: &str, backend: &mut Backend) -> Result<String> {
+/// Run one experiment by id, returning the rendered report. The runner
+/// is the backend seam: the §8 numeric experiments execute their probes
+/// on its numeric leg (native softfloat or PJRT artifacts); timing
+/// experiments are simulator-measured on every backend.
+pub fn run_experiment(id: &str, runner: &dyn Runner) -> Result<String> {
     let report = match id {
         "t3" => experiments::run_table3(),
         "t4" => experiments::run_table4(),
@@ -141,10 +112,10 @@ pub fn run_experiment(id: &str, backend: &mut Backend) -> Result<String> {
         "t7" => experiments::run_table7(),
         "t9" => experiments::run_table9(),
         "t10" => experiments::run_table10(),
-        "t12" => experiments::run_table12(backend),
-        "t13" => experiments::run_table13(backend),
-        "t14" => experiments::run_table14(backend),
-        "t15" => experiments::run_table15(backend),
+        "t12" => experiments::run_table12(runner),
+        "t13" => experiments::run_table13(runner),
+        "t14" => experiments::run_table14(runner),
+        "t15" => experiments::run_table15(runner),
         "t16" => experiments::run_table16(),
         "t17" => experiments::run_table17(),
         "fig6" => experiments::run_fig6(),
@@ -152,7 +123,7 @@ pub fn run_experiment(id: &str, backend: &mut Backend) -> Result<String> {
         "fig10" => experiments::run_fig10(),
         "fig11" => experiments::run_fig11(),
         "fig15" => experiments::run_fig15(),
-        "fig17" => experiments::run_fig17(backend),
+        "fig17" => experiments::run_fig17(runner),
         other => anyhow::bail!(
             "unknown experiment {other:?}; known: {}",
             EXPERIMENTS.iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
@@ -176,23 +147,21 @@ pub struct ExperimentRun {
 
 /// Run the whole campaign, in registry order.
 ///
-/// The pure-simulator experiments are independent `Send` jobs and are
-/// dispatched across the worker pool (each job runs against its own
-/// `Backend::Native`, which those experiments never touch); the numeric
-/// experiments then run serially on the caller's `backend`, since a PJRT
-/// artifact store is a single stateful compilation cache.
-pub fn run_all(backend: &mut Backend) -> Result<Vec<ExperimentRun>> {
-    use std::collections::HashMap;
+/// Every experiment — timing *and* numeric — is one independent job
+/// over the shared [`Runner`] (`Runner: Sync`, so the pool can fan the
+/// reference out; the PJRT runner serializes its numeric leg internally
+/// because the artifact store is a single stateful compilation cache).
+/// The old `numeric: bool` dispatch fork is gone.
+pub fn run_all(runner: &dyn Runner) -> Result<Vec<ExperimentRun>> {
     use std::time::Instant;
 
-    let sim: Vec<&'static ExperimentId> = EXPERIMENTS.iter().filter(|e| !e.numeric).collect();
-    let jobs: Vec<_> = sim
+    let jobs: Vec<_> = EXPERIMENTS
         .iter()
         .map(|e| {
             let id = e.id;
             move || {
                 let t0 = Instant::now();
-                let report = run_experiment(id, &mut Backend::Native);
+                let report = run_experiment(id, runner);
                 (id, report, t0.elapsed().as_secs_f64() * 1e3)
             }
         })
@@ -202,27 +171,17 @@ pub fn run_all(backend: &mut Backend) -> Result<Vec<ExperimentRun>> {
     // internally, and two uncapped levels would oversubscribe the CPU
     // quadratically (outer x inner threads).
     let outer_threads = default_threads().min(4);
-    let mut done: HashMap<&'static str, ExperimentRun> = HashMap::new();
+    let mut runs = Vec::with_capacity(EXPERIMENTS.len());
     for (id, report, wall_ms) in run_parallel(jobs, outer_threads) {
-        done.insert(id, ExperimentRun { id, report: report?, wall_ms });
+        runs.push(ExperimentRun { id, report: report?, wall_ms });
     }
-    for e in EXPERIMENTS.iter().filter(|e| e.numeric) {
-        let t0 = Instant::now();
-        let report = run_experiment(e.id, backend)?;
-        done.insert(
-            e.id,
-            ExperimentRun { id: e.id, report, wall_ms: t0.elapsed().as_secs_f64() * 1e3 },
-        );
-    }
-    Ok(EXPERIMENTS
-        .iter()
-        .map(|e| done.remove(e.id).expect("every registered experiment ran"))
-        .collect())
+    Ok(runs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::SimRunner;
 
     #[test]
     fn registry_covers_all_paper_artifacts() {
@@ -238,8 +197,7 @@ mod tests {
 
     #[test]
     fn unknown_experiment_errors() {
-        let mut b = Backend::Native;
-        assert!(run_experiment("t99", &mut b).is_err());
+        assert!(run_experiment("t99", &SimRunner).is_err());
     }
 
     #[test]
@@ -250,27 +208,23 @@ mod tests {
     }
 
     #[test]
-    fn backend_kind_parses_and_instantiates() {
+    fn backend_kind_parses_and_resolves() {
         assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
         assert_eq!(BackendKind::parse("auto").unwrap().name(), "auto");
         assert!(BackendKind::parse("cuda").is_err());
-        assert_eq!(BackendKind::Native.instantiate().unwrap().name(), "native");
-        // auto never fails: it falls back to native when PJRT artifacts
-        // (or the PJRT runtime itself) are unavailable
-        let auto = BackendKind::Auto.instantiate().unwrap();
-        assert!(matches!(auto.name(), "native" | "pjrt"));
-        // resolve() pins auto to the backend that would actually run
+        // resolve() pins auto to the backend that would actually run;
+        // runner_for(auto) therefore never fails (native fallback)
         let resolved = BackendKind::Auto.resolve();
         assert_ne!(resolved, BackendKind::Auto);
-        assert_eq!(resolved.name(), auto.name());
+        let runner = crate::workload::runner_for(BackendKind::Auto).unwrap();
+        assert!(matches!(runner.name(), "sim" | "pjrt"));
         assert_eq!(BackendKind::Native.resolve(), BackendKind::Native);
         assert_eq!(BackendKind::Pjrt.resolve(), BackendKind::Pjrt);
     }
 
     #[test]
     fn run_all_parallel_preserves_registry_order() {
-        let mut b = Backend::Native;
-        let runs = run_all(&mut b).unwrap();
+        let runs = run_all(&SimRunner).unwrap();
         assert_eq!(runs.len(), EXPERIMENTS.len());
         for (r, e) in runs.iter().zip(EXPERIMENTS) {
             assert_eq!(r.id, e.id);
@@ -281,16 +235,14 @@ mod tests {
 
     #[test]
     fn table5_runs_quickly_and_mentions_turing_rows() {
-        let mut b = Backend::Native;
-        let r = run_experiment("t5", &mut b).unwrap();
+        let r = run_experiment("t5", &SimRunner).unwrap();
         assert!(r.contains("m16n8k8"));
         assert!(r.contains("INT8"));
     }
 
     #[test]
     fn table10_deviations_small() {
-        let mut b = Backend::Native;
-        let r = run_experiment("t10", &mut b).unwrap();
+        let r = run_experiment("t10", &SimRunner).unwrap();
         // every deviation row within a few percent
         for line in r.lines().skip(2) {
             if let Some(dev) = line.split('|').next_back() {
@@ -303,9 +255,8 @@ mod tests {
     }
 
     #[test]
-    fn numeric_table_on_native_backend() {
-        let mut b = Backend::Native;
-        let r = run_experiment("t13", &mut b).unwrap();
+    fn numeric_table_on_the_sim_runner() {
+        let r = run_experiment("t13", &SimRunner).unwrap();
         assert!(r.contains("multiplication"));
         assert!(r.contains("0.00e0"), "init_fp16 rows must be exactly zero:\n{r}");
     }

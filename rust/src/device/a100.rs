@@ -104,6 +104,7 @@ pub fn a100() -> Device {
             int8: 2048,
             int4: 4096,
             binary: 16384,
+            fp8: 0, // no FP8 before Hopper (Table 11)
         },
         mma_timings,
         paper_dense_rows,

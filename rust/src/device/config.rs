@@ -74,6 +74,9 @@ pub struct PeakTable {
     pub int8: u64,
     pub int4: u64,
     pub binary: u64,
+    /// FP8 (E4M3/E5M2) — Table 11's Hopper addition; `0` everywhere the
+    /// paper measured. Gates the fp8 numeric probes.
+    pub fp8: u64,
 }
 
 impl PeakTable {
@@ -163,6 +166,12 @@ impl Device {
     /// x 4 B = 128 B/clk — "also the bandwidth bound of ldmatrix").
     pub fn smem_peak_bytes_per_clk(&self) -> u32 {
         self.smem_banks * self.smem_bank_bytes
+    }
+
+    /// Does this device have FP8 Tensor Cores (Table 11: Hopper only)?
+    /// The fp8 numeric probes validate against this.
+    pub fn supports_fp8(&self) -> bool {
+        self.peaks.fp8 > 0
     }
 
     /// The ideal initiation interval for an instruction from the vendor

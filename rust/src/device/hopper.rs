@@ -8,9 +8,12 @@
 //! accounting), latencies carry over from Ampere (the paper observed
 //! completion latency did not improve Turing -> Ampere).
 //!
-//! It is *not* part of the paper's evaluation: `device::registry()`
-//! returns only the three measured GPUs; this one is opt-in via
-//! [`hopper_projected`].
+//! It is *not* part of the paper's evaluation, but it is registered in
+//! `device::registry()` (as `hopper-projected`) so `/v1/devices`,
+//! `repro sweep --device hopper-projected` and `Workload::validate` can
+//! target it — notably for the fp8 numeric probes, which only this
+//! device's FP8 Tensor Cores admit. INT4/Binary workloads are rejected
+//! here (dropped on Hopper, Table 1).
 
 use crate::isa::shapes::*;
 use crate::isa::{AbType, CdType, MmaInstr};
@@ -76,6 +79,7 @@ pub fn hopper_projected() -> Device {
             int8: 4096,
             int4: 0,   // dropped on Hopper (Table 1)
             binary: 0, // dropped on Hopper
+            fp8: 4096, // new on Hopper (Table 11): 2x the FP16 rate
         },
         mma_timings,
         paper_dense_rows,
@@ -115,7 +119,19 @@ mod tests {
     }
 
     #[test]
-    fn not_in_paper_registry() {
-        assert!(crate::device::by_name("hopper-projected").is_none());
+    fn registered_with_fp8_but_without_int4() {
+        // the satellite registry contract: addressable by name, fp8
+        // allowed, INT4/Binary rejected (dropped on Hopper, Table 1)
+        let h = crate::device::by_name("hopper-projected").expect("registered");
+        assert!(h.supports_fp8());
+        assert!(!crate::device::a100().supports_fp8());
+        let int4 = MmaInstr::dense(AbType::Int4, CdType::Int32, M16N8K32);
+        assert!(!h.supports(&int4), "INT4 must be rejected on Hopper");
+        let binary = MmaInstr::dense(AbType::Binary, CdType::Int32, M16N8K128);
+        assert!(!h.supports(&binary), "Binary must be rejected on Hopper");
+        // fp8 numeric probes validate here and nowhere else
+        let probe = crate::workload::Workload::parse_spec("numeric profile fp8e5m2 f32 mul").unwrap();
+        assert!(probe.validate(&h).is_ok());
+        assert!(probe.validate(&crate::device::a100()).is_err());
     }
 }

@@ -30,9 +30,11 @@ pub use rtx3070ti::rtx3070ti;
 
 use crate::isa::MmaInstr;
 
-/// All calibrated devices, by CLI name.
+/// All addressable devices, by CLI name: the paper's three measured
+/// GPUs plus the projected Hopper target (fp8-capable, INT4/Binary
+/// dropped — see [`hopper_projected`]).
 pub fn registry() -> Vec<Device> {
-    vec![a100(), rtx3070ti(), rtx2080ti()]
+    vec![a100(), rtx3070ti(), rtx2080ti(), hopper_projected()]
 }
 
 /// Look up a device by (case-insensitive) name.
@@ -56,15 +58,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_all_paper_devices() {
+    fn registry_has_all_paper_devices_plus_hopper() {
         let names: Vec<_> = registry().into_iter().map(|d| d.name).collect();
-        assert_eq!(names, vec!["a100", "rtx3070ti", "rtx2080ti"]);
+        assert_eq!(names, vec!["a100", "rtx3070ti", "rtx2080ti", "hopper-projected"]);
+        // fp8 capability is exactly the Hopper column of Table 11
+        for d in registry() {
+            assert_eq!(d.supports_fp8(), d.name == "hopper-projected", "{}", d.name);
+        }
     }
 
     #[test]
     fn lookup_is_case_insensitive() {
         assert!(by_name("A100").is_some());
         assert!(by_name("RTX3070Ti").is_some());
+        assert!(by_name("Hopper-Projected").is_some());
         assert!(by_name("h100").is_none());
     }
 

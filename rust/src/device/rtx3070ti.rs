@@ -91,6 +91,7 @@ pub fn rtx3070ti() -> Device {
             int8: 1024,
             int4: 2048,
             binary: 8192,
+            fp8: 0, // no FP8 before Hopper (Table 11)
         },
         mma_timings,
         paper_dense_rows,

@@ -18,13 +18,13 @@ use std::io::Write as _;
 use anyhow::{anyhow, bail, Result};
 
 use tcbench::coordinator::{
-    default_threads, run_all, run_experiment, Backend, BackendKind, EXPERIMENTS,
+    default_threads, run_all, run_experiment, BackendKind, EXPERIMENTS,
 };
 use tcbench::device;
 use tcbench::report;
 use tcbench::server::{serve_blocking, ServerConfig};
 use tcbench::util::Json;
-use tcbench::workload::{Plan, SimRunner, Workload};
+use tcbench::workload::{runner_for, Plan, Runner, SimRunner, Workload};
 
 fn usage() -> &'static str {
     "repro — Dissecting Tensor Cores, reproduction CLI\n\
@@ -47,6 +47,13 @@ fn usage() -> &'static str {
                                     e.g. \"gemm pipeline bf16 f32 2048 128x128x32\"\n\
                                     (variant: baseline|pipeline|permuted; the sweep\n\
                                     axes are CTA warps x cp.async stages)\n\
+       numeric profile <ab> <cd> <op> [init]\n\
+                                    e.g. \"numeric profile bf16 f32 acc fp32\"\n\
+       numeric chain <ab> <cd> <len> [init]\n\
+                                    e.g. \"numeric chain tf32 f32 14\"\n\
+                                    (§8 probes; ab: bf16|fp16|tf32|fp8e4m3|fp8e5m2,\n\
+                                    op: mul|inner|acc, init: low|fp32; the sweep\n\
+                                    axes are chain step x init kind)\n\
        (legacy \"<ab> <cd> <shape> [sparse]\" mma specs still work)\n\
      \n\
      EXAMPLES:\n\
@@ -55,6 +62,7 @@ fn usage() -> &'static str {
        repro sweep --device a100 --instr \"bf16 f32 m16n8k16\"\n\
        repro sweep --device a100 --instr \"ldmatrix x4\"\n\
        repro sweep --device a100 --instr \"gemm pipeline bf16 f32 512 128x128x32\"\n\
+       repro sweep --device a100 --instr \"numeric chain tf32 f32 14\"\n\
        repro serve --addr 127.0.0.1:8321 --warm\n\
      \n\
      SERVE ENDPOINTS:\n\
@@ -99,8 +107,19 @@ impl Args {
     }
 }
 
-fn make_backend(kind: &str) -> Result<Backend> {
-    BackendKind::parse(kind)?.instantiate()
+/// Parse the `--backend` flag into a [`Runner`] — the backend seam of
+/// the workload layer (the §8 numeric probes run on its numeric leg;
+/// timing stays on the simulator everywhere). `auto` never fails: it
+/// falls back to the simulator backend when the PJRT artifacts are
+/// absent or unopenable. The returned kind is the backend that will
+/// *actually* run, derived from the constructed runner.
+fn make_runner(kind: &str) -> Result<(BackendKind, Box<dyn Runner>)> {
+    let runner = runner_for(BackendKind::parse(kind)?).map_err(|e| anyhow!(e))?;
+    let effective = match runner.name() {
+        "pjrt" => BackendKind::Pjrt,
+        _ => BackendKind::Native,
+    };
+    Ok((effective, runner))
 }
 
 fn emit(out_dir: Option<&str>, id: &str, report: &str) -> Result<()> {
@@ -153,21 +172,21 @@ fn main() -> Result<()> {
             if ids.is_empty() {
                 bail!("`repro run` needs experiment ids; see `repro list`");
             }
-            let mut backend = make_backend(args.flag("backend").unwrap_or("auto"))?;
-            eprintln!("[repro] numeric backend: {}", backend.name());
+            let (kind, runner) = make_runner(args.flag("backend").unwrap_or("auto"))?;
+            eprintln!("[repro] numeric backend: {}", kind.name());
             for id in ids {
                 let t0 = std::time::Instant::now();
-                let report = run_experiment(id, &mut backend)?;
+                let report = run_experiment(id, runner.as_ref())?;
                 emit(args.flag("out"), id, &report)?;
                 eprintln!("[repro] {id} done in {:.2?}", t0.elapsed());
             }
         }
         "all" => {
-            let mut backend = make_backend(args.flag("backend").unwrap_or("auto"))?;
-            eprintln!("[repro] numeric backend: {}", backend.name());
+            let (kind, runner) = make_runner(args.flag("backend").unwrap_or("auto"))?;
+            eprintln!("[repro] numeric backend: {}", kind.name());
             let t0 = std::time::Instant::now();
-            // simulator experiments fan out over the worker pool
-            let runs = run_all(&mut backend)?;
+            // every experiment fans out over the worker pool
+            let runs = run_all(runner.as_ref())?;
             let mut entries = Vec::new();
             for r in &runs {
                 emit(args.flag("out"), r.id, &r.report)?;
@@ -220,12 +239,45 @@ fn main() -> Result<()> {
                     ("wall_ms", Json::num(result.wall_ms)),
                 ]));
             }
+            // Numeric workload rows: canonical §8 probes run as
+            // first-class plans through the campaign's runner (these
+            // ARE backend-sensitive — the runner's numeric leg does the
+            // arithmetic), so the PR-3 CI gate watches the numeric path
+            // next to the timing plans
+            let numeric_plans = [
+                ("numeric_profile_bf16", "numeric profile bf16 f32 acc fp32"),
+                ("numeric_profile_fp16", "numeric profile fp16 f16 acc low"),
+                ("numeric_chain_tf32", "numeric chain tf32 f32 14 low"),
+            ];
+            let mut numeric_rows = Vec::new();
+            for (id, spec) in numeric_plans {
+                let workload = Workload::parse_spec(spec).map_err(|e| anyhow!(e))?;
+                let plan = Plan::new(workload)
+                    .device("a100")
+                    .point(1, 1)
+                    .compile()
+                    .map_err(|e| anyhow!(e))?;
+                let result = plan.run(runner.as_ref(), 1).map_err(|e| anyhow!(e))?;
+                emit(args.flag("out"), id, &report::render_bench(&result))?;
+                eprintln!("[repro] {id} done in {:.1} ms", result.wall_ms);
+                if let Some(dir) = args.flag("out") {
+                    let path = format!("{dir}/{id}.json");
+                    std::fs::write(&path, report::bench_to_json(&result).pretty())?;
+                    eprintln!("[repro] wrote {path}");
+                }
+                numeric_rows.push(Json::obj(vec![
+                    ("id", Json::str(id)),
+                    ("workload", Json::str(spec)),
+                    ("backend", Json::str(result.runner)),
+                    ("wall_ms", Json::num(result.wall_ms)),
+                ]));
+            }
             let total_ms = t0.elapsed().as_secs_f64() * 1e3;
             eprintln!("[repro] campaign finished in {total_ms:.1} ms");
             if let Some(dir) = args.flag("out") {
                 let summary = Json::obj(vec![
                     ("version", Json::str(env!("CARGO_PKG_VERSION"))),
-                    ("backend", Json::str(backend.name())),
+                    ("backend", Json::str(kind.name())),
                     ("total_wall_ms", Json::num(total_ms)),
                     ("experiments", Json::Arr(entries)),
                 ]);
@@ -241,7 +293,7 @@ fn main() -> Result<()> {
                 let bench = Json::obj(vec![
                     ("schema", Json::str("tcbench/bench_summary/v1")),
                     ("version", Json::str(env!("CARGO_PKG_VERSION"))),
-                    ("backend", Json::str(backend.name())),
+                    ("backend", Json::str(kind.name())),
                     ("threads", Json::num(default_threads() as f64)),
                     ("total_wall_ms", Json::num(total_ms)),
                     (
@@ -255,6 +307,7 @@ fn main() -> Result<()> {
                                     ])
                                 })
                                 .chain(gemm_rows)
+                                .chain(numeric_rows)
                                 .collect(),
                         ),
                     ),
@@ -289,12 +342,13 @@ fn main() -> Result<()> {
                 .flag("instr")
                 .ok_or_else(|| anyhow!("--instr required (a workload spec; see `repro help`)"))?;
             let workload = Workload::parse_spec(spec).map_err(|e| anyhow!(e))?;
-            let plan = Plan::new(workload)
-                .device(dev_name)
-                .completion_latency()
-                .sweep()
-                .compile()
-                .map_err(|e| anyhow!(e))?;
+            let mut plan = Plan::new(workload).device(dev_name).sweep();
+            // numeric probes have no completion/issue latency; every
+            // other workload gets the §4 step-1 probe alongside
+            if !matches!(workload, Workload::Numeric(_)) {
+                plan = plan.completion_latency();
+            }
+            let plan = plan.compile().map_err(|e| anyhow!(e))?;
             let result = plan
                 .run(&SimRunner, default_threads().min(4))
                 .map_err(|e| anyhow!(e))?;

@@ -17,7 +17,7 @@ use super::tcmma::{cpu_f32_baseline, MmaExec};
 use super::rounding::{quantize, quantize_fp16};
 
 /// Which of the three Fig. 16 operations to isolate.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ProfileOp {
     Multiplication,
     InnerProduct,
@@ -33,18 +33,56 @@ impl ProfileOp {
         }
     }
 
+    /// Canonical workload-spec token (`numeric profile <ab> <cd> <op>`).
+    pub fn spec_name(self) -> &'static str {
+        match self {
+            ProfileOp::Multiplication => "mul",
+            ProfileOp::InnerProduct => "inner",
+            ProfileOp::Accumulation => "acc",
+        }
+    }
+
+    /// Parse a spec token (canonical names plus the paper's long forms).
+    pub fn parse_spec(s: &str) -> Result<ProfileOp, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "mul" | "multiplication" => Ok(ProfileOp::Multiplication),
+            "inner" | "inner-product" | "innerproduct" | "add" => Ok(ProfileOp::InnerProduct),
+            "acc" | "accumulation" => Ok(ProfileOp::Accumulation),
+            other => Err(format!("unknown profile op {other:?} (mul|inner|acc)")),
+        }
+    }
+
     pub const ALL: [ProfileOp; 3] =
         [ProfileOp::Multiplication, ProfileOp::InnerProduct, ProfileOp::Accumulation];
 }
 
 /// Initialization strategy (§8.1: low-precision init eliminates the
 /// conversion loss; FP32 init exposes it).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum InitKind {
     /// Pre-round A/B (and a FP16 C when C/D is FP16) to the operand type.
     LowPrecision,
     /// Full FP32 initialization.
     Fp32,
+}
+
+impl InitKind {
+    /// Canonical workload-spec token (`low` | `fp32`).
+    pub fn spec_name(self) -> &'static str {
+        match self {
+            InitKind::LowPrecision => "low",
+            InitKind::Fp32 => "fp32",
+        }
+    }
+
+    /// Parse a spec token.
+    pub fn parse_spec(s: &str) -> Result<InitKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "low" | "init_low" | "lowprecision" => Ok(InitKind::LowPrecision),
+            "fp32" | "init_fp32" | "f32" => Ok(InitKind::Fp32),
+            other => Err(format!("unknown init strategy {other:?} (low|fp32)")),
+        }
+    }
 }
 
 /// Result of one profiling experiment.

@@ -339,6 +339,67 @@ mod tests {
     }
 
     #[test]
+    fn fp8_nan_and_inf_propagation() {
+        // NaN propagates through both formats (E4M3 reserves a NaN
+        // encoding even without infinities)
+        assert!(quantize_fp8_e4m3(f32::NAN).is_nan());
+        assert!(quantize_fp8_e5m2(f32::NAN).is_nan());
+        assert!(quantize_fp8_e4m3(-f32::NAN).is_nan());
+        // infinite inputs: E5M2 keeps them (IEEE-style), E4M3 has no
+        // infinity — it saturates to the format maximum
+        assert_eq!(quantize_fp8_e5m2(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize_fp8_e5m2(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert_eq!(quantize_fp8_e4m3(f32::INFINITY), 448.0);
+        assert_eq!(quantize_fp8_e4m3(f32::NEG_INFINITY), -448.0);
+    }
+
+    #[test]
+    fn fp8_overflow_saturation_vs_infinity() {
+        // E4M3 (OCP/NVIDIA convention): saturating at ±448 — values just
+        // past the max clamp instead of rounding away
+        assert_eq!(quantize_fp8_e4m3(448.0), 448.0);
+        assert_eq!(quantize_fp8_e4m3(449.0), 448.0);
+        assert_eq!(quantize_fp8_e4m3(-1e30), -448.0);
+        assert!(quantize_fp8_e4m3(1e30).is_finite());
+        // E5M2: max normal 57344 = 1.75 * 2^15, ulp 2^13 at that binade.
+        assert_eq!(quantize_fp8_e5m2(57344.0), 57344.0);
+        // below the rounding midpoint -> stays at max
+        assert_eq!(quantize_fp8_e5m2(57344.0 + 4095.0), 57344.0);
+        // the exact midpoint ties to even (2.0 * 2^15 > max) -> inf
+        assert!(quantize_fp8_e5m2(61440.0).is_infinite());
+        assert!(quantize_fp8_e5m2(-61440.0).is_infinite());
+        assert!(quantize_fp8_e5m2(1e30).is_infinite());
+        // sign is preserved through overflow
+        assert_eq!(quantize_fp8_e5m2(-1e30), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn fp8_subnormal_rounding() {
+        // E4M3: min normal 2^-6, subnormal ulp 2^(1-7-3) = 2^-9
+        let ulp4 = 2f32.powi(-9);
+        assert_eq!(quantize_fp8_e4m3(ulp4), ulp4); // min subnormal survives
+        assert_eq!(quantize_fp8_e4m3(0.6 * ulp4), ulp4); // rounds up
+        assert_eq!(quantize_fp8_e4m3(0.4 * ulp4), 0.0); // rounds to zero
+        assert_eq!(quantize_fp8_e4m3(0.5 * ulp4), 0.0); // tie -> even (0)
+        assert_eq!(quantize_fp8_e4m3(1.5 * ulp4), 2.0 * ulp4); // tie -> even (2 ulp)
+        assert_eq!(quantize_fp8_e4m3(-0.6 * ulp4), -ulp4); // sign preserved
+        // E5M2: min normal 2^-14, subnormal ulp 2^(1-15-2) = 2^-16
+        let ulp5 = 2f32.powi(-16);
+        assert_eq!(quantize_fp8_e5m2(ulp5), ulp5);
+        assert_eq!(quantize_fp8_e5m2(0.5 * ulp5), 0.0); // tie -> even
+        assert_eq!(quantize_fp8_e5m2(2.5 * ulp5), 2.0 * ulp5); // tie -> even
+        assert_eq!(quantize_fp8_e5m2(3.5 * ulp5), 4.0 * ulp5); // tie -> even
+        // subnormals are idempotent fixed points
+        for v in [ulp4, 3.0 * ulp4, ulp5, 3.0 * ulp5] {
+            assert_eq!(quantize_fp8_e4m3(quantize_fp8_e4m3(v)), quantize_fp8_e4m3(v));
+            assert_eq!(quantize_fp8_e5m2(quantize_fp8_e5m2(v)), quantize_fp8_e5m2(v));
+        }
+        // zero passes through with its sign
+        assert_eq!(quantize_fp8_e4m3(0.0), 0.0);
+        assert_eq!(quantize_fp8_e5m2(-0.0), -0.0);
+    }
+
+    #[test]
     #[should_panic(expected = "unknown operand dtype")]
     fn quantize_unknown_panics() {
         quantize(1.0, "fp8");

@@ -11,7 +11,7 @@
 
 use crate::microbench::{ConvergencePoint, Sweep};
 use crate::util::Json;
-use crate::workload::{BenchResult, UnitOutput};
+use crate::workload::{BenchResult, NumericOutput, UnitOutput};
 
 /// Is this line a table separator (`----+-----+----`)?
 fn is_separator(line: &str) -> bool {
@@ -150,12 +150,14 @@ pub fn deviation_stats(text: &str) -> Option<DeviationStats> {
 
 /// One measured (warps, ILP, latency, throughput) record — the shared
 /// field layout of sweep cells, convergence summaries and plan points.
+/// Non-finite metrics (an overflowed chain probe's error cells) are
+/// encoded as strings to keep the JSON parseable.
 fn point_json(warps: u32, ilp: u32, latency: f64, throughput: f64) -> Json {
     Json::obj(vec![
         ("warps", Json::num(warps as f64)),
         ("ilp", Json::num(ilp as f64)),
-        ("latency", Json::num(latency)),
-        ("throughput", Json::num(throughput)),
+        ("latency", finite_num(latency)),
+        ("throughput", finite_num(throughput)),
     ])
 }
 
@@ -194,6 +196,16 @@ pub fn sweep_to_json(sweep: &Sweep, convergence: &[ConvergencePoint]) -> Json {
     ])
 }
 
+/// A JSON number that stays parseable on non-finite values (bare `inf`
+/// / `NaN` are not valid JSON; chain errors overflow by design).
+fn finite_num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(format!("{v}"))
+    }
+}
+
 /// Machine-readable rendering of one executed plan unit.
 pub fn unit_output_to_json(output: &UnitOutput) -> Json {
     match output {
@@ -218,6 +230,31 @@ pub fn unit_output_to_json(output: &UnitOutput) -> Json {
             fields.insert("unit".to_string(), Json::str("sweep"));
             Json::Obj(fields)
         }
+        UnitOutput::Numeric(NumericOutput::Profile(p)) => Json::obj(vec![
+            ("unit", Json::str("numeric")),
+            ("probe", Json::str("profile")),
+            ("op", Json::str(p.op.spec_name())),
+            ("init", Json::str(p.init.spec_name())),
+            ("trials", Json::num(p.trials as f64)),
+            ("mean_abs_err", finite_num(p.mean_abs_err)),
+            ("mean_abs_err_vs_cvt_fp16", finite_num(p.mean_abs_err_vs_cvt_fp16)),
+        ]),
+        UnitOutput::Numeric(NumericOutput::Chain(c)) => Json::obj(vec![
+            ("unit", Json::str("numeric")),
+            ("probe", Json::str("chain")),
+            ("steps", Json::num(c.rel_err.len() as f64)),
+            (
+                "rel_err",
+                Json::Arr(c.rel_err.iter().map(|&e| finite_num(e)).collect()),
+            ),
+            (
+                "overflow_at",
+                match c.overflow_at {
+                    Some(n) => Json::num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+        ]),
     }
 }
 
@@ -354,14 +391,42 @@ mod tests {
     #[test]
     fn real_experiment_reports_structure() {
         // a sim experiment with a dev column and a figure with csv
-        let mut b = crate::coordinator::Backend::Native;
-        let t10 = crate::coordinator::run_experiment("t10", &mut b).unwrap();
+        let runner = crate::workload::SimRunner;
+        let t10 = crate::coordinator::run_experiment("t10", &runner).unwrap();
         let j = report_to_json("t10", "ld.shared bank-conflict latency", &t10);
         assert!(!j.get("tables").unwrap().as_arr().unwrap().is_empty());
         assert!(j.get("deviation").unwrap().get_f64("mean_abs_pct").is_some());
 
-        let fig7 = crate::coordinator::run_experiment("fig7", &mut b).unwrap();
+        let fig7 = crate::coordinator::run_experiment("fig7", &runner).unwrap();
         let j = report_to_json("fig7", "mma.m16n8k8 sweep on A100", &fig7);
         assert!(!j.get("figures").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn numeric_unit_outputs_serialize_to_valid_json() {
+        use crate::workload::{Plan, SimRunner, Workload};
+        // a chain that overflows produces non-finite errors; the JSON
+        // encoding must stay parseable (strings, not bare inf/NaN)
+        let w = Workload::parse_spec("numeric chain fp16 f16 14").unwrap();
+        let r = Plan::new(w).point(1, 1).compile().unwrap().run(&SimRunner, 1).unwrap();
+        let j = bench_to_json(&r);
+        assert_eq!(j.get_str("kind"), Some("numeric"));
+        assert_eq!(j.get_str("throughput_unit"), Some("l2 rel err"));
+        let unit = &j.get("units").unwrap().as_arr().unwrap()[0];
+        assert_eq!(unit.get_str("unit"), Some("numeric"));
+        assert_eq!(unit.get_str("probe"), Some("chain"));
+        assert!(unit.get_f64("overflow_at").is_some(), "FP16 chain overflows: {unit}");
+        let reparsed = Json::parse(&j.to_string()).expect("valid JSON despite inf");
+        assert_eq!(reparsed.get_str("kind"), Some("numeric"));
+
+        let w = Workload::parse_spec("numeric profile bf16 f32 acc fp32").unwrap();
+        let r = Plan::new(w).point(1, 1).compile().unwrap().run(&SimRunner, 1).unwrap();
+        let j = bench_to_json(&r);
+        let unit = &j.get("units").unwrap().as_arr().unwrap()[0];
+        assert_eq!(unit.get_str("probe"), Some("profile"));
+        assert_eq!(unit.get_str("op"), Some("acc"));
+        assert_eq!(unit.get_str("init"), Some("fp32"));
+        assert!(unit.get_f64("mean_abs_err").unwrap() > 0.0);
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 }

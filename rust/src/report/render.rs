@@ -3,7 +3,7 @@
 //! ([`render_sweep_figure`]) and plan results ([`render_bench`]).
 
 use crate::microbench::Sweep;
-use crate::workload::{BenchResult, UnitOutput};
+use crate::workload::{BenchResult, NumericOutput, UnitOutput};
 
 /// A simple column-aligned ASCII table.
 #[derive(Debug, Clone, Default)]
@@ -149,6 +149,7 @@ pub fn render_bench(r: &BenchResult) -> String {
     let thr_hdr = format!("thr ({})", r.throughput_unit);
     let mut t = Table::new("", &["unit", "warps", "ILP", "latency (cy)", thr_hdr.as_str()]);
     let mut rows = 0usize;
+    let mut numeric_lines = String::new();
     for (_, output) in &r.units {
         match output {
             UnitOutput::Completion(latency) => {
@@ -183,10 +184,41 @@ pub fn render_bench(r: &BenchResult) -> String {
                     rows += 1;
                 }
             }
+            UnitOutput::Numeric(NumericOutput::Profile(p)) => {
+                numeric_lines.push_str(&format!(
+                    "numeric profile: {} / init_{}: mean |err| = {:.2e} \
+                     (vs CPU_FP32cvtFP16: {:.2e}, {} trials)\n",
+                    p.op.paper_name(),
+                    p.init.spec_name(),
+                    p.mean_abs_err,
+                    p.mean_abs_err_vs_cvt_fp16,
+                    p.trials
+                ));
+            }
+            UnitOutput::Numeric(NumericOutput::Chain(c)) => {
+                numeric_lines.push_str(&format!(
+                    "numeric chain (N = {}): {}  err(1) = {:.1e}",
+                    c.rel_err.len(),
+                    render_sparkline(&c.rel_err),
+                    c.rel_err.first().copied().unwrap_or(f64::NAN),
+                ));
+                match c.overflow_at {
+                    Some(at) => numeric_lines
+                        .push_str(&format!("  — overflow (inf) at N = {at}\n")),
+                    None => numeric_lines.push_str(&format!(
+                        "  err(end) = {:.1e}\n",
+                        c.rel_err.last().copied().unwrap_or(f64::NAN)
+                    )),
+                }
+            }
         }
     }
     if rows > 0 {
         out.push_str(&t.render());
+        out.push('\n');
+    }
+    if !numeric_lines.is_empty() {
+        out.push_str(&numeric_lines);
         out.push('\n');
     }
     for (_, output) in &r.units {

@@ -11,8 +11,9 @@
 //! offline build environment, so the real implementation is gated behind
 //! the `pjrt` cargo feature. Without it [`ArtifactStore::open`] returns
 //! an error and every caller falls back to the native softfloat backend
-//! — `Backend::auto()` picks native, and the PJRT integration tests
-//! skip themselves with a note, exactly as when artifacts are missing.
+//! — `runner_for(BackendKind::Auto)` resolves to the simulator runner,
+//! and the PJRT integration tests skip themselves with a note, exactly
+//! as when artifacts are missing.
 
 #[cfg(feature = "pjrt")]
 mod artifact;

@@ -133,6 +133,7 @@ fn devices() -> Response {
                 ("tensor_cores_per_sm", Json::num(d.arch.tensor_cores_per_sm() as f64)),
                 ("supports_sparse", Json::Bool(d.arch.supports_sparse())),
                 ("supports_ldmatrix", Json::Bool(d.arch.supports_ldmatrix())),
+                ("supports_fp8", Json::Bool(d.supports_fp8())),
             ])
         })
         .collect();
@@ -215,9 +216,12 @@ fn compute_experiment(
 ) -> Result<String, String> {
     let t0 = Instant::now();
     let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<(String, String), String> {
-        let mut backend = kind.instantiate().map_err(|e| format!("{e:#}"))?;
-        let backend_name = backend.name().to_string();
-        let text = coordinator::run_experiment(exp.id, &mut backend).map_err(|e| format!("{e:#}"))?;
+        // `kind` is already resolved; the runner is the backend seam for
+        // the §8 numeric probes (native softfloat vs PJRT artifacts)
+        let runner = workload::runner_for(kind)?;
+        let backend_name = kind.name().to_string();
+        let text = coordinator::run_experiment(exp.id, runner.as_ref())
+            .map_err(|e| format!("{e:#}"))?;
         Ok((backend_name, text))
     }));
     let (backend_name, text) = match outcome {
@@ -518,7 +522,14 @@ mod tests {
 
         let r = get(&s, "/v1/devices");
         let j = Json::parse(&r.body).unwrap();
-        assert_eq!(j.get("devices").unwrap().as_arr().unwrap().len(), 3);
+        let devices = j.get("devices").unwrap().as_arr().unwrap();
+        assert_eq!(devices.len(), 4);
+        // the projected Hopper target is addressable and fp8-capable
+        let hopper = devices
+            .iter()
+            .find(|d| d.get_str("name") == Some("hopper-projected"))
+            .expect("hopper-projected registered");
+        assert_eq!(hopper.get("supports_fp8").and_then(Json::as_bool), Some(true));
     }
 
     #[test]
@@ -682,6 +693,48 @@ mod tests {
             "/v1/sweep?device=a100&instr=gemm,pipeline,bf16,f32,256,128x128x32&sparse=true",
         );
         assert_eq!(r.status, 400, "{}", r.body);
+    }
+
+    #[test]
+    fn numeric_specs_flow_through_plan_and_sweep_routes() {
+        let s = state();
+        // a profile probe as a (1,1) point unit
+        let body = r#"{"workload":"numeric profile fp16 f32 mul low","points":[[1,1]],
+                       "backend":"native"}"#;
+        let r = post(&s, "/v1/plan", body);
+        assert_eq!(r.status, 200, "{}", r.body);
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get_str("workload"), Some("numeric profile fp16 f32 mul low"));
+        let units = j.get("units").unwrap().as_arr().unwrap();
+        let result = units[0].get("result").unwrap();
+        assert_eq!(result.get_str("unit"), Some("numeric"));
+        assert_eq!(result.get_str("probe"), Some("profile"));
+        // Table 13: zero error under low-precision init
+        assert_eq!(result.get_f64("mean_abs_err"), Some(0.0), "{result}");
+
+        // the sweep route accepts numeric specs (chain-step x init grid)
+        let r = get(&s, "/v1/sweep?device=a100&instr=numeric,chain,tf32,f32,5");
+        assert_eq!(r.status, 200, "{}", r.body);
+        let j = Json::parse(&r.body).unwrap();
+        let result = j.get("result").unwrap();
+        assert_eq!(result.get("cells").unwrap().as_arr().unwrap().len(), 10);
+        assert_eq!(result.get_str("workload"), Some("numeric chain tf32 f32 5 low"));
+
+        // invalid probes are 400s: fp8 on a non-fp8 device, off-(1,1)
+        // points, completion probes
+        for bad in [
+            r#"{"workload":"numeric profile fp8e4m3 f32 mul","points":[[1,1]]}"#,
+            r#"{"workload":"numeric profile bf16 f32 acc","points":[[4,1]]}"#,
+            r#"{"workload":"numeric chain tf32 f32 5","completion_latency":true}"#,
+        ] {
+            let r = post(&s, "/v1/plan", bad);
+            assert_eq!(r.status, 400, "{bad}: {}", r.body);
+        }
+        // ...while the fp8 probe is valid on the projected Hopper device
+        let fp8 = r#"{"workload":"numeric profile fp8e4m3 f32 mul","points":[[1,1]],
+                      "device":"hopper-projected","backend":"native"}"#;
+        let r = post(&s, "/v1/plan", fp8);
+        assert_eq!(r.status, 200, "{}", r.body);
     }
 
     #[test]

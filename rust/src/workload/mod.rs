@@ -6,16 +6,21 @@
 //! same fragmentation from our own programming interface. Instead of a
 //! separate family of free functions per instruction kind
 //! (`measure_mma`, `sweep_ldmatrix`, `completion_latency_mma`, …) there
-//! is one [`Workload`] enum covering all six benchmarked kinds —
-//! `mma`, `mma.sp`, `ldmatrix`, `ld.shared`, `wmma` and the Appendix-A
-//! `gemm` pipeline — with per-variant typed parameters, a shared
-//! [`ExecPoint`] coordinate, and spec-string round-tripping
-//! ([`Workload::parse_spec`] / [`Workload::to_spec`]).
+//! is one [`Workload`] enum covering all seven benchmarked kinds —
+//! `mma`, `mma.sp`, `ldmatrix`, `ld.shared`, `wmma`, the Appendix-A
+//! `gemm` pipeline and the §8 `numeric` behavior probes — with
+//! per-variant typed parameters, a shared [`ExecPoint`] coordinate, and
+//! spec-string round-tripping ([`Workload::parse_spec`] /
+//! [`Workload::to_spec`]).
 //!
 //! The exec point is (#warps, ILP) for the instruction families; for
 //! `gemm` the same coordinate reads as (CTA warps, `cp.async` pipeline
 //! stages), so tables 16/17 and arbitrary tile-pipeline sweeps run
-//! through the identical plan/cache machinery.
+//! through the identical plan/cache machinery. `numeric` probes carry
+//! every parameter in the spec and pin the point to `(1,1)`; their
+//! backend (native softfloat vs PJRT artifacts) is the [`Runner`]'s
+//! numeric leg, so tables 12–15 and Fig. 17 cache and single-flight
+//! like every other unit.
 //!
 //! On top of it, [`Plan`] builds a [`BenchPlan`] — a batch of runnable
 //! units (fixed points, a full sweep, a completion-latency probe) that a
@@ -39,9 +44,14 @@
 //! assert!(result.point(8, 2).unwrap().throughput > 900.0);
 //! ```
 
+mod numeric;
 mod plan;
 mod runner;
 
+pub use numeric::{
+    AccDtype, NumericOutput, NumericProbe, ProbeDtype, ProbeKind, CHAIN_MAX_LEN, CHAIN_SEED,
+    CHAIN_TRIALS, PROFILE_SEED, PROFILE_TRIALS,
+};
 pub use plan::{BenchPlan, BenchResult, Plan, UnitKind, UnitOutput};
 pub use runner::{runner_for, ArtifactRunner, Runner, SimRunner};
 
@@ -167,6 +177,10 @@ pub enum Workload {
     /// variant at one problem/tile configuration, executed at
     /// (CTA warps, stages) points.
     Gemm(GemmParams),
+    /// A §8 numeric-behavior study (Tables 12–15 profiling, Fig. 17
+    /// chain matmul). No (#warps, ILP) coordinate — every parameter is
+    /// in the probe; runs on a [`Runner`]'s numeric leg.
+    Numeric(NumericProbe),
 }
 
 impl Workload {
@@ -198,11 +212,13 @@ impl Workload {
             Workload::LdShared { .. } => "ld.shared",
             Workload::Wmma { .. } => "wmma",
             Workload::Gemm { .. } => "gemm",
+            Workload::Numeric { .. } => "numeric",
         }
     }
 
     /// Unit of the throughput column (paper convention: FMA/clk/SM for
-    /// compute, bytes/clk/SM for data movement).
+    /// compute, bytes/clk/SM for data movement; the numeric probes
+    /// measure errors, not rates).
     pub fn throughput_unit(&self) -> &'static str {
         match self {
             Workload::Mma { .. }
@@ -210,6 +226,10 @@ impl Workload {
             | Workload::Wmma { .. }
             | Workload::Gemm { .. } => "FMA/clk/SM",
             Workload::Ldmatrix { .. } | Workload::LdShared { .. } => "bytes/clk/SM",
+            Workload::Numeric(p) => match p.kind {
+                ProbeKind::Profile { .. } => "mean |err|",
+                ProbeKind::Chain { .. } => "l2 rel err",
+            },
         }
     }
 
@@ -224,12 +244,19 @@ impl Workload {
     /// wmma <ab> <cd> <shape>         wmma fp16 f32 m16n16k16
     /// gemm <variant> <ab> <cd> <size> <MxNxK> [l2]
     ///                                gemm pipeline bf16 f32 2048 128x128x32
+    /// numeric profile <ab> <cd> <op> [init]
+    ///                                numeric profile bf16 f32 acc fp32
+    /// numeric chain <ab> <cd> <len> [init]
+    ///                                numeric chain tf32 f32 14
     /// ```
     ///
     /// The gemm variant is `baseline`, `pipeline` or `permuted`; the
     /// trailing `l2` token selects the L2-resident memory regime
     /// (Table 17). CTA warps and pipeline stages are *not* part of the
-    /// spec — they are the plan's execution coordinates.
+    /// spec — they are the plan's execution coordinates. Numeric probes
+    /// are the opposite: every parameter is in the spec (op ∈
+    /// `mul|inner|acc`, init ∈ `low|fp32` defaulting to `low`) and the
+    /// only legal execution point is `(1,1)`.
     ///
     /// A legacy `mma` spec without the keyword (`"<ab> <cd> <shape>
     /// [sparse]"`, as accepted by [`MmaInstr::parse_spec`]) keeps
@@ -306,6 +333,7 @@ impl Workload {
                     l2_resident,
                 }))
             }
+            "numeric" => NumericProbe::parse_tokens(&parts[1..]).map(Workload::Numeric),
             "ld.shared" => {
                 if parts.len() != 3 {
                     return Err(format!(
@@ -350,7 +378,7 @@ impl Workload {
             _ => MmaInstr::parse_spec(spec).map(Workload::from_instr).map_err(|e| {
                 format!(
                     "{e} (or start the spec with a workload kind: \
-                     mma | mma.sp | ldmatrix | ld.shared | wmma | gemm)"
+                     mma | mma.sp | ldmatrix | ld.shared | wmma | gemm | numeric)"
                 )
             }),
         }
@@ -407,6 +435,7 @@ impl Workload {
                 g.tile_k,
                 if g.l2_resident { " l2" } else { "" }
             ),
+            Workload::Numeric(p) => p.to_spec(),
         }
     }
 
@@ -505,6 +534,7 @@ impl Workload {
                 }
                 Ok(())
             }
+            Workload::Numeric(p) => p.validate(device),
         }
     }
 
@@ -515,6 +545,17 @@ impl Workload {
     /// `cp.async` stage depth.
     pub fn validate_point(&self, point: ExecPoint) -> Result<(), String> {
         point.validate()?;
+        if let Workload::Numeric(_) = self {
+            // every probe parameter lives in the spec; pinning the point
+            // keeps exactly one cache token per probe
+            if point != ExecPoint::new(1, 1) {
+                return Err(format!(
+                    "numeric probes have no (#warps, ILP) coordinate; the only legal \
+                     point is (1,1), got {point}"
+                ));
+            }
+            return Ok(());
+        }
         if let Workload::Gemm(g) = self {
             // the synchronous variants never read the stage depth;
             // pinning it to 1 keeps one canonical cache token per
@@ -534,7 +575,8 @@ impl Workload {
 
     /// The #warps axis a sweep of this workload covers: the paper's
     /// [`SWEEP_WARPS`] for the instruction families, restricted to the
-    /// tile-legal warp counts for gemm.
+    /// tile-legal warp counts for gemm. Numeric probes reinterpret the
+    /// axis as the chain step (`[1]` for profile probes).
     pub fn sweep_warps_axis(&self) -> Vec<u32> {
         match self {
             Workload::Gemm(_) => SWEEP_WARPS
@@ -542,17 +584,20 @@ impl Workload {
                 .copied()
                 .filter(|&w| self.validate_point(ExecPoint::new(w, 1)).is_ok())
                 .collect(),
+            Workload::Numeric(p) => p.sweep_first_axis(),
             _ => SWEEP_WARPS.to_vec(),
         }
     }
 
     /// The second sweep axis: ILP for the instruction families,
     /// `cp.async` stage depth ([`GEMM_SWEEP_STAGES`], capped at the
-    /// problem's k-step count) for the gemm pipeline variant. The
-    /// synchronous variants never read the stage depth, so their axis
-    /// collapses to `[1]` instead of recomputing identical cells.
+    /// problem's k-step count) for the gemm pipeline variant, the init
+    /// kind (`1` = low-precision, `2` = FP32) for numeric probes. The
+    /// synchronous gemm variants never read the stage depth, so their
+    /// axis collapses to `[1]` instead of recomputing identical cells.
     pub fn sweep_ilp_axis(&self) -> Vec<u32> {
         match self {
+            Workload::Numeric(p) => p.sweep_init_axis(),
             Workload::Gemm(g) => {
                 if g.variant != gemm::Variant::Pipeline {
                     return vec![1];
@@ -570,6 +615,11 @@ impl Workload {
     /// Measure this workload at one (#warps, ILP) point on the cycle
     /// simulator. Panics on workloads the device does not support — call
     /// [`Workload::validate`] first (the [`Plan`] compiler does).
+    ///
+    /// Numeric probes are backend experiments, not timing measurements:
+    /// this native-datapath convenience reports the probe's headline
+    /// error in the `latency` field (runners use their own numeric leg
+    /// and return the full [`NumericOutput`] instead).
     pub fn measure(&self, device: &Device, point: ExecPoint) -> Measurement {
         let ExecPoint { warps, ilp } = point;
         match *self {
@@ -601,6 +651,15 @@ impl Workload {
                     throughput: r.fma_per_clk,
                 }
             }
+            Workload::Numeric(p) => {
+                let out = p.run_native();
+                Measurement {
+                    warps: point.warps,
+                    ilp: point.ilp,
+                    latency: NumericProbe::headline(&out),
+                    throughput: 0.0,
+                }
+            }
         }
     }
 
@@ -610,11 +669,19 @@ impl Workload {
     }
 
     /// Full grid over this workload's sweep axes (§4 step 2) — one code
-    /// path for all six workload kinds. Instruction families sweep
+    /// path for all seven workload kinds. Instruction families sweep
     /// (ILP, #warps); gemm sweeps (stages, CTA warps) over the
     /// tile-legal warp counts, with the stage depth riding the `ilp`
-    /// axis of the returned [`Sweep`].
+    /// axis of the returned [`Sweep`]; numeric probes sweep
+    /// (init kind, chain step).
     pub fn sweep(&self, device: &Device) -> Sweep {
+        if let Workload::Numeric(p) = self {
+            // native-datapath convenience; runners route each variant
+            // through their numeric leg instead
+            return p
+                .sweep_with(self.to_string(), |probe| Ok(probe.run_native()))
+                .expect("the native numeric sweep is infallible");
+        }
         let warps_axis = self.sweep_warps_axis();
         let ilp_axis = self.sweep_ilp_axis();
         let mut cells = Vec::with_capacity(warps_axis.len() * ilp_axis.len());
@@ -656,6 +723,24 @@ impl fmt::Display for Workload {
                 g.tile_k,
                 if g.l2_resident { " (L2)" } else { "" }
             ),
+            Workload::Numeric(p) => match p.kind {
+                ProbeKind::Profile { op, init } => write!(
+                    f,
+                    "numeric.profile {}/{} {} (init {})",
+                    p.ab.name(),
+                    p.cd.name(),
+                    op.spec_name(),
+                    init.spec_name()
+                ),
+                ProbeKind::Chain { len, init } => write!(
+                    f,
+                    "numeric.chain {}/{} N={} (init {})",
+                    p.ab.name(),
+                    p.cd.name(),
+                    len,
+                    init.spec_name()
+                ),
+            },
         }
     }
 }
@@ -680,11 +765,23 @@ mod tests {
             },
             Workload::Gemm(GemmParams::paper(gemm::Variant::Pipeline, false)),
             Workload::Gemm(GemmParams::paper(gemm::Variant::Permuted, true)),
+            Workload::Numeric(NumericProbe::profile(
+                ProbeDtype::Bf16,
+                AccDtype::F32,
+                crate::numerics::ProfileOp::Accumulation,
+                crate::numerics::InitKind::Fp32,
+            )),
+            Workload::Numeric(NumericProbe::chain(
+                ProbeDtype::Tf32,
+                AccDtype::F32,
+                6,
+                crate::numerics::InitKind::LowPrecision,
+            )),
         ]
     }
 
     #[test]
-    fn spec_round_trips_for_all_six_kinds() {
+    fn spec_round_trips_for_all_seven_kinds() {
         for w in all_kinds() {
             let spec = w.to_spec();
             let parsed = Workload::parse_spec(&spec)
@@ -929,6 +1026,24 @@ mod tests {
         let slow = base.measure(&d, ExecPoint::new(8, 1));
         let fast = l2.measure(&d, ExecPoint::new(8, 1));
         assert!(fast.latency < slow.latency, "{fast:?} vs {slow:?}");
+    }
+
+    #[test]
+    fn numeric_specs_pin_the_exec_point() {
+        let w = Workload::parse_spec("numeric profile bf16 f32 acc fp32").unwrap();
+        assert_eq!(w.kind(), "numeric");
+        assert_eq!(w.throughput_unit(), "mean |err|");
+        assert!(w.validate_point(ExecPoint::new(1, 1)).is_ok());
+        let err = w.validate_point(ExecPoint::new(4, 1)).unwrap_err();
+        assert!(err.contains("(1,1)"), "{err}");
+        // sweep axes reinterpret as (chain step, init kind)
+        let c = Workload::parse_spec("numeric chain tf32 f32 5").unwrap();
+        assert_eq!(c.sweep_warps_axis(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(c.sweep_ilp_axis(), vec![1, 2]);
+        assert_eq!(c.throughput_unit(), "l2 rel err");
+        // measure() reports the headline error on the native datapath
+        let m = w.measure(&a100(), ExecPoint::new(1, 1));
+        assert!(m.latency > 0.0 && m.throughput == 0.0, "{m:?}");
     }
 
     #[test]

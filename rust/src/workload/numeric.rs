@@ -1,0 +1,491 @@
+//! [`Workload::Numeric`](super::Workload::Numeric) — the §8
+//! numeric-behavior studies as first-class workloads.
+//!
+//! A [`NumericProbe`] names one numeric experiment completely:
+//!
+//! * **profile** probes (§8.1, Tables 12–15): operand/accumulator dtype
+//!   x [`ProfileOp`] (multiplication / inner-product add / accumulation)
+//!   x [`InitKind`] (low-precision vs FP32 initialization);
+//! * **chain** probes (§8.2, Fig. 17): dtype x chain length (x init).
+//!
+//! Spec grammar (round-tripping via [`NumericProbe::parse_tokens`] /
+//! [`NumericProbe::to_spec`]):
+//!
+//! ```text
+//! numeric profile <ab> <cd> <op> [init]   numeric profile bf16 f32 acc fp32
+//! numeric chain <ab> <cd> <len> [init]    numeric chain tf32 f32 14
+//! ```
+//!
+//! with `<ab>` one of `bf16|fp16|tf32|fp8e4m3|fp8e5m2` (the FP8 formats
+//! are the paper's Table 11 Hopper extension and validate only on
+//! fp8-capable devices), `<cd>` one of `f32|f16`, `<op>` one of
+//! `mul|inner|acc` and `[init]` one of `low|fp32` (default `low`).
+//!
+//! Unlike the timing families, a probe has no (#warps, ILP) coordinate:
+//! its only legal [`ExecPoint`](super::ExecPoint) is `(1,1)` and every
+//! parameter lives in the spec, so the per-unit cache token
+//! (`spec|point:w1:i1` under the resolved backend name) is the full
+//! content address. Trial counts and PRNG seeds are fixed constants of
+//! the probe ([`PROFILE_TRIALS`]/[`PROFILE_SEED`], [`CHAIN_TRIALS`]/
+//! [`CHAIN_SEED`], the values the paper-pinned tables use) — they are
+//! part of the probe's definition, not free parameters, precisely so
+//! cached results stay comparable.
+//!
+//! A numeric *sweep* reuses the shared [`Sweep`] grid with reinterpreted
+//! axes (the same move gemm makes with warps/stages): the first axis is
+//! the chain step (`1..=len`; `[1]` for profile probes), the second the
+//! init kind (`1` = low-precision, `2` = FP32). Cell `latency` carries
+//! the probe's error metric — mean |err| for profile cells, the l2
+//! relative error after that step for chain cells — and `throughput`
+//! carries the Table 14 secondary baseline (error vs
+//! `CPU_FP32cvtFP16`) for profile cells and `0` for chain cells.
+
+use crate::device::Device;
+use crate::microbench::{Sweep, SweepCell};
+use crate::numerics::{
+    chain_errors, profile_op, ChainResult, InitKind, MmaExec, NativeExec, NumericCfg,
+    ProfileOp, ProfileResult,
+};
+
+/// Trials per profile probe (the paper's batch; Tables 12–15).
+pub const PROFILE_TRIALS: usize = 1000;
+/// PRNG seed of every profile probe.
+pub const PROFILE_SEED: u64 = 7;
+/// Trials per chain probe (x4 artifact batches ≈ the paper's 1000).
+pub const CHAIN_TRIALS: usize = 250;
+/// PRNG seed of every chain probe.
+pub const CHAIN_SEED: u64 = 11;
+/// Longest supported chain (Fig. 17 plots N = 14).
+pub const CHAIN_MAX_LEN: u32 = 32;
+
+/// Operand (A/B) dtype of a numeric probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProbeDtype {
+    Bf16,
+    Fp16,
+    Tf32,
+    /// OCP FP8 E4M3 (Hopper, Table 11) — saturating, no infinities.
+    Fp8E4m3,
+    /// OCP FP8 E5M2 (Hopper, Table 11) — IEEE-style overflow to inf.
+    Fp8E5m2,
+}
+
+impl ProbeDtype {
+    /// The `NumericCfg`/`quantize` dtype string.
+    pub fn name(self) -> &'static str {
+        match self {
+            ProbeDtype::Bf16 => "bf16",
+            ProbeDtype::Fp16 => "fp16",
+            ProbeDtype::Tf32 => "tf32",
+            ProbeDtype::Fp8E4m3 => "fp8e4m3",
+            ProbeDtype::Fp8E5m2 => "fp8e5m2",
+        }
+    }
+
+    pub fn is_fp8(self) -> bool {
+        matches!(self, ProbeDtype::Fp8E4m3 | ProbeDtype::Fp8E5m2)
+    }
+
+    pub fn parse_spec(s: &str) -> Result<ProbeDtype, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "bf16" => Ok(ProbeDtype::Bf16),
+            "fp16" | "f16" => Ok(ProbeDtype::Fp16),
+            "tf32" => Ok(ProbeDtype::Tf32),
+            "fp8e4m3" | "e4m3" => Ok(ProbeDtype::Fp8E4m3),
+            "fp8e5m2" | "e5m2" => Ok(ProbeDtype::Fp8E5m2),
+            other => Err(format!(
+                "unknown numeric operand dtype {other:?} (bf16|fp16|tf32|fp8e4m3|fp8e5m2)"
+            )),
+        }
+    }
+}
+
+/// Accumulator (C/D) dtype of a numeric probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccDtype {
+    F32,
+    F16,
+}
+
+impl AccDtype {
+    /// The `NumericCfg` dtype string.
+    pub fn name(self) -> &'static str {
+        match self {
+            AccDtype::F32 => "f32",
+            AccDtype::F16 => "f16",
+        }
+    }
+
+    pub fn parse_spec(s: &str) -> Result<AccDtype, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Ok(AccDtype::F32),
+            "f16" | "fp16" => Ok(AccDtype::F16),
+            other => Err(format!("unknown numeric accumulator dtype {other:?} (f32|f16)")),
+        }
+    }
+}
+
+/// Which §8 study a probe runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProbeKind {
+    /// §8.1 element-wise profiling (one operation, one init strategy).
+    Profile { op: ProfileOp, init: InitKind },
+    /// §8.2 chain matmul, `len` steps.
+    Chain { len: u32, init: InitKind },
+}
+
+/// Typed parameters of a [`Workload::Numeric`](super::Workload::Numeric):
+/// everything that names the experiment. There is no free execution
+/// coordinate — see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NumericProbe {
+    pub ab: ProbeDtype,
+    pub cd: AccDtype,
+    pub kind: ProbeKind,
+}
+
+/// The output of one executed numeric probe.
+#[derive(Debug, Clone)]
+pub enum NumericOutput {
+    Profile(ProfileResult),
+    Chain(ChainResult),
+}
+
+impl NumericProbe {
+    pub const fn profile(ab: ProbeDtype, cd: AccDtype, op: ProfileOp, init: InitKind) -> Self {
+        NumericProbe { ab, cd, kind: ProbeKind::Profile { op, init } }
+    }
+
+    pub const fn chain(ab: ProbeDtype, cd: AccDtype, len: u32, init: InitKind) -> Self {
+        NumericProbe { ab, cd, kind: ProbeKind::Chain { len, init } }
+    }
+
+    /// The emulated-instruction configuration this probe runs on: the
+    /// paper's profiling shape m16n8k8 (k = n, as the chain study's
+    /// D -> A feedback requires).
+    pub fn cfg(&self) -> NumericCfg {
+        NumericCfg::new(self.ab.name(), self.cd.name(), 16, 8, 8)
+    }
+
+    /// This probe with a different init strategy (the sweep's second
+    /// axis varies init while everything else stays fixed).
+    pub fn with_init(&self, init: InitKind) -> NumericProbe {
+        let kind = match self.kind {
+            ProbeKind::Profile { op, .. } => ProbeKind::Profile { op, init },
+            ProbeKind::Chain { len, .. } => ProbeKind::Chain { len, init },
+        };
+        NumericProbe { kind, ..*self }
+    }
+
+    /// Parse the tokens after the `numeric` keyword. The inverse of
+    /// [`NumericProbe::to_spec`].
+    pub fn parse_tokens(parts: &[&str]) -> Result<NumericProbe, String> {
+        let usage = "numeric workload spec must be \"numeric profile <ab> <cd> <op> [init]\" \
+                     or \"numeric chain <ab> <cd> <len> [init]\"";
+        let Some(&study) = parts.first() else {
+            return Err(format!("{usage}, got a bare \"numeric\""));
+        };
+        if parts.len() < 4 || parts.len() > 5 {
+            return Err(format!("{usage}, got {} tokens", parts.len() + 1));
+        }
+        let ab = ProbeDtype::parse_spec(parts[1])?;
+        let cd = AccDtype::parse_spec(parts[2])?;
+        let init = match parts.get(4) {
+            Some(tok) => InitKind::parse_spec(tok)?,
+            None => InitKind::LowPrecision,
+        };
+        match study.to_ascii_lowercase().as_str() {
+            "profile" => {
+                let op = ProfileOp::parse_spec(parts[3])?;
+                Ok(NumericProbe::profile(ab, cd, op, init))
+            }
+            "chain" => {
+                let len: u32 = parts[3]
+                    .parse()
+                    .map_err(|_| format!("chain length must be a number, got {:?}", parts[3]))?;
+                Ok(NumericProbe::chain(ab, cd, len, init))
+            }
+            other => Err(format!("unknown numeric study {other:?} (profile|chain)")),
+        }
+    }
+
+    /// Canonical spec string, including the `numeric` keyword. Always
+    /// emits the init token so the cache-key coordinate is explicit.
+    pub fn to_spec(&self) -> String {
+        match self.kind {
+            ProbeKind::Profile { op, init } => format!(
+                "numeric profile {} {} {} {}",
+                self.ab.name(),
+                self.cd.name(),
+                op.spec_name(),
+                init.spec_name()
+            ),
+            ProbeKind::Chain { len, init } => format!(
+                "numeric chain {} {} {} {}",
+                self.ab.name(),
+                self.cd.name(),
+                len,
+                init.spec_name()
+            ),
+        }
+    }
+
+    /// Is this probe well-formed and runnable on `device`?
+    pub fn validate(&self, device: &Device) -> Result<(), String> {
+        if self.cd == AccDtype::F16 && self.ab != ProbeDtype::Fp16 {
+            return Err(format!(
+                "numeric probes accumulate in f32 except the paper's fp16/f16 \
+                 configuration; {}/f16 is not a Tensor-Core pairing",
+                self.ab.name()
+            ));
+        }
+        if self.ab.is_fp8() && !device.supports_fp8() {
+            return Err(format!(
+                "{} probes need FP8 Tensor Cores, which {} lacks \
+                 (Table 11 lists FP8 for Hopper: try hopper-projected)",
+                self.ab.name(),
+                device.name
+            ));
+        }
+        if let ProbeKind::Chain { len, .. } = self.kind {
+            if !(1..=CHAIN_MAX_LEN).contains(&len) {
+                return Err(format!(
+                    "chain length must be in 1..={CHAIN_MAX_LEN}, got {len}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run this probe on an executor — the only call site of
+    /// [`profile_op`]/[`chain_errors`] outside `numerics/` itself.
+    pub fn run_on(&self, exec: &mut dyn MmaExec) -> NumericOutput {
+        match self.kind {
+            ProbeKind::Profile { op, init } => {
+                NumericOutput::Profile(profile_op(exec, op, init, PROFILE_TRIALS, PROFILE_SEED))
+            }
+            ProbeKind::Chain { len, init } => NumericOutput::Chain(chain_errors(
+                exec,
+                len as usize,
+                CHAIN_TRIALS,
+                init == InitKind::LowPrecision,
+                CHAIN_SEED,
+            )),
+        }
+    }
+
+    /// Run this probe on the native softfloat datapath (the simulator
+    /// backend's numeric leg).
+    pub fn run_native(&self) -> NumericOutput {
+        self.run_on(&mut NativeExec::new(self.cfg()))
+    }
+
+    /// The headline error of one probe output: mean |err| for profile
+    /// probes, the final-step l2 relative error for chain probes.
+    pub fn headline(output: &NumericOutput) -> f64 {
+        match output {
+            NumericOutput::Profile(p) => p.mean_abs_err,
+            NumericOutput::Chain(c) => c.rel_err.last().copied().unwrap_or(f64::NAN),
+        }
+    }
+
+    /// First sweep axis: chain steps for chain probes, `[1]` otherwise.
+    pub fn sweep_first_axis(&self) -> Vec<u32> {
+        match self.kind {
+            ProbeKind::Chain { len, .. } => (1..=len).collect(),
+            ProbeKind::Profile { .. } => vec![1],
+        }
+    }
+
+    /// Second sweep axis: the init kinds (`1` = low-precision, `2` = FP32).
+    pub fn sweep_init_axis(&self) -> Vec<u32> {
+        vec![1, 2]
+    }
+
+    const INIT_AXIS: [InitKind; 2] = [InitKind::LowPrecision, InitKind::Fp32];
+
+    /// Assemble the numeric sweep grid by running one probe variant per
+    /// init kind through `run` (the backend seam: runners pass their
+    /// numeric leg in). Chain probes fill the whole step axis from a
+    /// single run per init — `chain_errors` reports every intermediate
+    /// step.
+    pub fn sweep_with(
+        &self,
+        label: String,
+        mut run: impl FnMut(&NumericProbe) -> Result<NumericOutput, String>,
+    ) -> Result<Sweep, String> {
+        let warps_axis = self.sweep_first_axis();
+        let ilp_axis = self.sweep_init_axis();
+        let mut columns: Vec<Vec<(f64, f64)>> = Vec::with_capacity(ilp_axis.len());
+        for init in Self::INIT_AXIS {
+            let out = run(&self.with_init(init))?;
+            let column: Vec<(f64, f64)> = match out {
+                NumericOutput::Profile(p) => vec![(p.mean_abs_err, p.mean_abs_err_vs_cvt_fp16)],
+                NumericOutput::Chain(c) => c.rel_err.iter().map(|&e| (e, 0.0)).collect(),
+            };
+            if column.len() != warps_axis.len() {
+                return Err(format!(
+                    "numeric sweep shape mismatch: {} cells for a {}-step axis",
+                    column.len(),
+                    warps_axis.len()
+                ));
+            }
+            columns.push(column);
+        }
+        let mut cells = Vec::with_capacity(warps_axis.len() * ilp_axis.len());
+        for (si, &step) in warps_axis.iter().enumerate() {
+            for (ii, &init_coord) in ilp_axis.iter().enumerate() {
+                let (latency, throughput) = columns[ii][si];
+                cells.push(SweepCell { warps: step, ilp: init_coord, latency, throughput });
+            }
+        }
+        Ok(Sweep { label, warps_axis, ilp_axis, cells })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{a100, hopper_projected};
+
+    #[test]
+    fn spec_round_trips() {
+        for spec in [
+            "numeric profile bf16 f32 mul low",
+            "numeric profile fp16 f16 acc fp32",
+            "numeric profile fp8e4m3 f32 inner low",
+            "numeric chain tf32 f32 14 low",
+            "numeric chain fp16 f16 10 fp32",
+        ] {
+            let parts: Vec<&str> = spec.split_whitespace().skip(1).collect();
+            let probe = NumericProbe::parse_tokens(&parts).unwrap();
+            assert_eq!(probe.to_spec(), spec, "{spec}");
+        }
+        // init defaults to low-precision and the canonical form makes
+        // the default explicit
+        let parts = ["profile", "bf16", "f32", "acc"];
+        let probe = NumericProbe::parse_tokens(&parts).unwrap();
+        assert_eq!(probe.to_spec(), "numeric profile bf16 f32 acc low");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_probes() {
+        for parts in [
+            vec![],
+            vec!["profile"],
+            vec!["profile", "bf16", "f32"],
+            vec!["profile", "int8", "f32", "mul"],
+            vec!["profile", "bf16", "i32", "mul"],
+            vec!["profile", "bf16", "f32", "divide"],
+            vec!["profile", "bf16", "f32", "mul", "maybe"],
+            vec!["profile", "bf16", "f32", "mul", "low", "extra"],
+            vec!["chain", "tf32", "f32", "many"],
+            vec!["chain", "tf32", "f32", "0"],      // parses, fails validate
+            vec!["anneal", "bf16", "f32", "mul"],
+        ] {
+            let r = NumericProbe::parse_tokens(&parts);
+            let ok = r.is_ok() && r.unwrap().validate(&a100()).is_ok();
+            assert!(!ok, "{parts:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn validation_gates_fp8_and_pairings() {
+        let ampere = a100();
+        let hopper = hopper_projected();
+        let fp8 = NumericProbe::profile(
+            ProbeDtype::Fp8E4m3,
+            AccDtype::F32,
+            ProfileOp::Multiplication,
+            InitKind::Fp32,
+        );
+        let err = fp8.validate(&ampere).unwrap_err();
+        assert!(err.contains("hopper-projected"), "{err}");
+        assert!(fp8.validate(&hopper).is_ok());
+        // f16 accumulation is the paper's fp16-only configuration
+        let bad = NumericProbe::profile(
+            ProbeDtype::Bf16,
+            AccDtype::F16,
+            ProfileOp::Multiplication,
+            InitKind::LowPrecision,
+        );
+        assert!(bad.validate(&ampere).is_err());
+        // chain lengths are bounded
+        let long = NumericProbe::chain(ProbeDtype::Tf32, AccDtype::F32, 33, InitKind::LowPrecision);
+        assert!(long.validate(&ampere).unwrap_err().contains("1..=32"));
+    }
+
+    #[test]
+    fn run_on_matches_direct_numerics_calls() {
+        let probe = NumericProbe::profile(
+            ProbeDtype::Bf16,
+            AccDtype::F32,
+            ProfileOp::Accumulation,
+            InitKind::LowPrecision,
+        );
+        let NumericOutput::Profile(got) = probe.run_native() else { panic!("profile output") };
+        let want = profile_op(
+            &mut NativeExec::new(probe.cfg()),
+            ProfileOp::Accumulation,
+            InitKind::LowPrecision,
+            PROFILE_TRIALS,
+            PROFILE_SEED,
+        );
+        assert_eq!(got.mean_abs_err.to_bits(), want.mean_abs_err.to_bits());
+
+        let chain = NumericProbe::chain(ProbeDtype::Tf32, AccDtype::F32, 6, InitKind::LowPrecision);
+        let NumericOutput::Chain(got) = chain.run_native() else { panic!("chain output") };
+        let want = chain_errors(&mut NativeExec::new(chain.cfg()), 6, CHAIN_TRIALS, true, CHAIN_SEED);
+        assert_eq!(got.rel_err, want.rel_err);
+        assert_eq!(got.overflow_at, want.overflow_at);
+    }
+
+    #[test]
+    fn sweep_reinterprets_axes_as_step_and_init() {
+        let chain = NumericProbe::chain(ProbeDtype::Tf32, AccDtype::F32, 5, InitKind::LowPrecision);
+        let sweep = chain
+            .sweep_with("chain".into(), |p| Ok(p.run_native()))
+            .unwrap();
+        assert_eq!(sweep.warps_axis, vec![1, 2, 3, 4, 5]);
+        assert_eq!(sweep.ilp_axis, vec![1, 2]);
+        assert_eq!(sweep.cells.len(), 10);
+        // error grows with chain length on both init columns, and FP32
+        // init is strictly worse at every step (§8.2)
+        for init in [1, 2] {
+            assert!(sweep.cell(5, init).unwrap().latency > sweep.cell(1, init).unwrap().latency);
+        }
+        for step in 1..=5 {
+            let low = sweep.cell(step, 1).unwrap().latency;
+            let f32i = sweep.cell(step, 2).unwrap().latency;
+            assert!(f32i > low, "step {step}: {f32i:e} vs {low:e}");
+        }
+
+        let profile = NumericProbe::profile(
+            ProbeDtype::Fp16,
+            AccDtype::F32,
+            ProfileOp::Multiplication,
+            InitKind::LowPrecision,
+        );
+        let sweep = profile.sweep_with("profile".into(), |p| Ok(p.run_native())).unwrap();
+        assert_eq!(sweep.warps_axis, vec![1]);
+        assert_eq!(sweep.ilp_axis, vec![1, 2]);
+        // Table 13: zero error under low-precision init, nonzero under FP32
+        assert_eq!(sweep.cell(1, 1).unwrap().latency, 0.0);
+        assert!(sweep.cell(1, 2).unwrap().latency > 0.0);
+    }
+
+    #[test]
+    fn fp8_probes_run_on_the_native_datapath() {
+        // forward-looking Table 11 formats: fewer mantissa bits than
+        // bf16 -> strictly larger multiplication error under FP32 init
+        let err_of = |ab| {
+            let p = NumericProbe::profile(ab, AccDtype::F32, ProfileOp::Multiplication, InitKind::Fp32);
+            let NumericOutput::Profile(r) = p.run_native() else { panic!() };
+            r.mean_abs_err
+        };
+        let e5m2 = err_of(ProbeDtype::Fp8E5m2);
+        let e4m3 = err_of(ProbeDtype::Fp8E4m3);
+        let bf16 = err_of(ProbeDtype::Bf16);
+        assert!(e5m2 > e4m3 && e4m3 > bf16, "{e5m2:e} {e4m3:e} {bf16:e}");
+    }
+}

@@ -18,6 +18,9 @@ use crate::device::{self, Device};
 use crate::microbench::{ConvergencePoint, Measurement, Sweep};
 use crate::util::Json;
 
+use crate::numerics::{ChainResult, ProfileResult};
+
+use super::numeric::NumericOutput;
 use super::runner::Runner;
 use super::{ExecPoint, Workload};
 
@@ -271,6 +274,13 @@ impl Plan {
         self.workload.validate(&device)?;
         let mut units = Vec::new();
         if self.completion {
+            if matches!(self.workload, Workload::Numeric(_)) {
+                return Err(
+                    "numeric probes have no completion/issue latency; request a \
+                     point (1,1) or a sweep instead"
+                        .to_string(),
+                );
+            }
             units.push(UnitKind::Completion);
         }
         let mut seen: Vec<ExecPoint> = Vec::new();
@@ -342,9 +352,19 @@ impl BenchPlan {
     /// Sweep tokens include the convergence warp list deliberately: the
     /// cached payload embeds the convergence summaries, so two plans
     /// with different lists are different content. Plans using the
-    /// default list (4 and 8) all share one entry.
+    /// default list (4 and 8) all share one entry. A *numeric* sweep
+    /// always covers both init kinds (the init axis), so its token
+    /// canonicalizes the probe's own init token away — two specs
+    /// differing only in init would otherwise cache the identical grid
+    /// twice.
     pub fn unit_token(&self, unit: &UnitKind) -> String {
-        let base = self.workload.to_spec();
+        let base = match (unit, self.workload) {
+            (UnitKind::Sweep, Workload::Numeric(p)) => {
+                Workload::Numeric(p.with_init(crate::numerics::InitKind::LowPrecision))
+                    .to_spec()
+            }
+            _ => self.workload.to_spec(),
+        };
         match unit {
             UnitKind::Completion => format!("{base}|completion"),
             UnitKind::Point(p) => format!("{base}|point:w{}:i{}", p.warps, p.ilp),
@@ -391,6 +411,9 @@ pub enum UnitOutput {
     Point(Measurement),
     Sweep { sweep: Sweep, convergence: Vec<ConvergencePoint> },
     Completion(f64),
+    /// A numeric probe's result — what a point unit of a
+    /// [`Workload::Numeric`] produces (errors, not cycles).
+    Numeric(NumericOutput),
 }
 
 /// A uniform plan result: measurements, convergence points and device
@@ -443,6 +466,30 @@ impl BenchResult {
             }
             _ => None,
         })
+    }
+
+    /// The numeric probe's output, if the plan ran one.
+    pub fn numeric(&self) -> Option<&NumericOutput> {
+        self.units.iter().find_map(|(_, out)| match out {
+            UnitOutput::Numeric(n) => Some(n),
+            _ => None,
+        })
+    }
+
+    /// The §8.1 profiling result, if the plan ran a profile probe.
+    pub fn profile(&self) -> Option<&ProfileResult> {
+        match self.numeric() {
+            Some(NumericOutput::Profile(p)) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// The §8.2 chain result, if the plan ran a chain probe.
+    pub fn chain(&self) -> Option<&ChainResult> {
+        match self.numeric() {
+            Some(NumericOutput::Chain(c)) => Some(c),
+            _ => None,
+        }
     }
 }
 
@@ -604,6 +651,56 @@ mod tests {
         });
         let plan = Plan::new(tiny).sweep().compile().unwrap();
         assert_eq!(plan.convergence_warps, vec![1]);
+    }
+
+    #[test]
+    fn numeric_plans_pin_points_and_reject_completion() {
+        let w = Workload::parse_spec("numeric profile bf16 f32 acc fp32").unwrap();
+        // the probe runs as a (1,1) point unit and returns typed output
+        let plan = Plan::new(w).point(1, 1).compile().unwrap();
+        let r = plan.run(&SimRunner, 1).unwrap();
+        let p = r.profile().expect("profile output");
+        assert!(p.mean_abs_err > 0.0, "{p:?}"); // Table 12's init_FP32 row
+        assert!(r.chain().is_none());
+        assert_eq!(r.throughput_unit, "mean |err|");
+        // no completion probe, no off-(1,1) points
+        let err = Plan::new(w).completion_latency().point(1, 1).compile().unwrap_err();
+        assert!(err.contains("completion"), "{err}");
+        let err = Plan::new(w).point(4, 2).compile().unwrap_err();
+        assert!(err.contains("(1,1)"), "{err}");
+        // two probes differing only in init address different cache slots
+        let low = Workload::parse_spec("numeric profile bf16 f32 acc low").unwrap();
+        let a = Plan::new(w).point(1, 1).compile().unwrap();
+        let b = Plan::new(low).point(1, 1).compile().unwrap();
+        assert_ne!(a.unit_token(&a.units[0]), b.unit_token(&b.units[0]));
+        // fp8 probes validate per device
+        let fp8 = Workload::parse_spec("numeric profile fp8e4m3 f32 mul").unwrap();
+        assert!(Plan::new(fp8).point(1, 1).compile().is_err()); // a100 default
+        assert!(Plan::new(fp8).device("hopper-projected").point(1, 1).compile().is_ok());
+    }
+
+    #[test]
+    fn numeric_chain_sweep_through_the_plan_path() {
+        let w = Workload::parse_spec("numeric chain tf32 f32 6").unwrap();
+        let plan = Plan::new(w).sweep().compile().unwrap();
+        assert_eq!(plan.convergence_warps, vec![4]); // default ∩ step axis
+        let r = plan.run(&SimRunner, 2).unwrap();
+        let sweep = r.sweep().unwrap();
+        assert_eq!(sweep.warps_axis, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(sweep.ilp_axis, vec![1, 2]);
+        // error grows along the chain on the low-precision column
+        assert!(sweep.cell(6, 1).unwrap().latency > sweep.cell(1, 1).unwrap().latency);
+
+        // the sweep covers BOTH init kinds whatever the spec's init
+        // token says, so the two specs share one sweep content address
+        // (while their point units stay distinct)
+        let fp32 = Workload::parse_spec("numeric chain tf32 f32 6 fp32").unwrap();
+        let a = Plan::new(w).sweep().compile().unwrap();
+        let b = Plan::new(fp32).sweep().compile().unwrap();
+        assert_eq!(a.unit_token(&UnitKind::Sweep), b.unit_token(&UnitKind::Sweep));
+        let pa = Plan::new(w).point(1, 1).compile().unwrap();
+        let pb = Plan::new(fp32).point(1, 1).compile().unwrap();
+        assert_ne!(pa.unit_token(&pa.units[0]), pb.unit_token(&pb.units[0]));
     }
 
     #[test]

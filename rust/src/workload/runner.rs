@@ -2,17 +2,30 @@
 //!
 //! A runner executes [`BenchPlan`] units. Backend selection happens
 //! exactly once, when a runner is constructed ([`runner_for`]), instead
-//! of per call site: [`SimRunner`] is the cycle-level simulator backend,
+//! of per call site: [`SimRunner`] is the cycle-level simulator backend
+//! (timing on tcsim, numerics on the native softfloat datapath),
 //! [`ArtifactRunner`] is the PJRT artifact runtime (or its offline
 //! stub, whose construction fails with an actionable message, sending
-//! callers down the simulator path — the same contract as
-//! [`crate::coordinator::BackendKind::instantiate`]).
+//! callers down the simulator path).
+//!
+//! The **numeric leg** ([`Runner::run_numeric`]) is where the backends
+//! genuinely differ: a [`Workload::Numeric`] point or sweep unit runs
+//! the §8 probe on the runner's own datapath — `NativeExec` softfloat
+//! for [`SimRunner`], the AOT Pallas artifacts through PJRT for
+//! [`ArtifactRunner`] — while timing units are simulator-measured on
+//! every backend (the artifacts cover the numeric datapath, not cycle
+//! timing). tcserved keys every cached unit under [`Runner::name`], so
+//! the resolved backend is part of each content address.
+
+use std::sync::Mutex;
 
 use crate::coordinator::BackendKind;
 use crate::microbench::convergence_point;
-use crate::runtime::ArtifactStore;
+use crate::runtime::{ArtifactExec, ArtifactStore};
 
+use super::numeric::{NumericOutput, NumericProbe};
 use super::plan::{BenchPlan, UnitKind, UnitOutput};
+use super::Workload;
 
 /// Executes plan units against one backend. Implementations must be
 /// [`Sync`]: the plan executor and tcserved both fan units out across
@@ -23,9 +36,60 @@ pub trait Runner: Sync {
 
     /// Execute one unit of a compiled plan.
     fn run_unit(&self, plan: &BenchPlan, unit: &UnitKind) -> Result<UnitOutput, String>;
+
+    /// The numeric leg: execute one §8 probe on this backend's numeric
+    /// datapath.
+    fn run_numeric(&self, probe: &NumericProbe) -> Result<NumericOutput, String>;
 }
 
-/// The cycle-level SM-simulator backend (always available).
+/// Shared unit dispatch: numeric workloads route through the runner's
+/// numeric leg (point = one probe, sweep = one probe variant per init
+/// kind assembled into the step x init grid); timing workloads run on
+/// the cycle simulator regardless of backend.
+fn dispatch_unit(
+    runner: &dyn Runner,
+    plan: &BenchPlan,
+    unit: &UnitKind,
+) -> Result<UnitOutput, String> {
+    if let Workload::Numeric(probe) = plan.workload {
+        return match unit {
+            UnitKind::Completion => Err(format!(
+                "numeric probe {} has no completion latency (the plan compiler \
+                 rejects this unit)",
+                plan.workload
+            )),
+            UnitKind::Point(_) => Ok(UnitOutput::Numeric(runner.run_numeric(&probe)?)),
+            UnitKind::Sweep => {
+                let sweep = probe
+                    .sweep_with(plan.workload.to_string(), |p| runner.run_numeric(p))?;
+                let convergence = plan
+                    .convergence_warps
+                    .iter()
+                    .map(|&w| convergence_point(&sweep, w))
+                    .collect();
+                Ok(UnitOutput::Sweep { sweep, convergence })
+            }
+        };
+    }
+    Ok(match unit {
+        UnitKind::Completion => {
+            UnitOutput::Completion(plan.workload.completion_latency(&plan.device))
+        }
+        UnitKind::Point(p) => UnitOutput::Point(plan.workload.measure(&plan.device, *p)),
+        UnitKind::Sweep => {
+            let sweep = plan.workload.sweep(&plan.device);
+            let convergence = plan
+                .convergence_warps
+                .iter()
+                .map(|&w| convergence_point(&sweep, w))
+                .collect();
+            UnitOutput::Sweep { sweep, convergence }
+        }
+    })
+}
+
+/// The cycle-level SM-simulator backend (always available); its numeric
+/// leg is the native softfloat datapath.
 pub struct SimRunner;
 
 impl Runner for SimRunner {
@@ -34,40 +98,33 @@ impl Runner for SimRunner {
     }
 
     fn run_unit(&self, plan: &BenchPlan, unit: &UnitKind) -> Result<UnitOutput, String> {
-        Ok(match unit {
-            UnitKind::Completion => {
-                UnitOutput::Completion(plan.workload.completion_latency(&plan.device))
-            }
-            UnitKind::Point(p) => UnitOutput::Point(plan.workload.measure(&plan.device, *p)),
-            UnitKind::Sweep => {
-                let sweep = plan.workload.sweep(&plan.device);
-                let convergence = plan
-                    .convergence_warps
-                    .iter()
-                    .map(|&w| convergence_point(&sweep, w))
-                    .collect();
-                UnitOutput::Sweep { sweep, convergence }
-            }
-        })
+        dispatch_unit(self, plan, unit)
+    }
+
+    fn run_numeric(&self, probe: &NumericProbe) -> Result<NumericOutput, String> {
+        Ok(probe.run_native())
     }
 }
 
-/// The PJRT artifact-runtime backend. Construction proves the artifact
-/// store is openable (it is not in offline builds — the stub runtime
-/// returns an error, exactly like `BackendKind::Pjrt.instantiate()`).
+/// The PJRT artifact-runtime backend. Construction opens the artifact
+/// store (it is not openable in offline builds — the stub runtime
+/// returns an error, sending callers down the simulator path).
 ///
 /// Timing workloads are simulator-measured on every backend — the AOT
-/// artifacts cover the §8 numeric datapath, not cycle timing — so this
-/// runner delegates unit execution to [`SimRunner`] while keying results
-/// under its own backend name.
+/// artifacts cover the §8 numeric datapath, not cycle timing — so those
+/// units delegate to the shared simulator dispatch while keying results
+/// under this runner's backend name. Numeric probes execute on the
+/// artifacts; the store is a single stateful compilation cache, so the
+/// numeric leg serializes on a mutex (matching the old campaign's
+/// serial numeric phase).
 pub struct ArtifactRunner {
-    _proof: (),
+    store: Mutex<ArtifactStore>,
 }
 
 impl ArtifactRunner {
     pub fn new() -> Result<ArtifactRunner, String> {
-        let _store = ArtifactStore::open_default().map_err(|e| format!("{e:#}"))?;
-        Ok(ArtifactRunner { _proof: () })
+        let store = ArtifactStore::open_default().map_err(|e| format!("{e:#}"))?;
+        Ok(ArtifactRunner { store: Mutex::new(store) })
     }
 }
 
@@ -77,17 +134,41 @@ impl Runner for ArtifactRunner {
     }
 
     fn run_unit(&self, plan: &BenchPlan, unit: &UnitKind) -> Result<UnitOutput, String> {
-        SimRunner.run_unit(plan, unit)
+        dispatch_unit(self, plan, unit)
+    }
+
+    fn run_numeric(&self, probe: &NumericProbe) -> Result<NumericOutput, String> {
+        // a panic in an earlier probe (caught upstream) poisons the
+        // lock, but the store is only a compilation cache — at worst an
+        // entry is missing — so recover instead of failing every later
+        // numeric request until restart
+        let mut store = self.store.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        let mut exec = ArtifactExec::new(&mut store, probe.cfg()).map_err(|e| {
+            if probe.ab.is_fp8() {
+                format!("{e:#} (fp8 probes have no AOT artifacts yet)")
+            } else {
+                format!("{e:#}")
+            }
+        })?;
+        Ok(probe.run_on(&mut exec))
     }
 }
 
 /// Resolve a requested backend kind to a runner, once. `Auto` picks
 /// PJRT when artifacts are available and the simulator backend
-/// otherwise, mirroring [`BackendKind::resolve`].
+/// otherwise — including when the artifact store turns out not to be
+/// *openable* (manifest present but the PJRT runtime unavailable or the
+/// manifest corrupt), so `Auto` never fails, exactly like the retired
+/// `Backend::auto()`. An explicit `Pjrt` request still surfaces the
+/// open error.
 pub fn runner_for(kind: BackendKind) -> Result<Box<dyn Runner>, String> {
     match kind.resolve() {
         BackendKind::Native => Ok(Box::new(SimRunner)),
-        BackendKind::Pjrt => Ok(Box::new(ArtifactRunner::new()?)),
+        BackendKind::Pjrt => match ArtifactRunner::new() {
+            Ok(r) => Ok(Box::new(r)),
+            Err(_) if kind == BackendKind::Auto => Ok(Box::new(SimRunner)),
+            Err(e) => Err(e),
+        },
         BackendKind::Auto => unreachable!("resolve() returns a concrete kind"),
     }
 }
@@ -115,6 +196,27 @@ mod tests {
             UnitOutput::Point(m) => assert!(m.throughput > 0.0 && m.latency > 0.0, "{m:?}"),
             other => panic!("expected a point output, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn sim_runner_numeric_leg_is_the_native_datapath() {
+        use crate::numerics::{profile_op, InitKind, NativeExec, ProfileOp};
+        use crate::workload::{Plan, Workload, PROFILE_SEED, PROFILE_TRIALS};
+        let w = Workload::parse_spec("numeric profile tf32 f32 inner fp32").unwrap();
+        let plan = Plan::new(w).point(1, 1).compile().unwrap();
+        let out = SimRunner.run_unit(&plan, &plan.units[0]).unwrap();
+        let UnitOutput::Numeric(NumericOutput::Profile(got)) = out else {
+            panic!("expected a numeric profile output")
+        };
+        let Workload::Numeric(probe) = w else { unreachable!() };
+        let want = profile_op(
+            &mut NativeExec::new(probe.cfg()),
+            ProfileOp::InnerProduct,
+            InitKind::Fp32,
+            PROFILE_TRIALS,
+            PROFILE_SEED,
+        );
+        assert_eq!(got.mean_abs_err.to_bits(), want.mean_abs_err.to_bits());
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -2,13 +2,13 @@
 //! end-to-end (native backend; the PJRT path is exercised in
 //! numerics_backends.rs and by `repro all`).
 
-use tcbench::coordinator::{run_experiment, Backend, EXPERIMENTS};
+use tcbench::coordinator::{run_experiment, EXPERIMENTS};
+use tcbench::workload::SimRunner;
 
 #[test]
 fn every_simulator_experiment_renders() {
-    let mut backend = Backend::Native;
     for e in EXPERIMENTS.iter().filter(|e| !e.numeric) {
-        let report = run_experiment(e.id, &mut backend)
+        let report = run_experiment(e.id, &SimRunner)
             .unwrap_or_else(|err| panic!("{}: {err:#}", e.id));
         assert!(report.contains("##"), "{} report missing title", e.id);
         assert!(report.len() > 200, "{} report suspiciously short", e.id);
@@ -17,9 +17,8 @@ fn every_simulator_experiment_renders() {
 
 #[test]
 fn numeric_experiments_render_on_native_backend() {
-    let mut backend = Backend::Native;
     for id in ["t12", "t13", "t14", "t15"] {
-        let report = run_experiment(id, &mut backend).unwrap();
+        let report = run_experiment(id, &SimRunner).unwrap();
         assert!(report.contains("multiplication"), "{id}:\n{report}");
         assert!(report.contains("accumulation"), "{id}");
     }
@@ -27,8 +26,7 @@ fn numeric_experiments_render_on_native_backend() {
 
 #[test]
 fn fig17_reports_fp16_overflow() {
-    let mut backend = Backend::Native;
-    let report = run_experiment("fig17", &mut backend).unwrap();
+    let report = run_experiment("fig17", &SimRunner).unwrap();
     assert!(
         report.contains("overflow (inf) at N ="),
         "fig17 must flag the FP16 overflow:\n{report}"
@@ -38,8 +36,7 @@ fn fig17_reports_fp16_overflow() {
 
 #[test]
 fn sweep_figures_contain_all_warp_series() {
-    let mut backend = Backend::Native;
-    let report = run_experiment("fig6", &mut backend).unwrap();
+    let report = run_experiment("fig6", &SimRunner).unwrap();
     for w in ["1w", "2w", "4w", "6w", "8w", "12w", "16w", "32w"] {
         assert!(report.contains(w), "fig6 missing series {w}");
     }
@@ -47,9 +44,8 @@ fn sweep_figures_contain_all_warp_series() {
 
 #[test]
 fn appendix_tables_report_speedups() {
-    let mut backend = Backend::Native;
-    let t16 = run_experiment("t16", &mut backend).unwrap();
+    let t16 = run_experiment("t16", &SimRunner).unwrap();
     assert!(t16.contains("mma_pipeline.cu") && t16.contains("speedup"));
-    let t17 = run_experiment("t17", &mut backend).unwrap();
+    let t17 = run_experiment("t17", &SimRunner).unwrap();
     assert!(t17.contains("mma_permuted.cu"));
 }

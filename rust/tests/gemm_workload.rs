@@ -4,7 +4,7 @@
 //! must not change the numbers), plus (CTA warps, stages) sweeps with
 //! the shared convergence machinery.
 
-use tcbench::coordinator::{run_experiment, Backend};
+use tcbench::coordinator::run_experiment;
 use tcbench::device::a100;
 use tcbench::gemm::{self, GemmConfig};
 use tcbench::report::expected;
@@ -12,8 +12,7 @@ use tcbench::workload::{Plan, SimRunner, Workload};
 
 #[test]
 fn table16_report_is_plan_backed_and_pinned() {
-    let mut b = Backend::Native;
-    let report = run_experiment("t16", &mut b).unwrap();
+    let report = run_experiment("t16", &SimRunner).unwrap();
     // the paper's published cycle counts are in the table
     assert!(report.contains(&expected::TABLE16_BASELINE.to_string()), "{report}");
     assert!(report.contains(&expected::TABLE16_PIPELINE.to_string()), "{report}");
@@ -38,8 +37,7 @@ fn table16_report_is_plan_backed_and_pinned() {
 
 #[test]
 fn table17_report_is_plan_backed_and_pinned() {
-    let mut b = Backend::Native;
-    let report = run_experiment("t17", &mut b).unwrap();
+    let report = run_experiment("t17", &SimRunner).unwrap();
     assert!(report.contains(&expected::TABLE16_BASELINE.to_string()), "{report}");
     assert!(report.contains(&expected::TABLE17_PERMUTED.to_string()), "{report}");
     assert!(report.contains("mma_baseline.cu") && report.contains("mma_permuted.cu"));

@@ -1,0 +1,190 @@
+//! Integration: the §8 numeric workload family end to end — the
+//! plan-backed tables 12–15 and Fig. 17 pinned against
+//! `report::expected` and against the direct `numerics::` datapath
+//! (folding the studies into the Workload layer must not change a
+//! single number), plus the chain/init sweep axes and fp8 device
+//! gating.
+
+use tcbench::coordinator::run_experiment;
+use tcbench::numerics::{
+    chain_errors, profile_op, InitKind, NativeExec, ProfileOp,
+};
+use tcbench::report::expected;
+use tcbench::workload::{
+    Plan, SimRunner, Workload, CHAIN_SEED, CHAIN_TRIALS, PROFILE_SEED, PROFILE_TRIALS,
+};
+
+/// Render one probe result exactly like the experiment tables do.
+fn fmt2e(v: f64) -> String {
+    format!("{v:.2e}")
+}
+
+#[test]
+fn numeric_tables_are_plan_backed_and_pinned_to_the_legacy_values() {
+    // For every row of the paper's numeric tables (expected.rs), the
+    // plan-backed report must contain the *identical* measured value the
+    // legacy direct path produced: same probe semantics, same trials
+    // (1000), same seed (7).
+    for row in expected::numeric_tables() {
+        let id = match row.table {
+            "12" => "t12",
+            "13" => "t13",
+            "14" => "t14",
+            "15" => "t15",
+            other => panic!("unknown table {other}"),
+        };
+        let report = run_experiment(id, &SimRunner).unwrap();
+        let (ab, cd) = match row.cfg {
+            "bf16_f32" => ("bf16", "f32"),
+            "fp16_f32" => ("fp16", "f32"),
+            "fp16_f16" => ("fp16", "f16"),
+            "tf32_f32" => ("tf32", "f32"),
+            other => panic!("unknown cfg {other}"),
+        };
+        let init = if row.init == "low" { "low" } else { "fp32" };
+        for (op, paper) in [
+            (ProfileOp::Multiplication, row.mul),
+            (ProfileOp::InnerProduct, row.inner),
+            (ProfileOp::Accumulation, row.accum),
+        ] {
+            // the workload-layer measurement...
+            let spec = format!("numeric profile {ab} {cd} {} {init}", op.spec_name());
+            let w = Workload::parse_spec(&spec).unwrap();
+            let plan = Plan::new(w).point(1, 1).compile().unwrap();
+            let res = plan.run(&SimRunner, 1).unwrap();
+            let via_plan = res.profile().expect("profile unit").mean_abs_err;
+            // ...equals the direct numerics:: call bit-for-bit...
+            let init_kind =
+                if init == "low" { InitKind::LowPrecision } else { InitKind::Fp32 };
+            let direct = profile_op(
+                &mut NativeExec::new(
+                    tcbench::numerics::NumericCfg::new(ab, cd, 16, 8, 8),
+                ),
+                op,
+                init_kind,
+                PROFILE_TRIALS,
+                PROFILE_SEED,
+            );
+            assert_eq!(
+                via_plan.to_bits(),
+                direct.mean_abs_err.to_bits(),
+                "{spec}: plan {via_plan:e} vs direct {:e}",
+                direct.mean_abs_err
+            );
+            // ...and both the paper value and the measured value appear
+            // in the rendered table
+            assert!(report.contains(&fmt2e(paper)), "{id} missing paper {}:\n{report}", fmt2e(paper));
+            assert!(
+                report.contains(&fmt2e(via_plan)),
+                "{id} missing measured {}:\n{report}",
+                fmt2e(via_plan)
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_error_rows_stay_exactly_zero() {
+    // Tables 13/15 low-precision rows are exact-zero findings: the plan
+    // path must preserve them bit-exactly, not just approximately
+    for spec in [
+        "numeric profile fp16 f32 mul low",
+        "numeric profile fp16 f32 inner low",
+        "numeric profile fp16 f32 acc low",
+        "numeric profile tf32 f32 mul low",
+        "numeric profile tf32 f32 inner low",
+        "numeric profile tf32 f32 acc low",
+        "numeric profile bf16 f32 mul low",
+        "numeric profile bf16 f32 inner low",
+    ] {
+        let w = Workload::parse_spec(spec).unwrap();
+        let r = Plan::new(w).point(1, 1).compile().unwrap().run(&SimRunner, 1).unwrap();
+        assert_eq!(r.profile().unwrap().mean_abs_err, 0.0, "{spec}");
+    }
+    // the one nonzero low-precision cell: BF16 RZ accumulation (T12)
+    let w = Workload::parse_spec("numeric profile bf16 f32 acc low").unwrap();
+    let r = Plan::new(w).point(1, 1).compile().unwrap().run(&SimRunner, 1).unwrap();
+    let acc = r.profile().unwrap().mean_abs_err;
+    assert!((1e-9..1e-7).contains(&acc), "paper 1.89e-8, got {acc:e}");
+}
+
+#[test]
+fn fig17_is_plan_backed_and_pinned() {
+    let report = run_experiment("fig17", &SimRunner).unwrap();
+    // the FP16 chain overflows where the paper says it does
+    assert!(report.contains("overflow (inf) at N ="), "{report}");
+    assert!(report.contains("csv:"));
+    for label in [
+        "TF32 (init TF32)",
+        "BF16 (init BF16)",
+        "FP16 (init FP16)",
+        "TF32 (init FP32)",
+        "BF16 (init FP32)",
+    ] {
+        assert!(report.contains(label), "fig17 missing series {label}");
+    }
+    // the chain probe through the plan path equals the direct call, and
+    // its overflow step brackets the paper's N >= 10 finding
+    let w = Workload::parse_spec("numeric chain fp16 f16 14").unwrap();
+    let r = Plan::new(w).point(1, 1).compile().unwrap().run(&SimRunner, 1).unwrap();
+    let chain = r.chain().expect("chain unit");
+    let direct = chain_errors(
+        &mut NativeExec::new(tcbench::numerics::NumericCfg::new("fp16", "f16", 16, 8, 8)),
+        14,
+        CHAIN_TRIALS,
+        true,
+        CHAIN_SEED,
+    );
+    // bitwise equality: post-overflow steps are NaN, which `==` rejects
+    assert_eq!(chain.rel_err.len(), direct.rel_err.len());
+    for (i, (a, b)) in chain.rel_err.iter().zip(&direct.rel_err).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "step {}: {a:e} vs {b:e}", i + 1);
+    }
+    assert_eq!(chain.overflow_at, direct.overflow_at);
+    let at = chain.overflow_at.expect("FP16 chain must overflow");
+    let paper = expected::FIG17_FP16_OVERFLOW_N;
+    assert!(
+        (paper - 2..=paper + 2).contains(&at),
+        "overflow at {at}, paper {paper}"
+    );
+    assert!(report.contains(&format!("overflow (inf) at N = {at}")), "{report}");
+}
+
+#[test]
+fn numeric_sweeps_cover_chain_and_init_axes() {
+    // `repro sweep --instr "numeric chain ..."`'s shape: the sweep grid
+    // rides chain step on the first axis and init kind on the second
+    let w = Workload::parse_spec("numeric chain bf16 f32 8").unwrap();
+    let plan = Plan::new(w).sweep().compile().unwrap();
+    let r = plan.run(&SimRunner, 2).unwrap();
+    let sweep = r.sweep().unwrap();
+    assert_eq!(sweep.warps_axis, (1..=8).collect::<Vec<u32>>());
+    assert_eq!(sweep.ilp_axis, vec![1, 2]);
+    assert_eq!(sweep.cells.len(), 16);
+    // BF16 chain error grows monotonically in range (§8.2) and the FP32
+    // init column dominates the low-precision one at every step
+    for step in 1..=8u32 {
+        let low = sweep.cell(step, 1).unwrap().latency;
+        let f32i = sweep.cell(step, 2).unwrap().latency;
+        assert!(f32i > low, "step {step}: {f32i:e} <= {low:e}");
+    }
+}
+
+#[test]
+fn fp8_probes_are_device_gated_and_run_on_hopper() {
+    let fp8 = Workload::parse_spec("numeric profile fp8e4m3 f32 mul fp32").unwrap();
+    // rejected on every measured device, valid on the projected Hopper
+    for dev in ["a100", "rtx3070ti", "rtx2080ti"] {
+        let err = Plan::new(fp8).device(dev).point(1, 1).compile().unwrap_err();
+        assert!(err.contains("FP8"), "{dev}: {err}");
+    }
+    let plan = Plan::new(fp8).device("hopper-projected").point(1, 1).compile().unwrap();
+    let r = plan.run(&SimRunner, 1).unwrap();
+    let e4m3 = r.profile().unwrap().mean_abs_err;
+    assert!(e4m3 > 0.0);
+    // 2 mantissa bits (e5m2) err > 3 bits (e4m3)
+    let e5m2_w = Workload::parse_spec("numeric profile fp8e5m2 f32 mul fp32").unwrap();
+    let plan = Plan::new(e5m2_w).device("hopper-projected").point(1, 1).compile().unwrap();
+    let e5m2 = plan.run(&SimRunner, 1).unwrap().profile().unwrap().mean_abs_err;
+    assert!(e5m2 > e4m3, "{e5m2:e} vs {e4m3:e}");
+}

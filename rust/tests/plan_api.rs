@@ -263,6 +263,52 @@ fn gemm_plan_round_trip_and_cache() {
 }
 
 #[test]
+fn numeric_plan_cache_hit_is_observable_via_metrics() {
+    let server = start();
+    let addr = server.addr();
+
+    // a §8 probe as a plan: first POST computes on the runner's numeric
+    // leg, the identical re-POST is a per-unit cache hit
+    let body = r#"{"workload":"numeric profile bf16 f32 acc fp32","device":"a100",
+                   "points":[[1,1]],"backend":"native"}"#;
+    let (status, j1) = post_plan(addr, body);
+    assert_eq!(status, 200, "{j1}");
+    assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
+    let units = j1.get("units").unwrap().as_arr().unwrap();
+    assert_eq!(units.len(), 1);
+    let result = units[0].get("result").unwrap();
+    assert_eq!(result.get_str("unit"), Some("numeric"));
+    assert_eq!(result.get_str("op"), Some("acc"));
+    // Table 12's init_FP32 accumulation row: ~1.1e-3
+    let err = result.get_f64("mean_abs_err").unwrap();
+    assert!((1e-4..1e-2).contains(&err), "{err:e}");
+    assert!(result.get_str("key").is_some(), "per-unit content address: {result}");
+
+    let (_, j2) = post_plan(addr, body);
+    assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true), "{j2}");
+    let units2 = j2.get("units").unwrap().as_arr().unwrap();
+    assert_eq!(units2[0].get_str("origin"), Some("memory"), "{j2}");
+
+    // /v1/metrics proves it: exactly one plan compute, >= 1 cache hit
+    let (_, m) = get(addr, "/v1/metrics");
+    let plan_stat = m.get("experiments").unwrap().get("plan").unwrap();
+    assert_eq!(plan_stat.get_u64("computes"), Some(1), "{m}");
+    assert!(m.get("cache").unwrap().get_u64("hits").unwrap() >= 1, "{m}");
+
+    // a probe differing only in init is a distinct content address
+    let low = r#"{"workload":"numeric profile bf16 f32 acc low","device":"a100",
+                  "points":[[1,1]],"backend":"native"}"#;
+    let (_, j3) = post_plan(addr, low);
+    let units3 = j3.get("units").unwrap().as_arr().unwrap();
+    assert_eq!(units3[0].get_str("origin"), Some("computed"), "{j3}");
+    let (_, m2) = get(addr, "/v1/metrics");
+    let plan_stat2 = m2.get("experiments").unwrap().get("plan").unwrap();
+    assert_eq!(plan_stat2.get_u64("computes"), Some(2), "{m2}");
+
+    server.stop();
+}
+
+#[test]
 fn plan_rerun_hits_the_per_unit_cache() {
     let server = start();
     let addr = server.addr();

@@ -75,7 +75,7 @@ fn healthz_and_registry_endpoints() {
     let (status, j) = get(addr, "/v1/devices");
     assert_eq!(status, 200);
     let devices = j.get("devices").unwrap().as_arr().unwrap();
-    assert_eq!(devices.len(), 3);
+    assert_eq!(devices.len(), 4);
     assert!(devices.iter().any(|d| d.get_str("name") == Some("a100")));
 
     let (status, j) = get(addr, "/v1/nope");

@@ -9,7 +9,7 @@
 //! At run time, [`PjRtClient::cpu`] (the only entry point into the rest
 //! of the API) always fails with an actionable message, which sends
 //! every caller down the same native-backend fallback path as the
-//! feature-off stub: `ArtifactStore::open` errors, `Backend::auto()`
+//! feature-off stub: `ArtifactStore::open` errors, `runner_for(Auto)`
 //! picks native, and the PJRT integration tests skip themselves.
 
 use std::fmt;

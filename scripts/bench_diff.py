@@ -16,6 +16,13 @@ by more than --threshold percent (default 25). Plans below --min-share
 percent of the baseline campaign (default 0.5) are reported but never
 fail: their wall times are noise-dominated.
 
+Plan rows must match one-to-one: a plan present in only one of the two
+files fails the gate with a per-plan message naming it (a baseline-only
+row means the campaign silently lost coverage; a new-only row means the
+baseline is stale and must be refreshed to start gating it). Pass
+--allow-new-plans to downgrade new-only rows to notices while a PR that
+*adds* plans is in flight.
+
 A baseline with `"bootstrap": true` or an empty plan list passes with a
 notice — refresh it with the one-liner:
 
@@ -54,7 +61,7 @@ def load_plans(path):
     return doc, plans
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline")
     ap.add_argument("new")
@@ -66,7 +73,10 @@ def main():
                          "(percent) never fail the gate (default 0.5)")
     ap.add_argument("--absolute", action="store_true",
                     help="compare raw wall_ms (no median-drift normalization)")
-    args = ap.parse_args()
+    ap.add_argument("--allow-new-plans", action="store_true",
+                    help="report plans missing from the baseline as notices "
+                         "instead of failures (for PRs that add plans)")
+    args = ap.parse_args(argv)
 
     base_doc, base = load_plans(args.baseline)
     _, new = load_plans(args.new)
@@ -92,7 +102,11 @@ def main():
     print(f"{'plan':<16} {'base ms':>10} {'new ms':>10} {'vs median':>10}")
     for pid in sorted(base):
         if pid not in new:
-            regressions.append(f"{pid}: present in baseline but missing from the new run")
+            regressions.append(
+                f"{pid}: present in the baseline but missing from the new run — "
+                f"the campaign lost this plan (removed or renamed?); if "
+                f"intentional, refresh the baseline")
+            print(f"{pid:<16} {base[pid]:>10.1f} {'MISSING':>10}   MISSING-IN-NEW")
             continue
         if base[pid] <= 0:
             continue
@@ -106,13 +120,19 @@ def main():
                 regressions.append(f"{pid}: +{pct:.1f}% beyond the campaign's median drift")
         print(f"{pid:<16} {base[pid]:>10.1f} {new[pid]:>10.1f} {pct:>+9.1f}%{flag}")
     for pid in sorted(set(new) - set(base)):
-        notes.append(f"{pid}: new plan not in the baseline (refresh to start gating it)")
+        msg = (f"{pid}: present in the new run but missing from the baseline — "
+               f"refresh the baseline to start gating it")
+        if args.allow_new_plans:
+            notes.append(msg)
+        else:
+            regressions.append(msg)
+            print(f"{pid:<16} {'MISSING':>10} {new[pid]:>10.1f}   MISSING-IN-BASELINE")
 
     for note in notes:
         print(f"note: {note}")
     if regressions:
-        print(f"\nbench_diff: {len(regressions)} regression(s) beyond "
-              f"+{args.threshold:.0f}%:", file=sys.stderr)
+        print(f"\nbench_diff: {len(regressions)} failure(s) "
+              f"(threshold +{args.threshold:.0f}%):", file=sys.stderr)
         for r in regressions:
             print(f"  {r}", file=sys.stderr)
         print(f"\nIf intentional, refresh the baseline:\n    {REFRESH}", file=sys.stderr)

@@ -1,0 +1,138 @@
+"""Tests for scripts/bench_diff.py — the per-plan wall-time gate.
+
+Runs with the standard library only:
+
+    python3 -m unittest discover -s scripts/tests -v
+
+(pytest collects these too, via unittest integration).
+"""
+
+import contextlib
+import importlib.util
+import io
+import json
+import os
+import tempfile
+import unittest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_diff",
+    os.path.join(os.path.dirname(__file__), "..", "bench_diff.py"),
+)
+bench_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_diff)
+
+
+def summary(plans, **extra):
+    doc = {"schema": "tcbench/bench_summary/v1", "plans": [
+        {"id": pid, "wall_ms": ms} for pid, ms in plans.items()
+    ]}
+    doc.update(extra)
+    return doc
+
+
+class BenchDiffTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def write(self, name, doc):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return path
+
+    def run_diff(self, base_doc, new_doc, *flags):
+        base = self.write("base.json", base_doc)
+        new = self.write("new.json", new_doc)
+        out, err = io.StringIO(), io.StringIO()
+        with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+            try:
+                rc = bench_diff.main([base, new, *flags])
+            except SystemExit as e:  # load_plans exits directly on bad input
+                rc = e.code
+        return rc, out.getvalue(), err.getvalue()
+
+    def test_identical_runs_pass(self):
+        doc = summary({"t3": 100.0, "t12": 50.0, "gemm_pipeline": 200.0})
+        rc, out, _ = self.run_diff(doc, doc)
+        self.assertEqual(rc, 0)
+        self.assertIn("no per-plan regressions", out)
+
+    def test_uniform_machine_drift_cancels(self):
+        base = summary({"t3": 100.0, "t12": 50.0, "fig17": 200.0})
+        new = summary({"t3": 300.0, "t12": 150.0, "fig17": 600.0})  # 3x everywhere
+        rc, _, _ = self.run_diff(base, new)
+        self.assertEqual(rc, 0)
+
+    def test_single_plan_regression_fails(self):
+        base = summary({"t3": 100.0, "t12": 100.0, "fig17": 100.0})
+        new = summary({"t3": 100.0, "t12": 100.0, "fig17": 200.0})
+        rc, _, err = self.run_diff(base, new)
+        self.assertEqual(rc, 1)
+        self.assertIn("fig17", err)
+        self.assertIn("median drift", err)
+
+    def test_row_only_in_baseline_fails_with_named_plan(self):
+        base = summary({"t3": 100.0, "numeric_chain_tf32": 40.0})
+        new = summary({"t3": 100.0})
+        rc, out, err = self.run_diff(base, new)
+        self.assertEqual(rc, 1)
+        self.assertIn("numeric_chain_tf32", err)
+        self.assertIn("missing from the new run", err)
+        self.assertIn("MISSING-IN-NEW", out)
+
+    def test_row_only_in_new_run_fails_with_named_plan(self):
+        base = summary({"t3": 100.0})
+        new = summary({"t3": 100.0, "numeric_profile_bf16": 12.0})
+        rc, out, err = self.run_diff(base, new)
+        self.assertEqual(rc, 1)
+        self.assertIn("numeric_profile_bf16", err)
+        self.assertIn("missing from the baseline", err)
+        self.assertIn("refresh the baseline", err)
+        self.assertIn("MISSING-IN-BASELINE", out)
+
+    def test_allow_new_plans_downgrades_to_notice(self):
+        base = summary({"t3": 100.0})
+        new = summary({"t3": 100.0, "numeric_profile_bf16": 12.0})
+        rc, out, _ = self.run_diff(base, new, "--allow-new-plans")
+        self.assertEqual(rc, 0)
+        self.assertIn("note: numeric_profile_bf16", out)
+
+    def test_bootstrap_baseline_passes_with_notice(self):
+        base = summary({}, bootstrap=True)
+        new = summary({"t3": 100.0, "numeric_chain_tf32": 40.0})
+        rc, out, _ = self.run_diff(base, new)
+        self.assertEqual(rc, 0)
+        self.assertIn("bootstrap", out)
+
+    def test_tiny_plans_never_fail(self):
+        # a plan under --min-share of the campaign is noise-dominated
+        base = summary({"t3": 1000.0, "tiny": 1.0})
+        new = summary({"t3": 1000.0, "tiny": 10.0})
+        rc, out, _ = self.run_diff(base, new)
+        self.assertEqual(rc, 0)
+        self.assertIn("ignored", out)
+
+    def test_bad_schema_is_exit_2(self):
+        base = self.write("base.json", {"schema": "something/else", "plans": []})
+        new = self.write("new.json", summary({"t3": 1.0}))
+        out, err = io.StringIO(), io.StringIO()
+        with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+            with self.assertRaises(SystemExit) as ctx:
+                bench_diff.main([base, new])
+        self.assertEqual(ctx.exception.code, 2)
+        self.assertIn("unexpected schema", err.getvalue())
+
+    def test_absolute_mode_skips_normalization(self):
+        base = summary({"t3": 100.0, "t12": 100.0, "fig17": 100.0})
+        new = summary({"t3": 150.0, "t12": 150.0, "fig17": 150.0})  # uniform +50%
+        rc, _, _ = self.run_diff(base, new)
+        self.assertEqual(rc, 0)  # normalized: cancels
+        rc, _, err = self.run_diff(base, new, "--absolute")
+        self.assertEqual(rc, 1)  # absolute: every plan +50%
+        self.assertIn("t3", err)
+
+
+if __name__ == "__main__":
+    unittest.main()
