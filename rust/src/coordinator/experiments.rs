@@ -54,8 +54,11 @@ pub fn mma_table(device: &Device, rows: &[PaperMmaRow], title: &str) -> String {
                         .sweep()
                         .compile()
                         .expect("paper table rows are valid workloads");
-                    // units run serially: the rows themselves are the
-                    // parallel axis here
+                    // units run serially: the rows are the parallel
+                    // axis here, and each row's sweep unit fans its
+                    // cells out through the cell engine (hitting the
+                    // cells its completion probe and fixed points just
+                    // simulated instead of redoing them)
                     let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");
                     RowData {
                         cmpl: res.completion().expect("completion unit requested"),

@@ -152,6 +152,17 @@ pub struct ExperimentRun {
 /// reference out; the PJRT runner serializes its numeric leg internally
 /// because the artifact store is a single stateful compilation cache).
 /// The old `numeric: bool` dispatch fork is gone.
+///
+/// Below the experiment jobs, the cell-level execution engine
+/// deduplicates the campaign's overlapping simulations through the
+/// process-wide [`crate::workload::CellCache`]: Fig. 6 *is* the sweep of
+/// Table 3's BF16 row, Fig. 11 is Table 6's small-k row, and every
+/// table point re-appears in its own sweep. A cell is simulated once
+/// and every later requester hits the cache; two experiments racing on
+/// the *same still-cold* cell may both simulate it (the cache
+/// deliberately has no per-cell single-flight — results are
+/// deterministic and the simulation gate bounds the cost), so the
+/// dedup is best-effort during the cold start and total afterwards.
 pub fn run_all(runner: &dyn Runner) -> Result<Vec<ExperimentRun>> {
     use std::time::Instant;
 
@@ -168,8 +179,12 @@ pub fn run_all(runner: &dyn Runner) -> Result<Vec<ExperimentRun>> {
         .collect();
     // Cap the outer pool well below the core count: the table
     // experiments fan out over `run_parallel(default_threads())`
-    // internally, and two uncapped levels would oversubscribe the CPU
-    // quadratically (outer x inner threads).
+    // internally (and their sweep units fan cell jobs out once more),
+    // and two uncapped levels would oversubscribe the CPU
+    // quadratically (outer x inner threads). The inner levels are
+    // short-lived scoped threads, so the transient oversubscription of
+    // the third (cell) level is noise next to the simulations it
+    // parallelizes.
     let outer_threads = default_threads().min(4);
     let mut runs = Vec::with_capacity(EXPERIMENTS.len());
     for (id, report, wall_ms) in run_parallel(jobs, outer_threads) {

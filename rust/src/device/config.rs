@@ -65,7 +65,7 @@ pub struct MmaTiming {
 
 /// Vendor peak dense throughput per data type, FMA/clk/SM
 /// (captions of Tables 3/4; [30]/[31] whitepapers).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PeakTable {
     pub fp16_fp32: u64,
     pub fp16_fp16: u64,
@@ -99,8 +99,11 @@ impl PeakTable {
     }
 }
 
-/// A calibrated GPU device.
-#[derive(Debug, Clone)]
+/// A calibrated GPU device. `PartialEq` is load-bearing: the cell
+/// cache keys cells by device *name*, so the workload layer compares a
+/// device against its registry entry at run time and routes ad-hoc or
+/// modified devices to the uncached measurement path.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Device {
     pub name: &'static str,
     pub product: &'static str,

@@ -30,11 +30,14 @@
 //!   naive vs permuted shared-memory layout), parameterized over tile
 //!   shape, warp grid, `cp.async` stage depth and 16-bit element type.
 //! - [`workload`] — the unified workload API: one typed [`Workload`]
-//!   enum for all six benchmarked families (the five instruction kinds
-//!   plus the Appendix-A `gemm` pipeline), a `BenchPlan` builder
-//!   compiling to runnable units, and the `Runner` backend seam — the
-//!   single execution path behind the CLI, the coordinator experiments
-//!   and tcserved's `POST /v1/plan`.
+//!   enum for all seven benchmarked families (the five instruction
+//!   kinds, the Appendix-A `gemm` pipeline and the §8 `numeric`
+//!   probes), a `BenchPlan` builder compiling to runnable units, the
+//!   `Runner` backend seam, and the cell-level execution engine
+//!   (per-cell scheduling over the worker pool, backed by the
+//!   process-wide content-addressed cell cache) — the single execution
+//!   path behind the CLI, the coordinator experiments and tcserved's
+//!   `POST /v1/plan`.
 //! - [`coordinator`] — campaign orchestration: every paper table/figure
 //!   is a registered experiment run by a scoped-thread worker pool.
 //! - [`report`]   — table/figure renderers (text + machine-readable

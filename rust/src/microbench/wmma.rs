@@ -101,7 +101,7 @@ pub fn measure_wmma(
 ) -> Measurement {
     let program = wmma_program(device, shape, ab, cd, ilp, ITERS);
     let per_iter_fmas = program.fmas_per_iteration() * warps as u64;
-    let results = SmSim::new(device, vec![program; warps as usize]).run();
+    let results = SmSim::replicated(device, program, warps).with_steady_state_exit().run();
     let latency = results.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
     Measurement { warps, ilp, latency, throughput: per_iter_fmas as f64 / latency }
 }

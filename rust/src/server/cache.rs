@@ -18,15 +18,10 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
 
-/// 64-bit FNV-1a — the content-address hash (stable, dependency-free).
-pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
+/// 64-bit FNV-1a (re-exported from [`crate::util`] — the same hash keys
+/// the in-process cell cache, so both cache layers share one content
+/// address function).
+pub use crate::util::fnv1a;
 
 /// The content address of one cacheable computation.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]

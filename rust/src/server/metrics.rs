@@ -1,4 +1,5 @@
-//! tcserved observability: request counters, cache hit rates and
+//! tcserved observability: request counters, cache hit rates (both the
+//! per-unit result cache and the process-wide cell cache) and
 //! per-experiment compute cost, exported as JSON at `/v1/metrics`.
 
 use std::collections::BTreeMap;
@@ -140,6 +141,20 @@ impl Metrics {
                     ("evictions", Json::num(cache.evictions as f64)),
                 ]),
             ),
+            // the cell-level execution engine's memoization layer —
+            // process-wide (it outlives and is shared across AppStates),
+            // counting single-cell simulations rather than plan units
+            ("cell_cache", {
+                let cells = crate::workload::cell_cache_stats();
+                Json::obj(vec![
+                    ("hits", Json::num(cells.hits as f64)),
+                    ("misses", Json::num(cells.misses as f64)),
+                    ("evictions", Json::num(cells.evictions as f64)),
+                    ("cells_simulated", Json::num(cells.cells_simulated as f64)),
+                    ("entries", Json::num(cells.entries as f64)),
+                    ("capacity", Json::num(cells.capacity as f64)),
+                ])
+            }),
             ("experiments", experiments),
         ])
     }
@@ -183,6 +198,13 @@ mod tests {
         let t3 = j.get("experiments").unwrap().get("t3").unwrap();
         assert_eq!(t3.get_u64("computes"), Some(2));
         assert!((t3.get_f64("mean_ms").unwrap() - 15.0).abs() < 1e-9);
+        // the cell-cache section is present with every counter (the
+        // values are process-global, so only shape is asserted here;
+        // the router tests assert traffic)
+        let cells = j.get("cell_cache").unwrap();
+        for field in ["hits", "misses", "evictions", "cells_simulated", "entries", "capacity"] {
+            assert!(cells.get_u64(field).is_some(), "cell_cache.{field} missing");
+        }
         // the whole document serializes to valid JSON
         assert!(Json::parse(&j.to_string()).is_ok());
     }

@@ -667,6 +667,49 @@ mod tests {
     }
 
     #[test]
+    fn sweep_then_point_reports_cell_cache_hits() {
+        use crate::workload::{CellCache, ExecPoint};
+        let s = state();
+        // the sweep unit simulates (among others) cell (4,2) of this
+        // workload through the process-wide cell cache…
+        let sweep_body = r#"{"workload":"mma.sp bf16 f32 m16n8k32","device":"rtx3070ti",
+                             "sweep":true,"backend":"native"}"#;
+        let r = post(&s, "/v1/plan", sweep_body);
+        assert_eq!(r.status, 200, "{}", r.body);
+        // deterministic population check (the counters below are
+        // process-global, so concurrent tests also move them)
+        assert!(CellCache::global().contains(
+            "mma.sp bf16 f32 m16n8k32",
+            "rtx3070ti",
+            ExecPoint::new(4, 2),
+            "sim"
+        ));
+        let m = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let hits_before = m.get("cell_cache").unwrap().get_u64("hits").unwrap();
+
+        // …so the later point unit — a *miss* in the per-unit result
+        // cache (different unit token) — is a cell-cache hit and costs
+        // no simulation
+        let point_body = r#"{"workload":"mma.sp bf16 f32 m16n8k32","device":"rtx3070ti",
+                             "points":[[4,2]],"backend":"native"}"#;
+        let r2 = post(&s, "/v1/plan", point_body);
+        assert_eq!(r2.status, 200, "{}", r2.body);
+        let j2 = Json::parse(&r2.body).unwrap();
+        let units = j2.get("units").unwrap().as_arr().unwrap();
+        assert_eq!(units[0].get_str("origin"), Some("computed"), "{}", r2.body);
+
+        let m = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let cells = m.get("cell_cache").unwrap();
+        let hits_after = cells.get_u64("hits").unwrap();
+        assert!(
+            hits_after > hits_before,
+            "point after sweep must hit the cell cache ({hits_before} -> {hits_after})"
+        );
+        // the sweep itself simulated a full grid's worth of cells
+        assert!(cells.get_u64("cells_simulated").unwrap() >= 48);
+    }
+
+    #[test]
     fn plan_endpoint_accepts_gemm_specs() {
         let s = state();
         let body = r#"{"workload":"gemm pipeline bf16 f32 256 128x128x32","device":"a100",

@@ -1,9 +1,24 @@
 //! The tcsim cycle loop: sub-core schedulers, scoreboards, token-bucket
 //! Tensor-Core engines, LSUs, global-memory pipe, barriers, clocks.
 
+use std::sync::Arc;
+
 use crate::device::Device;
 
 use super::program::{Op, WarpProgram};
+
+/// Steady-state early exit: a warp counts as converged once it has at
+/// least this many iteration marks (deep enough that the reported
+/// `latency_per_iteration` window is dominated by settled iterations)…
+const STEADY_MIN_MARKS: usize = 56;
+/// …and its mean per-iteration latency over the trailing window of this
+/// many marks matches the window before it…
+const STEADY_WINDOW: usize = 12;
+/// …within this relative tolerance. The window length is divisible by
+/// 2, 3, 4 and 6 so the token-bucket engine's burst/stall oscillations
+/// (period 2–6 at the paper's ILP depths) average identically in both
+/// windows instead of aliasing.
+const STEADY_REL_TOL: f64 = 5e-4;
 
 /// Per-warp measurement output.
 #[derive(Debug, Clone)]
@@ -133,7 +148,10 @@ impl WarpState {
 /// even distribution).
 pub struct SmSim<'d> {
     device: &'d Device,
-    programs: Vec<WarpProgram>,
+    /// Per-warp traces. `Arc`-shared: the microbenchmark harness runs
+    /// the *same* unrolled program on every warp, and an ITERS-deep
+    /// trace deep-cloned 32 times used to dominate setup cost.
+    programs: Vec<Arc<WarpProgram>>,
     tc_engines: Vec<Engine>,
     fpu_engines: Vec<Engine>,
     lsus: Vec<Lsu>,
@@ -146,10 +164,30 @@ pub struct SmSim<'d> {
     now: u64,
     /// Hard cap to catch deadlocked programs in tests.
     max_cycles: u64,
+    /// Stop simulating once every warp's per-iteration latency has
+    /// converged (see [`SmSim::with_steady_state_exit`]).
+    steady_exit: bool,
+    /// Total iteration marks at the last convergence check (so the
+    /// check runs once per new mark, not once per cycle).
+    marks_at_last_check: usize,
 }
 
 impl<'d> SmSim<'d> {
     pub fn new(device: &'d Device, programs: Vec<WarpProgram>) -> Self {
+        Self::from_shared(device, programs.into_iter().map(Arc::new).collect())
+    }
+
+    /// Run the same program on `warps` warps without deep-cloning the
+    /// trace: every warp shares one `Arc` of it. This is the
+    /// microbenchmark configuration (§4: identical loops on every
+    /// resident warp).
+    pub fn replicated(device: &'d Device, program: WarpProgram, warps: u32) -> Self {
+        let shared = Arc::new(program);
+        Self::from_shared(device, (0..warps).map(|_| Arc::clone(&shared)).collect())
+    }
+
+    /// General form: warp `i` runs `programs[i]`, programs may alias.
+    pub fn from_shared(device: &'d Device, programs: Vec<Arc<WarpProgram>>) -> Self {
         assert!(!programs.is_empty(), "need at least one warp");
         let warps: Vec<WarpState> = programs.iter().map(|_| WarpState::new()).collect();
         Self {
@@ -170,12 +208,46 @@ impl<'d> SmSim<'d> {
             programs,
             now: 0,
             max_cycles: 200_000_000,
+            steady_exit: false,
+            marks_at_last_check: 0,
         }
     }
 
     pub fn with_max_cycles(mut self, max: u64) -> Self {
         self.max_cycles = max;
         self
+    }
+
+    /// Stop the cycle loop early once **every** warp's
+    /// `latency_per_iteration` has converged: at least
+    /// `STEADY_MIN_MARKS` marks, and the mean mark-to-mark delta over
+    /// the trailing `STEADY_WINDOW` marks within `STEADY_REL_TOL` of
+    /// the window before it. Returned `iter_marks` are then a truncated
+    /// (but steady-state) prefix.
+    ///
+    /// Only meaningful for uniform measurement loops whose result is
+    /// `latency_per_iteration()` — programs measured by *total* cycles
+    /// (the GEMM kernels read `finish`) must run to completion and keep
+    /// this off. Programs with fewer than `STEADY_MIN_MARKS`
+    /// iterations can never satisfy the bound, so short-ITERS runs are
+    /// exhaustive with or without the flag.
+    pub fn with_steady_state_exit(mut self) -> Self {
+        self.steady_exit = true;
+        self
+    }
+
+    /// Has every warp's trailing-window iteration latency converged?
+    fn steady_state_reached(&self) -> bool {
+        self.warps.iter().all(|st| {
+            let n = st.iter_marks.len();
+            if n < STEADY_MIN_MARKS || n < 2 * STEADY_WINDOW + 1 {
+                return false;
+            }
+            let recent = (st.iter_marks[n - 1] - st.iter_marks[n - 1 - STEADY_WINDOW]) as f64;
+            let prior = (st.iter_marks[n - 1 - STEADY_WINDOW]
+                - st.iter_marks[n - 1 - 2 * STEADY_WINDOW]) as f64;
+            prior > 0.0 && ((recent - prior) / prior).abs() <= STEADY_REL_TOL
+        })
     }
 
     fn subcore_of(&self, warp: usize) -> usize {
@@ -403,6 +475,7 @@ impl<'d> SmSim<'d> {
             }
             // clock64() reads are free: drain any IterMarks first so a
             // mark never steals an issue slot from a real instruction.
+            let mut marks_total = 0;
             for w in 0..self.warps.len() {
                 let st = &mut self.warps[w];
                 while st.pc < self.programs[w].instrs.len()
@@ -413,9 +486,16 @@ impl<'d> SmSim<'d> {
                     st.finish = st.finish.max(self.now);
                     st.pc += 1;
                 }
+                marks_total += st.iter_marks.len();
             }
             if self.all_done() {
                 break;
+            }
+            if self.steady_exit && marks_total != self.marks_at_last_check {
+                self.marks_at_last_check = marks_total;
+                if self.steady_state_reached() {
+                    break;
+                }
             }
             let mut issued_any = false;
             let mut next_event = u64::MAX;
@@ -602,6 +682,73 @@ mod tests {
         b.iter_mark();
         let res = SmSim::new(&d, vec![b.build()]).run();
         assert!(res[0].iter_marks[0] > d.gmem_latency as u64);
+    }
+
+    #[test]
+    fn replicated_matches_deep_cloned_programs() {
+        // Arc-sharing the trace is a pure setup optimization: the
+        // schedule must be identical to per-warp deep clones.
+        let d = a100();
+        let cloned = SmSim::new(&d, vec![mma_loop(64, 2, 8, 24); 8]).run();
+        let shared = SmSim::replicated(&d, mma_loop(64, 2, 8, 24), 8).run();
+        assert_eq!(cloned.len(), shared.len());
+        for (a, b) in cloned.iter().zip(&shared) {
+            assert_eq!(a.iter_marks, b.iter_marks, "warp {}", a.warp_id);
+            assert_eq!(a.finish, b.finish, "warp {}", a.warp_id);
+        }
+    }
+
+    #[test]
+    fn steady_state_exit_truncates_long_runs_without_moving_the_answer() {
+        let d = a100();
+        let full = SmSim::new(&d, vec![mma_loop(96, 2, 8, 24)]).run();
+        let early = SmSim::new(&d, vec![mma_loop(96, 2, 8, 24)])
+            .with_steady_state_exit()
+            .run();
+        let n = early[0].iter_marks.len();
+        assert!(n < 96, "exit must fire before the full 96 iterations, got {n}");
+        assert!(n >= 56, "exit must not fire before the minimum mark count, got {n}");
+        let (f, e) = (full[0].latency_per_iteration(), early[0].latency_per_iteration());
+        assert!((f - e).abs() / f < 5e-3, "full {f} vs early {e}");
+    }
+
+    #[test]
+    fn steady_state_exit_never_fires_on_short_programs() {
+        // Fewer iterations than the convergence minimum: the run is
+        // exhaustive, flag or no flag.
+        let d = a100();
+        for iters in [8usize, 24, 55] {
+            let res = SmSim::new(&d, vec![mma_loop(iters, 1, 8, 24)])
+                .with_steady_state_exit()
+                .run();
+            assert_eq!(res[0].iter_marks.len(), iters, "iters {iters}");
+        }
+    }
+
+    #[test]
+    fn steady_state_exit_waits_for_every_warp() {
+        // Two warps on different sub-cores with different loop depths:
+        // the heavier warp converges later, and the light one must not
+        // trigger the exit alone (its marks keep accumulating past the
+        // heavy warp's convergence point, proving the all-warps gate).
+        let d = a100();
+        let res = SmSim::from_shared(
+            &d,
+            vec![
+                std::sync::Arc::new(mma_loop(96, 1, 8, 24)),
+                std::sync::Arc::new(mma_loop(96, 4, 8, 24)),
+            ],
+        )
+        .with_steady_state_exit()
+        .run();
+        for r in &res {
+            assert!(
+                r.iter_marks.len() >= 56,
+                "warp {} stopped at {} marks",
+                r.warp_id,
+                r.iter_marks.len()
+            );
+        }
     }
 
     #[test]

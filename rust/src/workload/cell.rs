@@ -1,0 +1,365 @@
+//! The process-wide **cell cache** — content-addressed memoization of
+//! single-cell simulations.
+//!
+//! A *cell* is the atom of every timing measurement: one (workload,
+//! device, exec point, backend) simulation producing a latency and a
+//! throughput. The same cell is requested from many directions — a
+//! sweep unit covers 48 of them, a later `Point(4,2)` unit re-asks for
+//! one, `completion_latency` is cell (1,1), and the 19 experiments of
+//! `repro all` overlap heavily (Fig. 6 *is* the sweep of Table 3's BF16
+//! row) — so the cache sits below every one of those paths: points,
+//! sweeps and completion units all read through
+//! [`Workload::measure_cached`](super::Workload::measure_cached).
+//!
+//! Keys are the canonical string
+//! `cell|backend=<backend>|device=<name>|spec=<workload spec>|w=<warps>|i=<ilp>`
+//! hashed with the shared [`fnv1a`] content address. The workload spec
+//! carries *every* workload parameter (that is the
+//! [`Workload::to_spec`](super::Workload::to_spec) contract) and the
+//! backend coordinate is the runner's
+//! [`Runner::timing_backend`](super::Runner::timing_backend) — the
+//! simulator's name for every current backend, because timing cells are
+//! simulator-measured everywhere — so the two cache layers share one
+//! key discipline while backends that ever measure timing on their own
+//! datapath get their own cells. Devices are keyed by registry name —
+//! `measure_cached` verifies the device is bit-for-bit its registry
+//! entry and measures ad-hoc devices uncached instead of letting them
+//! alias another device's cells.
+//!
+//! The map is sharded 16 ways (hash-picked shard, one mutex each) so
+//! parallel sweep cells do not convoy on a single lock; simulations run
+//! *outside* the lock. Concurrent first requests for the same cell may
+//! therefore both simulate (last insert wins) — the simulator is
+//! deterministic, so both compute identical bits and correctness is
+//! unaffected; tcserved's single-flight layer already coalesces the
+//! request-level stampedes that matter. Capacity is bounded per shard
+//! with oldest-use eviction, and hit/miss/eviction/simulation counters
+//! are exported at `/v1/metrics` (`cell_cache`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+use crate::coordinator::default_threads;
+use crate::microbench::Measurement;
+use crate::util::fnv1a;
+
+use super::ExecPoint;
+
+/// Number of independently locked shards (hash-picked).
+const SHARDS: usize = 16;
+
+/// Bounds concurrently *running* cell simulations process-wide. Nested
+/// pool fan-outs (campaign jobs x table rows x sweep cells) can spawn
+/// far more workers than cores; gating the CPU-bound simulate calls at
+/// the machine width turns the excess into cheap condvar sleepers
+/// instead of scheduler thrash. Never held across another permit
+/// acquisition (simulations do not recurse into the cache), so it
+/// cannot deadlock.
+struct SimGate {
+    permits: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl SimGate {
+    fn global() -> &'static SimGate {
+        static GATE: OnceLock<SimGate> = OnceLock::new();
+        GATE.get_or_init(|| SimGate {
+            permits: Mutex::new(default_threads()),
+            freed: Condvar::new(),
+        })
+    }
+
+    /// Run `f` while holding one permit; the permit is returned even if
+    /// `f` panics (callers above catch_unwind must not strand permits).
+    fn run<T>(&self, f: impl FnOnce() -> T) -> T {
+        struct Permit<'a>(&'a SimGate);
+        impl Drop for Permit<'_> {
+            fn drop(&mut self) {
+                *self.0.permits.lock().unwrap() += 1;
+                self.0.freed.notify_one();
+            }
+        }
+        let mut permits = self.permits.lock().unwrap();
+        while *permits == 0 {
+            permits = self.freed.wait(permits).unwrap();
+        }
+        *permits -= 1;
+        drop(permits);
+        let _permit = Permit(self);
+        f()
+    }
+}
+
+/// Default cell capacity of the process-wide cache. A full sweep is 48
+/// cells and `repro all` touches a few hundred distinct cells, so the
+/// default never evicts in practice while still bounding a pathological
+/// spec-enumerating client.
+pub const DEFAULT_CELL_CAPACITY: usize = 16_384;
+
+struct CellEntry {
+    /// Full canonical key, kept to rule out FNV collisions serving the
+    /// wrong cell (a colliding key recomputes instead).
+    canonical: String,
+    latency: f64,
+    throughput: f64,
+    last_used: u64,
+}
+
+/// Occupancy and traffic counters, exported at `/v1/metrics`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellCacheStats {
+    pub entries: usize,
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Simulations actually run (== misses unless two threads raced on
+    /// the same cold cell, in which case both simulate once).
+    pub cells_simulated: u64,
+}
+
+/// Sharded, content-addressed cache of cell simulations.
+pub struct CellCache {
+    shards: Vec<Mutex<HashMap<u64, CellEntry>>>,
+    per_shard_capacity: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    simulated: AtomicU64,
+}
+
+impl CellCache {
+    /// A cache holding at most ~`capacity` cells (rounded up to a
+    /// per-shard bound; at least one cell per shard).
+    pub fn new(capacity: usize) -> CellCache {
+        CellCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            per_shard_capacity: capacity.div_ceil(SHARDS).max(1),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            simulated: AtomicU64::new(0),
+        }
+    }
+
+    /// The one process-wide instance every execution path reads through.
+    pub fn global() -> &'static CellCache {
+        static GLOBAL: OnceLock<CellCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| CellCache::new(DEFAULT_CELL_CAPACITY))
+    }
+
+    /// The canonical (pre-hash) content address of one cell.
+    pub fn canonical_key(spec: &str, device: &str, point: ExecPoint, backend: &str) -> String {
+        format!(
+            "cell|backend={backend}|device={device}|spec={spec}|w={}|i={}",
+            point.warps, point.ilp
+        )
+    }
+
+    /// Serve the cell from cache or run `simulate` and memoize it. The
+    /// returned measurement is bit-identical to a cold `simulate()` call
+    /// (the cache stores the raw f64s).
+    pub fn get_or_simulate(
+        &self,
+        spec: &str,
+        device: &str,
+        point: ExecPoint,
+        backend: &str,
+        simulate: impl FnOnce() -> Measurement,
+    ) -> Measurement {
+        let canonical = Self::canonical_key(spec, device, point, backend);
+        let hash = fnv1a(canonical.as_bytes());
+        let shard = &self.shards[(hash % SHARDS as u64) as usize];
+
+        let mut collision = false;
+        {
+            let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+            let mut map = shard.lock().unwrap();
+            if let Some(e) = map.get_mut(&hash) {
+                if e.canonical == canonical {
+                    e.last_used = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Measurement {
+                        warps: point.warps,
+                        ilp: point.ilp,
+                        latency: e.latency,
+                        throughput: e.throughput,
+                    };
+                }
+                // FNV collision between two live cells: serve the other
+                // cell's slot untouched and recompute this one uncached.
+                collision = true;
+            }
+        }
+        // Miss path: simulate outside the shard lock so a 32-warp cell
+        // does not serialize every other cell hashed into its shard,
+        // but inside the process-wide gate so nested pool fan-outs
+        // cannot run more CPU-bound simulations than the machine has
+        // cores.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.simulated.fetch_add(1, Ordering::Relaxed);
+        let m = SimGate::global().run(simulate);
+        if !collision {
+            let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+            let mut map = shard.lock().unwrap();
+            map.insert(
+                hash,
+                CellEntry {
+                    canonical,
+                    latency: m.latency,
+                    throughput: m.throughput,
+                    last_used: tick,
+                },
+            );
+            while map.len() > self.per_shard_capacity {
+                let oldest = map
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| *k)
+                    .expect("non-empty shard");
+                map.remove(&oldest);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        m
+    }
+
+    /// Is this cell currently memoized? Pure lookup: no counters, no
+    /// LRU touch — the deterministic hook the tests pin cache-population
+    /// claims on (the traffic counters are process-global and racy
+    /// across concurrent tests).
+    pub fn contains(&self, spec: &str, device: &str, point: ExecPoint, backend: &str) -> bool {
+        let canonical = Self::canonical_key(spec, device, point, backend);
+        let hash = fnv1a(canonical.as_bytes());
+        let map = self.shards[(hash % SHARDS as u64) as usize].lock().unwrap();
+        map.get(&hash).is_some_and(|e| e.canonical == canonical)
+    }
+
+    pub fn stats(&self) -> CellCacheStats {
+        CellCacheStats {
+            entries: self.shards.iter().map(|s| s.lock().unwrap().len()).sum(),
+            capacity: self.per_shard_capacity * SHARDS,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            cells_simulated: self.simulated.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Counters of the process-wide cell cache (the `/v1/metrics`
+/// `cell_cache` section).
+pub fn cell_cache_stats() -> CellCacheStats {
+    CellCache::global().stats()
+}
+
+/// Run one uncacheable simulation under the process-wide gate — the
+/// escape hatch for work that must not enter the cache (ad-hoc
+/// devices) but must still respect the concurrency bound.
+pub(crate) fn run_gated<T>(f: impl FnOnce() -> T) -> T {
+    SimGate::global().run(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn fake(lat: f64) -> Measurement {
+        Measurement { warps: 0, ilp: 0, latency: lat, throughput: 2.0 * lat }
+    }
+
+    #[test]
+    fn first_request_simulates_later_requests_hit() {
+        let cache = CellCache::new(64);
+        let calls = AtomicUsize::new(0);
+        let p = ExecPoint::new(4, 2);
+        let a = cache.get_or_simulate("mma bf16 f32 m16n8k16", "a100", p, "sim", || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            fake(32.5)
+        });
+        assert_eq!(a.latency.to_bits(), 32.5f64.to_bits());
+        assert_eq!((a.warps, a.ilp), (4, 2));
+        // the second request is served from the cache, bit-identical,
+        // without running the closure
+        let b = cache.get_or_simulate("mma bf16 f32 m16n8k16", "a100", p, "sim", || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            fake(99.0)
+        });
+        assert_eq!(b.latency.to_bits(), a.latency.to_bits());
+        assert_eq!(b.throughput.to_bits(), a.throughput.to_bits());
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.cells_simulated, s.entries), (1, 1, 1, 1));
+        // contains() is a pure lookup: answers without moving counters
+        assert!(cache.contains("mma bf16 f32 m16n8k16", "a100", p, "sim"));
+        assert!(!cache.contains("mma bf16 f32 m16n8k16", "a100", ExecPoint::new(8, 2), "sim"));
+        assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn every_coordinate_is_part_of_the_address() {
+        let cache = CellCache::new(64);
+        let p = ExecPoint::new(4, 2);
+        let base = ("mma bf16 f32 m16n8k16", "a100", p, "sim");
+        cache.get_or_simulate(base.0, base.1, base.2, base.3, || fake(1.0));
+        // spec, device, point and backend each address a distinct slot
+        for (spec, dev, point, backend) in [
+            ("mma fp16 f32 m16n8k16", base.1, base.2, base.3),
+            (base.0, "rtx3070ti", base.2, base.3),
+            (base.0, base.1, ExecPoint::new(4, 3), base.3),
+            (base.0, base.1, ExecPoint::new(8, 2), base.3),
+            (base.0, base.1, base.2, "pjrt"),
+        ] {
+            let m = cache.get_or_simulate(spec, dev, point, backend, || fake(7.0));
+            assert_eq!(m.latency.to_bits(), 7.0f64.to_bits(), "{spec} {dev} {point} {backend}");
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 6, 6));
+    }
+
+    #[test]
+    fn capacity_bound_evicts_oldest_and_counts() {
+        // per-shard capacity 1 => 16 cells total
+        let cache = CellCache::new(16);
+        for i in 0..200u32 {
+            cache.get_or_simulate("spec", "dev", ExecPoint::new(1, i), "sim", || fake(i as f64));
+        }
+        let s = cache.stats();
+        assert!(s.entries <= 16, "{s:?}");
+        assert!(s.evictions > 0, "{s:?}");
+        assert_eq!(s.misses, 200);
+    }
+
+    #[test]
+    fn global_cache_is_one_instance() {
+        assert!(std::ptr::eq(CellCache::global(), CellCache::global()));
+        assert!(CellCache::global().stats().capacity >= DEFAULT_CELL_CAPACITY);
+    }
+
+    #[test]
+    fn parallel_requests_for_one_cold_cell_agree() {
+        let cache = CellCache::new(64);
+        let p = ExecPoint::new(8, 2);
+        let lats: Vec<u64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    scope.spawn(|| {
+                        cache
+                            .get_or_simulate("spec", "dev", p, "sim", || fake(42.0))
+                            .latency
+                            .to_bits()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(lats.iter().all(|&l| l == 42.0f64.to_bits()));
+        let s = cache.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.hits + s.cells_simulated, 8);
+    }
+}

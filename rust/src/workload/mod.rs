@@ -30,6 +30,17 @@
 //! the tcserved `POST /v1/plan` endpoint are all thin translators into
 //! this one path.
 //!
+//! Below the unit layer sits the **cell-level execution engine**: the
+//! unit of scheduling and caching is one (workload, device, point,
+//! backend) *cell* simulation. Sweep units decompose into per-cell jobs
+//! fanned out over the coordinator worker pool
+//! ([`Workload::sweep_via`]), and every timing cell — whether requested
+//! by a point unit, a sweep cell or the completion probe — reads
+//! through the process-wide, content-addressed [`CellCache`]
+//! ([`Workload::measure_cached`]), so a `Point(4,2)` unit after a sweep
+//! is a cache hit, `completion_latency` reuses cell (1,1), and
+//! overlapping experiments stop re-simulating shared cells.
+//!
 //! ```
 //! use tcbench::workload::{Plan, SimRunner, Workload};
 //!
@@ -44,10 +55,12 @@
 //! assert!(result.point(8, 2).unwrap().throughput > 900.0);
 //! ```
 
+mod cell;
 mod numeric;
 mod plan;
 mod runner;
 
+pub use cell::{cell_cache_stats, CellCache, CellCacheStats, DEFAULT_CELL_CAPACITY};
 pub use numeric::{
     AccDtype, NumericOutput, NumericProbe, ProbeDtype, ProbeKind, CHAIN_MAX_LEN, CHAIN_SEED,
     CHAIN_TRIALS, PROFILE_SEED, PROFILE_TRIALS,
@@ -57,6 +70,7 @@ pub use runner::{runner_for, ArtifactRunner, Runner, SimRunner};
 
 use std::fmt;
 
+use crate::coordinator::{default_threads, run_parallel};
 use crate::device::Device;
 use crate::gemm::{self, GemmConfig};
 use crate::isa::{AbType, CdType, LdMatrixNum, LdSharedWidth, MmaInstr, MmaShape};
@@ -663,9 +677,52 @@ impl Workload {
         }
     }
 
-    /// Completion/issue latency (§4 step 1): one warp, ILP = 1.
+    /// Is `device` the registry device of its name — i.e. may its cells
+    /// use the name-keyed cache? An ad-hoc or modified [`Device`] must
+    /// not: it would alias the registry device's cells. The registry is
+    /// materialized once (this runs on every cell access, including
+    /// warm hits).
+    fn device_cacheable(device: &Device) -> bool {
+        use std::sync::OnceLock;
+        static REGISTRY: OnceLock<Vec<Device>> = OnceLock::new();
+        REGISTRY
+            .get_or_init(crate::device::registry)
+            .iter()
+            .any(|reg| reg.name == device.name && reg == device)
+    }
+
+    /// Measure one timing cell through the process-wide [`CellCache`]:
+    /// a cache hit returns the memoized simulation bit-identically; a
+    /// miss runs [`Workload::measure`] and memoizes it. `backend` is the
+    /// [`Runner::name`] coordinate of the cell's content address (pass
+    /// `"sim"` when no runner is in play — timing cells are
+    /// simulator-measured on every backend).
+    ///
+    /// The cache keys devices by registry *name*, so only a device that
+    /// is bit-for-bit its registry entry reads through it; an ad-hoc or
+    /// modified device falls back to an uncached [`Workload::measure`]
+    /// (correct, just unmemoized) instead of silently serving the
+    /// registry device's cells. Numeric probes bypass the cell cache
+    /// too: their results come from a runner's numeric leg and are
+    /// cached per unit by tcserved instead.
+    pub fn measure_cached(&self, device: &Device, point: ExecPoint, backend: &str) -> Measurement {
+        if matches!(self, Workload::Numeric(_)) {
+            return self.measure(device, point);
+        }
+        if !Self::device_cacheable(device) {
+            // uncached, but still under the process-wide simulation gate
+            return cell::run_gated(|| self.measure(device, point));
+        }
+        CellCache::global().get_or_simulate(&self.to_spec(), device.name, point, backend, || {
+            self.measure(device, point)
+        })
+    }
+
+    /// Completion/issue latency (§4 step 1): one warp, ILP = 1 — cell
+    /// (1,1) of the sweep grid, read through the cell cache (a sweep
+    /// that already ran makes this free).
     pub fn completion_latency(&self, device: &Device) -> f64 {
-        self.measure(device, ExecPoint::new(1, 1)).latency
+        self.measure_cached(device, ExecPoint::new(1, 1), "sim").latency
     }
 
     /// Full grid over this workload's sweep axes (§4 step 2) — one code
@@ -674,28 +731,94 @@ impl Workload {
     /// tile-legal warp counts, with the stage depth riding the `ilp`
     /// axis of the returned [`Sweep`]; numeric probes sweep
     /// (init kind, chain step).
+    ///
+    /// Convenience form of [`Workload::sweep_via`] with the simulator
+    /// backend name and the default pool width.
     pub fn sweep(&self, device: &Device) -> Sweep {
+        self.sweep_via(device, "sim", default_threads())
+    }
+
+    /// The cell-level execution engine's sweep: one job per *cold*
+    /// (warps, ilp) cell, fanned out across `threads` pool workers,
+    /// each reading through the process-wide [`CellCache`] under
+    /// `backend`'s name ([`Workload::measure_cached`]) — a warm
+    /// re-sweep (the overlapping `repro all` experiments, `/v1/sweep`
+    /// after a plan) finds no cold cells and skips the pool entirely.
+    /// Cell order in the returned grid is row-major like the serial
+    /// sweep always was, and — the simulator being deterministic — the
+    /// cells are bit-identical to a cold serial sweep whatever mix of
+    /// hits and misses served them.
+    ///
+    /// Numeric probes have no timing cells; their sweep runs the probe
+    /// grid on the native datapath (runners route each variant through
+    /// their own numeric leg instead). An ad-hoc (non-registry) device
+    /// cannot use the name-keyed cache, so its grid runs fully parallel
+    /// and uncached.
+    pub fn sweep_via(&self, device: &Device, backend: &str, threads: usize) -> Sweep {
         if let Workload::Numeric(p) = self {
-            // native-datapath convenience; runners route each variant
-            // through their numeric leg instead
             return p
                 .sweep_with(self.to_string(), |probe| Ok(probe.run_native()))
                 .expect("the native numeric sweep is infallible");
         }
         let warps_axis = self.sweep_warps_axis();
         let ilp_axis = self.sweep_ilp_axis();
-        let mut cells = Vec::with_capacity(warps_axis.len() * ilp_axis.len());
-        for &warps in &warps_axis {
-            for &ilp in &ilp_axis {
-                let m = self.measure(device, ExecPoint::new(warps, ilp));
-                cells.push(SweepCell {
-                    warps,
-                    ilp,
-                    latency: m.latency,
-                    throughput: m.throughput,
-                });
-            }
-        }
+        let points: Vec<ExecPoint> = warps_axis
+            .iter()
+            .flat_map(|&warps| ilp_axis.iter().map(move |&ilp| ExecPoint::new(warps, ilp)))
+            .collect();
+        let to_cell = |m: Measurement| SweepCell {
+            warps: m.warps,
+            ilp: m.ilp,
+            latency: m.latency,
+            throughput: m.throughput,
+        };
+        let cells: Vec<SweepCell> = if Self::device_cacheable(device) {
+            // phase 1: simulate the cold cells in parallel; their
+            // measurements come back in grid order (run_parallel
+            // preserves it) AND land in the cache for everyone else
+            let spec = self.to_spec();
+            let cold_mask: Vec<bool> = points
+                .iter()
+                .map(|&p| !CellCache::global().contains(&spec, device.name, p, backend))
+                .collect();
+            let jobs: Vec<_> = points
+                .iter()
+                .zip(&cold_mask)
+                .filter(|&(_, &cold)| cold)
+                .map(|(&point, _)| {
+                    let workload = *self;
+                    move || workload.measure_cached(device, point, backend)
+                })
+                .collect();
+            let mut cold_results = run_parallel(jobs, threads).into_iter();
+            // phase 2: assemble the grid — cold cells from phase 1
+            // directly (re-reading them through the cache would record
+            // one spurious "hit" per cell we just simulated), warm
+            // cells as the genuine cache hits they are
+            points
+                .iter()
+                .zip(&cold_mask)
+                .map(|(&p, &cold)| {
+                    let m = if cold {
+                        cold_results.next().expect("one phase-1 result per cold cell")
+                    } else {
+                        self.measure_cached(device, p, backend)
+                    };
+                    to_cell(m)
+                })
+                .collect()
+        } else {
+            // ad-hoc device: fully uncached, but still under the
+            // process-wide simulation gate
+            let jobs: Vec<_> = points
+                .iter()
+                .map(|&point| {
+                    let workload = *self;
+                    move || cell::run_gated(|| workload.measure(device, point))
+                })
+                .collect();
+            run_parallel(jobs, threads).into_iter().map(to_cell).collect()
+        };
         Sweep { label: self.to_string(), warps_axis, ilp_axis, cells }
     }
 }

@@ -6,10 +6,15 @@
 //! probe — for one [`Workload`] on one device. Compilation resolves the
 //! device, validates the workload against it and materializes the unit
 //! batch; execution hands each unit to a [`Runner`](super::Runner) over
-//! the coordinator worker pool. Every unit has a canonical token
+//! the coordinator worker pool, and inside each timing unit the
+//! cell-level engine takes over: sweep units fan their cells out across
+//! the same pool and every cell reads through the process-wide
+//! [`CellCache`](super::CellCache). Every unit has a canonical token
 //! ([`BenchPlan::unit_token`]) carrying *all* workload parameters, which
 //! tcserved uses as the content-address coordinate for its per-unit
-//! result cache.
+//! result cache — units key under the runner's resolved name, cells
+//! under its [`Runner::timing_backend`](super::Runner::timing_backend)
+//! (the simulator's, on every current backend).
 
 use std::time::Instant;
 

@@ -19,13 +19,13 @@
 
 use std::sync::Mutex;
 
-use crate::coordinator::BackendKind;
+use crate::coordinator::{default_threads, BackendKind};
 use crate::microbench::convergence_point;
 use crate::runtime::{ArtifactExec, ArtifactStore};
 
 use super::numeric::{NumericOutput, NumericProbe};
 use super::plan::{BenchPlan, UnitKind, UnitOutput};
-use super::Workload;
+use super::{ExecPoint, Workload};
 
 /// Executes plan units against one backend. Implementations must be
 /// [`Sync`]: the plan executor and tcserved both fan units out across
@@ -33,6 +33,17 @@ use super::Workload;
 pub trait Runner: Sync {
     /// Stable backend name — a cache-key coordinate in tcserved.
     fn name(&self) -> &'static str;
+
+    /// The backend-name coordinate of this runner's *timing* cells in
+    /// the process-wide cell cache. Timing units are simulator-measured
+    /// on every current backend — the PJRT artifacts cover the numeric
+    /// datapath, not cycle timing — so the default shares the
+    /// simulator's cells across runners instead of re-simulating
+    /// identical work per backend name. A future backend that measures
+    /// timing on its own datapath must override this.
+    fn timing_backend(&self) -> &'static str {
+        "sim"
+    }
 
     /// Execute one unit of a compiled plan.
     fn run_unit(&self, plan: &BenchPlan, unit: &UnitKind) -> Result<UnitOutput, String>;
@@ -45,7 +56,12 @@ pub trait Runner: Sync {
 /// Shared unit dispatch: numeric workloads route through the runner's
 /// numeric leg (point = one probe, sweep = one probe variant per init
 /// kind assembled into the step x init grid); timing workloads run on
-/// the cycle simulator regardless of backend.
+/// the cycle simulator regardless of backend — through the cell-level
+/// execution engine, so every point/sweep-cell/completion simulation is
+/// memoized in the process-wide [`CellCache`](super::CellCache) under
+/// the runner's [`Runner::timing_backend`] name (the simulator's, for
+/// every current backend) and sweep cells fan out across the worker
+/// pool.
 fn dispatch_unit(
     runner: &dyn Runner,
     plan: &BenchPlan,
@@ -71,13 +87,18 @@ fn dispatch_unit(
             }
         };
     }
+    let backend = runner.timing_backend();
     Ok(match unit {
-        UnitKind::Completion => {
-            UnitOutput::Completion(plan.workload.completion_latency(&plan.device))
+        UnitKind::Completion => UnitOutput::Completion(
+            plan.workload
+                .measure_cached(&plan.device, ExecPoint::new(1, 1), backend)
+                .latency,
+        ),
+        UnitKind::Point(p) => {
+            UnitOutput::Point(plan.workload.measure_cached(&plan.device, *p, backend))
         }
-        UnitKind::Point(p) => UnitOutput::Point(plan.workload.measure(&plan.device, *p)),
         UnitKind::Sweep => {
-            let sweep = plan.workload.sweep(&plan.device);
+            let sweep = plan.workload.sweep_via(&plan.device, backend, default_threads());
             let convergence = plan
                 .convergence_warps
                 .iter()

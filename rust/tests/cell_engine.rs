@@ -1,0 +1,153 @@
+//! Integration tests of the cell-level execution engine: the parallel,
+//! cell-cached sweep path must be **bit-identical** to cold uncached
+//! measurement across every workload family, and the cache must be
+//! observable where the ISSUE promises it (a point after a sweep, the
+//! completion probe after cell (1,1)).
+
+use tcbench::device::a100;
+use tcbench::workload::{cell_cache_stats, CellCache, ExecPoint, Plan, SimRunner, Workload};
+
+/// One representative of each of the seven workload families.
+fn families() -> Vec<Workload> {
+    [
+        "mma bf16 f32 m16n8k16",
+        "mma.sp fp16 f32 m16n8k32",
+        "ldmatrix x4",
+        "ld.shared u32 8",
+        "wmma fp16 f32 m16n16k16",
+        "gemm pipeline bf16 f32 256 128x128x32",
+        "numeric chain tf32 f32 4",
+    ]
+    .into_iter()
+    .map(|spec| Workload::parse_spec(spec).expect(spec))
+    .collect()
+}
+
+#[test]
+fn cell_cached_sweep_is_bit_identical_to_cold_uncached_measurement() {
+    let d = a100();
+    for w in families() {
+        // engine path: parallel cells, read/written through the global
+        // cell cache (in whatever hit/miss mix earlier tests left it in)
+        let s1 = w.sweep(&d);
+        assert_eq!(
+            s1.cells.len(),
+            s1.warps_axis.len() * s1.ilp_axis.len(),
+            "{w}: grid must be complete"
+        );
+
+        // cold path: raw per-cell measurement, no cache, serial — the
+        // pre-engine semantics (numeric sweeps have no timing cells;
+        // their grid is compared engine-vs-engine below)
+        if !matches!(w, Workload::Numeric(_)) {
+            let mut idx = 0;
+            for &warps in &s1.warps_axis {
+                for &ilp in &s1.ilp_axis {
+                    let cold = w.measure(&d, ExecPoint::new(warps, ilp));
+                    let cell = &s1.cells[idx];
+                    assert_eq!((cell.warps, cell.ilp), (warps, ilp), "{w}: cell order");
+                    assert_eq!(
+                        cell.latency.to_bits(),
+                        cold.latency.to_bits(),
+                        "{w} ({warps},{ilp}): latency must be bit-identical"
+                    );
+                    assert_eq!(
+                        cell.throughput.to_bits(),
+                        cold.throughput.to_bits(),
+                        "{w} ({warps},{ilp}): throughput must be bit-identical"
+                    );
+                    idx += 1;
+                }
+            }
+        }
+
+        // a second engine sweep is served from the cache and is
+        // bit-identical too
+        let hits_before = cell_cache_stats().hits;
+        let s2 = w.sweep(&d);
+        for (a, b) in s1.cells.iter().zip(&s2.cells) {
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits(), "{w}");
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{w}");
+        }
+        if !matches!(w, Workload::Numeric(_)) {
+            let hits_after = cell_cache_stats().hits;
+            assert!(
+                hits_after >= hits_before + s1.cells.len() as u64,
+                "{w}: rerun must be all cell hits ({hits_before} -> {hits_after})"
+            );
+        }
+    }
+}
+
+#[test]
+fn point_unit_after_a_sweep_is_a_cell_hit() {
+    // a (workload, device) pair no other test sweeps, so the traffic
+    // delta below is attributable
+    let w = Workload::parse_spec("ld.shared u64 32").unwrap();
+    let sweep = Plan::new(w).sweep().compile().unwrap();
+    sweep.run(&SimRunner, 2).unwrap();
+    // deterministic: the sweep populated exactly the cell the point
+    // unit will ask for
+    assert!(CellCache::global().contains("ld.shared u64 32", "a100", ExecPoint::new(4, 2), "sim"));
+
+    let hits_before = cell_cache_stats().hits;
+    let point = Plan::new(w).point(4, 2).compile().unwrap();
+    let r = point.run(&SimRunner, 1).unwrap();
+    assert!(r.point(4, 2).unwrap().latency > 0.0);
+    assert!(
+        cell_cache_stats().hits > hits_before,
+        "a point inside an already-swept grid must not resimulate"
+    );
+}
+
+#[test]
+fn ad_hoc_devices_measure_uncached_instead_of_aliasing_registry_cells() {
+    let w = Workload::parse_spec("ld.shared u32 4").unwrap();
+    let d = a100();
+    let p = ExecPoint::new(1, 1);
+    let registry = w.measure_cached(&d, p, "sim");
+
+    // same registry name, different calibration: must NOT be served the
+    // registry device's cached cell
+    let mut tweaked = a100();
+    tweaked.lsu_txn_cycles *= 2;
+    let ad_hoc = w.measure_cached(&tweaked, p, "sim");
+    assert!(
+        ad_hoc.latency > registry.latency,
+        "slower fabric must show: {} vs {}",
+        ad_hoc.latency,
+        registry.latency
+    );
+    assert_eq!(
+        ad_hoc.latency.to_bits(),
+        w.measure(&tweaked, p).latency.to_bits(),
+        "ad-hoc devices take the raw measure path"
+    );
+    // and the ad-hoc sweep path stays correct too (fully uncached)
+    let sweep = w.sweep_via(&tweaked, "sim", 2);
+    assert_eq!(
+        sweep.cell(1, 1).unwrap().latency.to_bits(),
+        ad_hoc.latency.to_bits()
+    );
+}
+
+#[test]
+fn completion_probe_reuses_cell_1_1() {
+    let w = Workload::parse_spec("ld.shared u64 16").unwrap();
+    let point = Plan::new(w).point(1, 1).compile().unwrap();
+    let pr = point.run(&SimRunner, 1).unwrap();
+    assert!(CellCache::global().contains("ld.shared u64 16", "a100", ExecPoint::new(1, 1), "sim"));
+
+    let hits_before = cell_cache_stats().hits;
+    let completion = Plan::new(w).completion_latency().compile().unwrap();
+    let cr = completion.run(&SimRunner, 1).unwrap();
+    // completion IS cell (1,1): same bits, no second simulation
+    assert_eq!(
+        cr.completion().unwrap().to_bits(),
+        pr.point(1, 1).unwrap().latency.to_bits()
+    );
+    assert!(
+        cell_cache_stats().hits > hits_before,
+        "completion_latency must read cell (1,1) through the cache"
+    );
+}

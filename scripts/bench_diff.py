@@ -4,6 +4,7 @@
 Usage:
     python3 scripts/bench_diff.py BASELINE NEW [--threshold PCT]
                                   [--min-share PCT] [--absolute]
+                                  [--allow-new-plans] [--summary-md PATH]
 
 Compares each plan's wall time between a committed baseline
 (`bench_baseline.json`, produced by `repro all --out DIR`) and a fresh
@@ -28,6 +29,12 @@ notice — refresh it with the one-liner:
 
     target/release/repro all --backend native --out out && cp out/bench_summary.json bench_baseline.json
 
+--summary-md PATH additionally writes a per-plan baseline-vs-current
+markdown table (one row per plan, flagged like the stdout report) meant
+to be appended to a CI job summary ($GITHUB_STEP_SUMMARY). The file is
+written on success AND on regression, so the CI step can publish it
+before propagating the exit code.
+
 Exit codes: 0 = ok (or bootstrap baseline), 1 = regression, 2 = bad input.
 """
 
@@ -40,6 +47,17 @@ REFRESH = (
     "target/release/repro all --backend native --out out "
     "&& cp out/bench_summary.json bench_baseline.json"
 )
+
+
+def write_summary_md(path, lines):
+    # The summary is auxiliary output: a write failure must not mask the
+    # gate's real verdict (exit 0/1), so warn instead of exiting.
+    try:
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+    except OSError as e:
+        print(f"bench_diff: warning: cannot write summary {path}: {e}",
+              file=sys.stderr)
 
 
 def load_plans(path):
@@ -76,6 +94,9 @@ def main(argv=None):
     ap.add_argument("--allow-new-plans", action="store_true",
                     help="report plans missing from the baseline as notices "
                          "instead of failures (for PRs that add plans)")
+    ap.add_argument("--summary-md", metavar="PATH",
+                    help="also write a per-plan baseline-vs-current markdown "
+                         "table to PATH (for $GITHUB_STEP_SUMMARY)")
     args = ap.parse_args(argv)
 
     base_doc, base = load_plans(args.baseline)
@@ -84,6 +105,15 @@ def main(argv=None):
     if base_doc.get("bootstrap") or not base:
         print(f"bench_diff: baseline {args.baseline} is a bootstrap placeholder — "
               f"nothing to gate on.\nRefresh it with:\n    {REFRESH}")
+        if args.summary_md:
+            write_summary_md(args.summary_md, [
+                "### Bench diff",
+                "",
+                f"Baseline `{args.baseline}` is a **bootstrap placeholder** — "
+                f"nothing to gate on. Refresh it with:",
+                "",
+                f"    {REFRESH}",
+            ])
         return 0
 
     base_total = sum(base.values()) or 1.0
@@ -96,7 +126,7 @@ def main(argv=None):
     else:
         scale = statistics.median(ratios[pid] for pid in eligible) or 1.0
 
-    regressions, notes = [], []
+    regressions, notes, md_rows = [], [], []
     print(f"bench_diff: {len(base)} baseline plans vs {len(new)} new "
           f"(median drift x{scale:.2f}, threshold +{args.threshold:.0f}%)")
     print(f"{'plan':<16} {'base ms':>10} {'new ms':>10} {'vs median':>10}")
@@ -107,29 +137,54 @@ def main(argv=None):
                 f"the campaign lost this plan (removed or renamed?); if "
                 f"intentional, refresh the baseline")
             print(f"{pid:<16} {base[pid]:>10.1f} {'MISSING':>10}   MISSING-IN-NEW")
+            md_rows.append((pid, f"{base[pid]:.1f}", "—", "—", "❌ missing in new run"))
             continue
         if base[pid] <= 0:
+            # not gateable (no growth ratio), but the summary table keeps
+            # its one-row-per-plan contract
+            md_rows.append((pid, f"{base[pid]:.1f}", f"{new[pid]:.1f}", "—",
+                            "skipped (zero-ms baseline)"))
             continue
         pct = (ratios[pid] / scale - 1.0) * 100.0
         flag = ""
+        status = "ok"
         if pct > args.threshold:
             if pid not in eligible:
                 flag = f"  (ignored: <{args.min_share:.1f}% of campaign)"
+                status = f"ignored (<{args.min_share:.1f}% of campaign)"
             else:
                 flag = "  REGRESSION"
+                status = "❌ REGRESSION"
                 regressions.append(f"{pid}: +{pct:.1f}% beyond the campaign's median drift")
         print(f"{pid:<16} {base[pid]:>10.1f} {new[pid]:>10.1f} {pct:>+9.1f}%{flag}")
+        md_rows.append((pid, f"{base[pid]:.1f}", f"{new[pid]:.1f}", f"{pct:+.1f}%", status))
     for pid in sorted(set(new) - set(base)):
         msg = (f"{pid}: present in the new run but missing from the baseline — "
                f"refresh the baseline to start gating it")
         if args.allow_new_plans:
             notes.append(msg)
+            md_rows.append((pid, "—", f"{new[pid]:.1f}", "—", "new plan (not gated)"))
         else:
             regressions.append(msg)
             print(f"{pid:<16} {'MISSING':>10} {new[pid]:>10.1f}   MISSING-IN-BASELINE")
+            md_rows.append((pid, "—", f"{new[pid]:.1f}", "—", "❌ missing in baseline"))
 
     for note in notes:
         print(f"note: {note}")
+    if args.summary_md:
+        verdict = (f"**{len(regressions)} failure(s)**" if regressions
+                   else "no per-plan regressions beyond the threshold")
+        md = [
+            "### Bench diff: baseline vs current",
+            "",
+            f"Median drift ×{scale:.2f}, threshold +{args.threshold:.0f}% — {verdict}.",
+            "",
+            "| plan | base ms | new ms | vs median | status |",
+            "|---|---:|---:|---:|---|",
+        ]
+        md.extend(f"| {pid} | {b} | {n} | {pct} | {status} |"
+                  for pid, b, n, pct, status in md_rows)
+        write_summary_md(args.summary_md, md)
     if regressions:
         print(f"\nbench_diff: {len(regressions)} failure(s) "
               f"(threshold +{args.threshold:.0f}%):", file=sys.stderr)

@@ -124,6 +124,61 @@ class BenchDiffTest(unittest.TestCase):
         self.assertEqual(ctx.exception.code, 2)
         self.assertIn("unexpected schema", err.getvalue())
 
+    def summary_md(self):
+        return os.path.join(self.dir.name, "summary.md")
+
+    def read_md(self):
+        with open(self.summary_md()) as f:
+            return f.read()
+
+    def test_summary_md_writes_per_plan_table(self):
+        base = summary({"t3": 100.0, "fig6": 200.0})
+        new = summary({"t3": 110.0, "fig6": 210.0})
+        rc, _, _ = self.run_diff(base, new, "--summary-md", self.summary_md())
+        self.assertEqual(rc, 0)
+        md = self.read_md()
+        self.assertIn("| plan | base ms | new ms | vs median | status |", md)
+        self.assertIn("| t3 | 100.0 | 110.0 |", md)
+        self.assertIn("| fig6 | 200.0 | 210.0 |", md)
+        self.assertIn("no per-plan regressions", md)
+
+    def test_summary_md_flags_regressions_and_still_fails(self):
+        base = summary({"t3": 100.0, "t12": 100.0, "fig17": 100.0})
+        new = summary({"t3": 100.0, "t12": 100.0, "fig17": 200.0})
+        rc, _, _ = self.run_diff(base, new, "--summary-md", self.summary_md())
+        self.assertEqual(rc, 1)  # the file is written AND the gate fails
+        md = self.read_md()
+        self.assertIn("REGRESSION", md)
+        self.assertIn("1 failure(s)", md)
+        self.assertIn("| fig17 | 100.0 | 200.0 |", md)
+
+    def test_summary_md_marks_rows_missing_on_either_side(self):
+        base = summary({"t3": 100.0, "gone": 50.0})
+        new = summary({"t3": 100.0, "fresh": 25.0})
+        rc, _, _ = self.run_diff(base, new, "--summary-md", self.summary_md())
+        self.assertEqual(rc, 1)
+        md = self.read_md()
+        self.assertIn("missing in new run", md)
+        self.assertIn("missing in baseline", md)
+
+    def test_summary_md_keeps_zero_ms_baseline_rows(self):
+        # a zero-ms baseline row cannot be gated, but it must not vanish
+        # from the per-plan table
+        base = summary({"t3": 100.0, "zero": 0.0})
+        new = summary({"t3": 100.0, "zero": 5.0})
+        rc, _, _ = self.run_diff(base, new, "--summary-md", self.summary_md())
+        self.assertEqual(rc, 0)
+        md = self.read_md()
+        self.assertIn("| zero | 0.0 | 5.0 |", md)
+        self.assertIn("zero-ms baseline", md)
+
+    def test_summary_md_bootstrap_baseline_writes_notice(self):
+        base = summary({}, bootstrap=True)
+        new = summary({"t3": 100.0})
+        rc, _, _ = self.run_diff(base, new, "--summary-md", self.summary_md())
+        self.assertEqual(rc, 0)
+        self.assertIn("bootstrap placeholder", self.read_md())
+
     def test_absolute_mode_skips_normalization(self):
         base = summary({"t3": 100.0, "t12": 100.0, "fig17": 100.0})
         new = summary({"t3": 150.0, "t12": 150.0, "fig17": 150.0})  # uniform +50%
