@@ -355,6 +355,18 @@ pub struct GemmResult {
 /// reaching here; direct callers get a debug assertion (an invalid warp
 /// grid would silently mis-account FMAs in release builds).
 pub fn run_gemm(device: &Device, cfg: GemmConfig, variant: Variant) -> GemmResult {
+    run_gemm_profiled(device, cfg, variant, &mut crate::sim::Profiler::Null)
+}
+
+/// [`run_gemm`] with stall attribution: every warp-cycle of the CTA is
+/// accounted through `profiler` (a `Profiler::Null` makes this the
+/// plain simulation — same schedule, zero overhead).
+pub fn run_gemm_profiled(
+    device: &Device,
+    cfg: GemmConfig,
+    variant: Variant,
+    profiler: &mut crate::sim::Profiler,
+) -> GemmResult {
     #[cfg(debug_assertions)]
     if let Err(e) = cfg.validate() {
         panic!("invalid GemmConfig {cfg:?}: {e}");
@@ -363,7 +375,7 @@ pub fn run_gemm(device: &Device, cfg: GemmConfig, variant: Variant) -> GemmResul
         (0..cfg.warps).map(|w| build_program(device, cfg, variant, w)).collect();
     let fmas: u64 = programs.iter().map(|p| p.fmas_per_iteration()).sum::<u64>()
         * cfg.k_steps() as u64;
-    let results = SmSim::new(device, programs).run();
+    let results = SmSim::new(device, programs).run_profiled(profiler);
     let cta_cycles = results.iter().map(|r| r.finish).max().unwrap_or(0);
     let waves = cfg.ctas().div_ceil(device.sms as u64);
     GemmResult {

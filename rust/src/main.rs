@@ -4,7 +4,7 @@
 //! repro list                         # show every registered experiment
 //! repro run <id>... [--backend B]    # regenerate specific tables/figures
 //! repro all [--backend B] [--out D]  # the full campaign (+ summary.json)
-//! repro sweep --device D --instr I   # ad-hoc instruction sweep
+//! repro sweep --device D --instr I [--profile] [--trace F]  # ad-hoc sweep
 //! repro devices                      # calibrated devices
 //! repro serve [--addr A] [--threads N] [--warm]   # tcserved campaign service
 //! ```
@@ -23,8 +23,9 @@ use tcbench::coordinator::{
 use tcbench::device;
 use tcbench::report;
 use tcbench::server::{serve_blocking, ServerConfig};
+use tcbench::sim::{ProfileMode, SimProfile};
 use tcbench::util::Json;
-use tcbench::workload::{runner_for, Plan, Runner, SimRunner, Workload};
+use tcbench::workload::{runner_for, ExecPoint, Plan, Runner, SimRunner, UnitOutput, Workload};
 
 fn usage() -> &'static str {
     "repro — Dissecting Tensor Cores, reproduction CLI\n\
@@ -35,6 +36,7 @@ fn usage() -> &'static str {
        repro run <id>... [--backend native|pjrt|auto] [--out DIR]\n\
        repro all [--backend native|pjrt|auto] [--out DIR]\n\
        repro sweep --device <a100|rtx3070ti|rtx2080ti> --instr \"<workload>\"\n\
+                   [--profile] [--trace FILE]\n\
        repro serve [--addr HOST:PORT] [--threads N] [--warm]\n\
      \n\
      WORKLOAD SPECS (repro sweep, POST /v1/plan):\n\
@@ -63,14 +65,21 @@ fn usage() -> &'static str {
        repro sweep --device a100 --instr \"ldmatrix x4\"\n\
        repro sweep --device a100 --instr \"gemm pipeline bf16 f32 512 128x128x32\"\n\
        repro sweep --device a100 --instr \"numeric chain tf32 f32 14\"\n\
+       repro sweep --device a100 --instr \"bf16 f32 m16n8k16\" --profile --trace trace.json\n\
        repro serve --addr 127.0.0.1:8321 --warm\n\
      \n\
+     OBSERVABILITY (timing workloads only):\n\
+       --profile      append a cycle-level stall-attribution breakdown to the sweep\n\
+       --trace FILE   write a Chrome trace-event JSON of one representative cell\n\
+                      (open in https://ui.perfetto.dev)\n\
+     \n\
      SERVE ENDPOINTS:\n\
-       /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep POST:/v1/plan /v1/metrics\n"
+       /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep POST:/v1/plan\n\
+       /v1/metrics (JSON incl. latency histograms)  /metrics (Prometheus text)\n"
 }
 
 /// Flags that take no value (presence means `true`).
-const BOOL_FLAGS: &[&str] = &["warm"];
+const BOOL_FLAGS: &[&str] = &["warm", "profile"];
 
 /// Minimal flag parser: positional args + `--key value` pairs, plus
 /// valueless boolean flags ([`BOOL_FLAGS`]).
@@ -120,6 +129,26 @@ fn make_runner(kind: &str) -> Result<(BackendKind, Box<dyn Runner>)> {
         _ => BackendKind::Native,
     };
     Ok((effective, runner))
+}
+
+/// Render a stall-attribution breakdown (the `--profile` tail of
+/// `repro sweep`): one line per non-empty category, as a percentage of
+/// all accounted warp-cycles.
+fn render_stall_profile(p: &SimProfile) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "stall attribution ({} run(s), {} warp-cycles accounted):",
+        p.runs, p.warp_cycles
+    );
+    for ((name, count), (_, frac)) in p.categories().iter().zip(p.fractions()) {
+        if *count == 0 {
+            continue;
+        }
+        let _ = writeln!(out, "  {name:<14} {:>7.3}%  ({count} warp-cycles)", frac * 100.0);
+    }
+    out
 }
 
 fn emit(out_dir: Option<&str>, id: &str, report: &str) -> Result<()> {
@@ -213,6 +242,7 @@ fn main() -> Result<()> {
                 ("gemm_permuted", "gemm permuted bf16 f32 2048 128x128x32 l2", 1),
             ];
             let mut gemm_rows = Vec::new();
+            let mut profile_rows = Vec::new();
             for (id, spec, stages) in gemm_plans {
                 let workload = Workload::parse_spec(spec).map_err(|e| anyhow!(e))?;
                 let plan = Plan::new(workload)
@@ -221,7 +251,13 @@ fn main() -> Result<()> {
                     .completion_latency()
                     .compile()
                     .map_err(|e| anyhow!(e))?;
-                let result = plan.run(&SimRunner, 1).map_err(|e| anyhow!(e))?;
+                // timing plans run with counting stall attribution on:
+                // the counters ride the cell cache, so warm reruns still
+                // report attribution, and profile_summary.json gets a
+                // row per plan without a second simulation pass
+                let result = plan
+                    .run_profiled(&SimRunner, 1, ProfileMode::Counting)
+                    .map_err(|e| anyhow!(e))?;
                 emit(args.flag("out"), id, &report::render_bench(&result))?;
                 eprintln!("[repro] {id} done in {:.1} ms", result.wall_ms);
                 if let Some(dir) = args.flag("out") {
@@ -238,6 +274,9 @@ fn main() -> Result<()> {
                     ("backend", Json::str(result.runner)),
                     ("wall_ms", Json::num(result.wall_ms)),
                 ]));
+                if let Some(p) = result.stall_profile() {
+                    profile_rows.push((id, p));
+                }
             }
             // Numeric workload rows: canonical §8 probes run as
             // first-class plans through the campaign's runner (these
@@ -315,6 +354,31 @@ fn main() -> Result<()> {
                 let path = format!("{dir}/bench_summary.json");
                 std::fs::write(&path, bench.pretty())?;
                 eprintln!("[repro] wrote {path}");
+
+                // stall attribution next to the perf snapshot: which
+                // category each plan's warp-cycles went to (numeric
+                // rows run no cycle simulation, so they have no row)
+                let profiles = Json::obj(vec![
+                    ("schema", Json::str("tcbench/profile_summary/v1")),
+                    ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+                    (
+                        "plans",
+                        Json::Arr(
+                            profile_rows
+                                .iter()
+                                .map(|(id, p)| {
+                                    Json::obj(vec![
+                                        ("id", Json::str(id)),
+                                        ("profile", report::sim_profile_to_json(p)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                let path = format!("{dir}/profile_summary.json");
+                std::fs::write(&path, profiles.pretty())?;
+                eprintln!("[repro] wrote {path}");
             }
         }
         "serve" => {
@@ -342,6 +406,14 @@ fn main() -> Result<()> {
                 .flag("instr")
                 .ok_or_else(|| anyhow!("--instr required (a workload spec; see `repro help`)"))?;
             let workload = Workload::parse_spec(spec).map_err(|e| anyhow!(e))?;
+            let profile_on = args.flag("profile").is_some();
+            let trace_path = args.flag("trace");
+            if (profile_on || trace_path.is_some()) && matches!(workload, Workload::Numeric(_)) {
+                bail!(
+                    "--profile/--trace attribute simulator cycles, and numeric probes run no \
+                     cycle simulation; drop the flags or pick a timing workload"
+                );
+            }
             let mut plan = Plan::new(workload).device(dev_name).sweep();
             // numeric probes have no completion/issue latency; every
             // other workload gets the §4 step-1 probe alongside
@@ -349,10 +421,51 @@ fn main() -> Result<()> {
                 plan = plan.completion_latency();
             }
             let plan = plan.compile().map_err(|e| anyhow!(e))?;
+            let mode = if profile_on || trace_path.is_some() {
+                ProfileMode::Counting
+            } else {
+                ProfileMode::Off
+            };
             let result = plan
-                .run(&SimRunner, default_threads().min(4))
+                .run_profiled(&SimRunner, default_threads().min(4), mode)
                 .map_err(|e| anyhow!(e))?;
             println!("{}", report::render_bench(&result));
+            if let Some(p) = result.stall_profile() {
+                print!("{}", render_stall_profile(&p));
+            }
+            if let Some(path) = trace_path {
+                // re-measure the sweep's peak cell under the tracing
+                // profiler (tracing bypasses the cell cache by design,
+                // so this is one extra uncached simulation)
+                let point = result
+                    .units
+                    .iter()
+                    .find_map(|(_, out)| match out {
+                        UnitOutput::Sweep { sweep, .. } => Some(ExecPoint::new(
+                            sweep.warps_axis.last().copied().unwrap_or(1),
+                            sweep.ilp_axis.last().copied().unwrap_or(1),
+                        )),
+                        _ => None,
+                    })
+                    .ok_or_else(|| anyhow!("no sweep unit to trace"))?;
+                let dev = device::by_name(dev_name)
+                    .ok_or_else(|| anyhow!("unknown device {dev_name:?}"))?;
+                let (_, profile) = workload.measure_cached_profiled(
+                    &dev,
+                    point,
+                    result.runner,
+                    ProfileMode::Tracing,
+                );
+                let profile = profile.ok_or_else(|| anyhow!("tracing produced no profile"))?;
+                std::fs::write(path, report::trace_to_json(&profile).pretty())?;
+                eprintln!(
+                    "[repro] wrote {path} ({} trace events, {} warps at {}x ILP; open in \
+                     https://ui.perfetto.dev)",
+                    profile.events.len(),
+                    point.warps,
+                    point.ilp
+                );
+            }
         }
         "help" | "--help" | "-h" => print!("{}", usage()),
         other => {

@@ -20,7 +20,7 @@ pub use sweep::{
 
 use crate::device::Device;
 use crate::isa::{LdMatrixNum, LdSharedWidth, MmaInstr};
-use crate::sim::SmSim;
+use crate::sim::{Profiler, SmSim};
 
 /// One measured configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,9 +41,24 @@ pub struct Measurement {
 /// iterations; both are pure engine optimizations, the measured
 /// latency/throughput semantics are the paper's.
 pub fn measure_mma(device: &Device, instr: &MmaInstr, warps: u32, ilp: u32) -> Measurement {
+    measure_mma_profiled(device, instr, warps, ilp, &mut Profiler::Null)
+}
+
+/// [`measure_mma`] with stall attribution: every warp-cycle of the run
+/// is accounted through `profiler` (a [`Profiler::Null`] makes this the
+/// plain measurement — same schedule, zero overhead).
+pub fn measure_mma_profiled(
+    device: &Device,
+    instr: &MmaInstr,
+    warps: u32,
+    ilp: u32,
+    profiler: &mut Profiler,
+) -> Measurement {
     let program = mma_program(device, instr, ilp, ITERS);
     let per_iter_fmas: u64 = program.fmas_per_iteration() * warps as u64;
-    let results = SmSim::replicated(device, program, warps).with_steady_state_exit().run();
+    let results = SmSim::replicated(device, program, warps)
+        .with_steady_state_exit()
+        .run_profiled(profiler);
     let latency = results.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
     Measurement { warps, ilp, latency, throughput: per_iter_fmas as f64 / latency }
 }
@@ -60,9 +75,22 @@ pub fn measure_ldmatrix(
     warps: u32,
     ilp: u32,
 ) -> Measurement {
+    measure_ldmatrix_profiled(device, num, warps, ilp, &mut Profiler::Null)
+}
+
+/// [`measure_ldmatrix`] with stall attribution through `profiler`.
+pub fn measure_ldmatrix_profiled(
+    device: &Device,
+    num: LdMatrixNum,
+    warps: u32,
+    ilp: u32,
+    profiler: &mut Profiler,
+) -> Measurement {
     let program = ldmatrix_program(device, num, ilp, ITERS);
     let per_iter_bytes = program.smem_bytes_per_iteration() * warps as u64;
-    let results = SmSim::replicated(device, program, warps).with_steady_state_exit().run();
+    let results = SmSim::replicated(device, program, warps)
+        .with_steady_state_exit()
+        .run_profiled(profiler);
     let latency = results.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
     Measurement { warps, ilp, latency, throughput: per_iter_bytes as f64 / latency }
 }
@@ -87,9 +115,23 @@ pub fn measure_ld_shared_at(
     warps: u32,
     ilp: u32,
 ) -> Measurement {
+    measure_ld_shared_at_profiled(device, width, ways, warps, ilp, &mut Profiler::Null)
+}
+
+/// [`measure_ld_shared_at`] with stall attribution through `profiler`.
+pub fn measure_ld_shared_at_profiled(
+    device: &Device,
+    width: LdSharedWidth,
+    ways: u32,
+    warps: u32,
+    ilp: u32,
+    profiler: &mut Profiler,
+) -> Measurement {
     let program = ld_shared_program(device, width, ways, ilp, ITERS);
     let per_iter_bytes = program.smem_bytes_per_iteration() * warps as u64;
-    let results = SmSim::replicated(device, program, warps).with_steady_state_exit().run();
+    let results = SmSim::replicated(device, program, warps)
+        .with_steady_state_exit()
+        .run_profiled(profiler);
     let latency = results.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
     Measurement { warps, ilp, latency, throughput: per_iter_bytes as f64 / latency }
 }

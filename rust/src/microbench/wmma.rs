@@ -10,7 +10,7 @@
 
 use crate::device::Device;
 use crate::isa::{AbType, CdType, MmaInstr, MmaShape};
-use crate::sim::{Op, ProgramBuilder, SmSim, WarpProgram};
+use crate::sim::{Op, Profiler, ProgramBuilder, SmSim, WarpProgram};
 
 use super::{measure_mma, Measurement, ITERS};
 
@@ -99,9 +99,24 @@ pub fn measure_wmma(
     warps: u32,
     ilp: u32,
 ) -> Measurement {
+    measure_wmma_profiled(device, shape, ab, cd, warps, ilp, &mut Profiler::Null)
+}
+
+/// [`measure_wmma`] with stall attribution through `profiler`.
+pub fn measure_wmma_profiled(
+    device: &Device,
+    shape: WmmaShape,
+    ab: AbType,
+    cd: CdType,
+    warps: u32,
+    ilp: u32,
+    profiler: &mut Profiler,
+) -> Measurement {
     let program = wmma_program(device, shape, ab, cd, ilp, ITERS);
     let per_iter_fmas = program.fmas_per_iteration() * warps as u64;
-    let results = SmSim::replicated(device, program, warps).with_steady_state_exit().run();
+    let results = SmSim::replicated(device, program, warps)
+        .with_steady_state_exit()
+        .run_profiled(profiler);
     let latency = results.iter().map(|r| r.latency_per_iteration()).fold(0.0, f64::max);
     Measurement { warps, ilp, latency, throughput: per_iter_fmas as f64 / latency }
 }

@@ -10,6 +10,7 @@
 //! `summary.json` are both built on this path.
 
 use crate::microbench::{ConvergencePoint, Sweep};
+use crate::sim::SimProfile;
 use crate::util::Json;
 use crate::workload::{BenchResult, NumericOutput, UnitOutput};
 
@@ -258,9 +259,32 @@ pub fn unit_output_to_json(output: &UnitOutput) -> Json {
     }
 }
 
+/// Machine-readable rendering of one stall-attribution profile: the
+/// seven category counters and fractions (in
+/// [`STALL_CATEGORIES`](crate::sim::STALL_CATEGORIES) order), the
+/// accounting totals, and the trace-event tally.
+pub fn sim_profile_to_json(p: &SimProfile) -> Json {
+    let counts: Vec<(&str, Json)> =
+        p.categories().iter().map(|&(name, n)| (name, Json::num(n as f64))).collect();
+    let fracs: Vec<(&str, Json)> =
+        p.fractions().iter().map(|&(name, f)| (name, Json::num(f))).collect();
+    Json::obj(vec![
+        ("runs", Json::num(p.runs as f64)),
+        ("warps", Json::num(p.warps as f64)),
+        ("cycles", Json::num(p.cycles as f64)),
+        ("warp_cycles", Json::num(p.warp_cycles as f64)),
+        ("categories", Json::obj(counts)),
+        ("fractions", Json::obj(fracs)),
+        ("trace_events", Json::num(p.events.len() as f64)),
+        ("trace_events_dropped", Json::num(p.events_dropped as f64)),
+    ])
+}
+
 /// Full machine-readable rendering of one plan result — the JSON twin
 /// of [`render_bench`](crate::report::render_bench), consumed by
-/// `POST /v1/plan` responses and `repro` output files.
+/// `POST /v1/plan` responses and `repro` output files. Units executed
+/// with profiling on additionally carry a `"profile"` section
+/// ([`sim_profile_to_json`]).
 pub fn bench_to_json(r: &BenchResult) -> Json {
     Json::obj(vec![
         ("workload", Json::Str(r.workload.to_spec())),
@@ -279,7 +303,20 @@ pub fn bench_to_json(r: &BenchResult) -> Json {
         ("wall_ms", Json::num(r.wall_ms)),
         (
             "units",
-            Json::Arr(r.units.iter().map(|(_, out)| unit_output_to_json(out)).collect()),
+            Json::Arr(
+                r.units
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (_, out))| {
+                        let mut j = unit_output_to_json(out);
+                        if let (Some(p), Json::Obj(fields)) = (r.unit_stall_profile(i), &mut j)
+                        {
+                            fields.insert("profile".to_string(), sim_profile_to_json(p));
+                        }
+                        j
+                    })
+                    .collect(),
+            ),
         ),
     ])
 }
@@ -400,6 +437,42 @@ mod tests {
         let fig7 = crate::coordinator::run_experiment("fig7", &runner).unwrap();
         let j = report_to_json("fig7", "mma.m16n8k8 sweep on A100", &fig7);
         assert!(!j.get("figures").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn profiled_bench_units_carry_a_profile_section() {
+        use crate::sim::ProfileMode;
+        use crate::workload::{Plan, SimRunner, Workload};
+        let w = Workload::parse_spec("mma bf16 f32 m16n8k16").unwrap();
+        let plan = Plan::new(w).point(4, 2).compile().unwrap();
+        let off = bench_to_json(&plan.run(&SimRunner, 1).unwrap());
+        assert!(off.get("units").unwrap().as_arr().unwrap()[0].get("profile").is_none());
+
+        let r = plan.run_profiled(&SimRunner, 1, ProfileMode::Counting).unwrap();
+        let j = bench_to_json(&r);
+        let unit = &j.get("units").unwrap().as_arr().unwrap()[0];
+        let p = unit.get("profile").expect("profiled unit carries a profile section");
+        let warp_cycles = p.get_f64("warp_cycles").unwrap();
+        let category_sum: f64 = p
+            .get("categories")
+            .unwrap()
+            .as_obj()
+            .unwrap()
+            .values()
+            .map(|v| v.as_f64().unwrap())
+            .sum();
+        assert_eq!(category_sum, warp_cycles);
+        let fraction_sum: f64 = p
+            .get("fractions")
+            .unwrap()
+            .as_obj()
+            .unwrap()
+            .values()
+            .map(|v| v.as_f64().unwrap())
+            .sum();
+        assert!((fraction_sum - 1.0).abs() < 1e-9, "{fraction_sum}");
+        assert_eq!(p.get_f64("trace_events"), Some(0.0)); // Counting keeps no timeline
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

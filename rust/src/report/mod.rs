@@ -10,14 +10,16 @@
 pub mod expected;
 pub mod json;
 mod render;
+pub mod trace;
 
 pub use json::{
-    bench_to_json, deviation_stats, report_to_json, sweep_to_json, unit_output_to_json,
-    DeviationStats,
+    bench_to_json, deviation_stats, report_to_json, sim_profile_to_json, sweep_to_json,
+    unit_output_to_json, DeviationStats,
 };
 pub use render::{
     render_bench, render_figure_csv, render_sparkline, render_sweep_figure, Table,
 };
+pub use trace::trace_to_json;
 
 /// Relative deviation string for paper-vs-measured columns.
 pub fn deviation(measured: f64, paper: f64) -> String {

@@ -1,0 +1,87 @@
+//! Chrome trace-event export of a Tracing-mode [`SimProfile`].
+//!
+//! A profile collected with
+//! [`ProfileMode::Tracing`](crate::sim::ProfileMode) carries the
+//! per-warp issue timeline; this module renders it in the Chrome
+//! trace-event JSON format (`{"traceEvents": [...]}` with `ph: "X"`
+//! complete events), which `chrome://tracing` and
+//! <https://ui.perfetto.dev> open directly. One warp maps to one
+//! track (`tid`), named via `thread_name` metadata events; timestamps
+//! and durations are simulated *cycles*, displayed by the viewers in
+//! their microsecond unit (1 cycle renders as 1 µs — relative layout,
+//! not wall time).
+
+use crate::sim::SimProfile;
+use crate::util::Json;
+
+/// Render `profile.events` as a Chrome trace-event JSON document.
+/// Counting-mode profiles (no timeline) yield an empty-but-valid trace.
+pub fn trace_to_json(profile: &SimProfile) -> Json {
+    let warps = profile.events.iter().map(|e| e.warp + 1).max().unwrap_or(0);
+    let mut events: Vec<Json> = Vec::with_capacity(profile.events.len() + warps);
+    for warp in 0..warps {
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(warp as f64)),
+            ("args", Json::obj(vec![("name", Json::Str(format!("warp {warp}")))])),
+        ]));
+    }
+    for e in &profile.events {
+        events.push(Json::obj(vec![
+            ("name", Json::str(e.name)),
+            ("ph", Json::str("X")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(e.warp as f64)),
+            ("ts", Json::num(e.ts as f64)),
+            ("dur", Json::num(e.dur.max(1) as f64)),
+        ]));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::a100;
+    use crate::isa::{AbType, CdType, MmaInstr, MmaShape};
+    use crate::microbench::measure_mma_profiled;
+    use crate::sim::Profiler;
+
+    #[test]
+    fn counting_profiles_export_an_empty_valid_trace() {
+        let j = trace_to_json(&SimProfile::default());
+        assert!(j.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn traced_run_exports_named_warp_tracks() {
+        let d = a100();
+        let instr = MmaInstr::dense(AbType::Bf16, CdType::Fp32, MmaShape::new(16, 8, 16));
+        let mut profiler = Profiler::tracing();
+        measure_mma_profiled(&d, &instr, 2, 2, &mut profiler);
+        let p = profiler.take_profile().unwrap();
+        assert!(!p.events.is_empty());
+
+        let j = trace_to_json(&p);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 warps → 2 thread_name metadata events, then the timeline
+        let meta: Vec<_> =
+            events.iter().filter(|e| e.get_str("ph") == Some("M")).collect();
+        assert_eq!(meta.len(), 2);
+        assert_eq!(
+            meta[0].get("args").unwrap().get_str("name"),
+            Some("warp 0")
+        );
+        let complete: Vec<_> =
+            events.iter().filter(|e| e.get_str("ph") == Some("X")).collect();
+        assert_eq!(complete.len(), p.events.len());
+        for e in &complete {
+            assert!(e.get_f64("ts").is_some() && e.get_f64("dur").unwrap() >= 1.0, "{e}");
+        }
+        assert!(complete.iter().any(|e| e.get_str("name") == Some("mma")));
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

@@ -1,0 +1,274 @@
+//! Lock-free fixed-bucket latency histograms for tcserved.
+//!
+//! A [`Histogram`] is a fixed array of power-of-two microsecond buckets
+//! backed by relaxed atomics: recording is wait-free (one index
+//! computation plus three `fetch_add`s, no allocation, no lock), so the
+//! request hot path can time every phase without contention. Bucket `i`
+//! covers `[2^(i-1), 2^i)` µs (bucket 0 is `[0, 1)`; the last bucket is
+//! the overflow catch-all), and quantiles interpolate linearly inside
+//! the covering bucket — the standard fixed-boundary estimate, exact at
+//! bucket edges and within one bucket width everywhere else.
+//!
+//! [`HistogramSet`] is a small labeled family (per endpoint, per
+//! compute phase) resolving dynamic labels through the metrics interner
+//! so lookups never allocate in steady state.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::Json;
+
+use super::metrics::intern;
+
+/// Bucket count, overflow included: the regular buckets span
+/// `[0, 2^(BUCKETS-2))` µs — just over a second — which covers every
+/// phase this server times (whole campaign warms excepted, and those
+/// land in the overflow bucket rather than getting lost).
+pub const BUCKETS: usize = 22;
+
+/// Exclusive upper bound of bucket `i` in µs (`u64::MAX` for the
+/// overflow bucket).
+pub fn bucket_bound(i: usize) -> u64 {
+    if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        1u64 << i
+    }
+}
+
+fn bucket_index(us: u64) -> usize {
+    match us {
+        0 => 0,
+        v => ((v.ilog2() as usize) + 1).min(BUCKETS - 1),
+    }
+}
+
+/// One lock-free latency histogram (see the module docs for the bucket
+/// layout).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one observation of `us` microseconds.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the per-bucket counts.
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Estimated `q`-quantile (`0.0..=1.0`) in µs; 0 when empty. Linear
+    /// interpolation inside the covering bucket; the overflow bucket
+    /// reports its lower bound (the estimate is then a floor).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).max(1.0);
+        let mut seen = 0u64;
+        for (i, &n) in counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if seen as f64 + n as f64 >= target {
+                let lo = if i == 0 { 0 } else { 1u64 << (i - 1) };
+                if i == BUCKETS - 1 {
+                    return lo as f64;
+                }
+                let hi = 1u64 << i;
+                let into = (target - seen as f64) / n as f64;
+                return lo as f64 + into * (hi - lo) as f64;
+            }
+            seen += n;
+        }
+        0.0
+    }
+
+    /// `{count, mean_us, p50_us, p95_us, p99_us, buckets}` — buckets as
+    /// `[le_us, count]` pairs, zero buckets omitted.
+    pub fn to_json(&self) -> Json {
+        let count = self.count();
+        let mean = if count == 0 { 0.0 } else { self.sum_us() as f64 / count as f64 };
+        let buckets: Vec<Json> = self
+            .bucket_counts()
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| {
+                let le = if i >= BUCKETS - 1 {
+                    Json::str("+Inf")
+                } else {
+                    Json::num(bucket_bound(i) as f64)
+                };
+                Json::Arr(vec![le, Json::num(n as f64)])
+            })
+            .collect();
+        Json::obj(vec![
+            ("count", Json::num(count as f64)),
+            ("mean_us", Json::num(mean)),
+            ("p50_us", Json::num(self.quantile(0.50))),
+            ("p95_us", Json::num(self.quantile(0.95))),
+            ("p99_us", Json::num(self.quantile(0.99))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// A labeled family of histograms (label → [`Histogram`]); labels are
+/// interned, so the family size is bounded by the distinct-label set.
+/// The lock only guards the label map — recording into a resolved
+/// histogram is lock-free.
+#[derive(Debug, Default)]
+pub struct HistogramSet {
+    by_label: Mutex<BTreeMap<&'static str, Arc<Histogram>>>,
+}
+
+impl HistogramSet {
+    pub fn new() -> HistogramSet {
+        HistogramSet::default()
+    }
+
+    /// The histogram for `label`, created on first use.
+    pub fn get(&self, label: &str) -> Arc<Histogram> {
+        let mut map = self.by_label.lock().unwrap();
+        if let Some(h) = map.get(label) {
+            return Arc::clone(h);
+        }
+        let h = Arc::new(Histogram::new());
+        map.insert(intern(label), Arc::clone(&h));
+        h
+    }
+
+    pub fn record_us(&self, label: &str, us: u64) {
+        self.get(label).record_us(us);
+    }
+
+    /// Point-in-time view of every labeled histogram.
+    pub fn snapshot(&self) -> Vec<(&'static str, Arc<Histogram>)> {
+        self.by_label
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&label, h)| (label, Arc::clone(h)))
+            .collect()
+    }
+
+    /// `{label: histogram}` over the family.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.snapshot()
+                .into_iter()
+                .map(|(label, h)| (label.to_string(), h.to_json()))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_power_of_two_microseconds() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        // bounds and indices agree: v < bucket_bound(i) for v in bucket i
+        for v in [0u64, 1, 7, 100, 4096, 1 << 20] {
+            assert!(v < bucket_bound(bucket_index(v)), "{v}");
+        }
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0); // empty
+        for _ in 0..100 {
+            h.record_us(3); // bucket [2, 4)
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum_us(), 300);
+        let p50 = h.quantile(0.5);
+        assert!((2.0..4.0).contains(&p50), "{p50}");
+        // the p99 stays in the same (only) bucket
+        assert!((2.0..=4.0).contains(&h.quantile(0.99)));
+
+        // a bimodal distribution: p50 in the low mode, p99 in the high
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record_us(10); // bucket [8, 16)
+        }
+        for _ in 0..10 {
+            h.record_us(5000); // bucket [4096, 8192)
+        }
+        assert!((8.0..16.0).contains(&h.quantile(0.5)), "{}", h.quantile(0.5));
+        assert!((4096.0..8192.0).contains(&h.quantile(0.99)), "{}", h.quantile(0.99));
+    }
+
+    #[test]
+    fn overflow_bucket_reports_its_floor() {
+        let h = Histogram::new();
+        h.record_us(u64::MAX);
+        assert_eq!(h.bucket_counts()[BUCKETS - 1], 1);
+        assert_eq!(h.quantile(0.5), (1u64 << (BUCKETS - 2)) as f64);
+    }
+
+    #[test]
+    fn labeled_sets_share_histograms_per_label() {
+        let set = HistogramSet::new();
+        // dynamic (String) labels resolve to one interned histogram
+        set.record_us(&String::from("parse"), 10);
+        set.record_us("parse", 20);
+        set.record_us("simulate", 1000);
+        let snap = set.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(set.get("parse").count(), 2);
+        assert_eq!(set.get("simulate").count(), 1);
+
+        let j = set.to_json();
+        assert_eq!(j.get("parse").unwrap().get_u64("count"), Some(2));
+        assert!((j.get("parse").unwrap().get_f64("mean_us").unwrap() - 15.0).abs() < 1e-9);
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn json_shape_lists_only_populated_buckets() {
+        let h = Histogram::new();
+        h.record_us(0);
+        h.record_us(100);
+        let j = h.to_json();
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[0].as_arr().unwrap()[0].as_f64(), Some(1.0));
+        assert_eq!(buckets[1].as_arr().unwrap()[0].as_f64(), Some(128.0));
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

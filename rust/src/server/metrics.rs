@@ -1,8 +1,11 @@
 //! tcserved observability: request counters, cache hit rates (both the
-//! per-unit result cache and the process-wide cell cache) and
-//! per-experiment compute cost, exported as JSON at `/v1/metrics`.
+//! per-unit result cache and the process-wide cell cache),
+//! per-experiment compute cost, and request/phase latency histograms —
+//! exported as JSON at `/v1/metrics` and in Prometheus text exposition
+//! format at `/metrics`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -10,6 +13,23 @@ use std::time::Instant;
 use crate::util::Json;
 
 use super::cache::CacheStats;
+use super::histogram::{bucket_bound, HistogramSet, BUCKETS};
+
+/// Intern a metrics label, returning a `&'static str` equal to it.
+/// Each *distinct* label leaks exactly once; every label family here is
+/// bounded (route labels, phase names, experiment ids), so the total
+/// leak is bounded too — while dynamic strings can be recorded without
+/// a per-call allocation or an unbounded leak.
+pub fn intern(label: &str) -> &'static str {
+    static INTERNED: Mutex<BTreeSet<&'static str>> = Mutex::new(BTreeSet::new());
+    let mut set = INTERNED.lock().unwrap();
+    if let Some(&s) = set.get(label) {
+        return s;
+    }
+    let s: &'static str = Box::leak(label.to_string().into_boxed_str());
+    set.insert(s);
+    s
+}
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ComputeStat {
@@ -25,7 +45,11 @@ pub struct Metrics {
     cache_coalesced: AtomicU64,
     by_endpoint: Mutex<BTreeMap<&'static str, u64>>,
     by_status: Mutex<BTreeMap<u16, u64>>,
-    computes: Mutex<BTreeMap<String, ComputeStat>>,
+    computes: Mutex<BTreeMap<&'static str, ComputeStat>>,
+    /// End-to-end request latency per endpoint label.
+    request_latency: HistogramSet,
+    /// Phase latency (`parse`, `cache_lookup`, `simulate`, `render`).
+    phases: HistogramSet,
 }
 
 impl Metrics {
@@ -39,12 +63,14 @@ impl Metrics {
             by_endpoint: Mutex::new(BTreeMap::new()),
             by_status: Mutex::new(BTreeMap::new()),
             computes: Mutex::new(BTreeMap::new()),
+            request_latency: HistogramSet::new(),
+            phases: HistogramSet::new(),
         }
     }
 
-    pub fn record_request(&self, endpoint: &'static str) {
+    pub fn record_request(&self, endpoint: &str) {
         self.requests_total.fetch_add(1, Ordering::Relaxed);
-        *self.by_endpoint.lock().unwrap().entry(endpoint).or_insert(0) += 1;
+        *self.by_endpoint.lock().unwrap().entry(intern(endpoint)).or_insert(0) += 1;
     }
 
     pub fn record_status(&self, status: u16) {
@@ -66,26 +92,40 @@ impl Metrics {
     /// One completed computation of `id`, taking `ms` milliseconds.
     pub fn record_compute(&self, id: &str, ms: f64) {
         let mut computes = self.computes.lock().unwrap();
-        let stat = computes.entry(id.to_string()).or_default();
+        let stat = computes.entry(intern(id)).or_default();
         stat.count += 1;
         stat.total_ms += ms;
+    }
+
+    /// One end-to-end request on `endpoint`, taking `us` microseconds.
+    pub fn record_latency(&self, endpoint: &str, us: u64) {
+        self.request_latency.record_us(endpoint, us);
+    }
+
+    /// One request phase (`parse`, `cache_lookup`, `simulate`,
+    /// `render`), taking `us` microseconds.
+    pub fn record_phase(&self, phase: &str, us: u64) {
+        self.phases.record_us(phase, us);
     }
 
     pub fn requests_total(&self) -> u64 {
         self.requests_total.load(Ordering::Relaxed)
     }
 
-    pub fn to_json(&self, cache: CacheStats) -> Json {
-        let hits = self.cache_hits.load(Ordering::Relaxed);
-        let misses = self.cache_misses.load(Ordering::Relaxed);
-        let coalesced = self.cache_coalesced.load(Ordering::Relaxed);
+    fn hit_rate(hits: u64, misses: u64, coalesced: u64) -> f64 {
         let looked_up = hits + misses + coalesced;
-        let hit_rate = if looked_up == 0 {
+        if looked_up == 0 {
             0.0
         } else {
             // coalesced requests were served without recomputation too
             (hits + coalesced) as f64 / looked_up as f64
-        };
+        }
+    }
+
+    pub fn to_json(&self, cache: CacheStats) -> Json {
+        let hits = self.cache_hits.load(Ordering::Relaxed);
+        let misses = self.cache_misses.load(Ordering::Relaxed);
+        let coalesced = self.cache_coalesced.load(Ordering::Relaxed);
 
         let by_endpoint = Json::Obj(
             self.by_endpoint
@@ -110,7 +150,7 @@ impl Metrics {
                 .iter()
                 .map(|(id, s)| {
                     (
-                        id.clone(),
+                        id.to_string(),
                         Json::obj(vec![
                             ("computes", Json::num(s.count as f64)),
                             ("total_ms", Json::num(s.total_ms)),
@@ -135,7 +175,7 @@ impl Metrics {
                     ("hits", Json::num(hits as f64)),
                     ("misses", Json::num(misses as f64)),
                     ("coalesced", Json::num(coalesced as f64)),
-                    ("hit_rate", Json::num(hit_rate)),
+                    ("hit_rate", Json::num(Self::hit_rate(hits, misses, coalesced))),
                     ("entries", Json::num(cache.entries as f64)),
                     ("capacity", Json::num(cache.capacity as f64)),
                     ("evictions", Json::num(cache.evictions as f64)),
@@ -156,7 +196,181 @@ impl Metrics {
                 ])
             }),
             ("experiments", experiments),
+            ("latency_us", self.request_latency.to_json()),
+            ("phases_us", self.phases.to_json()),
         ])
+    }
+
+    /// Render every counter, gauge and histogram in the Prometheus text
+    /// exposition format (served at `GET /metrics`). The values are the
+    /// same ones `/v1/metrics` reports as JSON.
+    pub fn to_prometheus(&self, cache: CacheStats) -> String {
+        let mut out = String::with_capacity(4096);
+        let mut metric = |name: &str, kind: &str, help: &str, lines: &[(String, f64)]| {
+            let _ = writeln!(out, "# HELP tcserved_{name} {help}");
+            let _ = writeln!(out, "# TYPE tcserved_{name} {kind}");
+            for (labels, value) in lines {
+                let _ = writeln!(out, "tcserved_{name}{labels} {value}");
+            }
+        };
+
+        metric(
+            "uptime_seconds",
+            "gauge",
+            "Seconds since server start.",
+            &[(String::new(), self.started.elapsed().as_secs_f64())],
+        );
+        metric(
+            "requests_total",
+            "counter",
+            "Total HTTP requests received.",
+            &[(String::new(), self.requests_total() as f64)],
+        );
+        metric(
+            "endpoint_requests_total",
+            "counter",
+            "HTTP requests by endpoint label.",
+            &self
+                .by_endpoint
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (format!("{{endpoint=\"{k}\"}}"), *v as f64))
+                .collect::<Vec<_>>(),
+        );
+        metric(
+            "responses_total",
+            "counter",
+            "HTTP responses by status code.",
+            &self
+                .by_status
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (format!("{{status=\"{k}\"}}"), *v as f64))
+                .collect::<Vec<_>>(),
+        );
+
+        let hits = self.cache_hits.load(Ordering::Relaxed);
+        let misses = self.cache_misses.load(Ordering::Relaxed);
+        let coalesced = self.cache_coalesced.load(Ordering::Relaxed);
+        for (name, help, value) in [
+            ("result_cache_hits_total", "Result-cache hits (memory or disk).", hits as f64),
+            ("result_cache_misses_total", "Result-cache misses (computed).", misses as f64),
+            (
+                "result_cache_coalesced_total",
+                "Requests coalesced onto an in-flight computation.",
+                coalesced as f64,
+            ),
+            ("result_cache_evictions_total", "Result-cache LRU evictions.", cache.evictions as f64),
+        ] {
+            metric(name, "counter", help, &[(String::new(), value)]);
+        }
+        metric(
+            "result_cache_entries",
+            "gauge",
+            "Result-cache entries resident in memory.",
+            &[(String::new(), cache.entries as f64)],
+        );
+        metric(
+            "result_cache_capacity",
+            "gauge",
+            "Result-cache in-memory capacity.",
+            &[(String::new(), cache.capacity as f64)],
+        );
+
+        let cells = crate::workload::cell_cache_stats();
+        for (name, help, value) in [
+            ("cell_cache_hits_total", "Cell-cache hits (process-wide).", cells.hits as f64),
+            ("cell_cache_misses_total", "Cell-cache misses.", cells.misses as f64),
+            ("cell_cache_evictions_total", "Cell-cache evictions.", cells.evictions as f64),
+            (
+                "cell_cache_cells_simulated_total",
+                "Single-cell simulations executed.",
+                cells.cells_simulated as f64,
+            ),
+        ] {
+            metric(name, "counter", help, &[(String::new(), value)]);
+        }
+        metric(
+            "cell_cache_entries",
+            "gauge",
+            "Cell-cache entries resident.",
+            &[(String::new(), cells.entries as f64)],
+        );
+        metric(
+            "cell_cache_capacity",
+            "gauge",
+            "Cell-cache capacity.",
+            &[(String::new(), cells.capacity as f64)],
+        );
+
+        {
+            let computes = self.computes.lock().unwrap();
+            metric(
+                "computes_total",
+                "counter",
+                "Completed computations by experiment/endpoint id.",
+                &computes
+                    .iter()
+                    .map(|(id, s)| (format!("{{id=\"{id}\"}}"), s.count as f64))
+                    .collect::<Vec<_>>(),
+            );
+            metric(
+                "compute_ms_total",
+                "counter",
+                "Total compute milliseconds by experiment/endpoint id.",
+                &computes
+                    .iter()
+                    .map(|(id, s)| (format!("{{id=\"{id}\"}}"), s.total_ms))
+                    .collect::<Vec<_>>(),
+            );
+        }
+
+        for (name, label_key, help, set) in [
+            (
+                "request_duration_us",
+                "endpoint",
+                "End-to-end request latency by endpoint (microseconds).",
+                &self.request_latency,
+            ),
+            (
+                "phase_duration_us",
+                "phase",
+                "Request-phase latency (parse/cache_lookup/simulate/render; microseconds).",
+                &self.phases,
+            ),
+        ] {
+            let mut lines: Vec<(String, f64)> = Vec::new();
+            for (label, h) in set.snapshot() {
+                let mut cumulative = 0u64;
+                for (i, n) in h.bucket_counts().into_iter().enumerate() {
+                    cumulative += n;
+                    if n == 0 && i != BUCKETS - 1 {
+                        continue; // sparse: only populated buckets + +Inf
+                    }
+                    let le = if i == BUCKETS - 1 {
+                        "+Inf".to_string()
+                    } else {
+                        bucket_bound(i).to_string()
+                    };
+                    lines.push((
+                        format!("_bucket{{{label_key}=\"{label}\",le=\"{le}\"}}"),
+                        cumulative as f64,
+                    ));
+                }
+                lines.push((format!("_sum{{{label_key}=\"{label}\"}}"), h.sum_us() as f64));
+                lines.push((format!("_count{{{label_key}=\"{label}\"}}"), h.count() as f64));
+            }
+            // histogram suffixes are part of the line name, not the
+            // family name, so append them manually under one HELP/TYPE
+            let _ = writeln!(out, "# HELP tcserved_{name} {help}");
+            let _ = writeln!(out, "# TYPE tcserved_{name} histogram");
+            for (suffix, value) in lines {
+                let _ = writeln!(out, "tcserved_{name}{suffix} {value}");
+            }
+        }
+        out
     }
 }
 
@@ -207,5 +421,81 @@ mod tests {
         }
         // the whole document serializes to valid JSON
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn interning_returns_one_static_str_per_label() {
+        let a = intern(&String::from("some-label"));
+        let b = intern("some-label");
+        assert_eq!(a, b);
+        assert_eq!(a.as_ptr(), b.as_ptr(), "one leaked allocation per distinct label");
+        assert_ne!(intern("other-label"), a);
+    }
+
+    #[test]
+    fn dynamic_labels_and_latency_histograms_flow_into_json() {
+        let m = Metrics::new();
+        // &str (non-'static) labels are accepted everywhere
+        let endpoint = String::from("sweep");
+        m.record_request(&endpoint);
+        m.record_latency(&endpoint, 1500);
+        m.record_latency(&endpoint, 2500);
+        m.record_phase("parse", 3);
+        m.record_phase("simulate", 900);
+
+        let j = m.to_json(CacheStats { entries: 0, capacity: 8, evictions: 0 });
+        assert_eq!(j.get("by_endpoint").unwrap().get_u64("sweep"), Some(1));
+        let lat = j.get("latency_us").unwrap().get("sweep").unwrap();
+        assert_eq!(lat.get_u64("count"), Some(2));
+        assert!((lat.get_f64("mean_us").unwrap() - 2000.0).abs() < 1e-9);
+        assert!(lat.get_f64("p99_us").unwrap() >= lat.get_f64("p50_us").unwrap());
+        let phases = j.get("phases_us").unwrap();
+        assert_eq!(phases.get("parse").unwrap().get_u64("count"), Some(1));
+        assert_eq!(phases.get("simulate").unwrap().get_u64("count"), Some(1));
+    }
+
+    #[test]
+    fn prometheus_rendering_matches_the_json_counters() {
+        let m = Metrics::new();
+        m.record_request("run");
+        m.record_request("plan");
+        m.record_status(200);
+        m.record_hit();
+        m.record_miss();
+        m.record_compute("plan", 12.5);
+        m.record_latency("run", 42);
+        m.record_phase("render", 7);
+
+        let stats = CacheStats { entries: 2, capacity: 8, evictions: 1 };
+        let text = m.to_prometheus(stats);
+        // every non-comment line is `name{labels} value`
+        let mut names_seen = BTreeSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split_whitespace().next().unwrap();
+                assert!(names_seen.insert(name.to_string()), "duplicate HELP for {name}");
+                continue;
+            }
+            if line.starts_with("# TYPE ") || line.is_empty() {
+                continue;
+            }
+            let (name_labels, value) = line.rsplit_once(' ').unwrap();
+            assert!(name_labels.starts_with("tcserved_"), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+        }
+        assert!(text.contains("tcserved_requests_total 2"));
+        assert!(text.contains("tcserved_endpoint_requests_total{endpoint=\"run\"} 1"));
+        assert!(text.contains("tcserved_responses_total{status=\"200\"} 1"));
+        assert!(text.contains("tcserved_result_cache_hits_total 1"));
+        assert!(text.contains("tcserved_result_cache_misses_total 1"));
+        assert!(text.contains("tcserved_result_cache_entries 2"));
+        assert!(text.contains("tcserved_computes_total{id=\"plan\"} 1"));
+        assert!(text.contains("tcserved_compute_ms_total{id=\"plan\"} 12.5"));
+        assert!(text.contains("tcserved_request_duration_us_count{endpoint=\"run\"} 1"));
+        assert!(text.contains("tcserved_request_duration_us_sum{endpoint=\"run\"} 42"));
+        // cumulative histogram ends at +Inf == count
+        assert!(text
+            .contains("tcserved_request_duration_us_bucket{endpoint=\"run\",le=\"+Inf\"} 1"));
+        assert!(text.contains("tcserved_phase_duration_us_bucket{phase=\"render\",le=\"8\"} 1"));
     }
 }

@@ -15,15 +15,19 @@
 //! GET  /v1/run/<id>         one experiment, cached  [?backend=native|pjrt|auto]
 //! GET  /v1/sweep            ad-hoc (ILP, warps) sweep [?device=&instr=&sparse=]
 //! POST /v1/plan             run a JSON BenchPlan; batched, cached per unit
-//! GET  /v1/metrics          request counts, cache hit rate, compute times
+//! GET  /v1/metrics          request counts, cache hit rate, compute times,
+//!                           latency histograms (JSON)
+//! GET  /metrics             the same counters in Prometheus text format
 //! ```
 //!
 //! Layering: [`http`] parses/writes the wire format, [`router`] maps
 //! requests onto the campaign ([`cache`]-backed, single-flight),
-//! [`metrics`] counts everything, and this module owns sockets and
+//! [`metrics`] counts everything (with [`histogram`] supplying the
+//! lock-free latency histograms), and this module owns sockets and
 //! threads.
 
 pub mod cache;
+pub mod histogram;
 pub mod http;
 pub mod metrics;
 pub mod router;
@@ -167,8 +171,15 @@ fn handle_connection(state: &AppState, mut stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
     let _ = stream.set_nodelay(true);
-    let response = match http::read_request(&mut stream) {
-        Ok(req) => router::handle(state, &req),
+    let t_parse = std::time::Instant::now();
+    let parsed = http::read_request(&mut stream);
+    let response = match parsed {
+        Ok(req) => {
+            state
+                .metrics
+                .record_phase("parse", t_parse.elapsed().as_micros() as u64);
+            router::handle(state, &req)
+        }
         // A connection closed without sending anything (port probe,
         // stop()'s wake-up socket) is not a request — no response to
         // write, nothing to count.
@@ -194,7 +205,7 @@ pub fn serve_blocking(cfg: ServerConfig) -> Result<()> {
     );
     eprintln!(
         "[tcserved] endpoints: /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep \
-         POST:/v1/plan /v1/metrics"
+         POST:/v1/plan /v1/metrics /metrics"
     );
     server.join();
     Ok(())

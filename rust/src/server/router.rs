@@ -41,6 +41,7 @@ fn endpoint_label(path: &str) -> &'static str {
         "/v1/experiments" => "experiments",
         "/v1/devices" => "devices",
         "/v1/metrics" => "metrics",
+        "/metrics" => "prometheus",
         "/v1/sweep" => "sweep",
         "/v1/plan" => "plan",
         p if p.starts_with("/v1/run/") => "run",
@@ -48,9 +49,18 @@ fn endpoint_label(path: &str) -> &'static str {
     }
 }
 
-/// Dispatch one parsed request.
+/// Dispatch one parsed request, recording its count and end-to-end
+/// latency under the endpoint label.
 pub fn handle(state: &AppState, req: &Request) -> Response {
-    state.metrics.record_request(endpoint_label(&req.path));
+    let label = endpoint_label(&req.path);
+    state.metrics.record_request(label);
+    let t0 = Instant::now();
+    let response = route(state, req);
+    state.metrics.record_latency(label, t0.elapsed().as_micros() as u64);
+    response
+}
+
+fn route(state: &AppState, req: &Request) -> Response {
     if req.path == "/v1/plan" {
         if req.method != "POST" {
             return Response::error(
@@ -77,6 +87,7 @@ pub fn handle(state: &AppState, req: &Request) -> Response {
         "/v1/experiments" => experiments(state),
         "/v1/devices" => devices(),
         "/v1/metrics" => metrics(state),
+        "/metrics" => prometheus(state),
         "/v1/sweep" => sweep(state, req),
         p if p.starts_with("/v1/run/") => run(state, req, &p["/v1/run/".len()..]),
         other => Response::error(404, format!("no route for {other:?}")),
@@ -144,6 +155,17 @@ fn metrics(state: &AppState) -> Response {
     Response::json(200, &state.metrics.to_json(state.cache.stats()))
 }
 
+/// `GET /metrics` — every counter, gauge and histogram in the
+/// Prometheus text exposition format (the same values `/v1/metrics`
+/// reports as JSON, so the two always agree).
+fn prometheus(state: &AppState) -> Response {
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4",
+        body: state.metrics.to_prometheus(state.cache.stats()),
+    }
+}
+
 fn note_origin(state: &AppState, origin: Origin) {
     match origin {
         Origin::Memory | Origin::Disk => state.metrics.record_hit(),
@@ -154,18 +176,26 @@ fn note_origin(state: &AppState, origin: Origin) {
 
 /// Wrap a cached payload for the wire: the payload is the content-addressed
 /// value; `cached`/`origin` describe how this particular request got it.
-fn respond_cached(result: Result<String, String>, origin: Origin) -> Response {
+/// Re-serializing the payload is the `render` phase.
+fn respond_cached(
+    state: &AppState,
+    result: Result<String, String>,
+    origin: Origin,
+) -> Response {
     match result {
         Ok(body) => {
+            let t0 = Instant::now();
             let inner = Json::parse(&body).unwrap_or(Json::Str(body));
-            Response::json(
+            let response = Response::json(
                 200,
                 &Json::obj(vec![
                     ("cached", Json::Bool(origin != Origin::Computed)),
                     ("origin", Json::str(origin.name())),
                     ("result", inner),
                 ]),
-            )
+            );
+            state.metrics.record_phase("render", t0.elapsed().as_micros() as u64);
+            response
         }
         Err(e) => Response::error(500, e),
     }
@@ -187,7 +217,7 @@ fn run(state: &AppState, req: &Request, id: &str) -> Response {
         Err(e) => return Response::error(400, format!("{e:#}")),
     };
     let (result, origin) = run_cached(state, exp, kind);
-    respond_cached(result, origin)
+    respond_cached(state, result, origin)
 }
 
 /// Cached execution of one experiment — shared by the HTTP handler and
@@ -202,8 +232,14 @@ pub fn run_cached(
     // environment (artifact availability) changes.
     let kind = kind.resolve();
     let key = cache_key(exp.id, kind.name(), "-", "-");
+    let t0 = Instant::now();
     let (result, origin) =
         state.cache.get_or_compute(&key, || compute_experiment(state, exp, kind, &key));
+    // a served-from-cache request's whole cost is the lookup; computed
+    // requests record their cost as the `simulate` phase instead
+    if origin != Origin::Computed {
+        state.metrics.record_phase("cache_lookup", t0.elapsed().as_micros() as u64);
+    }
     note_origin(state, origin);
     (result, origin)
 }
@@ -231,6 +267,7 @@ fn compute_experiment(
     };
     let ms = t0.elapsed().as_secs_f64() * 1e3;
     state.metrics.record_compute(exp.id, ms);
+    state.metrics.record_phase("simulate", (ms * 1e3) as u64);
     Ok(Json::obj(vec![
         ("id", Json::str(exp.id)),
         ("backend", Json::Str(backend_name)),
@@ -326,14 +363,17 @@ fn sweep(state: &AppState, req: &Request) -> Response {
         fields.insert("ptx".to_string(), Json::Str(instr.ptx()));
         fields.insert("sparse".to_string(), Json::Bool(instr.sparse));
     }
-    Response::json(
+    let t0 = Instant::now();
+    let response = Response::json(
         200,
         &Json::obj(vec![
             ("cached", Json::Bool(origin != Origin::Computed)),
             ("origin", Json::str(origin.name())),
             ("result", Json::Obj(fields)),
         ]),
-    )
+    );
+    state.metrics.record_phase("render", t0.elapsed().as_micros() as u64);
+    response
 }
 
 // ----------------------------------------------------------------- /v1/plan
@@ -399,7 +439,8 @@ fn plan(state: &AppState, req: &Request) -> Response {
             ("result", Json::parse(&body).unwrap_or(Json::Str(body))),
         ]));
     }
-    Response::json(
+    let t0 = Instant::now();
+    let response = Response::json(
         200,
         &Json::obj(vec![
             ("workload", Json::Str(bench.workload.to_spec())),
@@ -409,7 +450,9 @@ fn plan(state: &AppState, req: &Request) -> Response {
             ("count", Json::num(units.len() as f64)),
             ("units", Json::Arr(units)),
         ]),
-    )
+    );
+    state.metrics.record_phase("render", t0.elapsed().as_micros() as u64);
+    response
 }
 
 /// Cached execution of one plan unit (content-addressed by the unit
@@ -424,9 +467,13 @@ fn unit_cached(
     metrics_label: &'static str,
 ) -> (Result<String, String>, Origin) {
     let key = cache_key("plan", runner.name(), bench.device.name, &bench.unit_token(&unit));
+    let t0 = Instant::now();
     let (result, origin) = state
         .cache
         .get_or_compute(&key, || compute_unit(state, bench, unit, runner, &key, metrics_label));
+    if origin != Origin::Computed {
+        state.metrics.record_phase("cache_lookup", t0.elapsed().as_micros() as u64);
+    }
     note_origin(state, origin);
     (result, origin)
 }
@@ -454,6 +501,7 @@ fn compute_unit(
     };
     let ms = t0.elapsed().as_secs_f64() * 1e3;
     state.metrics.record_compute(metrics_label, ms);
+    state.metrics.record_phase("simulate", (ms * 1e3) as u64);
     let Json::Obj(mut fields) = report::unit_output_to_json(&output) else {
         unreachable!("unit_output_to_json returns an object")
     };
@@ -566,6 +614,53 @@ mod tests {
         let t10 = m.get("experiments").unwrap().get("t10").unwrap();
         assert_eq!(t10.get_u64("computes"), Some(1)); // auto coalesced onto native
         assert_eq!(m.get("cache").unwrap().get_u64("hits"), Some(2));
+    }
+
+    #[test]
+    fn prometheus_endpoint_serves_text_exposition() {
+        let s = state();
+        // drive some traffic so the counters are non-trivial
+        assert_eq!(get(&s, "/healthz").status, 200);
+        assert_eq!(get(&s, "/v1/sweep?device=a100&instr=ldmatrix,x1").status, 200);
+        assert_eq!(get(&s, "/v1/sweep?device=a100&instr=ldmatrix,x1").status, 200);
+
+        // snapshot the JSON counters, then render Prometheus from the
+        // same state (the /v1/metrics request itself bumps the counters,
+        // so read the JSON response body, not a second scrape)
+        let json = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let r = get(&s, "/metrics");
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert_eq!(r.content_type, "text/plain; version=0.0.4");
+
+        // the JSON snapshot already counts its own request (recorded
+        // before routing), so the later /metrics scrape is one ahead
+        let expect_total = json.get_u64("requests_total").unwrap() + 1;
+        assert!(
+            r.body.contains(&format!("tcserved_requests_total {expect_total}")),
+            "{}",
+            r.body
+        );
+        let hits = json.get("cache").unwrap().get_u64("hits").unwrap();
+        assert!(
+            r.body.contains(&format!("tcserved_result_cache_hits_total {hits}")),
+            "{}",
+            r.body
+        );
+        let sweeps = json.get("by_endpoint").unwrap().get_u64("sweep").unwrap();
+        assert!(r
+            .body
+            .contains(&format!("tcserved_endpoint_requests_total{{endpoint=\"sweep\"}} {sweeps}")));
+        // phase histograms recorded: a computed sweep (simulate+render)
+        // and a cached one (cache_lookup+render)
+        for phase in ["simulate", "cache_lookup", "render"] {
+            assert!(
+                r.body.contains(&format!("phase_duration_us_count{{phase=\"{phase}\"}}")),
+                "missing {phase} histogram:\n{}",
+                r.body
+            );
+        }
+        // request-latency histogram per endpoint label
+        assert!(r.body.contains("tcserved_request_duration_us_bucket{endpoint=\"sweep\",le="));
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::sync::Arc;
 
 use crate::device::Device;
 
+use super::profile::{Blocked, Profiler, Stall};
 use super::program::{Op, WarpProgram};
 
 /// Steady-state early exit: a warp counts as converged once it has at
@@ -266,18 +267,21 @@ impl<'d> SmSim<'d> {
     }
 
     /// Can `warp` issue its next instruction at `now`? Returns the
-    /// stall-release lower bound when blocked (for event skipping).
-    fn issue_block(&mut self, warp: usize) -> Result<(), u64> {
+    /// stall-release lower bound when blocked (for event skipping),
+    /// tagged with the pipeline cause (for stall attribution).
+    fn issue_block(&mut self, warp: usize) -> Result<(), Blocked> {
         let now = self.now;
         // Retire completed in-flight entries first — a warp blocked on
         // the pending cap must see completions even while not issuing.
         self.warps[warp].gc(now);
         let st = &self.warps[warp];
         if st.pc >= self.programs[warp].instrs.len() {
-            return Err(u64::MAX);
+            return Err(Blocked::new(u64::MAX, Stall::Done));
         }
         if st.next_issue > now {
-            return Err(st.next_issue);
+            // Issue recovery, a sync tail or a barrier-release wait: the
+            // slot is unavailable rather than a pipeline resource.
+            return Err(Blocked::new(st.next_issue, Stall::IssueSlot));
         }
         let instr = &self.programs[warp].instrs[st.pc];
         // Operand readiness.
@@ -288,7 +292,7 @@ impl<'d> SmSim<'d> {
             }
         }
         if ready_at > now {
-            return Err(ready_at);
+            return Err(Blocked::new(ready_at, Stall::ScoreboardDep));
         }
         match &instr.op {
             Op::Mma { ii, latency, fpu, .. } => {
@@ -297,14 +301,14 @@ impl<'d> SmSim<'d> {
                 wd.refill(now, latency.max(ii + 1));
                 if !wd.can_accept(ii + 1) {
                     let deficit = (ii + 1) as f64 - wd.level;
-                    return Err(now + deficit.ceil() as u64);
+                    return Err(Blocked::new(now + deficit.ceil() as u64, Stall::TokenBucket));
                 }
                 let sc = self.subcore_of(warp);
                 let eng = if *fpu { &mut self.fpu_engines[sc] } else { &mut self.tc_engines[sc] };
                 eng.refill(now, latency.max(ii));
                 if !eng.can_accept(ii) {
                     let deficit = ii as f64 - eng.level;
-                    return Err(now + deficit.ceil() as u64);
+                    return Err(Blocked::new(now + deficit.ceil() as u64, Stall::TokenBucket));
                 }
                 Ok(())
             }
@@ -312,7 +316,7 @@ impl<'d> SmSim<'d> {
                 let st = &self.warps[warp];
                 if st.loads_inflight.len() >= self.device.lsu_pending_per_warp as usize {
                     let earliest = st.loads_inflight.iter().copied().min().unwrap();
-                    return Err(earliest);
+                    return Err(Blocked::new(earliest, Stall::SmemConflict));
                 }
                 Ok(())
             }
@@ -326,7 +330,7 @@ impl<'d> SmSim<'d> {
                     let mut sorted = pending;
                     sorted.sort_unstable();
                     let release = sorted[sorted.len() - 1 - *max_pending as usize];
-                    return Err(release);
+                    return Err(Blocked::new(release, Stall::CpAsyncWait));
                 }
                 Ok(())
             }
@@ -334,15 +338,46 @@ impl<'d> SmSim<'d> {
                 let st = &self.warps[warp];
                 let last_mma = st.mma_inflight.iter().copied().max().unwrap_or(0);
                 if last_mma > now {
-                    return Err(last_mma);
+                    // Waiting on outstanding mma results: a data
+                    // dependency, even though no register is named.
+                    return Err(Blocked::new(last_mma, Stall::ScoreboardDep));
                 }
                 Ok(())
             }
             Op::BarSync => {
                 // Handled collectively in `try_release_barrier`.
-                Err(u64::MAX - 1)
+                Err(Blocked::new(u64::MAX - 1, Stall::IssueSlot))
             }
             Op::IterMark => Ok(()),
+        }
+    }
+
+    /// Static name and modeled occupancy of `warp`'s next instruction —
+    /// a rendering hint for trace events, read before [`Self::issue`].
+    fn trace_info(&self, warp: usize) -> (&'static str, u64) {
+        let d = self.device;
+        match &self.programs[warp].instrs[self.warps[warp].pc].op {
+            Op::Mma { latency, fpu, .. } => (if *fpu { "fma" } else { "mma" }, *latency as u64),
+            Op::SmemLoad { txns, .. } => (
+                "smem_load",
+                (*txns as u64) * d.lsu_txn_cycles as u64 + d.lsu_tail as u64,
+            ),
+            Op::SmemStore { txns, .. } => {
+                ("smem_store", (*txns as u64) * d.lsu_txn_cycles as u64)
+            }
+            Op::GmemLoad { bytes } => (
+                "gmem_load",
+                bytes.div_ceil(d.gmem_bytes_per_cycle as u64).max(1) + d.gmem_latency as u64,
+            ),
+            Op::CpAsync { bytes } => (
+                "cp_async",
+                bytes.div_ceil(d.gmem_bytes_per_cycle as u64).max(1) + d.gmem_latency as u64,
+            ),
+            Op::CpAsyncCommit => ("cp_async_commit", 1),
+            Op::CpAsyncWait { .. } => ("cp_async_wait", 1),
+            Op::SyncWarp => ("sync_warp", d.sync_cost as u64),
+            Op::BarSync => ("bar_sync", 1),
+            Op::IterMark => ("iter_mark", 1),
         }
     }
 
@@ -467,8 +502,32 @@ impl<'d> SmSim<'d> {
         true
     }
 
-    /// Run to completion; returns per-warp measurements.
-    pub fn run(mut self) -> Vec<WarpResult> {
+    /// Run to completion; returns per-warp measurements. Equivalent to
+    /// [`Self::run_profiled`] with a [`Profiler::Null`] — the unprofiled
+    /// fast path every pinned timing result goes through.
+    pub fn run(self) -> Vec<WarpResult> {
+        self.run_profiled(&mut Profiler::Null)
+    }
+
+    /// Run to completion, attributing every warp-cycle to a stall
+    /// category through `profiler` (extract the accumulated
+    /// [`SimProfile`](super::SimProfile) with
+    /// [`Profiler::take_profile`] afterwards).
+    ///
+    /// The timing schedule is *identical* in all three profiler modes:
+    /// the profiler only observes the stall causes the event-skipping
+    /// loop already computes, never adds probes, and a warp that was not
+    /// scanned this cycle (the sub-core found an issuer before reaching
+    /// it) is attributed `issue_slot` rather than probed — probing would
+    /// touch the token-bucket refill clocks and could perturb the
+    /// schedule of heterogeneous programs.
+    pub fn run_profiled(mut self, profiler: &mut Profiler) -> Vec<WarpResult> {
+        let profiling = profiler.is_on();
+        profiler.begin(self.warps.len() as u64);
+        // One stall cause per warp per simulated cycle; only allocated
+        // when profiling is on (the Null path never touches it).
+        let mut causes: Vec<Stall> =
+            if profiling { vec![Stall::IssueSlot; self.warps.len()] } else { Vec::new() };
         while !self.all_done() {
             if self.now >= self.max_cycles {
                 panic!("tcsim exceeded max_cycles — deadlocked program?");
@@ -497,6 +556,17 @@ impl<'d> SmSim<'d> {
                     break;
                 }
             }
+            if profiling {
+                // Default attribution, refined by the scan below: a
+                // retired warp is `done`, an unscanned one lost the slot.
+                for (w, cause) in causes.iter_mut().enumerate() {
+                    *cause = if self.warps[w].pc >= self.programs[w].instrs.len() {
+                        Stall::Done
+                    } else {
+                        Stall::IssueSlot
+                    };
+                }
+            }
             let mut issued_any = false;
             let mut next_event = u64::MAX;
             // Each sub-core issues at most one instruction per cycle,
@@ -518,13 +588,25 @@ impl<'d> SmSim<'d> {
                     let w = warps_here[idx];
                     match self.issue_block(w) {
                         Ok(()) => {
+                            if profiler.is_tracing() {
+                                let (name, dur) = self.trace_info(w);
+                                profiler.record_issue(w, name, self.now, dur);
+                            }
+                            if profiling {
+                                causes[w] = Stall::Issued;
+                            }
                             self.issue(w);
                             self.lrr[sc] = idx + 1;
                             issued = true;
                             issued_any = true;
                             break;
                         }
-                        Err(t) => next_event = next_event.min(t),
+                        Err(b) => {
+                            if profiling {
+                                causes[w] = b.stall;
+                            }
+                            next_event = next_event.min(b.release);
+                        }
                     }
                 }
                 if issued {
@@ -533,16 +615,24 @@ impl<'d> SmSim<'d> {
                 self.subcore_warps[sc] = warps_here;
             }
             if !issued_any && self.try_release_barrier() {
+                // The barrier release moves no clock: the re-scan next
+                // iteration recomputes every cause, so nothing is
+                // accounted here.
                 continue;
             }
             if issued_any {
+                profiler.account(&causes, 1);
                 self.now += 1;
             } else {
-                // Event skip: jump to the earliest stall release.
+                // Event skip: jump to the earliest stall release. The
+                // skipped span is attributed to the causes just
+                // computed — by construction nothing changes until the
+                // earliest release cycle.
                 let target = next_event.max(self.now + 1);
                 if target >= u64::MAX - 1 {
                     panic!("tcsim deadlock: no warp can ever issue");
                 }
+                profiler.account(&causes, target - self.now);
                 self.now = target;
             }
         }
@@ -749,6 +839,44 @@ mod tests {
                 r.iter_marks.len()
             );
         }
+    }
+
+    #[test]
+    fn profiled_run_is_bit_identical_and_accounts_every_warp_cycle() {
+        use super::super::profile::Profiler;
+        let d = a100();
+        let plain = SmSim::new(&d, vec![mma_loop(64, 2, 8, 24); 6]).run();
+        let mut prof = Profiler::counting();
+        let profiled =
+            SmSim::new(&d, vec![mma_loop(64, 2, 8, 24); 6]).run_profiled(&mut prof);
+        for (a, b) in plain.iter().zip(&profiled) {
+            assert_eq!(a.iter_marks, b.iter_marks, "warp {}", a.warp_id);
+            assert_eq!(a.finish, b.finish, "warp {}", a.warp_id);
+        }
+        let p = prof.take_profile().unwrap();
+        assert_eq!(p.warps, 6);
+        assert_eq!(p.total(), p.warp_cycles, "categories must sum to warps x cycles");
+        assert_eq!(p.warp_cycles, 6 * p.cycles);
+        assert!(p.issued > 0, "{p:?}");
+    }
+
+    #[test]
+    fn tracing_records_a_monotonic_per_warp_timeline() {
+        use super::super::profile::Profiler;
+        let d = a100();
+        let mut prof = Profiler::tracing();
+        SmSim::new(&d, vec![mma_loop(16, 2, 8, 24); 2]).run_profiled(&mut prof);
+        let p = prof.take_profile().unwrap();
+        assert!(!p.events.is_empty());
+        assert_eq!(p.events_dropped, 0);
+        for warp in 0..2 {
+            let ts: Vec<u64> =
+                p.events.iter().filter(|e| e.warp == warp).map(|e| e.ts).collect();
+            assert!(!ts.is_empty(), "warp {warp} has no events");
+            assert!(ts.windows(2).all(|w| w[0] <= w[1]), "warp {warp} not monotonic");
+        }
+        assert!(p.events.iter().any(|e| e.name == "mma"));
+        assert!(p.events.iter().any(|e| e.name == "sync_warp"));
     }
 
     #[test]

@@ -27,10 +27,15 @@
 
 mod analytic;
 mod core;
+mod profile;
 mod program;
 mod smem;
 
 pub use analytic::{predict_ldmatrix, predict_mma, AnalyticPrediction};
 pub use core::{SmSim, WarpResult};
+pub use profile::{
+    Blocked, ProfileMode, Profiler, SimProfile, Stall, TraceEvent, MAX_TRACE_EVENTS,
+    STALL_CATEGORIES,
+};
 pub use program::{Instr, Op, ProgramBuilder, Reg, WarpProgram};
 pub use smem::{ld_shared_transactions, ldmatrix_transactions, ldmatrix_x4_row_addrs, Swizzle};

@@ -1,0 +1,364 @@
+//! Stall attribution for the tcsim cycle loop.
+//!
+//! The paper's method is *dissection* — explaining where Tensor-Core
+//! cycles go — so the simulator must be able to say not just *how many*
+//! cycles a kernel took but *why*: every warp-cycle is accounted to
+//! exactly one category, and the categories sum to `warps × cycles`.
+//!
+//! The cost contract is graded by [`Profiler`] variant:
+//!
+//! * [`Profiler::Null`] — zero cost. Every profiling call is a no-op on
+//!   an empty enum arm; the cycle loop takes the exact same schedule as
+//!   before the profiler existed, so all pinned bit-identical timing
+//!   results are untouched.
+//! * [`Profiler::Counting`] — seven `u64` counters bumped per
+//!   time-advance. The timing schedule is still bit-identical (the
+//!   profiler only observes the stall causes [`SmSim::issue_block`]
+//!   already computes); only wall-clock overhead is added. This is the
+//!   variant the cell cache stores.
+//! * [`Profiler::Tracing`] — Counting plus one [`TraceEvent`] per
+//!   issued instruction (capped at [`MAX_TRACE_EVENTS`]), enough to
+//!   render a per-warp issue timeline as Chrome trace-event JSON
+//!   ([`crate::report`]'s trace exporter). Never cached.
+//!
+//! [`SmSim::issue_block`]: super::SmSim
+
+/// Why a warp could not (or did not need to) issue on a cycle. One
+/// category per warp per simulated cycle; `Issued` is the productive
+/// category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stall {
+    /// The warp issued an instruction this cycle.
+    Issued,
+    /// A source register's scoreboard entry (or an outstanding `mma`
+    /// before `__syncwarp`) was not ready.
+    ScoreboardDep,
+    /// The Tensor-Core token bucket (per-warp dispatch or sub-core
+    /// engine) had insufficient credit.
+    TokenBucket,
+    /// `cp.async.wait_group` waiting for commit groups to land.
+    CpAsyncWait,
+    /// The LSU pending-load cap (shared-memory / global-load pressure).
+    SmemConflict,
+    /// The warp was ready but lost the sub-core issue slot (or sits in
+    /// the 1-cycle issue recovery / barrier-release window).
+    IssueSlot,
+    /// The warp had retired its program.
+    Done,
+}
+
+/// A refusal from `issue_block`: the earliest cycle at which the warp
+/// could possibly issue, and the pipeline cause of the wait.
+#[derive(Debug, Clone, Copy)]
+pub struct Blocked {
+    pub release: u64,
+    pub stall: Stall,
+}
+
+impl Blocked {
+    pub fn new(release: u64, stall: Stall) -> Blocked {
+        Blocked { release, stall }
+    }
+}
+
+/// Stable JSON/report names of the seven categories, in the canonical
+/// order used everywhere a breakdown is rendered.
+pub const STALL_CATEGORIES: [&str; 7] = [
+    "issued",
+    "scoreboard_dep",
+    "token_bucket",
+    "cp_async_wait",
+    "smem_conflict",
+    "issue_slot",
+    "done",
+];
+
+/// Most trace events kept per run; later issues only bump
+/// `events_dropped` so a runaway program cannot exhaust memory.
+pub const MAX_TRACE_EVENTS: usize = 1 << 20;
+
+/// One issued instruction on the per-warp timeline (Tracing only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub warp: usize,
+    /// Static op name (`"mma"`, `"ldmatrix"`, …).
+    pub name: &'static str,
+    /// Issue cycle.
+    pub ts: u64,
+    /// Modeled occupancy in cycles (a rendering hint, not a timing
+    /// claim — the simulator's latencies live in the scoreboard).
+    pub dur: u64,
+}
+
+/// Cycle accounting for one simulation run (or, after [`merge`], the
+/// sum over several). Invariant: the seven category counters sum to
+/// [`warp_cycles`] — every warp-cycle lands in exactly one bucket.
+///
+/// [`merge`]: SimProfile::merge
+/// [`warp_cycles`]: SimProfile::warp_cycles
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimProfile {
+    pub issued: u64,
+    pub scoreboard_dep: u64,
+    pub token_bucket: u64,
+    pub cp_async_wait: u64,
+    pub smem_conflict: u64,
+    pub issue_slot: u64,
+    pub done: u64,
+    /// Simulation runs folded into this profile (1 until merged).
+    pub runs: u64,
+    /// Warps of the (last folded) run.
+    pub warps: u64,
+    /// Simulated cycles of this run; summed across merges.
+    pub cycles: u64,
+    /// Σ `warps × cycles` over the folded runs — the accounting total.
+    pub warp_cycles: u64,
+    /// Per-warp issue timeline (Tracing only; empty when Counting).
+    pub events: Vec<TraceEvent>,
+    /// Events beyond [`MAX_TRACE_EVENTS`] that were not recorded.
+    pub events_dropped: u64,
+}
+
+impl SimProfile {
+    /// Attribute `delta` cycles to every warp's current cause.
+    pub fn account(&mut self, causes: &[Stall], delta: u64) {
+        for cause in causes {
+            *self.bucket_mut(*cause) += delta;
+        }
+        self.cycles += delta;
+        self.warp_cycles += delta * causes.len() as u64;
+    }
+
+    fn bucket_mut(&mut self, stall: Stall) -> &mut u64 {
+        match stall {
+            Stall::Issued => &mut self.issued,
+            Stall::ScoreboardDep => &mut self.scoreboard_dep,
+            Stall::TokenBucket => &mut self.token_bucket,
+            Stall::CpAsyncWait => &mut self.cp_async_wait,
+            Stall::SmemConflict => &mut self.smem_conflict,
+            Stall::IssueSlot => &mut self.issue_slot,
+            Stall::Done => &mut self.done,
+        }
+    }
+
+    /// `(name, count)` per category, in [`STALL_CATEGORIES`] order.
+    pub fn categories(&self) -> [(&'static str, u64); 7] {
+        [
+            ("issued", self.issued),
+            ("scoreboard_dep", self.scoreboard_dep),
+            ("token_bucket", self.token_bucket),
+            ("cp_async_wait", self.cp_async_wait),
+            ("smem_conflict", self.smem_conflict),
+            ("issue_slot", self.issue_slot),
+            ("done", self.done),
+        ]
+    }
+
+    /// Sum of the seven category counters. Equals [`warp_cycles`] by
+    /// construction.
+    ///
+    /// [`warp_cycles`]: SimProfile::warp_cycles
+    pub fn total(&self) -> u64 {
+        self.categories().iter().map(|(_, n)| n).sum()
+    }
+
+    /// `(name, fraction)` per category; fractions sum to 1 (all zeros
+    /// for an empty profile).
+    pub fn fractions(&self) -> [(&'static str, f64); 7] {
+        let total = self.total();
+        self.categories().map(|(name, n)| {
+            (name, if total == 0 { 0.0 } else { n as f64 / total as f64 })
+        })
+    }
+
+    /// Fold another run's accounting into this one (sweep aggregation).
+    /// Trace events are appended up to [`MAX_TRACE_EVENTS`].
+    pub fn merge(&mut self, other: &SimProfile) {
+        self.issued += other.issued;
+        self.scoreboard_dep += other.scoreboard_dep;
+        self.token_bucket += other.token_bucket;
+        self.cp_async_wait += other.cp_async_wait;
+        self.smem_conflict += other.smem_conflict;
+        self.issue_slot += other.issue_slot;
+        self.done += other.done;
+        self.runs += other.runs;
+        self.warps = other.warps;
+        self.cycles += other.cycles;
+        self.warp_cycles += other.warp_cycles;
+        let room = MAX_TRACE_EVENTS.saturating_sub(self.events.len());
+        let take = other.events.len().min(room);
+        self.events.extend_from_slice(&other.events[..take]);
+        self.events_dropped += other.events_dropped + (other.events.len() - take) as u64;
+    }
+}
+
+/// What to collect for a run. The plumbing-level twin of [`Profiler`]:
+/// callers pick a mode, the measurement layer builds one profiler per
+/// simulation from it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum ProfileMode {
+    #[default]
+    Off,
+    Counting,
+    Tracing,
+}
+
+impl ProfileMode {
+    pub fn is_off(self) -> bool {
+        self == ProfileMode::Off
+    }
+
+    /// A fresh profiler of this mode.
+    pub fn profiler(self) -> Profiler {
+        match self {
+            ProfileMode::Off => Profiler::Null,
+            ProfileMode::Counting => Profiler::Counting(SimProfile::default()),
+            ProfileMode::Tracing => Profiler::Tracing(SimProfile::default()),
+        }
+    }
+}
+
+/// The profiling hook handed to `SmSim::run_profiled`. `Null` keeps
+/// every hook a no-op (zero cost, bit-identical schedule); the other
+/// variants accumulate into their [`SimProfile`].
+#[derive(Debug, Default)]
+pub enum Profiler {
+    #[default]
+    Null,
+    Counting(SimProfile),
+    Tracing(SimProfile),
+}
+
+impl Profiler {
+    pub fn counting() -> Profiler {
+        ProfileMode::Counting.profiler()
+    }
+
+    pub fn tracing() -> Profiler {
+        ProfileMode::Tracing.profiler()
+    }
+
+    /// Whether the cycle loop needs to track per-warp stall causes at
+    /// all (false ⇒ the loop allocates nothing).
+    pub fn is_on(&self) -> bool {
+        !matches!(self, Profiler::Null)
+    }
+
+    pub fn is_tracing(&self) -> bool {
+        matches!(self, Profiler::Tracing(_))
+    }
+
+    /// Called once before the cycle loop with the warp count.
+    pub fn begin(&mut self, warps: u64) {
+        if let Some(p) = self.profile_mut() {
+            p.runs = 1;
+            p.warps = warps;
+        }
+    }
+
+    /// Attribute `delta` cycles to every warp's current stall cause.
+    pub fn account(&mut self, causes: &[Stall], delta: u64) {
+        if let Some(p) = self.profile_mut() {
+            p.account(causes, delta);
+        }
+    }
+
+    /// Record one issued instruction on the timeline (Tracing only).
+    pub fn record_issue(&mut self, warp: usize, name: &'static str, ts: u64, dur: u64) {
+        if let Profiler::Tracing(p) = self {
+            if p.events.len() < MAX_TRACE_EVENTS {
+                p.events.push(TraceEvent { warp, name, ts, dur });
+            } else {
+                p.events_dropped += 1;
+            }
+        }
+    }
+
+    fn profile_mut(&mut self) -> Option<&mut SimProfile> {
+        match self {
+            Profiler::Null => None,
+            Profiler::Counting(p) | Profiler::Tracing(p) => Some(p),
+        }
+    }
+
+    /// Consume the accumulated profile, resetting this profiler to
+    /// `Null`. Returns `None` for `Null` (profiling was off).
+    pub fn take_profile(&mut self) -> Option<SimProfile> {
+        match std::mem::take(self) {
+            Profiler::Null => None,
+            Profiler::Counting(p) | Profiler::Tracing(p) => Some(p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_preserves_the_warp_cycle_invariant() {
+        let mut prof = Profiler::counting();
+        prof.begin(3);
+        let causes = [Stall::Issued, Stall::ScoreboardDep, Stall::Done];
+        prof.account(&causes, 1);
+        prof.account(&causes, 4);
+        let p = prof.take_profile().unwrap();
+        assert_eq!(p.total(), p.warp_cycles);
+        assert_eq!(p.warp_cycles, 3 * 5);
+        assert_eq!(p.cycles, 5);
+        assert_eq!(p.warps, 3);
+        assert_eq!((p.issued, p.scoreboard_dep, p.done), (5, 5, 5));
+        let fr = p.fractions();
+        let sum: f64 = fr.iter().map(|(_, f)| f).sum();
+        assert!((sum - 1.0).abs() < 1e-12, "{sum}");
+    }
+
+    #[test]
+    fn null_profiler_is_inert() {
+        let mut prof = Profiler::Null;
+        prof.begin(8);
+        prof.account(&[Stall::Issued], 10);
+        prof.record_issue(0, "mma", 0, 4);
+        assert!(!prof.is_on());
+        assert!(prof.take_profile().is_none());
+    }
+
+    #[test]
+    fn merge_sums_runs_and_keeps_the_invariant() {
+        let mut a = Profiler::counting();
+        a.begin(2);
+        a.account(&[Stall::Issued, Stall::IssueSlot], 3);
+        let mut b = Profiler::counting();
+        b.begin(4);
+        b.account(&[Stall::Issued; 4], 2);
+        let (a, b) = (a.take_profile().unwrap(), b.take_profile().unwrap());
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.runs, 2);
+        assert_eq!(merged.total(), a.total() + b.total());
+        assert_eq!(merged.warp_cycles, a.warp_cycles + b.warp_cycles);
+        assert_eq!(merged.total(), merged.warp_cycles);
+    }
+
+    #[test]
+    fn tracing_caps_events() {
+        let mut prof = Profiler::tracing();
+        prof.begin(1);
+        for i in 0..8 {
+            prof.record_issue(0, "mma", i, 4);
+        }
+        let p = prof.take_profile().unwrap();
+        assert_eq!(p.events.len(), 8);
+        assert_eq!(p.events_dropped, 0);
+        assert_eq!(p.events[3].ts, 3);
+    }
+
+    #[test]
+    fn profile_mode_builds_matching_profilers() {
+        assert!(!ProfileMode::Off.profiler().is_on());
+        assert!(ProfileMode::Counting.profiler().is_on());
+        assert!(!ProfileMode::Counting.profiler().is_tracing());
+        assert!(ProfileMode::Tracing.profiler().is_tracing());
+        assert!(ProfileMode::Off.is_off());
+    }
+}

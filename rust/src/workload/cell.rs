@@ -42,6 +42,7 @@ use std::sync::{Condvar, Mutex, OnceLock};
 
 use crate::coordinator::default_threads;
 use crate::microbench::Measurement;
+use crate::sim::{Profiler, SimProfile};
 use crate::util::fnv1a;
 
 use super::ExecPoint;
@@ -103,6 +104,10 @@ struct CellEntry {
     canonical: String,
     latency: f64,
     throughput: f64,
+    /// Stall attribution of the simulation that produced this cell
+    /// (Counting mode). `None` when the cell was simulated unprofiled;
+    /// a later profiled request upgrades the entry in place.
+    profile: Option<SimProfile>,
     last_used: u64,
 }
 
@@ -170,6 +175,28 @@ impl CellCache {
         backend: &str,
         simulate: impl FnOnce() -> Measurement,
     ) -> Measurement {
+        self.get_or_simulate_profiled(spec, device, point, backend, false, |_| simulate()).0
+    }
+
+    /// [`get_or_simulate`](Self::get_or_simulate) with stall
+    /// attribution. `simulate` receives the profiler to thread into the
+    /// simulator ([`Profiler::Null`] when `want_profile` is off — the
+    /// unprofiled path is unchanged, including its counter pins).
+    ///
+    /// Profiles are stored *with* the cell, so a warm hit still reports
+    /// attribution without re-simulating. A cell first simulated
+    /// unprofiled is upgraded in place the first time a profiled
+    /// request lands on it (counted as a miss + simulation: the work is
+    /// real).
+    pub fn get_or_simulate_profiled(
+        &self,
+        spec: &str,
+        device: &str,
+        point: ExecPoint,
+        backend: &str,
+        want_profile: bool,
+        simulate: impl FnOnce(&mut Profiler) -> Measurement,
+    ) -> (Measurement, Option<SimProfile>) {
         let canonical = Self::canonical_key(spec, device, point, backend);
         let hash = fnv1a(canonical.as_bytes());
         let shard = &self.shards[(hash % SHARDS as u64) as usize];
@@ -180,18 +207,26 @@ impl CellCache {
             let mut map = shard.lock().unwrap();
             if let Some(e) = map.get_mut(&hash) {
                 if e.canonical == canonical {
-                    e.last_used = tick;
-                    self.hits.fetch_add(1, Ordering::Relaxed);
-                    return Measurement {
-                        warps: point.warps,
-                        ilp: point.ilp,
-                        latency: e.latency,
-                        throughput: e.throughput,
-                    };
+                    if !want_profile || e.profile.is_some() {
+                        e.last_used = tick;
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        let m = Measurement {
+                            warps: point.warps,
+                            ilp: point.ilp,
+                            latency: e.latency,
+                            throughput: e.throughput,
+                        };
+                        return (m, if want_profile { e.profile.clone() } else { None });
+                    }
+                    // Cached without attribution but the caller wants
+                    // one: fall through to re-simulate with profiling on
+                    // and upgrade the entry in place.
+                } else {
+                    // FNV collision between two live cells: serve the
+                    // other cell's slot untouched and recompute this one
+                    // uncached.
+                    collision = true;
                 }
-                // FNV collision between two live cells: serve the other
-                // cell's slot untouched and recompute this one uncached.
-                collision = true;
             }
         }
         // Miss path: simulate outside the shard lock so a 32-warp cell
@@ -201,7 +236,9 @@ impl CellCache {
         // cores.
         self.misses.fetch_add(1, Ordering::Relaxed);
         self.simulated.fetch_add(1, Ordering::Relaxed);
-        let m = SimGate::global().run(simulate);
+        let mut profiler = if want_profile { Profiler::counting() } else { Profiler::Null };
+        let m = SimGate::global().run(|| simulate(&mut profiler));
+        let profile = profiler.take_profile();
         if !collision {
             let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
             let mut map = shard.lock().unwrap();
@@ -211,6 +248,7 @@ impl CellCache {
                     canonical,
                     latency: m.latency,
                     throughput: m.throughput,
+                    profile: profile.clone(),
                     last_used: tick,
                 },
             );
@@ -224,7 +262,7 @@ impl CellCache {
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
-        m
+        (m, profile)
     }
 
     /// Is this cell currently memoized? Pure lookup: no counters, no
@@ -319,6 +357,41 @@ mod tests {
         }
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (0, 6, 6));
+    }
+
+    #[test]
+    fn profiled_requests_upgrade_and_then_hit_warm() {
+        let cache = CellCache::new(64);
+        let p = ExecPoint::new(2, 1);
+        let sim_profiled = |profiler: &mut Profiler| {
+            profiler.begin(2);
+            profiler.account(&[crate::sim::Stall::Issued, crate::sim::Stall::Done], 10);
+            fake(11.0)
+        };
+        // cold unprofiled fill -> entry has no profile
+        cache.get_or_simulate("spec", "dev", p, "sim", || fake(11.0));
+        assert_eq!(cache.stats().misses, 1);
+        // first profiled request re-simulates (upgrade) and returns the
+        // attribution
+        let (m, prof) = cache.get_or_simulate_profiled("spec", "dev", p, "sim", true, sim_profiled);
+        assert_eq!(m.latency.to_bits(), 11.0f64.to_bits());
+        let prof = prof.expect("profiled miss must return a profile");
+        assert_eq!(prof.warp_cycles, 20);
+        let s = cache.stats();
+        assert_eq!((s.misses, s.cells_simulated), (2, 2));
+        // the profile is stored with the cell: a warm profiled request
+        // is a pure hit and still reports attribution
+        let (m2, prof2) = cache.get_or_simulate_profiled("spec", "dev", p, "sim", true, |_| {
+            panic!("warm profiled request must not re-simulate")
+        });
+        assert_eq!(m2.latency.to_bits(), m.latency.to_bits());
+        assert_eq!(prof2.unwrap(), prof);
+        // unprofiled requests keep hitting too, with no profile attached
+        let (_, none) = cache.get_or_simulate_profiled("spec", "dev", p, "sim", false, |_| {
+            panic!("warm request must not re-simulate")
+        });
+        assert!(none.is_none());
+        assert_eq!(cache.stats().hits, 2);
     }
 
     #[test]

@@ -74,11 +74,12 @@ use crate::coordinator::{default_threads, run_parallel};
 use crate::device::Device;
 use crate::gemm::{self, GemmConfig};
 use crate::isa::{AbType, CdType, LdMatrixNum, LdSharedWidth, MmaInstr, MmaShape};
-use crate::microbench::wmma::{measure_wmma, WmmaShape};
+use crate::microbench::wmma::{measure_wmma_profiled, WmmaShape};
 use crate::microbench::{
-    measure_ld_shared_at, measure_ldmatrix, measure_mma, Measurement, Sweep, SweepCell,
-    SWEEP_ILPS, SWEEP_WARPS,
+    measure_ld_shared_at_profiled, measure_ldmatrix_profiled, measure_mma_profiled,
+    Measurement, Sweep, SweepCell, SWEEP_ILPS, SWEEP_WARPS,
 };
+use crate::sim::{ProfileMode, Profiler, SimProfile};
 
 /// One (#warps, ILP) execution coordinate — the paper's per-measurement
 /// configuration, shared by every workload kind.
@@ -635,25 +636,47 @@ impl Workload {
     /// error in the `latency` field (runners use their own numeric leg
     /// and return the full [`NumericOutput`] instead).
     pub fn measure(&self, device: &Device, point: ExecPoint) -> Measurement {
+        self.measure_profiled(device, point, &mut Profiler::Null)
+    }
+
+    /// [`Workload::measure`] with stall attribution: the cycle
+    /// simulation behind the measurement runs through `profiler`
+    /// (identical schedule; a [`Profiler::Null`] is the plain path).
+    /// Numeric probes run no cycle simulation and leave the profiler
+    /// untouched.
+    pub fn measure_profiled(
+        &self,
+        device: &Device,
+        point: ExecPoint,
+        profiler: &mut Profiler,
+    ) -> Measurement {
         let ExecPoint { warps, ilp } = point;
         match *self {
-            Workload::Mma { .. } | Workload::MmaSp { .. } => {
-                measure_mma(device, &self.mma_instr().expect("mma workload"), warps, ilp)
+            Workload::Mma { .. } | Workload::MmaSp { .. } => measure_mma_profiled(
+                device,
+                &self.mma_instr().expect("mma workload"),
+                warps,
+                ilp,
+                profiler,
+            ),
+            Workload::Ldmatrix { num } => {
+                measure_ldmatrix_profiled(device, num, warps, ilp, profiler)
             }
-            Workload::Ldmatrix { num } => measure_ldmatrix(device, num, warps, ilp),
             Workload::LdShared { width, ways } => {
-                measure_ld_shared_at(device, width, ways, warps, ilp)
+                measure_ld_shared_at_profiled(device, width, ways, warps, ilp, profiler)
             }
-            Workload::Wmma { ab, cd, shape } => measure_wmma(device, shape, ab, cd, warps, ilp),
+            Workload::Wmma { ab, cd, shape } => {
+                measure_wmma_profiled(device, shape, ab, cd, warps, ilp, profiler)
+            }
             Workload::Gemm(g) => {
                 let cfg = g.config(point);
                 let r = if g.l2_resident {
                     let mut dev = device.clone();
                     dev.gmem_bytes_per_cycle =
                         dev.gmem_bytes_per_cycle.max(gemm::L2_RESIDENT_BYTES_PER_CYCLE);
-                    gemm::run_gemm(&dev, cfg, g.variant)
+                    gemm::run_gemm_profiled(&dev, cfg, g.variant, profiler)
                 } else {
-                    gemm::run_gemm(device, cfg, g.variant)
+                    gemm::run_gemm_profiled(device, cfg, g.variant, profiler)
                 };
                 // latency = cycles per k-step (the iteration of this
                 // kernel); throughput stays in FMA/clk/SM like the
@@ -706,16 +729,42 @@ impl Workload {
     /// too: their results come from a runner's numeric leg and are
     /// cached per unit by tcserved instead.
     pub fn measure_cached(&self, device: &Device, point: ExecPoint, backend: &str) -> Measurement {
+        self.measure_cached_profiled(device, point, backend, ProfileMode::Off).0
+    }
+
+    /// [`Workload::measure_cached`] with stall attribution. Counting
+    /// profiles are stored *with* the cell, so a warm hit still reports
+    /// attribution; a cell first simulated unprofiled is upgraded in
+    /// place on its first profiled request. Tracing requests bypass the
+    /// cache entirely (traces are per-request artifacts, never
+    /// memoized), and numeric probes run no cycle simulation, so the
+    /// profile leg is always `None` for them.
+    pub fn measure_cached_profiled(
+        &self,
+        device: &Device,
+        point: ExecPoint,
+        backend: &str,
+        mode: ProfileMode,
+    ) -> (Measurement, Option<SimProfile>) {
         if matches!(self, Workload::Numeric(_)) {
-            return self.measure(device, point);
+            return (self.measure(device, point), None);
         }
-        if !Self::device_cacheable(device) {
-            // uncached, but still under the process-wide simulation gate
-            return cell::run_gated(|| self.measure(device, point));
+        if !Self::device_cacheable(device) || mode == ProfileMode::Tracing {
+            // Ad-hoc devices must not alias registry cells; traces are
+            // never cached. Both run uncached, but still under the
+            // process-wide simulation gate.
+            let mut profiler = mode.profiler();
+            let m = cell::run_gated(|| self.measure_profiled(device, point, &mut profiler));
+            return (m, profiler.take_profile());
         }
-        CellCache::global().get_or_simulate(&self.to_spec(), device.name, point, backend, || {
-            self.measure(device, point)
-        })
+        CellCache::global().get_or_simulate_profiled(
+            &self.to_spec(),
+            device.name,
+            point,
+            backend,
+            mode != ProfileMode::Off,
+            |profiler| self.measure_profiled(device, point, profiler),
+        )
     }
 
     /// Completion/issue latency (§4 step 1): one warp, ILP = 1 — cell
@@ -755,10 +804,26 @@ impl Workload {
     /// cannot use the name-keyed cache, so its grid runs fully parallel
     /// and uncached.
     pub fn sweep_via(&self, device: &Device, backend: &str, threads: usize) -> Sweep {
+        self.sweep_via_profiled(device, backend, threads, ProfileMode::Off).0
+    }
+
+    /// [`Workload::sweep_via`] with stall attribution: every cell's
+    /// profile — served warm from the cell cache or simulated cold — is
+    /// merged into one sweep-level [`SimProfile`] (`runs` counts the
+    /// cells folded in). `None` when `mode` is off or the workload is
+    /// numeric.
+    pub fn sweep_via_profiled(
+        &self,
+        device: &Device,
+        backend: &str,
+        threads: usize,
+        mode: ProfileMode,
+    ) -> (Sweep, Option<SimProfile>) {
         if let Workload::Numeric(p) = self {
-            return p
+            let sweep = p
                 .sweep_with(self.to_string(), |probe| Ok(probe.run_native()))
                 .expect("the native numeric sweep is infallible");
+            return (sweep, None);
         }
         let warps_axis = self.sweep_warps_axis();
         let ilp_axis = self.sweep_ilp_axis();
@@ -766,13 +831,9 @@ impl Workload {
             .iter()
             .flat_map(|&warps| ilp_axis.iter().map(move |&ilp| ExecPoint::new(warps, ilp)))
             .collect();
-        let to_cell = |m: Measurement| SweepCell {
-            warps: m.warps,
-            ilp: m.ilp,
-            latency: m.latency,
-            throughput: m.throughput,
-        };
-        let cells: Vec<SweepCell> = if Self::device_cacheable(device) {
+        let measured: Vec<(Measurement, Option<SimProfile>)> = if Self::device_cacheable(device)
+            && mode != ProfileMode::Tracing
+        {
             // phase 1: simulate the cold cells in parallel; their
             // measurements come back in grid order (run_parallel
             // preserves it) AND land in the cache for everyone else
@@ -787,7 +848,7 @@ impl Workload {
                 .filter(|&(_, &cold)| cold)
                 .map(|(&point, _)| {
                     let workload = *self;
-                    move || workload.measure_cached(device, point, backend)
+                    move || workload.measure_cached_profiled(device, point, backend, mode)
                 })
                 .collect();
             let mut cold_results = run_parallel(jobs, threads).into_iter();
@@ -799,27 +860,45 @@ impl Workload {
                 .iter()
                 .zip(&cold_mask)
                 .map(|(&p, &cold)| {
-                    let m = if cold {
+                    if cold {
                         cold_results.next().expect("one phase-1 result per cold cell")
                     } else {
-                        self.measure_cached(device, p, backend)
-                    };
-                    to_cell(m)
+                        self.measure_cached_profiled(device, p, backend, mode)
+                    }
                 })
                 .collect()
         } else {
-            // ad-hoc device: fully uncached, but still under the
-            // process-wide simulation gate
+            // ad-hoc device (or a tracing request, which never caches):
+            // fully uncached, but the gating inside
+            // `measure_cached_profiled` still bounds concurrency
             let jobs: Vec<_> = points
                 .iter()
                 .map(|&point| {
                     let workload = *self;
-                    move || cell::run_gated(|| workload.measure(device, point))
+                    move || workload.measure_cached_profiled(device, point, backend, mode)
                 })
                 .collect();
-            run_parallel(jobs, threads).into_iter().map(to_cell).collect()
+            run_parallel(jobs, threads)
         };
-        Sweep { label: self.to_string(), warps_axis, ilp_axis, cells }
+        let mut profile: Option<SimProfile> = None;
+        for (_, cell_profile) in &measured {
+            if let Some(p) = cell_profile {
+                match &mut profile {
+                    None => profile = Some(p.clone()),
+                    Some(acc) => acc.merge(p),
+                }
+            }
+        }
+        let cells: Vec<SweepCell> = measured
+            .into_iter()
+            .map(|(m, _)| SweepCell {
+                warps: m.warps,
+                ilp: m.ilp,
+                latency: m.latency,
+                throughput: m.throughput,
+            })
+            .collect();
+        (Sweep { label: self.to_string(), warps_axis, ilp_axis, cells }, profile)
     }
 }
 

@@ -21,6 +21,7 @@ use std::time::Instant;
 use crate::coordinator::run_parallel;
 use crate::device::{self, Device};
 use crate::microbench::{ConvergencePoint, Measurement, Sweep};
+use crate::sim::{ProfileMode, SimProfile};
 use crate::util::Json;
 
 use crate::numerics::{ChainResult, ProfileResult};
@@ -387,15 +388,37 @@ impl BenchPlan {
     /// Execute every unit on `runner` across `threads` pool workers,
     /// collecting a uniform [`BenchResult`]. Unit order is preserved.
     pub fn run(&self, runner: &dyn Runner, threads: usize) -> Result<BenchResult, String> {
+        self.run_profiled(runner, threads, ProfileMode::Off)
+    }
+
+    /// [`BenchPlan::run`] with stall attribution: every timing unit's
+    /// simulations run through a profiler of `mode` and the per-unit
+    /// [`SimProfile`]s land in [`BenchResult::unit_profiles`] (all
+    /// `None` when `mode` is off or the backend has no profiled path).
+    pub fn run_profiled(
+        &self,
+        runner: &dyn Runner,
+        threads: usize,
+        mode: ProfileMode,
+    ) -> Result<BenchResult, String> {
         let t0 = Instant::now();
         let jobs: Vec<_> = self
             .units
             .iter()
-            .map(|&unit| move || runner.run_unit(self, &unit).map(|out| (unit, out)))
+            .map(|&unit| {
+                move || {
+                    runner
+                        .run_unit_profiled(self, &unit, mode)
+                        .map(|(out, profile)| (unit, out, profile))
+                }
+            })
             .collect();
         let mut units = Vec::with_capacity(self.units.len());
+        let mut unit_profiles = Vec::with_capacity(self.units.len());
         for result in run_parallel(jobs, threads) {
-            units.push(result?);
+            let (unit, out, profile) = result?;
+            units.push((unit, out));
+            unit_profiles.push(profile);
         }
         Ok(BenchResult {
             workload: self.workload,
@@ -405,6 +428,7 @@ impl BenchPlan {
             sms: self.device.sms,
             throughput_unit: self.workload.throughput_unit(),
             units,
+            unit_profiles,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
     }
@@ -435,6 +459,11 @@ pub struct BenchResult {
     pub throughput_unit: &'static str,
     /// Unit outputs, in plan order.
     pub units: Vec<(UnitKind, UnitOutput)>,
+    /// Per-unit stall attribution, parallel to [`BenchResult::units`]
+    /// (`None` per unit unless the plan ran via
+    /// [`BenchPlan::run_profiled`] with profiling on — numeric units
+    /// never carry one).
+    pub unit_profiles: Vec<Option<SimProfile>>,
     pub wall_ms: f64,
 }
 
@@ -495,6 +524,26 @@ impl BenchResult {
             Some(NumericOutput::Chain(c)) => Some(c),
             _ => None,
         }
+    }
+
+    /// Stall attribution merged over every profiled unit, if the plan
+    /// ran profiled. (Named `stall_profile` because
+    /// [`BenchResult::profile`] is the §8.1 *numeric* profile.)
+    pub fn stall_profile(&self) -> Option<SimProfile> {
+        let mut merged: Option<SimProfile> = None;
+        for p in self.unit_profiles.iter().flatten() {
+            match &mut merged {
+                Some(m) => m.merge(p),
+                None => merged = Some(p.clone()),
+            }
+        }
+        merged
+    }
+
+    /// The stall profile of the unit at `index` (plan order), if that
+    /// unit was profiled.
+    pub fn unit_stall_profile(&self, index: usize) -> Option<&SimProfile> {
+        self.unit_profiles.get(index).and_then(|p| p.as_ref())
     }
 }
 
@@ -570,6 +619,31 @@ mod tests {
         assert_eq!(r.convergence(8).unwrap().ilp, 2);
         assert!(r.convergence(6).is_none());
         assert!(r.wall_ms >= 0.0);
+    }
+
+    #[test]
+    fn profiled_runs_attach_stall_profiles_per_unit() {
+        let plan = Plan::new(k16()).completion_latency().point(8, 2).compile().unwrap();
+        let off = plan.run(&SimRunner, 2).unwrap();
+        assert_eq!(off.unit_profiles.len(), 2);
+        assert!(off.unit_profiles.iter().all(|p| p.is_none()));
+        assert!(off.stall_profile().is_none());
+
+        let on = plan.run_profiled(&SimRunner, 2, ProfileMode::Counting).unwrap();
+        assert_eq!(on.unit_profiles.len(), 2);
+        for (i, p) in on.unit_profiles.iter().enumerate() {
+            let p = p.as_ref().unwrap_or_else(|| panic!("unit {i} unprofiled"));
+            assert_eq!(p.total(), p.warp_cycles, "unit {i}: {p:?}");
+            assert!(p.warp_cycles > 0 && p.issued > 0, "unit {i}: {p:?}");
+            assert_eq!(on.unit_stall_profile(i), Some(p));
+        }
+        let merged = on.stall_profile().unwrap();
+        assert_eq!(merged.runs, 2);
+        assert_eq!(merged.total(), merged.warp_cycles);
+
+        // profiling leaves the measurements bit-identical
+        assert_eq!(off.point(8, 2), on.point(8, 2));
+        assert_eq!(off.completion(), on.completion());
     }
 
     #[test]

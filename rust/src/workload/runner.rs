@@ -22,6 +22,7 @@ use std::sync::Mutex;
 use crate::coordinator::{default_threads, BackendKind};
 use crate::microbench::convergence_point;
 use crate::runtime::{ArtifactExec, ArtifactStore};
+use crate::sim::{ProfileMode, SimProfile};
 
 use super::numeric::{NumericOutput, NumericProbe};
 use super::plan::{BenchPlan, UnitKind, UnitOutput};
@@ -48,6 +49,21 @@ pub trait Runner: Sync {
     /// Execute one unit of a compiled plan.
     fn run_unit(&self, plan: &BenchPlan, unit: &UnitKind) -> Result<UnitOutput, String>;
 
+    /// [`Runner::run_unit`] with stall attribution: the simulations
+    /// behind timing units run through a profiler of `mode`, and the
+    /// unit's merged [`SimProfile`] rides alongside the output (`None`
+    /// when `mode` is off, the unit is numeric, or — the default
+    /// implementation — the backend has no profiled path).
+    fn run_unit_profiled(
+        &self,
+        plan: &BenchPlan,
+        unit: &UnitKind,
+        mode: ProfileMode,
+    ) -> Result<(UnitOutput, Option<SimProfile>), String> {
+        let _ = mode;
+        Ok((self.run_unit(plan, unit)?, None))
+    }
+
     /// The numeric leg: execute one §8 probe on this backend's numeric
     /// datapath.
     fn run_numeric(&self, probe: &NumericProbe) -> Result<NumericOutput, String>;
@@ -67,6 +83,19 @@ fn dispatch_unit(
     plan: &BenchPlan,
     unit: &UnitKind,
 ) -> Result<UnitOutput, String> {
+    dispatch_unit_profiled(runner, plan, unit, ProfileMode::Off).map(|(out, _)| out)
+}
+
+/// [`dispatch_unit`] with stall attribution: timing units thread a
+/// profiler of `mode` through the cell-level execution engine (profiles
+/// are cached with the cells, so warm units still report attribution);
+/// numeric units run no cycle simulation and carry no profile.
+fn dispatch_unit_profiled(
+    runner: &dyn Runner,
+    plan: &BenchPlan,
+    unit: &UnitKind,
+    mode: ProfileMode,
+) -> Result<(UnitOutput, Option<SimProfile>), String> {
     if let Workload::Numeric(probe) = plan.workload {
         return match unit {
             UnitKind::Completion => Err(format!(
@@ -74,7 +103,7 @@ fn dispatch_unit(
                  rejects this unit)",
                 plan.workload
             )),
-            UnitKind::Point(_) => Ok(UnitOutput::Numeric(runner.run_numeric(&probe)?)),
+            UnitKind::Point(_) => Ok((UnitOutput::Numeric(runner.run_numeric(&probe)?), None)),
             UnitKind::Sweep => {
                 let sweep = probe
                     .sweep_with(plan.workload.to_string(), |p| runner.run_numeric(p))?;
@@ -83,28 +112,39 @@ fn dispatch_unit(
                     .iter()
                     .map(|&w| convergence_point(&sweep, w))
                     .collect();
-                Ok(UnitOutput::Sweep { sweep, convergence })
+                Ok((UnitOutput::Sweep { sweep, convergence }, None))
             }
         };
     }
     let backend = runner.timing_backend();
     Ok(match unit {
-        UnitKind::Completion => UnitOutput::Completion(
-            plan.workload
-                .measure_cached(&plan.device, ExecPoint::new(1, 1), backend)
-                .latency,
-        ),
+        UnitKind::Completion => {
+            let (m, profile) = plan.workload.measure_cached_profiled(
+                &plan.device,
+                ExecPoint::new(1, 1),
+                backend,
+                mode,
+            );
+            (UnitOutput::Completion(m.latency), profile)
+        }
         UnitKind::Point(p) => {
-            UnitOutput::Point(plan.workload.measure_cached(&plan.device, *p, backend))
+            let (m, profile) =
+                plan.workload.measure_cached_profiled(&plan.device, *p, backend, mode);
+            (UnitOutput::Point(m), profile)
         }
         UnitKind::Sweep => {
-            let sweep = plan.workload.sweep_via(&plan.device, backend, default_threads());
+            let (sweep, profile) = plan.workload.sweep_via_profiled(
+                &plan.device,
+                backend,
+                default_threads(),
+                mode,
+            );
             let convergence = plan
                 .convergence_warps
                 .iter()
                 .map(|&w| convergence_point(&sweep, w))
                 .collect();
-            UnitOutput::Sweep { sweep, convergence }
+            (UnitOutput::Sweep { sweep, convergence }, profile)
         }
     })
 }
@@ -120,6 +160,15 @@ impl Runner for SimRunner {
 
     fn run_unit(&self, plan: &BenchPlan, unit: &UnitKind) -> Result<UnitOutput, String> {
         dispatch_unit(self, plan, unit)
+    }
+
+    fn run_unit_profiled(
+        &self,
+        plan: &BenchPlan,
+        unit: &UnitKind,
+        mode: ProfileMode,
+    ) -> Result<(UnitOutput, Option<SimProfile>), String> {
+        dispatch_unit_profiled(self, plan, unit, mode)
     }
 
     fn run_numeric(&self, probe: &NumericProbe) -> Result<NumericOutput, String> {

@@ -1,0 +1,320 @@
+//! Integration: the observability layer end to end — stall attribution
+//! must never perturb timing (profiling off and on produce bit-identical
+//! results across every workload family), Counting profiles must account
+//! every warp-cycle exactly once, the Chrome trace export must be valid
+//! and per-warp monotonic, and the Prometheus `/metrics` scrape must
+//! agree with the `/v1/metrics` JSON counters under mixed traffic.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use tcbench::device;
+use tcbench::report::{render_bench, trace_to_json};
+use tcbench::server::{Server, ServerConfig};
+use tcbench::sim::{ProfileMode, Profiler, STALL_CATEGORIES};
+use tcbench::util::Json;
+use tcbench::workload::{ExecPoint, Plan, SimRunner, Workload};
+
+/// One spec per workload family (the numeric family runs no cycle
+/// simulation and must simply pass through unprofiled).
+const FAMILIES: [&str; 7] = [
+    "mma bf16 f32 m16n8k16",
+    "mma.sp fp16 f32 m16n8k32",
+    "ldmatrix x4",
+    "ld.shared u32 4",
+    "wmma fp16 f32 m16n16k16",
+    "gemm pipeline bf16 f32 256 128x128x32",
+    "numeric profile bf16 f32 acc fp32",
+];
+
+fn compile(spec: &str) -> tcbench::workload::BenchPlan {
+    let workload = Workload::parse_spec(spec).unwrap();
+    let mut plan = Plan::new(workload).device("a100");
+    if matches!(workload, Workload::Numeric(_)) {
+        plan = plan.point(1, 1);
+    } else {
+        plan = plan.point(8, 2).completion_latency();
+    }
+    plan.compile().unwrap_or_else(|e| panic!("{spec}: {e}"))
+}
+
+// ------------------------------------------------- timing invariance
+
+#[test]
+fn profiling_off_and_on_agree_bit_identically_across_families() {
+    for spec in FAMILIES {
+        let plan = compile(spec);
+        let off = plan.run(&SimRunner, 2).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let on = plan
+            .run_profiled(&SimRunner, 2, ProfileMode::Counting)
+            .unwrap_or_else(|e| panic!("{spec}: {e}"));
+
+        // every unit output — cycles, iter marks, throughputs — must be
+        // bit-identical; Debug covers every field of every Measurement
+        assert_eq!(
+            format!("{:?}", off.units),
+            format!("{:?}", on.units),
+            "{spec}: profiling perturbed the timing results"
+        );
+        assert_eq!(render_bench(&off), render_bench(&on), "{spec}");
+
+        // the off run carries no profiles; the on run profiles exactly
+        // the units that ran a cycle simulation
+        assert!(off.unit_profiles.iter().all(Option::is_none), "{spec}");
+        assert!(off.stall_profile().is_none(), "{spec}");
+        let numeric = matches!(off.workload, Workload::Numeric(_));
+        if numeric {
+            assert!(on.stall_profile().is_none(), "{spec}: numeric probes have no cycles");
+        } else {
+            assert!(on.stall_profile().is_some(), "{spec}: no stall profile attached");
+        }
+    }
+}
+
+// ---------------------------------------------- exhaustive accounting
+
+#[test]
+fn stall_categories_account_every_warp_cycle() {
+    // a known small program, profiled directly: 2 warps, no ILP
+    let dev = device::by_name("a100").unwrap();
+    let w = Workload::parse_spec("mma bf16 f32 m16n8k16").unwrap();
+    let mut prof = Profiler::counting();
+    let m = w.measure_profiled(&dev, ExecPoint::new(2, 1), &mut prof);
+    assert!(m.latency > 0.0);
+    let p = prof.take_profile().unwrap();
+    assert_eq!(p.runs, 1);
+    assert_eq!(p.warps, 2);
+    assert_eq!(p.categories().len(), STALL_CATEGORIES.len());
+    // the invariant: every warp-cycle lands in exactly one category
+    assert_eq!(p.warp_cycles, p.warps * p.cycles);
+    assert_eq!(p.total(), p.warp_cycles, "{p:?}");
+    assert!(p.issued > 0, "{p:?}");
+    let frac_sum: f64 = p.fractions().iter().map(|(_, f)| f).sum();
+    assert!((frac_sum - 1.0).abs() < 1e-9, "fractions sum to {frac_sum}");
+
+    // and through the plan path: each profiled unit is one run, so the
+    // same exhaustiveness holds per unit
+    let plan = compile("ld.shared u32 4");
+    let result = plan.run_profiled(&SimRunner, 2, ProfileMode::Counting).unwrap();
+    let mut seen = 0;
+    for i in 0..result.unit_profiles.len() {
+        let Some(p) = result.unit_stall_profile(i) else { continue };
+        seen += 1;
+        assert_eq!(p.runs, 1, "{p:?}");
+        assert_eq!(p.warp_cycles, p.warps * p.cycles, "{p:?}");
+        assert_eq!(p.total(), p.warp_cycles, "{p:?}");
+    }
+    assert!(seen >= 2, "point + completion units must both be profiled");
+}
+
+// ------------------------------------------------------- trace export
+
+#[test]
+fn trace_export_is_valid_and_monotonic_per_warp() {
+    let dev = device::by_name("a100").unwrap();
+    let w = Workload::parse_spec("mma bf16 f32 m16n8k16").unwrap();
+    let (m, p) =
+        w.measure_cached_profiled(&dev, ExecPoint::new(2, 2), "sim", ProfileMode::Tracing);
+    assert!(m.latency > 0.0);
+    let p = p.expect("tracing must yield a profile");
+    assert!(!p.events.is_empty());
+    assert_eq!(p.events_dropped, 0);
+
+    // per warp, issue timestamps strictly advance (one issue per cycle)
+    let mut last: BTreeMap<usize, u64> = BTreeMap::new();
+    for e in &p.events {
+        if let Some(prev) = last.get(&e.warp) {
+            assert!(e.ts > *prev, "warp {} regressed: {} after {}", e.warp, e.ts, prev);
+        }
+        last.insert(e.warp, e.ts);
+    }
+    assert_eq!(last.len(), 2, "both warps must have tracks");
+
+    // the export round-trips as JSON with one metadata event per warp
+    // and one complete event per recorded issue
+    let j = Json::parse(&trace_to_json(&p).to_string()).expect("trace JSON parses");
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    let metas: Vec<_> = events.iter().filter(|e| e.get_str("ph") == Some("M")).collect();
+    let complete: Vec<_> = events.iter().filter(|e| e.get_str("ph") == Some("X")).collect();
+    assert_eq!(metas.len(), 2);
+    assert_eq!(complete.len(), p.events.len());
+    for e in complete {
+        assert!(e.get_str("name").is_some());
+        assert!(e.get_u64("ts").is_some());
+        assert!(e.get_u64("dur").unwrap() >= 1, "Perfetto needs nonzero durations");
+    }
+}
+
+// ----------------------------------------------- /metrics vs JSON
+
+fn start() -> Server {
+    Server::start(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 4,
+        warm: false,
+        disk_cache: None,
+        cache_capacity: 64,
+    })
+    .expect("tcserved start")
+}
+
+/// One raw HTTP exchange; returns (status, headers, body).
+fn request_raw(addr: SocketAddr, request: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(request.as_bytes()).expect("send request");
+    stream.flush().unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read response");
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in {response:?}"))
+        .parse()
+        .expect("numeric status");
+    let (head, body) = response
+        .split_once("\r\n\r\n")
+        .map(|(h, b)| (h.to_string(), b.to_string()))
+        .unwrap_or_default();
+    (status, head, body)
+}
+
+fn get(addr: SocketAddr, target: &str) -> (u16, Json) {
+    let (status, _, body) = request_raw(
+        addr,
+        &format!("GET {target} HTTP/1.1\r\nHost: tcserved\r\nConnection: close\r\n\r\n"),
+    );
+    (status, Json::parse(&body).expect("JSON body"))
+}
+
+/// The value of one Prometheus series, matched on its full
+/// `name{labels}` prefix.
+fn prom_value(text: &str, series: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(series).and_then(|rest| rest.strip_prefix(' ')))
+        .unwrap_or_else(|| panic!("no series {series:?} in scrape:\n{text}"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|e| panic!("series {series:?}: bad value ({e})"))
+}
+
+#[test]
+fn prometheus_scrape_agrees_with_json_metrics() {
+    let server = start();
+    let addr = server.addr();
+
+    // mixed traffic: one POSTed plan, a timing sweep (twice — the
+    // second is a result-cache hit), and a numeric sweep
+    let plan_body = r#"{"workload":"mma bf16 f32 m16n8k16","device":"a100",
+                       "points":[[4,2]],"completion_latency":true,"backend":"native"}"#;
+    let (status, _, _) = request_raw(
+        addr,
+        &format!(
+            "POST /v1/plan HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{plan_body}",
+            plan_body.len()
+        ),
+    );
+    assert_eq!(status, 200);
+    for _ in 0..2 {
+        let (status, j) = get(addr, "/v1/sweep?device=a100&instr=ldmatrix+x4");
+        assert_eq!(status, 200, "{j:?}");
+    }
+    let (status, j) = get(addr, "/v1/sweep?device=a100&instr=numeric+chain+tf32+f32+6");
+    assert_eq!(status, 200, "{j:?}");
+
+    let (status, json) = get(addr, "/v1/metrics");
+    assert_eq!(status, 200);
+    let (status, head, text) = request_raw(
+        addr,
+        "GET /metrics HTTP/1.1\r\nHost: tcserved\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 200);
+    assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+
+    // -- the scrape is well-formed exposition text ---------------------
+    let mut help_seen = BTreeSet::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(rest.starts_with("HELP ") || rest.starts_with("TYPE "), "{line}");
+            if let Some(h) = rest.strip_prefix("HELP ") {
+                let name = h.split_whitespace().next().unwrap();
+                assert!(help_seen.insert(name.to_string()), "duplicate HELP for {name}");
+            }
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("{line}"));
+        assert!(value.parse::<f64>().is_ok(), "unparseable value: {line}");
+        assert!(series.starts_with("tcserved_"), "{line}");
+        let name_end = series.find('{').unwrap_or(series.len());
+        assert!(
+            series[..name_end].chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "{line}"
+        );
+        if let Some(open) = series.find('{') {
+            assert!(series.ends_with('}'), "{line}");
+            for pair in series[open + 1..series.len() - 1].split(',') {
+                let (_, v) = pair.split_once('=').unwrap_or_else(|| panic!("{line}"));
+                assert!(v.starts_with('"') && v.ends_with('"'), "{line}");
+            }
+        }
+    }
+
+    // -- and it agrees with the JSON counters --------------------------
+    // the JSON snapshot was taken while serving its own (already
+    // counted) request, so the later scrape sees exactly one more
+    let json_requests = json.get_f64("requests_total").unwrap();
+    assert_eq!(prom_value(&text, "tcserved_requests_total"), json_requests + 1.0);
+
+    let by_endpoint = json.get("by_endpoint").unwrap();
+    for endpoint in ["plan", "sweep", "metrics"] {
+        let series = format!("tcserved_endpoint_requests_total{{endpoint=\"{endpoint}\"}}");
+        assert_eq!(
+            prom_value(&text, &series),
+            by_endpoint.get_f64(endpoint).unwrap(),
+            "{endpoint}"
+        );
+    }
+
+    let cache = json.get("cache").unwrap();
+    assert!(cache.get_f64("hits").unwrap() >= 1.0, "second sweep must hit: {cache}");
+    for (series, key) in [
+        ("tcserved_result_cache_hits_total", "hits"),
+        ("tcserved_result_cache_misses_total", "misses"),
+        ("tcserved_result_cache_entries", "entries"),
+    ] {
+        assert_eq!(prom_value(&text, series), cache.get_f64(key).unwrap(), "{key}");
+    }
+
+    // latency histograms: the sweep endpoint saw exactly 3 requests,
+    // and the +Inf bucket of a histogram always equals its count
+    let sweep_latency = json.get("latency_us").unwrap().get("sweep").unwrap();
+    assert_eq!(sweep_latency.get_f64("count"), Some(3.0), "{sweep_latency}");
+    assert_eq!(
+        prom_value(&text, "tcserved_request_duration_us_count{endpoint=\"sweep\"}"),
+        3.0
+    );
+    assert_eq!(
+        prom_value(&text, "tcserved_request_duration_us_bucket{endpoint=\"sweep\",le=\"+Inf\"}"),
+        3.0
+    );
+
+    // compute phases flowed into both views (the metrics endpoints
+    // record none of these phases, so the two views agree exactly)
+    let phases = json.get("phases_us").unwrap();
+    for phase in ["cache_lookup", "simulate", "render"] {
+        let count = phases
+            .get(phase)
+            .unwrap_or_else(|| panic!("phase {phase} missing: {phases}"))
+            .get_f64("count")
+            .unwrap();
+        assert!(count >= 1.0, "{phase}");
+        let series = format!("tcserved_phase_duration_us_count{{phase=\"{phase}\"}}");
+        assert_eq!(prom_value(&text, &series), count, "{phase}");
+    }
+
+    server.stop();
+}

@@ -5,6 +5,7 @@ Usage:
     python3 scripts/bench_diff.py BASELINE NEW [--threshold PCT]
                                   [--min-share PCT] [--absolute]
                                   [--allow-new-plans] [--summary-md PATH]
+                                  [--profile-summary PATH]
 
 Compares each plan's wall time between a committed baseline
 (`bench_baseline.json`, produced by `repro all --out DIR`) and a fresh
@@ -35,11 +36,19 @@ to be appended to a CI job summary ($GITHUB_STEP_SUMMARY). The file is
 written on success AND on regression, so the CI step can publish it
 before propagating the exit code.
 
+When a profile_summary.json (written by `repro all --out DIR` next to
+bench_summary.json) is readable — by default looked up alongside NEW,
+or at an explicit --profile-summary PATH — the markdown table gains a
+"top stalls" column showing each plan's dominant stall-attribution
+categories. A missing or unreadable profile summary never fails the
+gate; the column is simply omitted.
+
 Exit codes: 0 = ok (or bootstrap baseline), 1 = regression, 2 = bad input.
 """
 
 import argparse
 import json
+import os
 import statistics
 import sys
 
@@ -79,6 +88,40 @@ def load_plans(path):
     return doc, plans
 
 
+def load_profiles(path):
+    """Plan id -> {category: fraction} from a profile_summary.json.
+
+    Auxiliary data for the markdown summary only: any read/shape problem
+    returns None (no column) instead of failing the gate.
+    """
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not str(doc.get("schema", "")).startswith("tcbench/profile_summary/"):
+        return None
+    profiles = {}
+    for row in doc.get("plans", []):
+        pid = row.get("id")
+        profile = row.get("profile")
+        fractions = profile.get("fractions") if isinstance(profile, dict) else None
+        if isinstance(pid, str) and isinstance(fractions, dict):
+            profiles[pid] = {k: float(v) for k, v in fractions.items()
+                             if isinstance(v, (int, float))}
+    return profiles or None
+
+
+def stall_cell(fractions, top=3):
+    """The dominant stall categories of one plan, as a compact cell."""
+    if not fractions:
+        return "—"
+    ranked = sorted(((v, k) for k, v in fractions.items() if v > 0), reverse=True)
+    if not ranked:
+        return "—"
+    return " · ".join(f"{k} {v * 100.0:.0f}%" for v, k in ranked[:top])
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline")
@@ -97,7 +140,15 @@ def main(argv=None):
     ap.add_argument("--summary-md", metavar="PATH",
                     help="also write a per-plan baseline-vs-current markdown "
                          "table to PATH (for $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--profile-summary", metavar="PATH",
+                    help="profile_summary.json with per-plan stall attribution "
+                         "(default: looked up alongside NEW); adds a 'top "
+                         "stalls' column to --summary-md when readable")
     args = ap.parse_args(argv)
+
+    profile_path = args.profile_summary or os.path.join(
+        os.path.dirname(args.new) or ".", "profile_summary.json")
+    profiles = load_profiles(profile_path)
 
     base_doc, base = load_plans(args.baseline)
     _, new = load_plans(args.new)
@@ -179,11 +230,23 @@ def main(argv=None):
             "",
             f"Median drift ×{scale:.2f}, threshold +{args.threshold:.0f}% — {verdict}.",
             "",
-            "| plan | base ms | new ms | vs median | status |",
-            "|---|---:|---:|---:|---|",
         ]
-        md.extend(f"| {pid} | {b} | {n} | {pct} | {status} |"
-                  for pid, b, n, pct, status in md_rows)
+        if profiles:
+            md += [
+                "| plan | base ms | new ms | vs median | top stalls | status |",
+                "|---|---:|---:|---:|---|---|",
+            ]
+            md.extend(
+                f"| {pid} | {b} | {n} | {pct} | {stall_cell(profiles.get(pid))} "
+                f"| {status} |"
+                for pid, b, n, pct, status in md_rows)
+        else:
+            md += [
+                "| plan | base ms | new ms | vs median | status |",
+                "|---|---:|---:|---:|---|",
+            ]
+            md.extend(f"| {pid} | {b} | {n} | {pct} | {status} |"
+                      for pid, b, n, pct, status in md_rows)
         write_summary_md(args.summary_md, md)
     if regressions:
         print(f"\nbench_diff: {len(regressions)} failure(s) "

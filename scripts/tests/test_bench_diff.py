@@ -31,6 +31,13 @@ def summary(plans, **extra):
     return doc
 
 
+def profile_summary(plans):
+    return {"schema": "tcbench/profile_summary/v1", "plans": [
+        {"id": pid, "profile": {"fractions": fractions}}
+        for pid, fractions in plans.items()
+    ]}
+
+
 class BenchDiffTest(unittest.TestCase):
     def setUp(self):
         self.dir = tempfile.TemporaryDirectory()
@@ -178,6 +185,51 @@ class BenchDiffTest(unittest.TestCase):
         rc, _, _ = self.run_diff(base, new, "--summary-md", self.summary_md())
         self.assertEqual(rc, 0)
         self.assertIn("bootstrap placeholder", self.read_md())
+
+    def test_summary_md_gains_stall_column_from_profile_summary(self):
+        # profile_summary.json sits next to new.json, so the default
+        # lookup finds it without any extra flag
+        self.write("profile_summary.json", profile_summary({
+            "t3": {"issued": 0.45, "scoreboard_dep": 0.30, "token_bucket": 0.15,
+                   "issue_slot": 0.10, "smem_conflict": 0.0},
+        }))
+        base = summary({"t3": 100.0, "fig6": 200.0})
+        new = summary({"t3": 100.0, "fig6": 200.0})
+        rc, _, _ = self.run_diff(base, new, "--summary-md", self.summary_md())
+        self.assertEqual(rc, 0)
+        md = self.read_md()
+        self.assertIn("| top stalls |", md)
+        # top-3 categories, largest first; zero categories never listed
+        self.assertIn("issued 45% · scoreboard_dep 30% · token_bucket 15%", md)
+        self.assertNotIn("smem_conflict", md)
+        # a plan with no profile row keeps a placeholder cell
+        self.assertIn("| fig6 | 200.0 | 200.0 | +0.0% | — | ok |", md)
+
+    def test_summary_md_without_profile_summary_keeps_old_table(self):
+        base = summary({"t3": 100.0})
+        rc, _, _ = self.run_diff(base, base, "--summary-md", self.summary_md())
+        self.assertEqual(rc, 0)
+        md = self.read_md()
+        self.assertNotIn("top stalls", md)
+        self.assertIn("| plan | base ms | new ms | vs median | status |", md)
+
+    def test_unreadable_profile_summary_is_ignored_not_fatal(self):
+        # wrong schema -> no column, and the gate's verdict is untouched
+        self.write("profile_summary.json", {"schema": "something/else"})
+        base = summary({"t3": 100.0})
+        rc, _, _ = self.run_diff(base, base, "--summary-md", self.summary_md())
+        self.assertEqual(rc, 0)
+        self.assertNotIn("top stalls", self.read_md())
+
+    def test_explicit_profile_summary_path_wins(self):
+        path = self.write("elsewhere.json", profile_summary({
+            "t3": {"issued": 1.0},
+        }))
+        base = summary({"t3": 100.0})
+        rc, _, _ = self.run_diff(base, base, "--summary-md", self.summary_md(),
+                                 "--profile-summary", path)
+        self.assertEqual(rc, 0)
+        self.assertIn("issued 100%", self.read_md())
 
     def test_absolute_mode_skips_normalization(self):
         base = summary({"t3": 100.0, "t12": 100.0, "fig17": 100.0})
