@@ -1,0 +1,630 @@
+//! tclint — static verification of warp programs.
+//!
+//! Every table the repo reproduces is compiled down to the
+//! [`WarpProgram`] IR and handed to `SmSim`, which trusts it blindly: a
+//! read-before-write register silently reads a zero-ready scoreboard
+//! slot, a `CpAsyncWait` with no commit waits on nothing, and unequal
+//! `BarSync` counts across warps mis-synchronize in the simulator (the
+//! barrier excuses retired warps) but hang on real hardware. This module
+//! is the static pass that makes those failure modes loud *without
+//! simulating a cycle*: [`verify`] walks the programs once and returns
+//! typed [`Diagnostic`]s.
+//!
+//! Wiring (see the README's "Static analysis (tclint)" section):
+//! * `SmSim::from_shared` runs [`verify`] under `debug_assertions` and
+//!   panics with the rule id on the first [`Severity::Error`] — debug
+//!   and test builds cannot simulate a malformed program. Release
+//!   builds skip the pass entirely (zero overhead, bit-identical
+//!   schedules).
+//! * `BenchPlan::lint` runs it over every program a compiled plan would
+//!   simulate; `repro lint <spec...>` / `repro lint --all` and tcserved's
+//!   `POST /v1/lint` expose that (the endpoint answers 400 when any
+//!   Error-severity diagnostic fires).
+//!
+//! ## Rule catalog
+//!
+//! | rule id | severity | fires on |
+//! |---|---|---|
+//! | `def-use/undefined-read`   | Error | a source register read before any write and not seeded via `init_reg` (the scoreboard self-dependency class) |
+//! | `def-use/dead-write`       | Warn  | a write overwritten before any read (the register's final, live-out write is exempt) |
+//! | `cpasync/wait-before-commit` | Error | `CpAsyncWait` with no `CpAsyncCommit` anywhere before it |
+//! | `cpasync/empty-commit`     | Warn  | `CpAsyncCommit` closing a group with no `CpAsync` in it |
+//! | `cpasync/wait-noop`        | Warn  | `max_pending` ≥ the groups ever committed before the wait (it can never block) |
+//! | `cpasync/uncommitted`      | Warn  | `CpAsync` transfers never closed by a commit |
+//! | `barrier/arrival-mismatch` | Error | unequal `BarSync` counts across warps in a multi-warp launch |
+//! | `loop/nonuniform-body`     | Warn  | FMA or smem-byte work differs between `IterMark` segments (breaks the per-iteration accounting) |
+//! | `loop/prologue-skew`       | Warn  | counted work before the first / after the last `IterMark` differs from a steady iteration |
+//! | `resource/register-pressure` | Error | more than 256 distinct registers in one warp program |
+//! | `resource/zero-cost-op`    | Error | an `Mma` with `ii`/`latency` 0, a smem op with 0 transactions, or a 0-byte transfer |
+//! | `resource/smem-overflow`   | Error | a single smem/cp.async transfer, or the peak cp.async bytes in flight across the launch, exceeding the device's per-SM shared memory |
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::device::Device;
+use crate::sim::{Op, WarpProgram};
+
+/// Hardware register-file bound per thread (255 architectural registers
+/// on Volta..Hopper; the virtual IR gets one extra for slack).
+const MAX_REGS_PER_WARP: usize = 256;
+
+/// Diagnostic severity. `Error` means the program is structurally
+/// malformed — the simulator would hang, deadlock or silently
+/// mis-attribute cycles; `Warn` flags suspicious-but-runnable shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The analyzer rules. Each has a stable string id (`Rule::id`) used in
+/// panics, JSON output and tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    UndefinedRead,
+    DeadWrite,
+    WaitBeforeCommit,
+    EmptyCommit,
+    WaitNoop,
+    Uncommitted,
+    BarrierMismatch,
+    NonuniformBody,
+    PrologueSkew,
+    RegisterPressure,
+    ZeroCostOp,
+    SmemOverflow,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 12] = [
+        Rule::UndefinedRead,
+        Rule::DeadWrite,
+        Rule::WaitBeforeCommit,
+        Rule::EmptyCommit,
+        Rule::WaitNoop,
+        Rule::Uncommitted,
+        Rule::BarrierMismatch,
+        Rule::NonuniformBody,
+        Rule::PrologueSkew,
+        Rule::RegisterPressure,
+        Rule::ZeroCostOp,
+        Rule::SmemOverflow,
+    ];
+
+    /// Stable rule identifier (`category/name`).
+    pub fn id(&self) -> &'static str {
+        match self {
+            Rule::UndefinedRead => "def-use/undefined-read",
+            Rule::DeadWrite => "def-use/dead-write",
+            Rule::WaitBeforeCommit => "cpasync/wait-before-commit",
+            Rule::EmptyCommit => "cpasync/empty-commit",
+            Rule::WaitNoop => "cpasync/wait-noop",
+            Rule::Uncommitted => "cpasync/uncommitted",
+            Rule::BarrierMismatch => "barrier/arrival-mismatch",
+            Rule::NonuniformBody => "loop/nonuniform-body",
+            Rule::PrologueSkew => "loop/prologue-skew",
+            Rule::RegisterPressure => "resource/register-pressure",
+            Rule::ZeroCostOp => "resource/zero-cost-op",
+            Rule::SmemOverflow => "resource/smem-overflow",
+        }
+    }
+
+    /// The severity this rule always fires at.
+    pub fn severity(&self) -> Severity {
+        match self {
+            Rule::UndefinedRead
+            | Rule::WaitBeforeCommit
+            | Rule::BarrierMismatch
+            | Rule::RegisterPressure
+            | Rule::ZeroCostOp
+            | Rule::SmemOverflow => Severity::Error,
+            Rule::DeadWrite
+            | Rule::EmptyCommit
+            | Rule::WaitNoop
+            | Rule::Uncommitted
+            | Rule::NonuniformBody
+            | Rule::PrologueSkew => Severity::Warn,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One analyzer finding, anchored to a warp and (usually) an
+/// instruction index in that warp's program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub severity: Severity,
+    /// Index of the first warp running the offending program (replicated
+    /// launches share one trace, so the finding applies to every warp
+    /// aliasing it).
+    pub warp: usize,
+    /// Instruction index inside the warp program, when the finding is
+    /// anchored to one (launch-wide findings like the barrier rule are
+    /// not).
+    pub instr: Option<usize>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn new(rule: Rule, warp: usize, instr: Option<usize>, message: String) -> Self {
+        Self { rule, severity: rule.severity(), warp, instr, message }
+    }
+
+    pub fn is_error(&self) -> bool {
+        self.severity == Severity::Error
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {} warp {}", self.rule.id(), self.severity, self.warp)?;
+        if let Some(i) = self.instr {
+            write!(f, " instr {i}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// Do any of `diags` carry [`Severity::Error`]?
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(Diagnostic::is_error)
+}
+
+/// Statically verify the warp programs of one launch (warp `i` runs
+/// `programs[i]`, exactly the `SmSim::from_shared` contract) against
+/// `device`. Returns every finding; no simulation happens.
+///
+/// Per-program rules run once per *distinct* trace (replicated launches
+/// share `Arc`s), launch-wide rules (barrier arity, aggregate smem
+/// residency) see all warps.
+pub fn verify(programs: &[Arc<WarpProgram>], device: &Device) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut seen: Vec<*const WarpProgram> = Vec::new();
+    for (warp, p) in programs.iter().enumerate() {
+        let ptr = Arc::as_ptr(p);
+        if seen.contains(&ptr) {
+            continue;
+        }
+        seen.push(ptr);
+        check_def_use(warp, p, &mut diags);
+        check_cpasync(warp, p, &mut diags);
+        check_loop_uniformity(warp, p, &mut diags);
+        check_resources(warp, p, device, &mut diags);
+    }
+    check_barriers(programs, &mut diags);
+    check_smem_residency(programs, device, &mut diags);
+    diags.sort_by(|a, b| b.severity.cmp(&a.severity).then(a.warp.cmp(&b.warp)));
+    diags
+}
+
+/// Convenience: verify and panic on the first Error — the
+/// `debug_assertions` hook `SmSim::from_shared` uses.
+pub fn verify_or_panic(programs: &[Arc<WarpProgram>], device: &Device) {
+    let diags = verify(programs, device);
+    if let Some(d) = diags.iter().find(|d| d.is_error()) {
+        panic!("tclint rejected the launch: {d}");
+    }
+}
+
+// --------------------------------------------------------------- def-use
+
+/// Per-register def-use walk: reads happen at issue, the `dst` write
+/// lands at completion, so a source is defined only by a *strictly
+/// earlier* instruction (or by `live_in` seeding). An instruction with
+/// `dst == src` therefore reads the previous value — the accumulator
+/// chain idiom — and is only legal once the register has been seeded.
+fn check_def_use(warp: usize, p: &WarpProgram, diags: &mut Vec<Diagnostic>) {
+    #[derive(Clone, Copy)]
+    struct RegState {
+        written: bool,
+        /// Latest write not yet read (dead-store candidate).
+        pending_write: Option<usize>,
+        /// Only report the first undefined read per register.
+        reported: bool,
+    }
+    let max_reg = p
+        .instrs
+        .iter()
+        .flat_map(|i| i.srcs.iter().copied().chain(i.dst))
+        .chain(p.live_in.iter().copied())
+        .max()
+        .map(|r| r as usize + 1)
+        .unwrap_or(0);
+    let mut regs =
+        vec![RegState { written: false, pending_write: None, reported: false }; max_reg];
+    for &r in &p.live_in {
+        regs[r as usize].written = true;
+    }
+    for (i, instr) in p.instrs.iter().enumerate() {
+        for &s in &instr.srcs {
+            let st = &mut regs[s as usize];
+            if !st.written && !st.reported {
+                st.reported = true;
+                diags.push(Diagnostic::new(
+                    Rule::UndefinedRead,
+                    warp,
+                    Some(i),
+                    format!(
+                        "r{s} is read before any write (the scoreboard would treat it \
+                         as ready-at-0; seed it with ProgramBuilder::init_reg)"
+                    ),
+                ));
+            }
+            st.pending_write = None;
+        }
+        if let Some(d) = instr.dst {
+            let st = &mut regs[d as usize];
+            if let Some(prev) = st.pending_write {
+                diags.push(Diagnostic::new(
+                    Rule::DeadWrite,
+                    warp,
+                    Some(prev),
+                    format!("write to r{d} is overwritten at instr {i} without being read"),
+                ));
+            }
+            st.written = true;
+            st.pending_write = Some(i);
+        }
+    }
+    // A register's final write is its live-out value — not a dead store.
+}
+
+// -------------------------------------------------------------- cp.async
+
+fn check_cpasync(warp: usize, p: &WarpProgram, diags: &mut Vec<Diagnostic>) {
+    let mut commits = 0u32;
+    let mut open_cps = 0u32; // CpAsyncs since the last commit
+    let mut last_open_cp = 0usize;
+    for (i, instr) in p.instrs.iter().enumerate() {
+        match instr.op {
+            Op::CpAsync { .. } => {
+                open_cps += 1;
+                last_open_cp = i;
+            }
+            Op::CpAsyncCommit => {
+                if open_cps == 0 {
+                    diags.push(Diagnostic::new(
+                        Rule::EmptyCommit,
+                        warp,
+                        Some(i),
+                        "CpAsyncCommit closes a group with no CpAsync in it".into(),
+                    ));
+                }
+                open_cps = 0;
+                commits += 1;
+            }
+            Op::CpAsyncWait { max_pending } => {
+                if commits == 0 {
+                    diags.push(Diagnostic::new(
+                        Rule::WaitBeforeCommit,
+                        warp,
+                        Some(i),
+                        format!(
+                            "CpAsyncWait(max_pending={max_pending}) before any \
+                             CpAsyncCommit — nothing can ever be waited on"
+                        ),
+                    ));
+                } else if max_pending >= commits {
+                    diags.push(Diagnostic::new(
+                        Rule::WaitNoop,
+                        warp,
+                        Some(i),
+                        format!(
+                            "CpAsyncWait(max_pending={max_pending}) can never block: only \
+                             {commits} group(s) were ever committed before it"
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    if open_cps > 0 {
+        diags.push(Diagnostic::new(
+            Rule::Uncommitted,
+            warp,
+            Some(last_open_cp),
+            format!("{open_cps} CpAsync transfer(s) are never closed by a CpAsyncCommit"),
+        ));
+    }
+}
+
+// ------------------------------------------------------- loop uniformity
+
+/// Counted work of an instruction span: the two quantities the
+/// per-iteration accessors (`fmas_per_iteration`,
+/// `smem_bytes_per_iteration`) report. `cp.async`/gmem traffic is
+/// excluded on purpose: a pipelined prologue or a guarded loop tail
+/// legitimately varies it without skewing either accessor.
+fn span_work(instrs: &[crate::sim::Instr]) -> (u64, u64) {
+    let fmas = instrs.iter().map(|i| i.op.fmas()).sum();
+    let smem = instrs.iter().map(|i| i.op.smem_bytes()).sum();
+    (fmas, smem)
+}
+
+fn check_loop_uniformity(warp: usize, p: &WarpProgram, diags: &mut Vec<Diagnostic>) {
+    let marks: Vec<usize> = p
+        .instrs
+        .iter()
+        .enumerate()
+        .filter(|(_, i)| matches!(i.op, Op::IterMark))
+        .map(|(i, _)| i)
+        .collect();
+    if marks.len() < 2 {
+        return;
+    }
+    // Interior segments: the spans between consecutive IterMarks — the
+    // exact window the prologue-aware per-iteration accessors average.
+    let first_seg = span_work(&p.instrs[marks[0] + 1..marks[1]]);
+    for w in marks.windows(2).skip(1) {
+        let seg = span_work(&p.instrs[w[0] + 1..w[1]]);
+        if seg != first_seg {
+            diags.push(Diagnostic::new(
+                Rule::NonuniformBody,
+                warp,
+                Some(w[0] + 1),
+                format!(
+                    "iteration work is not uniform: segment after mark at instr {} does \
+                     {:?} (fmas, smem bytes) vs {:?} in the first segment — \
+                     per-iteration accounting would be skewed",
+                    w[0], seg, first_seg
+                ),
+            ));
+            break; // one finding per program is enough to flag the shape
+        }
+    }
+    // Prologue (before the first mark) and epilogue (after the last):
+    // loop-built programs end each iteration with a mark, so the
+    // prologue is exactly one iteration body and the epilogue is empty.
+    let prologue = span_work(&p.instrs[..marks[0]]);
+    if prologue != first_seg {
+        diags.push(Diagnostic::new(
+            Rule::PrologueSkew,
+            warp,
+            Some(0),
+            format!(
+                "work before the first IterMark {prologue:?} (fmas, smem bytes) differs \
+                 from a steady iteration {first_seg:?}"
+            ),
+        ));
+    }
+    let epilogue = span_work(&p.instrs[marks[marks.len() - 1] + 1..]);
+    if epilogue != (0, 0) {
+        diags.push(Diagnostic::new(
+            Rule::PrologueSkew,
+            warp,
+            Some(marks[marks.len() - 1] + 1),
+            format!(
+                "counted work {epilogue:?} (fmas, smem bytes) after the last IterMark is \
+                 outside the measured window"
+            ),
+        ));
+    }
+}
+
+// -------------------------------------------------------------- resources
+
+fn check_resources(warp: usize, p: &WarpProgram, device: &Device, diags: &mut Vec<Diagnostic>) {
+    let mut regs: Vec<u32> = p
+        .instrs
+        .iter()
+        .flat_map(|i| i.srcs.iter().copied().chain(i.dst))
+        .chain(p.live_in.iter().copied())
+        .collect();
+    regs.sort_unstable();
+    regs.dedup();
+    if regs.len() > MAX_REGS_PER_WARP {
+        diags.push(Diagnostic::new(
+            Rule::RegisterPressure,
+            warp,
+            None,
+            format!(
+                "{} distinct registers exceed the {MAX_REGS_PER_WARP}-register per-warp \
+                 file",
+                regs.len()
+            ),
+        ));
+    }
+    let cap = device.smem_bytes_per_sm as u64;
+    for (i, instr) in p.instrs.iter().enumerate() {
+        let problem = match instr.op {
+            Op::Mma { ii, latency, .. } if ii == 0 || latency == 0 => {
+                Some(format!("Mma with ii={ii}, latency={latency} (both must be nonzero)"))
+            }
+            Op::SmemLoad { txns, bytes } | Op::SmemStore { txns, bytes }
+                if txns == 0 || bytes == 0 =>
+            {
+                Some(format!("smem op with txns={txns}, bytes={bytes} (both must be nonzero)"))
+            }
+            Op::GmemLoad { bytes } | Op::CpAsync { bytes } if bytes == 0 => {
+                Some("zero-byte global transfer".into())
+            }
+            _ => None,
+        };
+        if let Some(msg) = problem {
+            diags.push(Diagnostic::new(Rule::ZeroCostOp, warp, Some(i), msg));
+        }
+        let bytes = match instr.op {
+            Op::SmemLoad { bytes, .. } | Op::SmemStore { bytes, .. } | Op::CpAsync { bytes } => {
+                bytes
+            }
+            _ => 0,
+        };
+        if bytes > cap {
+            diags.push(Diagnostic::new(
+                Rule::SmemOverflow,
+                warp,
+                Some(i),
+                format!(
+                    "single transfer of {bytes} B exceeds the {cap} B of shared memory \
+                     per SM on {}",
+                    device.name
+                ),
+            ));
+        }
+    }
+}
+
+// --------------------------------------------------------------- barriers
+
+/// Every warp in a multi-warp launch must arrive at the same number of
+/// `BarSync`s: tcsim's barrier excuses retired warps (silently skewing
+/// the schedule) but real hardware hangs the CTA.
+fn check_barriers(programs: &[Arc<WarpProgram>], diags: &mut Vec<Diagnostic>) {
+    if programs.len() < 2 {
+        return;
+    }
+    let counts: Vec<usize> = programs
+        .iter()
+        .map(|p| p.instrs.iter().filter(|i| matches!(i.op, Op::BarSync)).count())
+        .collect();
+    let first = counts[0];
+    if let Some(w) = counts.iter().position(|&c| c != first) {
+        diags.push(Diagnostic::new(
+            Rule::BarrierMismatch,
+            w,
+            None,
+            format!(
+                "warp {w} arrives at {} BarSync(s) but warp 0 at {first} — the CTA \
+                 barrier would hang on hardware",
+                counts[w]
+            ),
+        ));
+    }
+}
+
+// --------------------------------------------------------- smem residency
+
+/// Peak cp.async bytes in flight, summed across the launch (each warp
+/// stages its own slice of the shared tile): an upper bound on the
+/// shared-memory footprint the pipeline prefetches, which must fit the
+/// device's per-SM capacity. `CpAsyncWait(p)` retires all but the `p`
+/// newest groups.
+fn check_smem_residency(
+    programs: &[Arc<WarpProgram>],
+    device: &Device,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let mut total_peak = 0u64;
+    for p in programs {
+        let mut open = 0u64;
+        let mut groups: Vec<u64> = Vec::new();
+        let mut peak = 0u64;
+        for instr in &p.instrs {
+            match instr.op {
+                Op::CpAsync { bytes } => {
+                    open += bytes;
+                    peak = peak.max(open + groups.iter().sum::<u64>());
+                }
+                Op::CpAsyncCommit => {
+                    groups.push(std::mem::take(&mut open));
+                }
+                Op::CpAsyncWait { max_pending } => {
+                    let keep = max_pending as usize;
+                    if groups.len() > keep {
+                        groups.drain(..groups.len() - keep);
+                    }
+                }
+                _ => {}
+            }
+        }
+        total_peak += peak.max(open + groups.iter().sum::<u64>());
+    }
+    let cap = device.smem_bytes_per_sm as u64;
+    if total_peak > cap {
+        diags.push(Diagnostic::new(
+            Rule::SmemOverflow,
+            0,
+            None,
+            format!(
+                "peak cp.async bytes in flight across the launch ({total_peak} B) exceed \
+                 the {cap} B of shared memory per SM on {}",
+                device.name
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::a100;
+    use crate::sim::ProgramBuilder;
+
+    fn ids(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule.id()).collect()
+    }
+
+    #[test]
+    fn seeded_accumulator_chain_is_clean() {
+        let mut b = ProgramBuilder::new();
+        let d = b.init_reg();
+        for _ in 0..4 {
+            b.mma(8, 24, 2048, d, vec![d]);
+            b.sync_warp();
+            b.iter_mark();
+        }
+        let diags = verify(&[Arc::new(b.build())], &a100());
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn unseeded_accumulator_chain_is_an_undefined_read() {
+        let mut b = ProgramBuilder::new();
+        let d = b.alloc_reg();
+        b.mma(8, 24, 2048, d, vec![d]);
+        let diags = verify(&[Arc::new(b.build())], &a100());
+        assert_eq!(ids(&diags), vec!["def-use/undefined-read"]);
+        assert!(diags[0].is_error());
+        assert_eq!(diags[0].instr, Some(0));
+    }
+
+    #[test]
+    fn replicated_launch_reports_each_program_once() {
+        let mut b = ProgramBuilder::new();
+        let d = b.alloc_reg();
+        b.mma(8, 24, 2048, d, vec![d]);
+        let p = Arc::new(b.build());
+        let diags = verify(&[Arc::clone(&p), Arc::clone(&p), p], &a100());
+        assert_eq!(diags.len(), 1, "{diags:?}");
+    }
+
+    #[test]
+    fn display_carries_the_rule_id() {
+        let d = Diagnostic::new(Rule::UndefinedRead, 3, Some(7), "r0 bad".into());
+        let s = d.to_string();
+        assert!(s.contains("def-use/undefined-read"), "{s}");
+        assert!(s.contains("warp 3"), "{s}");
+        assert!(s.contains("instr 7"), "{s}");
+    }
+
+    #[test]
+    fn every_rule_id_is_unique_and_categorized() {
+        let mut seen = std::collections::HashSet::new();
+        for r in Rule::ALL {
+            assert!(seen.insert(r.id()), "duplicate id {}", r.id());
+            assert!(r.id().contains('/'), "{} must be category/name", r.id());
+        }
+    }
+}

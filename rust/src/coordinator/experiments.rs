@@ -22,6 +22,55 @@ fn fmt1(x: f64) -> String {
     format!("{x:.1}")
 }
 
+// ---------------------------------------------------- plan enumeration
+//
+// Each experiment's plans are built by a dedicated constructor shared
+// between its run path and [`experiment_plans`], so `repro lint --all`
+// verifies exactly the warp programs the campaign launches — the two
+// can not drift apart.
+
+/// Every [`Plan`] one experiment compiles, without running any of it —
+/// the enumeration seam behind `repro lint --all`. Numeric experiments
+/// are enumerated too (the campaign's full plan surface stays covered)
+/// but launch no warp programs, so they always lint clean. Unknown ids
+/// enumerate nothing.
+pub fn experiment_plans(id: &str) -> Vec<Plan> {
+    let mma_plans = |device: &Device, rows: &[PaperMmaRow]| -> Vec<Plan> {
+        rows.iter().map(|r| mma_row_plan(device.name, r)).collect()
+    };
+    match id {
+        "t3" => mma_plans(&device::a100(), &expected::table3()),
+        "t4" => mma_plans(&device::rtx3070ti(), &expected::table4()),
+        "t5" => mma_plans(&device::rtx2080ti(), &expected::table5()),
+        "t6" => mma_plans(&device::a100(), &expected::table6()),
+        "t7" => mma_plans(&device::rtx3070ti(), &expected::table7()),
+        "fig6" | "fig7" | "fig10" | "fig11" | "fig15" => {
+            vec![figure_plan(figure_workload(id))]
+        }
+        "t9" => expected::table9().iter().map(ldmatrix_row_plan).collect(),
+        "t10" => expected::table10()
+            .into_iter()
+            .map(|(width_name, ways, _paper)| table10_plan(width_name, ways))
+            .collect(),
+        "t12" => profile_table_plans(ProbeDtype::Bf16, AccDtype::F32, true),
+        "t13" => profile_table_plans(ProbeDtype::Fp16, AccDtype::F32, true),
+        "t14" => profile_table_plans(ProbeDtype::Fp16, AccDtype::F16, false),
+        "t15" => profile_table_plans(ProbeDtype::Tf32, AccDtype::F32, true),
+        "fig17" => {
+            fig17_series().into_iter().map(|(_, probe)| profile_plan(probe)).collect()
+        }
+        "t16" => vec![
+            gemm_plan(gemm::Variant::Baseline, false, 1),
+            gemm_plan(gemm::Variant::Pipeline, false, 2),
+        ],
+        "t17" => vec![
+            gemm_plan(gemm::Variant::Baseline, true, 1),
+            gemm_plan(gemm::Variant::Permuted, true, 1),
+        ],
+        _ => Vec::new(),
+    }
+}
+
 // ------------------------------------------------------------ mma tables
 
 /// Regenerate one dense/sparse instruction table (Tables 3–7).
@@ -32,6 +81,17 @@ fn fmt1(x: f64) -> String {
 /// one compiled [`Plan`] — completion probe, two fixed points, and the
 /// sweep with its 4/8-warp convergence summaries — run on the shared
 /// workload path.
+/// One Table 3–7 row's plan: completion probe, the paper's two fixed
+/// points, and the sweep with its 4/8-warp convergence summaries.
+fn mma_row_plan(device_name: &str, r: &PaperMmaRow) -> Plan {
+    Plan::new(Workload::from_instr(r.instr))
+        .device(device_name)
+        .completion_latency()
+        .point(4, r.p4.0)
+        .point(8, r.p8.0)
+        .sweep()
+}
+
 pub fn mma_table(device: &Device, rows: &[PaperMmaRow], title: &str) -> String {
     struct RowData {
         cmpl: f64,
@@ -46,12 +106,7 @@ pub fn mma_table(device: &Device, rows: &[PaperMmaRow], title: &str) -> String {
             .map(|r| {
                 let r = *r;
                 move || {
-                    let plan = Plan::new(Workload::from_instr(r.instr))
-                        .device(device_name)
-                        .completion_latency()
-                        .point(4, r.p4.0)
-                        .point(8, r.p8.0)
-                        .sweep()
+                    let plan = mma_row_plan(device_name, &r)
                         .compile()
                         .expect("paper table rows are valid workloads");
                     // units run serially: the rows are the parallel
@@ -124,12 +179,27 @@ pub fn run_table7() -> String {
 
 // ------------------------------------------------------- mma/ld figures
 
+/// The swept workload of each figure experiment, by registry id.
+fn figure_workload(id: &str) -> Workload {
+    match id {
+        "fig6" => Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 },
+        "fig7" => Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K8 },
+        "fig10" => Workload::MmaSp { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K32 },
+        "fig11" => Workload::MmaSp { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 },
+        "fig15" => Workload::Ldmatrix { num: LdMatrixNum::X4 },
+        other => unreachable!("{other} is not a sweep-figure experiment"),
+    }
+}
+
+/// A figure's sweep-only plan on the A100.
+fn figure_plan(workload: Workload) -> Plan {
+    Plan::new(workload).device("a100").sweep()
+}
+
 /// Run a sweep-only plan for `workload` and render the Fig. 6/7/10/11/15
 /// grid — one shared path regardless of the instruction family.
 fn figure_sweep(workload: Workload, title: &str) -> String {
-    let plan = Plan::new(workload)
-        .device("a100")
-        .sweep()
+    let plan = figure_plan(workload)
         .compile()
         .expect("figure workloads are valid on a100");
     let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");
@@ -137,31 +207,38 @@ fn figure_sweep(workload: Workload, title: &str) -> String {
 }
 
 pub fn run_fig6() -> String {
-    let w = Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 };
-    figure_sweep(w, "Fig. 6: mma.m16n8k16 (BF16) on A100")
+    figure_sweep(figure_workload("fig6"), "Fig. 6: mma.m16n8k16 (BF16) on A100")
 }
 
 pub fn run_fig7() -> String {
-    let w = Workload::Mma { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K8 };
-    figure_sweep(w, "Fig. 7: mma.m16n8k8 (BF16) on A100")
+    figure_sweep(figure_workload("fig7"), "Fig. 7: mma.m16n8k8 (BF16) on A100")
 }
 
 pub fn run_fig10() -> String {
-    let w = Workload::MmaSp { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K32 };
-    figure_sweep(w, "Fig. 10: mma.sp.m16n8k32 (BF16) on A100")
+    figure_sweep(figure_workload("fig10"), "Fig. 10: mma.sp.m16n8k32 (BF16) on A100")
 }
 
 pub fn run_fig11() -> String {
-    let w = Workload::MmaSp { ab: AbType::Bf16, cd: CdType::Fp32, shape: M16N8K16 };
-    figure_sweep(w, "Fig. 11: mma.sp.m16n8k16 (BF16) on A100 — small-k anomaly")
+    figure_sweep(
+        figure_workload("fig11"),
+        "Fig. 11: mma.sp.m16n8k16 (BF16) on A100 — small-k anomaly",
+    )
 }
 
 pub fn run_fig15() -> String {
-    let w = Workload::Ldmatrix { num: LdMatrixNum::X4 };
-    figure_sweep(w, "Fig. 15: ldmatrix.x4 on A100 (bytes/clk/SM)")
+    figure_sweep(figure_workload("fig15"), "Fig. 15: ldmatrix.x4 on A100 (bytes/clk/SM)")
 }
 
 // ---------------------------------------------------------- §7 tables
+
+/// One Table 9 row's plan: completion probe plus the paper's points.
+fn ldmatrix_row_plan(r: &PaperLdmatrixRow) -> Plan {
+    Plan::new(Workload::Ldmatrix { num: r.num })
+        .device("a100")
+        .completion_latency()
+        .point(4, r.p4.0)
+        .point(8, r.p8.0)
+}
 
 pub fn run_table9() -> String {
     let rows: Vec<PaperLdmatrixRow> = expected::table9();
@@ -170,11 +247,7 @@ pub fn run_table9() -> String {
             .map(|r| {
                 let r = *r;
                 move || {
-                    let plan = Plan::new(Workload::Ldmatrix { num: r.num })
-                        .device("a100")
-                        .completion_latency()
-                        .point(4, r.p4.0)
-                        .point(8, r.p8.0)
+                    let plan = ldmatrix_row_plan(&r)
                         .compile()
                         .expect("ldmatrix rows are valid on a100");
                     let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");
@@ -204,6 +277,12 @@ pub fn run_table9() -> String {
     t.render()
 }
 
+/// One Table 10 probe's plan: a single (1, 1) latency point.
+fn table10_plan(width_name: &str, ways: u32) -> Plan {
+    let width = if width_name == "u32" { LdSharedWidth::U32 } else { LdSharedWidth::U64 };
+    Plan::new(Workload::LdShared { width, ways }).device("a100").point(1, 1)
+}
+
 pub fn run_table10() -> String {
     let mut t = Table::new(
         "Table 10: ld.shared latency under bank conflicts (cycles)",
@@ -211,9 +290,7 @@ pub fn run_table10() -> String {
     );
     for (width_name, ways, paper) in expected::table10() {
         let width = if width_name == "u32" { LdSharedWidth::U32 } else { LdSharedWidth::U64 };
-        let plan = Plan::new(Workload::LdShared { width, ways })
-            .device("a100")
-            .point(1, 1)
+        let plan = table10_plan(width_name, ways)
             .compile()
             .expect("Table 10 probes are valid on a100");
         let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");
@@ -231,6 +308,29 @@ pub fn run_table10() -> String {
 
 // ------------------------------------------------------- §8 numerics
 
+/// A numeric probe's plan: the pinned (1, 1) point unit.
+fn profile_plan(probe: NumericProbe) -> Plan {
+    Plan::new(Workload::Numeric(probe)).point(1, 1)
+}
+
+/// Every probe plan one §8.1 table runs: all three profile ops, for
+/// the low-precision init and (where the table has an `init_FP32`
+/// block) the FP32 init too.
+fn profile_table_plans(ab: ProbeDtype, cd: AccDtype, fp32_init: bool) -> Vec<Plan> {
+    let inits: &[InitKind] = if fp32_init {
+        &[InitKind::LowPrecision, InitKind::Fp32]
+    } else {
+        &[InitKind::LowPrecision]
+    };
+    let mut plans = Vec::new();
+    for &init in inits {
+        for op in ProfileOp::ALL {
+            plans.push(profile_plan(NumericProbe::profile(ab, cd, op, init)));
+        }
+    }
+    plans
+}
+
 /// Run one §8.1 profile probe as a plan-backed `(1,1)` point unit on
 /// `runner` — the same path `POST /v1/plan` takes, so tcserved serves
 /// these tables from its per-unit cache and the runner's numeric leg
@@ -242,9 +342,7 @@ fn profile_result(
     op: ProfileOp,
     init: InitKind,
 ) -> ProfileResult {
-    let probe = NumericProbe::profile(ab, cd, op, init);
-    let plan = Plan::new(Workload::Numeric(probe))
-        .point(1, 1)
+    let plan = profile_plan(NumericProbe::profile(ab, cd, op, init))
         .compile()
         .expect("the paper's profile probes are valid workloads");
     let res = plan.run(runner, 1).expect("numeric probe execution failed");
@@ -332,22 +430,30 @@ pub fn run_table15(runner: &dyn Runner) -> String {
     )
 }
 
-pub fn run_fig17(runner: &dyn Runner) -> String {
-    const N: u32 = 14;
-    let mut out = String::from("## Fig. 17: chain matrix multiplication relative error\n\n");
-    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
-    for (label, ab, cd, init) in [
+/// The chain length of every Fig. 17 series (the paper's x-axis).
+const FIG17_CHAIN_N: u32 = 14;
+
+/// The Fig. 17 chain-probe series: one labelled probe per plotted line.
+fn fig17_series() -> Vec<(&'static str, NumericProbe)> {
+    [
         ("TF32 (init TF32)", ProbeDtype::Tf32, AccDtype::F32, InitKind::LowPrecision),
         ("BF16 (init BF16)", ProbeDtype::Bf16, AccDtype::F32, InitKind::LowPrecision),
         ("FP16 (init FP16)", ProbeDtype::Fp16, AccDtype::F16, InitKind::LowPrecision),
         ("TF32 (init FP32)", ProbeDtype::Tf32, AccDtype::F32, InitKind::Fp32),
         ("BF16 (init FP32)", ProbeDtype::Bf16, AccDtype::F32, InitKind::Fp32),
-    ] {
+    ]
+    .into_iter()
+    .map(|(label, ab, cd, init)| (label, NumericProbe::chain(ab, cd, FIG17_CHAIN_N, init)))
+    .collect()
+}
+
+pub fn run_fig17(runner: &dyn Runner) -> String {
+    let mut out = String::from("## Fig. 17: chain matrix multiplication relative error\n\n");
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    for (label, probe) in fig17_series() {
         // one plan-backed chain probe per series; the full per-step
         // error series and the overflow step ride in the typed output
-        let probe = NumericProbe::chain(ab, cd, N, init);
-        let plan = Plan::new(Workload::Numeric(probe))
-            .point(1, 1)
+        let plan = profile_plan(probe)
             .compile()
             .expect("the Fig. 17 chain probes are valid workloads");
         let res = plan.run(runner, 1).expect("numeric probe execution failed");
@@ -361,7 +467,7 @@ pub fn run_fig17(runner: &dyn Runner) -> String {
     for (name, ys) in &series {
         out.push_str(&format!("{name:>18} {}\n", render_sparkline(ys)));
     }
-    let xs: Vec<f64> = (1..=N).map(|i| i as f64).collect();
+    let xs: Vec<f64> = (1..=FIG17_CHAIN_N).map(|i| i as f64).collect();
     let named: Vec<(&str, Vec<f64>)> = series.iter().map(|(n, y)| (n.as_str(), y.clone())).collect();
     out.push_str("\ncsv:\n");
     out.push_str(&render_figure_csv("N", &xs, &named));
@@ -374,11 +480,17 @@ pub fn run_fig17(runner: &dyn Runner) -> String {
 /// plan-backed [`Workload::Gemm`] point unit — the same path `repro
 /// sweep` and `POST /v1/plan` take, so tcserved can serve these tables
 /// from its per-unit cache.
-fn gemm_total_cycles(variant: gemm::Variant, l2_resident: bool, stages: u32) -> u64 {
-    let params = GemmParams::paper(variant, l2_resident);
-    let plan = Plan::new(Workload::Gemm(params))
+/// One Appendix-A kernel's plan: the paper's 8-warp CTA at the given
+/// cp.async stage depth (the exec point's ILP coordinate).
+fn gemm_plan(variant: gemm::Variant, l2_resident: bool, stages: u32) -> Plan {
+    Plan::new(Workload::Gemm(GemmParams::paper(variant, l2_resident)))
         .device("a100")
         .point(8, stages)
+}
+
+fn gemm_total_cycles(variant: gemm::Variant, l2_resident: bool, stages: u32) -> u64 {
+    let params = GemmParams::paper(variant, l2_resident);
+    let plan = gemm_plan(variant, l2_resident, stages)
         .compile()
         .expect("the paper's gemm configuration is valid on a100");
     let res = plan.run(&SimRunner, 1).expect("sim runner is infallible");

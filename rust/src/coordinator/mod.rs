@@ -6,12 +6,13 @@
 mod experiments;
 mod pool;
 
+pub use experiments::experiment_plans;
 pub use pool::{default_threads, run_parallel};
 
 use anyhow::{bail, Result};
 
 use crate::runtime::ArtifactStore;
-use crate::workload::Runner;
+use crate::workload::{LintRecord, Runner};
 
 /// Requested numeric backend, parsed from a CLI flag or an HTTP query
 /// parameter. `Copy` + `Send`, so per-request jobs can carry it into
@@ -137,6 +138,27 @@ pub fn experiment(id: &str) -> Option<&'static ExperimentId> {
     EXPERIMENTS.iter().find(|e| e.id == id)
 }
 
+/// Statically verify every warp program the whole campaign generates:
+/// each registered experiment's plans ([`experiment_plans`]) are
+/// compiled and run through the tclint verifier — nothing is simulated.
+/// Returns one `(experiment id, records)` entry per experiment in
+/// registry order, clean experiments included (their record list is
+/// empty), so callers can report coverage, not just hits.
+pub fn lint_all() -> Result<Vec<(&'static str, Vec<LintRecord>)>> {
+    let mut out = Vec::with_capacity(EXPERIMENTS.len());
+    for e in EXPERIMENTS {
+        let mut records = Vec::new();
+        for plan in experiments::experiment_plans(e.id) {
+            let compiled = plan
+                .compile()
+                .map_err(|err| anyhow::anyhow!("experiment {}: {err}", e.id))?;
+            records.extend(compiled.lint());
+        }
+        out.push((e.id, records));
+    }
+    Ok(out)
+}
+
 /// One completed campaign entry.
 #[derive(Debug, Clone)]
 pub struct ExperimentRun {
@@ -213,6 +235,26 @@ mod tests {
     #[test]
     fn unknown_experiment_errors() {
         assert!(run_experiment("t99", &SimRunner).is_err());
+    }
+
+    #[test]
+    fn every_experiment_enumerates_plans_and_lints_clean() {
+        // every registered experiment exposes its plan surface...
+        for e in EXPERIMENTS {
+            assert!(
+                !experiment_plans(e.id).is_empty(),
+                "{} enumerates no plans for lint",
+                e.id
+            );
+        }
+        assert!(experiment_plans("t99").is_empty());
+        // ...and the whole campaign's programs pass the verifier (the
+        // `repro lint --all` contract; CI fails on any Error)
+        let lints = lint_all().unwrap();
+        assert_eq!(lints.len(), EXPERIMENTS.len());
+        for (id, records) in &lints {
+            assert!(records.is_empty(), "{id}: {records:?}");
+        }
     }
 
     #[test]

@@ -91,6 +91,7 @@ pub fn a100() -> Device {
         lsu_pending_per_warp: 4,
         smem_banks: 32,
         smem_bank_bytes: 4,
+        smem_bytes_per_sm: 164 * 1024, // GA100: up to 164 KB/SM
         sync_cost: 1,
         gmem_latency: 400,
         // ~10 B/clk/SM of DRAM bandwidth (1555 GB/s / 108 SMs / 1.41GHz);

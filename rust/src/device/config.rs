@@ -128,6 +128,10 @@ pub struct Device {
     /// Shared-memory banks x bank width (32 x 4 B on Volta..Ampere, §7).
     pub smem_banks: u32,
     pub smem_bank_bytes: u32,
+    /// Maximum shared memory per SM in bytes (vendor whitepapers; the
+    /// largest carve-out configuration). The tclint resource rule bounds
+    /// staged cp.async footprints against this.
+    pub smem_bytes_per_sm: u32,
     /// Issue-side cost of `__syncwarp()` per loop iteration.
     pub sync_cost: u32,
     /// Global-memory round-trip latency in cycles (Appendix A model).

@@ -68,6 +68,7 @@ pub fn hopper_projected() -> Device {
         lsu_pending_per_warp: 4,
         smem_banks: 32,
         smem_bank_bytes: 4,
+        smem_bytes_per_sm: 228 * 1024, // GH100: up to 228 KB/SM
         sync_cost: 1,
         gmem_latency: 400,
         gmem_bytes_per_cycle: 12,

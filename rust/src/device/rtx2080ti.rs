@@ -43,6 +43,7 @@ pub fn rtx2080ti() -> Device {
         lsu_pending_per_warp: 4,
         smem_banks: 32,
         smem_bank_bytes: 4,
+        smem_bytes_per_sm: 64 * 1024, // TU102: up to 64 KB/SM
         sync_cost: 1,
         gmem_latency: 440,
         gmem_bytes_per_cycle: 10,

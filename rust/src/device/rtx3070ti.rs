@@ -80,6 +80,7 @@ pub fn rtx3070ti() -> Device {
         lsu_pending_per_warp: 4,
         smem_banks: 32,
         smem_bank_bytes: 4,
+        smem_bytes_per_sm: 100 * 1024, // GA104: up to 100 KB/SM
         sync_cost: 1,
         gmem_latency: 420,
         gmem_bytes_per_cycle: 10,

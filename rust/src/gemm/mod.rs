@@ -261,8 +261,9 @@ pub fn build_program(device: &Device, cfg: GemmConfig, variant: Variant, warp: u
 
     let mut b = ProgramBuilder::new();
     let _ = warp;
-    // Accumulator registers (persist across k-steps).
-    let accs: Vec<u32> = (0..4.min(mmas)).map(|_| b.alloc_reg()).collect();
+    // Accumulator registers (persist across k-steps; zero-initialized,
+    // so they are seeded live-in for the def-use analysis).
+    let accs: Vec<u32> = (0..4.min(mmas)).map(|_| b.init_reg()).collect();
     let frag = b.alloc_reg();
     let staged = b.alloc_reg();
 

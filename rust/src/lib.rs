@@ -45,7 +45,13 @@
 //! - [`server`]   — tcserved: an embedded campaign service (std-only
 //!   HTTP/1.1) with a content-addressed result cache and single-flight
 //!   request coalescing, started via `repro serve`.
+//! - [`analysis`] — tclint: a static verifier over the warp-program IR
+//!   (def-use, cp.async protocol, barrier arity, loop uniformity,
+//!   resource bounds) run by debug-mode `SmSim`, `repro lint` and
+//!   tcserved's `POST /v1/lint` — no cycle is simulated to check a
+//!   program.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod device;
 pub mod gemm;

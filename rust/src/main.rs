@@ -7,6 +7,7 @@
 //! repro sweep --device D --instr I [--profile] [--trace F]  # ad-hoc sweep
 //! repro devices                      # calibrated devices
 //! repro serve [--addr A] [--threads N] [--warm]   # tcserved campaign service
+//! repro lint <spec>... | repro lint --all         # tclint static verifier
 //! ```
 //!
 //! Backends for the §8 numeric experiments: `native` (Rust softfloat),
@@ -18,14 +19,16 @@ use std::io::Write as _;
 use anyhow::{anyhow, bail, Result};
 
 use tcbench::coordinator::{
-    default_threads, run_all, run_experiment, BackendKind, EXPERIMENTS,
+    default_threads, lint_all, run_all, run_experiment, BackendKind, EXPERIMENTS,
 };
 use tcbench::device;
 use tcbench::report;
 use tcbench::server::{serve_blocking, ServerConfig};
 use tcbench::sim::{ProfileMode, SimProfile};
 use tcbench::util::Json;
-use tcbench::workload::{runner_for, ExecPoint, Plan, Runner, SimRunner, UnitOutput, Workload};
+use tcbench::workload::{
+    runner_for, ExecPoint, LintRecord, Plan, Runner, SimRunner, UnitOutput, Workload,
+};
 
 fn usage() -> &'static str {
     "repro — Dissecting Tensor Cores, reproduction CLI\n\
@@ -38,6 +41,8 @@ fn usage() -> &'static str {
        repro sweep --device <a100|rtx3070ti|rtx2080ti> --instr \"<workload>\"\n\
                    [--profile] [--trace FILE]\n\
        repro serve [--addr HOST:PORT] [--threads N] [--warm]\n\
+       repro lint <spec>... [--device D] [--out DIR]   # tclint workload specs\n\
+       repro lint --all [--out DIR]        # every program the campaign generates\n\
      \n\
      WORKLOAD SPECS (repro sweep, POST /v1/plan):\n\
        mma <ab> <cd> <shape>        e.g. \"mma bf16 f32 m16n8k16\"\n\
@@ -67,6 +72,14 @@ fn usage() -> &'static str {
        repro sweep --device a100 --instr \"numeric chain tf32 f32 14\"\n\
        repro sweep --device a100 --instr \"bf16 f32 m16n8k16\" --profile --trace trace.json\n\
        repro serve --addr 127.0.0.1:8321 --warm\n\
+       repro lint \"gemm pipeline bf16 f32 2048 128x128x32\"\n\
+       repro lint --all --out out          # exits nonzero on any Error diagnostic\n\
+     \n\
+     STATIC ANALYSIS (repro lint, POST /v1/lint):\n\
+       tclint verifies every warp program a plan would launch — def-use,\n\
+       cp.async protocol, barrier safety, loop-body uniformity, resource\n\
+       bounds — without simulating. Error diagnostics fail the command\n\
+       (exit 1); warnings are reported and exit 0. --out writes lint.json.\n\
      \n\
      OBSERVABILITY (timing workloads only):\n\
        --profile      append a cycle-level stall-attribution breakdown to the sweep\n\
@@ -75,11 +88,12 @@ fn usage() -> &'static str {
      \n\
      SERVE ENDPOINTS:\n\
        /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep POST:/v1/plan\n\
+       POST:/v1/lint (400 on Error diagnostics)\n\
        /v1/metrics (JSON incl. latency histograms)  /metrics (Prometheus text)\n"
 }
 
 /// Flags that take no value (presence means `true`).
-const BOOL_FLAGS: &[&str] = &["warm", "profile"];
+const BOOL_FLAGS: &[&str] = &["warm", "profile", "all"];
 
 /// Minimal flag parser: positional args + `--key value` pairs, plus
 /// valueless boolean flags ([`BOOL_FLAGS`]).
@@ -379,6 +393,61 @@ fn main() -> Result<()> {
                 let path = format!("{dir}/profile_summary.json");
                 std::fs::write(&path, profiles.pretty())?;
                 eprintln!("[repro] wrote {path}");
+            }
+        }
+        "lint" => {
+            // (scope label, its diagnostics) — an experiment id under
+            // --all, the workload spec string otherwise. Clean scopes
+            // stay in the list so the JSON artifact shows coverage.
+            let mut scopes: Vec<(String, Vec<LintRecord>)> = Vec::new();
+            if args.flag("all").is_some() {
+                if !args.positional.is_empty() {
+                    bail!("`repro lint --all` lints the whole campaign; drop the specs");
+                }
+                for (id, records) in lint_all()? {
+                    scopes.push((id.to_string(), records));
+                }
+            } else {
+                if args.positional.is_empty() {
+                    bail!("`repro lint` needs workload specs or --all; see `repro help`");
+                }
+                let dev_name = args.flag("device").unwrap_or("a100");
+                for spec in &args.positional {
+                    let workload = Workload::parse_spec(spec).map_err(|e| anyhow!(e))?;
+                    // the full sweep grid covers every exec point the
+                    // workload can run at; numeric probes have no
+                    // completion latency to probe
+                    let mut plan = Plan::new(workload).device(dev_name).sweep();
+                    if !matches!(workload, Workload::Numeric(_)) {
+                        plan = plan.completion_latency();
+                    }
+                    let plan = plan.compile().map_err(|e| anyhow!(e))?;
+                    scopes.push((spec.clone(), plan.lint()));
+                }
+            }
+            let (mut errors, mut warns) = (0usize, 0usize);
+            for (scope, records) in &scopes {
+                for r in records {
+                    if r.is_error() {
+                        errors += 1;
+                    } else {
+                        warns += 1;
+                    }
+                    println!("{scope}: {r}");
+                }
+            }
+            println!(
+                "tclint: {} scope(s) checked, {errors} error(s), {warns} warning(s)",
+                scopes.len()
+            );
+            if let Some(dir) = args.flag("out") {
+                std::fs::create_dir_all(dir)?;
+                let path = format!("{dir}/lint.json");
+                std::fs::write(&path, report::lint_to_json(&scopes).pretty())?;
+                eprintln!("[repro] wrote {path}");
+            }
+            if errors > 0 {
+                std::process::exit(1);
             }
         }
         "serve" => {

@@ -25,7 +25,10 @@ pub fn mma_program(device: &Device, instr: &MmaInstr, ilp: u32, iters: usize) ->
         .timing(instr)
         .unwrap_or_else(|| panic!("{instr} not supported on {}", device.name));
     let mut b = ProgramBuilder::new();
-    let slots: Vec<u32> = (0..ilp).map(|_| b.alloc_reg()).collect();
+    // Accumulators start defined (the kernel zero-initializes them), so
+    // the first `D_s = A*B + D_s` read is a seeded read, not a
+    // def-use violation.
+    let slots: Vec<u32> = (0..ilp).map(|_| b.init_reg()).collect();
     for _ in 0..iters {
         for &d in &slots {
             // D_s = A x B + D_s: the accumulator is both src and dst.
@@ -64,7 +67,8 @@ pub fn ldmatrix_program(
     debug_assert_eq!(txns, num.count());
     let bytes = num.bytes_per_warp();
     let mut b = ProgramBuilder::new();
-    let slots: Vec<u32> = (0..ilp).map(|_| b.alloc_reg()).collect();
+    // Chase pointers start on a valid address (seeded).
+    let slots: Vec<u32> = (0..ilp).map(|_| b.init_reg()).collect();
     for _ in 0..iters {
         for &d in &slots {
             // pointer-chase: the next fragment address comes from the
@@ -102,7 +106,8 @@ pub fn ld_shared_program(
     assert_eq!(txns, ways.max(width.min_transactions()), "address pattern must produce the requested conflict");
     let bytes = width.bytes_per_warp();
     let mut b = ProgramBuilder::new();
-    let slots: Vec<u32> = (0..ilp).map(|_| b.alloc_reg()).collect();
+    // Chase pointers start on a valid address (seeded).
+    let slots: Vec<u32> = (0..ilp).map(|_| b.init_reg()).collect();
     for _ in 0..iters {
         for &d in &slots {
             b.push(Op::SmemLoad { txns, bytes }, Some(d), vec![d]);

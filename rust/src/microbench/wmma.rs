@@ -64,9 +64,10 @@ pub fn wmma_program(
         })
         .collect();
     let mut b = ProgramBuilder::new();
-    // one accumulator register per (slot, piece)
+    // one accumulator register per (slot, piece); seeded — the fragment
+    // is zero-initialized before the measurement loop
     let slots: Vec<Vec<u32>> = (0..ilp)
-        .map(|_| (0..parts.len()).map(|_| b.alloc_reg()).collect())
+        .map(|_| (0..parts.len()).map(|_| b.init_reg()).collect())
         .collect();
     for _ in 0..iters {
         for slot in &slots {

@@ -9,10 +9,11 @@
 //! tcserved `/v1/run` endpoint and `repro all --out DIR`'s
 //! `summary.json` are both built on this path.
 
+use crate::analysis::Diagnostic;
 use crate::microbench::{ConvergencePoint, Sweep};
 use crate::sim::SimProfile;
 use crate::util::Json;
-use crate::workload::{BenchResult, NumericOutput, UnitOutput};
+use crate::workload::{BenchResult, LintRecord, NumericOutput, UnitOutput};
 
 /// Is this line a table separator (`----+-----+----`)?
 fn is_separator(line: &str) -> bool {
@@ -280,6 +281,74 @@ pub fn sim_profile_to_json(p: &SimProfile) -> Json {
     ])
 }
 
+/// Machine-readable rendering of one tclint diagnostic: the stable
+/// rule id, its severity, and the (warp, instruction) anchor.
+pub fn diagnostic_to_json(d: &Diagnostic) -> Json {
+    Json::obj(vec![
+        ("rule", Json::str(d.rule.id())),
+        ("severity", Json::str(d.severity.as_str())),
+        ("warp", Json::num(d.warp as f64)),
+        (
+            "instr",
+            match d.instr {
+                Some(i) => Json::num(i as f64),
+                None => Json::Null,
+            },
+        ),
+        ("message", Json::str(&d.message)),
+    ])
+}
+
+/// Machine-readable rendering of plan-scoped lint records — each
+/// diagnostic plus the (workload, device, warps, ilp) coordinates of
+/// the program that triggered it. The diagnostics array of
+/// `POST /v1/lint` responses and of [`bench_to_json`].
+pub fn lint_records_to_json(records: &[LintRecord]) -> Json {
+    Json::Arr(
+        records
+            .iter()
+            .map(|r| {
+                let Json::Obj(mut fields) = diagnostic_to_json(&r.diagnostic) else {
+                    unreachable!("diagnostic_to_json returns an object")
+                };
+                fields.insert("workload".to_string(), Json::Str(r.spec.clone()));
+                fields.insert("device".to_string(), Json::str(r.device));
+                fields.insert("warps".to_string(), Json::num(r.warps as f64));
+                fields.insert("ilp".to_string(), Json::num(r.ilp as f64));
+                Json::Obj(fields)
+            })
+            .collect(),
+    )
+}
+
+/// The `repro lint` artifact (`lint.json`): per-scope diagnostics and
+/// error/warning totals in a stable schema — uploaded by the CI lint
+/// step. A scope is an experiment id (`--all`) or a workload spec.
+pub fn lint_to_json(scopes: &[(String, Vec<LintRecord>)]) -> Json {
+    let errors = scopes.iter().flat_map(|(_, r)| r).filter(|r| r.is_error()).count();
+    let total: usize = scopes.iter().map(|(_, r)| r.len()).sum();
+    Json::obj(vec![
+        ("schema", Json::str("tcbench/lint/v1")),
+        ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+        ("errors", Json::num(errors as f64)),
+        ("warnings", Json::num((total - errors) as f64)),
+        (
+            "scopes",
+            Json::Arr(
+                scopes
+                    .iter()
+                    .map(|(scope, records)| {
+                        Json::obj(vec![
+                            ("scope", Json::Str(scope.clone())),
+                            ("diagnostics", lint_records_to_json(records)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// Full machine-readable rendering of one plan result — the JSON twin
 /// of [`render_bench`](crate::report::render_bench), consumed by
 /// `POST /v1/plan` responses and `repro` output files. Units executed
@@ -301,6 +370,9 @@ pub fn bench_to_json(r: &BenchResult) -> Json {
         ("runner", Json::str(r.runner)),
         ("throughput_unit", Json::str(r.throughput_unit)),
         ("wall_ms", Json::num(r.wall_ms)),
+        // tclint findings surfaced by Plan::compile (debug builds; the
+        // array is present-but-empty on release-mode results)
+        ("diagnostics", lint_records_to_json(&r.diagnostics)),
         (
             "units",
             Json::Arr(
@@ -423,6 +495,28 @@ mod tests {
         let lat = units[0].get_f64("latency").unwrap();
         assert!((lat - 29.0).abs() < 1.5, "{lat}");
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn lint_json_shape() {
+        use crate::workload::{Plan, Workload};
+        let w = Workload::parse_spec("mma bf16 f32 m16n8k16").unwrap();
+        let plan = Plan::new(w).point(4, 2).compile().unwrap();
+        let scopes = vec![("mma bf16 f32 m16n8k16".to_string(), plan.lint())];
+        let j = lint_to_json(&scopes);
+        assert_eq!(j.get_str("schema"), Some("tcbench/lint/v1"));
+        assert_eq!(j.get_f64("errors"), Some(0.0));
+        assert_eq!(j.get_f64("warnings"), Some(0.0));
+        let scopes = j.get("scopes").unwrap().as_arr().unwrap();
+        assert_eq!(scopes.len(), 1);
+        assert_eq!(scopes[0].get_str("scope"), Some("mma bf16 f32 m16n8k16"));
+        assert!(Json::parse(&j.to_string()).is_ok());
+
+        // a result's diagnostics array is always present (empty without
+        // debug findings), so consumers can rely on the field
+        let r = plan.run(&crate::workload::SimRunner, 1).unwrap();
+        let bench = bench_to_json(&r);
+        assert!(bench.get("diagnostics").unwrap().as_arr().is_some());
     }
 
     #[test]

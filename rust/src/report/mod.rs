@@ -13,8 +13,8 @@ mod render;
 pub mod trace;
 
 pub use json::{
-    bench_to_json, deviation_stats, report_to_json, sim_profile_to_json, sweep_to_json,
-    unit_output_to_json, DeviationStats,
+    bench_to_json, deviation_stats, diagnostic_to_json, lint_records_to_json, lint_to_json,
+    report_to_json, sim_profile_to_json, sweep_to_json, unit_output_to_json, DeviationStats,
 };
 pub use render::{
     render_bench, render_figure_csv, render_sparkline, render_sweep_figure, Table,

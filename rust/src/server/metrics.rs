@@ -43,6 +43,10 @@ pub struct Metrics {
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     cache_coalesced: AtomicU64,
+    /// Error-severity tclint diagnostics surfaced through the server.
+    lint_errors: AtomicU64,
+    /// Warn-severity tclint diagnostics surfaced through the server.
+    lint_warnings: AtomicU64,
     by_endpoint: Mutex<BTreeMap<&'static str, u64>>,
     by_status: Mutex<BTreeMap<u16, u64>>,
     computes: Mutex<BTreeMap<&'static str, ComputeStat>>,
@@ -60,6 +64,8 @@ impl Metrics {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             cache_coalesced: AtomicU64::new(0),
+            lint_errors: AtomicU64::new(0),
+            lint_warnings: AtomicU64::new(0),
             by_endpoint: Mutex::new(BTreeMap::new()),
             by_status: Mutex::new(BTreeMap::new()),
             computes: Mutex::new(BTreeMap::new()),
@@ -87,6 +93,13 @@ impl Metrics {
 
     pub fn record_coalesced(&self) {
         self.cache_coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One static-verification pass (`POST /v1/lint`) that produced
+    /// `errors` Error-severity and `warnings` Warn-severity diagnostics.
+    pub fn record_lint(&self, errors: u64, warnings: u64) {
+        self.lint_errors.fetch_add(errors, Ordering::Relaxed);
+        self.lint_warnings.fetch_add(warnings, Ordering::Relaxed);
     }
 
     /// One completed computation of `id`, taking `ms` milliseconds.
@@ -195,6 +208,17 @@ impl Metrics {
                     ("capacity", Json::num(cells.capacity as f64)),
                 ])
             }),
+            // tclint diagnostics surfaced through POST /v1/lint
+            (
+                "lint",
+                Json::obj(vec![
+                    ("errors", Json::num(self.lint_errors.load(Ordering::Relaxed) as f64)),
+                    (
+                        "warnings",
+                        Json::num(self.lint_warnings.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
             ("experiments", experiments),
             ("latency_us", self.request_latency.to_json()),
             ("phases_us", self.phases.to_json()),
@@ -305,6 +329,21 @@ impl Metrics {
             &[(String::new(), cells.capacity as f64)],
         );
 
+        for (name, help, value) in [
+            (
+                "lint_errors_total",
+                "Error-severity tclint diagnostics served by POST /v1/lint.",
+                self.lint_errors.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "lint_warnings_total",
+                "Warn-severity tclint diagnostics served by POST /v1/lint.",
+                self.lint_warnings.load(Ordering::Relaxed) as f64,
+            ),
+        ] {
+            metric(name, "counter", help, &[(String::new(), value)]);
+        }
+
         {
             let computes = self.computes.lock().unwrap();
             metric(
@@ -399,6 +438,8 @@ mod tests {
         m.record_coalesced();
         m.record_compute("t3", 10.0);
         m.record_compute("t3", 20.0);
+        m.record_lint(2, 3);
+        m.record_lint(0, 1);
 
         let j = m.to_json(CacheStats { entries: 1, capacity: 8, evictions: 0 });
         assert_eq!(j.get_u64("requests_total"), Some(3));
@@ -409,6 +450,9 @@ mod tests {
         assert_eq!(cache.get_u64("misses"), Some(1));
         assert_eq!(cache.get_u64("coalesced"), Some(1));
         assert!((cache.get_f64("hit_rate").unwrap() - 0.75).abs() < 1e-9);
+        let lint = j.get("lint").unwrap();
+        assert_eq!(lint.get_u64("errors"), Some(2));
+        assert_eq!(lint.get_u64("warnings"), Some(4));
         let t3 = j.get("experiments").unwrap().get("t3").unwrap();
         assert_eq!(t3.get_u64("computes"), Some(2));
         assert!((t3.get_f64("mean_ms").unwrap() - 15.0).abs() < 1e-9);
@@ -465,6 +509,7 @@ mod tests {
         m.record_compute("plan", 12.5);
         m.record_latency("run", 42);
         m.record_phase("render", 7);
+        m.record_lint(1, 4);
 
         let stats = CacheStats { entries: 2, capacity: 8, evictions: 1 };
         let text = m.to_prometheus(stats);
@@ -489,6 +534,8 @@ mod tests {
         assert!(text.contains("tcserved_result_cache_hits_total 1"));
         assert!(text.contains("tcserved_result_cache_misses_total 1"));
         assert!(text.contains("tcserved_result_cache_entries 2"));
+        assert!(text.contains("tcserved_lint_errors_total 1"));
+        assert!(text.contains("tcserved_lint_warnings_total 4"));
         assert!(text.contains("tcserved_computes_total{id=\"plan\"} 1"));
         assert!(text.contains("tcserved_compute_ms_total{id=\"plan\"} 12.5"));
         assert!(text.contains("tcserved_request_duration_us_count{endpoint=\"run\"} 1"));

@@ -8,7 +8,9 @@
 //! single computation. Plans are cached *per unit* — the unit token
 //! carries every workload parameter — so two plans sharing units share
 //! their cache entries, and the single-flight machinery dedups at unit
-//! granularity.
+//! granularity. `POST /v1/lint` runs the tclint static verifier over a
+//! plan's programs without simulating; it is compute-light and bypasses
+//! the cache.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
@@ -44,6 +46,7 @@ fn endpoint_label(path: &str) -> &'static str {
         "/metrics" => "prometheus",
         "/v1/sweep" => "sweep",
         "/v1/plan" => "plan",
+        "/v1/lint" => "lint",
         p if p.starts_with("/v1/run/") => "run",
         _ => "other",
     }
@@ -73,11 +76,24 @@ fn route(state: &AppState, req: &Request) -> Response {
         }
         return plan(state, req);
     }
+    if req.path == "/v1/lint" {
+        if req.method != "POST" {
+            return Response::error(
+                405,
+                format!(
+                    "method {} not allowed; /v1/lint takes a POST with a JSON BenchPlan body",
+                    req.method
+                ),
+            );
+        }
+        return lint(state, req);
+    }
     if req.method != "GET" {
         return Response::error(
             405,
             format!(
-                "method {} not allowed; this API is GET-only (except POST /v1/plan)",
+                "method {} not allowed; this API is GET-only (except POST /v1/plan \
+                 and /v1/lint)",
                 req.method
             ),
         );
@@ -453,6 +469,46 @@ fn plan(state: &AppState, req: &Request) -> Response {
     );
     state.metrics.record_phase("render", t0.elapsed().as_micros() as u64);
     response
+}
+
+// ----------------------------------------------------------------- /v1/lint
+
+/// `POST /v1/lint` — static analysis only. The body is the same JSON
+/// [`Plan`] form `/v1/plan` takes; the response is the tclint
+/// diagnostics over every warp program the plan would simulate, without
+/// running any simulation. Status is 400 when any Error-severity
+/// diagnostic fires (the program set is structurally broken), 200
+/// otherwise (clean or warnings only).
+fn lint(state: &AppState, req: &Request) -> Response {
+    let body = match Json::parse(&req.body) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, format!("invalid JSON body: {e}")),
+    };
+    let plan = match Plan::from_json(&body) {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, e),
+    };
+    let bench = match plan.compile() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, e),
+    };
+    let t0 = Instant::now();
+    let records = bench.lint();
+    state.metrics.record_phase("lint", t0.elapsed().as_micros() as u64);
+    let errors = records.iter().filter(|r| r.is_error()).count();
+    let warnings = records.len() - errors;
+    state.metrics.record_lint(errors as u64, warnings as u64);
+    let status = if errors > 0 { 400 } else { 200 };
+    Response::json(
+        status,
+        &Json::obj(vec![
+            ("workload", Json::Str(bench.workload.to_spec())),
+            ("device", Json::str(bench.device.name)),
+            ("errors", Json::num(errors as f64)),
+            ("warnings", Json::num(warnings as f64)),
+            ("diagnostics", report::lint_records_to_json(&records)),
+        ]),
+    )
 }
 
 /// Cached execution of one plan unit (content-addressed by the unit
@@ -873,6 +929,51 @@ mod tests {
                       "device":"hopper-projected","backend":"native"}"#;
         let r = post(&s, "/v1/plan", fp8);
         assert_eq!(r.status, 200, "{}", r.body);
+    }
+
+    #[test]
+    fn lint_endpoint_reports_diagnostics() {
+        let s = state();
+        // a standard plan lints clean: 200 with an empty diagnostics array
+        let clean = r#"{"workload":"mma bf16 f32 m16n8k16","device":"a100",
+                        "points":[[4,3]],"sweep":true,"completion_latency":true}"#;
+        let r = post(&s, "/v1/lint", clean);
+        assert_eq!(r.status, 200, "{}", r.body);
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get_str("workload"), Some("mma bf16 f32 m16n8k16"));
+        assert_eq!(j.get_str("device"), Some("a100"));
+        assert_eq!(j.get_u64("errors"), Some(0));
+        assert_eq!(j.get_u64("warnings"), Some(0));
+        assert!(j.get("diagnostics").unwrap().as_arr().unwrap().is_empty(), "{}", r.body);
+
+        // a 4-deep cp.async pipeline over 128x128x128 tiles keeps
+        // 4 x 65536 B in flight — more shared memory than an A100 SM
+        // has. The config is *legal* (compile succeeds; 16 k-steps
+        // cover 4 stages), but structurally broken: 400 + the rule id.
+        let overflow = r#"{"workload":"gemm pipeline bf16 f32 2048 128x128x128",
+                           "device":"a100","points":[[8,4]]}"#;
+        let r = post(&s, "/v1/lint", overflow);
+        assert_eq!(r.status, 400, "{}", r.body);
+        let j = Json::parse(&r.body).unwrap();
+        assert!(j.get_u64("errors").unwrap() >= 1, "{}", r.body);
+        let diags = j.get("diagnostics").unwrap().as_arr().unwrap();
+        assert!(
+            diags.iter().any(|d| d.get_str("rule") == Some("resource/smem-overflow")
+                && d.get_str("severity") == Some("error")),
+            "{}",
+            r.body
+        );
+
+        // malformed bodies and uncompilable plans are 400s; GET is a 405
+        assert_eq!(post(&s, "/v1/lint", "{not json").status, 400);
+        assert_eq!(post(&s, "/v1/lint", r#"{"workload":"nonsense"}"#).status, 400);
+        assert_eq!(get(&s, "/v1/lint").status, 405);
+
+        // the lint counters observed the error-producing request
+        let m = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let lint = m.get("lint").unwrap();
+        assert!(lint.get_u64("errors").unwrap() >= 1, "{m}");
+        assert_eq!(m.get("by_endpoint").unwrap().get_u64("lint"), Some(5));
     }
 
     #[test]

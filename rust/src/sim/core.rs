@@ -188,8 +188,17 @@ impl<'d> SmSim<'d> {
     }
 
     /// General form: warp `i` runs `programs[i]`, programs may alias.
+    ///
+    /// Debug builds run the tclint static verifier first and panic (with
+    /// the rule id) on any Error-severity diagnostic — a malformed
+    /// program must fail loudly before it can hang or silently
+    /// mis-attribute cycles. Release builds skip the pass entirely: the
+    /// simulate path stays bit-identical with zero analysis overhead
+    /// (`repro lint` / `POST /v1/lint` cover release-mode checking).
     pub fn from_shared(device: &'d Device, programs: Vec<Arc<WarpProgram>>) -> Self {
         assert!(!programs.is_empty(), "need at least one warp");
+        #[cfg(debug_assertions)]
+        crate::analysis::verify_or_panic(&programs, device);
         let warps: Vec<WarpState> = programs.iter().map(|_| WarpState::new()).collect();
         Self {
             device,
@@ -656,7 +665,7 @@ mod tests {
 
     fn mma_loop(iters: usize, ilp: usize, ii: u32, lat: u32) -> WarpProgram {
         let mut b = ProgramBuilder::new();
-        let slots: Vec<u32> = (0..ilp).map(|_| b.alloc_reg()).collect();
+        let slots: Vec<u32> = (0..ilp).map(|_| b.init_reg()).collect();
         for _ in 0..iters {
             for &d in &slots {
                 b.mma(ii, lat, 2048, d, vec![d]);
@@ -723,7 +732,7 @@ mod tests {
         let mk = |n_mma: usize| {
             let mut b = ProgramBuilder::new();
             for _ in 0..n_mma {
-                let r = b.alloc_reg();
+                let r = b.init_reg();
                 b.mma(8, 24, 2048, r, vec![r]);
             }
             b.sync_warp();
@@ -745,7 +754,7 @@ mod tests {
         let d = a100();
         let mk = || {
             let mut b = ProgramBuilder::new();
-            let r = b.alloc_reg();
+            let r = b.init_reg();
             for _ in 0..64 {
                 // pointer-chase: next address depends on the last result
                 b.push(Op::SmemLoad { txns: 4, bytes: 512 }, Some(r), vec![r]);
@@ -885,7 +894,7 @@ mod tests {
         let d = a100();
         let mut b = ProgramBuilder::new();
         for _ in 0..100 {
-            let r = b.alloc_reg();
+            let r = b.init_reg();
             b.mma(8, 24, 2048, r, vec![r]);
         }
         let sim = SmSim::new(&d, vec![b.build()]).with_max_cycles(10);

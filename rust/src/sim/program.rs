@@ -65,6 +65,12 @@ impl Op {
 #[derive(Debug, Clone, Default)]
 pub struct WarpProgram {
     pub instrs: Vec<Instr>,
+    /// Registers holding a defined value before the first instruction
+    /// (kernel arguments / zero-initialized accumulators). Pure
+    /// metadata for the static analyzer — the simulator's scoreboard
+    /// already treats unwritten registers as ready-at-0, so seeding a
+    /// register changes no schedule.
+    pub live_in: Vec<Reg>,
 }
 
 impl WarpProgram {
@@ -76,19 +82,38 @@ impl WarpProgram {
         self.instrs.is_empty()
     }
 
-    /// Total FMAs between consecutive IterMarks (assumes a uniform loop
-    /// body, which every generated program has).
+    /// Steady-state FMAs per iteration: the work between the first and
+    /// last IterMark averaged over those iterations, so a staging
+    /// prologue (or any work outside the measured window) cannot skew
+    /// the per-iteration figure. Falls back to a whole-program average
+    /// when there are fewer than two marks.
     pub fn fmas_per_iteration(&self) -> u64 {
-        let iters = self.iter_marks().max(1) as u64;
-        let total: u64 = self.instrs.iter().map(|i| i.op.fmas()).sum();
-        total / iters
+        self.per_iteration(|op| op.fmas())
     }
 
-    /// Total shared-memory bytes moved between consecutive IterMarks.
+    /// Steady-state shared-memory bytes moved per iteration (same
+    /// windowing as [`WarpProgram::fmas_per_iteration`]).
     pub fn smem_bytes_per_iteration(&self) -> u64 {
-        let iters = self.iter_marks().max(1) as u64;
-        let total: u64 = self.instrs.iter().map(|i| i.op.smem_bytes()).sum();
-        total / iters
+        self.per_iteration(|op| op.smem_bytes())
+    }
+
+    fn per_iteration(&self, work: impl Fn(&Op) -> u64) -> u64 {
+        let marks: Vec<usize> = self
+            .instrs
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i.op, Op::IterMark))
+            .map(|(i, _)| i)
+            .collect();
+        if marks.len() < 2 {
+            let total: u64 = self.instrs.iter().map(|i| work(&i.op)).sum();
+            return total / marks.len().max(1) as u64;
+        }
+        let window: u64 = self.instrs[marks[0] + 1..marks[marks.len() - 1]]
+            .iter()
+            .map(|i| work(&i.op))
+            .sum();
+        window / (marks.len() - 1) as u64
     }
 
     pub fn iter_marks(&self) -> usize {
@@ -101,6 +126,7 @@ impl WarpProgram {
 pub struct ProgramBuilder {
     instrs: Vec<Instr>,
     next_reg: Reg,
+    live_in: Vec<Reg>,
 }
 
 impl ProgramBuilder {
@@ -111,6 +137,17 @@ impl ProgramBuilder {
     pub fn alloc_reg(&mut self) -> Reg {
         let r = self.next_reg;
         self.next_reg += 1;
+        r
+    }
+
+    /// Allocate a register that starts *defined* (a kernel argument or a
+    /// zero-initialized accumulator). Use this for registers the program
+    /// reads before its first write — e.g. the `D_s = A*B + D_s`
+    /// accumulator chains — so tclint's def-use rule knows the first
+    /// read is legal. Emits no instruction and changes no timing.
+    pub fn init_reg(&mut self) -> Reg {
+        let r = self.alloc_reg();
+        self.live_in.push(r);
         r
     }
 
@@ -136,7 +173,7 @@ impl ProgramBuilder {
     }
 
     pub fn build(self) -> WarpProgram {
-        WarpProgram { instrs: self.instrs }
+        WarpProgram { instrs: self.instrs, live_in: self.live_in }
     }
 }
 
@@ -155,8 +192,8 @@ mod tests {
     #[test]
     fn per_iteration_accounting() {
         let mut b = ProgramBuilder::new();
+        let d = b.init_reg();
         for _ in 0..4 {
-            let d = b.alloc_reg();
             b.mma(8, 24, 2048, d, vec![d]);
             b.mma(8, 24, 2048, d, vec![d]);
             b.sync_warp();
@@ -166,5 +203,48 @@ mod tests {
         assert_eq!(p.iter_marks(), 4);
         assert_eq!(p.fmas_per_iteration(), 4096);
         assert_eq!(p.smem_bytes_per_iteration(), 0);
+    }
+
+    #[test]
+    fn init_reg_seeds_live_in_without_emitting_instructions() {
+        let mut b = ProgramBuilder::new();
+        let seeded = b.init_reg();
+        let plain = b.alloc_reg();
+        b.mma(8, 24, 2048, seeded, vec![seeded]);
+        let p = b.build();
+        assert_eq!(p.live_in, vec![seeded]);
+        assert_ne!(seeded, plain);
+        assert_eq!(p.instrs.len(), 1, "seeding must not emit instructions");
+    }
+
+    #[test]
+    fn per_iteration_accounting_ignores_prologue_and_epilogue() {
+        // A staging prologue (one extra mma + a smem store before the
+        // first mark) and epilogue work must not skew the steady-state
+        // per-iteration figures.
+        let mut b = ProgramBuilder::new();
+        let d = b.init_reg();
+        b.mma(8, 24, 999, d, vec![d]);
+        b.push(Op::SmemStore { txns: 1, bytes: 777 }, None, vec![d]);
+        for _ in 0..4 {
+            b.mma(8, 24, 2048, d, vec![d]);
+            b.push(Op::SmemLoad { txns: 1, bytes: 128 }, Some(d), vec![d]);
+            b.iter_mark();
+        }
+        b.mma(8, 24, 555, d, vec![d]);
+        let p = b.build();
+        assert_eq!(p.fmas_per_iteration(), 2048);
+        assert_eq!(p.smem_bytes_per_iteration(), 128);
+    }
+
+    #[test]
+    fn per_iteration_accounting_single_mark_falls_back_to_totals() {
+        let mut b = ProgramBuilder::new();
+        let d = b.init_reg();
+        b.mma(8, 24, 2048, d, vec![d]);
+        b.mma(8, 24, 2048, d, vec![d]);
+        b.iter_mark();
+        let p = b.build();
+        assert_eq!(p.fmas_per_iteration(), 4096);
     }
 }

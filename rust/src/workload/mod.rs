@@ -65,21 +65,23 @@ pub use numeric::{
     AccDtype, NumericOutput, NumericProbe, ProbeDtype, ProbeKind, CHAIN_MAX_LEN, CHAIN_SEED,
     CHAIN_TRIALS, PROFILE_SEED, PROFILE_TRIALS,
 };
-pub use plan::{BenchPlan, BenchResult, Plan, UnitKind, UnitOutput};
+pub use plan::{BenchPlan, BenchResult, LintRecord, Plan, UnitKind, UnitOutput};
 pub use runner::{runner_for, ArtifactRunner, Runner, SimRunner};
 
 use std::fmt;
+use std::sync::Arc;
 
 use crate::coordinator::{default_threads, run_parallel};
 use crate::device::Device;
 use crate::gemm::{self, GemmConfig};
 use crate::isa::{AbType, CdType, LdMatrixNum, LdSharedWidth, MmaInstr, MmaShape};
-use crate::microbench::wmma::{measure_wmma_profiled, WmmaShape};
+use crate::microbench::wmma::{measure_wmma_profiled, wmma_program, WmmaShape};
 use crate::microbench::{
-    measure_ld_shared_at_profiled, measure_ldmatrix_profiled, measure_mma_profiled,
-    Measurement, Sweep, SweepCell, SWEEP_ILPS, SWEEP_WARPS,
+    ld_shared_program, ldmatrix_program, measure_ld_shared_at_profiled,
+    measure_ldmatrix_profiled, measure_mma_profiled, mma_program, Measurement, Sweep,
+    SweepCell, ITERS, SWEEP_ILPS, SWEEP_WARPS,
 };
-use crate::sim::{ProfileMode, Profiler, SimProfile};
+use crate::sim::{ProfileMode, Profiler, SimProfile, WarpProgram};
 
 /// One (#warps, ILP) execution coordinate — the paper's per-measurement
 /// configuration, shared by every workload kind.
@@ -697,6 +699,46 @@ impl Workload {
                     throughput: 0.0,
                 }
             }
+        }
+    }
+
+    /// The warp programs a [`Workload::measure`] at `point` would hand
+    /// to the cycle simulator (warp `i` runs entry `i`, the
+    /// `SmSim::from_shared` contract) — built without simulating a
+    /// cycle. This is the tclint seam: `BenchPlan::lint`, `repro lint`
+    /// and `POST /v1/lint` feed these to [`crate::analysis::verify`].
+    /// Numeric probes are pure datapath experiments and compile to an
+    /// empty launch. Panics on unsupported workloads, exactly like
+    /// [`Workload::measure`] — validate first.
+    pub fn programs(&self, device: &Device, point: ExecPoint) -> Vec<Arc<WarpProgram>> {
+        let ExecPoint { warps, ilp } = point;
+        let replicate = |p: WarpProgram| {
+            let shared = Arc::new(p);
+            (0..warps).map(|_| Arc::clone(&shared)).collect::<Vec<_>>()
+        };
+        match *self {
+            Workload::Mma { .. } | Workload::MmaSp { .. } => replicate(mma_program(
+                device,
+                &self.mma_instr().expect("mma workload"),
+                ilp,
+                ITERS,
+            )),
+            Workload::Ldmatrix { num } => {
+                replicate(ldmatrix_program(device, num, ilp, ITERS))
+            }
+            Workload::LdShared { width, ways } => {
+                replicate(ld_shared_program(device, width, ways, ilp, ITERS))
+            }
+            Workload::Wmma { ab, cd, shape } => {
+                replicate(wmma_program(device, shape, ab, cd, ilp, ITERS))
+            }
+            Workload::Gemm(g) => {
+                let cfg = g.config(point);
+                (0..cfg.warps)
+                    .map(|w| Arc::new(gemm::build_program(device, cfg, g.variant, w)))
+                    .collect()
+            }
+            Workload::Numeric(_) => Vec::new(),
         }
     }
 

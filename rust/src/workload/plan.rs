@@ -18,6 +18,7 @@
 
 use std::time::Instant;
 
+use crate::analysis::{self, Diagnostic};
 use crate::coordinator::run_parallel;
 use crate::device::{self, Device};
 use crate::microbench::{ConvergencePoint, Measurement, Sweep};
@@ -335,7 +336,55 @@ impl Plan {
                     .to_string(),
             );
         }
-        Ok(BenchPlan { workload: self.workload, device, convergence_warps, units })
+        #[allow(unused_mut)]
+        let mut plan = BenchPlan {
+            workload: self.workload,
+            device,
+            convergence_warps,
+            units,
+            diagnostics: Vec::new(),
+        };
+        // Debug builds lint at compile time so every test and dev run
+        // surfaces diagnostics for free; release builds skip it (the
+        // simulate path must carry zero verification overhead) and lint
+        // only on demand via [`BenchPlan::lint`] (the `repro lint` CLI
+        // and the `POST /v1/lint` endpoint).
+        #[cfg(debug_assertions)]
+        {
+            plan.diagnostics = plan.lint();
+        }
+        Ok(plan)
+    }
+}
+
+/// One [`Diagnostic`](crate::analysis::Diagnostic) with its plan
+/// coordinates: which workload spec, device and (#warps, ILP) point
+/// built the flagged program.
+#[derive(Debug, Clone)]
+pub struct LintRecord {
+    /// Canonical workload spec (round-trips through
+    /// [`Workload::parse_spec`](super::Workload::parse_spec)).
+    pub spec: String,
+    pub device: &'static str,
+    pub warps: u32,
+    pub ilp: u32,
+    pub diagnostic: Diagnostic,
+}
+
+impl LintRecord {
+    /// Whether the underlying diagnostic is an [`Error`](crate::analysis::Severity::Error).
+    pub fn is_error(&self) -> bool {
+        self.diagnostic.is_error()
+    }
+}
+
+impl std::fmt::Display for LintRecord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} @ {} point({},{}): {}",
+            self.spec, self.device, self.warps, self.ilp, self.diagnostic
+        )
     }
 }
 
@@ -348,6 +397,11 @@ pub struct BenchPlan {
     /// Warp counts the sweep unit summarizes with convergence points.
     pub convergence_warps: Vec<u32>,
     pub units: Vec<UnitKind>,
+    /// tclint diagnostics over every program this plan launches.
+    /// Populated by [`Plan::compile`] in debug builds only — release
+    /// builds leave it empty and lint on demand ([`BenchPlan::lint`])
+    /// so the simulate path carries no verification overhead.
+    pub diagnostics: Vec<LintRecord>,
 }
 
 impl BenchPlan {
@@ -383,6 +437,60 @@ impl BenchPlan {
                     .join("+")
             ),
         }
+    }
+
+    /// The distinct [`ExecPoint`]s this plan's units cover, in unit
+    /// order: fixed points as requested, the completion probe at its
+    /// (1, 1) pin, and a sweep expanded over the workload's full
+    /// (#warps, ILP) grid.
+    fn lint_points(&self) -> Vec<ExecPoint> {
+        let mut points: Vec<ExecPoint> = Vec::new();
+        for unit in &self.units {
+            let unit_points: Vec<ExecPoint> = match unit {
+                UnitKind::Point(p) => vec![*p],
+                UnitKind::Completion => vec![ExecPoint::new(1, 1)],
+                UnitKind::Sweep => {
+                    let ilps = self.workload.sweep_ilp_axis();
+                    self.workload
+                        .sweep_warps_axis()
+                        .into_iter()
+                        .flat_map(|w| ilps.iter().map(move |&i| ExecPoint::new(w, i)))
+                        .collect()
+                }
+            };
+            for p in unit_points {
+                if !points.contains(&p) {
+                    points.push(p); // a sweep subsumes equal fixed points
+                }
+            }
+        }
+        points
+    }
+
+    /// Run the tclint static verifier ([`crate::analysis::verify`])
+    /// over every warp program this plan's units would launch, without
+    /// simulating anything. Each diagnostic is wrapped in a
+    /// [`LintRecord`] carrying its plan coordinates. Numeric probes
+    /// launch no warp programs and always lint clean.
+    pub fn lint(&self) -> Vec<LintRecord> {
+        let spec = self.workload.to_spec();
+        let mut records = Vec::new();
+        for point in self.lint_points() {
+            let programs = self.workload.programs(&self.device, point);
+            if programs.is_empty() {
+                continue;
+            }
+            for diagnostic in analysis::verify(&programs, &self.device) {
+                records.push(LintRecord {
+                    spec: spec.clone(),
+                    device: self.device.name,
+                    warps: point.warps,
+                    ilp: point.ilp,
+                    diagnostic,
+                });
+            }
+        }
+        records
     }
 
     /// Execute every unit on `runner` across `threads` pool workers,
@@ -429,6 +537,7 @@ impl BenchPlan {
             throughput_unit: self.workload.throughput_unit(),
             units,
             unit_profiles,
+            diagnostics: self.diagnostics.clone(),
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
     }
@@ -464,6 +573,10 @@ pub struct BenchResult {
     /// [`BenchPlan::run_profiled`] with profiling on — numeric units
     /// never carry one).
     pub unit_profiles: Vec<Option<SimProfile>>,
+    /// tclint diagnostics carried over from the compiled plan
+    /// ([`BenchPlan::diagnostics`]) — empty in release builds, where
+    /// linting is on-demand only.
+    pub diagnostics: Vec<LintRecord>,
     pub wall_ms: f64,
 }
 
@@ -827,5 +940,42 @@ mod tests {
         let s4 = Plan::new(k16()).convergence(&[4]).compile().unwrap();
         let sweep_unit = UnitKind::Sweep;
         assert_ne!(s48.unit_token(&sweep_unit), s4.unit_token(&sweep_unit));
+    }
+
+    #[test]
+    fn plans_lint_clean_and_results_carry_the_diagnostics() {
+        use super::super::GemmParams;
+        use crate::gemm::Variant;
+        // every unit kind over an instruction family lints clean, and
+        // the completion probe's (1,1) pin plus the sweep's full grid
+        // subsume the explicit point — a sweep covers 48 cells but the
+        // lint pass visits each distinct exec point exactly once
+        let plan = Plan::new(k16())
+            .completion_latency()
+            .point(4, 3)
+            .sweep()
+            .compile()
+            .unwrap();
+        let records = plan.lint();
+        assert!(records.is_empty(), "{records:?}");
+        // in debug builds compile() already ran the same pass
+        #[cfg(debug_assertions)]
+        assert!(plan.diagnostics.is_empty());
+        let r = plan.run(&SimRunner, 2).unwrap();
+        assert_eq!(r.diagnostics.len(), plan.diagnostics.len());
+
+        // the gemm pipeline's cp.async protocol passes the verifier at
+        // every stage depth on the sweep axis
+        let w = Workload::Gemm(GemmParams {
+            size: 256,
+            ..GemmParams::paper(Variant::Pipeline, false)
+        });
+        let plan = Plan::new(w).completion_latency().sweep().compile().unwrap();
+        let records = plan.lint();
+        assert!(records.is_empty(), "{records:?}");
+
+        // numeric probes launch no warp programs: trivially clean
+        let w = Workload::parse_spec("numeric profile bf16 f32 acc fp32").unwrap();
+        assert!(Plan::new(w).point(1, 1).compile().unwrap().lint().is_empty());
     }
 }
