@@ -43,8 +43,13 @@
 //! - [`report`]   — table/figure renderers (text + machine-readable
 //!   JSON) + the paper's expected values.
 //! - [`server`]   — tcserved: an embedded campaign service (std-only
-//!   HTTP/1.1) with a content-addressed result cache and single-flight
-//!   request coalescing, started via `repro serve`.
+//!   HTTP/1.1) with a versioned `tcserved/v1` JSON envelope, a
+//!   content-addressed result cache, single-flight request coalescing,
+//!   a shared disk-backed cell store and consistent-hash replica
+//!   sharding, started via `repro serve`.
+//! - [`loadgen`]  — the load harness: deterministic mixed traffic
+//!   against a running tcserved, reporting client p50/p99 next to the
+//!   server's cache/cell-store hit rates (`repro loadgen`).
 //! - [`analysis`] — tclint: a static verifier over the warp-program IR
 //!   (def-use, cp.async protocol, barrier arity, loop uniformity,
 //!   resource bounds) run by debug-mode `SmSim`, `repro lint` and
@@ -56,6 +61,7 @@ pub mod coordinator;
 pub mod device;
 pub mod gemm;
 pub mod isa;
+pub mod loadgen;
 pub mod microbench;
 pub mod numerics;
 pub mod report;

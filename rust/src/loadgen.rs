@@ -1,0 +1,519 @@
+//! repro loadgen — a self-contained load harness for tcserved fleets.
+//!
+//! Replays a deterministic mixed workload (`--mix plan:sweep:numeric`)
+//! against a running server over plain `TcpStream` HTTP/1.1 (no client
+//! crates, mirroring `server::http`), then reports client-side latency
+//! percentiles next to the server's own `/v1/metrics` counters — so one
+//! run answers both "how fast" and "how warm": p50/p99 per the client
+//! clock, result-cache hit rate and the combined cell-cache +
+//! cell-store rate per the server.
+//!
+//! ```text
+//! repro loadgen --addr 127.0.0.1:8321 --mix plan:sweep:numeric \
+//!               --concurrency 8 --duration 10 [--seed S] [--out f.json]
+//! ```
+//!
+//! Traffic is drawn per worker from a seeded [`Prng`], so two runs with
+//! the same seed, mix and concurrency issue the same request multiset —
+//! comparable across replicas and across CI runs. Requests use the
+//! canonical POST forms of the v1 API; `503` (`overloaded`) responses
+//! are counted as shed load, not errors, because backpressure is the
+//! server behaving as configured.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::{Json, Prng};
+
+/// One traffic class of the mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixKind {
+    /// `POST /v1/plan` point plans (`ld.shared` exec-point grid).
+    Plan,
+    /// `POST /v1/sweep` full (ILP, warps) grids.
+    Sweep,
+    /// §8 numeric probes through both routes.
+    Numeric,
+}
+
+impl MixKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixKind::Plan => "plan",
+            MixKind::Sweep => "sweep",
+            MixKind::Numeric => "numeric",
+        }
+    }
+}
+
+/// Parse a `:`-separated mix spec. Repeating a class weights it
+/// (`plan:plan:sweep` is 2/3 plans).
+pub fn parse_mix(spec: &str) -> Result<Vec<MixKind>> {
+    let mut mix = Vec::new();
+    for token in spec.split(':').filter(|t| !t.is_empty()) {
+        mix.push(match token {
+            "plan" => MixKind::Plan,
+            "sweep" => MixKind::Sweep,
+            "numeric" => MixKind::Numeric,
+            other => bail!("unknown mix class {other:?} (plan|sweep|numeric)"),
+        });
+    }
+    if mix.is_empty() {
+        bail!("empty mix; give at least one of plan|sweep|numeric");
+    }
+    Ok(mix)
+}
+
+/// Load-harness configuration (CLI flags map onto this 1:1).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Target server, `host:port`.
+    pub addr: String,
+    /// Traffic classes, sampled uniformly per request.
+    pub mix: Vec<MixKind>,
+    /// Concurrent client workers.
+    pub concurrency: usize,
+    /// Wall-clock run length in seconds.
+    pub duration_secs: f64,
+    /// PRNG seed: same seed + mix + concurrency = same request multiset.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8321".to_string(),
+            mix: vec![MixKind::Plan, MixKind::Sweep, MixKind::Numeric],
+            concurrency: 4,
+            duration_secs: 5.0,
+            seed: 0x1cbe_11c5,
+        }
+    }
+}
+
+/// One sampled request: method is always POST (the canonical v1 form).
+fn template(kind: MixKind, prng: &mut Prng) -> (&'static str, String) {
+    match kind {
+        MixKind::Plan => {
+            let warps = [1u64, 2, 4, 8][prng.below(4) as usize];
+            let ilp = 1 + prng.below(2);
+            (
+                "/v1/plan",
+                format!(
+                    "{{\"workload\":\"ld.shared u32 4\",\"device\":\"a100\",\
+                     \"points\":[[{warps},{ilp}]],\"backend\":\"native\"}}"
+                ),
+            )
+        }
+        MixKind::Sweep => {
+            let instr = ["ldmatrix x1", "ldmatrix x2", "ldmatrix x4", "bf16,f32,m16n8k16"]
+                [prng.below(4) as usize];
+            (
+                "/v1/sweep",
+                format!("{{\"instr\":\"{instr}\",\"device\":\"a100\",\"backend\":\"native\"}}"),
+            )
+        }
+        MixKind::Numeric => {
+            if prng.below(2) == 0 {
+                let probe = ["numeric profile fp16 f32 mul low", "numeric profile bf16 f32 acc"]
+                    [prng.below(2) as usize];
+                (
+                    "/v1/plan",
+                    format!(
+                        "{{\"workload\":\"{probe}\",\"points\":[[1,1]],\"backend\":\"native\"}}"
+                    ),
+                )
+            } else {
+                (
+                    "/v1/sweep",
+                    "{\"instr\":\"numeric,chain,tf32,f32,5\",\"backend\":\"native\"}".to_string(),
+                )
+            }
+        }
+    }
+}
+
+/// One blocking HTTP/1.1 exchange (`Connection: close`, like the server
+/// answers anyway). Returns `(status, body)`.
+pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_nodelay(true)?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).context("reading response")?;
+    parse_response(&raw)
+}
+
+fn parse_response(raw: &str) -> Result<(u16, String)> {
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line in {:?}", raw.lines().next().unwrap_or("")))?;
+    let body = match raw.split_once("\r\n\r\n") {
+        Some((_, b)) => b.to_string(),
+        None => String::new(),
+    };
+    Ok((status, body))
+}
+
+/// `sorted` must be ascending; `q` in [0, 100].
+pub fn percentile_us(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (q / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Counter totals plus client-side latency of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub requests: u64,
+    pub ok: u64,
+    /// `503 overloaded` responses: shed load, not failures.
+    pub rejected: u64,
+    /// Non-503 error statuses (4xx/5xx).
+    pub http_errors: u64,
+    /// Connect/read failures (server down, timeout).
+    pub transport_errors: u64,
+    pub elapsed_secs: f64,
+    /// Ascending client-observed latencies, microseconds.
+    pub latencies_us: Vec<u64>,
+    pub per_mix: Vec<(&'static str, u64)>,
+    /// The server's post-run `/v1/metrics` data document, when the
+    /// scrape succeeded.
+    pub server_metrics: Option<Json>,
+}
+
+impl LoadReport {
+    pub fn p50_us(&self) -> u64 {
+        percentile_us(&self.latencies_us, 50.0)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        percentile_us(&self.latencies_us, 99.0)
+    }
+
+    /// The per-unit result cache's hit rate as the server reports it.
+    pub fn result_cache_hit_rate(&self) -> Option<f64> {
+        self.server_metrics.as_ref()?.get("cache")?.get_f64("hit_rate")
+    }
+
+    /// Fraction of cell lookups served without simulation: memory
+    /// cell-cache hits plus shared cell-store disk hits, over all
+    /// lookups. The acceptance bar for a warmed replica is ≥ 0.9.
+    pub fn combined_cell_hit_rate(&self) -> Option<f64> {
+        let m = self.server_metrics.as_ref()?;
+        let cells = m.get("cell_cache")?;
+        let hits = cells.get_u64("hits")?;
+        let misses = cells.get_u64("misses")?;
+        let store_hits =
+            m.get("cell_store").and_then(|s| s.get_u64("hits")).unwrap_or(0);
+        if hits + misses == 0 {
+            return None;
+        }
+        Some((hits + store_hits) as f64 / (hits + misses) as f64)
+    }
+
+    /// Machine-readable form (`--out`), schema `tcbench/loadgen/v1`.
+    pub fn to_json(&self) -> Json {
+        let lat = |q: f64| Json::num(percentile_us(&self.latencies_us, q) as f64);
+        let mean = if self.latencies_us.is_empty() {
+            0.0
+        } else {
+            self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+        };
+        Json::obj(vec![
+            ("schema", Json::str("tcbench/loadgen/v1")),
+            ("requests", Json::num(self.requests as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("http_errors", Json::num(self.http_errors as f64)),
+            ("transport_errors", Json::num(self.transport_errors as f64)),
+            ("elapsed_secs", Json::num(self.elapsed_secs)),
+            (
+                "throughput_rps",
+                Json::num(if self.elapsed_secs > 0.0 {
+                    self.requests as f64 / self.elapsed_secs
+                } else {
+                    0.0
+                }),
+            ),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("p50", lat(50.0)),
+                    ("p90", lat(90.0)),
+                    ("p99", lat(99.0)),
+                    ("max", lat(100.0)),
+                    ("mean", Json::num(mean)),
+                ]),
+            ),
+            (
+                "per_mix",
+                Json::Obj(
+                    self.per_mix
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "result_cache_hit_rate",
+                self.result_cache_hit_rate().map_or(Json::Null, Json::num),
+            ),
+            (
+                "combined_cell_hit_rate",
+                self.combined_cell_hit_rate().map_or(Json::Null, Json::num),
+            ),
+            (
+                "server_metrics",
+                self.server_metrics.clone().unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Human-readable summary for the terminal.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("loadgen report\n");
+        out.push_str(&format!(
+            "  requests          {} ({} ok, {} rejected, {} http errors, {} transport errors)\n",
+            self.requests, self.ok, self.rejected, self.http_errors, self.transport_errors
+        ));
+        out.push_str(&format!(
+            "  duration          {:.2} s  ({:.1} req/s)\n",
+            self.elapsed_secs,
+            if self.elapsed_secs > 0.0 { self.requests as f64 / self.elapsed_secs } else { 0.0 }
+        ));
+        out.push_str(&format!(
+            "  latency           p50 {} us   p90 {} us   p99 {} us   max {} us\n",
+            percentile_us(&self.latencies_us, 50.0),
+            percentile_us(&self.latencies_us, 90.0),
+            percentile_us(&self.latencies_us, 99.0),
+            percentile_us(&self.latencies_us, 100.0),
+        ));
+        for (name, n) in &self.per_mix {
+            out.push_str(&format!("  mix {name:<13} {n}\n"));
+        }
+        match self.result_cache_hit_rate() {
+            Some(rate) => {
+                out.push_str(&format!("  result cache      {:.1}% hit rate\n", rate * 100.0))
+            }
+            None => out.push_str("  result cache      (metrics scrape failed)\n"),
+        }
+        if let Some(rate) = self.combined_cell_hit_rate() {
+            out.push_str(&format!(
+                "  cell cache+store  {:.1}% served without simulation\n",
+                rate * 100.0
+            ));
+        }
+        if let Some(m) = &self.server_metrics {
+            if let Some(store) = m.get("cell_store") {
+                out.push_str(&format!(
+                    "  cell store        enabled={} hits={} misses={} writes={}\n",
+                    store.get("enabled").and_then(Json::as_bool).unwrap_or(false),
+                    store.get_u64("hits").unwrap_or(0),
+                    store.get_u64("misses").unwrap_or(0),
+                    store.get_u64("writes").unwrap_or(0),
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Scrape the server's `/v1/metrics` and unwrap the v1 envelope.
+pub fn scrape_metrics(addr: &str) -> Result<Json> {
+    let (status, body) = http_request(addr, "GET", "/v1/metrics", "")?;
+    if status != 200 {
+        bail!("GET /v1/metrics answered {status}");
+    }
+    let envelope = Json::parse(&body).map_err(|e| anyhow::anyhow!("bad metrics JSON: {e}"))?;
+    envelope
+        .get("data")
+        .cloned()
+        .context("metrics response has no data field (not a tcserved/v1 envelope?)")
+}
+
+/// Run the harness: `concurrency` workers replaying the mix until the
+/// deadline, then one `/v1/metrics` scrape.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.mix.is_empty() {
+        bail!("empty mix");
+    }
+    // fail fast (and outside the worker threads) if the target is down
+    let (status, _) = http_request(&cfg.addr, "GET", "/healthz", "")
+        .with_context(|| format!("tcserved not reachable at {}", cfg.addr))?;
+    if status != 200 {
+        bail!("healthz answered {status}; refusing to run load");
+    }
+
+    let latencies: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let ok = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let http_errors = AtomicU64::new(0);
+    let transport_errors = AtomicU64::new(0);
+    let per_mix: Vec<AtomicU64> = cfg.mix.iter().map(|_| AtomicU64::new(0)).collect();
+
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs_f64(cfg.duration_secs.max(0.0));
+    std::thread::scope(|scope| {
+        for worker in 0..cfg.concurrency.max(1) {
+            let latencies = &latencies;
+            let (ok, rejected) = (&ok, &rejected);
+            let (http_errors, transport_errors) = (&http_errors, &transport_errors);
+            let per_mix = &per_mix;
+            scope.spawn(move || {
+                // distinct deterministic stream per worker
+                let stream = 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(worker as u64 + 1);
+                let mut prng = Prng::new(cfg.seed ^ stream);
+                while Instant::now() < deadline {
+                    let pick = prng.below(cfg.mix.len() as u64) as usize;
+                    let (path, body) = template(cfg.mix[pick], &mut prng);
+                    per_mix[pick].fetch_add(1, Ordering::Relaxed);
+                    let t = Instant::now();
+                    match http_request(&cfg.addr, "POST", path, &body) {
+                        Ok((status, _)) => {
+                            latencies.lock().unwrap().push(t.elapsed().as_micros() as u64);
+                            match status {
+                                200 => ok.fetch_add(1, Ordering::Relaxed),
+                                503 => rejected.fetch_add(1, Ordering::Relaxed),
+                                _ => http_errors.fetch_add(1, Ordering::Relaxed),
+                            };
+                        }
+                        Err(_) => {
+                            transport_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let elapsed_secs = t0.elapsed().as_secs_f64();
+
+    let mut latencies = latencies.into_inner().unwrap();
+    latencies.sort_unstable();
+    let counts: Vec<u64> = per_mix.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+    // aggregate by class name: a weighted mix ("plan:plan:sweep") has
+    // repeated entries that must not become duplicate report keys
+    let mut mix_totals: Vec<(&'static str, u64)> = Vec::new();
+    for (name, n) in cfg.mix.iter().map(|k| k.name()).zip(&counts) {
+        match mix_totals.iter_mut().find(|(k, _)| *k == name) {
+            Some((_, total)) => *total += n,
+            None => mix_totals.push((name, *n)),
+        }
+    }
+    Ok(LoadReport {
+        requests: counts.iter().sum(),
+        ok: ok.into_inner(),
+        rejected: rejected.into_inner(),
+        http_errors: http_errors.into_inner(),
+        transport_errors: transport_errors.into_inner(),
+        elapsed_secs,
+        latencies_us: latencies,
+        per_mix: mix_totals,
+        server_metrics: scrape_metrics(&cfg.addr).ok(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_specs_parse_with_weights() {
+        assert_eq!(
+            parse_mix("plan:sweep:numeric").unwrap(),
+            vec![MixKind::Plan, MixKind::Sweep, MixKind::Numeric]
+        );
+        assert_eq!(parse_mix("sweep").unwrap(), vec![MixKind::Sweep]);
+        // repetition weights a class; empty segments are tolerated
+        assert_eq!(
+            parse_mix("plan:plan::sweep").unwrap(),
+            vec![MixKind::Plan, MixKind::Plan, MixKind::Sweep]
+        );
+        assert!(parse_mix("").is_err());
+        assert!(parse_mix("plan:gemm").is_err());
+    }
+
+    #[test]
+    fn percentiles_on_sorted_latencies() {
+        let lat: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&lat, 50.0), 51); // nearest-rank on 0..=99
+        assert_eq!(percentile_us(&lat, 99.0), 99);
+        assert_eq!(percentile_us(&lat, 100.0), 100);
+        assert_eq!(percentile_us(&lat, 0.0), 1);
+        assert_eq!(percentile_us(&[], 50.0), 0);
+        assert_eq!(percentile_us(&[7], 99.0), 7);
+    }
+
+    #[test]
+    fn templates_are_deterministic_valid_json_posts() {
+        for kind in [MixKind::Plan, MixKind::Sweep, MixKind::Numeric] {
+            let mut a = Prng::new(42);
+            let mut b = Prng::new(42);
+            for _ in 0..16 {
+                let (path, body) = template(kind, &mut a);
+                assert_eq!((path, body.clone()), template(kind, &mut b), "{kind:?}");
+                assert!(path.starts_with("/v1/"), "{path}");
+                let parsed = Json::parse(&body).expect("template body is valid JSON");
+                // every template pins the backend so loadgen traffic is
+                // cacheable under one resolved key
+                assert_eq!(parsed.get_str("backend"), Some("native"), "{body}");
+            }
+        }
+    }
+
+    #[test]
+    fn responses_parse_and_hit_rates_extract() {
+        let (status, body) =
+            parse_response("HTTP/1.1 503 Service Unavailable\r\nRetry-After: 1\r\n\r\n{}").unwrap();
+        assert_eq!((status, body.as_str()), (503, "{}"));
+        assert!(parse_response("garbage").is_err());
+
+        let metrics = Json::parse(
+            r#"{"cache":{"hit_rate":0.8},
+                "cell_cache":{"hits":90,"misses":10},
+                "cell_store":{"enabled":true,"hits":8,"misses":2,"writes":2,"corrupt":0}}"#,
+        )
+        .unwrap();
+        let report = LoadReport {
+            requests: 4,
+            ok: 3,
+            rejected: 1,
+            http_errors: 0,
+            transport_errors: 0,
+            elapsed_secs: 2.0,
+            latencies_us: vec![100, 200, 300, 400],
+            per_mix: vec![("plan", 4)],
+            server_metrics: Some(metrics),
+        };
+        assert_eq!(report.result_cache_hit_rate(), Some(0.8));
+        // (90 memory + 8 disk) / 100 lookups
+        assert!((report.combined_cell_hit_rate().unwrap() - 0.98).abs() < 1e-9);
+        let j = report.to_json();
+        assert_eq!(j.get_str("schema"), Some("tcbench/loadgen/v1"));
+        assert_eq!(j.get("latency_us").unwrap().get_u64("p50"), Some(300));
+        assert_eq!(j.get_u64("rejected"), Some(1));
+        assert!((j.get_f64("throughput_rps").unwrap() - 2.0).abs() < 1e-9);
+        let text = report.render();
+        assert!(text.contains("p50 300 us"), "{text}");
+        assert!(text.contains("cell cache+store"), "{text}");
+    }
+}

@@ -6,7 +6,10 @@
 //! repro all [--backend B] [--out D]  # the full campaign (+ summary.json)
 //! repro sweep --device D --instr I [--profile] [--trace F]  # ad-hoc sweep
 //! repro devices                      # calibrated devices
-//! repro serve [--addr A] [--threads N] [--warm]   # tcserved campaign service
+//! repro serve [--addr A] [--threads N] [--warm] [--cell-store D]
+//!             [--replicas N | --shard i/N] [--queue-depth N]   # tcserved
+//! repro loadgen [--addr A] [--mix M] [--concurrency C] [--duration S]
+//!             # load harness against a running tcserved
 //! repro lint <spec>... | repro lint --all         # tclint static verifier
 //! ```
 //!
@@ -22,6 +25,7 @@ use tcbench::coordinator::{
     default_threads, lint_all, run_all, run_experiment, BackendKind, EXPERIMENTS,
 };
 use tcbench::device;
+use tcbench::loadgen;
 use tcbench::report;
 use tcbench::server::{serve_blocking, ServerConfig};
 use tcbench::sim::{ProfileMode, SimProfile};
@@ -41,6 +45,10 @@ fn usage() -> &'static str {
        repro sweep --device <a100|rtx3070ti|rtx2080ti> --instr \"<workload>\"\n\
                    [--profile] [--trace FILE]\n\
        repro serve [--addr HOST:PORT] [--threads N] [--warm]\n\
+                   [--cell-store DIR|none] [--replicas N | --shard i/N]\n\
+                   [--queue-depth N]\n\
+       repro loadgen [--addr HOST:PORT] [--mix plan:sweep:numeric]\n\
+                   [--concurrency C] [--duration SECONDS] [--seed S] [--out FILE]\n\
        repro lint <spec>... [--device D] [--out DIR]   # tclint workload specs\n\
        repro lint --all [--out DIR]        # every program the campaign generates\n\
      \n\
@@ -72,6 +80,8 @@ fn usage() -> &'static str {
        repro sweep --device a100 --instr \"numeric chain tf32 f32 14\"\n\
        repro sweep --device a100 --instr \"bf16 f32 m16n8k16\" --profile --trace trace.json\n\
        repro serve --addr 127.0.0.1:8321 --warm\n\
+       repro serve --shard 0/3 --cell-store /shared/cells   # replica 0 of a fleet\n\
+       repro loadgen --addr 127.0.0.1:8321 --mix plan:sweep --duration 10\n\
        repro lint \"gemm pipeline bf16 f32 2048 128x128x32\"\n\
        repro lint --all --out out          # exits nonzero on any Error diagnostic\n\
      \n\
@@ -86,9 +96,19 @@ fn usage() -> &'static str {
        --trace FILE   write a Chrome trace-event JSON of one representative cell\n\
                       (open in https://ui.perfetto.dev)\n\
      \n\
+     SERVING AT SCALE (repro serve / repro loadgen):\n\
+       Every JSON endpoint answers in the tcserved/v1 envelope; POST bodies are\n\
+       canonical, the GET+query aliases of /v1/run and /v1/sweep answer with a\n\
+       Deprecation header. --cell-store points replicas at one shared directory\n\
+       of simulated cells (atomic writes; survives restarts); --replicas N hosts\n\
+       N consistent-hash shards in-process, --shard i/N marks this process as one\n\
+       replica of a fleet. --queue-depth bounds the accept queue (overflow gets\n\
+       503 + Retry-After). repro loadgen replays a deterministic plan/sweep/\n\
+       numeric mix and reports p50/p99 plus the served cache hit rates.\n\
+     \n\
      SERVE ENDPOINTS:\n\
-       /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep POST:/v1/plan\n\
-       POST:/v1/lint (400 on Error diagnostics)\n\
+       /healthz /v1/experiments /v1/devices POST:/v1/run/<id> POST:/v1/sweep\n\
+       POST:/v1/plan POST:/v1/lint (400 on Error diagnostics)\n\
        /v1/metrics (JSON incl. latency histograms)  /metrics (Prometheus text)\n"
 }
 
@@ -458,13 +478,99 @@ fn main() -> Result<()> {
                     .max(1),
                 None => default_threads(),
             };
+            let cell_store = match args.flag("cell-store") {
+                Some("none") | Some("off") => None,
+                Some(dir) => Some(std::path::PathBuf::from(dir)),
+                None => ServerConfig::default().cell_store,
+            };
+            let shard = match args.flag("shard") {
+                Some(spec) => {
+                    let (i, n) = spec
+                        .split_once('/')
+                        .and_then(|(i, n)| i.parse::<usize>().ok().zip(n.parse::<usize>().ok()))
+                        .ok_or_else(|| {
+                            anyhow!("--shard must look like i/N (e.g. 0/3), got {spec:?}")
+                        })?;
+                    if i >= n {
+                        bail!("--shard index {i} out of range for {n} replica(s)");
+                    }
+                    Some((i, n))
+                }
+                None => None,
+            };
+            let replicas = match args.flag("replicas") {
+                Some(r) => {
+                    if shard.is_some() {
+                        bail!(
+                            "--replicas conflicts with --shard \
+                             (--shard i/N already fixes the fleet size)"
+                        );
+                    }
+                    let r = r
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("--replicas must be a positive integer, got {r:?}"))?;
+                    if r == 0 {
+                        bail!("--replicas must be at least 1");
+                    }
+                    r
+                }
+                None => 1,
+            };
+            let queue_depth = match args.flag("queue-depth") {
+                Some(q) => q
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("--queue-depth must be a positive integer, got {q:?}"))?
+                    .max(1),
+                None => ServerConfig::default().queue_depth,
+            };
             let cfg = ServerConfig {
                 addr: args.flag("addr").unwrap_or("127.0.0.1:8321").to_string(),
                 threads,
                 warm: args.flag("warm").is_some(),
+                cell_store,
+                replicas,
+                shard,
+                queue_depth,
                 ..ServerConfig::default()
             };
             serve_blocking(cfg)?;
+        }
+        "loadgen" => {
+            let mut cfg = loadgen::LoadgenConfig::default();
+            if let Some(addr) = args.flag("addr") {
+                cfg.addr = addr.to_string();
+            }
+            if let Some(mix) = args.flag("mix") {
+                cfg.mix = loadgen::parse_mix(mix).map_err(|e| anyhow!(e))?;
+            }
+            if let Some(c) = args.flag("concurrency") {
+                cfg.concurrency = c
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("--concurrency must be a positive integer, got {c:?}"))?
+                    .max(1);
+            }
+            if let Some(d) = args.flag("duration") {
+                cfg.duration_secs = d
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("--duration must be seconds (e.g. 2.5), got {d:?}"))?;
+                if !cfg.duration_secs.is_finite() || cfg.duration_secs <= 0.0 {
+                    bail!("--duration must be positive");
+                }
+            }
+            if let Some(s) = args.flag("seed") {
+                cfg.seed = s
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("--seed must be an unsigned integer, got {s:?}"))?;
+            }
+            let report = loadgen::run(&cfg).map_err(|e| anyhow!(e))?;
+            print!("{}", report.render());
+            if let Some(path) = args.flag("out") {
+                std::fs::write(path, report.to_json().pretty())?;
+                eprintln!("[repro] wrote {path}");
+            }
+            if report.requests > 0 && report.ok == 0 {
+                bail!("loadgen: {} request(s) sent, none succeeded", report.requests);
+            }
         }
         "sweep" => {
             // a thin translator into the unified plan path: parse the

@@ -178,39 +178,93 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
     Ok(Request { method, path: percent_decode(path_raw), query, body })
 }
 
+/// Version tag of the one response envelope every JSON endpoint answers
+/// in: `{"schema": "tcserved/v1", "data": ...}` on success,
+/// `{"schema": "tcserved/v1", "error": {"code", "message", "status"}}`
+/// on failure.
+pub const SCHEMA: &str = "tcserved/v1";
+
 /// A response ready to serialize.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: String,
+    /// Extra response headers (e.g. `Deprecation`, `Retry-After`), on
+    /// top of the always-written Content-Type/Content-Length/Connection.
+    pub headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
+    /// A raw (un-enveloped) JSON response — internal plumbing; endpoint
+    /// handlers answer via [`Response::ok`] / [`Response::error`].
     pub fn json(status: u16, body: &Json) -> Response {
-        Response { status, content_type: "application/json", body: body.to_string() }
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.to_string(),
+            headers: Vec::new(),
+        }
     }
 
-    /// A JSON error body: `{"error": ..., "status": ...}`.
-    pub fn error(status: u16, message: impl Into<String>) -> Response {
+    /// A non-JSON response (the Prometheus text exposition is the one
+    /// endpoint exempt from the v1 envelope).
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response { status, content_type, body, headers: Vec::new() }
+    }
+
+    /// A 200 success envelope: `{"schema": "tcserved/v1", "data": ...}`.
+    pub fn ok(data: Json) -> Response {
+        Response::json(200, &Json::obj(vec![("schema", Json::str(SCHEMA)), ("data", data)]))
+    }
+
+    /// An error envelope with a machine-readable `code` (stable, typed)
+    /// and a human-readable `message`.
+    pub fn error(status: u16, code: &str, message: impl Into<String>) -> Response {
+        Response::error_with_details(status, code, message, None)
+    }
+
+    /// [`Response::error`] carrying structured `details` (e.g. the lint
+    /// diagnostics that explain a `lint_errors` rejection).
+    pub fn error_with_details(
+        status: u16,
+        code: &str,
+        message: impl Into<String>,
+        details: Option<Json>,
+    ) -> Response {
+        let mut error = vec![
+            ("code", Json::str(code)),
+            ("message", Json::Str(message.into())),
+            ("status", Json::num(status as f64)),
+        ];
+        if let Some(details) = details {
+            error.push(("details", details));
+        }
         Response::json(
             status,
-            &Json::obj(vec![
-                ("error", Json::Str(message.into())),
-                ("status", Json::num(status as f64)),
-            ]),
+            &Json::obj(vec![("schema", Json::str(SCHEMA)), ("error", Json::obj(error))]),
         )
+    }
+
+    /// Attach an extra response header.
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Response {
+        self.headers.push((name, value.into()));
+        self
     }
 
     pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
         write!(
             stream,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
             self.status,
             status_text(self.status),
             self.content_type,
             self.body.len()
         )?;
+        for (name, value) in &self.headers {
+            write!(stream, "{name}: {value}\r\n")?;
+        }
+        write!(stream, "Connection: close\r\n\r\n")?;
         stream.write_all(self.body.as_bytes())?;
         stream.flush()
     }
@@ -243,12 +297,36 @@ mod tests {
     }
 
     #[test]
-    fn error_bodies_are_json() {
-        let r = Response::error(404, "nope");
+    fn error_bodies_are_enveloped_json_with_typed_codes() {
+        let r = Response::error(404, "not_found", "nope");
         assert_eq!(r.status, 404);
         let j = Json::parse(&r.body).unwrap();
-        assert_eq!(j.get_str("error"), Some("nope"));
-        assert_eq!(j.get_u64("status"), Some(404));
+        assert_eq!(j.get_str("schema"), Some(SCHEMA));
+        let e = j.get("error").expect("error object");
+        assert_eq!(e.get_str("code"), Some("not_found"));
+        assert_eq!(e.get_str("message"), Some("nope"));
+        assert_eq!(e.get_u64("status"), Some(404));
+        assert!(e.get("details").is_none());
+        // details ride inside the error object when present
+        let r = Response::error_with_details(
+            400,
+            "lint_errors",
+            "1 error",
+            Some(Json::obj(vec![("errors", Json::num(1.0))])),
+        );
+        let j = Json::parse(&r.body).unwrap();
+        let d = j.get("error").and_then(|e| e.get("details")).expect("details");
+        assert_eq!(d.get_u64("errors"), Some(1));
+    }
+
+    #[test]
+    fn success_envelope_wraps_data() {
+        let r = Response::ok(Json::obj(vec![("answer", Json::num(42.0))]));
+        assert_eq!(r.status, 200);
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get_str("schema"), Some(SCHEMA));
+        assert_eq!(j.get("data").and_then(|d| d.get_u64("answer")), Some(42));
+        assert!(j.get("error").is_none());
     }
 
     #[test]

@@ -40,6 +40,8 @@ pub struct ComputeStat {
 pub struct Metrics {
     started: Instant,
     requests_total: AtomicU64,
+    /// Connections shed with `503` because the accept queue was full.
+    requests_rejected: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     cache_coalesced: AtomicU64,
@@ -61,6 +63,7 @@ impl Metrics {
         Metrics {
             started: Instant::now(),
             requests_total: AtomicU64::new(0),
+            requests_rejected: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             cache_coalesced: AtomicU64::new(0),
@@ -81,6 +84,13 @@ impl Metrics {
 
     pub fn record_status(&self, status: u16) {
         *self.by_status.lock().unwrap().entry(status).or_insert(0) += 1;
+    }
+
+    /// One connection shed on the acceptor because the worker queue was
+    /// full (answered `503` + `Retry-After` without parsing a request,
+    /// so it is *not* part of `requests_total`).
+    pub fn record_rejected(&self) {
+        self.requests_rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_hit(&self) {
@@ -180,6 +190,10 @@ impl Metrics {
         Json::obj(vec![
             ("uptime_ms", Json::num(self.started.elapsed().as_secs_f64() * 1e3)),
             ("requests_total", Json::num(self.requests_total() as f64)),
+            (
+                "requests_rejected",
+                Json::num(self.requests_rejected.load(Ordering::Relaxed) as f64),
+            ),
             ("by_endpoint", by_endpoint),
             ("by_status", by_status),
             (
@@ -206,6 +220,19 @@ impl Metrics {
                     ("cells_simulated", Json::num(cells.cells_simulated as f64)),
                     ("entries", Json::num(cells.entries as f64)),
                     ("capacity", Json::num(cells.capacity as f64)),
+                ])
+            }),
+            // the shared on-disk cell store behind the cell cache;
+            // `enabled: false` (all-zero counters) when no store is
+            // attached, so the section's shape is scrape-stable
+            ("cell_store", {
+                let store = crate::workload::cell_store_stats();
+                Json::obj(vec![
+                    ("enabled", Json::Bool(store.is_some())),
+                    ("hits", Json::num(store.as_ref().map_or(0, |s| s.hits) as f64)),
+                    ("misses", Json::num(store.as_ref().map_or(0, |s| s.misses) as f64)),
+                    ("writes", Json::num(store.as_ref().map_or(0, |s| s.writes) as f64)),
+                    ("corrupt", Json::num(store.as_ref().map_or(0, |s| s.corrupt) as f64)),
                 ])
             }),
             // tclint diagnostics surfaced through POST /v1/lint
@@ -249,6 +276,12 @@ impl Metrics {
             "counter",
             "Total HTTP requests received.",
             &[(String::new(), self.requests_total() as f64)],
+        );
+        metric(
+            "requests_rejected_total",
+            "counter",
+            "Connections shed with 503 because the accept queue was full.",
+            &[(String::new(), self.requests_rejected.load(Ordering::Relaxed) as f64)],
         );
         metric(
             "endpoint_requests_total",
@@ -328,6 +361,38 @@ impl Metrics {
             "Cell-cache capacity.",
             &[(String::new(), cells.capacity as f64)],
         );
+
+        let store = crate::workload::cell_store_stats();
+        metric(
+            "cell_store_enabled",
+            "gauge",
+            "1 when a shared on-disk cell store is attached.",
+            &[(String::new(), if store.is_some() { 1.0 } else { 0.0 })],
+        );
+        for (name, help, value) in [
+            (
+                "cell_store_hits_total",
+                "Cell-store disk hits (cells simulated by an earlier run or another replica).",
+                store.as_ref().map_or(0, |s| s.hits) as f64,
+            ),
+            (
+                "cell_store_misses_total",
+                "Cell-store misses (cell absent on disk).",
+                store.as_ref().map_or(0, |s| s.misses) as f64,
+            ),
+            (
+                "cell_store_writes_total",
+                "Cells persisted to the shared store.",
+                store.as_ref().map_or(0, |s| s.writes) as f64,
+            ),
+            (
+                "cell_store_corrupt_total",
+                "Unreadable cell files tolerated as misses.",
+                store.as_ref().map_or(0, |s| s.corrupt) as f64,
+            ),
+        ] {
+            metric(name, "counter", help, &[(String::new(), value)]);
+        }
 
         for (name, help, value) in [
             (
@@ -441,8 +506,11 @@ mod tests {
         m.record_lint(2, 3);
         m.record_lint(0, 1);
 
+        m.record_rejected();
+
         let j = m.to_json(CacheStats { entries: 1, capacity: 8, evictions: 0 });
         assert_eq!(j.get_u64("requests_total"), Some(3));
+        assert_eq!(j.get_u64("requests_rejected"), Some(1));
         assert_eq!(j.get("by_endpoint").unwrap().get_u64("run"), Some(2));
         assert_eq!(j.get("by_status").unwrap().get_u64("404"), Some(1));
         let cache = j.get("cache").unwrap();
@@ -462,6 +530,13 @@ mod tests {
         let cells = j.get("cell_cache").unwrap();
         for field in ["hits", "misses", "evictions", "cells_simulated", "entries", "capacity"] {
             assert!(cells.get_u64(field).is_some(), "cell_cache.{field} missing");
+        }
+        // the cell-store section is always present (enabled=false with
+        // zeroed counters when no store is attached)
+        let store = j.get("cell_store").unwrap();
+        assert!(store.get("enabled").and_then(Json::as_bool).is_some());
+        for field in ["hits", "misses", "writes", "corrupt"] {
+            assert!(store.get_u64(field).is_some(), "cell_store.{field} missing");
         }
         // the whole document serializes to valid JSON
         assert!(Json::parse(&j.to_string()).is_ok());
@@ -529,6 +604,9 @@ mod tests {
             assert!(value.parse::<f64>().is_ok(), "{line}");
         }
         assert!(text.contains("tcserved_requests_total 2"));
+        assert!(text.contains("tcserved_requests_rejected_total 0"));
+        assert!(text.contains("tcserved_cell_store_enabled"));
+        assert!(text.contains("tcserved_cell_store_hits_total"));
         assert!(text.contains("tcserved_endpoint_requests_total{endpoint=\"run\"} 1"));
         assert!(text.contains("tcserved_responses_total{status=\"200\"} 1"));
         assert!(text.contains("tcserved_result_cache_hits_total 1"));

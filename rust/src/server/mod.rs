@@ -8,29 +8,41 @@
 //!
 //! ```text
 //! repro serve [--addr 127.0.0.1:8321] [--threads N] [--warm]
+//!             [--cell-store DIR|none] [--replicas N | --shard i/N]
+//!             [--queue-depth N]
 //!
 //! GET  /healthz             liveness + registry size
 //! GET  /v1/experiments      the 19 registered experiments (+cache state)
 //! GET  /v1/devices          calibrated devices
-//! GET  /v1/run/<id>         one experiment, cached  [?backend=native|pjrt|auto]
-//! GET  /v1/sweep            ad-hoc (ILP, warps) sweep [?device=&instr=&sparse=]
+//! POST /v1/run/<id>         one experiment, cached  {"backend": ...}
+//! POST /v1/sweep            ad-hoc (ILP, warps) sweep {"instr", "device", ...}
 //! POST /v1/plan             run a JSON BenchPlan; batched, cached per unit
-//! GET  /v1/metrics          request counts, cache hit rate, compute times,
-//!                           latency histograms (JSON)
+//! POST /v1/lint             static diagnostics for a BenchPlan
+//! GET  /v1/metrics          request counts, cache + cell-store hit rates,
+//!                           per-shard load, latency histograms (JSON)
 //! GET  /metrics             the same counters in Prometheus text format
 //! ```
 //!
+//! Every JSON endpoint answers in the versioned `tcserved/v1` envelope
+//! ([`http::SCHEMA`]); `/v1/run/<id>` and `/v1/sweep` also keep their
+//! original GET+query form as a deprecated alias (answered with a
+//! `Deprecation: true` header).
+//!
 //! Layering: [`http`] parses/writes the wire format, [`router`] maps
 //! requests onto the campaign ([`cache`]-backed, single-flight),
-//! [`metrics`] counts everything (with [`histogram`] supplying the
-//! lock-free latency histograms), and this module owns sockets and
-//! threads.
+//! [`shard`] consistent-hashes plan units across replicas, [`metrics`]
+//! counts everything (with [`histogram`] supplying the lock-free
+//! latency histograms), and this module owns sockets and threads. The
+//! accept queue is bounded: when every worker is busy and the queue is
+//! full, new connections get an immediate `503` (`overloaded`, with
+//! `Retry-After`) instead of unbounded buffering.
 
 pub mod cache;
 pub mod histogram;
 pub mod http;
 pub mod metrics;
 pub mod router;
+pub mod shard;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -42,10 +54,12 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{default_threads, EXPERIMENTS};
+use crate::workload::{CellCache, CellStore};
 
 use cache::ResultCache;
 use http::Response;
 use router::AppState;
+use shard::ShardRouter;
 
 /// tcserved configuration (CLI flags map onto this 1:1).
 #[derive(Debug, Clone)]
@@ -56,10 +70,24 @@ pub struct ServerConfig {
     pub threads: usize,
     /// Precompute all registered experiments before accepting traffic.
     pub warm: bool,
-    /// On-disk cache directory (`None` disables persistence).
+    /// On-disk unit result cache directory (`None` disables persistence).
     pub disk_cache: Option<PathBuf>,
     /// In-memory LRU capacity (entries).
     pub cache_capacity: usize,
+    /// Shared on-disk cell store directory (`None` disables it). Point
+    /// every replica of a fleet at the same directory: cells simulated
+    /// by one replica are then warm disk hits for all of them, and the
+    /// store survives restarts.
+    pub cell_store: Option<PathBuf>,
+    /// Number of shards this process hosts (`--replicas N`): the
+    /// in-process router partitions plan units across N gates.
+    pub replicas: usize,
+    /// `Some((i, n))` when this process is shard `i` of an n-replica
+    /// multi-process fleet (`--shard i/n`). Overrides `replicas`.
+    pub shard: Option<(usize, usize)>,
+    /// Accepted-connection queue depth; beyond it new connections are
+    /// answered `503` + `Retry-After` instead of queueing unboundedly.
+    pub queue_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -70,6 +98,10 @@ impl Default for ServerConfig {
             warm: false,
             disk_cache: Some(PathBuf::from("results/cache")),
             cache_capacity: 256,
+            cell_store: Some(PathBuf::from("results/cells")),
+            replicas: 1,
+            shard: None,
+            queue_depth: 256,
         }
     }
 }
@@ -89,16 +121,33 @@ impl Server {
         let listener = TcpListener::bind(cfg.addr.as_str())
             .with_context(|| format!("binding tcserved to {}", cfg.addr))?;
         let addr = listener.local_addr()?;
-        let state = Arc::new(AppState::new(ResultCache::new(
-            cfg.cache_capacity,
-            cfg.disk_cache.clone(),
-        )));
+        if let Some(dir) = &cfg.cell_store {
+            // the store is process-wide (the cell cache is a process
+            // singleton); attaching twice is a no-op with a note
+            if !CellCache::global().attach_store(CellStore::new(dir.clone())) {
+                eprintln!(
+                    "[tcserved] cell store already attached for this process; \
+                     ignoring {}",
+                    dir.display()
+                );
+            }
+        }
+        let (local, replicas) = match cfg.shard {
+            Some((i, n)) => (Some(i), n),
+            None => (None, cfg.replicas),
+        };
+        let state = Arc::new(AppState::with_shards(
+            ResultCache::new(cfg.cache_capacity, cfg.disk_cache.clone()),
+            ShardRouter::new(replicas, local, cfg.threads.max(1)),
+        ));
         if cfg.warm {
             let warmed = router::warm(&state, cfg.threads);
             eprintln!("[tcserved] warmed {warmed}/{} experiments", EXPERIMENTS.len());
         }
 
-        let (tx, rx) = mpsc::channel::<TcpStream>();
+        // Bounded hand-off: `try_send` in the acceptor keeps the queue at
+        // most `queue_depth` deep, and overload is answered inline.
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(cfg.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
         for _ in 0..cfg.threads.max(1) {
             let rx = Arc::clone(&rx);
@@ -108,15 +157,19 @@ impl Server {
 
         let shutdown = Arc::new(AtomicBool::new(false));
         let stop = Arc::clone(&shutdown);
+        let accept_state = Arc::clone(&state);
         let acceptor = thread::spawn(move || {
             for conn in listener.incoming() {
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
-                if let Ok(stream) = conn {
-                    if tx.send(stream).is_err() {
-                        break;
+                let Ok(stream) = conn else { continue };
+                match tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(stream)) => {
+                        reject_overloaded(&accept_state, stream)
                     }
+                    Err(mpsc::TrySendError::Disconnected(_)) => break,
                 }
             }
             // dropping `tx` lets the workers drain and exit
@@ -154,6 +207,22 @@ impl Server {
     }
 }
 
+/// Backpressure path: the worker queue is full, so answer `503` on the
+/// acceptor thread without reading the request (the client told us
+/// nothing we need; the point is to shed load fast).
+fn reject_overloaded(state: &AppState, mut stream: TcpStream) {
+    state.metrics.record_rejected();
+    let response = Response::error(
+        503,
+        "overloaded",
+        "server at capacity (connection queue full); retry shortly",
+    )
+    .with_header("Retry-After", "1");
+    state.metrics.record_status(response.status);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let _ = response.write_to(&mut stream);
+}
+
 fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>, state: Arc<AppState>) {
     loop {
         // Lock only around `recv`: the guard is a temporary of this
@@ -187,7 +256,7 @@ fn handle_connection(state: &AppState, mut stream: TcpStream) {
         Err(e) => {
             // keep requests_total/by_endpoint reconciled with by_status
             state.metrics.record_request("malformed");
-            Response::error(400, e)
+            Response::error(400, "malformed_request", e)
         }
     };
     state.metrics.record_status(response.status);
@@ -197,15 +266,27 @@ fn handle_connection(state: &AppState, mut stream: TcpStream) {
 /// CLI entrypoint: start and serve until the process is killed.
 pub fn serve_blocking(cfg: ServerConfig) -> Result<()> {
     let threads = cfg.threads;
+    let shard = cfg.shard;
+    let replicas = cfg.replicas;
+    let cell_store = cfg.cell_store.clone();
     let server = Server::start(cfg)?;
     eprintln!(
         "[tcserved] listening on http://{} ({threads} workers, {} experiments registered)",
         server.addr(),
         EXPERIMENTS.len()
     );
+    match shard {
+        Some((i, n)) => eprintln!("[tcserved] serving as shard {i}/{n} of a multi-process fleet"),
+        None if replicas > 1 => eprintln!("[tcserved] hosting {replicas} shards in-process"),
+        None => {}
+    }
+    match cell_store {
+        Some(dir) => eprintln!("[tcserved] cell store: {}", dir.display()),
+        None => eprintln!("[tcserved] cell store: disabled"),
+    }
     eprintln!(
-        "[tcserved] endpoints: /healthz /v1/experiments /v1/devices /v1/run/<id> /v1/sweep \
-         POST:/v1/plan /v1/metrics /metrics"
+        "[tcserved] endpoints: /healthz /v1/experiments /v1/devices POST:/v1/run/<id> \
+         POST:/v1/sweep POST:/v1/plan POST:/v1/lint /v1/metrics /metrics"
     );
     server.join();
     Ok(())
@@ -223,6 +304,8 @@ mod tests {
             warm: false,
             disk_cache: None,
             cache_capacity: 8,
+            cell_store: None,
+            ..ServerConfig::default()
         })
         .unwrap();
         let addr = server.addr();

@@ -1,5 +1,15 @@
 //! tcserved request routing: the `/v1` JSON API over the campaign.
 //!
+//! Every JSON endpoint answers in the one versioned envelope
+//! ([`http::SCHEMA`](super::http::SCHEMA)): `{"schema": "tcserved/v1",
+//! "data": ...}` on success, `{"schema": "tcserved/v1", "error":
+//! {"code", "message", "status"}}` on failure, with machine-readable
+//! error codes (`invalid_plan`, `unknown_device`, `lint_errors`, …).
+//! The Prometheus text exposition at `/metrics` is the one deliberate
+//! exception. Parameter reading is centralized in [`RequestParams`]:
+//! POST bodies are the canonical form, GET+query is kept as a
+//! deprecated alias that answers with a `Deprecation: true` header.
+//!
 //! Heavy endpoints (`/v1/run/<id>`, `/v1/sweep`, `POST /v1/plan`) go
 //! through the content-addressed [`ResultCache`]: the first request
 //! computes via `coordinator::run_experiment` or the unified workload
@@ -8,33 +18,136 @@
 //! single computation. Plans are cached *per unit* — the unit token
 //! carries every workload parameter — so two plans sharing units share
 //! their cache entries, and the single-flight machinery dedups at unit
-//! granularity. `POST /v1/lint` runs the tclint static verifier over a
-//! plan's programs without simulating; it is compute-light and bypasses
-//! the cache.
+//! granularity. Each unit executes under its owning shard's gate in
+//! the [`ShardRouter`], which consistent-hashes the unit's content
+//! address across replicas. `POST /v1/lint` runs the tclint static
+//! verifier over a plan's programs without simulating; it is
+//! compute-light and bypasses the cache.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 use crate::coordinator::{self, run_parallel, BackendKind, ExperimentId, EXPERIMENTS};
-use crate::device;
+use crate::device::{self, Device};
 use crate::report;
 use crate::util::Json;
-use crate::workload::{self, BenchPlan, Plan, Runner, SimRunner, UnitKind, Workload};
+use crate::workload::{self, BenchPlan, Plan, Runner, UnitKind, Workload};
 
 use super::cache::{cache_key, CacheKey, Origin, ResultCache};
 use super::http::{Request, Response};
 use super::metrics::Metrics;
+use super::shard::ShardRouter;
 
 /// Shared state of one tcserved instance.
 pub struct AppState {
     pub cache: ResultCache,
     pub metrics: Metrics,
+    pub shards: ShardRouter,
 }
 
 impl AppState {
     pub fn new(cache: ResultCache) -> AppState {
-        AppState { cache, metrics: Metrics::new() }
+        AppState::with_shards(cache, ShardRouter::single())
     }
+
+    pub fn with_shards(cache: ResultCache, shards: ShardRouter) -> AppState {
+        AppState { cache, metrics: Metrics::new(), shards }
+    }
+}
+
+/// The one place request parameters are read: POST bodies (the
+/// canonical form) and GET query strings (the deprecated alias)
+/// resolve through identical code, so `backend`/`device` parsing
+/// cannot drift between endpoints.
+struct RequestParams<'a> {
+    req: &'a Request,
+    body: Option<Json>,
+}
+
+impl<'a> RequestParams<'a> {
+    /// Parse the request's parameter source. A POST's source is its
+    /// JSON body (empty body = empty object); anything else reads the
+    /// query string.
+    fn parse(req: &'a Request) -> Result<RequestParams<'a>, Response> {
+        let body = if req.method == "POST" {
+            if req.body.trim().is_empty() {
+                Some(Json::obj(vec![]))
+            } else {
+                Some(Json::parse(&req.body).map_err(|e| {
+                    Response::error(400, "invalid_json", format!("invalid JSON body: {e}"))
+                })?)
+            }
+        } else {
+            None
+        };
+        Ok(RequestParams { req, body })
+    }
+
+    /// The parsed POST body, when this request has one.
+    fn body(&self) -> Option<&Json> {
+        self.body.as_ref()
+    }
+
+    /// True when the request used the deprecated GET+query form.
+    fn deprecated_alias(&self) -> bool {
+        self.body.is_none()
+    }
+
+    /// One parameter as a string from whichever source this request
+    /// uses. Body values may be JSON strings or booleans; anything
+    /// else is a typed `invalid_param` error.
+    fn get(&self, key: &str) -> Result<Option<String>, Response> {
+        let Some(body) = &self.body else {
+            return Ok(self.req.param(key).map(str::to_string));
+        };
+        match body.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(Json::Str(s)) => Ok(Some(s.clone())),
+            Some(Json::Bool(b)) => Ok(Some(b.to_string())),
+            Some(other) => Err(Response::error(
+                400,
+                "invalid_param",
+                format!("\"{key}\" must be a string or boolean, got {other}"),
+            )),
+        }
+    }
+
+    /// The `backend` parameter (default `auto`), parsed but not yet
+    /// resolved — resolution happens at the cache-key seam so `auto`
+    /// and its resolution always share a content address.
+    fn backend(&self) -> Result<BackendKind, Response> {
+        let name = self.get("backend")?;
+        BackendKind::parse(name.as_deref().unwrap_or("auto"))
+            .map_err(|e| Response::error(400, "invalid_backend", format!("{e:#}")))
+    }
+
+    /// The `device` parameter (default `a100`), resolved against the
+    /// registry.
+    fn device(&self) -> Result<Device, Response> {
+        let name = self.get("device")?;
+        let name = name.as_deref().unwrap_or("a100");
+        device::by_name(name).ok_or_else(|| {
+            Response::error(
+                404,
+                "unknown_device",
+                format!("unknown device {name:?}; see /v1/devices"),
+            )
+        })
+    }
+}
+
+/// Add the `Deprecation` header when the request came in through the
+/// GET+query alias.
+fn deprecate(response: Response, params: &RequestParams) -> Response {
+    if params.deprecated_alias() {
+        response.with_header("Deprecation", "true")
+    } else {
+        response
+    }
+}
+
+fn method_not_allowed(method: &str, hint: &str) -> Response {
+    Response::error(405, "method_not_allowed", format!("method {method} not allowed; {hint}"))
 }
 
 fn endpoint_label(path: &str) -> &'static str {
@@ -64,62 +177,44 @@ pub fn handle(state: &AppState, req: &Request) -> Response {
 }
 
 fn route(state: &AppState, req: &Request) -> Response {
-    if req.path == "/v1/plan" {
-        if req.method != "POST" {
-            return Response::error(
-                405,
-                format!(
-                    "method {} not allowed; /v1/plan takes a POST with a JSON BenchPlan body",
-                    req.method
-                ),
-            );
+    match dispatch(state, req) {
+        Ok(r) | Err(r) => r,
+    }
+}
+
+fn dispatch(state: &AppState, req: &Request) -> Result<Response, Response> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/plan") => plan(state, req),
+        (m, "/v1/plan") => Err(method_not_allowed(m, "/v1/plan takes a POST with a JSON body")),
+        ("POST", "/v1/lint") => lint(state, req),
+        (m, "/v1/lint") => Err(method_not_allowed(m, "/v1/lint takes a POST with a JSON body")),
+        ("GET" | "POST", "/v1/sweep") => sweep(state, req),
+        (m, "/v1/sweep") => {
+            Err(method_not_allowed(m, "/v1/sweep takes a POST body (or the deprecated GET form)"))
         }
-        return plan(state, req);
-    }
-    if req.path == "/v1/lint" {
-        if req.method != "POST" {
-            return Response::error(
-                405,
-                format!(
-                    "method {} not allowed; /v1/lint takes a POST with a JSON BenchPlan body",
-                    req.method
-                ),
-            );
+        ("GET", "/healthz") => Ok(healthz()),
+        ("GET", "/v1/experiments") => Ok(experiments(state)),
+        ("GET", "/v1/devices") => Ok(devices()),
+        ("GET", "/v1/metrics") => Ok(metrics(state)),
+        ("GET", "/metrics") => Ok(prometheus(state)),
+        ("GET" | "POST", p) if p.starts_with("/v1/run/") => {
+            run(state, req, &p["/v1/run/".len()..])
         }
-        return lint(state, req);
-    }
-    if req.method != "GET" {
-        return Response::error(
-            405,
-            format!(
-                "method {} not allowed; this API is GET-only (except POST /v1/plan \
-                 and /v1/lint)",
-                req.method
-            ),
-        );
-    }
-    match req.path.as_str() {
-        "/healthz" => healthz(),
-        "/v1/experiments" => experiments(state),
-        "/v1/devices" => devices(),
-        "/v1/metrics" => metrics(state),
-        "/metrics" => prometheus(state),
-        "/v1/sweep" => sweep(state, req),
-        p if p.starts_with("/v1/run/") => run(state, req, &p["/v1/run/".len()..]),
-        other => Response::error(404, format!("no route for {other:?}")),
+        (m, p) if p.starts_with("/v1/run/") => {
+            Err(method_not_allowed(m, "/v1/run takes a POST body (or the deprecated GET form)"))
+        }
+        ("GET", other) => Err(Response::error(404, "not_found", format!("no route for {other:?}"))),
+        (m, _) => Err(method_not_allowed(m, "this API serves GET and POST only")),
     }
 }
 
 fn healthz() -> Response {
-    Response::json(
-        200,
-        &Json::obj(vec![
-            ("status", Json::str("ok")),
-            ("service", Json::str("tcserved")),
-            ("version", Json::str(env!("CARGO_PKG_VERSION"))),
-            ("experiments", Json::num(EXPERIMENTS.len() as f64)),
-        ]),
-    )
+    Response::ok(Json::obj(vec![
+        ("status", Json::str("ok")),
+        ("service", Json::str("tcserved")),
+        ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+        ("experiments", Json::num(EXPERIMENTS.len() as f64)),
+    ]))
 }
 
 fn experiments(state: &AppState) -> Response {
@@ -139,13 +234,10 @@ fn experiments(state: &AppState) -> Response {
             ])
         })
         .collect();
-    Response::json(
-        200,
-        &Json::obj(vec![
-            ("count", Json::num(EXPERIMENTS.len() as f64)),
-            ("experiments", Json::Arr(list)),
-        ]),
-    )
+    Response::ok(Json::obj(vec![
+        ("count", Json::num(EXPERIMENTS.len() as f64)),
+        ("experiments", Json::Arr(list)),
+    ]))
 }
 
 fn devices() -> Response {
@@ -164,22 +256,24 @@ fn devices() -> Response {
             ])
         })
         .collect();
-    Response::json(200, &Json::obj(vec![("devices", Json::Arr(list))]))
+    Response::ok(Json::obj(vec![("devices", Json::Arr(list))]))
 }
 
 fn metrics(state: &AppState) -> Response {
-    Response::json(200, &state.metrics.to_json(state.cache.stats()))
+    let mut json = state.metrics.to_json(state.cache.stats());
+    if let Json::Obj(fields) = &mut json {
+        fields.insert("shards".to_string(), state.shards.to_json());
+    }
+    Response::ok(json)
 }
 
 /// `GET /metrics` — every counter, gauge and histogram in the
 /// Prometheus text exposition format (the same values `/v1/metrics`
 /// reports as JSON, so the two always agree).
 fn prometheus(state: &AppState) -> Response {
-    Response {
-        status: 200,
-        content_type: "text/plain; version=0.0.4",
-        body: state.metrics.to_prometheus(state.cache.stats()),
-    }
+    let mut body = state.metrics.to_prometheus(state.cache.stats());
+    body.push_str(&state.shards.to_prometheus());
+    Response::text(200, "text/plain; version=0.0.4", body)
 }
 
 fn note_origin(state: &AppState, origin: Origin) {
@@ -197,43 +291,43 @@ fn respond_cached(
     state: &AppState,
     result: Result<String, String>,
     origin: Origin,
-) -> Response {
+) -> Result<Response, Response> {
     match result {
         Ok(body) => {
             let t0 = Instant::now();
             let inner = Json::parse(&body).unwrap_or(Json::Str(body));
-            let response = Response::json(
-                200,
-                &Json::obj(vec![
-                    ("cached", Json::Bool(origin != Origin::Computed)),
-                    ("origin", Json::str(origin.name())),
-                    ("result", inner),
-                ]),
-            );
+            let response = Response::ok(Json::obj(vec![
+                ("cached", Json::Bool(origin != Origin::Computed)),
+                ("origin", Json::str(origin.name())),
+                ("result", inner),
+            ]));
             state.metrics.record_phase("render", t0.elapsed().as_micros() as u64);
-            response
+            Ok(response)
         }
-        Err(e) => Response::error(500, e),
+        Err(e) => Err(Response::error(500, "internal", e)),
     }
 }
 
 // ------------------------------------------------------------ /v1/run/<id>
 
-fn run(state: &AppState, req: &Request, id: &str) -> Response {
+/// `/v1/run/<id>` — POST `{"backend": ...}` (or the deprecated
+/// `GET ?backend=` alias). Both forms parse through [`RequestParams`]
+/// and key the cache by the *resolved* backend, so `auto` and its
+/// resolution always share one entry.
+fn run(state: &AppState, req: &Request, id: &str) -> Result<Response, Response> {
+    let params = RequestParams::parse(req)?;
     let Some(exp) = coordinator::experiment(id) else {
-        return Response::error(
+        return Err(Response::error(
             404,
+            "unknown_experiment",
             format!("unknown experiment {id:?}; see /v1/experiments for the registry"),
-        );
+        ));
     };
     // default matches the CLI: `auto` (pjrt when artifacts exist, else
     // native); the cache key uses whatever it resolves to
-    let kind = match BackendKind::parse(req.param("backend").unwrap_or("auto")) {
-        Ok(k) => k,
-        Err(e) => return Response::error(400, format!("{e:#}")),
-    };
+    let kind = params.backend()?;
     let (result, origin) = run_cached(state, exp, kind);
-    respond_cached(state, result, origin)
+    respond_cached(state, result, origin).map(|r| deprecate(r, &params))
 }
 
 /// Cached execution of one experiment — shared by the HTTP handler and
@@ -309,40 +403,45 @@ pub fn warm(state: &AppState, threads: usize) -> usize {
 
 // ---------------------------------------------------------------- /v1/sweep
 
-/// `GET /v1/sweep?device=&instr=&sparse=` — a thin translator onto the
-/// workload layer: the `instr` parameter accepts any [`Workload`] spec
-/// (legacy mma specs included), the sweep runs as a one-unit
-/// [`BenchPlan`] on the simulator runner.
-fn sweep(state: &AppState, req: &Request) -> Response {
-    let dev_name = req.param("device").unwrap_or("a100");
-    let Some(dev) = device::by_name(dev_name) else {
-        return Response::error(404, format!("unknown device {dev_name:?}; see /v1/devices"));
+/// `/v1/sweep` — a thin translator onto the workload layer. POST a
+/// JSON body (`{"instr": ..., "device": ..., "sparse": ...,
+/// "backend": ...}`; `workload` is accepted as an alias for `instr`,
+/// mirroring `/v1/plan`), or GET with the same names as query
+/// parameters (the deprecated alias). The `instr` value accepts any
+/// [`Workload`] spec (legacy mma specs included); the sweep runs as a
+/// one-unit [`BenchPlan`] on the resolved backend's runner.
+fn sweep(state: &AppState, req: &Request) -> Result<Response, Response> {
+    let params = RequestParams::parse(req)?;
+    let dev = params.device()?;
+    let spec = match params.get("instr")? {
+        Some(s) => Some(s),
+        None => params.get("workload")?,
     };
-    let Some(spec) = req.param("instr") else {
-        return Response::error(
+    let Some(spec) = spec else {
+        return Err(Response::error(
             400,
-            "missing required query parameter `instr` (e.g. ?instr=bf16,f32,m16n8k16 \
-             or ?instr=ldmatrix,x4)",
-        );
+            "invalid_param",
+            "missing required parameter `instr` (a workload spec, e.g. bf16,f32,m16n8k16 \
+             or ldmatrix,x4)",
+        ));
     };
-    let parsed = match Workload::parse_spec(spec) {
-        Ok(w) => w,
-        Err(e) => return Response::error(400, e),
-    };
-    let sparse = match req.param("sparse") {
+    let parsed =
+        Workload::parse_spec(&spec).map_err(|e| Response::error(400, "invalid_plan", e))?;
+    let sparse = match params.get("sparse")?.as_deref() {
         None => None,
         Some("1") | Some("true") | Some("yes") => Some(true),
         Some("0") | Some("false") | Some("no") => Some(false),
         Some(other) => {
-            return Response::error(400, format!("bad sparse flag {other:?} (true|false)"))
+            return Err(Response::error(
+                400,
+                "invalid_param",
+                format!("bad sparse flag {other:?} (true|false)"),
+            ))
         }
     };
     let load = match (sparse, parsed) {
         (None, w) => w,
-        (
-            Some(sparse),
-            Workload::Mma { ab, cd, shape } | Workload::MmaSp { ab, cd, shape },
-        ) => {
+        (Some(sparse), Workload::Mma { ab, cd, shape } | Workload::MmaSp { ab, cd, shape }) => {
             if sparse {
                 Workload::MmaSp { ab, cd, shape }
             } else {
@@ -350,29 +449,37 @@ fn sweep(state: &AppState, req: &Request) -> Response {
             }
         }
         (Some(_), w) => {
-            return Response::error(
+            return Err(Response::error(
                 400,
+                "invalid_param",
                 format!("the sparse flag only applies to mma workloads, not {}", w.kind()),
-            )
+            ))
         }
     };
-    let plan = match Plan::new(load).device(dev.name).sweep().compile() {
-        Ok(p) => p,
-        Err(e) => return Response::error(400, e),
-    };
+    // the same backend seam as /v1/run and /v1/plan: parsed here,
+    // resolved by runner_for, keyed by the runner's name
+    let kind = params.backend()?;
+    let runner = workload::runner_for(kind).map_err(|e| Response::error(500, "internal", e))?;
+    let plan = Plan::new(load)
+        .device(dev.name)
+        .sweep()
+        .compile()
+        .map_err(|e| Response::error(400, "invalid_plan", e))?;
     // shared content address with the sweep unit of POST /v1/plan: a
     // plan that already swept this workload makes this a cache hit (and
     // vice versa) — the request-specific envelope (device, workload,
     // ptx, …) is added outside the cached payload
-    let (result, origin) = unit_cached(state, &plan, UnitKind::Sweep, &SimRunner, "sweep");
-    let body = match result {
-        Ok(body) => body,
-        Err(e) => return Response::error(500, e),
-    };
+    let (result, origin) = unit_cached(state, &plan, UnitKind::Sweep, runner.as_ref(), "sweep");
+    let body = result.map_err(|e| Response::error(500, "internal", e))?;
     let Ok(Json::Obj(mut fields)) = Json::parse(&body) else {
-        return Response::error(500, format!("corrupt cached sweep payload for {load}"));
+        return Err(Response::error(
+            500,
+            "internal",
+            format!("corrupt cached sweep payload for {load}"),
+        ));
     };
     fields.insert("device".to_string(), Json::str(plan.device.name));
+    fields.insert("backend".to_string(), Json::str(runner.name()));
     fields.insert("workload".to_string(), Json::Str(plan.workload.to_spec()));
     fields.insert("instr".to_string(), Json::Str(plan.workload.to_string()));
     if let Some(instr) = plan.workload.mma_instr() {
@@ -380,16 +487,13 @@ fn sweep(state: &AppState, req: &Request) -> Response {
         fields.insert("sparse".to_string(), Json::Bool(instr.sparse));
     }
     let t0 = Instant::now();
-    let response = Response::json(
-        200,
-        &Json::obj(vec![
-            ("cached", Json::Bool(origin != Origin::Computed)),
-            ("origin", Json::str(origin.name())),
-            ("result", Json::Obj(fields)),
-        ]),
-    );
+    let response = Response::ok(Json::obj(vec![
+        ("cached", Json::Bool(origin != Origin::Computed)),
+        ("origin", Json::str(origin.name())),
+        ("result", Json::Obj(fields)),
+    ]));
     state.metrics.record_phase("render", t0.elapsed().as_micros() as u64);
-    response
+    Ok(deprecate(response, &params))
 }
 
 // ----------------------------------------------------------------- /v1/plan
@@ -399,37 +503,14 @@ fn sweep(state: &AppState, req: &Request) -> Response {
 /// token carries all workload parameters and the exec point), so the
 /// cache and single-flight machinery apply per workload unit and plans
 /// sharing units share work.
-fn plan(state: &AppState, req: &Request) -> Response {
-    let body = match Json::parse(&req.body) {
-        Ok(j) => j,
-        Err(e) => return Response::error(400, format!("invalid JSON body: {e}")),
-    };
-    let plan = match Plan::from_json(&body) {
-        Ok(p) => p,
-        Err(e) => return Response::error(400, e),
-    };
-    let backend_name = match body.get("backend") {
-        None => "auto",
-        Some(Json::Str(s)) => s.as_str(),
-        Some(other) => {
-            return Response::error(
-                400,
-                format!("\"backend\" must be a string (native|pjrt|auto), got {other}"),
-            )
-        }
-    };
-    let kind = match BackendKind::parse(backend_name) {
-        Ok(k) => k,
-        Err(e) => return Response::error(400, format!("{e:#}")),
-    };
-    let runner = match workload::runner_for(kind) {
-        Ok(r) => r,
-        Err(e) => return Response::error(500, e),
-    };
-    let bench = match plan.compile() {
-        Ok(b) => b,
-        Err(e) => return Response::error(400, e),
-    };
+fn plan(state: &AppState, req: &Request) -> Result<Response, Response> {
+    let params = RequestParams::parse(req)?;
+    let empty = Json::obj(vec![]);
+    let body = params.body().unwrap_or(&empty);
+    let plan = Plan::from_json(body).map_err(|e| Response::error(400, "invalid_plan", e))?;
+    let kind = params.backend()?;
+    let runner = workload::runner_for(kind).map_err(|e| Response::error(500, "internal", e))?;
+    let bench = plan.compile().map_err(|e| Response::error(400, "invalid_plan", e))?;
 
     let bench_ref = &bench;
     let runner_ref: &dyn Runner = runner.as_ref();
@@ -445,7 +526,7 @@ fn plan(state: &AppState, req: &Request) -> Response {
     for (unit, (result, origin)) in bench.units.iter().zip(outcomes) {
         let body = match result {
             Ok(body) => body,
-            Err(e) => return Response::error(500, e),
+            Err(e) => return Err(Response::error(500, "internal", e)),
         };
         all_cached &= origin != Origin::Computed;
         units.push(Json::obj(vec![
@@ -456,19 +537,16 @@ fn plan(state: &AppState, req: &Request) -> Response {
         ]));
     }
     let t0 = Instant::now();
-    let response = Response::json(
-        200,
-        &Json::obj(vec![
-            ("workload", Json::Str(bench.workload.to_spec())),
-            ("device", Json::str(bench.device.name)),
-            ("backend", Json::str(runner.name())),
-            ("cached", Json::Bool(all_cached)),
-            ("count", Json::num(units.len() as f64)),
-            ("units", Json::Arr(units)),
-        ]),
-    );
+    let response = Response::ok(Json::obj(vec![
+        ("workload", Json::Str(bench.workload.to_spec())),
+        ("device", Json::str(bench.device.name)),
+        ("backend", Json::str(runner.name())),
+        ("cached", Json::Bool(all_cached)),
+        ("count", Json::num(units.len() as f64)),
+        ("units", Json::Arr(units)),
+    ]));
     state.metrics.record_phase("render", t0.elapsed().as_micros() as u64);
-    response
+    Ok(response)
 }
 
 // ----------------------------------------------------------------- /v1/lint
@@ -476,43 +554,43 @@ fn plan(state: &AppState, req: &Request) -> Response {
 /// `POST /v1/lint` — static analysis only. The body is the same JSON
 /// [`Plan`] form `/v1/plan` takes; the response is the tclint
 /// diagnostics over every warp program the plan would simulate, without
-/// running any simulation. Status is 400 when any Error-severity
-/// diagnostic fires (the program set is structurally broken), 200
-/// otherwise (clean or warnings only).
-fn lint(state: &AppState, req: &Request) -> Response {
-    let body = match Json::parse(&req.body) {
-        Ok(j) => j,
-        Err(e) => return Response::error(400, format!("invalid JSON body: {e}")),
-    };
-    let plan = match Plan::from_json(&body) {
-        Ok(p) => p,
-        Err(e) => return Response::error(400, e),
-    };
-    let bench = match plan.compile() {
-        Ok(b) => b,
-        Err(e) => return Response::error(400, e),
-    };
+/// running any simulation. When any Error-severity diagnostic fires the
+/// response is a 400 `lint_errors` envelope carrying the full
+/// diagnostics as `error.details`; clean (or warnings-only) plans get a
+/// 200 data envelope.
+fn lint(state: &AppState, req: &Request) -> Result<Response, Response> {
+    let params = RequestParams::parse(req)?;
+    let empty = Json::obj(vec![]);
+    let body = params.body().unwrap_or(&empty);
+    let plan = Plan::from_json(body).map_err(|e| Response::error(400, "invalid_plan", e))?;
+    let bench = plan.compile().map_err(|e| Response::error(400, "invalid_plan", e))?;
     let t0 = Instant::now();
     let records = bench.lint();
     state.metrics.record_phase("lint", t0.elapsed().as_micros() as u64);
     let errors = records.iter().filter(|r| r.is_error()).count();
     let warnings = records.len() - errors;
     state.metrics.record_lint(errors as u64, warnings as u64);
-    let status = if errors > 0 { 400 } else { 200 };
-    Response::json(
-        status,
-        &Json::obj(vec![
-            ("workload", Json::Str(bench.workload.to_spec())),
-            ("device", Json::str(bench.device.name)),
-            ("errors", Json::num(errors as f64)),
-            ("warnings", Json::num(warnings as f64)),
-            ("diagnostics", report::lint_records_to_json(&records)),
-        ]),
-    )
+    let payload = Json::obj(vec![
+        ("workload", Json::Str(bench.workload.to_spec())),
+        ("device", Json::str(bench.device.name)),
+        ("errors", Json::num(errors as f64)),
+        ("warnings", Json::num(warnings as f64)),
+        ("diagnostics", report::lint_records_to_json(&records)),
+    ]);
+    if errors > 0 {
+        return Err(Response::error_with_details(
+            400,
+            "lint_errors",
+            format!("{errors} lint error(s); see error.details.diagnostics"),
+            Some(payload),
+        ));
+    }
+    Ok(Response::ok(payload))
 }
 
 /// Cached execution of one plan unit (content-addressed by the unit
-/// token, which includes every workload parameter). `metrics_label`
+/// token, which includes every workload parameter), executed under the
+/// gate of the shard owning its content address. `metrics_label`
 /// attributes the compute time to the endpoint that paid for it
 /// (`"plan"` or `"sweep"`) in `/v1/metrics`.
 fn unit_cached(
@@ -523,15 +601,18 @@ fn unit_cached(
     metrics_label: &'static str,
 ) -> (Result<String, String>, Origin) {
     let key = cache_key("plan", runner.name(), bench.device.name, &bench.unit_token(&unit));
-    let t0 = Instant::now();
-    let (result, origin) = state
-        .cache
-        .get_or_compute(&key, || compute_unit(state, bench, unit, runner, &key, metrics_label));
-    if origin != Origin::Computed {
-        state.metrics.record_phase("cache_lookup", t0.elapsed().as_micros() as u64);
-    }
-    note_origin(state, origin);
-    (result, origin)
+    let canonical = key.canonical.clone();
+    state.shards.run_on(&canonical, || {
+        let t0 = Instant::now();
+        let (result, origin) = state
+            .cache
+            .get_or_compute(&key, || compute_unit(state, bench, unit, runner, &key, metrics_label));
+        if origin != Origin::Computed {
+            state.metrics.record_phase("cache_lookup", t0.elapsed().as_micros() as u64);
+        }
+        note_origin(state, origin);
+        (result, origin)
+    })
 }
 
 fn compute_unit(
@@ -609,15 +690,35 @@ mod tests {
         handle(state, &req)
     }
 
+    /// Unwrap the success envelope, pinning its shape.
+    fn data(r: &Response) -> Json {
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get_str("schema"), Some("tcserved/v1"), "{}", r.body);
+        assert!(j.get("error").is_none(), "unexpected error envelope: {}", r.body);
+        j.get("data").cloned().unwrap_or_else(|| panic!("no data field in {}", r.body))
+    }
+
+    /// Unwrap the error envelope, pinning its shape.
+    fn error_of(r: &Response) -> Json {
+        let j = Json::parse(&r.body).unwrap();
+        assert_eq!(j.get_str("schema"), Some("tcserved/v1"), "{}", r.body);
+        assert!(j.get("data").is_none(), "unexpected data envelope: {}", r.body);
+        j.get("error").cloned().unwrap_or_else(|| panic!("no error field in {}", r.body))
+    }
+
+    fn is_deprecated(r: &Response) -> bool {
+        r.headers.iter().any(|(n, v)| *n == "Deprecation" && v == "true")
+    }
+
     #[test]
     fn healthz_and_registry_endpoints() {
         let s = state();
         let r = get(&s, "/healthz");
         assert_eq!(r.status, 200);
-        assert_eq!(Json::parse(&r.body).unwrap().get_str("status"), Some("ok"));
+        assert_eq!(data(&r).get_str("status"), Some("ok"));
 
         let r = get(&s, "/v1/experiments");
-        let j = Json::parse(&r.body).unwrap();
+        let j = data(&r);
         assert_eq!(j.get_u64("count"), Some(19));
         assert_eq!(
             j.get("experiments").unwrap().as_arr().unwrap()[2].get_str("id"),
@@ -625,7 +726,7 @@ mod tests {
         );
 
         let r = get(&s, "/v1/devices");
-        let j = Json::parse(&r.body).unwrap();
+        let j = data(&r);
         let devices = j.get("devices").unwrap().as_arr().unwrap();
         assert_eq!(devices.len(), 4);
         // the projected Hopper target is addressable and fp8-capable
@@ -634,6 +735,43 @@ mod tests {
             .find(|d| d.get_str("name") == Some("hopper-projected"))
             .expect("hopper-projected registered");
         assert_eq!(hopper.get("supports_fp8").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn every_endpoint_answers_in_the_versioned_envelope() {
+        let s = state();
+        // success envelopes: schema + data, no error
+        for target in ["/healthz", "/v1/experiments", "/v1/devices", "/v1/metrics"] {
+            let r = get(&s, target);
+            assert_eq!(r.status, 200, "{target}");
+            data(&r);
+        }
+        // error envelopes: schema + typed code + message + status
+        for (target, status, code) in [
+            ("/nope", 404, "not_found"),
+            ("/v1/run/t99", 404, "unknown_experiment"),
+            ("/v1/sweep?device=h100&instr=ldmatrix,x1", 404, "unknown_device"),
+            ("/v1/sweep", 400, "invalid_param"),
+            ("/v1/sweep?instr=garbage", 400, "invalid_plan"),
+            ("/v1/run/t10?backend=cuda", 400, "invalid_backend"),
+        ] {
+            let r = get(&s, target);
+            assert_eq!(r.status, status, "{target}: {}", r.body);
+            let e = error_of(&r);
+            assert_eq!(e.get_str("code"), Some(code), "{target}: {}", r.body);
+            assert!(e.get_str("message").is_some(), "{target}");
+            assert_eq!(e.get_u64("status"), Some(status as u64), "{target}");
+        }
+        // typed codes on POST bodies too
+        let r = post(&s, "/v1/plan", "{not json");
+        assert_eq!(error_of(&r).get_str("code"), Some("invalid_json"));
+        let r = post(&s, "/healthz", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(error_of(&r).get_str("code"), Some("method_not_allowed"));
+        // the Prometheus text exposition is the one deliberate exception
+        let r = get(&s, "/metrics");
+        assert!(r.content_type.starts_with("text/plain"), "{}", r.content_type);
+        assert!(!r.body.contains("tcserved/v1"));
     }
 
     #[test]
@@ -651,25 +789,75 @@ mod tests {
         let s = state();
         let r1 = get(&s, "/v1/run/t10");
         assert_eq!(r1.status, 200, "{}", r1.body);
-        let j1 = Json::parse(&r1.body).unwrap();
+        let j1 = data(&r1);
         assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
         assert_eq!(j1.get("result").unwrap().get_str("id"), Some("t10"));
 
         let r2 = get(&s, "/v1/run/t10");
-        let j2 = Json::parse(&r2.body).unwrap();
+        let j2 = data(&r2);
         assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
         assert_eq!(j2.get_str("origin"), Some("memory"));
 
         // `auto` resolves to native here (no PJRT offline), so it shares
         // the native content address and hits the same cache entry
         let r3 = get(&s, "/v1/run/t10?backend=auto");
-        let j3 = Json::parse(&r3.body).unwrap();
+        let j3 = data(&r3);
         assert_eq!(j3.get("cached").and_then(Json::as_bool), Some(true));
 
-        let m = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let m = data(&get(&s, "/v1/metrics"));
         let t10 = m.get("experiments").unwrap().get("t10").unwrap();
         assert_eq!(t10.get_u64("computes"), Some(1)); // auto coalesced onto native
         assert_eq!(m.get("cache").unwrap().get_u64("hits"), Some(2));
+    }
+
+    #[test]
+    fn run_post_body_and_get_query_share_the_resolved_backend_key() {
+        let s = state();
+        // explicit native via the deprecated GET alias...
+        let r = get(&s, "/v1/run/t10?backend=native");
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert!(is_deprecated(&r), "GET alias must answer Deprecation");
+        // ...then `auto` via the canonical POST body: resolves to
+        // native, shares the content address, pure cache hit
+        let r2 = post(&s, "/v1/run/t10", r#"{"backend":"auto"}"#);
+        assert_eq!(r2.status, 200, "{}", r2.body);
+        assert!(!is_deprecated(&r2), "POST form is canonical");
+        let j2 = data(&r2);
+        assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true), "{}", r2.body);
+        assert_eq!(j2.get_str("origin"), Some("memory"));
+        // an empty POST body is legal: all defaults (backend auto)
+        let r3 = post(&s, "/v1/run/t10", "");
+        assert_eq!(data(&r3).get("cached").and_then(Json::as_bool), Some(true), "{}", r3.body);
+    }
+
+    #[test]
+    fn sweep_accepts_post_bodies_and_deprecates_the_get_alias() {
+        let s = state();
+        let r = post(&s, "/v1/sweep", r#"{"instr":"ldmatrix x2","device":"a100"}"#);
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert!(!is_deprecated(&r));
+        let d = data(&r);
+        assert_eq!(d.get("result").unwrap().get_str("workload"), Some("ldmatrix x2"));
+        assert_eq!(d.get("result").unwrap().get_str("backend"), Some("sim"));
+
+        // the GET+query alias resolves identically — same content
+        // address, so the POSTed sweep is already cached — and answers
+        // with the Deprecation header
+        let r2 = get(&s, "/v1/sweep?device=a100&instr=ldmatrix,x2");
+        assert_eq!(r2.status, 200, "{}", r2.body);
+        assert!(is_deprecated(&r2), "{:?}", r2.headers);
+        assert_eq!(data(&r2).get("cached").and_then(Json::as_bool), Some(true), "{}", r2.body);
+
+        // `workload` is accepted as an alias for `instr` (mirroring
+        // /v1/plan), and `auto` shares the resolved backend's key
+        let r3 = post(&s, "/v1/sweep", r#"{"workload":"ldmatrix x2","backend":"auto"}"#);
+        assert_eq!(r3.status, 200, "{}", r3.body);
+        assert_eq!(data(&r3).get("cached").and_then(Json::as_bool), Some(true), "{}", r3.body);
+
+        // body params are typed
+        let r4 = post(&s, "/v1/sweep", r#"{"instr":"ldmatrix x2","backend":[1]}"#);
+        assert_eq!(r4.status, 400);
+        assert_eq!(error_of(&r4).get_str("code"), Some("invalid_param"));
     }
 
     #[test]
@@ -683,7 +871,7 @@ mod tests {
         // snapshot the JSON counters, then render Prometheus from the
         // same state (the /v1/metrics request itself bumps the counters,
         // so read the JSON response body, not a second scrape)
-        let json = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let json = data(&get(&s, "/v1/metrics"));
         let r = get(&s, "/metrics");
         assert_eq!(r.status, 200, "{}", r.body);
         assert_eq!(r.content_type, "text/plain; version=0.0.4");
@@ -720,6 +908,78 @@ mod tests {
     }
 
     #[test]
+    fn metrics_report_cell_store_and_shard_sections() {
+        let s = state();
+        let r = post(
+            &s,
+            "/v1/plan",
+            r#"{"workload":"ld.shared u32 4","device":"a100","points":[[1,1]],
+                "completion_latency":true,"backend":"native"}"#,
+        );
+        assert_eq!(r.status, 200, "{}", r.body);
+        let m = data(&get(&s, "/v1/metrics"));
+        // the cell_store section exists even with no store attached
+        // (enabled=false), so dashboards need no conditional scrape
+        let store = m.get("cell_store").expect("cell_store section");
+        assert!(store.get("enabled").and_then(Json::as_bool).is_some(), "{store}");
+        for field in ["hits", "misses", "writes", "corrupt"] {
+            assert!(store.get_u64(field).is_some(), "missing cell_store.{field}: {store}");
+        }
+        // the default router is one shard hosting everything; the two
+        // plan units above executed under its gate
+        let shards = m.get("shards").expect("shards section");
+        assert_eq!(shards.get_u64("replicas"), Some(1));
+        assert_eq!(shards.get_u64("forwarded_units"), Some(0));
+        let units = shards.get("units").unwrap().as_arr().unwrap();
+        assert_eq!(units.len(), 1);
+        assert_eq!(units[0].as_u64(), Some(2), "{shards}");
+        // and the Prometheus rendering carries the same series
+        let p = get(&s, "/metrics").body;
+        assert!(p.contains("tcserved_shard_units_total{shard=\"0\"} 2"), "{p}");
+        assert!(p.contains("tcserved_shard_forwarded_units_total 0"), "{p}");
+        assert!(p.contains("tcserved_cell_store_hits_total"), "{p}");
+    }
+
+    #[test]
+    fn multi_shard_router_partitions_units_and_counts_forwarding() {
+        let body = r#"{"workload":"ld.shared u32 4","device":"a100",
+                       "points":[[1,1],[2,1],[4,1],[8,1]],"backend":"native"}"#;
+        // one process hosting all three shards: units partition across
+        // the per-shard gates, nothing is foreign
+        let s = AppState::with_shards(ResultCache::new(32, None), ShardRouter::new(3, None, 4));
+        assert_eq!(post(&s, "/v1/plan", body).status, 200);
+        let shards = data(&get(&s, "/v1/metrics")).get("shards").cloned().unwrap();
+        assert_eq!(shards.get_u64("replicas"), Some(3));
+        assert_eq!(shards.get_u64("forwarded_units"), Some(0));
+        let units: Vec<u64> = shards
+            .get("units")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|u| u.as_u64().unwrap())
+            .collect();
+        assert_eq!(units.iter().sum::<u64>(), 4, "{shards}");
+
+        // the same traffic into a process that *is* shard 0 of the
+        // fleet: foreign-owned units are answered but counted forwarded
+        let s = AppState::with_shards(ResultCache::new(32, None), ShardRouter::new(3, Some(0), 4));
+        assert_eq!(post(&s, "/v1/plan", body).status, 200);
+        let shards = data(&get(&s, "/v1/metrics")).get("shards").cloned().unwrap();
+        assert_eq!(shards.get_u64("local"), Some(0));
+        let units: Vec<u64> = shards
+            .get("units")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|u| u.as_u64().unwrap())
+            .collect();
+        assert_eq!(units.iter().sum::<u64>(), 4);
+        assert_eq!(shards.get_u64("forwarded_units"), Some(units[1] + units[2]), "{shards}");
+    }
+
+    #[test]
     fn sweep_validation() {
         let s = state();
         assert_eq!(get(&s, "/v1/sweep").status, 400);
@@ -741,7 +1001,7 @@ mod tests {
         let s = state();
         let r = get(&s, "/v1/sweep?device=a100&instr=bf16,f32,m16n8k16");
         assert_eq!(r.status, 200, "{}", r.body);
-        let j = Json::parse(&r.body).unwrap();
+        let j = data(&r);
         let result = j.get("result").unwrap();
         assert_eq!(result.get_str("device"), Some("a100"));
         assert_eq!(result.get_str("workload"), Some("mma bf16 f32 m16n8k16"));
@@ -751,7 +1011,7 @@ mod tests {
         assert!((960.0..1030.0).contains(&peak), "peak {peak}");
 
         let r2 = get(&s, "/v1/sweep?device=a100&instr=bf16,f32,m16n8k16");
-        let j2 = Json::parse(&r2.body).unwrap();
+        let j2 = data(&r2);
         assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
     }
 
@@ -762,7 +1022,7 @@ mod tests {
         let s = state();
         let r = get(&s, "/v1/sweep?device=a100&instr=ldmatrix,x1");
         assert_eq!(r.status, 200, "{}", r.body);
-        let j = Json::parse(&r.body).unwrap();
+        let j = data(&r);
         assert_eq!(j.get("result").unwrap().get_str("workload"), Some("ldmatrix x1"));
         // sparse flag is mma-only
         assert_eq!(get(&s, "/v1/sweep?device=a100&instr=ldmatrix,x1&sparse=true").status, 400);
@@ -777,7 +1037,7 @@ mod tests {
         assert_eq!(r.status, 200, "{}", r.body);
         // ...and the sweep endpoint reuses it (same per-unit content address)
         let r2 = get(&s, "/v1/sweep?device=a100&instr=ldmatrix,x2");
-        let j2 = Json::parse(&r2.body).unwrap();
+        let j2 = data(&r2);
         assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true), "{}", r2.body);
         assert_eq!(
             j2.get("result").unwrap().get("cells").unwrap().as_arr().unwrap().len(),
@@ -792,7 +1052,7 @@ mod tests {
                        "points":[[1,1]],"completion_latency":true,"backend":"native"}"#;
         let r = post(&s, "/v1/plan", body);
         assert_eq!(r.status, 200, "{}", r.body);
-        let j = Json::parse(&r.body).unwrap();
+        let j = data(&r);
         assert_eq!(j.get_str("workload"), Some("ld.shared u32 4"));
         assert_eq!(j.get_str("backend"), Some("sim"));
         assert_eq!(j.get("cached").and_then(Json::as_bool), Some(false));
@@ -802,7 +1062,7 @@ mod tests {
 
         // identical plan: every unit is served from the cache
         let r2 = post(&s, "/v1/plan", body);
-        let j2 = Json::parse(&r2.body).unwrap();
+        let j2 = data(&r2);
         assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
         let units2 = j2.get("units").unwrap().as_arr().unwrap();
         assert!(units2.iter().all(|u| u.get("cached").and_then(Json::as_bool) == Some(true)));
@@ -812,7 +1072,7 @@ mod tests {
         let body_ilp2 = r#"{"workload":"ld.shared u32 4","device":"a100",
                             "points":[[1,2]],"backend":"native"}"#;
         let r3 = post(&s, "/v1/plan", body_ilp2);
-        let j3 = Json::parse(&r3.body).unwrap();
+        let j3 = data(&r3);
         let units3 = j3.get("units").unwrap().as_arr().unwrap();
         assert_eq!(units3[0].get_str("origin"), Some("computed"), "{}", r3.body);
     }
@@ -835,7 +1095,7 @@ mod tests {
             ExecPoint::new(4, 2),
             "sim"
         ));
-        let m = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let m = data(&get(&s, "/v1/metrics"));
         let hits_before = m.get("cell_cache").unwrap().get_u64("hits").unwrap();
 
         // …so the later point unit — a *miss* in the per-unit result
@@ -845,11 +1105,11 @@ mod tests {
                              "points":[[4,2]],"backend":"native"}"#;
         let r2 = post(&s, "/v1/plan", point_body);
         assert_eq!(r2.status, 200, "{}", r2.body);
-        let j2 = Json::parse(&r2.body).unwrap();
+        let j2 = data(&r2);
         let units = j2.get("units").unwrap().as_arr().unwrap();
         assert_eq!(units[0].get_str("origin"), Some("computed"), "{}", r2.body);
 
-        let m = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let m = data(&get(&s, "/v1/metrics"));
         let cells = m.get("cell_cache").unwrap();
         let hits_after = cells.get_u64("hits").unwrap();
         assert!(
@@ -867,7 +1127,7 @@ mod tests {
                        "points":[[8,2]],"backend":"native"}"#;
         let r = post(&s, "/v1/plan", body);
         assert_eq!(r.status, 200, "{}", r.body);
-        let j = Json::parse(&r.body).unwrap();
+        let j = data(&r);
         assert_eq!(j.get_str("workload"), Some("gemm pipeline bf16 f32 256 128x128x32"));
         let units = j.get("units").unwrap().as_arr().unwrap();
         assert_eq!(units.len(), 1);
@@ -878,8 +1138,9 @@ mod tests {
         let bad = r#"{"workload":"gemm pipeline bf16 f32 256 100x128x32","points":[[8,2]]}"#;
         let r = post(&s, "/v1/plan", bad);
         assert_eq!(r.status, 400, "{}", r.body);
-        let err = Json::parse(&r.body).unwrap();
-        assert!(err.get_str("error").unwrap().contains("tile_m"), "{}", r.body);
+        let err = error_of(&r);
+        assert_eq!(err.get_str("code"), Some("invalid_plan"));
+        assert!(err.get_str("message").unwrap().contains("tile_m"), "{}", r.body);
 
         // the sparse flag stays mma-only on the sweep translator
         let r = get(
@@ -897,7 +1158,7 @@ mod tests {
                        "backend":"native"}"#;
         let r = post(&s, "/v1/plan", body);
         assert_eq!(r.status, 200, "{}", r.body);
-        let j = Json::parse(&r.body).unwrap();
+        let j = data(&r);
         assert_eq!(j.get_str("workload"), Some("numeric profile fp16 f32 mul low"));
         let units = j.get("units").unwrap().as_arr().unwrap();
         let result = units[0].get("result").unwrap();
@@ -909,7 +1170,7 @@ mod tests {
         // the sweep route accepts numeric specs (chain-step x init grid)
         let r = get(&s, "/v1/sweep?device=a100&instr=numeric,chain,tf32,f32,5");
         assert_eq!(r.status, 200, "{}", r.body);
-        let j = Json::parse(&r.body).unwrap();
+        let j = data(&r);
         let result = j.get("result").unwrap();
         assert_eq!(result.get("cells").unwrap().as_arr().unwrap().len(), 10);
         assert_eq!(result.get_str("workload"), Some("numeric chain tf32 f32 5 low"));
@@ -939,7 +1200,7 @@ mod tests {
                         "points":[[4,3]],"sweep":true,"completion_latency":true}"#;
         let r = post(&s, "/v1/lint", clean);
         assert_eq!(r.status, 200, "{}", r.body);
-        let j = Json::parse(&r.body).unwrap();
+        let j = data(&r);
         assert_eq!(j.get_str("workload"), Some("mma bf16 f32 m16n8k16"));
         assert_eq!(j.get_str("device"), Some("a100"));
         assert_eq!(j.get_u64("errors"), Some(0));
@@ -949,14 +1210,17 @@ mod tests {
         // a 4-deep cp.async pipeline over 128x128x128 tiles keeps
         // 4 x 65536 B in flight — more shared memory than an A100 SM
         // has. The config is *legal* (compile succeeds; 16 k-steps
-        // cover 4 stages), but structurally broken: 400 + the rule id.
+        // cover 4 stages), but structurally broken: a 400 `lint_errors`
+        // envelope with the diagnostics as error.details.
         let overflow = r#"{"workload":"gemm pipeline bf16 f32 2048 128x128x128",
                            "device":"a100","points":[[8,4]]}"#;
         let r = post(&s, "/v1/lint", overflow);
         assert_eq!(r.status, 400, "{}", r.body);
-        let j = Json::parse(&r.body).unwrap();
-        assert!(j.get_u64("errors").unwrap() >= 1, "{}", r.body);
-        let diags = j.get("diagnostics").unwrap().as_arr().unwrap();
+        let e = error_of(&r);
+        assert_eq!(e.get_str("code"), Some("lint_errors"));
+        let details = e.get("details").expect("lint_errors carries details");
+        assert!(details.get_u64("errors").unwrap() >= 1, "{}", r.body);
+        let diags = details.get("diagnostics").unwrap().as_arr().unwrap();
         assert!(
             diags.iter().any(|d| d.get_str("rule") == Some("resource/smem-overflow")
                 && d.get_str("severity") == Some("error")),
@@ -970,7 +1234,7 @@ mod tests {
         assert_eq!(get(&s, "/v1/lint").status, 405);
 
         // the lint counters observed the error-producing request
-        let m = Json::parse(&get(&s, "/v1/metrics").body).unwrap();
+        let m = data(&get(&s, "/v1/metrics"));
         let lint = m.get("lint").unwrap();
         assert!(lint.get_u64("errors").unwrap() >= 1, "{m}");
         assert_eq!(m.get("by_endpoint").unwrap().get_u64("lint"), Some(5));
@@ -982,7 +1246,9 @@ mod tests {
         // malformed JSON
         let r = post(&s, "/v1/plan", "{not json");
         assert_eq!(r.status, 400);
-        assert!(Json::parse(&r.body).unwrap().get_str("error").unwrap().contains("JSON"));
+        let e = error_of(&r);
+        assert_eq!(e.get_str("code"), Some("invalid_json"));
+        assert!(e.get_str("message").unwrap().contains("JSON"));
         // schema violations and impossible plans
         for body in [
             r#"{}"#,

@@ -1,0 +1,301 @@
+//! Consistent-hash sharding of plan-unit work across replicas.
+//!
+//! The scaling model is N `tcserved` replicas over one shared
+//! [`CellStore`](crate::workload::CellStore) directory: each cell key's
+//! FNV-1a address — the same address the cell cache and store already
+//! use — places it on a consistent-hash ring, and the shard owning that
+//! ring segment is the replica meant to simulate it (everyone can
+//! *read* every cell from the shared store; ownership only partitions
+//! the cold-miss simulation work). Consistent hashing keeps the
+//! partition stable when the replica count changes: going from N to
+//! N+1 shards remaps only ~1/(N+1) of the keyspace instead of
+//! reshuffling everything, so a resized fleet keeps most of its warm
+//! ownership.
+//!
+//! Two deployment shapes share this module:
+//!
+//! * `repro serve --replicas N` — one process hosts all N shards. The
+//!   [`ShardRouter`] is the "thin in-process router": every unit is
+//!   executed under its owning shard's concurrency gate, so per-shard
+//!   load is observable at `/v1/metrics` before any process is split
+//!   out.
+//! * `repro serve --shard i/N` — this process *is* shard `i` of an
+//!   N-replica fleet. Units owned by other shards are still answered
+//!   (any replica can serve any request) but are counted as
+//!   `forwarded_units`: traffic a fronting balancer should have sent
+//!   elsewhere, and simulation work whose cell-store write the owning
+//!   replica would otherwise have produced.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::coordinator::default_threads;
+use crate::util::{fnv1a, Json};
+
+/// Virtual nodes per shard on the ring. 64 points per shard keeps the
+/// expected keyspace imbalance between shards in the low percents
+/// while the ring stays tiny (N*64 u64s, binary-searched).
+const VNODES: usize = 64;
+
+/// A consistent-hash ring over `replicas` shards.
+pub struct HashRing {
+    /// `(ring position, shard)`, sorted by position.
+    points: Vec<(u64, usize)>,
+    replicas: usize,
+}
+
+impl HashRing {
+    pub fn new(replicas: usize) -> HashRing {
+        let replicas = replicas.max(1);
+        let mut points: Vec<(u64, usize)> = (0..replicas)
+            .flat_map(|shard| {
+                (0..VNODES).map(move |v| (fnv1a(format!("shard:{shard}:{v}").as_bytes()), shard))
+            })
+            .collect();
+        points.sort_unstable();
+        HashRing { points, replicas }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// The shard owning a hash: the first ring point at or clockwise
+    /// after it, wrapping past the top of the u64 space.
+    pub fn owner(&self, hash: u64) -> usize {
+        let i = self.points.partition_point(|&(p, _)| p < hash);
+        self.points[i % self.points.len()].1
+    }
+
+    /// [`owner`](Self::owner) of a canonical cache key (hashed with the
+    /// same FNV-1a the cell cache and store key by).
+    pub fn owner_of(&self, canonical: &str) -> usize {
+        self.owner(fnv1a(canonical.as_bytes()))
+    }
+}
+
+/// One shard's concurrency gate plus its executed-unit counter. Same
+/// permit discipline as the simulation gate: acquire before running,
+/// return on drop (panic-safe), sleepers on a condvar.
+struct ShardGate {
+    permits: Mutex<usize>,
+    freed: Condvar,
+    units: AtomicU64,
+}
+
+impl ShardGate {
+    fn run<T>(&self, f: impl FnOnce() -> T) -> T {
+        struct Permit<'a>(&'a ShardGate);
+        impl Drop for Permit<'_> {
+            fn drop(&mut self) {
+                *self.0.permits.lock().unwrap() += 1;
+                self.0.freed.notify_one();
+            }
+        }
+        let mut permits = self.permits.lock().unwrap();
+        while *permits == 0 {
+            permits = self.freed.wait(permits).unwrap();
+        }
+        *permits -= 1;
+        drop(permits);
+        let _permit = Permit(self);
+        f()
+    }
+}
+
+/// Counter snapshot of a [`ShardRouter`] (the `/v1/metrics` `shards`
+/// section).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardStats {
+    pub replicas: usize,
+    /// `Some(i)` when this process is shard `i` of a multi-process
+    /// fleet (`--shard i/N`); `None` when it hosts every shard.
+    pub local: Option<usize>,
+    /// Units executed under each shard's gate, indexed by shard.
+    pub units: Vec<u64>,
+    /// Units owned by a non-local shard (always 0 when `local` is
+    /// `None`).
+    pub forwarded: u64,
+}
+
+/// Routes each unit of work to its owning shard's gate and keeps the
+/// per-shard accounting.
+pub struct ShardRouter {
+    ring: HashRing,
+    gates: Vec<ShardGate>,
+    local: Option<usize>,
+    forwarded: AtomicU64,
+}
+
+impl ShardRouter {
+    /// A router over `replicas` shards splitting `worker_budget`
+    /// concurrent-execution permits between them (at least one each).
+    /// `local` marks which shard this process is, if the fleet is
+    /// multi-process.
+    pub fn new(replicas: usize, local: Option<usize>, worker_budget: usize) -> ShardRouter {
+        let ring = HashRing::new(replicas);
+        let per_shard = worker_budget.div_ceil(ring.replicas()).max(1);
+        let gates = (0..ring.replicas())
+            .map(|_| ShardGate {
+                permits: Mutex::new(per_shard),
+                freed: Condvar::new(),
+                units: AtomicU64::new(0),
+            })
+            .collect();
+        ShardRouter {
+            ring,
+            gates,
+            local: local.filter(|&l| l < replicas),
+            forwarded: AtomicU64::new(0),
+        }
+    }
+
+    /// The degenerate single-shard router (a plain concurrency gate).
+    pub fn single() -> ShardRouter {
+        ShardRouter::new(1, None, default_threads())
+    }
+
+    /// Execute `f` under the gate of the shard owning `canonical`,
+    /// counting it (and whether it was owned elsewhere).
+    pub fn run_on<T>(&self, canonical: &str, f: impl FnOnce() -> T) -> T {
+        let shard = self.ring.owner_of(canonical);
+        if self.local.is_some_and(|local| local != shard) {
+            self.forwarded.fetch_add(1, Ordering::Relaxed);
+        }
+        let gate = &self.gates[shard];
+        gate.units.fetch_add(1, Ordering::Relaxed);
+        gate.run(f)
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        ShardStats {
+            replicas: self.ring.replicas(),
+            local: self.local,
+            units: self.gates.iter().map(|g| g.units.load(Ordering::Relaxed)).collect(),
+            forwarded: self.forwarded.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The `shards` section of `/v1/metrics`.
+    pub fn to_json(&self) -> Json {
+        let s = self.stats();
+        Json::obj(vec![
+            ("replicas", Json::num(s.replicas as f64)),
+            ("local", s.local.map_or(Json::Null, |l| Json::num(l as f64))),
+            ("forwarded_units", Json::num(s.forwarded as f64)),
+            ("units", Json::Arr(s.units.iter().map(|&u| Json::num(u as f64)).collect())),
+        ])
+    }
+
+    /// Prometheus text-exposition lines for the same counters.
+    pub fn to_prometheus(&self) -> String {
+        let s = self.stats();
+        let mut out = String::new();
+        out.push_str("# HELP tcserved_shard_units_total Units executed per owning shard.\n");
+        out.push_str("# TYPE tcserved_shard_units_total counter\n");
+        for (shard, units) in s.units.iter().enumerate() {
+            out.push_str(&format!("tcserved_shard_units_total{{shard=\"{shard}\"}} {units}\n"));
+        }
+        out.push_str(
+            "# HELP tcserved_shard_forwarded_units_total Units owned by a non-local shard.\n",
+        );
+        out.push_str("# TYPE tcserved_shard_forwarded_units_total counter\n");
+        out.push_str(&format!("tcserved_shard_forwarded_units_total {}\n", s.forwarded));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("cell|backend=sim|device=a100|spec=k{i}|w=4|i=2")).collect()
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_covers_every_shard() {
+        let a = HashRing::new(4);
+        let b = HashRing::new(4);
+        let mut per_shard = [0usize; 4];
+        for k in keys(2000) {
+            let owner = a.owner_of(&k);
+            assert_eq!(owner, b.owner_of(&k), "ring must be deterministic for {k}");
+            per_shard[owner] += 1;
+        }
+        // vnodes keep the split roughly balanced: every shard owns a
+        // real share of the keyspace
+        for (shard, &n) in per_shard.iter().enumerate() {
+            assert!(n > 200, "shard {shard} owns only {n}/2000 keys: {per_shard:?}");
+        }
+    }
+
+    #[test]
+    fn growing_the_ring_remaps_only_a_fraction_of_keys() {
+        let four = HashRing::new(4);
+        let five = HashRing::new(5);
+        let keys = keys(2000);
+        let moved = keys.iter().filter(|k| four.owner_of(k) != five.owner_of(k)).count();
+        // consistent hashing: ~1/5 of keys move to the new shard; far
+        // from the ~4/5 a modulo partition would reshuffle
+        assert!(moved > 0, "the new shard must take some keys");
+        assert!(moved < 2000 * 2 / 5, "{moved}/2000 keys moved — not a consistent ring");
+        // every key that moved, moved *to* the new shard
+        for k in &keys {
+            if four.owner_of(k) != five.owner_of(k) {
+                assert_eq!(five.owner_of(k), 4, "{k} moved between old shards");
+            }
+        }
+    }
+
+    #[test]
+    fn router_counts_per_shard_units_and_forwards() {
+        let router = ShardRouter::new(4, Some(1), 8);
+        let ring = HashRing::new(4);
+        let keys = keys(64);
+        let mut expect_forwarded = 0;
+        for k in &keys {
+            let owner = router.run_on(k, || ring.owner_of(k));
+            assert_eq!(owner, ring.owner_of(k));
+            if owner != 1 {
+                expect_forwarded += 1;
+            }
+        }
+        let s = router.stats();
+        assert_eq!(s.units.iter().sum::<u64>(), 64);
+        assert_eq!(s.forwarded, expect_forwarded);
+        assert_eq!((s.replicas, s.local), (4, Some(1)));
+        // the single-shard router forwards nothing and owns everything
+        let single = ShardRouter::single();
+        for k in &keys {
+            single.run_on(k, || ());
+        }
+        let s = single.stats();
+        assert_eq!((s.replicas, s.local, s.forwarded), (1, None, 0));
+        assert_eq!(s.units, vec![64]);
+    }
+
+    #[test]
+    fn gate_serializes_beyond_its_permit_budget() {
+        // 1 permit per shard: concurrent units on one shard's key must
+        // never overlap
+        let router = ShardRouter::new(1, None, 1);
+        let running = AtomicU64::new(0);
+        let peak = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..6 {
+                scope.spawn(|| {
+                    router.run_on("cell|same-key", || {
+                        let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        running.fetch_sub(1, Ordering::SeqCst);
+                    });
+                });
+            }
+        });
+        assert_eq!(peak.load(Ordering::SeqCst), 1);
+        let s = router.stats();
+        assert_eq!(s.units, vec![6]);
+    }
+}

@@ -35,15 +35,29 @@
 //! request-level stampedes that matter. Capacity is bounded per shard
 //! with oldest-use eviction, and hit/miss/eviction/simulation counters
 //! are exported at `/v1/metrics` (`cell_cache`).
+//!
+//! Below the in-memory cache sits the optional **disk-backed
+//! [`CellStore`]**: one JSON file per cell under a shared directory,
+//! named by the same FNV-1a address and written with the same atomic
+//! temp+rename discipline as tcserved's `results/cache/`. A memory miss
+//! consults the store before simulating and every simulation is written
+//! back, so warm state survives a process restart and is shared by
+//! every replica pointing at the same directory. The read path is
+//! corruption-tolerant — an unreadable, truncated or foreign file is a
+//! miss (recorded in the `corrupt` counter), never a panic — and f64s
+//! round-trip through their exact `to_bits()` hex encoding, so a cell
+//! served from the store is bit-identical to the simulation that
+//! produced it.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 
 use crate::coordinator::default_threads;
 use crate::microbench::Measurement;
 use crate::sim::{Profiler, SimProfile};
-use crate::util::fnv1a;
+use crate::util::{fnv1a, Json};
 
 use super::ExecPoint;
 
@@ -119,9 +133,135 @@ pub struct CellCacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
-    /// Simulations actually run (== misses unless two threads raced on
-    /// the same cold cell, in which case both simulate once).
+    /// Simulations actually run. Differs from `misses` when a memory
+    /// miss was filled from the disk store (no simulation) or when two
+    /// threads raced on the same cold cell (both simulate once).
     pub cells_simulated: u64,
+}
+
+/// Schema marker written into every cell file; a file claiming any
+/// other schema is treated as corrupt.
+const CELL_STORE_SCHEMA: &str = "tcbench/cell/v1";
+
+/// Traffic counters of a [`CellStore`], exported at `/v1/metrics`
+/// (`cell_store`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CellStoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub writes: u64,
+    /// Files that existed but failed to decode (unparsable JSON, wrong
+    /// schema, foreign canonical key, bad bit patterns). Each is also
+    /// counted as a miss.
+    pub corrupt: u64,
+}
+
+/// Disk-backed cell store shared across restarts and replicas.
+///
+/// Layout: one `<fnv1a hash:016x>.json` file per cell under `dir`,
+/// holding the full canonical key (verified on load, so an FNV
+/// collision on disk recomputes instead of serving the wrong cell),
+/// human-readable latency/throughput, and the exact `to_bits()` hex
+/// encodings that the read path decodes — bit-identity does not depend
+/// on decimal float formatting. Writes go to a pid-suffixed temp file
+/// renamed into place, so replicas sharing the directory never observe
+/// (or clobber each other with) half-written files.
+pub struct CellStore {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    writes: AtomicU64,
+    corrupt: AtomicU64,
+}
+
+impl CellStore {
+    /// A store rooted at `dir`. The directory is created lazily on the
+    /// first write; a missing directory reads as all-miss.
+    pub fn new(dir: impl Into<PathBuf>) -> CellStore {
+        CellStore {
+            dir: dir.into(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn cell_path(&self, hash: u64) -> PathBuf {
+        self.dir.join(format!("{hash:016x}.json"))
+    }
+
+    /// Load one cell, verifying the canonical key. Any failure — no
+    /// file, unreadable file, bad JSON, wrong schema, foreign key, bad
+    /// bit patterns — is a miss, never a panic.
+    pub fn load(&self, hash: u64, canonical: &str) -> Option<(f64, f64)> {
+        let text = match std::fs::read_to_string(self.cell_path(hash)) {
+            Ok(t) => t,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match Self::decode(&text, canonical) {
+            Some(cell) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(cell)
+            }
+            None => {
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn decode(text: &str, canonical: &str) -> Option<(f64, f64)> {
+        let json = Json::parse(text).ok()?;
+        if json.get_str("schema") != Some(CELL_STORE_SCHEMA)
+            || json.get_str("key") != Some(canonical)
+        {
+            return None;
+        }
+        let bits = |field: &str| u64::from_str_radix(json.get_str(field)?, 16).ok();
+        Some((f64::from_bits(bits("latency_bits")?), f64::from_bits(bits("throughput_bits")?)))
+    }
+
+    /// Persist one cell (best-effort: an unwritable directory degrades
+    /// the store to memory-only rather than failing the measurement).
+    pub fn save(&self, hash: u64, canonical: &str, latency: f64, throughput: f64) {
+        if std::fs::create_dir_all(&self.dir).is_err() {
+            return;
+        }
+        let body = Json::obj(vec![
+            ("schema", Json::str(CELL_STORE_SCHEMA)),
+            ("key", Json::str(canonical)),
+            ("latency", Json::num(latency)),
+            ("throughput", Json::num(throughput)),
+            ("latency_bits", Json::Str(format!("{:016x}", latency.to_bits()))),
+            ("throughput_bits", Json::Str(format!("{:016x}", throughput.to_bits()))),
+        ]);
+        let tmp = self.dir.join(format!("{hash:016x}.{}.tmp", std::process::id()));
+        if std::fs::write(&tmp, body.pretty().as_bytes()).is_ok()
+            && std::fs::rename(&tmp, self.cell_path(hash)).is_ok()
+        {
+            self.writes.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+
+    pub fn stats(&self) -> CellStoreStats {
+        CellStoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// Sharded, content-addressed cache of cell simulations.
@@ -133,6 +273,9 @@ pub struct CellCache {
     misses: AtomicU64,
     evictions: AtomicU64,
     simulated: AtomicU64,
+    /// Optional disk tier, configure-once (replica topology is fixed at
+    /// startup; swapping stores mid-flight would tear the counters).
+    store: OnceLock<CellStore>,
 }
 
 impl CellCache {
@@ -147,7 +290,19 @@ impl CellCache {
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             simulated: AtomicU64::new(0),
+            store: OnceLock::new(),
         }
+    }
+
+    /// Attach the disk tier. Configure-once: the first caller wins and
+    /// later calls return `false` (with the original store untouched).
+    pub fn attach_store(&self, store: CellStore) -> bool {
+        self.store.set(store).is_ok()
+    }
+
+    /// The attached disk tier, if any.
+    pub fn store(&self) -> Option<&CellStore> {
+        self.store.get()
     }
 
     /// The one process-wide instance every execution path reads through.
@@ -229,17 +384,45 @@ impl CellCache {
                 }
             }
         }
-        // Miss path: simulate outside the shard lock so a 32-warp cell
-        // does not serialize every other cell hashed into its shard,
-        // but inside the process-wide gate so nested pool fan-outs
-        // cannot run more CPU-bound simulations than the machine has
-        // cores.
+        // Memory miss. Consult the shared disk store first — profiled
+        // requests skip it (the store carries timing only, and a
+        // profile request must run the simulator anyway to attribute
+        // it), as do colliding keys (their slot belongs to another
+        // cell, in the store as in memory).
         self.misses.fetch_add(1, Ordering::Relaxed);
+        if !collision && !want_profile {
+            if let Some(store) = self.store.get() {
+                if let Some((latency, throughput)) = store.load(hash, &canonical) {
+                    let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+                    let mut map = shard.lock().unwrap();
+                    map.insert(
+                        hash,
+                        CellEntry {
+                            canonical,
+                            latency,
+                            throughput,
+                            profile: None,
+                            last_used: tick,
+                        },
+                    );
+                    self.evict_over_capacity(&mut map);
+                    let m = Measurement { warps: point.warps, ilp: point.ilp, latency, throughput };
+                    return (m, None);
+                }
+            }
+        }
+        // Simulate outside the shard lock so a 32-warp cell does not
+        // serialize every other cell hashed into its shard, but inside
+        // the process-wide gate so nested pool fan-outs cannot run more
+        // CPU-bound simulations than the machine has cores.
         self.simulated.fetch_add(1, Ordering::Relaxed);
         let mut profiler = if want_profile { Profiler::counting() } else { Profiler::Null };
         let m = SimGate::global().run(|| simulate(&mut profiler));
         let profile = profiler.take_profile();
         if !collision {
+            if let Some(store) = self.store.get() {
+                store.save(hash, &canonical, m.latency, m.throughput);
+            }
             let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
             let mut map = shard.lock().unwrap();
             map.insert(
@@ -252,17 +435,21 @@ impl CellCache {
                     last_used: tick,
                 },
             );
-            while map.len() > self.per_shard_capacity {
-                let oldest = map
-                    .iter()
-                    .min_by_key(|(_, e)| e.last_used)
-                    .map(|(k, _)| *k)
-                    .expect("non-empty shard");
-                map.remove(&oldest);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
-            }
+            self.evict_over_capacity(&mut map);
         }
         (m, profile)
+    }
+
+    fn evict_over_capacity(&self, map: &mut HashMap<u64, CellEntry>) {
+        while map.len() > self.per_shard_capacity {
+            let oldest = map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("non-empty shard");
+            map.remove(&oldest);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Is this cell currently memoized? Pure lookup: no counters, no
@@ -292,6 +479,13 @@ impl CellCache {
 /// `cell_cache` section).
 pub fn cell_cache_stats() -> CellCacheStats {
     CellCache::global().stats()
+}
+
+/// Counters of the disk store attached to the process-wide cache (the
+/// `/v1/metrics` `cell_store` section); `None` when the process serves
+/// purely from memory.
+pub fn cell_store_stats() -> Option<CellStoreStats> {
+    CellCache::global().store().map(CellStore::stats)
 }
 
 /// Run one uncacheable simulation under the process-wide gate — the
@@ -411,6 +605,103 @@ mod tests {
     fn global_cache_is_one_instance() {
         assert!(std::ptr::eq(CellCache::global(), CellCache::global()));
         assert!(CellCache::global().stats().capacity >= DEFAULT_CELL_CAPACITY);
+    }
+
+    /// Fresh scratch directory under the system temp dir (pid-scoped so
+    /// parallel `cargo test` invocations never share state).
+    fn scratch_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("tcbench_cell_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn store_round_trips_bit_identical_across_cache_instances() {
+        let dir = scratch_dir("roundtrip");
+        let p = ExecPoint::new(4, 2);
+        // a latency with no short decimal form: bit-identity must come
+        // from the hex bit encoding, not float formatting
+        let odd = f64::from_bits(0x3ff5_5555_5555_5555);
+        let a = CellCache::new(64);
+        assert!(a.attach_store(CellStore::new(&dir)));
+        assert!(!a.attach_store(CellStore::new(&dir)), "attach is configure-once");
+        let m = a.get_or_simulate("spec", "dev", p, "sim", || Measurement {
+            warps: 0,
+            ilp: 0,
+            latency: odd,
+            throughput: odd * 3.0,
+        });
+        assert_eq!(a.store().unwrap().stats().writes, 1);
+        // a second cache over the same directory — a restarted process,
+        // or another replica — serves the cell from the store without
+        // simulating, bit-identical
+        let b = CellCache::new(64);
+        assert!(b.attach_store(CellStore::new(&dir)));
+        let n = b.get_or_simulate("spec", "dev", p, "sim", || panic!("must not simulate"));
+        assert_eq!(n.latency.to_bits(), m.latency.to_bits());
+        assert_eq!(n.throughput.to_bits(), m.throughput.to_bits());
+        let s = b.stats();
+        assert_eq!((s.misses, s.cells_simulated, s.entries), (1, 0, 1));
+        let store = b.store().unwrap().stats();
+        assert_eq!((store.hits, store.misses, store.corrupt), (1, 0, 0));
+        // once filled from the store, repeats are pure memory hits
+        b.get_or_simulate("spec", "dev", p, "sim", || panic!("memory hit must not simulate"));
+        assert_eq!(b.stats().hits, 1);
+        assert_eq!(b.store().unwrap().stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_or_foreign_store_files_are_misses_not_panics() {
+        let dir = scratch_dir("corrupt");
+        let store = CellStore::new(&dir);
+        let canonical = CellCache::canonical_key("spec", "dev", ExecPoint::new(1, 1), "sim");
+        let hash = fnv1a(canonical.as_bytes());
+        // missing directory / missing file: plain miss
+        assert_eq!(store.load(hash, &canonical), None);
+        // truncated JSON: corrupt, not a panic
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(format!("{hash:016x}.json")), b"{\"schema\": \"tcbench/").unwrap();
+        assert_eq!(store.load(hash, &canonical), None);
+        // a well-formed file whose canonical key is another cell's (an
+        // FNV collision on disk): miss, never the wrong cell's numbers
+        store.save(hash, "cell|some-other-cell", 1.0, 2.0);
+        assert_eq!(store.load(hash, &canonical), None);
+        let s = store.stats();
+        assert_eq!((s.hits, s.writes), (0, 1));
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.corrupt, 2);
+        // the real cell then round-trips over the same slot
+        store.save(hash, &canonical, 32.5, 65.0);
+        let (lat, thr) = store.load(hash, &canonical).expect("round-trip");
+        assert_eq!((lat.to_bits(), thr.to_bits()), (32.5f64.to_bits(), 65.0f64.to_bits()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn profiled_requests_bypass_the_store_but_share_its_timing() {
+        let dir = scratch_dir("profiled");
+        let cache = CellCache::new(64);
+        assert!(cache.attach_store(CellStore::new(&dir)));
+        let p = ExecPoint::new(2, 1);
+        cache.get_or_simulate("spec", "dev", p, "sim", || fake(11.0));
+        // a fresh cache over the same store: a *profiled* request must
+        // re-simulate (the store holds timing only) — the store's
+        // counters stay untouched
+        let warm = CellCache::new(64);
+        assert!(warm.attach_store(CellStore::new(&dir)));
+        let (m, prof) = warm.get_or_simulate_profiled("spec", "dev", p, "sim", true, |profiler| {
+            profiler.begin(1);
+            profiler.account(&[crate::sim::Stall::Done], 4);
+            fake(11.0)
+        });
+        assert_eq!(m.latency.to_bits(), 11.0f64.to_bits());
+        assert!(prof.is_some());
+        let s = warm.store().unwrap().stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        // while the re-simulation refreshed the stored timing
+        assert_eq!(s.writes, 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -60,7 +60,10 @@ mod numeric;
 mod plan;
 mod runner;
 
-pub use cell::{cell_cache_stats, CellCache, CellCacheStats, DEFAULT_CELL_CAPACITY};
+pub use cell::{
+    cell_cache_stats, cell_store_stats, CellCache, CellCacheStats, CellStore, CellStoreStats,
+    DEFAULT_CELL_CAPACITY,
+};
 pub use numeric::{
     AccDtype, NumericOutput, NumericProbe, ProbeDtype, ProbeKind, CHAIN_MAX_LEN, CHAIN_SEED,
     CHAIN_TRIALS, PROFILE_SEED, PROFILE_TRIALS,

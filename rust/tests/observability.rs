@@ -155,8 +155,17 @@ fn start() -> Server {
         warm: false,
         disk_cache: None,
         cache_capacity: 64,
+        // keep the process-global cell cache memory-only in this binary
+        cell_store: None,
+        ..ServerConfig::default()
     })
     .expect("tcserved start")
+}
+
+/// Unwrap a `tcserved/v1` success envelope into its `data` payload.
+fn data(j: &Json) -> Json {
+    assert_eq!(j.get_str("schema"), Some("tcserved/v1"), "{j}");
+    j.get("data").unwrap_or_else(|| panic!("no data in {j}")).clone()
 }
 
 /// One raw HTTP exchange; returns (status, headers, body).
@@ -225,6 +234,7 @@ fn prometheus_scrape_agrees_with_json_metrics() {
 
     let (status, json) = get(addr, "/v1/metrics");
     assert_eq!(status, 200);
+    let json = data(&json);
     let (status, head, text) = request_raw(
         addr,
         "GET /metrics HTTP/1.1\r\nHost: tcserved\r\nConnection: close\r\n\r\n",

@@ -17,8 +17,25 @@ fn start() -> Server {
         warm: false,
         disk_cache: None,
         cache_capacity: 64,
+        // keep the process-global cell cache memory-only in this binary
+        cell_store: None,
+        ..ServerConfig::default()
     })
     .expect("tcserved start")
+}
+
+/// Unwrap a `tcserved/v1` success envelope into its `data` payload.
+fn data(j: &Json) -> Json {
+    assert_eq!(j.get_str("schema"), Some("tcserved/v1"), "{j}");
+    assert!(j.get("error").is_none(), "unexpected error envelope: {j}");
+    j.get("data").unwrap_or_else(|| panic!("no data in {j}")).clone()
+}
+
+/// Unwrap a `tcserved/v1` error envelope into its `error` object.
+fn error_of(j: &Json) -> Json {
+    assert_eq!(j.get_str("schema"), Some("tcserved/v1"), "{j}");
+    assert!(j.get("data").is_none(), "unexpected success envelope: {j}");
+    j.get("error").unwrap_or_else(|| panic!("no error in {j}")).clone()
 }
 
 /// One raw HTTP exchange; returns (status, body).
@@ -119,6 +136,7 @@ fn plan_endpoint_happy_path() {
                    "points":[[8,2]],"completion_latency":true,"backend":"native"}"#;
     let (status, j) = post_plan(addr, body);
     assert_eq!(status, 200, "{j}");
+    let j = data(&j);
     assert_eq!(j.get_str("workload"), Some("mma bf16 f32 m16n8k16"));
     assert_eq!(j.get_str("device"), Some("a100"));
     assert_eq!(j.get_str("backend"), Some("sim"));
@@ -155,6 +173,7 @@ fn plan_endpoint_sweep_unit_matches_sweep_endpoint_shape() {
     let body = r#"{"workload":"ldmatrix x4","sweep":true,"convergence":[4],"backend":"native"}"#;
     let (status, j) = post_plan(addr, body);
     assert_eq!(status, 200, "{j}");
+    let j = data(&j);
     let units = j.get("units").unwrap().as_arr().unwrap();
     assert_eq!(units.len(), 1);
     let sweep = units[0].get("result").unwrap();
@@ -173,18 +192,23 @@ fn plan_endpoint_malformed_json_is_400() {
 
     let (status, j) = post_plan(addr, "{\"workload\": ");
     assert_eq!(status, 400);
-    assert!(j.get_str("error").unwrap().contains("JSON"), "{j}");
-    assert_eq!(j.get_u64("status"), Some(400));
+    let err = error_of(&j);
+    assert_eq!(err.get_str("code"), Some("invalid_json"), "{err}");
+    assert_eq!(err.get_u64("status"), Some(400));
 
     // schema-valid JSON but not a plan
     let (status, j) = post_plan(addr, r#"{"workload":"mma bf16 f32 m16n8k16","typo":true}"#);
     assert_eq!(status, 400);
-    assert!(j.get_str("error").unwrap().contains("typo"), "{j}");
+    let err = error_of(&j);
+    assert_eq!(err.get_str("code"), Some("invalid_plan"), "{err}");
+    assert!(err.get_str("message").unwrap().contains("typo"), "{err}");
 
     // GET on the POST-only route
     let (status, j) = get(addr, "/v1/plan");
     assert_eq!(status, 405);
-    assert!(j.get_str("error").unwrap().contains("POST"), "{j}");
+    let err = error_of(&j);
+    assert_eq!(err.get_str("code"), Some("method_not_allowed"), "{err}");
+    assert!(err.get_str("message").unwrap().contains("POST"), "{err}");
 
     server.stop();
 }
@@ -206,7 +230,7 @@ fn expect_100_continue_gets_an_interim_response() {
     // the final response follows on the same connection
     let (head, final_body) = rest.split_once("\r\n\r\n").expect("final response present");
     assert!(head.starts_with("HTTP/1.1 200"), "{head}");
-    let j = Json::parse(final_body).expect("final body is JSON");
+    let j = data(&Json::parse(final_body).expect("final body is JSON"));
     assert_eq!(j.get_u64("count"), Some(1));
 
     server.stop();
@@ -221,6 +245,7 @@ fn gemm_plan_round_trip_and_cache() {
                    "points":[[8,2]],"backend":"native"}"#;
     let (status, j1) = post_plan(addr, body);
     assert_eq!(status, 200, "{j1}");
+    let j1 = data(&j1);
     assert_eq!(j1.get_str("workload"), Some("gemm pipeline bf16 f32 256 128x128x32"));
     assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
     let units = j1.get("units").unwrap().as_arr().unwrap();
@@ -233,9 +258,10 @@ fn gemm_plan_round_trip_and_cache() {
 
     // the identical request is served from the per-unit cache...
     let (_, j2) = post_plan(addr, body);
+    let j2 = data(&j2);
     assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true), "{j2}");
     // ...observably: /v1/metrics shows exactly one plan compute
-    let (_, m) = get(addr, "/v1/metrics");
+    let m = data(&get(addr, "/v1/metrics").1);
     let plan_stat = m.get("experiments").unwrap().get("plan").unwrap();
     assert_eq!(plan_stat.get_u64("computes"), Some(1), "{m}");
     assert!(m.get("cache").unwrap().get_u64("hits").unwrap() >= 1, "{m}");
@@ -244,6 +270,7 @@ fn gemm_plan_round_trip_and_cache() {
     let deeper = r#"{"workload":"gemm pipeline bf16 f32 256 128x128x32","device":"a100",
                      "points":[[8,3]],"backend":"native"}"#;
     let (_, j3) = post_plan(addr, deeper);
+    let j3 = data(&j3);
     let units3 = j3.get("units").unwrap().as_arr().unwrap();
     assert_eq!(units3[0].get_str("origin"), Some("computed"), "{j3}");
 
@@ -256,7 +283,7 @@ fn gemm_plan_round_trip_and_cache() {
     ] {
         let (status, j) = post_plan(addr, bad);
         assert_eq!(status, 400, "{bad}: {j}");
-        assert!(j.get_str("error").is_some(), "{j}");
+        assert_eq!(error_of(&j).get_str("code"), Some("invalid_plan"), "{j}");
     }
 
     server.stop();
@@ -273,6 +300,7 @@ fn numeric_plan_cache_hit_is_observable_via_metrics() {
                    "points":[[1,1]],"backend":"native"}"#;
     let (status, j1) = post_plan(addr, body);
     assert_eq!(status, 200, "{j1}");
+    let j1 = data(&j1);
     assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
     let units = j1.get("units").unwrap().as_arr().unwrap();
     assert_eq!(units.len(), 1);
@@ -285,12 +313,13 @@ fn numeric_plan_cache_hit_is_observable_via_metrics() {
     assert!(result.get_str("key").is_some(), "per-unit content address: {result}");
 
     let (_, j2) = post_plan(addr, body);
+    let j2 = data(&j2);
     assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true), "{j2}");
     let units2 = j2.get("units").unwrap().as_arr().unwrap();
     assert_eq!(units2[0].get_str("origin"), Some("memory"), "{j2}");
 
     // /v1/metrics proves it: exactly one plan compute, >= 1 cache hit
-    let (_, m) = get(addr, "/v1/metrics");
+    let m = data(&get(addr, "/v1/metrics").1);
     let plan_stat = m.get("experiments").unwrap().get("plan").unwrap();
     assert_eq!(plan_stat.get_u64("computes"), Some(1), "{m}");
     assert!(m.get("cache").unwrap().get_u64("hits").unwrap() >= 1, "{m}");
@@ -299,9 +328,10 @@ fn numeric_plan_cache_hit_is_observable_via_metrics() {
     let low = r#"{"workload":"numeric profile bf16 f32 acc low","device":"a100",
                   "points":[[1,1]],"backend":"native"}"#;
     let (_, j3) = post_plan(addr, low);
+    let j3 = data(&j3);
     let units3 = j3.get("units").unwrap().as_arr().unwrap();
     assert_eq!(units3[0].get_str("origin"), Some("computed"), "{j3}");
-    let (_, m2) = get(addr, "/v1/metrics");
+    let m2 = data(&get(addr, "/v1/metrics").1);
     let plan_stat2 = m2.get("experiments").unwrap().get("plan").unwrap();
     assert_eq!(plan_stat2.get_u64("computes"), Some(2), "{m2}");
 
@@ -317,9 +347,11 @@ fn plan_rerun_hits_the_per_unit_cache() {
                    "points":[[1,1]],"completion_latency":true,"backend":"native"}"#;
     let (status, j1) = post_plan(addr, body);
     assert_eq!(status, 200, "{j1}");
+    let j1 = data(&j1);
     assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
 
     let (_, j2) = post_plan(addr, body);
+    let j2 = data(&j2);
     assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true), "{j2}");
     for unit in j2.get("units").unwrap().as_arr().unwrap() {
         assert_eq!(unit.get("cached").and_then(Json::as_bool), Some(true), "{unit}");
@@ -328,7 +360,7 @@ fn plan_rerun_hits_the_per_unit_cache() {
 
     // /v1/metrics proves it: two plan units computed exactly once each,
     // and the identical re-run produced only cache hits
-    let (_, m) = get(addr, "/v1/metrics");
+    let m = data(&get(addr, "/v1/metrics").1);
     let plan_stat = m.get("experiments").unwrap().get("plan").unwrap();
     assert_eq!(plan_stat.get_u64("computes"), Some(2), "{m}");
     assert!(m.get("cache").unwrap().get_u64("hits").unwrap() >= 2, "{m}");
@@ -338,9 +370,10 @@ fn plan_rerun_hits_the_per_unit_cache() {
     let body_ilp2 = r#"{"workload":"ld.shared u64 8","device":"a100",
                         "points":[[1,2]],"backend":"native"}"#;
     let (_, j3) = post_plan(addr, body_ilp2);
+    let j3 = data(&j3);
     let units3 = j3.get("units").unwrap().as_arr().unwrap();
     assert_eq!(units3[0].get_str("origin"), Some("computed"), "{j3}");
-    let (_, m2) = get(addr, "/v1/metrics");
+    let m2 = data(&get(addr, "/v1/metrics").1);
     let plan_stat2 = m2.get("experiments").unwrap().get("plan").unwrap();
     assert_eq!(plan_stat2.get_u64("computes"), Some(3), "{m2}");
 

@@ -1,0 +1,236 @@
+//! Integration: horizontal serving — two `repro serve` processes
+//! sharing one `--cell-store` directory. Replica A simulates a sweep
+//! and persists every cell; replica B (a fresh process with its own
+//! result cache) answers the identical sweep from cell-store hits,
+//! bit-identically. Plus a `loadgen` smoke test against an in-process
+//! server.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use tcbench::loadgen::{self, http_request, LoadgenConfig};
+use tcbench::server::{Server, ServerConfig};
+use tcbench::util::Json;
+
+/// A per-test scratch tree under the target-adjacent temp dir.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tcbench_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+struct Replica {
+    child: Child,
+    addr: String,
+}
+
+impl Replica {
+    /// Spawn `repro serve --addr 127.0.0.1:0` with its own working
+    /// directory (so per-replica result caches stay private) and a
+    /// shared cell-store directory; parse the bound address from the
+    /// startup banner on stderr.
+    fn spawn(cwd: &Path, cell_store: &Path) -> Replica {
+        std::fs::create_dir_all(cwd).expect("replica cwd");
+        let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args([
+                "serve",
+                "--addr",
+                "127.0.0.1:0",
+                "--threads",
+                "2",
+                "--cell-store",
+                cell_store.to_str().unwrap(),
+            ])
+            .current_dir(cwd)
+            .stdout(Stdio::null())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn repro serve");
+        let stderr = child.stderr.take().expect("stderr piped");
+        let mut banner = String::new();
+        let mut addr = None;
+        for line in BufReader::new(stderr).lines() {
+            let line = line.expect("read server stderr");
+            banner.push_str(&line);
+            banner.push('\n');
+            if let Some(rest) = line.split("listening on http://").nth(1) {
+                let end = rest.find(|c: char| c.is_whitespace()).unwrap_or(rest.len());
+                addr = Some(rest[..end].to_string());
+                break;
+            }
+            if banner.len() > 16_384 {
+                break;
+            }
+        }
+        let addr = addr.unwrap_or_else(|| {
+            let _ = child.kill();
+            panic!("no listening banner from repro serve; stderr so far:\n{banner}")
+        });
+        Replica { child, addr }
+    }
+
+    fn post(&self, path: &str, body: &str) -> Json {
+        let (status, response) =
+            http_request(&self.addr, "POST", path, body).expect("http round trip");
+        let j = Json::parse(&response).expect("JSON body");
+        assert_eq!(status, 200, "{path}: {j}");
+        assert_eq!(j.get_str("schema"), Some("tcserved/v1"), "{j}");
+        j.get("data").unwrap_or_else(|| panic!("no data in {j}")).clone()
+    }
+
+    fn metrics(&self) -> Json {
+        let (status, response) =
+            http_request(&self.addr, "GET", "/v1/metrics", "").expect("metrics scrape");
+        assert_eq!(status, 200);
+        Json::parse(&response).expect("JSON").get("data").expect("data").clone()
+    }
+}
+
+impl Drop for Replica {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// The (latency, throughput) bit patterns of every cell in a sweep
+/// response — the payload that must survive the store round trip.
+fn cell_bits(result: &Json) -> Vec<(u32, u32, u64, u64)> {
+    result
+        .get("cells")
+        .expect("cells")
+        .as_arr()
+        .expect("cells array")
+        .iter()
+        .map(|c| {
+            (
+                c.get_u64("warps").unwrap() as u32,
+                c.get_u64("ilp").unwrap() as u32,
+                c.get_f64("latency").unwrap().to_bits(),
+                c.get_f64("throughput").unwrap().to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn two_replicas_share_one_cell_store_bit_identically() {
+    let base = scratch("replica_store");
+    let cells = base.join("cells");
+    let sweep_body = r#"{"instr":"ldmatrix x2","device":"a100"}"#;
+
+    // replica A simulates the sweep and persists every cell
+    let bits_a;
+    {
+        let a = Replica::spawn(&base.join("a"), &cells);
+        let result = a.post("/v1/sweep", sweep_body);
+        bits_a = cell_bits(result.get("result").expect("result"));
+        assert!(!bits_a.is_empty());
+        let store = a.metrics().get("cell_store").expect("cell_store section").clone();
+        assert_eq!(store.get("enabled").and_then(Json::as_bool), Some(true), "{store}");
+        assert!(store.get_u64("writes").unwrap() >= bits_a.len() as u64, "{store}");
+        // replica A stops here (Drop kills the process): the store on
+        // disk is all that survives into the next replica
+    }
+    let persisted = std::fs::read_dir(&cells).expect("store dir").count();
+    let want = bits_a.len();
+    assert!(persisted >= want, "expected >= {want} cell files, found {persisted}");
+
+    // replica B: fresh process, empty result cache, same store — the
+    // identical sweep must be served from cell-store hits, bit-identically
+    let b = Replica::spawn(&base.join("b"), &cells);
+    let result = b.post("/v1/sweep", sweep_body);
+    let bits_b = cell_bits(result.get("result").expect("result"));
+    assert_eq!(bits_a, bits_b, "replica B's cells are not bit-identical to replica A's");
+
+    let m = b.metrics();
+    let store = m.get("cell_store").expect("cell_store section");
+    assert!(
+        store.get_u64("hits").unwrap() >= bits_a.len() as u64,
+        "replica B must serve the sweep from the shared store: {m}"
+    );
+    assert_eq!(store.get_u64("writes"), Some(0), "nothing new to persist: {m}");
+    drop(b);
+
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn corrupt_cell_files_degrade_to_misses_not_errors() {
+    let base = scratch("replica_store_corrupt");
+    let cells = base.join("cells");
+    let sweep_body = r#"{"instr":"ld.shared u32 4","device":"a100"}"#;
+
+    // seed the store, then corrupt every persisted cell file
+    {
+        let a = Replica::spawn(&base.join("a"), &cells);
+        a.post("/v1/sweep", sweep_body);
+    }
+    let mut clobbered = 0;
+    for entry in std::fs::read_dir(&cells).expect("store dir") {
+        let path = entry.expect("entry").path();
+        std::fs::write(&path, "{definitely not a cell").expect("clobber");
+        clobbered += 1;
+    }
+    assert!(clobbered > 0);
+
+    // a fresh replica must treat every corrupt file as a miss,
+    // recompute, and answer 200
+    let b = Replica::spawn(&base.join("b"), &cells);
+    let result = b.post("/v1/sweep", sweep_body);
+    assert!(result.get("result").is_some(), "{result}");
+    let m = b.metrics();
+    let store = m.get("cell_store").expect("cell_store section");
+    assert!(store.get_u64("corrupt").unwrap() > 0, "corruption must be counted: {m}");
+    assert_eq!(store.get_u64("hits"), Some(0), "{m}");
+    drop(b);
+
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn loadgen_smoke_reports_latency_and_hit_rates() {
+    // in-process server; the cell store stays detached in this test
+    // binary (the cell cache is a process-wide singleton)
+    let server = Server::start(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 4,
+        warm: false,
+        disk_cache: None,
+        cache_capacity: 64,
+        cell_store: None,
+        ..ServerConfig::default()
+    })
+    .expect("tcserved start");
+
+    let cfg = LoadgenConfig {
+        addr: server.addr().to_string(),
+        mix: loadgen::parse_mix("plan").unwrap(),
+        concurrency: 2,
+        duration_secs: 1.0,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(&cfg).expect("loadgen run");
+    assert!(report.requests > 0, "no traffic generated");
+    let accounted = report.ok + report.rejected + report.http_errors + report.transport_errors;
+    assert_eq!(accounted, report.requests);
+    assert!(report.ok > 0, "{report:?}");
+    assert_eq!(report.transport_errors, 0, "{report:?}");
+    assert!(report.p99_us() >= report.p50_us(), "{report:?}");
+
+    let j = report.to_json();
+    assert_eq!(j.get_str("schema"), Some("tcbench/loadgen/v1"));
+    assert!(j.get("latency_us").unwrap().get_u64("p50").is_some(), "{j}");
+    assert!(j.get("server_metrics").is_some(), "metrics scrape missing: {j}");
+    // the plan mix repeats a tiny template pool, so the warmed result
+    // cache must be serving a measurable share
+    assert!(report.result_cache_hit_rate().unwrap_or(0.0) > 0.0, "{j}");
+
+    let text = report.render();
+    assert!(text.contains("p50"), "{text}");
+    assert!(text.contains("p99"), "{text}");
+
+    server.stop();
+}

@@ -18,8 +18,26 @@ fn start() -> Server {
         warm: false,
         disk_cache: None,
         cache_capacity: 64,
+        // never attach a disk store to the process-global cell cache
+        // inside this test binary (other tests share the process)
+        cell_store: None,
+        ..ServerConfig::default()
     })
     .expect("tcserved start")
+}
+
+/// Unwrap a `tcserved/v1` success envelope into its `data` payload.
+fn data(j: &Json) -> Json {
+    assert_eq!(j.get_str("schema"), Some("tcserved/v1"), "{j}");
+    assert!(j.get("error").is_none(), "unexpected error envelope: {j}");
+    j.get("data").unwrap_or_else(|| panic!("no data in {j}")).clone()
+}
+
+/// Unwrap a `tcserved/v1` error envelope into its `error` object.
+fn error_of(j: &Json) -> Json {
+    assert_eq!(j.get_str("schema"), Some("tcserved/v1"), "{j}");
+    assert!(j.get("data").is_none(), "unexpected success envelope: {j}");
+    j.get("error").unwrap_or_else(|| panic!("no error in {j}")).clone()
 }
 
 /// One raw HTTP exchange; returns (status, body).
@@ -61,11 +79,13 @@ fn healthz_and_registry_endpoints() {
 
     let (status, j) = get(addr, "/healthz");
     assert_eq!(status, 200);
+    let j = data(&j);
     assert_eq!(j.get_str("status"), Some("ok"));
     assert_eq!(j.get_u64("experiments"), Some(19));
 
     let (status, j) = get(addr, "/v1/experiments");
     assert_eq!(status, 200);
+    let j = data(&j);
     assert_eq!(j.get_u64("count"), Some(19));
     let list = j.get("experiments").unwrap().as_arr().unwrap();
     assert_eq!(list.len(), 19);
@@ -74,13 +94,14 @@ fn healthz_and_registry_endpoints() {
 
     let (status, j) = get(addr, "/v1/devices");
     assert_eq!(status, 200);
+    let j = data(&j);
     let devices = j.get("devices").unwrap().as_arr().unwrap();
     assert_eq!(devices.len(), 4);
     assert!(devices.iter().any(|d| d.get_str("name") == Some("a100")));
 
     let (status, j) = get(addr, "/v1/nope");
     assert_eq!(status, 404);
-    assert!(j.get_str("error").is_some());
+    assert_eq!(error_of(&j).get_str("code"), Some("not_found"));
 
     server.stop();
 }
@@ -93,6 +114,7 @@ fn second_run_request_is_served_from_cache() {
     // first hit computes t3 (the paper's dense A100 table)
     let (status, j1) = get(addr, "/v1/run/t3");
     assert_eq!(status, 200, "{j1:?}");
+    let j1 = data(&j1);
     assert_eq!(j1.get("cached").and_then(Json::as_bool), Some(false));
     assert_eq!(j1.get_str("origin"), Some("computed"));
     let r1 = j1.get("result").unwrap();
@@ -106,6 +128,7 @@ fn second_run_request_is_served_from_cache() {
     // second hit is served from the content-addressed cache
     let (status, j2) = get(addr, "/v1/run/t3");
     assert_eq!(status, 200);
+    let j2 = data(&j2);
     assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
     assert_eq!(j2.get_str("origin"), Some("memory"));
     // identical payload — same content address, no recomputation
@@ -114,10 +137,11 @@ fn second_run_request_is_served_from_cache() {
     // /v1/metrics proves it: one computation, one cache hit
     let (status, m) = get(addr, "/v1/metrics");
     assert_eq!(status, 200);
+    let m = data(&m);
     let t3 = m.get("experiments").unwrap().get("t3").unwrap();
     assert_eq!(t3.get_u64("computes"), Some(1), "t3 must have computed exactly once: {m}");
     assert!(m.get("cache").unwrap().get_u64("hits").unwrap() >= 1, "{m}");
-    let cached_flag = get(addr, "/v1/experiments").1;
+    let cached_flag = data(&get(addr, "/v1/experiments").1);
     let t3_entry = cached_flag
         .get("experiments")
         .unwrap()
@@ -144,6 +168,7 @@ fn concurrent_identical_requests_compute_once() {
                 scope.spawn(move || {
                     let (status, j) = get(addr, "/v1/run/fig7");
                     assert_eq!(status, 200, "{j:?}");
+                    let j = data(&j);
                     assert_eq!(j.get("result").unwrap().get_str("id"), Some("fig7"));
                     j.get_str("origin").unwrap().to_string()
                 })
@@ -158,7 +183,7 @@ fn concurrent_identical_requests_compute_once() {
     assert_eq!(origins.iter().filter(|o| *o == "computed").count(), 1, "{origins:?}");
 
     // single-flight: six concurrent identical requests, one computation
-    let (_, m) = get(addr, "/v1/metrics");
+    let m = data(&get(addr, "/v1/metrics").1);
     let fig7 = m.get("experiments").unwrap().get("fig7").unwrap();
     assert_eq!(fig7.get_u64("computes"), Some(1), "single-flight violated: {m}");
     let cache = m.get("cache").unwrap();
@@ -176,12 +201,13 @@ fn unknown_experiment_is_404_with_json_error() {
 
     let (status, j) = get(addr, "/v1/run/t99");
     assert_eq!(status, 404);
-    let err = j.get_str("error").unwrap();
-    assert!(err.contains("t99"), "{err}");
-    assert_eq!(j.get_u64("status"), Some(404));
+    let err = error_of(&j);
+    assert_eq!(err.get_str("code"), Some("unknown_experiment"));
+    assert!(err.get_str("message").unwrap().contains("t99"), "{err}");
+    assert_eq!(err.get_u64("status"), Some(404));
 
     // an unknown experiment never reaches the compute path
-    let (_, m) = get(addr, "/v1/metrics");
+    let m = data(&get(addr, "/v1/metrics").1);
     assert!(m.get("experiments").unwrap().get("t99").is_none());
 
     server.stop();
@@ -195,7 +221,9 @@ fn malformed_requests_are_4xx_with_json_errors() {
     // missing required parameter
     let (status, j) = get(addr, "/v1/sweep");
     assert_eq!(status, 400);
-    assert!(j.get_str("error").unwrap().contains("instr"));
+    let err = error_of(&j);
+    assert_eq!(err.get_str("code"), Some("invalid_param"));
+    assert!(err.get_str("message").unwrap().contains("instr"));
 
     // unparseable instruction spec
     let (status, _) = get(addr, "/v1/sweep?device=a100&instr=garbage");
@@ -211,11 +239,14 @@ fn malformed_requests_are_4xx_with_json_errors() {
     let (status, j) =
         request_raw(addr, "POST /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
     assert_eq!(status, 405);
-    assert!(Json::parse(&j).is_ok());
+    let err = error_of(&Json::parse(&j).unwrap());
+    assert_eq!(err.get_str("code"), Some("method_not_allowed"));
 
     // garbage request line
-    let (status, _) = request_raw(addr, "NONSENSE\r\n\r\n");
+    let (status, body) = request_raw(addr, "NONSENSE\r\n\r\n");
     assert_eq!(status, 400);
+    let err = error_of(&Json::parse(&body).unwrap());
+    assert_eq!(err.get_str("code"), Some("malformed_request"));
 
     server.stop();
 }
@@ -228,6 +259,7 @@ fn sweep_endpoint_end_to_end() {
     // '+'-separated spec exercises percent-decoding of query params
     let (status, j) = get(addr, "/v1/sweep?device=a100&instr=bf16+f32+m16n8k16");
     assert_eq!(status, 200, "{j:?}");
+    let j = data(&j);
     let result = j.get("result").unwrap();
     assert_eq!(result.get_str("device"), Some("a100"));
     assert_eq!(result.get("cells").unwrap().as_arr().unwrap().len(), 48);
@@ -236,7 +268,7 @@ fn sweep_endpoint_end_to_end() {
 
     // same coordinates -> same content address -> cache hit
     let (_, j2) = get(addr, "/v1/sweep?device=a100&instr=bf16,f32,m16n8k16");
-    assert_eq!(j2.get("cached").and_then(Json::as_bool), Some(true));
+    assert_eq!(data(&j2).get("cached").and_then(Json::as_bool), Some(true));
 
     server.stop();
 }
