@@ -210,15 +210,62 @@ impl GemmConfig {
     }
 
     /// Bytes of the A+B tiles staged per k-step (2-byte elements).
-    fn staged_bytes(&self) -> u64 {
+    pub fn staged_bytes(&self) -> u64 {
         2 * (self.tile_m as u64 * self.tile_k as u64 + self.tile_k as u64 * self.tile_n as u64)
     }
 
     /// `mma.m16n8k16` instructions per warp per k-step: each warp owns a
     /// `(tile_m/rows) x (tile_n/cols)` output slice of the warp grid.
-    fn mmas_per_warp_step(&self) -> u32 {
+    pub fn mmas_per_warp_step(&self) -> u32 {
         let (wr, wc) = self.warp_grid();
         (self.tile_m / wr / 16) * (self.tile_n / wc / 8) * (self.tile_k / 16)
+    }
+}
+
+/// The per-warp, per-k-step traffic quantities [`build_program`] bakes
+/// into a kernel trace, exposed as plain numbers so the closed-form
+/// model ([`crate::sim::predict_gemm`]) and the program builder can
+/// never drift on the accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct StepTraffic {
+    /// `ldmatrix.x4` fragment loads of the warp's A slice per k-step.
+    pub a_loads: u32,
+    /// `ldmatrix.x4` fragment loads of the warp's B slice per k-step.
+    pub b_loads: u32,
+    /// Shared-memory transactions of one A fragment load (bank model).
+    pub a_txns: u32,
+    /// Shared-memory transactions of one B fragment load (bank model).
+    pub b_txns: u32,
+    /// Transactions of the warp's synchronous smem tile store (0 for the
+    /// `cp.async` variant, which stages gmem->smem without the LSU).
+    pub store_txns: u32,
+    /// Bytes of the staged A+B tile this warp copies per k-step.
+    pub gmem_slice: u64,
+}
+
+/// Compute the [`StepTraffic`] of one warp of `variant` at `cfg` — the
+/// exact quantities [`build_program`] emits, without building a trace.
+pub fn step_traffic(cfg: &GemmConfig, variant: Variant) -> StepTraffic {
+    let swz = variant.swizzle();
+    let (wr, wc) = cfg.warp_grid();
+    let a_row_bytes = if swz == Swizzle::Permuted { 128 } else { cfg.tile_k * 2 };
+    let b_row_bytes = if swz == Swizzle::Permuted { 128 } else { cfg.tile_n * 2 };
+    let a_frag_bytes = (cfg.tile_m as u64 / wr as u64) * cfg.tile_k as u64 * 2;
+    let b_frag_bytes = cfg.tile_k as u64 * (cfg.tile_n as u64 / wc as u64) * 2;
+    let gmem_slice = cfg.staged_bytes() / cfg.warps as u64;
+    let store_txns = if variant.async_copy() {
+        0
+    } else {
+        let store_conflict = if swz == Swizzle::Permuted { 1 } else { 8 };
+        (gmem_slice / 128).max(1) as u32 * store_conflict
+    };
+    StepTraffic {
+        a_loads: (a_frag_bytes / 512).max(1) as u32,
+        b_loads: (b_frag_bytes / 512).max(1) as u32,
+        a_txns: x4_txns(swz, a_row_bytes),
+        b_txns: x4_txns(swz, b_row_bytes),
+        store_txns,
+        gmem_slice,
     }
 }
 
@@ -232,31 +279,17 @@ fn x4_txns(swz: Swizzle, row_bytes: u32) -> u32 {
 pub fn build_program(device: &Device, cfg: GemmConfig, variant: Variant, warp: u32) -> WarpProgram {
     let instr = cfg.instr();
     let timing = device.timing(&instr).expect("16-bit m16n8k16 timing required");
-    let swz = variant.swizzle();
-    let (wr, wc) = cfg.warp_grid();
 
     // A tile rows are tile_k elements (x2 bytes); B tile rows are tile_n
     // elements. The naive layouts alias banks; Permuted swizzles 16-byte
-    // chunks within a padded 128-byte row (the CUTLASS trick).
-    let a_row_bytes = if swz == Swizzle::Permuted { 128 } else { cfg.tile_k * 2 };
-    let b_row_bytes = if swz == Swizzle::Permuted { 128 } else { cfg.tile_n * 2 };
-    let a_txns = x4_txns(swz, a_row_bytes);
-    let b_txns = x4_txns(swz, b_row_bytes);
-
-    // Fragment loads per warp per k-step: the warp's A slice
-    // (tile_m/rows x tile_k) and B slice (tile_k x tile_n/cols), 512 B
-    // per x4.
-    let a_frag_bytes = (cfg.tile_m as u64 / wr as u64) * cfg.tile_k as u64 * 2;
-    let b_frag_bytes = cfg.tile_k as u64 * (cfg.tile_n as u64 / wc as u64) * 2;
-    let a_loads = (a_frag_bytes / 512).max(1) as u32;
-    let b_loads = (b_frag_bytes / 512).max(1) as u32;
-
-    let gmem_slice = cfg.staged_bytes() / cfg.warps as u64;
-    // Naive row-major staging stores conflict exactly like the loads
-    // (32 threads striding by the row width — 8-way on these tiles);
-    // the permuted layout writes conflict-free.
-    let store_conflict = if swz == Swizzle::Permuted { 1 } else { 8 };
-    let store_txns = (gmem_slice / 128).max(1) as u32 * store_conflict;
+    // chunks within a padded 128-byte row (the CUTLASS trick). Naive
+    // row-major staging stores conflict exactly like the loads (32
+    // threads striding by the row width — 8-way on these tiles); the
+    // permuted layout writes conflict-free. Fragment loads per warp per
+    // k-step cover the warp's A slice (tile_m/rows x tile_k) and B slice
+    // (tile_k x tile_n/cols), 512 B per x4.
+    let StepTraffic { a_loads, b_loads, a_txns, b_txns, store_txns, gmem_slice } =
+        step_traffic(&cfg, variant);
     let mmas = cfg.mmas_per_warp_step();
 
     let mut b = ProgramBuilder::new();

@@ -1,6 +1,6 @@
 //! repro loadgen — a self-contained load harness for tcserved fleets.
 //!
-//! Replays a deterministic mixed workload (`--mix plan:sweep:numeric`)
+//! Replays a deterministic mixed workload (`--mix plan:sweep:numeric:tune`)
 //! against a running server over plain `TcpStream` HTTP/1.1 (no client
 //! crates, mirroring `server::http`), then reports client-side latency
 //! percentiles next to the server's own `/v1/metrics` counters — so one
@@ -9,7 +9,7 @@
 //! cell-store rate per the server.
 //!
 //! ```text
-//! repro loadgen --addr 127.0.0.1:8321 --mix plan:sweep:numeric \
+//! repro loadgen --addr 127.0.0.1:8321 --mix plan:sweep:numeric:tune \
 //!               --concurrency 8 --duration 10 [--seed S] [--out f.json]
 //! ```
 //!
@@ -39,6 +39,8 @@ pub enum MixKind {
     Sweep,
     /// §8 numeric probes through both routes.
     Numeric,
+    /// `POST /v1/tune` analytic-first autotuner runs.
+    Tune,
 }
 
 impl MixKind {
@@ -47,6 +49,7 @@ impl MixKind {
             MixKind::Plan => "plan",
             MixKind::Sweep => "sweep",
             MixKind::Numeric => "numeric",
+            MixKind::Tune => "tune",
         }
     }
 }
@@ -60,11 +63,12 @@ pub fn parse_mix(spec: &str) -> Result<Vec<MixKind>> {
             "plan" => MixKind::Plan,
             "sweep" => MixKind::Sweep,
             "numeric" => MixKind::Numeric,
-            other => bail!("unknown mix class {other:?} (plan|sweep|numeric)"),
+            "tune" => MixKind::Tune,
+            other => bail!("unknown mix class {other:?} (plan|sweep|numeric|tune)"),
         });
     }
     if mix.is_empty() {
-        bail!("empty mix; give at least one of plan|sweep|numeric");
+        bail!("empty mix; give at least one of plan|sweep|numeric|tune");
     }
     Ok(mix)
 }
@@ -134,6 +138,21 @@ fn template(kind: MixKind, prng: &mut Prng) -> (&'static str, String) {
                     "{\"instr\":\"numeric,chain,tf32,f32,5\",\"backend\":\"native\"}".to_string(),
                 )
             }
+        }
+        MixKind::Tune => {
+            // small frontiers over cheap families: the analytic scorer
+            // does the heavy pruning, the confirmed cells ride the cell
+            // cache, so repeated tune traffic is cache-warm
+            let workload = ["ldmatrix x4", "ld.shared u32 4", "mma fp16 f32 m16n8k16"]
+                [prng.below(3) as usize];
+            let objective = ["max-throughput", "min-latency"][prng.below(2) as usize];
+            (
+                "/v1/tune",
+                format!(
+                    "{{\"workload\":\"{workload}\",\"device\":\"a100\",\
+                     \"objective\":\"{objective}\",\"top\":2,\"backend\":\"native\"}}"
+                ),
+            )
         }
     }
 }
@@ -439,8 +458,8 @@ mod tests {
     #[test]
     fn mix_specs_parse_with_weights() {
         assert_eq!(
-            parse_mix("plan:sweep:numeric").unwrap(),
-            vec![MixKind::Plan, MixKind::Sweep, MixKind::Numeric]
+            parse_mix("plan:sweep:numeric:tune").unwrap(),
+            vec![MixKind::Plan, MixKind::Sweep, MixKind::Numeric, MixKind::Tune]
         );
         assert_eq!(parse_mix("sweep").unwrap(), vec![MixKind::Sweep]);
         // repetition weights a class; empty segments are tolerated
@@ -465,7 +484,7 @@ mod tests {
 
     #[test]
     fn templates_are_deterministic_valid_json_posts() {
-        for kind in [MixKind::Plan, MixKind::Sweep, MixKind::Numeric] {
+        for kind in [MixKind::Plan, MixKind::Sweep, MixKind::Numeric, MixKind::Tune] {
             let mut a = Prng::new(42);
             let mut b = Prng::new(42);
             for _ in 0..16 {

@@ -11,6 +11,7 @@
 //! repro loadgen [--addr A] [--mix M] [--concurrency C] [--duration S]
 //!             # load harness against a running tcserved
 //! repro lint <spec>... | repro lint --all         # tclint static verifier
+//! repro tune <spec> [--device D] [--objective O] [--top K]   # autotuner
 //! ```
 //!
 //! Backends for the §8 numeric experiments: `native` (Rust softfloat),
@@ -31,7 +32,8 @@ use tcbench::server::{serve_blocking, ServerConfig};
 use tcbench::sim::{ProfileMode, SimProfile};
 use tcbench::util::Json;
 use tcbench::workload::{
-    runner_for, ExecPoint, LintRecord, Plan, Runner, SimRunner, UnitOutput, Workload,
+    runner_for, tune_workload, ExecPoint, LintRecord, Objective, Plan, Runner, SimRunner,
+    UnitOutput, Workload, DEFAULT_TUNE_TOP_K,
 };
 
 fn usage() -> &'static str {
@@ -47,10 +49,13 @@ fn usage() -> &'static str {
        repro serve [--addr HOST:PORT] [--threads N] [--warm]\n\
                    [--cell-store DIR|none] [--replicas N | --shard i/N]\n\
                    [--queue-depth N]\n\
-       repro loadgen [--addr HOST:PORT] [--mix plan:sweep:numeric]\n\
+       repro loadgen [--addr HOST:PORT] [--mix plan:sweep:numeric:tune]\n\
                    [--concurrency C] [--duration SECONDS] [--seed S] [--out FILE]\n\
        repro lint <spec>... [--device D] [--out DIR]   # tclint workload specs\n\
        repro lint --all [--out DIR]        # every program the campaign generates\n\
+       repro tune <spec|mma|mma.sp|ldmatrix|ld.shared|wmma|gemm> [--device D]\n\
+                   [--objective min-latency|max-throughput|target-occupancy:<warps>]\n\
+                   [--top K] [--out DIR]   # analytic-first config autotuner\n\
      \n\
      WORKLOAD SPECS (repro sweep, POST /v1/plan):\n\
        mma <ab> <cd> <shape>        e.g. \"mma bf16 f32 m16n8k16\"\n\
@@ -84,6 +89,18 @@ fn usage() -> &'static str {
        repro loadgen --addr 127.0.0.1:8321 --mix plan:sweep --duration 10\n\
        repro lint \"gemm pipeline bf16 f32 2048 128x128x32\"\n\
        repro lint --all --out out          # exits nonzero on any Error diagnostic\n\
+       repro tune mma --device a100 --objective max-throughput --top 8 --out out\n\
+       repro tune \"gemm pipeline bf16 f32 512 128x128x32\" --objective min-latency\n\
+     \n\
+     AUTOTUNING (repro tune, POST /v1/tune):\n\
+       The calibrated closed-form model scores every legal (warps, ILP,\n\
+       cp.async stages, tile) configuration, the top-K frontier is confirmed\n\
+       on the cycle simulator (cell-cache backed), and the ranked list shows\n\
+       predicted vs simulated numbers plus the realized pruning ratio.\n\
+       Objectives: min-latency | max-throughput | target-occupancy:<warps>.\n\
+       Bare family names expand to a canonical spec (mma -> \"mma fp16 f32\n\
+       m16n8k16\", gemm -> \"gemm pipeline bf16 f32 512 128x128x32\", ...).\n\
+       --out writes tune_report.json (schema tcbench/tune/v1).\n\
      \n\
      STATIC ANALYSIS (repro lint, POST /v1/lint):\n\
        tclint verifies every warp program a plan would launch — def-use,\n\
@@ -108,7 +125,7 @@ fn usage() -> &'static str {
      \n\
      SERVE ENDPOINTS:\n\
        /healthz /v1/experiments /v1/devices POST:/v1/run/<id> POST:/v1/sweep\n\
-       POST:/v1/plan POST:/v1/lint (400 on Error diagnostics)\n\
+       POST:/v1/plan POST:/v1/lint (400 on Error diagnostics) POST:/v1/tune\n\
        /v1/metrics (JSON incl. latency histograms)  /metrics (Prometheus text)\n"
 }
 
@@ -640,6 +657,79 @@ fn main() -> Result<()> {
                     point.warps,
                     point.ilp
                 );
+            }
+        }
+        "tune" => {
+            let dev_name = args.flag("device").unwrap_or("a100");
+            let dev = device::by_name(dev_name)
+                .ok_or_else(|| anyhow!("unknown device {dev_name:?}; see `repro devices`"))?;
+            let spec = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("`repro tune` needs a workload spec or family prefix"))?;
+            // bare family prefixes expand to a canonical representative
+            // spec, so `repro tune mma` works without memorizing shapes
+            let spec = match spec.as_str() {
+                "mma" => "mma fp16 f32 m16n8k16",
+                "mma.sp" => "mma.sp fp16 f32 m16n8k32",
+                "ldmatrix" => "ldmatrix x4",
+                "ld.shared" => "ld.shared u32 1",
+                "wmma" => "wmma fp16 f32 m16n16k16",
+                "gemm" => "gemm pipeline bf16 f32 512 128x128x32",
+                full => full,
+            };
+            let workload = Workload::parse_spec(spec).map_err(|e| anyhow!(e))?;
+            let objective_spec = args.flag("objective").unwrap_or("max-throughput");
+            let objective = Objective::parse_spec(objective_spec).map_err(|e| anyhow!(e))?;
+            let top = match args.flag("top") {
+                Some(t) => t
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("--top must be a positive integer, got {t:?}"))?,
+                None => DEFAULT_TUNE_TOP_K,
+            };
+            // the analytic model proposes, the simulator disposes: the
+            // confirmation pass always runs on the cycle simulator
+            let report = tune_workload(&workload, &dev, objective, top, "sim", default_threads())
+                .map_err(|e| anyhow!(e))?;
+            println!(
+                "tune {} on {} — objective {}",
+                report.workload,
+                report.device,
+                report.objective.spec_name()
+            );
+            println!(
+                "analytic: {} config(s) scored in {:.1} us ({:.3e} configs/s)",
+                report.scored,
+                report.analytic_seconds * 1e6,
+                report.analytic_configs_per_sec
+            );
+            println!(
+                "confirmed: top {} via cycle sim (pruning ratio {:.3})",
+                report.confirmed, report.pruning_ratio
+            );
+            println!(
+                "{:<4} {:>5} {:>4} {:>10} {:>10} {:>10} {:>10} {:>6}  spec",
+                "rank", "warps", "ilp", "pred_lat", "sim_lat", "pred_thr", "sim_thr", "calib"
+            );
+            for (i, c) in report.configs.iter().enumerate() {
+                println!(
+                    "{:<4} {:>5} {:>4} {:>10.2} {:>10.2} {:>10.1} {:>10.1} {:>6}  {}",
+                    i + 1,
+                    c.point.warps,
+                    c.point.ilp,
+                    c.predicted.latency,
+                    c.simulated_latency,
+                    c.predicted.throughput,
+                    c.simulated_throughput,
+                    if c.within_calibration { "ok" } else { "drift" },
+                    c.spec
+                );
+            }
+            if let Some(dir) = args.flag("out") {
+                std::fs::create_dir_all(dir)?;
+                let path = format!("{dir}/tune_report.json");
+                std::fs::write(&path, report.to_json().pretty())?;
+                eprintln!("[repro] wrote {path}");
             }
         }
         "help" | "--help" | "-h" => print!("{}", usage()),

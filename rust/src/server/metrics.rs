@@ -56,6 +56,15 @@ pub struct Metrics {
     request_latency: HistogramSet,
     /// Phase latency (`parse`, `cache_lookup`, `simulate`, `render`).
     phases: HistogramSet,
+    /// `POST /v1/tune` autotuner runs.
+    tune_runs: AtomicU64,
+    /// Configurations scored by the analytic model across tuner runs.
+    tune_configs_scored: AtomicU64,
+    /// Frontier configurations confirmed through the cycle sim.
+    tune_configs_confirmed: AtomicU64,
+    /// Tuner predicted-vs-simulated latency relative error, in parts
+    /// per million, keyed by workload family.
+    tune_rel_err_ppm: HistogramSet,
 }
 
 impl Metrics {
@@ -74,6 +83,10 @@ impl Metrics {
             computes: Mutex::new(BTreeMap::new()),
             request_latency: HistogramSet::new(),
             phases: HistogramSet::new(),
+            tune_runs: AtomicU64::new(0),
+            tune_configs_scored: AtomicU64::new(0),
+            tune_configs_confirmed: AtomicU64::new(0),
+            tune_rel_err_ppm: HistogramSet::new(),
         }
     }
 
@@ -110,6 +123,21 @@ impl Metrics {
     pub fn record_lint(&self, errors: u64, warnings: u64) {
         self.lint_errors.fetch_add(errors, Ordering::Relaxed);
         self.lint_warnings.fetch_add(warnings, Ordering::Relaxed);
+    }
+
+    /// One autotuner run (`POST /v1/tune`) that scored `scored`
+    /// configurations analytically and confirmed `confirmed` of them
+    /// through the cycle-accurate path.
+    pub fn record_tune(&self, scored: u64, confirmed: u64) {
+        self.tune_runs.fetch_add(1, Ordering::Relaxed);
+        self.tune_configs_scored.fetch_add(scored, Ordering::Relaxed);
+        self.tune_configs_confirmed.fetch_add(confirmed, Ordering::Relaxed);
+    }
+
+    /// One confirmed tuner configuration's predicted-vs-simulated
+    /// relative error, recorded in parts per million under `family`.
+    pub fn record_tune_rel_err(&self, family: &str, rel_err: f64) {
+        self.tune_rel_err_ppm.record_us(family, (rel_err.abs() * 1e6) as u64);
     }
 
     /// One completed computation of `id`, taking `ms` milliseconds.
@@ -246,6 +274,19 @@ impl Metrics {
                     ),
                 ]),
             ),
+            // the /v1/tune autotuner: run counts, the analytic->sim
+            // pruning funnel, and the predicted-vs-simulated error
+            // distribution (ppm) per workload family
+            ("tune", {
+                let scored = self.tune_configs_scored.load(Ordering::Relaxed);
+                let confirmed = self.tune_configs_confirmed.load(Ordering::Relaxed);
+                Json::obj(vec![
+                    ("runs", Json::num(self.tune_runs.load(Ordering::Relaxed) as f64)),
+                    ("configs_scored", Json::num(scored as f64)),
+                    ("configs_confirmed", Json::num(confirmed as f64)),
+                    ("rel_err_ppm", self.tune_rel_err_ppm.to_json()),
+                ])
+            }),
             ("experiments", experiments),
             ("latency_us", self.request_latency.to_json()),
             ("phases_us", self.phases.to_json()),
@@ -409,6 +450,26 @@ impl Metrics {
             metric(name, "counter", help, &[(String::new(), value)]);
         }
 
+        for (name, help, value) in [
+            (
+                "tune_runs_total",
+                "Autotuner runs served by POST /v1/tune.",
+                self.tune_runs.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "tune_configs_scored_total",
+                "Configurations scored by the tuner's analytic model.",
+                self.tune_configs_scored.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "tune_configs_confirmed_total",
+                "Frontier configurations confirmed through the cycle sim.",
+                self.tune_configs_confirmed.load(Ordering::Relaxed) as f64,
+            ),
+        ] {
+            metric(name, "counter", help, &[(String::new(), value)]);
+        }
+
         {
             let computes = self.computes.lock().unwrap();
             metric(
@@ -443,6 +504,12 @@ impl Metrics {
                 "phase",
                 "Request-phase latency (parse/cache_lookup/simulate/render; microseconds).",
                 &self.phases,
+            ),
+            (
+                "tune_rel_err_ppm",
+                "family",
+                "Tuner predicted-vs-simulated relative error by workload family (ppm).",
+                &self.tune_rel_err_ppm,
             ),
         ] {
             let mut lines: Vec<(String, f64)> = Vec::new();
@@ -505,6 +572,8 @@ mod tests {
         m.record_compute("t3", 20.0);
         m.record_lint(2, 3);
         m.record_lint(0, 1);
+        m.record_tune(48, 8);
+        m.record_tune_rel_err("mma", 0.05);
 
         m.record_rejected();
 
@@ -521,6 +590,12 @@ mod tests {
         let lint = j.get("lint").unwrap();
         assert_eq!(lint.get_u64("errors"), Some(2));
         assert_eq!(lint.get_u64("warnings"), Some(4));
+        let tune = j.get("tune").unwrap();
+        assert_eq!(tune.get_u64("runs"), Some(1));
+        assert_eq!(tune.get_u64("configs_scored"), Some(48));
+        assert_eq!(tune.get_u64("configs_confirmed"), Some(8));
+        let err = tune.get("rel_err_ppm").unwrap().get("mma").unwrap();
+        assert_eq!(err.get_u64("count"), Some(1));
         let t3 = j.get("experiments").unwrap().get("t3").unwrap();
         assert_eq!(t3.get_u64("computes"), Some(2));
         assert!((t3.get_f64("mean_ms").unwrap() - 15.0).abs() < 1e-9);
@@ -585,6 +660,8 @@ mod tests {
         m.record_latency("run", 42);
         m.record_phase("render", 7);
         m.record_lint(1, 4);
+        m.record_tune(48, 8);
+        m.record_tune_rel_err("mma", 0.05);
 
         let stats = CacheStats { entries: 2, capacity: 8, evictions: 1 };
         let text = m.to_prometheus(stats);
@@ -614,6 +691,11 @@ mod tests {
         assert!(text.contains("tcserved_result_cache_entries 2"));
         assert!(text.contains("tcserved_lint_errors_total 1"));
         assert!(text.contains("tcserved_lint_warnings_total 4"));
+        assert!(text.contains("tcserved_tune_runs_total 1"));
+        assert!(text.contains("tcserved_tune_configs_scored_total 48"));
+        assert!(text.contains("tcserved_tune_configs_confirmed_total 8"));
+        assert!(text.contains("tcserved_tune_rel_err_ppm_count{family=\"mma\"} 1"));
+        assert!(text.contains("tcserved_tune_rel_err_ppm_sum{family=\"mma\"} 50000"));
         assert!(text.contains("tcserved_computes_total{id=\"plan\"} 1"));
         assert!(text.contains("tcserved_compute_ms_total{id=\"plan\"} 12.5"));
         assert!(text.contains("tcserved_request_duration_us_count{endpoint=\"run\"} 1"));

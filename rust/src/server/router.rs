@@ -160,6 +160,7 @@ fn endpoint_label(path: &str) -> &'static str {
         "/v1/sweep" => "sweep",
         "/v1/plan" => "plan",
         "/v1/lint" => "lint",
+        "/v1/tune" => "tune",
         p if p.starts_with("/v1/run/") => "run",
         _ => "other",
     }
@@ -188,6 +189,8 @@ fn dispatch(state: &AppState, req: &Request) -> Result<Response, Response> {
         (m, "/v1/plan") => Err(method_not_allowed(m, "/v1/plan takes a POST with a JSON body")),
         ("POST", "/v1/lint") => lint(state, req),
         (m, "/v1/lint") => Err(method_not_allowed(m, "/v1/lint takes a POST with a JSON body")),
+        ("POST", "/v1/tune") => tune(state, req),
+        (m, "/v1/tune") => Err(method_not_allowed(m, "/v1/tune takes a POST with a JSON body")),
         ("GET" | "POST", "/v1/sweep") => sweep(state, req),
         (m, "/v1/sweep") => {
             Err(method_not_allowed(m, "/v1/sweep takes a POST body (or the deprecated GET form)"))
@@ -588,6 +591,63 @@ fn lint(state: &AppState, req: &Request) -> Result<Response, Response> {
     Ok(Response::ok(payload))
 }
 
+// ----------------------------------------------------------------- /v1/tune
+
+/// `POST /v1/tune` — the analytic-first autotuner. The body names a
+/// workload spec, a device, and an objective (`min-latency`,
+/// `max-throughput`, or `target-occupancy:<warps>`); the closed-form
+/// model scores the full legal grid, the top-`top` frontier is
+/// confirmed through the cycle-accurate path (cell-cache backed), and
+/// the response carries predicted *and* simulated numbers per
+/// configuration plus the realized pruning ratio. Model or parameter
+/// problems — numeric workloads, unknown objectives, `top` of zero —
+/// answer as typed `invalid_param` errors, never panics.
+fn tune(state: &AppState, req: &Request) -> Result<Response, Response> {
+    let params = RequestParams::parse(req)?;
+    let dev = params.device()?;
+    let spec = match params.get("workload")? {
+        Some(s) => Some(s),
+        None => params.get("instr")?,
+    };
+    let Some(spec) = spec else {
+        return Err(Response::error(
+            400,
+            "invalid_param",
+            "missing required parameter `workload` (a spec, e.g. mma fp16 f32 m16n8k16)",
+        ));
+    };
+    let load = Workload::parse_spec(&spec).map_err(|e| Response::error(400, "invalid_plan", e))?;
+    let objective = params.get("objective")?.unwrap_or_else(|| "max-throughput".to_string());
+    let objective = workload::Objective::parse_spec(&objective)
+        .map_err(|e| Response::error(400, "invalid_param", e))?;
+    // `top` is numeric, so it is accepted both as a JSON number and as
+    // a string (the query-less POST body is the only source here)
+    let top = match params.body().and_then(|b| b.get_u64("top")) {
+        Some(n) => n as usize,
+        None => match params.get("top")? {
+            None => workload::DEFAULT_TUNE_TOP_K,
+            Some(s) => s.parse().map_err(|_| {
+                Response::error(400, "invalid_param", format!("bad top {s:?} (a positive integer)"))
+            })?,
+        },
+    };
+    let kind = params.backend()?;
+    let runner = workload::runner_for(kind).map_err(|e| Response::error(500, "internal", e))?;
+    let threads = coordinator::default_threads().min(4);
+    let t0 = Instant::now();
+    let report = workload::tune_workload(&load, &dev, objective, top, runner.name(), threads)
+        .map_err(|e| Response::error(400, "invalid_param", e))?;
+    state.metrics.record_phase("tune", t0.elapsed().as_micros() as u64);
+    state.metrics.record_tune(report.scored as u64, report.confirmed as u64);
+    for cfg in &report.configs {
+        state.metrics.record_tune_rel_err(report.family, cfg.latency_rel_err);
+    }
+    let t0 = Instant::now();
+    let response = Response::ok(report.to_json());
+    state.metrics.record_phase("render", t0.elapsed().as_micros() as u64);
+    Ok(response)
+}
+
 /// Cached execution of one plan unit (content-addressed by the unit
 /// token, which includes every workload parameter), executed under the
 /// gate of the shard owning its content address. `metrics_label`
@@ -765,6 +825,9 @@ mod tests {
         // typed codes on POST bodies too
         let r = post(&s, "/v1/plan", "{not json");
         assert_eq!(error_of(&r).get_str("code"), Some("invalid_json"));
+        let r = post(&s, "/v1/tune", r#"{"workload":"ldmatrix x4","objective":"bogus"}"#);
+        assert_eq!(r.status, 400, "{}", r.body);
+        assert_eq!(error_of(&r).get_str("code"), Some("invalid_param"));
         let r = post(&s, "/healthz", "");
         assert_eq!(r.status, 405);
         assert_eq!(error_of(&r).get_str("code"), Some("method_not_allowed"));
@@ -1238,6 +1301,65 @@ mod tests {
         let lint = m.get("lint").unwrap();
         assert!(lint.get_u64("errors").unwrap() >= 1, "{m}");
         assert_eq!(m.get("by_endpoint").unwrap().get_u64("lint"), Some(5));
+    }
+
+    #[test]
+    fn tune_endpoint_returns_ranked_predicted_vs_simulated_configs() {
+        let s = state();
+        let body = r#"{"workload":"mma fp16 f32 m16n8k16","device":"a100",
+                       "objective":"max-throughput","top":4,"backend":"native"}"#;
+        let r = post(&s, "/v1/tune", body);
+        assert_eq!(r.status, 200, "{}", r.body);
+        let j = data(&r);
+        assert_eq!(j.get_str("schema"), Some("tcbench/tune/v1"));
+        assert_eq!(j.get_str("objective"), Some("max-throughput"));
+        assert_eq!(j.get_str("device"), Some("a100"));
+        assert!(j.get_u64("scored").unwrap() >= 48, "{}", r.body);
+        assert_eq!(j.get_u64("confirmed"), Some(4));
+        assert!(j.get_f64("pruning_ratio").unwrap() > 0.9, "{}", r.body);
+        let configs = j.get("configs").unwrap().as_arr().unwrap();
+        assert_eq!(configs.len(), 4);
+        let top = &configs[0];
+        assert!(top.get_u64("warps").unwrap() >= 8, "{}", r.body);
+        assert!(top.get("predicted").unwrap().get_f64("throughput").unwrap() > 950.0);
+        assert!(top.get("simulated").unwrap().get_f64("throughput").unwrap() > 950.0);
+        assert!(top.get_f64("latency_rel_err").is_some(), "{}", r.body);
+
+        // the tune counters and the per-family error histogram observed
+        // the run
+        let m = data(&get(&s, "/v1/metrics"));
+        let tune = m.get("tune").unwrap();
+        assert_eq!(tune.get_u64("runs"), Some(1));
+        assert!(tune.get_u64("configs_scored").unwrap() >= 48);
+        assert_eq!(tune.get_u64("configs_confirmed"), Some(4));
+        let err = tune.get("rel_err_ppm").unwrap().get("mma").unwrap();
+        assert_eq!(err.get_u64("count"), Some(4));
+        assert_eq!(m.get("by_endpoint").unwrap().get_u64("tune"), Some(1));
+    }
+
+    #[test]
+    fn tune_endpoint_rejects_bad_requests() {
+        let s = state();
+        // missing workload spec
+        let r = post(&s, "/v1/tune", "{}");
+        assert_eq!(r.status, 400, "{}", r.body);
+        assert_eq!(error_of(&r).get_str("code"), Some("invalid_param"));
+        // unknown objective grammar
+        let r = post(&s, "/v1/tune", r#"{"workload":"ldmatrix x4","objective":"fastest"}"#);
+        assert_eq!(error_of(&r).get_str("code"), Some("invalid_param"));
+        // numeric workloads have no timing model to tune
+        let r = post(&s, "/v1/tune", r#"{"workload":"numeric chain tf32 f32 4"}"#);
+        assert_eq!(r.status, 400, "{}", r.body);
+        let e = error_of(&r);
+        assert_eq!(e.get_str("code"), Some("invalid_param"));
+        assert!(e.get_str("message").unwrap().contains("numeric"), "{}", r.body);
+        // a zero frontier is a typed error, and devices resolve
+        let r = post(&s, "/v1/tune", r#"{"workload":"ldmatrix x4","top":0}"#);
+        assert_eq!(error_of(&r).get_str("code"), Some("invalid_param"));
+        let r = post(&s, "/v1/tune", r#"{"workload":"ldmatrix x4","device":"h100"}"#);
+        assert_eq!(error_of(&r).get_str("code"), Some("unknown_device"));
+        // POST-only
+        assert_eq!(get(&s, "/v1/tune").status, 405);
     }
 
     #[test]

@@ -1,34 +1,105 @@
-//! Closed-form steady-state model of the microbenchmark loop.
+//! Closed-form steady-state model of every timing family — the
+//! predictive fast path of the tuner.
 //!
-//! Used as a property-test oracle for tcsim and to sanity-check the
-//! calibration: for an `mma` loop the measured iteration latency is
+//! Historically this module was a property-test oracle for the `mma`
+//! and `ldmatrix` loops; it is now a first-class predictive backend
+//! covering all five timing families (`mma`/`mma.sp`, `ldmatrix`,
+//! `ld.shared`, `wmma` via its compiled HMMA pieces, and the Appendix-A
+//! `gemm` kernels), calibrated against the cycle simulator by the
+//! pinned per-family error bounds in [`CALIBRATION_BOUNDS`]
+//! (`tests/analytic_calibration.rs` is the CI drift gate). The tuner
+//! ([`crate::workload::tune_workload`]) scores whole configuration
+//! grids through these formulas — orders of magnitude faster than
+//! cycle simulation — and confirms only the top-K frontier in the
+//! simulator.
+//!
+//! For an `mma` loop the measured iteration latency is
 //!
 //! ```text
-//! P = max( L + (ILP-1) + sync ,  W_sc * ILP * ii )        [per sub-core]
+//! P = max( L + (ILP-1) + sync ,  W_sc * ILP * ii ,  ILP * (ii+1) )
 //! latency    = max over sub-cores of P
 //! throughput = total FMAs per iteration / latency
 //! ```
 //!
-//! (dependency/issue path vs token-bucket rate path), and for a
-//! data-movement loop
+//! (dependency path vs token-bucket rate path vs single-warp dispatch
+//! recovery), and for a data-movement loop
 //!
 //! ```text
-//! P = max( L_load + sync ,  W_lsu * ILP * txns * txn_cycles )  [per LSU]
+//! P = max( txns*txn_cycles + tail + pend ,  W_lsu * ILP * txns * txn_cycles )
 //! ```
 //!
-//! with `L_load = lsu_tail + txn_cycles * txns` and the pending-cap
-//! correction when `ILP >= lsu_pending_per_warp`.
+//! with the pending-cap correction `pend` when `ILP` exceeds
+//! `lsu_pending_per_warp`. The `gemm` model composes the same unit
+//! models along one k-step of the kernel (gmem pipe occupancy + latency
+//! exposure, LSU staging/fragment traffic, Tensor-Core drain), using
+//! the exact per-step traffic [`crate::gemm::step_traffic`] reports for
+//! the warp programs.
+//!
+//! Every `predict_*` returns `Result` — an unsupported instruction or a
+//! malformed configuration is a typed error (`invalid_param` at the
+//! serving layer), never a panic on a serving thread.
 
 use crate::device::Device;
-use crate::isa::{LdMatrixNum, MmaInstr};
+use crate::gemm::{self, GemmConfig, Variant};
+use crate::isa::{AbType, CdType, LdMatrixNum, LdSharedWidth, MmaInstr};
+use crate::microbench::wmma::WmmaShape;
 
 /// Prediction for one (#warps, ILP) configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AnalyticPrediction {
-    /// Cycles per loop iteration (bottleneck warp).
+    /// Cycles per loop iteration (bottleneck warp); for `gemm`, cycles
+    /// per k-step — the same unit the simulator's `Measurement` reports.
     pub latency: f64,
-    /// FMA/clk/SM for mma loops; bytes/clk/SM for data movement.
+    /// FMA/clk/SM for compute loops; bytes/clk/SM for data movement.
     pub throughput: f64,
+}
+
+/// Pinned calibration contract of one timing family: the analytic
+/// prediction must stay within `max_rel` relative error *or* `max_abs`
+/// cycles of the cycle simulator over the family's full sweep grid on
+/// every registry device. `tests/analytic_calibration.rs` asserts these
+/// bounds — model or simulator drift fails CI before it can mislead the
+/// tuner's pruning.
+#[derive(Debug, Clone, Copy)]
+pub struct CalibrationBound {
+    /// Workload family keyword ([`crate::workload::Workload::kind`]);
+    /// `mma` covers `mma.sp` too (same engine model).
+    pub family: &'static str,
+    /// Maximum relative latency error vs the cycle simulator.
+    pub max_rel: f64,
+    /// Absolute slack (cycles) admitted when the relative bound trips —
+    /// short loops quantize on whole issue slots.
+    pub max_abs: f64,
+}
+
+impl CalibrationBound {
+    /// Does a (predicted, simulated) latency pair satisfy the bound?
+    pub fn admits(&self, predicted: f64, simulated: f64) -> bool {
+        let abs = (simulated - predicted).abs();
+        abs / predicted.max(f64::MIN_POSITIVE) < self.max_rel || abs <= self.max_abs
+    }
+}
+
+/// The per-family calibration table. Bounds are pinned with a small
+/// margin over the observed worst case so the gate trips on genuine
+/// drift, not on grid growth: the instruction families inherit the
+/// tolerances the `sim_properties` oracle tests have always enforced;
+/// `gemm` is the coarsest model (a per-k-step composition of the unit
+/// models) and carries a correspondingly wider contract.
+pub const CALIBRATION_BOUNDS: [CalibrationBound; 5] = [
+    CalibrationBound { family: "mma", max_rel: 0.18, max_abs: 4.0 },
+    CalibrationBound { family: "ldmatrix", max_rel: 0.20, max_abs: 5.0 },
+    CalibrationBound { family: "ld.shared", max_rel: 0.20, max_abs: 5.0 },
+    CalibrationBound { family: "wmma", max_rel: 0.22, max_abs: 6.0 },
+    CalibrationBound { family: "gemm", max_rel: 0.50, max_abs: 250.0 },
+];
+
+/// Look up the pinned [`CalibrationBound`] of a workload family keyword
+/// (`mma.sp` maps to the `mma` entry; `numeric` has no timing model and
+/// returns `None`).
+pub fn calibration_bound(family: &str) -> Option<&'static CalibrationBound> {
+    let family = if family == "mma.sp" { "mma" } else { family };
+    CALIBRATION_BOUNDS.iter().find(|b| b.family == family)
 }
 
 /// Warps resident on the most loaded of `n_units` units under
@@ -37,37 +108,43 @@ fn worst_unit_load(warps: u32, n_units: u32) -> u32 {
     warps.div_ceil(n_units)
 }
 
-/// Steady-state prediction of the §5/§6 mma microbenchmark.
-pub fn predict_mma(device: &Device, instr: &MmaInstr, warps: u32, ilp: u32) -> AnalyticPrediction {
-    let timing = device
-        .timing(instr)
-        .unwrap_or_else(|| panic!("{instr} unsupported on {}", device.name));
-    let l = timing.latency as f64;
-    let ii = timing.ii as f64;
+/// Shared closed form of the compute families: `chains` independent
+/// accumulator chains per warp on the `(latency, ii)` pipeline.
+fn compute_loop(device: &Device, latency: u32, ii: u32, warps: u32, chains: u32) -> f64 {
+    let l = latency as f64;
+    let ii = ii as f64;
     let sync = device.sync_cost as f64;
     let w_sc = worst_unit_load(warps, device.subcores) as f64;
-
-    let dep_path = l + (ilp as f64 - 1.0) + sync;
-    let rate_path = w_sc * ilp as f64 * ii;
+    let dep_path = l + (chains as f64 - 1.0) + sync;
+    let rate_path = w_sc * chains as f64 * ii;
     // Per-warp dispatch recovery: one warp alone sustains 1/(ii+1).
-    let warp_path = ilp as f64 * (ii + 1.0);
-    let latency = dep_path.max(rate_path).max(warp_path);
-    let fmas = warps as f64 * ilp as f64 * instr.fmas() as f64;
-    AnalyticPrediction { latency, throughput: fmas / latency }
+    let warp_path = chains as f64 * (ii + 1.0);
+    dep_path.max(rate_path).max(warp_path)
 }
 
-/// Steady-state prediction of the §7 ldmatrix microbenchmark.
-pub fn predict_ldmatrix(
+/// Steady-state prediction of the §5/§6 mma microbenchmark.
+pub fn predict_mma(
     device: &Device,
-    num: LdMatrixNum,
+    instr: &MmaInstr,
     warps: u32,
     ilp: u32,
-) -> AnalyticPrediction {
-    let txns = num.count() as f64;
+) -> Result<AnalyticPrediction, String> {
+    let timing = device
+        .timing(instr)
+        .ok_or_else(|| format!("{instr} is not supported on {}", device.name))?;
+    let latency = compute_loop(device, timing.latency, timing.ii, warps, ilp);
+    let fmas = warps as f64 * ilp as f64 * instr.fmas() as f64;
+    Ok(AnalyticPrediction { latency, throughput: fmas / latency })
+}
+
+/// Shared closed form of the pointer-chase load families: `ilp`
+/// independent chains per warp, each load costing `txns` LSU
+/// transactions and returning `bytes` per warp.
+fn smem_chase_loop(device: &Device, txns: u32, warps: u32, ilp: u32) -> f64 {
+    let txns = txns as f64;
     let txn_cy = device.lsu_txn_cycles as f64;
     let tail = device.lsu_tail as f64;
     let w_lsu = worst_unit_load(warps, device.lsu_units) as f64;
-
     // Each ILP slot is a pointer-chase chain: the next load's address
     // depends on the previous result, so a slot's period is bounded by
     // the load completion latency.
@@ -79,27 +156,187 @@ pub fn predict_ldmatrix(
     // point.
     let cap = device.lsu_pending_per_warp as f64;
     let pend = (ilp as f64 - cap).max(0.0) * txns * txn_cy * w_lsu;
-    let latency = rate_path.max(completion + pend);
+    rate_path.max(completion + pend)
+}
+
+/// Steady-state prediction of the §7 ldmatrix microbenchmark.
+pub fn predict_ldmatrix(
+    device: &Device,
+    num: LdMatrixNum,
+    warps: u32,
+    ilp: u32,
+) -> Result<AnalyticPrediction, String> {
+    if !device.arch.supports_ldmatrix() {
+        return Err(format!("ldmatrix is not available on {} ({:?})", device.name, device.arch));
+    }
+    let latency = smem_chase_loop(device, num.count(), warps, ilp);
     let bytes = warps as f64 * ilp as f64 * num.bytes_per_warp() as f64;
-    AnalyticPrediction { latency, throughput: bytes / latency }
+    Ok(AnalyticPrediction { latency, throughput: bytes / latency })
+}
+
+/// Steady-state prediction of the Table-10 `ld.shared` bank-conflict
+/// microbenchmark: `ways`-way conflicted loads are `ways` serialized
+/// transactions on the warp's LSU (never fewer than the access width's
+/// intrinsic minimum).
+pub fn predict_ld_shared(
+    device: &Device,
+    width: LdSharedWidth,
+    ways: u32,
+    warps: u32,
+    ilp: u32,
+) -> Result<AnalyticPrediction, String> {
+    if !(1..=32).contains(&ways) || !ways.is_power_of_two() {
+        return Err(format!("ld.shared conflict ways must be a power of two in 1..=32, got {ways}"));
+    }
+    if ways < width.min_transactions() {
+        return Err(format!(
+            "{width} is intrinsically {}-transaction wide; ways must be >= {}",
+            width.min_transactions(),
+            width.min_transactions()
+        ));
+    }
+    let txns = ways.max(width.min_transactions());
+    let latency = smem_chase_loop(device, txns, warps, ilp);
+    let bytes = warps as f64 * ilp as f64 * width.bytes_per_warp() as f64;
+    Ok(AnalyticPrediction { latency, throughput: bytes / latency })
+}
+
+/// Steady-state prediction of the legacy `wmma.mma` interface (§2.2):
+/// one wmma op compiles to `n/8` HMMA pieces, each an independent
+/// accumulator chain, so the loop behaves like `mma` at an effective
+/// ILP of `ilp * pieces` on the piece instruction's timing.
+pub fn predict_wmma(
+    device: &Device,
+    shape: WmmaShape,
+    ab: AbType,
+    cd: CdType,
+    warps: u32,
+    ilp: u32,
+) -> Result<AnalyticPrediction, String> {
+    if shape.m == 0 || shape.k == 0 || shape.n == 0 || shape.n % 8 != 0 {
+        return Err(format!(
+            "wmma shape m{}n{}k{} is not fragmentable: m and k must be positive and n a \
+             positive multiple of 8",
+            shape.m, shape.n, shape.k
+        ));
+    }
+    let pieces = shape.compiled_mmas(ab, cd);
+    let piece = pieces.first().expect("a fragmentable wmma shape has pieces");
+    let timing = device.timing(piece).ok_or_else(|| {
+        format!("wmma compiles to {piece}, which is not supported on {}", device.name)
+    })?;
+    let chains = ilp * pieces.len() as u32;
+    let latency = compute_loop(device, timing.latency, timing.ii, warps, chains);
+    let fmas = warps as f64 * ilp as f64 * shape.fmas() as f64;
+    Ok(AnalyticPrediction { latency, throughput: fmas / latency })
+}
+
+/// Steady-state prediction of one k-step of the Appendix-A GEMM
+/// kernels, in the simulator's units (latency = cycles per k-step,
+/// throughput = FMA/clk/SM).
+///
+/// The model composes the unit models along the step's structure:
+///
+/// * the global pipe serializes every warp's tile slice
+///   (`staged_bytes / gmem_bpc` occupancy) and adds `gmem_latency` to
+///   the last slice's arrival;
+/// * the synchronous variants then drain the smem tile stores and the
+///   fragment loads through the LSUs and the MMAs through the
+///   Tensor-Core engine *serially* — the per-step CTA barriers forbid
+///   cross-step overlap;
+/// * the `cp.async` variant overlaps the copy for step `s` with the
+///   `stages - 1` preceding steps, so its steady-state period is the
+///   max of the bandwidth bound, the on-chip work, and the latency the
+///   pipeline depth fails to hide.
+pub fn predict_gemm(
+    device: &Device,
+    cfg: &GemmConfig,
+    variant: Variant,
+    l2_resident: bool,
+) -> Result<AnalyticPrediction, String> {
+    cfg.validate()?;
+    let instr = cfg.instr();
+    let timing = device
+        .timing(&instr)
+        .ok_or_else(|| format!("gemm needs {instr}, which is not supported on {}", device.name))?;
+    if variant == Variant::Pipeline && !device.arch.supports_cp_async() {
+        return Err(format!(
+            "the gemm pipeline variant needs cp.async, which {} ({:?}) lacks",
+            device.name, device.arch
+        ));
+    }
+    let traffic = gemm::step_traffic(cfg, variant);
+    let gmem_bpc = if l2_resident {
+        device.gmem_bytes_per_cycle.max(gemm::L2_RESIDENT_BYTES_PER_CYCLE)
+    } else {
+        device.gmem_bytes_per_cycle
+    } as f64;
+    let txn_cy = device.lsu_txn_cycles as f64;
+    let w_lsu = worst_unit_load(cfg.warps, device.lsu_units) as f64;
+    let w_sc = worst_unit_load(cfg.warps, device.subcores) as f64;
+    let mmas = cfg.mmas_per_warp_step() as f64;
+    let ii = timing.ii as f64;
+
+    // Whole-CTA gmem occupancy per step, and one warp's slice of it.
+    let bw_total = (cfg.staged_bytes() as f64 / gmem_bpc).max(1.0);
+    let slice_occ = (traffic.gmem_slice as f64 / gmem_bpc).max(1.0);
+    let gmem_latency = device.gmem_latency as f64;
+    // All warps' fragment loads serialize on the shared LSUs; the last
+    // completion pays the writeback tail before its MMAs can start.
+    let load_txns = (traffic.a_loads * traffic.a_txns + traffic.b_loads * traffic.b_txns) as f64;
+    let lsu_loads = w_lsu * load_txns * txn_cy + device.lsu_tail as f64;
+    // Tensor-Core drain of the step: the engine's busy time per
+    // sub-core, but never less than one pipeline traversal + syncwarp.
+    let mma_drain = (mmas * ii).max(timing.latency as f64) + device.sync_cost as f64;
+    let tc_busy = w_sc * mmas * ii;
+    // Barrier releases and issue slots of the step's fixed ops.
+    let overhead = 4.0;
+
+    let step = match variant {
+        Variant::Baseline | Variant::Permuted => {
+            let store = traffic.store_txns as f64 * txn_cy;
+            // Stores drain inside the stagger shadow of the serialized
+            // gmem slices except the last warp's own; when one store
+            // outlasts the stagger window the LSU queue extends the
+            // phase instead.
+            let store_phase = store.max(w_lsu * store - (bw_total - slice_occ));
+            let serial = bw_total + gmem_latency + store_phase + lsu_loads + mma_drain + overhead;
+            serial.max(tc_busy)
+        }
+        Variant::Pipeline => {
+            let work = lsu_loads + mma_drain + overhead;
+            if cfg.stages == 1 {
+                // A one-deep pipeline waits for its own copy every step:
+                // the full occupancy + latency is exposed serially.
+                bw_total + gmem_latency + work
+            } else {
+                // The copy for step s is issued stages-1 steps early; if
+                // those steps are shorter than occupancy + latency, the
+                // wait exposes the remainder as the period floor.
+                let lat_need = (bw_total + gmem_latency) / (cfg.stages - 1) as f64;
+                work.max(bw_total).max(tc_busy).max(lat_need)
+            }
+        }
+    };
+    let fmas_step = cfg.warps as f64 * mmas * instr.fmas() as f64;
+    Ok(AnalyticPrediction { latency: step, throughput: fmas_step / step })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::a100;
+    use crate::device::{a100, rtx2080ti};
     use crate::isa::shapes::*;
-    use crate::isa::{AbType, CdType};
 
     #[test]
     fn table3_key_points_fp16_f32_k16() {
         // paper: (4,3) -> 27.4 cy / 897.6 FMA/clk; (8,2) -> 32.6 / 1004.2
         let d = a100();
         let i = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
-        let p43 = predict_mma(&d, &i, 4, 3);
+        let p43 = predict_mma(&d, &i, 4, 3).unwrap();
         assert!((p43.latency - 27.4).abs() < 1.5, "{p43:?}");
         assert!((p43.throughput - 897.6).abs() < 60.0, "{p43:?}");
-        let p82 = predict_mma(&d, &i, 8, 2);
+        let p82 = predict_mma(&d, &i, 8, 2).unwrap();
         assert!((p82.latency - 32.6).abs() < 1.5, "{p82:?}");
         assert!((p82.throughput - 1004.2).abs() < 40.0, "{p82:?}");
     }
@@ -110,24 +347,99 @@ mod tests {
         // (far below the 2000 sparse peak).
         let d = a100();
         let i = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K16);
-        let p = predict_mma(&d, &i, 8, 2);
+        let p = predict_mma(&d, &i, 8, 2).unwrap();
         assert!((p.latency - 25.4).abs() < 1.5, "{p:?}");
         assert!((p.throughput - 1290.5).abs() < 80.0, "{p:?}");
         // and the large-k shape does reach ~2x dense:
         let big = MmaInstr::sp(AbType::Fp16, CdType::Fp32, M16N8K32);
-        let pb = predict_mma(&d, &big, 8, 2);
+        let pb = predict_mma(&d, &big, 8, 2).unwrap();
         assert!(pb.throughput > 1900.0, "{pb:?}");
+    }
+
+    #[test]
+    fn unsupported_instruction_is_an_error_not_a_panic() {
+        // the serving tier maps this to error.code invalid_param
+        let d = rtx2080ti();
+        let i = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16);
+        let err = predict_mma(&d, &i, 4, 2).unwrap_err();
+        assert!(err.contains("not supported"), "{err}");
     }
 
     #[test]
     fn ldmatrix_saturation_points() {
         // Table 9: x4 (4,2) -> 32.2 cy / 127 B/clk; x4 (1,4) -> 64 B/clk.
         let d = a100();
-        let p42 = predict_ldmatrix(&d, LdMatrixNum::X4, 4, 2);
+        let p42 = predict_ldmatrix(&d, LdMatrixNum::X4, 4, 2).unwrap();
         assert!((p42.latency - 32.0).abs() < 1.0, "{p42:?}");
         assert!((p42.throughput - 127.0).abs() < 4.0, "{p42:?}");
-        let p14 = predict_ldmatrix(&d, LdMatrixNum::X4, 1, 4);
+        let p14 = predict_ldmatrix(&d, LdMatrixNum::X4, 1, 4).unwrap();
         assert!((p14.throughput - 64.0).abs() < 3.0, "{p14:?}");
+    }
+
+    #[test]
+    fn ld_shared_matches_table_10_conflict_scaling() {
+        // Table 10 (u32, 1 warp, ILP 1): 1-way 23 cy, 2-way 25, 4-way
+        // 29, 8-way 37 — completion = ways * txn_cycles + tail.
+        let d = a100();
+        for (ways, cycles) in [(1u32, 23.0), (2, 25.0), (4, 29.0), (8, 37.0)] {
+            let p = predict_ld_shared(&d, LdSharedWidth::U32, ways, 1, 1).unwrap();
+            assert!((p.latency - cycles).abs() < 1.5, "ways {ways}: {p:?}");
+        }
+        // u64 is intrinsically two transactions wide.
+        let p = predict_ld_shared(&d, LdSharedWidth::U64, 2, 1, 1).unwrap();
+        assert!((p.latency - 25.0).abs() < 1.5, "{p:?}");
+        assert!(predict_ld_shared(&d, LdSharedWidth::U64, 1, 1, 1).is_err());
+        assert!(predict_ld_shared(&d, LdSharedWidth::U32, 3, 1, 1).is_err());
+    }
+
+    #[test]
+    fn wmma_behaves_like_mma_at_effective_ilp() {
+        // m16n16k16 compiles to 2 HMMA pieces: wmma at ILP i must match
+        // the piece instruction at ILP 2i, with twice the FMAs.
+        let d = a100();
+        let shape = WmmaShape { m: 16, n: 16, k: 16 };
+        let piece = MmaInstr::dense(AbType::Fp16, CdType::Fp32, M16N8K16);
+        for (warps, ilp) in [(1u32, 1u32), (4, 2), (8, 2), (16, 1)] {
+            let w = predict_wmma(&d, shape, AbType::Fp16, CdType::Fp32, warps, ilp).unwrap();
+            let m = predict_mma(&d, &piece, warps, 2 * ilp).unwrap();
+            assert_eq!(w.latency, m.latency, "({warps},{ilp})");
+            assert!((w.throughput - m.throughput).abs() < 1e-9, "({warps},{ilp})");
+        }
+        // unsupported pieces surface as an error, not a panic
+        assert!(predict_wmma(&rtx2080ti(), shape, AbType::Fp16, CdType::Fp32, 4, 1).is_err());
+    }
+
+    #[test]
+    fn gemm_model_orders_the_variants_like_the_paper() {
+        // Table 16/17 directions: async staging beats synchronous
+        // staging, and the permuted layout beats baseline in the
+        // L2-resident regime.
+        let d = a100();
+        let cfg = GemmConfig { size: 512, ..GemmConfig::default() };
+        let base = predict_gemm(&d, &cfg, Variant::Baseline, false).unwrap();
+        let pipe = predict_gemm(&d, &cfg, Variant::Pipeline, false).unwrap();
+        assert!(
+            base.latency > pipe.latency * 1.3,
+            "baseline {base:?} vs pipeline {pipe:?}"
+        );
+        let base_l2 = predict_gemm(&d, &cfg, Variant::Baseline, true).unwrap();
+        let perm_l2 = predict_gemm(&d, &cfg, Variant::Permuted, true).unwrap();
+        assert!(
+            base_l2.latency > perm_l2.latency * 1.3,
+            "baseline {base_l2:?} vs permuted {perm_l2:?}"
+        );
+        // a one-deep pipeline exposes the copy latency
+        let one = predict_gemm(
+            &d,
+            &GemmConfig { size: 512, stages: 1, ..GemmConfig::default() },
+            Variant::Pipeline,
+            false,
+        )
+        .unwrap();
+        assert!(one.latency > pipe.latency, "stages 1 {one:?} vs 2 {pipe:?}");
+        // malformed configurations are typed errors
+        let bad = GemmConfig { warps: 6, ..GemmConfig::default() };
+        assert!(predict_gemm(&d, &bad, Variant::Baseline, false).is_err());
     }
 
     #[test]
@@ -136,10 +448,22 @@ mod tests {
         let d = a100();
         let i = MmaInstr::dense(AbType::Bf16, CdType::Fp32, M16N8K16);
         for ilp in 1..=4 {
-            let p6 = predict_mma(&d, &i, 6, ilp);
-            let p8 = predict_mma(&d, &i, 8, ilp);
+            let p6 = predict_mma(&d, &i, 6, ilp).unwrap();
+            let p8 = predict_mma(&d, &i, 8, ilp).unwrap();
             assert_eq!(p6.latency, p8.latency, "ILP={ilp}");
             assert!(p6.throughput <= p8.throughput);
         }
+    }
+
+    #[test]
+    fn calibration_table_covers_every_timing_family() {
+        for family in ["mma", "mma.sp", "ldmatrix", "ld.shared", "wmma", "gemm"] {
+            let b = calibration_bound(family)
+                .unwrap_or_else(|| panic!("no calibration bound for {family}"));
+            assert!(b.max_rel > 0.0 && b.max_abs > 0.0);
+            assert!(b.admits(100.0, 100.0));
+            assert!(!b.admits(100.0, 100.0 * (1.0 + b.max_rel) + b.max_abs + 1.0));
+        }
+        assert!(calibration_bound("numeric").is_none());
     }
 }

@@ -31,7 +31,10 @@ mod profile;
 mod program;
 mod smem;
 
-pub use analytic::{predict_ldmatrix, predict_mma, AnalyticPrediction};
+pub use analytic::{
+    calibration_bound, predict_gemm, predict_ld_shared, predict_ldmatrix, predict_mma,
+    predict_wmma, AnalyticPrediction, CalibrationBound, CALIBRATION_BOUNDS,
+};
 pub use core::{SmSim, WarpResult};
 pub use profile::{
     Blocked, ProfileMode, Profiler, SimProfile, Stall, TraceEvent, MAX_TRACE_EVENTS,

@@ -59,6 +59,7 @@ mod cell;
 mod numeric;
 mod plan;
 mod runner;
+mod tune;
 
 pub use cell::{
     cell_cache_stats, cell_store_stats, CellCache, CellCacheStats, CellStore, CellStoreStats,
@@ -70,6 +71,10 @@ pub use numeric::{
 };
 pub use plan::{BenchPlan, BenchResult, LintRecord, Plan, UnitKind, UnitOutput};
 pub use runner::{runner_for, ArtifactRunner, Runner, SimRunner};
+pub use tune::{
+    tune_workload, Objective, TuneReport, TunedConfig, DEFAULT_TUNE_TOP_K, GEMM_TUNE_TILES,
+    TUNE_SCHEMA,
+};
 
 use std::fmt;
 use std::sync::Arc;
@@ -84,7 +89,10 @@ use crate::microbench::{
     measure_ldmatrix_profiled, measure_mma_profiled, mma_program, Measurement, Sweep,
     SweepCell, ITERS, SWEEP_ILPS, SWEEP_WARPS,
 };
-use crate::sim::{ProfileMode, Profiler, SimProfile, WarpProgram};
+use crate::sim::{
+    predict_gemm, predict_ld_shared, predict_ldmatrix, predict_mma, predict_wmma,
+    AnalyticPrediction, ProfileMode, Profiler, SimProfile, WarpProgram,
+};
 
 /// One (#warps, ILP) execution coordinate — the paper's per-measurement
 /// configuration, shared by every workload kind.
@@ -591,6 +599,38 @@ impl Workload {
             g.config(point).validate()?;
         }
         Ok(())
+    }
+
+    /// Score this workload at one execution point with the closed-form
+    /// analytic model ([`crate::sim`]'s `predict_*` family) — no cycle
+    /// is simulated. This is the tuner's fast path: calibrated against
+    /// the cycle simulator per family (`tests/analytic_calibration.rs`
+    /// pins the bounds in [`crate::sim::CALIBRATION_BOUNDS`]) and orders
+    /// of magnitude cheaper than [`Workload::measure`]. Numeric probes
+    /// have no timing model; malformed workloads or points are typed
+    /// errors, never panics.
+    pub fn predict(
+        &self,
+        device: &Device,
+        point: ExecPoint,
+    ) -> Result<AnalyticPrediction, String> {
+        self.validate_point(point)?;
+        let ExecPoint { warps, ilp } = point;
+        match *self {
+            Workload::Mma { .. } | Workload::MmaSp { .. } => {
+                predict_mma(device, &self.mma_instr().expect("mma workload"), warps, ilp)
+            }
+            Workload::Ldmatrix { num } => predict_ldmatrix(device, num, warps, ilp),
+            Workload::LdShared { width, ways } => {
+                predict_ld_shared(device, width, ways, warps, ilp)
+            }
+            Workload::Wmma { ab, cd, shape } => predict_wmma(device, shape, ab, cd, warps, ilp),
+            Workload::Gemm(g) => predict_gemm(device, &g.config(point), g.variant, g.l2_resident),
+            Workload::Numeric(_) => Err(
+                "numeric probes have no timing model — they measure error, not cycles"
+                    .to_string(),
+            ),
+        }
     }
 
     /// The #warps axis a sweep of this workload covers: the paper's

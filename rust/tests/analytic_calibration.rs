@@ -1,0 +1,214 @@
+//! Calibration gate for the analytic fast path: the closed-form model
+//! must stay within the pinned per-family error bounds
+//! ([`CALIBRATION_BOUNDS`]) of the cycle simulator across every timing
+//! family's sweep grid on every registry device. Drift on either side —
+//! a model edit or a simulator change — fails this suite, and with it
+//! CI. The suite also pins the tentpole perf claim: scoring a config
+//! analytically must be at least 100x faster than simulating it.
+
+use std::time::Instant;
+
+use tcbench::device::{self, Device, FpuFallback};
+use tcbench::isa::{shapes, AbType, CdType, MmaInstr};
+use tcbench::microbench::measure_mma;
+use tcbench::sim::{calibration_bound, predict_mma, CALIBRATION_BOUNDS};
+use tcbench::workload::{ExecPoint, Workload};
+
+/// Every legal (warps, ilp) cell of the workload's sweep grid.
+fn grid(w: &Workload) -> Vec<ExecPoint> {
+    let mut cells = Vec::new();
+    for &warps in &w.sweep_warps_axis() {
+        for &ilp in &w.sweep_ilp_axis() {
+            let p = ExecPoint::new(warps, ilp);
+            if w.validate_point(p).is_ok() {
+                cells.push(p);
+            }
+        }
+    }
+    cells
+}
+
+/// Predict and simulate every grid cell of `w` on `dev`, asserting the
+/// family's pinned bound admits each pair.
+fn assert_family_calibrated(w: &Workload, dev: &Device) {
+    let bound = calibration_bound(w.kind())
+        .unwrap_or_else(|| panic!("no calibration bound for family {}", w.kind()));
+    let cells = grid(w);
+    assert!(!cells.is_empty(), "{}: empty grid for {}", dev.name, w.to_spec());
+    for p in cells {
+        let pred = w.predict(dev, p).unwrap_or_else(|e| {
+            panic!("{}: {} w={} ilp={}: {e}", dev.name, w.to_spec(), p.warps, p.ilp)
+        });
+        let sim = w.measure_cached(dev, p, "sim");
+        let abs = (sim.latency - pred.latency).abs();
+        assert!(
+            bound.admits(pred.latency, sim.latency),
+            "{}: {} w={} ilp={}: predicted {:.2} vs simulated {:.2} breaks the {:?} bound \
+             (rel {:.3} > {}, abs {:.2} > {})",
+            dev.name,
+            w.to_spec(),
+            p.warps,
+            p.ilp,
+            pred.latency,
+            sim.latency,
+            bound.family,
+            abs / pred.latency.max(f64::MIN_POSITIVE),
+            bound.max_rel,
+            abs,
+            bound.max_abs
+        );
+    }
+}
+
+/// Dense and sparse mma across the full 48-cell grid on every device.
+/// Fallback-free instructions only, mirroring the property-test filter:
+/// FPU-fallback shapes time as CUDA-core loops the latency model does
+/// not cover.
+#[test]
+fn mma_families_stay_within_the_pinned_bounds() {
+    for dev in device::registry() {
+        let dense: Vec<MmaInstr> = dev
+            .mma_timings
+            .iter()
+            .filter(|(i, t)| !i.sparse && t.fpu_fallback == FpuFallback::No)
+            .map(|(i, _)| *i)
+            .take(3)
+            .collect();
+        let sparse: Vec<MmaInstr> = dev
+            .mma_timings
+            .iter()
+            .filter(|(i, t)| i.sparse && t.fpu_fallback == FpuFallback::No)
+            .map(|(i, _)| *i)
+            .take(2)
+            .collect();
+        assert!(!dense.is_empty(), "{}: no dense non-fallback instructions", dev.name);
+        for instr in dense.iter().chain(&sparse) {
+            let w = if instr.sparse {
+                Workload::MmaSp { ab: instr.ab, cd: instr.cd, shape: instr.shape }
+            } else {
+                Workload::Mma { ab: instr.ab, cd: instr.cd, shape: instr.shape }
+            };
+            assert_family_calibrated(&w, &dev);
+        }
+    }
+}
+
+#[test]
+fn ldmatrix_family_stays_within_the_pinned_bounds() {
+    let mut covered = 0;
+    for dev in device::registry() {
+        for spec in ["ldmatrix x1", "ldmatrix x2", "ldmatrix x4"] {
+            let w = Workload::parse_spec(spec).unwrap();
+            if w.validate(&dev).is_err() {
+                continue;
+            }
+            assert_family_calibrated(&w, &dev);
+            covered += 1;
+        }
+    }
+    assert!(covered >= 3, "ldmatrix calibration covered only {covered} device/spec combos");
+}
+
+#[test]
+fn ld_shared_family_stays_within_the_pinned_bounds() {
+    for dev in device::registry() {
+        for spec in ["ld.shared u32 1", "ld.shared u32 4", "ld.shared u32 8", "ld.shared u64 2"] {
+            let w = Workload::parse_spec(spec).unwrap();
+            if w.validate(&dev).is_err() {
+                continue;
+            }
+            assert_family_calibrated(&w, &dev);
+        }
+    }
+}
+
+/// wmma times through its 2-instruction HMMA lowering, so it is only
+/// predictable on devices whose timing table carries the lowered piece.
+#[test]
+fn wmma_family_stays_within_the_pinned_bounds() {
+    let mut covered = 0;
+    for dev in device::registry() {
+        let w = Workload::parse_spec("wmma fp16 f32 m16n16k16").unwrap();
+        if w.validate(&dev).is_err() || w.predict(&dev, ExecPoint::new(1, 1)).is_err() {
+            continue;
+        }
+        assert_family_calibrated(&w, &dev);
+        covered += 1;
+    }
+    assert!(covered >= 1, "wmma calibration covered no device");
+}
+
+/// All three Appendix-A variants at size 512, over the tile-legal
+/// warps x stages grid, on every device that can run them (cp.async
+/// pipelines need Ampere).
+#[test]
+fn gemm_family_stays_within_the_pinned_bounds() {
+    let specs = [
+        "gemm baseline bf16 f32 512 128x128x32",
+        "gemm pipeline bf16 f32 512 128x128x32",
+        "gemm pipeline fp16 f32 512 64x64x32",
+        "gemm permuted bf16 f32 512 128x128x32 l2",
+    ];
+    let mut covered = 0;
+    for dev in device::registry() {
+        for spec in specs {
+            let w = Workload::parse_spec(spec).unwrap();
+            if w.validate(&dev).is_err() {
+                continue;
+            }
+            assert_family_calibrated(&w, &dev);
+            covered += 1;
+        }
+    }
+    assert!(covered >= specs.len(), "gemm calibration covered only {covered} device/spec combos");
+}
+
+#[test]
+fn every_timing_family_has_a_pinned_bound() {
+    for family in ["mma", "mma.sp", "ldmatrix", "ld.shared", "wmma", "gemm"] {
+        assert!(calibration_bound(family).is_some(), "no bound for {family}");
+    }
+    // numeric probes measure error, not cycles: nothing to calibrate
+    assert!(calibration_bound("numeric").is_none());
+    assert_eq!(CALIBRATION_BOUNDS.len(), 5);
+}
+
+/// The tentpole perf claim behind `/v1/tune`'s pruning: the analytic
+/// scorer must be at least 100x faster (configs/sec) than confirming
+/// the same configs on the cycle simulator. Measured over the canonical
+/// 48-cell mma grid; the real margin is orders of magnitude larger, so
+/// 100x is a conservative floor even on slow shared CI runners.
+#[test]
+fn analytic_scoring_is_at_least_100x_faster_than_the_cycle_sim() {
+    let dev = device::a100();
+    let instr = MmaInstr::dense(AbType::Fp16, CdType::Fp32, shapes::M16N8K16);
+    let w = Workload::Mma { ab: instr.ab, cd: instr.cd, shape: instr.shape };
+    let cells = grid(&w);
+    assert_eq!(cells.len(), 48);
+
+    // one uncached simulated pass (measure_mma bypasses the cell cache,
+    // so test ordering cannot turn this into warm lookups)
+    let t0 = Instant::now();
+    for p in &cells {
+        std::hint::black_box(measure_mma(&dev, &instr, p.warps, p.ilp));
+    }
+    let sim_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    // many analytic passes over the same grid, so clock resolution does
+    // not dominate the numerator
+    let reps = 200u32;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for p in &cells {
+            std::hint::black_box(predict_mma(&dev, &instr, p.warps, p.ilp).unwrap());
+        }
+    }
+    let ana_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let sim_rate = cells.len() as f64 / sim_secs;
+    let ana_rate = cells.len() as f64 * reps as f64 / ana_secs;
+    assert!(
+        ana_rate >= 100.0 * sim_rate,
+        "analytic scorer at {ana_rate:.0} configs/s is not 100x the sim's {sim_rate:.0} configs/s"
+    );
+}

@@ -35,7 +35,7 @@ fn sim_agrees_with_analytic_model() {
     for dev in device::registry() {
         for (instr, warps, ilp) in mma_cases(&dev, &mut rng, 60) {
             let sim = measure_mma(&dev, &instr, warps, ilp);
-            let ana = predict_mma(&dev, &instr, warps, ilp);
+            let ana = predict_mma(&dev, &instr, warps, ilp).unwrap();
             let abs = (sim.latency - ana.latency).abs();
             let rel = abs / ana.latency;
             assert!(
@@ -141,7 +141,7 @@ fn ldmatrix_sim_agrees_with_analytic() {
         let warps = [1u32, 2, 4, 8, 16][rng.below(5) as usize];
         let ilp = 1 + rng.below(5) as u32;
         let sim = measure_ldmatrix(&dev, num, warps, ilp);
-        let ana = predict_ldmatrix(&dev, num, warps, ilp);
+        let ana = predict_ldmatrix(&dev, num, warps, ilp).unwrap();
         let rel = (sim.latency - ana.latency).abs() / ana.latency;
         assert!(
             rel < 0.18 || (sim.latency - ana.latency).abs() <= 4.0,
