@@ -1,0 +1,353 @@
+//! tcchaos — seeded, deterministic fault injection for tcserved.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec grammar, one clause per
+//! fault, `site:kind[=value]@probability`:
+//!
+//! ```text
+//! store.read:err@0.05,store.read:delay_ms=50@0.1,sim:panic@0.01,queue:full@0.02
+//! ```
+//!
+//! Sites are the three seams the serving stack already treats as
+//! fallible, so every injected fault exercises a *real* recovery path:
+//!
+//! | site         | kinds                 | effect when drawn                        |
+//! |--------------|-----------------------|------------------------------------------|
+//! | `store.read` | `err`, `delay_ms=N`   | cell-store load fails (counted miss) / stalls |
+//! | `sim`        | `panic`, `delay_ms=N` | unit computation panics (typed `internal`) / stalls |
+//! | `queue`      | `full`                | accept queue sheds the connection (503)  |
+//!
+//! Draws come from a single seeded PRNG stream shared across worker
+//! threads: the *sequence* of draws is deterministic for a given seed;
+//! which request observes which draw depends on thread interleaving.
+//! Every injected fault is counted per `site:kind` and exported under
+//! the `chaos` section of `/v1/metrics` (JSON and Prometheus) so tests
+//! can assert injection actually happened.
+//!
+//! Injection is process-global and **off by default**: nothing is
+//! installed unless `repro serve --chaos <spec>` calls [`install`], and
+//! the call sites cost one `OnceLock::get` when disabled.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::Prng;
+
+/// An injection seam in the serving stack.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Site {
+    /// `CellStore::load` — the disk-tier read path.
+    StoreRead,
+    /// The worker-pool unit boundary, inside the request `catch_unwind`.
+    Sim,
+    /// The accept queue in front of the worker pool.
+    Queue,
+}
+
+impl Site {
+    fn name(self) -> &'static str {
+        match self {
+            Site::StoreRead => "store.read",
+            Site::Sim => "sim",
+            Site::Queue => "queue",
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Kind {
+    Err,
+    DelayMs(u64),
+    Panic,
+    Full,
+}
+
+impl Kind {
+    fn label(self) -> &'static str {
+        match self {
+            Kind::Err => "err",
+            Kind::DelayMs(_) => "delay_ms",
+            Kind::Panic => "panic",
+            Kind::Full => "full",
+        }
+    }
+}
+
+/// A failure drawn at an injection site. Delay faults never surface
+/// here — [`inject`] serves them in place (the call itself sleeps), so
+/// call sites only see the kinds they must act on.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Failure {
+    /// Fail the store read as if the entry were corrupt/unreadable.
+    StoreReadErr,
+    /// Panic the unit computation (must die inside `catch_unwind`).
+    SimPanic,
+    /// Treat the accept queue as saturated: shed with 503.
+    QueueFull,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Fault {
+    site: Site,
+    kind: Kind,
+    prob: f64,
+}
+
+/// A parsed, validated chaos spec.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Parse the `site:kind[=value]@probability[,…]` grammar. Rejects
+    /// unknown sites/kinds, kind/site mismatches, and probabilities
+    /// outside `(0, 1]` — a chaos spec typo must fail startup, not
+    /// silently inject nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut faults = Vec::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (head, prob) = clause
+                .rsplit_once('@')
+                .ok_or_else(|| format!("chaos clause '{clause}': missing '@probability'"))?;
+            let prob: f64 = prob
+                .parse()
+                .map_err(|_| format!("chaos clause '{clause}': bad probability '{prob}'"))?;
+            if !(prob > 0.0 && prob <= 1.0) {
+                return Err(format!("chaos clause '{clause}': probability must be in (0, 1]"));
+            }
+            let (site, kind) = head
+                .split_once(':')
+                .ok_or_else(|| format!("chaos clause '{clause}': expected 'site:kind'"))?;
+            let site = match site {
+                "store.read" => Site::StoreRead,
+                "sim" => Site::Sim,
+                "queue" => Site::Queue,
+                _ => {
+                    return Err(format!(
+                        "chaos clause '{clause}': unknown site '{site}' (store.read|sim|queue)"
+                    ))
+                }
+            };
+            let kind = if let Some(ms) = kind.strip_prefix("delay_ms=") {
+                Kind::DelayMs(
+                    ms.parse()
+                        .map_err(|_| format!("chaos clause '{clause}': bad delay '{ms}'"))?,
+                )
+            } else {
+                match kind {
+                    "err" => Kind::Err,
+                    "panic" => Kind::Panic,
+                    "full" => Kind::Full,
+                    _ => {
+                        return Err(format!(
+                            "chaos clause '{clause}': unknown kind '{kind}' \
+                             (err|delay_ms=N|panic|full)"
+                        ))
+                    }
+                }
+            };
+            let valid = matches!(
+                (site, kind),
+                (Site::StoreRead, Kind::Err | Kind::DelayMs(_))
+                    | (Site::Sim, Kind::Panic | Kind::DelayMs(_))
+                    | (Site::Queue, Kind::Full)
+            );
+            if !valid {
+                return Err(format!(
+                    "chaos clause '{clause}': kind '{}' is not valid for site '{}'",
+                    kind.label(),
+                    site.name()
+                ));
+            }
+            faults.push(Fault { site, kind, prob });
+        }
+        if faults.is_empty() {
+            return Err("chaos spec is empty".into());
+        }
+        Ok(FaultPlan { faults })
+    }
+}
+
+/// Injection counters, as exported under `/v1/metrics`'s `chaos` section.
+#[derive(Debug, Clone)]
+pub struct ChaosStats {
+    pub spec: String,
+    pub seed: u64,
+    pub injected_total: u64,
+    /// Per-fault counts keyed `site:kind`, sorted by key.
+    pub by_fault: Vec<(String, u64)>,
+}
+
+struct Chaos {
+    spec: String,
+    seed: u64,
+    plan: FaultPlan,
+    prng: Mutex<Prng>,
+    injected_total: AtomicU64,
+    by_fault: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Chaos {
+    fn new(spec: String, seed: u64, plan: FaultPlan) -> Self {
+        Chaos {
+            spec,
+            seed,
+            plan,
+            prng: Mutex::new(Prng::new(seed)),
+            injected_total: AtomicU64::new(0),
+            by_fault: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn count(&self, f: &Fault) {
+        self.injected_total.fetch_add(1, Ordering::Relaxed);
+        let key = format!("{}:{}", f.site.name(), f.kind.label());
+        // A poisoned counter lock only means another thread panicked
+        // mid-increment; the map itself is never left inconsistent.
+        let mut map = self.by_fault.lock().unwrap_or_else(|e| e.into_inner());
+        *map.entry(key).or_insert(0) += 1;
+    }
+
+    fn inject(&self, site: Site) -> Option<Failure> {
+        let mut failure = None;
+        for f in self.plan.faults.iter().filter(|f| f.site == site) {
+            let hit = {
+                let mut prng = self.prng.lock().unwrap_or_else(|e| e.into_inner());
+                prng.uniform() < f.prob
+            };
+            if !hit {
+                continue;
+            }
+            self.count(f);
+            match f.kind {
+                Kind::DelayMs(ms) => std::thread::sleep(Duration::from_millis(ms)),
+                Kind::Err => failure = failure.or(Some(Failure::StoreReadErr)),
+                Kind::Panic => failure = failure.or(Some(Failure::SimPanic)),
+                Kind::Full => failure = failure.or(Some(Failure::QueueFull)),
+            }
+        }
+        failure
+    }
+
+    fn stats(&self) -> ChaosStats {
+        let by_fault = self
+            .by_fault
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect();
+        ChaosStats {
+            spec: self.spec.clone(),
+            seed: self.seed,
+            injected_total: self.injected_total.load(Ordering::Relaxed),
+            by_fault,
+        }
+    }
+}
+
+static CHAOS: OnceLock<Chaos> = OnceLock::new();
+
+/// Install the process-global fault plan. Called once at server startup
+/// (`repro serve --chaos <spec> --chaos-seed N`); a second install is an
+/// error rather than a silent swap, so a running server's fault plan can
+/// never change underneath an experiment.
+pub fn install(spec: &str, seed: u64) -> Result<(), String> {
+    let plan = FaultPlan::parse(spec)?;
+    CHAOS
+        .set(Chaos::new(spec.to_string(), seed, plan))
+        .map_err(|_| "chaos plan already installed".to_string())
+}
+
+/// Is fault injection active in this process?
+pub fn enabled() -> bool {
+    CHAOS.get().is_some()
+}
+
+/// Draw faults for `site`. Delay faults are served in place (this call
+/// sleeps); at most one failure kind is returned, in spec order. Free
+/// (one `OnceLock::get`) when chaos is not installed.
+pub fn inject(site: Site) -> Option<Failure> {
+    CHAOS.get()?.inject(site)
+}
+
+/// Injection counters for `/v1/metrics`; `None` when chaos is off.
+pub fn stats() -> Option<ChaosStats> {
+    CHAOS.get().map(Chaos::stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_grammar() {
+        let plan = FaultPlan::parse(
+            "store.read:err@0.05,store.read:delay_ms=50@0.1,sim:panic@0.01,queue:full@0.02",
+        )
+        .unwrap();
+        assert_eq!(plan.faults.len(), 4);
+        assert_eq!(plan.faults[1].kind, Kind::DelayMs(50));
+        assert_eq!(plan.faults[3].site, Site::Queue);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "store.read:err",          // missing probability
+            "store.read:err@1.5",      // out of range
+            "store.read:err@0",        // zero never fires: reject loudly
+            "store.read:err@x",        // unparseable probability
+            "disk:err@0.5",            // unknown site
+            "store.read:panic@0.5",    // kind/site mismatch
+            "sim:err@0.5",             // kind/site mismatch
+            "queue:delay_ms=10@0.5",   // kind/site mismatch
+            "store.read:delay_ms=x@0.5",
+            "sim@0.5",                 // no kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn draw_sequence_is_deterministic_per_seed() {
+        let plan = || FaultPlan::parse("store.read:err@0.3,queue:full@0.2").unwrap();
+        let a = Chaos::new("spec".into(), 7, plan());
+        let b = Chaos::new("spec".into(), 7, plan());
+        let draws = |c: &Chaos| -> Vec<Option<Failure>> {
+            (0..200)
+                .map(|i| c.inject(if i % 2 == 0 { Site::StoreRead } else { Site::Queue }))
+                .collect()
+        };
+        assert_eq!(draws(&a), draws(&b));
+        assert!(a.stats().injected_total > 0, "p=0.3 over 100 draws must fire");
+        assert_eq!(a.stats().injected_total, b.stats().injected_total);
+    }
+
+    #[test]
+    fn counts_per_fault_and_in_total() {
+        let plan = FaultPlan::parse("store.read:err@1,sim:panic@1").unwrap();
+        let c = Chaos::new("spec".into(), 1, plan);
+        assert_eq!(c.inject(Site::StoreRead), Some(Failure::StoreReadErr));
+        assert_eq!(c.inject(Site::Sim), Some(Failure::SimPanic));
+        assert_eq!(c.inject(Site::Queue), None, "no queue fault in this plan");
+        let s = c.stats();
+        assert_eq!(s.injected_total, 2);
+        assert_eq!(
+            s.by_fault,
+            vec![("sim:panic".to_string(), 1), ("store.read:err".to_string(), 1)]
+        );
+    }
+
+    #[test]
+    fn probability_one_always_fires_and_zero_probability_is_rejected() {
+        let plan = FaultPlan::parse("queue:full@1.0").unwrap();
+        let c = Chaos::new("spec".into(), 9, plan);
+        for _ in 0..50 {
+            assert_eq!(c.inject(Site::Queue), Some(Failure::QueueFull));
+        }
+    }
+}

@@ -55,8 +55,13 @@
 //!   resource bounds) run by debug-mode `SmSim`, `repro lint` and
 //!   tcserved's `POST /v1/lint` — no cycle is simulated to check a
 //!   program.
+//! - [`chaos`]    — tcchaos: seeded, deterministic fault injection at
+//!   the cell-store, worker-pool and accept-queue seams, enabled only
+//!   by `repro serve --chaos`, with every injected fault counted in
+//!   `/v1/metrics`.
 
 pub mod analysis;
+pub mod chaos;
 pub mod coordinator;
 pub mod device;
 pub mod gemm;

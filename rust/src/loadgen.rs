@@ -19,6 +19,15 @@
 //! canonical POST forms of the v1 API; `503` (`overloaded`) responses
 //! are counted as shed load, not errors, because backpressure is the
 //! server behaving as configured.
+//!
+//! Backpressure is also *acted on*: a `503` is retried up to
+//! `--retries` times (default 2), honoring the server's `Retry-After`
+//! hint with capped exponential backoff and seeded jitter. A logical
+//! request that succeeds on a retry counts as `retried_ok`; one that
+//! exhausts its retry budget counts as `gave_up`; with `--retries 0`
+//! sheds stay `rejected`. `--deadline-ms` stamps every request with an
+//! `X-Deadline-Ms` header so the server's graceful-degradation path can
+//! be driven from the client side.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -86,6 +95,11 @@ pub struct LoadgenConfig {
     pub duration_secs: f64,
     /// PRNG seed: same seed + mix + concurrency = same request multiset.
     pub seed: u64,
+    /// Retry budget per logical request for `503` sheds (0 = never
+    /// retry, count sheds as `rejected` like older harness versions).
+    pub retries: u32,
+    /// When set, every request carries `X-Deadline-Ms` with this value.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for LoadgenConfig {
@@ -96,8 +110,22 @@ impl Default for LoadgenConfig {
             concurrency: 4,
             duration_secs: 5.0,
             seed: 0x1cbe_11c5,
+            retries: 2,
+            deadline_ms: None,
         }
     }
+}
+
+/// Milliseconds to wait before retry number `attempt` (0-based) of a
+/// shed request: the server's `Retry-After` hint (seconds) — or a
+/// 100 ms default — doubled per attempt, capped at 5 s, then jittered
+/// into `[backoff/2, backoff]` with the caller's seeded [`Prng`] so
+/// synchronized clients don't re-converge on the server in lockstep.
+pub fn backoff_ms(retry_after_secs: Option<u64>, attempt: u32, prng: &mut Prng) -> u64 {
+    // clamp before shifting so no Retry-After value can overflow bits
+    let base = retry_after_secs.map_or(100, |s| s.saturating_mul(1000).max(1)).min(5_000);
+    let backoff = base.checked_shl(attempt.min(16)).unwrap_or(u64::MAX).min(5_000);
+    backoff / 2 + prng.below(backoff / 2 + 1)
 }
 
 /// One sampled request: method is always POST (the canonical v1 form).
@@ -160,13 +188,29 @@ fn template(kind: MixKind, prng: &mut Prng) -> (&'static str, String) {
 /// One blocking HTTP/1.1 exchange (`Connection: close`, like the server
 /// answers anyway). Returns `(status, body)`.
 pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let (status, _, body) = http_exchange(addr, method, path, body, None)?;
+    Ok((status, body))
+}
+
+/// [`http_request`] plus the pieces the retry loop needs: an optional
+/// `X-Deadline-Ms` request header, and the response's `Retry-After`
+/// seconds (when present and numeric) next to status and body.
+pub fn http_exchange(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+    deadline_ms: Option<u64>,
+) -> Result<(u16, Option<u64>, String)> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
     stream.set_read_timeout(Some(Duration::from_secs(120)))?;
     stream.set_write_timeout(Some(Duration::from_secs(30)))?;
     stream.set_nodelay(true)?;
+    let deadline_header =
+        deadline_ms.map_or(String::new(), |ms| format!("X-Deadline-Ms: {ms}\r\n"));
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\n{deadline_header}Connection: close\r\n\r\n",
         body.len()
     );
     stream.write_all(head.as_bytes())?;
@@ -174,20 +218,33 @@ pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<
     stream.flush()?;
     let mut raw = String::new();
     stream.read_to_string(&mut raw).context("reading response")?;
-    parse_response(&raw)
+    parse_response_full(&raw)
 }
 
 fn parse_response(raw: &str) -> Result<(u16, String)> {
+    let (status, _, body) = parse_response_full(raw)?;
+    Ok((status, body))
+}
+
+fn parse_response_full(raw: &str) -> Result<(u16, Option<u64>, String)> {
     let status: u16 = raw
         .split_whitespace()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .with_context(|| format!("bad status line in {:?}", raw.lines().next().unwrap_or("")))?;
-    let body = match raw.split_once("\r\n\r\n") {
-        Some((_, b)) => b.to_string(),
-        None => String::new(),
+    let (head, body) = match raw.split_once("\r\n\r\n") {
+        Some((h, b)) => (h, b.to_string()),
+        None => (raw, String::new()),
     };
-    Ok((status, body))
+    let retry_after = head.lines().skip(1).find_map(|line| {
+        let (name, value) = line.split_once(':')?;
+        if name.trim().eq_ignore_ascii_case("retry-after") {
+            value.trim().parse::<u64>().ok()
+        } else {
+            None
+        }
+    });
+    Ok((status, retry_after, body))
 }
 
 /// `sorted` must be ascending; `q` in [0, 100].
@@ -202,10 +259,20 @@ pub fn percentile_us(sorted: &[u64], q: f64) -> u64 {
 /// Counter totals plus client-side latency of one load run.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
+    /// Logical requests issued (each may take several attempts).
     pub requests: u64,
+    /// HTTP attempts on the wire, retries included.
+    pub attempts: u64,
+    /// Logical requests that answered `200` on the first attempt.
     pub ok: u64,
-    /// `503 overloaded` responses: shed load, not failures.
+    /// Logical requests that answered `200` after at least one retry.
+    pub retried_ok: u64,
+    /// `503 overloaded` sheds taken as final because the retry budget
+    /// is zero: shed load, not failures.
     pub rejected: u64,
+    /// Logical requests still `503` after exhausting a non-zero retry
+    /// budget.
+    pub gave_up: u64,
     /// Non-503 error statuses (4xx/5xx).
     pub http_errors: u64,
     /// Connect/read failures (server down, timeout).
@@ -260,8 +327,11 @@ impl LoadReport {
         Json::obj(vec![
             ("schema", Json::str("tcbench/loadgen/v1")),
             ("requests", Json::num(self.requests as f64)),
+            ("attempts", Json::num(self.attempts as f64)),
             ("ok", Json::num(self.ok as f64)),
+            ("retried_ok", Json::num(self.retried_ok as f64)),
             ("rejected", Json::num(self.rejected as f64)),
+            ("gave_up", Json::num(self.gave_up as f64)),
             ("http_errors", Json::num(self.http_errors as f64)),
             ("transport_errors", Json::num(self.transport_errors as f64)),
             ("elapsed_secs", Json::num(self.elapsed_secs)),
@@ -312,8 +382,16 @@ impl LoadReport {
         let mut out = String::new();
         out.push_str("loadgen report\n");
         out.push_str(&format!(
-            "  requests          {} ({} ok, {} rejected, {} http errors, {} transport errors)\n",
-            self.requests, self.ok, self.rejected, self.http_errors, self.transport_errors
+            "  requests          {} ({} ok, {} retried ok, {} rejected, {} gave up, \
+             {} http errors, {} transport errors; {} attempts)\n",
+            self.requests,
+            self.ok,
+            self.retried_ok,
+            self.rejected,
+            self.gave_up,
+            self.http_errors,
+            self.transport_errors,
+            self.attempts,
         ));
         out.push_str(&format!(
             "  duration          {:.2} s  ({:.1} req/s)\n",
@@ -384,8 +462,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     }
 
     let latencies: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let attempts = AtomicU64::new(0);
     let ok = AtomicU64::new(0);
+    let retried_ok = AtomicU64::new(0);
     let rejected = AtomicU64::new(0);
+    let gave_up = AtomicU64::new(0);
     let http_errors = AtomicU64::new(0);
     let transport_errors = AtomicU64::new(0);
     let per_mix: Vec<AtomicU64> = cfg.mix.iter().map(|_| AtomicU64::new(0)).collect();
@@ -395,7 +476,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     std::thread::scope(|scope| {
         for worker in 0..cfg.concurrency.max(1) {
             let latencies = &latencies;
-            let (ok, rejected) = (&ok, &rejected);
+            let (attempts, ok, retried_ok) = (&attempts, &ok, &retried_ok);
+            let (rejected, gave_up) = (&rejected, &gave_up);
             let (http_errors, transport_errors) = (&http_errors, &transport_errors);
             let per_mix = &per_mix;
             scope.spawn(move || {
@@ -407,17 +489,34 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
                     let (path, body) = template(cfg.mix[pick], &mut prng);
                     per_mix[pick].fetch_add(1, Ordering::Relaxed);
                     let t = Instant::now();
-                    match http_request(&cfg.addr, "POST", path, &body) {
-                        Ok((status, _)) => {
-                            latencies.lock().unwrap().push(t.elapsed().as_micros() as u64);
-                            match status {
-                                200 => ok.fetch_add(1, Ordering::Relaxed),
-                                503 => rejected.fetch_add(1, Ordering::Relaxed),
-                                _ => http_errors.fetch_add(1, Ordering::Relaxed),
-                            };
-                        }
-                        Err(_) => {
-                            transport_errors.fetch_add(1, Ordering::Relaxed);
+                    // one logical request: retry 503 sheds with
+                    // Retry-After-guided backoff, everything else final
+                    let mut attempt: u32 = 0;
+                    loop {
+                        attempts.fetch_add(1, Ordering::Relaxed);
+                        match http_exchange(&cfg.addr, "POST", path, &body, cfg.deadline_ms) {
+                            Ok((503, retry_after, _)) if attempt < cfg.retries => {
+                                let wait = backoff_ms(retry_after, attempt, &mut prng);
+                                std::thread::sleep(Duration::from_millis(wait));
+                                attempt += 1;
+                            }
+                            Ok((status, _, _)) => {
+                                latencies.lock().unwrap().push(t.elapsed().as_micros() as u64);
+                                match (status, attempt) {
+                                    (200, 0) => ok.fetch_add(1, Ordering::Relaxed),
+                                    (200, _) => retried_ok.fetch_add(1, Ordering::Relaxed),
+                                    (503, _) if cfg.retries == 0 => {
+                                        rejected.fetch_add(1, Ordering::Relaxed)
+                                    }
+                                    (503, _) => gave_up.fetch_add(1, Ordering::Relaxed),
+                                    _ => http_errors.fetch_add(1, Ordering::Relaxed),
+                                };
+                                break;
+                            }
+                            Err(_) => {
+                                transport_errors.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
                         }
                     }
                 }
@@ -440,8 +539,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     }
     Ok(LoadReport {
         requests: counts.iter().sum(),
+        attempts: attempts.into_inner(),
         ok: ok.into_inner(),
+        retried_ok: retried_ok.into_inner(),
         rejected: rejected.into_inner(),
+        gave_up: gave_up.into_inner(),
         http_errors: http_errors.into_inner(),
         transport_errors: transport_errors.into_inner(),
         elapsed_secs,
@@ -513,26 +615,82 @@ mod tests {
         )
         .unwrap();
         let report = LoadReport {
-            requests: 4,
+            requests: 6,
+            attempts: 9,
             ok: 3,
+            retried_ok: 1,
             rejected: 1,
+            gave_up: 1,
             http_errors: 0,
             transport_errors: 0,
             elapsed_secs: 2.0,
             latencies_us: vec![100, 200, 300, 400],
-            per_mix: vec![("plan", 4)],
+            per_mix: vec![("plan", 6)],
             server_metrics: Some(metrics),
         };
         assert_eq!(report.result_cache_hit_rate(), Some(0.8));
         // (90 memory + 8 disk) / 100 lookups
         assert!((report.combined_cell_hit_rate().unwrap() - 0.98).abs() < 1e-9);
+        // the accounting identity every run must satisfy
+        assert_eq!(
+            report.ok
+                + report.retried_ok
+                + report.rejected
+                + report.gave_up
+                + report.http_errors
+                + report.transport_errors,
+            report.requests
+        );
         let j = report.to_json();
         assert_eq!(j.get_str("schema"), Some("tcbench/loadgen/v1"));
         assert_eq!(j.get("latency_us").unwrap().get_u64("p50"), Some(300));
         assert_eq!(j.get_u64("rejected"), Some(1));
-        assert!((j.get_f64("throughput_rps").unwrap() - 2.0).abs() < 1e-9);
+        assert_eq!(j.get_u64("retried_ok"), Some(1));
+        assert_eq!(j.get_u64("gave_up"), Some(1));
+        assert_eq!(j.get_u64("attempts"), Some(9));
+        assert!((j.get_f64("throughput_rps").unwrap() - 3.0).abs() < 1e-9);
         let text = report.render();
         assert!(text.contains("p50 300 us"), "{text}");
+        assert!(text.contains("retried ok"), "{text}");
         assert!(text.contains("cell cache+store"), "{text}");
+    }
+
+    #[test]
+    fn retry_after_header_is_extracted_case_insensitively() {
+        let (status, retry_after, body) = parse_response_full(
+            "HTTP/1.1 503 Service Unavailable\r\nretry-after: 3\r\n\r\n{}",
+        )
+        .unwrap();
+        assert_eq!((status, retry_after, body.as_str()), (503, Some(3), "{}"));
+        // absent or non-numeric hints degrade to None, never errors
+        let (_, retry_after, _) =
+            parse_response_full("HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\n{}").unwrap();
+        assert_eq!(retry_after, None);
+        let (_, retry_after, _) =
+            parse_response_full("HTTP/1.1 503 X\r\nRetry-After: Thu, 01 Jan\r\n\r\n").unwrap();
+        assert_eq!(retry_after, None);
+    }
+
+    #[test]
+    fn backoff_honors_retry_after_doubles_and_caps() {
+        let mut prng = Prng::new(7);
+        for _ in 0..64 {
+            // default base 100 ms, jittered into [50, 100]
+            let d = backoff_ms(None, 0, &mut prng);
+            assert!((50..=100).contains(&d), "{d}");
+            // attempt 1 doubles: [100, 200]
+            let d = backoff_ms(None, 1, &mut prng);
+            assert!((100..=200).contains(&d), "{d}");
+            // a 2 s Retry-After hint dominates the default
+            let d = backoff_ms(Some(2), 0, &mut prng);
+            assert!((1000..=2000).contains(&d), "{d}");
+            // the cap holds against huge hints, shifts and overflow
+            let d = backoff_ms(Some(u64::MAX), 40, &mut prng);
+            assert!(d <= 5_000, "{d}");
+        }
+        // deterministic under a fixed seed
+        let seq_a: Vec<u64> = (0..8).map(|i| backoff_ms(None, i % 3, &mut Prng::new(11))).collect();
+        let seq_b: Vec<u64> = (0..8).map(|i| backoff_ms(None, i % 3, &mut Prng::new(11))).collect();
+        assert_eq!(seq_a, seq_b);
     }
 }

@@ -48,9 +48,10 @@ fn usage() -> &'static str {
                    [--profile] [--trace FILE]\n\
        repro serve [--addr HOST:PORT] [--threads N] [--warm]\n\
                    [--cell-store DIR|none] [--replicas N | --shard i/N]\n\
-                   [--queue-depth N]\n\
+                   [--queue-depth N] [--chaos SPEC] [--chaos-seed N]\n\
        repro loadgen [--addr HOST:PORT] [--mix plan:sweep:numeric:tune]\n\
                    [--concurrency C] [--duration SECONDS] [--seed S] [--out FILE]\n\
+                   [--retries R] [--deadline-ms MS]\n\
        repro lint <spec>... [--device D] [--out DIR]   # tclint workload specs\n\
        repro lint --all [--out DIR]        # every program the campaign generates\n\
        repro tune <spec|mma|mma.sp|ldmatrix|ld.shared|wmma|gemm> [--device D]\n\
@@ -121,11 +122,26 @@ fn usage() -> &'static str {
        N consistent-hash shards in-process, --shard i/N marks this process as one\n\
        replica of a fleet. --queue-depth bounds the accept queue (overflow gets\n\
        503 + Retry-After). repro loadgen replays a deterministic plan/sweep/\n\
-       numeric mix and reports p50/p99 plus the served cache hit rates.\n\
+       numeric mix and reports p50/p99 plus the served cache hit rates; 503\n\
+       sheds are retried up to --retries times (default 2) honoring\n\
+       Retry-After with capped exponential backoff and seeded jitter.\n\
+     \n\
+     ROBUSTNESS (deadlines + tcchaos):\n\
+       Every request may carry a deadline_ms body field (or X-Deadline-Ms\n\
+       header). A blown deadline on a timing unit degrades to the calibrated\n\
+       analytic prediction (200 with a `degraded` marker, never cached);\n\
+       numeric probes have no model to fall to and answer 504\n\
+       deadline_exceeded. --chaos installs a seeded fault plan, grammar\n\
+       site:kind[=arg]@probability, comma-separated, e.g.\n\
+         --chaos \"store.read:err@0.05,store.read:delay_ms=50@0.1,\\\n\
+                  sim:panic@0.01,queue:full@0.02\" --chaos-seed 7\n\
+       Faults surface as the API's typed errors and are counted under\n\
+       `chaos` in /v1/metrics.\n\
      \n\
      SERVE ENDPOINTS:\n\
-       /healthz /v1/experiments /v1/devices POST:/v1/run/<id> POST:/v1/sweep\n\
-       POST:/v1/plan POST:/v1/lint (400 on Error diagnostics) POST:/v1/tune\n\
+       /healthz /readyz (503 while warming or saturated) /v1/experiments\n\
+       /v1/devices POST:/v1/run/<id> POST:/v1/sweep POST:/v1/plan\n\
+       POST:/v1/lint (400 on Error diagnostics) POST:/v1/tune\n\
        /v1/metrics (JSON incl. latency histograms)  /metrics (Prometheus text)\n"
 }
 
@@ -540,6 +556,16 @@ fn main() -> Result<()> {
                     .max(1),
                 None => ServerConfig::default().queue_depth,
             };
+            let chaos = args.flag("chaos").map(str::to_string);
+            let chaos_seed = match args.flag("chaos-seed") {
+                Some(s) => s
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("--chaos-seed must be an unsigned integer, got {s:?}"))?,
+                None => 0,
+            };
+            if chaos.is_none() && args.flag("chaos-seed").is_some() {
+                bail!("--chaos-seed without --chaos has no effect; give a fault spec");
+            }
             let cfg = ServerConfig {
                 addr: args.flag("addr").unwrap_or("127.0.0.1:8321").to_string(),
                 threads,
@@ -548,6 +574,8 @@ fn main() -> Result<()> {
                 replicas,
                 shard,
                 queue_depth,
+                chaos,
+                chaos_seed,
                 ..ServerConfig::default()
             };
             serve_blocking(cfg)?;
@@ -578,6 +606,16 @@ fn main() -> Result<()> {
                 cfg.seed = s
                     .parse::<u64>()
                     .map_err(|_| anyhow!("--seed must be an unsigned integer, got {s:?}"))?;
+            }
+            if let Some(r) = args.flag("retries") {
+                cfg.retries = r
+                    .parse::<u32>()
+                    .map_err(|_| anyhow!("--retries must be a non-negative integer, got {r:?}"))?;
+            }
+            if let Some(ms) = args.flag("deadline-ms") {
+                cfg.deadline_ms = Some(ms.parse::<u64>().map_err(|_| {
+                    anyhow!("--deadline-ms must be milliseconds (an unsigned integer), got {ms:?}")
+                })?);
             }
             let report = loadgen::run(&cfg).map_err(|e| anyhow!(e))?;
             print!("{}", report.render());
@@ -689,8 +727,9 @@ fn main() -> Result<()> {
             };
             // the analytic model proposes, the simulator disposes: the
             // confirmation pass always runs on the cycle simulator
-            let report = tune_workload(&workload, &dev, objective, top, "sim", default_threads())
-                .map_err(|e| anyhow!(e))?;
+            let report =
+                tune_workload(&workload, &dev, objective, top, "sim", default_threads(), None)
+                    .map_err(|e| anyhow!(e))?;
             println!(
                 "tune {} on {} — objective {}",
                 report.workload,
@@ -712,16 +751,27 @@ fn main() -> Result<()> {
                 "rank", "warps", "ilp", "pred_lat", "sim_lat", "pred_thr", "sim_thr", "calib"
             );
             for (i, c) in report.configs.iter().enumerate() {
+                // unconfirmed rows (deadline fell over before the cycle-sim
+                // pass) have no simulated columns; the calib verdict says so
+                let sim_lat = c.simulated_latency.map_or("-".to_string(), |v| format!("{v:.2}"));
+                let sim_thr = c.simulated_throughput.map_or("-".to_string(), |v| format!("{v:.1}"));
+                let calib = if !c.confirmed {
+                    "pred"
+                } else if c.within_calibration {
+                    "ok"
+                } else {
+                    "drift"
+                };
                 println!(
-                    "{:<4} {:>5} {:>4} {:>10.2} {:>10.2} {:>10.1} {:>10.1} {:>6}  {}",
+                    "{:<4} {:>5} {:>4} {:>10.2} {:>10} {:>10.1} {:>10} {:>6}  {}",
                     i + 1,
                     c.point.warps,
                     c.point.ilp,
                     c.predicted.latency,
-                    c.simulated_latency,
+                    sim_lat,
                     c.predicted.throughput,
-                    c.simulated_throughput,
-                    if c.within_calibration { "ok" } else { "drift" },
+                    sim_thr,
+                    calib,
                     c.spec
                 );
             }

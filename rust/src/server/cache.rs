@@ -99,6 +99,9 @@ pub struct CacheStats {
 pub struct ResultCache {
     capacity: usize,
     disk_dir: Option<PathBuf>,
+    // Invariant: lock unwraps on both mutexes only fail on poisoning,
+    // which is unreachable — the critical sections are map bookkeeping
+    // only, and `compute` closures run outside them.
     inner: Mutex<Inner>,
     inflight: Mutex<HashMap<String, Arc<Flight>>>,
 }
@@ -193,6 +196,26 @@ impl ResultCache {
     where
         F: FnOnce() -> Result<String, String>,
     {
+        self.get_or_compute_with(key, || compute().map(|v| (v, true)))
+    }
+
+    /// [`ResultCache::get_or_compute`] for computations that may
+    /// produce a valid but *non-cacheable* value — a deadline-degraded
+    /// payload that must not shadow the bit-exact simulated answer for
+    /// later, un-hurried requests. `compute` returns `(value,
+    /// cacheable)`; only cacheable values enter the memory/disk layers.
+    /// Coalesced waiters of the same flight still receive the leader's
+    /// value either way (they asked while it was being produced); the
+    /// key simply stays vacant afterwards, so the next request
+    /// recomputes.
+    pub fn get_or_compute_with<F>(
+        &self,
+        key: &CacheKey,
+        compute: F,
+    ) -> (Result<String, String>, Origin)
+    where
+        F: FnOnce() -> Result<(String, bool), String>,
+    {
         if let Some(v) = self.lookup_memory(key) {
             return (Ok(v), Origin::Memory);
         }
@@ -229,11 +252,16 @@ impl ResultCache {
         let (result, origin) = match self.lookup_memory(key) {
             Some(v) => (Ok(v), Origin::Memory),
             None => {
-                let result = compute();
-                if let Ok(v) = &result {
-                    self.insert_memory(key, v.clone());
-                    self.write_disk(key, v);
-                }
+                let result = match compute() {
+                    Ok((v, cacheable)) => {
+                        if cacheable {
+                            self.insert_memory(key, v.clone());
+                            self.write_disk(key, &v);
+                        }
+                        Ok(v)
+                    }
+                    Err(e) => Err(e),
+                };
                 (result, Origin::Computed)
             }
         };
@@ -297,6 +325,21 @@ mod tests {
         let (r, o) = cache.get_or_compute(&k, || Ok("recovered".to_string()));
         assert_eq!(r.unwrap(), "recovered");
         assert_eq!(o, Origin::Computed);
+    }
+
+    #[test]
+    fn non_cacheable_values_are_served_but_not_stored() {
+        let cache = ResultCache::new(8, None);
+        let k = key("degraded");
+        let (r, o) = cache.get_or_compute_with(&k, || Ok(("degraded payload".to_string(), false)));
+        assert_eq!(r.unwrap(), "degraded payload");
+        assert_eq!(o, Origin::Computed);
+        assert!(!cache.contains(&k), "non-cacheable values must leave the key vacant");
+        // the next request recomputes and may cache normally
+        let (r, o) = cache.get_or_compute_with(&k, || Ok(("full payload".to_string(), true)));
+        assert_eq!(r.unwrap(), "full payload");
+        assert_eq!(o, Origin::Computed);
+        assert!(cache.contains(&k));
     }
 
     #[test]

@@ -153,6 +153,9 @@ impl HistogramSet {
 
     /// The histogram for `label`, created on first use.
     pub fn get(&self, label: &str) -> Arc<Histogram> {
+        // Invariant: lock unwraps here and in `snapshot` only fail on
+        // poisoning; nothing under the lock can panic (map lookup,
+        // insert, and Arc clones).
         let mut map = self.by_label.lock().unwrap();
         if let Some(h) = map.get(label) {
             return Arc::clone(h);

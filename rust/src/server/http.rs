@@ -16,21 +16,25 @@ use crate::util::Json;
 const MAX_LINE: usize = 16 * 1024;
 /// Most accepted header lines per request.
 const MAX_HEADERS: usize = 128;
-/// Largest accepted request body (a JSON `BenchPlan` is well under this).
-const MAX_BODY_BYTES: usize = 32 * 1024;
+/// Largest accepted request body. Generous — a JSON `BenchPlan` is tens
+/// of kilobytes at most — but bounded: past it the request is rejected
+/// with a typed `413` instead of buffering arbitrary client input.
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
 /// Hard cap on the bytes read per request (head + body). `read_line` is
 /// only length-checked after it returns, so the reader itself must be
 /// bounded or a client streaming an endless line would grow the buffer
 /// without limit.
-const MAX_REQUEST_BYTES: u64 = 64 * 1024;
+const MAX_REQUEST_BYTES: u64 = (MAX_BODY_BYTES + 64 * 1024) as u64;
 
 /// A parsed request: method, decoded path, decoded query parameters,
-/// and the raw body (empty for bodyless requests).
+/// retained headers and the raw body (empty for bodyless requests).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub method: String,
     pub path: String,
     pub query: Vec<(String, String)>,
+    /// Header fields in arrival order: lowercased names, trimmed values.
+    pub headers: Vec<(String, String)>,
     pub body: String,
 }
 
@@ -39,6 +43,26 @@ impl Request {
     pub fn param(&self, key: &str) -> Option<&str> {
         self.query.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
+
+    /// Last value of a header field, by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().rev().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read off the wire — split by the status
+/// the caller must answer with.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Connection closed without sending anything (port probe, the
+    /// server's own shutdown wake-up) — nothing to respond to.
+    Empty,
+    /// The declared body exceeds [`MAX_BODY_BYTES`] (or the
+    /// `Content-Length` value does not parse as a size at all) → `413`.
+    TooLarge(String),
+    /// Anything else wrong with the request head or body → `400`.
+    Malformed(String),
 }
 
 /// Decode `%XX` escapes and `+` (as space). Malformed escapes pass
@@ -76,69 +100,76 @@ pub fn percent_decode(s: &str) -> String {
 }
 
 /// Read and parse one request from the stream. Header fields are read
-/// to the blank line; only `Content-Length` is interpreted, to read the
-/// body of `POST /v1/plan` (tcserved closes the connection after each
-/// response, so there is no pipelining to account for).
-pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
+/// to the blank line and retained on the request (lowercased names);
+/// `Content-Length` sizes the body read and `Expect: 100-continue`
+/// triggers the interim response (tcserved closes the connection after
+/// each response, so there is no pipelining to account for).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, ReadError> {
     use std::io::Read as _;
+    let malformed = ReadError::Malformed;
     // An OS-level dup for writing the interim `100 Continue` while the
     // buffered reader below owns the `&mut` borrow.
     let interim_writer = stream.try_clone();
     let mut reader = BufReader::new(stream.take(MAX_REQUEST_BYTES));
 
     let mut line = String::new();
-    reader.read_line(&mut line).map_err(|e| format!("reading request line: {e}"))?;
+    reader.read_line(&mut line).map_err(|e| malformed(format!("reading request line: {e}")))?;
     if line.is_empty() {
-        return Err("empty request (connection closed)".to_string());
+        return Err(ReadError::Empty);
     }
     if line.len() > MAX_LINE {
-        return Err("request line too long".to_string());
+        return Err(malformed("request line too long".to_string()));
     }
 
     let mut parts = line.split_whitespace();
-    let method = parts.next().ok_or("empty request line")?.to_string();
-    let target = parts.next().ok_or("missing request target")?.to_string();
-    let version = parts.next().ok_or("missing HTTP version")?;
+    let method = parts.next().ok_or_else(|| malformed("empty request line".into()))?.to_string();
+    let target =
+        parts.next().ok_or_else(|| malformed("missing request target".into()))?.to_string();
+    let version = parts.next().ok_or_else(|| malformed("missing HTTP version".into()))?;
     if !version.starts_with("HTTP/") {
-        return Err(format!("bad HTTP version {version:?}"));
+        return Err(malformed(format!("bad HTTP version {version:?}")));
     }
 
+    let mut headers: Vec<(String, String)> = Vec::new();
     let mut content_length: usize = 0;
     let mut expect_continue = false;
     let mut headers_done = false;
     for _ in 0..MAX_HEADERS {
         let mut header = String::new();
-        let n = reader.read_line(&mut header).map_err(|e| format!("reading header: {e}"))?;
+        let n =
+            reader.read_line(&mut header).map_err(|e| malformed(format!("reading header: {e}")))?;
         if n == 0 || header == "\r\n" || header == "\n" {
             headers_done = true;
             break;
         }
         if header.len() > MAX_LINE {
-            return Err("header line too long".to_string());
+            return Err(malformed("header line too long".to_string()));
         }
         if let Some((name, value)) = header.split_once(':') {
-            let name = name.trim();
-            if name.eq_ignore_ascii_case("content-length") {
-                content_length = value
-                    .trim()
-                    .parse()
-                    .map_err(|_| format!("bad Content-Length {:?}", value.trim()))?;
-            } else if name.eq_ignore_ascii_case("expect")
-                && value.trim().eq_ignore_ascii_case("100-continue")
-            {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                // an unparseable or overflowing size is still a size
+                // claim we cannot honor — reject as too large, not as
+                // a generic parse error
+                content_length = value.parse().map_err(|_| {
+                    ReadError::TooLarge(format!("bad Content-Length {value:?}"))
+                })?;
+            } else if name == "expect" && value.eq_ignore_ascii_case("100-continue") {
                 expect_continue = true;
             }
+            headers.push((name, value));
         }
     }
     // Never fall through with unread header lines: the body reader below
     // would consume them as the request body.
     if !headers_done {
-        return Err(format!("too many header lines (limit {MAX_HEADERS})"));
+        return Err(malformed(format!("too many header lines (limit {MAX_HEADERS})")));
     }
     if content_length > MAX_BODY_BYTES {
-        return Err(format!(
+        return Err(ReadError::TooLarge(format!(
             "request body too large ({content_length} bytes; limit {MAX_BODY_BYTES})"
-        ));
+        )));
     }
 
     let mut body = String::new();
@@ -157,8 +188,9 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
         let mut buf = vec![0u8; content_length];
         reader
             .read_exact(&mut buf)
-            .map_err(|e| format!("reading {content_length}-byte request body: {e}"))?;
-        body = String::from_utf8(buf).map_err(|_| "request body is not UTF-8".to_string())?;
+            .map_err(|e| malformed(format!("reading {content_length}-byte request body: {e}")))?;
+        body = String::from_utf8(buf)
+            .map_err(|_| malformed("request body is not UTF-8".to_string()))?;
     }
 
     let (path_raw, query_raw) = match target.split_once('?') {
@@ -175,7 +207,7 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
             query.push((percent_decode(k), percent_decode(v)));
         }
     }
-    Ok(Request { method, path: percent_decode(path_raw), query, body })
+    Ok(Request { method, path: percent_decode(path_raw), query, headers, body })
 }
 
 /// Version tag of the one response envelope every JSON endpoint answers
@@ -276,8 +308,10 @@ pub fn status_text(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -333,6 +367,25 @@ mod tests {
     fn status_texts() {
         assert_eq!(status_text(200), "OK");
         assert_eq!(status_text(404), "Not Found");
+        assert_eq!(status_text(413), "Payload Too Large");
+        assert_eq!(status_text(504), "Gateway Timeout");
         assert_eq!(status_text(599), "Unknown");
+    }
+
+    #[test]
+    fn header_lookup_is_case_insensitive_and_last_wins() {
+        let req = Request {
+            method: "GET".to_string(),
+            path: "/".to_string(),
+            query: vec![],
+            headers: vec![
+                ("x-deadline-ms".to_string(), "100".to_string()),
+                ("x-deadline-ms".to_string(), "250".to_string()),
+            ],
+            body: String::new(),
+        };
+        assert_eq!(req.header("X-Deadline-Ms"), Some("250"));
+        assert_eq!(req.header("x-deadline-ms"), Some("250"));
+        assert_eq!(req.header("content-length"), None);
     }
 }

@@ -22,6 +22,9 @@ use super::histogram::{bucket_bound, HistogramSet, BUCKETS};
 /// a per-call allocation or an unbounded leak.
 pub fn intern(label: &str) -> &'static str {
     static INTERNED: Mutex<BTreeSet<&'static str>> = Mutex::new(BTreeSet::new());
+    // Invariant: lock unwraps in this module only fail on poisoning,
+    // and no thread can panic inside these critical sections — they
+    // are pure map/counter bookkeeping with no user code.
     let mut set = INTERNED.lock().unwrap();
     if let Some(&s) = set.get(label) {
         return s;
@@ -65,6 +68,14 @@ pub struct Metrics {
     /// Tuner predicted-vs-simulated latency relative error, in parts
     /// per million, keyed by workload family.
     tune_rel_err_ppm: HistogramSet,
+    /// Timing units served from the calibrated analytic prediction
+    /// because the request's `deadline_ms` budget was blown.
+    degraded_total: AtomicU64,
+    /// Degradations by workload family (`mma`, `ldmatrix`, ...).
+    degraded_by_family: Mutex<BTreeMap<&'static str, u64>>,
+    /// Requests answered `504 deadline_exceeded` (numeric units, which
+    /// have no analytic model to degrade to).
+    deadline_exceeded_total: AtomicU64,
 }
 
 impl Metrics {
@@ -87,6 +98,9 @@ impl Metrics {
             tune_configs_scored: AtomicU64::new(0),
             tune_configs_confirmed: AtomicU64::new(0),
             tune_rel_err_ppm: HistogramSet::new(),
+            degraded_total: AtomicU64::new(0),
+            degraded_by_family: Mutex::new(BTreeMap::new()),
+            deadline_exceeded_total: AtomicU64::new(0),
         }
     }
 
@@ -138,6 +152,20 @@ impl Metrics {
     /// relative error, recorded in parts per million under `family`.
     pub fn record_tune_rel_err(&self, family: &str, rel_err: f64) {
         self.tune_rel_err_ppm.record_us(family, (rel_err.abs() * 1e6) as u64);
+    }
+
+    /// One timing unit of `family` served degraded: its `deadline_ms`
+    /// budget blew before the cycle simulation finished, so the
+    /// calibrated analytic prediction was served instead.
+    pub fn record_degraded(&self, family: &str) {
+        self.degraded_total.fetch_add(1, Ordering::Relaxed);
+        *self.degraded_by_family.lock().unwrap().entry(intern(family)).or_insert(0) += 1;
+    }
+
+    /// One request answered `504 deadline_exceeded` — the budget blew
+    /// on a unit with no analytic model to degrade to.
+    pub fn record_deadline_exceeded(&self) {
+        self.deadline_exceeded_total.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One completed computation of `id`, taking `ms` milliseconds.
@@ -285,6 +313,64 @@ impl Metrics {
                     ("configs_scored", Json::num(scored as f64)),
                     ("configs_confirmed", Json::num(confirmed as f64)),
                     ("rel_err_ppm", self.tune_rel_err_ppm.to_json()),
+                ])
+            }),
+            // deadline handling: analytic degradations (served 200 with
+            // a `degraded` marker) and hard 504s (no model to fall to)
+            (
+                "robustness",
+                Json::obj(vec![
+                    (
+                        "degraded_total",
+                        Json::num(self.degraded_total.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "degraded_by_family",
+                        Json::Obj(
+                            self.degraded_by_family
+                                .lock()
+                                .unwrap()
+                                .iter()
+                                .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "deadline_exceeded_total",
+                        Json::num(self.deadline_exceeded_total.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            // tcchaos fault injection; `enabled: false` (zeroed
+            // counters) when the server runs without `--chaos`, so the
+            // section's shape is scrape-stable
+            ("chaos", {
+                let stats = crate::chaos::stats();
+                Json::obj(vec![
+                    ("enabled", Json::Bool(stats.is_some())),
+                    (
+                        "spec",
+                        stats.as_ref().map_or(Json::Null, |s| Json::Str(s.spec.clone())),
+                    ),
+                    ("seed", Json::num(stats.as_ref().map_or(0, |s| s.seed) as f64)),
+                    (
+                        "injected_total",
+                        Json::num(stats.as_ref().map_or(0, |s| s.injected_total) as f64),
+                    ),
+                    (
+                        "by_fault",
+                        Json::Obj(
+                            stats
+                                .as_ref()
+                                .map(|s| {
+                                    s.by_fault
+                                        .iter()
+                                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                                        .collect()
+                                })
+                                .unwrap_or_default(),
+                        ),
+                    ),
                 ])
             }),
             ("experiments", experiments),
@@ -470,6 +556,59 @@ impl Metrics {
             metric(name, "counter", help, &[(String::new(), value)]);
         }
 
+        metric(
+            "degraded_total",
+            "counter",
+            "Timing units served from the analytic prediction after a blown deadline_ms.",
+            &[(String::new(), self.degraded_total.load(Ordering::Relaxed) as f64)],
+        );
+        metric(
+            "degraded_by_family_total",
+            "counter",
+            "Deadline degradations by workload family.",
+            &self
+                .degraded_by_family
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (format!("{{family=\"{k}\"}}"), *v as f64))
+                .collect::<Vec<_>>(),
+        );
+        metric(
+            "deadline_exceeded_total",
+            "counter",
+            "Requests answered 504 deadline_exceeded (no analytic fallback).",
+            &[(String::new(), self.deadline_exceeded_total.load(Ordering::Relaxed) as f64)],
+        );
+
+        let chaos = crate::chaos::stats();
+        metric(
+            "chaos_enabled",
+            "gauge",
+            "1 when a tcchaos fault plan is installed (--chaos).",
+            &[(String::new(), if chaos.is_some() { 1.0 } else { 0.0 })],
+        );
+        metric(
+            "chaos_injected_total",
+            "counter",
+            "Faults injected by the tcchaos plan, all sites.",
+            &[(String::new(), chaos.as_ref().map_or(0, |s| s.injected_total) as f64)],
+        );
+        metric(
+            "chaos_faults_total",
+            "counter",
+            "Faults injected by the tcchaos plan, by site:kind.",
+            &chaos
+                .as_ref()
+                .map(|s| {
+                    s.by_fault
+                        .iter()
+                        .map(|(k, v)| (format!("{{fault=\"{k}\"}}"), *v as f64))
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_default(),
+        );
+
         {
             let computes = self.computes.lock().unwrap();
             metric(
@@ -574,6 +713,10 @@ mod tests {
         m.record_lint(0, 1);
         m.record_tune(48, 8);
         m.record_tune_rel_err("mma", 0.05);
+        m.record_degraded("mma");
+        m.record_degraded("mma");
+        m.record_degraded("ldmatrix");
+        m.record_deadline_exceeded();
 
         m.record_rejected();
 
@@ -606,6 +749,17 @@ mod tests {
         for field in ["hits", "misses", "evictions", "cells_simulated", "entries", "capacity"] {
             assert!(cells.get_u64(field).is_some(), "cell_cache.{field} missing");
         }
+        let rob = j.get("robustness").unwrap();
+        assert_eq!(rob.get_u64("degraded_total"), Some(3));
+        assert_eq!(rob.get("degraded_by_family").unwrap().get_u64("mma"), Some(2));
+        assert_eq!(rob.get("degraded_by_family").unwrap().get_u64("ldmatrix"), Some(1));
+        assert_eq!(rob.get_u64("deadline_exceeded_total"), Some(1));
+        // the chaos section is shape-stable whether or not a fault plan
+        // is installed (process-global, so only shape is asserted here)
+        let chaos = j.get("chaos").unwrap();
+        assert!(chaos.get("enabled").and_then(Json::as_bool).is_some());
+        assert!(chaos.get_u64("injected_total").is_some());
+        assert!(chaos.get("by_fault").unwrap().as_obj().is_some());
         // the cell-store section is always present (enabled=false with
         // zeroed counters when no store is attached)
         let store = j.get("cell_store").unwrap();
@@ -662,6 +816,8 @@ mod tests {
         m.record_lint(1, 4);
         m.record_tune(48, 8);
         m.record_tune_rel_err("mma", 0.05);
+        m.record_degraded("mma");
+        m.record_deadline_exceeded();
 
         let stats = CacheStats { entries: 2, capacity: 8, evictions: 1 };
         let text = m.to_prometheus(stats);
@@ -695,6 +851,11 @@ mod tests {
         assert!(text.contains("tcserved_tune_configs_scored_total 48"));
         assert!(text.contains("tcserved_tune_configs_confirmed_total 8"));
         assert!(text.contains("tcserved_tune_rel_err_ppm_count{family=\"mma\"} 1"));
+        assert!(text.contains("tcserved_degraded_total 1"));
+        assert!(text.contains("tcserved_degraded_by_family_total{family=\"mma\"} 1"));
+        assert!(text.contains("tcserved_deadline_exceeded_total 1"));
+        assert!(text.contains("tcserved_chaos_enabled"));
+        assert!(text.contains("tcserved_chaos_injected_total"));
         assert!(text.contains("tcserved_tune_rel_err_ppm_sum{family=\"mma\"} 50000"));
         assert!(text.contains("tcserved_computes_total{id=\"plan\"} 1"));
         assert!(text.contains("tcserved_compute_ms_total{id=\"plan\"} 12.5"));

@@ -9,9 +9,10 @@
 //! ```text
 //! repro serve [--addr 127.0.0.1:8321] [--threads N] [--warm]
 //!             [--cell-store DIR|none] [--replicas N | --shard i/N]
-//!             [--queue-depth N]
+//!             [--queue-depth N] [--chaos SPEC --chaos-seed N]
 //!
 //! GET  /healthz             liveness + registry size
+//! GET  /readyz              readiness: 503 while warming or queue-saturated
 //! GET  /v1/experiments      the 19 registered experiments (+cache state)
 //! GET  /v1/devices          calibrated devices
 //! POST /v1/run/<id>         one experiment, cached  {"backend": ...}
@@ -88,6 +89,12 @@ pub struct ServerConfig {
     /// Accepted-connection queue depth; beyond it new connections are
     /// answered `503` + `Retry-After` instead of queueing unboundedly.
     pub queue_depth: usize,
+    /// tcchaos fault plan (`--chaos "store.read:err@0.05,..."`); `None`
+    /// (the default) injects nothing. See [`crate::chaos`].
+    pub chaos: Option<String>,
+    /// Seed of the chaos PRNG (`--chaos-seed`), so fault sequences are
+    /// reproducible run to run.
+    pub chaos_seed: u64,
 }
 
 impl Default for ServerConfig {
@@ -102,6 +109,8 @@ impl Default for ServerConfig {
             replicas: 1,
             shard: None,
             queue_depth: 256,
+            chaos: None,
+            chaos_seed: 0,
         }
     }
 }
@@ -118,6 +127,13 @@ impl Server {
     /// Bind, optionally warm the cache, and start accepting connections
     /// on background threads. Returns once the socket is live.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
+        if let Some(spec) = &cfg.chaos {
+            // install before anything can race a fault site; a bad spec
+            // (or a second install in this process) is a startup error,
+            // never a silently fault-free server
+            crate::chaos::install(spec, cfg.chaos_seed)
+                .map_err(|e| anyhow::anyhow!("--chaos: {e}"))?;
+        }
         let listener = TcpListener::bind(cfg.addr.as_str())
             .with_context(|| format!("binding tcserved to {}", cfg.addr))?;
         let addr = listener.local_addr()?;
@@ -140,9 +156,19 @@ impl Server {
             ResultCache::new(cfg.cache_capacity, cfg.disk_cache.clone()),
             ShardRouter::new(replicas, local, cfg.threads.max(1)),
         ));
+        state.readiness.set_queue_capacity(cfg.queue_depth.max(1));
         if cfg.warm {
-            let warmed = router::warm(&state, cfg.threads);
-            eprintln!("[tcserved] warmed {warmed}/{} experiments", EXPERIMENTS.len());
+            // Warm in the background so the socket is live immediately;
+            // `/readyz` answers 503 until the warm pass finishes (the
+            // liveness probe `/healthz` answers 200 throughout).
+            state.readiness.set_warming(true);
+            let warm_state = Arc::clone(&state);
+            let warm_threads = cfg.threads;
+            thread::spawn(move || {
+                let warmed = router::warm(&warm_state, warm_threads);
+                eprintln!("[tcserved] warmed {warmed}/{} experiments", EXPERIMENTS.len());
+                warm_state.readiness.set_warming(false);
+            });
         }
 
         // Bounded hand-off: `try_send` in the acceptor keeps the queue at
@@ -164,8 +190,15 @@ impl Server {
                     break;
                 }
                 let Ok(stream) = conn else { continue };
+                // tcchaos queue site: a synthetic queue-full rejection,
+                // exercising the same 503 + Retry-After shed path real
+                // saturation takes
+                if crate::chaos::inject(crate::chaos::Site::Queue).is_some() {
+                    reject_overloaded(&accept_state, stream);
+                    continue;
+                }
                 match tx.try_send(stream) {
-                    Ok(()) => {}
+                    Ok(()) => accept_state.readiness.queue_enter(),
                     Err(mpsc::TrySendError::Full(stream)) => {
                         reject_overloaded(&accept_state, stream)
                     }
@@ -227,10 +260,15 @@ fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>, state: Arc<AppState>) 
     loop {
         // Lock only around `recv`: the guard is a temporary of this
         // statement, so request handling below runs unlocked and
-        // connections are processed concurrently across workers.
+        // connections are processed concurrently across workers. The
+        // lock unwrap only fails on poisoning, which is unreachable —
+        // `recv` is the sole operation ever run under this mutex.
         let stream = rx.lock().unwrap().recv();
         match stream {
-            Ok(s) => handle_connection(&state, s),
+            Ok(s) => {
+                state.readiness.queue_exit();
+                handle_connection(&state, s);
+            }
             Err(_) => break, // acceptor gone
         }
     }
@@ -252,9 +290,13 @@ fn handle_connection(state: &AppState, mut stream: TcpStream) {
         // A connection closed without sending anything (port probe,
         // stop()'s wake-up socket) is not a request — no response to
         // write, nothing to count.
-        Err(e) if e.starts_with("empty request") => return,
-        Err(e) => {
+        Err(http::ReadError::Empty) => return,
+        Err(http::ReadError::TooLarge(e)) => {
             // keep requests_total/by_endpoint reconciled with by_status
+            state.metrics.record_request("malformed");
+            Response::error(413, "payload_too_large", e)
+        }
+        Err(http::ReadError::Malformed(e)) => {
             state.metrics.record_request("malformed");
             Response::error(400, "malformed_request", e)
         }
@@ -284,8 +326,11 @@ pub fn serve_blocking(cfg: ServerConfig) -> Result<()> {
         Some(dir) => eprintln!("[tcserved] cell store: {}", dir.display()),
         None => eprintln!("[tcserved] cell store: disabled"),
     }
+    if let Some(stats) = crate::chaos::stats() {
+        eprintln!("[tcserved] tcchaos armed: {} (seed {})", stats.spec, stats.seed);
+    }
     eprintln!(
-        "[tcserved] endpoints: /healthz /v1/experiments /v1/devices POST:/v1/run/<id> \
+        "[tcserved] endpoints: /healthz /readyz /v1/experiments /v1/devices POST:/v1/run/<id> \
          POST:/v1/sweep POST:/v1/plan POST:/v1/lint /v1/metrics /metrics"
     );
     server.join();

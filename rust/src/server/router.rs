@@ -25,24 +25,88 @@
 //! compute-light and bypasses the cache.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::time::Instant;
 
 use crate::coordinator::{self, run_parallel, BackendKind, ExperimentId, EXPERIMENTS};
 use crate::device::{self, Device};
 use crate::report;
+use crate::sim::Budget;
 use crate::util::Json;
-use crate::workload::{self, BenchPlan, Plan, Runner, UnitKind, Workload};
+use crate::workload::{self, BenchPlan, Plan, Runner, UnitKind, UnitRun, Workload};
 
 use super::cache::{cache_key, CacheKey, Origin, ResultCache};
 use super::http::{Request, Response};
 use super::metrics::Metrics;
 use super::shard::ShardRouter;
 
+/// Private sentinel prefix on the error channel marking a typed
+/// deadline failure (numeric units have no analytic fallback): the
+/// cache's `Err` path carries plain strings, so the handler needs an
+/// in-band marker to answer `504 deadline_exceeded` instead of `500`.
+/// `\u{1}` cannot appear in any legitimate error message.
+const DEADLINE_SENTINEL: &str = "\u{1}deadline_exceeded\u{1}";
+
+/// Readiness state for `/readyz`: liveness (`/healthz`) says the
+/// process answers; readiness says it is *worth sending traffic to* —
+/// not still warming the experiment cache, and not sitting on a
+/// saturated accept queue.
+#[derive(Debug, Default)]
+pub struct Readiness {
+    warming: AtomicBool,
+    queue_len: AtomicUsize,
+    /// 0 = not configured (direct `AppState` use in tests/embedding):
+    /// saturation never reports.
+    queue_capacity: AtomicUsize,
+}
+
+impl Readiness {
+    pub fn set_warming(&self, on: bool) {
+        self.warming.store(on, Ordering::SeqCst);
+    }
+
+    pub fn warming(&self) -> bool {
+        self.warming.load(Ordering::SeqCst)
+    }
+
+    pub fn set_queue_capacity(&self, capacity: usize) {
+        self.queue_capacity.store(capacity, Ordering::SeqCst);
+    }
+
+    pub fn queue_enter(&self) {
+        self.queue_len.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn queue_exit(&self) {
+        // saturating: enter/exit are called from different threads and
+        // the exit for a pre-registration connection must not wrap
+        let _ = self.queue_len.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+            Some(n.saturating_sub(1))
+        });
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue_len.load(Ordering::SeqCst)
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity.load(Ordering::SeqCst)
+    }
+
+    /// Full accept queue (only meaningful once the server configured a
+    /// capacity).
+    pub fn saturated(&self) -> bool {
+        let cap = self.queue_capacity();
+        cap > 0 && self.queue_len() >= cap
+    }
+}
+
 /// Shared state of one tcserved instance.
 pub struct AppState {
     pub cache: ResultCache,
     pub metrics: Metrics,
     pub shards: ShardRouter,
+    pub readiness: Readiness,
 }
 
 impl AppState {
@@ -51,7 +115,7 @@ impl AppState {
     }
 
     pub fn with_shards(cache: ResultCache, shards: ShardRouter) -> AppState {
-        AppState { cache, metrics: Metrics::new(), shards }
+        AppState { cache, metrics: Metrics::new(), shards, readiness: Readiness::default() }
     }
 }
 
@@ -134,6 +198,43 @@ impl<'a> RequestParams<'a> {
             )
         })
     }
+
+    /// The optional per-request compute budget: `deadline_ms` in the
+    /// body (JSON number or numeric string) or query string, with the
+    /// `X-Deadline-Ms` header as the out-of-band fallback (an in-body
+    /// value wins). Zero is legal — an already-expired budget, which
+    /// degrades every timing unit to its analytic prediction.
+    fn deadline(&self) -> Result<Option<Budget>, Response> {
+        fn bad(v: impl std::fmt::Display) -> Response {
+            Response::error(
+                400,
+                "invalid_param",
+                format!("bad deadline_ms {v} (a non-negative integer of milliseconds)"),
+            )
+        }
+        let from_str = |s: &str| s.trim().parse::<u64>().map_err(|_| bad(format!("{s:?}")));
+        if let Some(body) = &self.body {
+            match body.get("deadline_ms") {
+                None | Some(Json::Null) => {}
+                Some(Json::Str(s)) => return Ok(Some(Budget::from_ms(from_str(s)?))),
+                Some(v) => {
+                    // as_u64 saturates negatives and truncates
+                    // fractions; validate on the f64 instead
+                    let n = v.as_f64().ok_or_else(|| bad(v))?;
+                    if n < 0.0 || n.fract() != 0.0 {
+                        return Err(bad(v));
+                    }
+                    return Ok(Some(Budget::from_ms(n as u64)));
+                }
+            }
+        } else if let Some(s) = self.req.param("deadline_ms") {
+            return Ok(Some(Budget::from_ms(from_str(s)?)));
+        }
+        match self.req.header("x-deadline-ms") {
+            Some(s) => Ok(Some(Budget::from_ms(from_str(s)?))),
+            None => Ok(None),
+        }
+    }
 }
 
 /// Add the `Deprecation` header when the request came in through the
@@ -153,6 +254,7 @@ fn method_not_allowed(method: &str, hint: &str) -> Response {
 fn endpoint_label(path: &str) -> &'static str {
     match path {
         "/healthz" => "healthz",
+        "/readyz" => "readyz",
         "/v1/experiments" => "experiments",
         "/v1/devices" => "devices",
         "/v1/metrics" => "metrics",
@@ -196,6 +298,7 @@ fn dispatch(state: &AppState, req: &Request) -> Result<Response, Response> {
             Err(method_not_allowed(m, "/v1/sweep takes a POST body (or the deprecated GET form)"))
         }
         ("GET", "/healthz") => Ok(healthz()),
+        ("GET", "/readyz") => Ok(readyz(state)),
         ("GET", "/v1/experiments") => Ok(experiments(state)),
         ("GET", "/v1/devices") => Ok(devices()),
         ("GET", "/v1/metrics") => Ok(metrics(state)),
@@ -217,6 +320,29 @@ fn healthz() -> Response {
         ("service", Json::str("tcserved")),
         ("version", Json::str(env!("CARGO_PKG_VERSION"))),
         ("experiments", Json::num(EXPERIMENTS.len() as f64)),
+    ]))
+}
+
+/// `GET /readyz` — readiness, as distinct from `/healthz` liveness: a
+/// replica that is still warming its experiment cache or whose accept
+/// queue is saturated answers `503 not_ready` with `Retry-After`, so
+/// load balancers steer traffic away without restarting the process.
+fn readyz(state: &AppState) -> Response {
+    let warming = state.readiness.warming();
+    let saturated = state.readiness.saturated();
+    if warming || saturated {
+        let reason = if warming {
+            "warming the experiment cache"
+        } else {
+            "accept queue saturated"
+        };
+        return Response::error(503, "not_ready", reason.to_string())
+            .with_header("Retry-After", "1");
+    }
+    Response::ok(Json::obj(vec![
+        ("status", Json::str("ready")),
+        ("queue_len", Json::num(state.readiness.queue_len() as f64)),
+        ("queue_capacity", Json::num(state.readiness.queue_capacity() as f64)),
     ]))
 }
 
@@ -311,6 +437,16 @@ fn respond_cached(
     }
 }
 
+/// Map a unit-compute error string onto its typed response: the
+/// [`DEADLINE_SENTINEL`] prefix marks a deadline failure that must
+/// answer `504 deadline_exceeded`; everything else is `500 internal`.
+fn unit_error_response(e: String) -> Response {
+    match e.strip_prefix(DEADLINE_SENTINEL) {
+        Some(msg) => Response::error(504, "deadline_exceeded", msg.to_string()),
+        None => Response::error(500, "internal", e),
+    }
+}
+
 // ------------------------------------------------------------ /v1/run/<id>
 
 /// `/v1/run/<id>` — POST `{"backend": ...}` (or the deprecated
@@ -365,6 +501,9 @@ fn compute_experiment(
 ) -> Result<String, String> {
     let t0 = Instant::now();
     let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<(String, String), String> {
+        if crate::chaos::inject(crate::chaos::Site::Sim) == Some(crate::chaos::Failure::SimPanic) {
+            panic!("tcchaos: injected sim panic");
+        }
         // `kind` is already resolved; the runner is the backend seam for
         // the §8 numeric probes (native softfloat vs PJRT artifacts)
         let runner = workload::runner_for(kind)?;
@@ -462,6 +601,7 @@ fn sweep(state: &AppState, req: &Request) -> Result<Response, Response> {
     // the same backend seam as /v1/run and /v1/plan: parsed here,
     // resolved by runner_for, keyed by the runner's name
     let kind = params.backend()?;
+    let budget = params.deadline()?;
     let runner = workload::runner_for(kind).map_err(|e| Response::error(500, "internal", e))?;
     let plan = Plan::new(load)
         .device(dev.name)
@@ -472,8 +612,9 @@ fn sweep(state: &AppState, req: &Request) -> Result<Response, Response> {
     // plan that already swept this workload makes this a cache hit (and
     // vice versa) — the request-specific envelope (device, workload,
     // ptx, …) is added outside the cached payload
-    let (result, origin) = unit_cached(state, &plan, UnitKind::Sweep, runner.as_ref(), "sweep");
-    let body = result.map_err(|e| Response::error(500, "internal", e))?;
+    let (result, origin) =
+        unit_cached(state, &plan, UnitKind::Sweep, runner.as_ref(), "sweep", budget);
+    let body = result.map_err(unit_error_response)?;
     let Ok(Json::Obj(mut fields)) = Json::parse(&body) else {
         return Err(Response::error(
             500,
@@ -512,6 +653,7 @@ fn plan(state: &AppState, req: &Request) -> Result<Response, Response> {
     let body = params.body().unwrap_or(&empty);
     let plan = Plan::from_json(body).map_err(|e| Response::error(400, "invalid_plan", e))?;
     let kind = params.backend()?;
+    let budget = params.deadline()?;
     let runner = workload::runner_for(kind).map_err(|e| Response::error(500, "internal", e))?;
     let bench = plan.compile().map_err(|e| Response::error(400, "invalid_plan", e))?;
 
@@ -520,7 +662,7 @@ fn plan(state: &AppState, req: &Request) -> Result<Response, Response> {
     let jobs: Vec<_> = bench
         .units
         .iter()
-        .map(|&unit| move || unit_cached(state, bench_ref, unit, runner_ref, "plan"))
+        .map(|&unit| move || unit_cached(state, bench_ref, unit, runner_ref, "plan", budget))
         .collect();
     let outcomes = run_parallel(jobs, coordinator::default_threads().min(4));
 
@@ -529,15 +671,27 @@ fn plan(state: &AppState, req: &Request) -> Result<Response, Response> {
     for (unit, (result, origin)) in bench.units.iter().zip(outcomes) {
         let body = match result {
             Ok(body) => body,
-            Err(e) => return Err(Response::error(500, "internal", e)),
+            Err(e) => return Err(unit_error_response(e)),
         };
         all_cached &= origin != Origin::Computed;
-        units.push(Json::obj(vec![
+        let mut inner = Json::parse(&body).unwrap_or(Json::Str(body));
+        let mut entry = vec![
             ("unit", Json::Str(unit.label())),
             ("cached", Json::Bool(origin != Origin::Computed)),
             ("origin", Json::str(origin.name())),
-            ("result", Json::parse(&body).unwrap_or(Json::Str(body))),
-        ]));
+        ];
+        // hoist the degradation marker out of the payload into the
+        // envelope: `result` stays shape-compatible with the simulated
+        // form, and clients check `degraded` next to `cached`/`origin`
+        let degraded = match &mut inner {
+            Json::Obj(fields) => fields.remove("degraded"),
+            _ => None,
+        };
+        if let Some(marker) = degraded {
+            entry.push(("degraded", marker));
+        }
+        entry.push(("result", inner));
+        units.push(Json::obj(entry));
     }
     let t0 = Instant::now();
     let response = Response::ok(Json::obj(vec![
@@ -632,15 +786,21 @@ fn tune(state: &AppState, req: &Request) -> Result<Response, Response> {
         },
     };
     let kind = params.backend()?;
+    let budget = params.deadline()?;
     let runner = workload::runner_for(kind).map_err(|e| Response::error(500, "internal", e))?;
     let threads = coordinator::default_threads().min(4);
     let t0 = Instant::now();
-    let report = workload::tune_workload(&load, &dev, objective, top, runner.name(), threads)
-        .map_err(|e| Response::error(400, "invalid_param", e))?;
+    let report =
+        workload::tune_workload(&load, &dev, objective, top, runner.name(), threads, budget)
+            .map_err(|e| Response::error(400, "invalid_param", e))?;
     state.metrics.record_phase("tune", t0.elapsed().as_micros() as u64);
     state.metrics.record_tune(report.scored as u64, report.confirmed as u64);
     for cfg in &report.configs {
-        state.metrics.record_tune_rel_err(report.family, cfg.latency_rel_err);
+        // unconfirmed (deadline-degraded) configs have no simulated
+        // numbers, hence no rel-err sample to record
+        if let Some(err) = cfg.latency_rel_err {
+            state.metrics.record_tune_rel_err(report.family, err);
+        }
     }
     let t0 = Instant::now();
     let response = Response::ok(report.to_json());
@@ -659,14 +819,19 @@ fn unit_cached(
     unit: UnitKind,
     runner: &dyn Runner,
     metrics_label: &'static str,
+    budget: Option<Budget>,
 ) -> (Result<String, String>, Origin) {
     let key = cache_key("plan", runner.name(), bench.device.name, &bench.unit_token(&unit));
     let canonical = key.canonical.clone();
     state.shards.run_on(&canonical, || {
         let t0 = Instant::now();
-        let (result, origin) = state
-            .cache
-            .get_or_compute(&key, || compute_unit(state, bench, unit, runner, &key, metrics_label));
+        // degraded payloads are served but never stored (cacheable =
+        // false): the content address must always resolve to the
+        // bit-exact simulated value, so a later un-budgeted request
+        // recomputes instead of inheriting a prediction
+        let (result, origin) = state.cache.get_or_compute_with(&key, || {
+            compute_unit(state, bench, unit, runner, &key, metrics_label, budget)
+        });
         if origin != Origin::Computed {
             state.metrics.record_phase("cache_lookup", t0.elapsed().as_micros() as u64);
         }
@@ -682,12 +847,22 @@ fn compute_unit(
     runner: &dyn Runner,
     key: &CacheKey,
     metrics_label: &'static str,
-) -> Result<String, String> {
+    budget: Option<Budget>,
+) -> Result<(String, bool), String> {
     let t0 = Instant::now();
-    let outcome = catch_unwind(AssertUnwindSafe(|| runner.run_unit(bench, &unit)));
-    let output = match outcome {
-        Ok(Ok(o)) => o,
-        Ok(Err(e)) => return Err(e),
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        if crate::chaos::inject(crate::chaos::Site::Sim) == Some(crate::chaos::Failure::SimPanic) {
+            panic!("tcchaos: injected sim panic");
+        }
+        workload::run_unit_budgeted(runner, bench, &unit, budget)
+    }));
+    let run = match outcome {
+        Ok(Ok(run)) => run,
+        Ok(Err(workload::UnitError::DeadlineExceeded(msg))) => {
+            state.metrics.record_deadline_exceeded();
+            return Err(format!("{DEADLINE_SENTINEL}{msg}"));
+        }
+        Ok(Err(workload::UnitError::Failed(e))) => return Err(e),
         Err(_) => {
             return Err(format!(
                 "plan unit {} of {} panicked during computation",
@@ -699,12 +874,28 @@ fn compute_unit(
     let ms = t0.elapsed().as_secs_f64() * 1e3;
     state.metrics.record_compute(metrics_label, ms);
     state.metrics.record_phase("simulate", (ms * 1e3) as u64);
+    let (output, degraded) = match run {
+        UnitRun::Simulated(output) => (output, None),
+        UnitRun::Degraded { output, reason, within_calibration } => {
+            state.metrics.record_degraded(bench.workload.kind());
+            let marker = Json::obj(vec![
+                ("reason", Json::Str(reason)),
+                ("predicted", Json::Bool(true)),
+                ("within_calibration", Json::Bool(within_calibration)),
+            ]);
+            (output, Some(marker))
+        }
+    };
     let Json::Obj(mut fields) = report::unit_output_to_json(&output) else {
         unreachable!("unit_output_to_json returns an object")
     };
     fields.insert("compute_ms".to_string(), Json::num(ms));
     fields.insert("key".to_string(), Json::str(key.hash.clone()));
-    Ok(Json::Obj(fields).to_string())
+    let cacheable = degraded.is_none();
+    if let Some(marker) = degraded {
+        fields.insert("degraded".to_string(), marker);
+    }
+    Ok((Json::Obj(fields).to_string(), cacheable))
 }
 
 #[cfg(test)]
@@ -735,6 +926,7 @@ mod tests {
             method: "GET".to_string(),
             path: path.to_string(),
             query,
+            headers: vec![],
             body: String::new(),
         };
         handle(state, &req)
@@ -745,6 +937,7 @@ mod tests {
             method: "POST".to_string(),
             path: path.to_string(),
             query: vec![],
+            headers: vec![],
             body: body.to_string(),
         };
         handle(state, &req)
@@ -1383,5 +1576,155 @@ mod tests {
         ] {
             assert_eq!(post(&s, "/v1/plan", body).status, 400, "{body}");
         }
+    }
+
+    #[test]
+    fn deadline_zero_degrades_plan_units_to_the_analytic_prediction() {
+        let s = state();
+        let r = post(
+            &s,
+            "/v1/plan",
+            r#"{"workload":"mma fp16 f32 m16n8k16","device":"a100",
+                "points":[[4,2]],"backend":"native","deadline_ms":0}"#,
+        );
+        assert_eq!(r.status, 200, "{}", r.body);
+        let j = data(&r);
+        let units = j.get("units").unwrap().as_arr().unwrap();
+        assert_eq!(units.len(), 1);
+        let unit = &units[0];
+        let marker = unit.get("degraded").expect("degraded marker in the unit envelope");
+        assert_eq!(marker.get("predicted").and_then(Json::as_bool), Some(true), "{}", r.body);
+        assert_eq!(
+            marker.get("within_calibration").and_then(Json::as_bool),
+            Some(true),
+            "{}",
+            r.body
+        );
+        assert!(marker.get_str("reason").unwrap().contains("analytic"), "{}", r.body);
+        // the served numbers are bit-exactly the closed-form prediction
+        let load = Workload::parse_spec("mma fp16 f32 m16n8k16").unwrap();
+        let dev = device::by_name("a100").unwrap();
+        let pred = load.predict(&dev, workload::ExecPoint::new(4, 2)).unwrap();
+        let result = unit.get("result").unwrap();
+        assert_eq!(result.get_f64("latency"), Some(pred.latency), "{}", r.body);
+        assert_eq!(result.get_f64("throughput"), Some(pred.throughput), "{}", r.body);
+        // degraded payloads are never cached: the same plan without the
+        // deadline recomputes (origin "computed") and serves the
+        // simulated value with no degradation marker
+        let r = post(
+            &s,
+            "/v1/plan",
+            r#"{"workload":"mma fp16 f32 m16n8k16","device":"a100",
+                "points":[[4,2]],"backend":"native"}"#,
+        );
+        assert_eq!(r.status, 200, "{}", r.body);
+        let unit = &data(&r).get("units").unwrap().as_arr().unwrap()[0];
+        assert!(unit.get("degraded").is_none(), "{}", r.body);
+        assert_eq!(unit.get_str("origin"), Some("computed"), "{}", r.body);
+        // the degradation counter observed the first request, by family
+        let m = data(&get(&s, "/v1/metrics"));
+        let rob = m.get("robustness").unwrap();
+        assert_eq!(rob.get_u64("degraded_total"), Some(1), "{m}");
+        assert_eq!(rob.get("degraded_by_family").unwrap().get_u64("mma"), Some(1), "{m}");
+    }
+
+    #[test]
+    fn deadline_on_the_sweep_route_degrades_inside_the_result() {
+        let s = state();
+        let r = get(&s, "/v1/sweep?instr=ldmatrix,x4&backend=native&deadline_ms=0");
+        assert_eq!(r.status, 200, "{}", r.body);
+        let result = data(&r).get("result").cloned().unwrap();
+        let marker = result.get("degraded").expect("degraded marker inside the sweep result");
+        assert_eq!(marker.get("predicted").and_then(Json::as_bool), Some(true), "{}", r.body);
+        assert!(!result.get("cells").unwrap().as_arr().unwrap().is_empty(), "{}", r.body);
+    }
+
+    #[test]
+    fn deadline_on_a_numeric_unit_is_a_typed_504() {
+        let s = state();
+        let r = post(
+            &s,
+            "/v1/plan",
+            r#"{"workload":"numeric profile fp16 f32 mul low","points":[[1,1]],
+                "backend":"native","deadline_ms":0}"#,
+        );
+        assert_eq!(r.status, 504, "{}", r.body);
+        let e = error_of(&r);
+        assert_eq!(e.get_str("code"), Some("deadline_exceeded"), "{}", r.body);
+        assert!(e.get_str("message").unwrap().contains("numeric"), "{}", r.body);
+        let m = data(&get(&s, "/v1/metrics"));
+        let rob = m.get("robustness").unwrap();
+        assert_eq!(rob.get_u64("deadline_exceeded_total"), Some(1), "{m}");
+        assert_eq!(rob.get_u64("degraded_total"), Some(0), "{m}");
+    }
+
+    #[test]
+    fn bad_deadlines_are_typed_400s() {
+        let s = state();
+        for body in [
+            r#"{"workload":"mma fp16 f32 m16n8k16","points":[[4,2]],"deadline_ms":-5}"#,
+            r#"{"workload":"mma fp16 f32 m16n8k16","points":[[4,2]],"deadline_ms":"soon"}"#,
+            r#"{"workload":"mma fp16 f32 m16n8k16","points":[[4,2]],"deadline_ms":1.5}"#,
+            r#"{"workload":"mma fp16 f32 m16n8k16","points":[[4,2]],"deadline_ms":true}"#,
+        ] {
+            let r = post(&s, "/v1/plan", body);
+            assert_eq!(r.status, 400, "{body}: {}", r.body);
+            assert_eq!(error_of(&r).get_str("code"), Some("invalid_param"), "{body}");
+        }
+        let r = get(&s, "/v1/sweep?instr=ldmatrix,x4&deadline_ms=never");
+        assert_eq!(r.status, 400, "{}", r.body);
+    }
+
+    #[test]
+    fn deadline_arrives_via_the_x_deadline_ms_header_too() {
+        let s = state();
+        let req = Request {
+            method: "POST".to_string(),
+            path: "/v1/plan".to_string(),
+            query: vec![],
+            headers: vec![("x-deadline-ms".to_string(), "0".to_string())],
+            body: r#"{"workload":"mma fp16 f32 m16n8k16","device":"a100",
+                      "points":[[4,2]],"backend":"native"}"#
+                .to_string(),
+        };
+        let r = handle(&s, &req);
+        assert_eq!(r.status, 200, "{}", r.body);
+        let unit = &data(&r).get("units").unwrap().as_arr().unwrap()[0];
+        assert!(unit.get("degraded").is_some(), "{}", r.body);
+    }
+
+    #[test]
+    fn readyz_reflects_warming_and_queue_saturation() {
+        let s = state();
+        // fresh state: ready, queue capacity unconfigured (0)
+        let r = get(&s, "/readyz");
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert_eq!(data(&r).get_str("status"), Some("ready"));
+
+        s.readiness.set_warming(true);
+        let r = get(&s, "/readyz");
+        assert_eq!(r.status, 503, "{}", r.body);
+        assert_eq!(error_of(&r).get_str("code"), Some("not_ready"));
+        assert!(
+            r.headers.iter().any(|(n, v)| *n == "Retry-After" && !v.is_empty()),
+            "503 must carry Retry-After"
+        );
+        s.readiness.set_warming(false);
+
+        s.readiness.set_queue_capacity(2);
+        s.readiness.queue_enter();
+        s.readiness.queue_exit();
+        assert_eq!(get(&s, "/readyz").status, 200);
+        s.readiness.queue_enter();
+        s.readiness.queue_enter();
+        let r = get(&s, "/readyz");
+        assert_eq!(r.status, 503, "{}", r.body);
+        assert!(error_of(&r).get_str("message").unwrap().contains("queue"), "{}", r.body);
+        s.readiness.queue_exit();
+        assert_eq!(get(&s, "/readyz").status, 200);
+        // exits never wrap below zero
+        s.readiness.queue_exit();
+        s.readiness.queue_exit();
+        assert_eq!(s.readiness.queue_len(), 0);
     }
 }

@@ -92,6 +92,10 @@ impl ShardGate {
                 self.0.freed.notify_one();
             }
         }
+        // Invariant: lock/wait unwraps only fail on poisoning, which is
+        // unreachable — only counter math runs under the lock; `f` runs
+        // after `drop(permits)`, and a panicking `f` releases its permit
+        // via `Permit`'s unwind-safe `Drop`.
         let mut permits = self.permits.lock().unwrap();
         while *permits == 0 {
             permits = self.freed.wait(permits).unwrap();

@@ -1,0 +1,143 @@
+//! Per-request wall-clock budgets for the simulate path.
+//!
+//! A [`Budget`] carries a request deadline. [`scoped`] installs it in a
+//! thread-local for the duration of a closure; the [`SmSim`](super::SmSim)
+//! cycle loop polls [`poll`] at *iteration-mark* granularity — the same
+//! cadence as the steady-state convergence check, never once per cycle —
+//! so the hot loop stays branch-cheap. When the deadline has passed, the
+//! loop breaks out with whatever marks it accumulated and latches a
+//! thread-local *blown* flag:
+//!
+//! * the cell layer ([`workload::cell`](crate::workload)) refuses to
+//!   cache or persist the truncated result, so a later un-budgeted
+//!   request re-simulates from scratch and gets the bit-exact answer;
+//! * the workload layer sees the flag via the value returned by
+//!   [`scoped`] and degrades to the calibrated analytic prediction
+//!   instead of serving truncated cycle counts.
+//!
+//! Programs measured by total cycles rather than iteration marks (the
+//! GEMM kernels) emit no marks mid-run and therefore cannot be
+//! interrupted once started; for those the up-front `exceeded` check at
+//! the unit boundary is the only watchdog.
+
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+/// A wall-clock deadline for one request's compute.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    deadline: Instant,
+}
+
+/// Marker error: a measurement was abandoned (or never started) because
+/// the active [`Budget`]'s deadline passed. Callers degrade to the
+/// calibrated analytic prediction or surface a typed `deadline_exceeded`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BudgetBlown;
+
+impl Budget {
+    /// A budget expiring `ms` milliseconds from now.
+    pub fn from_ms(ms: u64) -> Self {
+        Budget { deadline: Instant::now() + Duration::from_millis(ms) }
+    }
+
+    /// Has the deadline passed?
+    pub fn exceeded(&self) -> bool {
+        Instant::now() >= self.deadline
+    }
+}
+
+thread_local! {
+    static ACTIVE: Cell<Option<Budget>> = const { Cell::new(None) };
+    static BLOWN: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with `budget` active on this thread and report whether any
+/// simulation inside blew it: `(result, blown)`. The flag is scoped to
+/// this call — cleared on entry, restored (with the previous budget) on
+/// exit, including on unwind, so a panicking closure cannot leak a
+/// stale budget into unrelated work on a pooled thread.
+pub fn scoped<T>(budget: Option<Budget>, f: impl FnOnce() -> T) -> (T, bool) {
+    struct Restore {
+        prev: Option<Budget>,
+        prev_blown: bool,
+    }
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            ACTIVE.with(|a| a.set(self.prev));
+            BLOWN.with(|b| b.set(self.prev_blown));
+        }
+    }
+    let guard = Restore {
+        prev: ACTIVE.with(|a| a.replace(budget)),
+        prev_blown: BLOWN.with(|b| b.replace(false)),
+    };
+    let out = f();
+    let blown = BLOWN.with(|b| b.get());
+    drop(guard);
+    (out, blown)
+}
+
+/// Polled by the sim cycle loop whenever the iteration-mark count moves:
+/// returns `true` (and latches the blown flag) once the active budget's
+/// deadline has passed. One thread-local read when no budget is active.
+pub fn poll() -> bool {
+    match ACTIVE.with(|a| a.get()) {
+        Some(b) if b.exceeded() => {
+            BLOWN.with(|f| f.set(true));
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Has a simulation in the current [`scoped`] call blown its budget?
+/// Read by the cell layer to keep truncated results out of the caches.
+pub fn blown() -> bool {
+    BLOWN.with(|b| b.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_budget_never_polls_blown() {
+        let ((), blown) = scoped(None, || {
+            assert!(!poll());
+            assert!(!blown());
+        });
+        assert!(!blown);
+    }
+
+    #[test]
+    fn expired_budget_latches_blown_within_scope_only() {
+        let ((), blown) = scoped(Some(Budget::from_ms(0)), || {
+            assert!(poll(), "a 0 ms budget is already exceeded");
+            assert!(super::blown());
+        });
+        assert!(blown);
+        assert!(!super::blown(), "flag must not leak past the scope");
+    }
+
+    #[test]
+    fn generous_budget_does_not_trip() {
+        let ((), blown) = scoped(Some(Budget::from_ms(60_000)), || {
+            assert!(!poll());
+        });
+        assert!(!blown);
+    }
+
+    #[test]
+    fn scope_restores_previous_budget_on_unwind() {
+        let caught = std::panic::catch_unwind(|| {
+            scoped(Some(Budget::from_ms(0)), || {
+                assert!(poll());
+                panic!("boom");
+            })
+        });
+        assert!(caught.is_err());
+        assert!(!blown(), "unwind must restore the outer (clean) flag");
+        assert!(!poll(), "unwind must restore the outer (absent) budget");
+    }
+}

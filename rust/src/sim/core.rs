@@ -168,8 +168,8 @@ pub struct SmSim<'d> {
     /// Stop simulating once every warp's per-iteration latency has
     /// converged (see [`SmSim::with_steady_state_exit`]).
     steady_exit: bool,
-    /// Total iteration marks at the last convergence check (so the
-    /// check runs once per new mark, not once per cycle).
+    /// Total iteration marks at the last convergence/budget check (so
+    /// those checks run once per new mark, not once per cycle).
     marks_at_last_check: usize,
 }
 
@@ -559,9 +559,17 @@ impl<'d> SmSim<'d> {
             if self.all_done() {
                 break;
             }
-            if self.steady_exit && marks_total != self.marks_at_last_check {
+            if marks_total != self.marks_at_last_check {
                 self.marks_at_last_check = marks_total;
-                if self.steady_state_reached() {
+                // Per-request deadline watchdog, polled at the same
+                // mark granularity as the convergence check so the
+                // per-cycle path gains no branch. A blown budget
+                // latches the thread-local flag and exits with a
+                // truncated trace; the cell layer never caches it.
+                if super::budget::poll() {
+                    break;
+                }
+                if self.steady_exit && self.steady_state_reached() {
                     break;
                 }
             }

@@ -26,6 +26,7 @@
 //!   is why `ldmatrix` throughput saturates while `mma` does not.
 
 mod analytic;
+pub mod budget;
 mod core;
 mod profile;
 mod program;
@@ -35,6 +36,7 @@ pub use analytic::{
     calibration_bound, predict_gemm, predict_ld_shared, predict_ldmatrix, predict_mma,
     predict_wmma, AnalyticPrediction, CalibrationBound, CALIBRATION_BOUNDS,
 };
+pub use budget::{Budget, BudgetBlown};
 pub use core::{SmSim, WarpResult};
 pub use profile::{
     Blocked, ProfileMode, Profiler, SimProfile, Stall, TraceEvent, MAX_TRACE_EVENTS,

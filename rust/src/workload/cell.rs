@@ -198,7 +198,16 @@ impl CellStore {
     /// Load one cell, verifying the canonical key. Any failure — no
     /// file, unreadable file, bad JSON, wrong schema, foreign key, bad
     /// bit patterns — is a miss, never a panic.
+    ///
+    /// This is the `store.read` tcchaos seam: an injected `err` fails
+    /// the read exactly like an unreadable file (counted miss, caller
+    /// re-simulates — results stay bit-identical); an injected delay
+    /// has already been served inside [`crate::chaos::inject`].
     pub fn load(&self, hash: u64, canonical: &str) -> Option<(f64, f64)> {
+        if crate::chaos::inject(crate::chaos::Site::StoreRead).is_some() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let text = match std::fs::read_to_string(self.cell_path(hash)) {
             Ok(t) => t,
             Err(_) => {
@@ -419,6 +428,14 @@ impl CellCache {
         let mut profiler = if want_profile { Profiler::counting() } else { Profiler::Null };
         let m = SimGate::global().run(|| simulate(&mut profiler));
         let profile = profiler.take_profile();
+        if crate::sim::budget::blown() {
+            // The request's budget expired mid-simulation: the sim loop
+            // bailed at an iteration mark and `m` is a truncated trace.
+            // It must reach neither the memory cache nor the disk store
+            // — a later un-budgeted request re-simulates from scratch
+            // and gets the bit-exact answer.
+            return (m, profile);
+        }
         if !collision {
             if let Some(store) = self.store.get() {
                 store.save(hash, &canonical, m.latency, m.throughput);

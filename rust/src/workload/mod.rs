@@ -70,7 +70,9 @@ pub use numeric::{
     CHAIN_TRIALS, PROFILE_SEED, PROFILE_TRIALS,
 };
 pub use plan::{BenchPlan, BenchResult, LintRecord, Plan, UnitKind, UnitOutput};
-pub use runner::{runner_for, ArtifactRunner, Runner, SimRunner};
+pub use runner::{
+    run_unit_budgeted, runner_for, ArtifactRunner, Runner, SimRunner, UnitError, UnitRun,
+};
 pub use tune::{
     tune_workload, Objective, TuneReport, TunedConfig, DEFAULT_TUNE_TOP_K, GEMM_TUNE_TILES,
     TUNE_SCHEMA,
@@ -90,8 +92,8 @@ use crate::microbench::{
     SweepCell, ITERS, SWEEP_ILPS, SWEEP_WARPS,
 };
 use crate::sim::{
-    predict_gemm, predict_ld_shared, predict_ldmatrix, predict_mma, predict_wmma,
-    AnalyticPrediction, ProfileMode, Profiler, SimProfile, WarpProgram,
+    budget, predict_gemm, predict_ld_shared, predict_ldmatrix, predict_mma, predict_wmma,
+    AnalyticPrediction, Budget, BudgetBlown, ProfileMode, Profiler, SimProfile, WarpProgram,
 };
 
 /// One (#warps, ILP) execution coordinate — the paper's per-measurement
@@ -857,6 +859,110 @@ impl Workload {
     /// that already ran makes this free).
     pub fn completion_latency(&self, device: &Device) -> f64 {
         self.measure_cached(device, ExecPoint::new(1, 1), "sim").latency
+    }
+
+    /// [`Workload::measure_cached`] under a per-request [`Budget`]. A
+    /// warm cell serves regardless of the deadline (a cache read costs
+    /// nothing worth degrading over); a cold cell whose simulation blows
+    /// the budget — detected by the sim loop's iteration-mark watchdog —
+    /// returns `Err(BudgetBlown)` and caches *nothing*, so a later
+    /// un-budgeted request re-simulates and gets the bit-exact answer.
+    /// An already-expired budget fails fast without starting the sim.
+    pub fn measure_cached_budgeted(
+        &self,
+        device: &Device,
+        point: ExecPoint,
+        backend: &str,
+        budget: Budget,
+    ) -> Result<Measurement, BudgetBlown> {
+        if budget.exceeded() {
+            return Err(BudgetBlown);
+        }
+        let (m, blown) =
+            budget::scoped(Some(budget), || self.measure_cached(device, point, backend));
+        if blown {
+            Err(BudgetBlown)
+        } else {
+            Ok(m)
+        }
+    }
+
+    /// [`Workload::sweep_via`] under a per-request [`Budget`]: every
+    /// cell reads through the cache budgeted
+    /// ([`Workload::measure_cached_budgeted`]), fanned out over
+    /// `threads` pool workers with the budget re-installed inside each
+    /// job (the thread-local does not cross the pool boundary on its
+    /// own). The first blown cell fails the whole sweep — once the
+    /// deadline has passed every remaining job fails fast before
+    /// simulating, so abandonment is prompt — but cells that *did*
+    /// complete were cached normally and make a retry cheaper. Timing
+    /// workloads only; numeric sweeps have no budget path (their
+    /// datapath runs have no watchdog seam) and are handled at the unit
+    /// layer.
+    pub fn sweep_via_budgeted(
+        &self,
+        device: &Device,
+        backend: &str,
+        threads: usize,
+        budget: Budget,
+    ) -> Result<Sweep, BudgetBlown> {
+        debug_assert!(
+            !matches!(self, Workload::Numeric(_)),
+            "numeric sweeps are budgeted at the unit layer"
+        );
+        if budget.exceeded() {
+            return Err(BudgetBlown);
+        }
+        let warps_axis = self.sweep_warps_axis();
+        let ilp_axis = self.sweep_ilp_axis();
+        let points: Vec<ExecPoint> = warps_axis
+            .iter()
+            .flat_map(|&warps| ilp_axis.iter().map(move |&ilp| ExecPoint::new(warps, ilp)))
+            .collect();
+        // No warm/cold phase split here: each cell is read exactly once
+        // through the cache, so hit/miss accounting stays truthful.
+        let jobs: Vec<_> = points
+            .iter()
+            .map(|&point| {
+                let workload = *self;
+                move || workload.measure_cached_budgeted(device, point, backend, budget)
+            })
+            .collect();
+        let mut cells = Vec::with_capacity(points.len());
+        for result in run_parallel(jobs, threads) {
+            let m = result?;
+            cells.push(SweepCell {
+                warps: m.warps,
+                ilp: m.ilp,
+                latency: m.latency,
+                throughput: m.throughput,
+            });
+        }
+        Ok(Sweep { label: self.to_string(), warps_axis, ilp_axis, cells })
+    }
+
+    /// The analytic stand-in for a full sweep: every grid cell scored by
+    /// the closed-form model ([`Workload::predict`]), no cycle
+    /// simulated. This is what a blown-budget sweep degrades to —
+    /// same axes, same cell order, `latency`/`throughput` from the
+    /// calibrated predictor. Errors only where `predict` does (numeric
+    /// probes, malformed points).
+    pub fn predict_sweep(&self, device: &Device) -> Result<Sweep, String> {
+        let warps_axis = self.sweep_warps_axis();
+        let ilp_axis = self.sweep_ilp_axis();
+        let mut cells = Vec::with_capacity(warps_axis.len() * ilp_axis.len());
+        for &warps in &warps_axis {
+            for &ilp in &ilp_axis {
+                let p = self.predict(device, ExecPoint::new(warps, ilp))?;
+                cells.push(SweepCell {
+                    warps,
+                    ilp,
+                    latency: p.latency,
+                    throughput: p.throughput,
+                });
+            }
+        }
+        Ok(Sweep { label: self.to_string(), warps_axis, ilp_axis, cells })
     }
 
     /// Full grid over this workload's sweep axes (§4 step 2) — one code

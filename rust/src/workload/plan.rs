@@ -140,20 +140,20 @@ impl Plan {
     ///  "completion_latency": true, "convergence": [4,8]}
     /// ```
     ///
-    /// Points may also be objects: `{"warps": 4, "ilp": 3}`. A
-    /// `"backend"` field is tolerated (the server interprets it);
-    /// any other unknown field is rejected.
+    /// Points may also be objects: `{"warps": 4, "ilp": 3}`. The
+    /// `"backend"` and `"deadline_ms"` fields are tolerated (the server
+    /// interprets them); any other unknown field is rejected.
     pub fn from_json(j: &Json) -> Result<Plan, String> {
         let obj = j.as_obj().ok_or("plan must be a JSON object")?;
         for key in obj.keys() {
             if !matches!(
                 key.as_str(),
                 "workload" | "device" | "points" | "sweep" | "completion_latency"
-                    | "convergence" | "backend"
+                    | "convergence" | "backend" | "deadline_ms"
             ) {
                 return Err(format!(
                     "unknown plan field {key:?} (workload, device, points, sweep, \
-                     completion_latency, convergence, backend)"
+                     completion_latency, convergence, backend, deadline_ms)"
                 ));
             }
         }

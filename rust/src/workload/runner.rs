@@ -20,9 +20,9 @@
 use std::sync::Mutex;
 
 use crate::coordinator::{default_threads, BackendKind};
-use crate::microbench::convergence_point;
+use crate::microbench::{convergence_point, Measurement};
 use crate::runtime::{ArtifactExec, ArtifactStore};
-use crate::sim::{ProfileMode, SimProfile};
+use crate::sim::{calibration_bound, Budget, BudgetBlown, ProfileMode, SimProfile};
 
 use super::numeric::{NumericOutput, NumericProbe};
 use super::plan::{BenchPlan, UnitKind, UnitOutput};
@@ -146,6 +146,149 @@ fn dispatch_unit_profiled(
                 .collect();
             (UnitOutput::Sweep { sweep, convergence }, profile)
         }
+    })
+}
+
+/// How one budgeted unit was produced ([`run_unit_budgeted`]).
+#[derive(Debug)]
+pub enum UnitRun {
+    /// The cycle simulation (or numeric datapath run) completed within
+    /// the budget — or no budget was set.
+    Simulated(UnitOutput),
+    /// The budget blew before (or during) the cycle simulation: the
+    /// output is the calibrated analytic prediction instead.
+    Degraded {
+        output: UnitOutput,
+        /// Human-readable account of why the unit degraded.
+        reason: String,
+        /// Whether this workload family's analytic error is pinned by a
+        /// CI-enforced [`CalibrationBound`](crate::sim::CalibrationBound).
+        within_calibration: bool,
+    },
+}
+
+/// Typed failure of a budgeted unit run.
+#[derive(Debug)]
+pub enum UnitError {
+    /// The deadline passed and the unit has no analytic model to
+    /// degrade to (numeric probes run the real datapath or nothing).
+    DeadlineExceeded(String),
+    /// Ordinary execution failure, budget aside.
+    Failed(String),
+}
+
+/// [`Runner::run_unit`] under an optional per-request wall-clock
+/// [`Budget`]. Timing units that blow the budget — up front or
+/// mid-simulation, via the [`budget`](crate::sim::budget) watchdog in
+/// the cycle loop — degrade to the calibrated analytic `predict_*`
+/// family instead of failing: a point or completion unit serves
+/// [`Workload::predict`], a sweep serves [`Workload::predict_sweep`]
+/// with convergence points recomputed over the predicted grid. Numeric
+/// units have no analytic stand-in, so an already-expired budget is a
+/// typed [`UnitError::DeadlineExceeded`]; once started they run to
+/// completion (the probes are fast and have no watchdog seam).
+///
+/// Degraded outputs are never inserted into the cell cache or the disk
+/// store (the cell layer checks the blown flag), so a later request
+/// without a deadline re-simulates and gets the bit-exact answer.
+pub fn run_unit_budgeted(
+    runner: &dyn Runner,
+    plan: &BenchPlan,
+    unit: &UnitKind,
+    budget: Option<Budget>,
+) -> Result<UnitRun, UnitError> {
+    let Some(budget) = budget else {
+        return runner.run_unit(plan, unit).map(UnitRun::Simulated).map_err(UnitError::Failed);
+    };
+    if matches!(plan.workload, Workload::Numeric(_)) {
+        if budget.exceeded() {
+            return Err(UnitError::DeadlineExceeded(format!(
+                "deadline passed before numeric unit {} started (numeric probes \
+                 have no analytic model to degrade to)",
+                unit.label()
+            )));
+        }
+        return runner.run_unit(plan, unit).map(UnitRun::Simulated).map_err(UnitError::Failed);
+    }
+    let backend = runner.timing_backend();
+    let w = &plan.workload;
+    let dev = &plan.device;
+    match unit {
+        UnitKind::Completion => {
+            match w.measure_cached_budgeted(dev, ExecPoint::new(1, 1), backend, budget) {
+                Ok(m) => Ok(UnitRun::Simulated(UnitOutput::Completion(m.latency))),
+                Err(BudgetBlown) => {
+                    let pred = predict_or_deadline(plan, ExecPoint::new(1, 1))?;
+                    degraded(plan, UnitOutput::Completion(pred.latency))
+                }
+            }
+        }
+        UnitKind::Point(p) => match w.measure_cached_budgeted(dev, *p, backend, budget) {
+            Ok(m) => Ok(UnitRun::Simulated(UnitOutput::Point(m))),
+            Err(BudgetBlown) => {
+                let pred = predict_or_deadline(plan, *p)?;
+                degraded(
+                    plan,
+                    UnitOutput::Point(Measurement {
+                        warps: p.warps,
+                        ilp: p.ilp,
+                        latency: pred.latency,
+                        throughput: pred.throughput,
+                    }),
+                )
+            }
+        },
+        UnitKind::Sweep => {
+            match w.sweep_via_budgeted(dev, backend, default_threads(), budget) {
+                Ok(sweep) => {
+                    let convergence = plan
+                        .convergence_warps
+                        .iter()
+                        .map(|&cw| convergence_point(&sweep, cw))
+                        .collect();
+                    Ok(UnitRun::Simulated(UnitOutput::Sweep { sweep, convergence }))
+                }
+                Err(BudgetBlown) => {
+                    let sweep = w.predict_sweep(dev).map_err(|e| {
+                        UnitError::DeadlineExceeded(format!(
+                            "deadline exceeded and the analytic fallback failed: {e}"
+                        ))
+                    })?;
+                    let convergence = plan
+                        .convergence_warps
+                        .iter()
+                        .map(|&cw| convergence_point(&sweep, cw))
+                        .collect();
+                    degraded(plan, UnitOutput::Sweep { sweep, convergence })
+                }
+            }
+        }
+    }
+}
+
+/// Analytic prediction for one point, or a typed deadline error when the
+/// family has no model (should not happen for any current timing family).
+fn predict_or_deadline(
+    plan: &BenchPlan,
+    p: ExecPoint,
+) -> Result<crate::sim::AnalyticPrediction, UnitError> {
+    plan.workload.predict(&plan.device, p).map_err(|e| {
+        UnitError::DeadlineExceeded(format!(
+            "deadline exceeded and the analytic fallback failed: {e}"
+        ))
+    })
+}
+
+/// Wrap a predicted output in the degraded envelope for `plan`'s family.
+fn degraded(plan: &BenchPlan, output: UnitOutput) -> Result<UnitRun, UnitError> {
+    let family = plan.workload.kind();
+    Ok(UnitRun::Degraded {
+        output,
+        reason: format!(
+            "deadline_ms budget exhausted before the cycle simulation finished; \
+             served the calibrated analytic prediction for {family}"
+        ),
+        within_calibration: calibration_bound(family).is_some(),
     })
 }
 
@@ -287,6 +430,54 @@ mod tests {
             PROFILE_SEED,
         );
         assert_eq!(got.mean_abs_err.to_bits(), want.mean_abs_err.to_bits());
+    }
+
+    #[test]
+    fn expired_budget_degrades_timing_point_to_the_analytic_prediction() {
+        use crate::workload::Plan;
+        let w = Workload::parse_spec("mma fp16 f32 m16n8k16").unwrap();
+        let plan = Plan::new(w).point(4, 2).compile().unwrap();
+        let run =
+            run_unit_budgeted(&SimRunner, &plan, &plan.units[0], Some(Budget::from_ms(0)))
+                .unwrap();
+        let UnitRun::Degraded { output, reason, within_calibration } = run else {
+            panic!("a 0 ms budget must degrade, got {run:?}")
+        };
+        assert!(within_calibration, "mma has a pinned calibration bound");
+        assert!(reason.contains("analytic"), "{reason}");
+        let UnitOutput::Point(m) = output else { panic!("expected a point") };
+        let pred = w.predict(&plan.device, ExecPoint::new(4, 2)).unwrap();
+        assert_eq!(m.latency.to_bits(), pred.latency.to_bits());
+        assert_eq!(m.throughput.to_bits(), pred.throughput.to_bits());
+    }
+
+    #[test]
+    fn expired_budget_is_a_typed_error_for_numeric_units() {
+        use crate::workload::Plan;
+        let w = Workload::parse_spec("numeric profile tf32 f32 inner fp32").unwrap();
+        let plan = Plan::new(w).point(1, 1).compile().unwrap();
+        let err =
+            run_unit_budgeted(&SimRunner, &plan, &plan.units[0], Some(Budget::from_ms(0)))
+                .unwrap_err();
+        assert!(
+            matches!(err, UnitError::DeadlineExceeded(_)),
+            "numeric units have no analytic fallback: {err:?}"
+        );
+    }
+
+    #[test]
+    fn absent_budget_runs_the_simulation() {
+        use crate::workload::Plan;
+        let w = Workload::parse_spec("mma fp16 f32 m16n8k16").unwrap();
+        let plan = Plan::new(w).point(1, 1).compile().unwrap();
+        let run = run_unit_budgeted(&SimRunner, &plan, &plan.units[0], None).unwrap();
+        let UnitRun::Simulated(UnitOutput::Point(m)) = run else {
+            panic!("expected a simulated point, got {run:?}")
+        };
+        // bit-identical to the unbudgeted dispatch path (same cell cache)
+        let direct = SimRunner.run_unit(&plan, &plan.units[0]).unwrap();
+        let UnitOutput::Point(d) = direct else { unreachable!() };
+        assert_eq!(m.latency.to_bits(), d.latency.to_bits());
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -30,7 +30,7 @@ use std::time::Instant;
 
 use crate::coordinator::run_parallel;
 use crate::device::Device;
-use crate::sim::{calibration_bound, AnalyticPrediction};
+use crate::sim::{calibration_bound, AnalyticPrediction, Budget};
 use crate::util::Json;
 
 use super::{ExecPoint, Workload};
@@ -127,9 +127,12 @@ struct Candidate {
     predicted: AnalyticPrediction,
 }
 
-/// One confirmed configuration of a [`TuneReport`]: the analytic
-/// prediction that promoted it, the cycle-sim numbers that rank it, and
-/// the realized model error between them.
+/// One frontier configuration of a [`TuneReport`]: the analytic
+/// prediction that promoted it and — when the request's budget allowed
+/// the cycle simulation to run — the simulated numbers that rank it,
+/// with the realized model error between them. A blown
+/// [`Budget`] leaves the config *unconfirmed*: the simulated fields are
+/// `None` and the ranking falls back to the prediction.
 #[derive(Debug, Clone)]
 pub struct TunedConfig {
     /// Full workload spec of the cell (differs from the request for
@@ -138,14 +141,17 @@ pub struct TunedConfig {
     /// (#warps, ILP) — for gemm, (CTA warps, `cp.async` stages).
     pub point: ExecPoint,
     pub predicted: AnalyticPrediction,
-    pub simulated_latency: f64,
-    pub simulated_throughput: f64,
+    /// Did the cycle simulator confirm this cell within the budget?
+    pub confirmed: bool,
+    pub simulated_latency: Option<f64>,
+    pub simulated_throughput: Option<f64>,
     /// `|sim - predicted| / predicted` on the latency.
-    pub latency_rel_err: f64,
+    pub latency_rel_err: Option<f64>,
     /// `|sim - predicted| / predicted` on the throughput.
-    pub throughput_rel_err: f64,
-    /// Does the pair satisfy the family's pinned
-    /// [`CalibrationBound`](crate::sim::CalibrationBound)?
+    pub throughput_rel_err: Option<f64>,
+    /// Does the (predicted, simulated) pair satisfy the family's pinned
+    /// [`CalibrationBound`](crate::sim::CalibrationBound)? Always
+    /// `false` for unconfirmed configs — there is no pair to check.
     pub within_calibration: bool,
 }
 
@@ -162,10 +168,11 @@ pub struct TuneReport {
     pub objective: Objective,
     /// Grid cells scored analytically (the whole legal grid).
     pub scored: usize,
-    /// Cells confirmed in the cycle simulator (≤ the requested top-K).
+    /// Cells actually confirmed in the cycle simulator — below the
+    /// frontier size when a request [`Budget`] blew mid-confirmation.
     pub confirmed: usize,
-    /// `1 - confirmed/scored`: the fraction of the grid that never paid
-    /// for cycle simulation.
+    /// `1 - frontier/scored`: the fraction of the grid that was pruned
+    /// before the cycle-simulation phase.
     pub pruning_ratio: f64,
     /// Wall time of the analytic scoring pass.
     pub analytic_seconds: f64,
@@ -181,7 +188,9 @@ impl TuneReport {
             .configs
             .iter()
             .map(|c| {
-                Json::obj(vec![
+                // unconfirmed configs (budget blew before their cycle
+                // simulation) simply omit the simulated/rel_err fields
+                let mut fields = vec![
                     ("spec", Json::str(c.spec.clone())),
                     ("warps", Json::num(c.point.warps as f64)),
                     ("ilp", Json::num(c.point.ilp as f64)),
@@ -192,17 +201,25 @@ impl TuneReport {
                             ("throughput", Json::num(c.predicted.throughput)),
                         ]),
                     ),
-                    (
+                    ("confirmed", Json::Bool(c.confirmed)),
+                ];
+                if let (Some(lat), Some(thr)) = (c.simulated_latency, c.simulated_throughput) {
+                    fields.push((
                         "simulated",
                         Json::obj(vec![
-                            ("latency", Json::num(c.simulated_latency)),
-                            ("throughput", Json::num(c.simulated_throughput)),
+                            ("latency", Json::num(lat)),
+                            ("throughput", Json::num(thr)),
                         ]),
-                    ),
-                    ("latency_rel_err", Json::num(c.latency_rel_err)),
-                    ("throughput_rel_err", Json::num(c.throughput_rel_err)),
-                    ("within_calibration", Json::Bool(c.within_calibration)),
-                ])
+                    ));
+                }
+                if let Some(e) = c.latency_rel_err {
+                    fields.push(("latency_rel_err", Json::num(e)));
+                }
+                if let Some(e) = c.throughput_rel_err {
+                    fields.push(("throughput_rel_err", Json::num(e)));
+                }
+                fields.push(("within_calibration", Json::Bool(c.within_calibration)));
+                Json::obj(fields)
             })
             .collect();
         Json::obj(vec![
@@ -294,6 +311,13 @@ fn tuning_grid(workload: &Workload, device: &Device) -> Result<Vec<(Workload, Ex
 /// exactly those in the cycle simulator (through the process-wide cell
 /// cache under `backend`'s name, fanned out over `threads` workers) and
 /// return the frontier ranked by the simulated metric.
+///
+/// When a request [`Budget`] is given, the confirmation phase honors
+/// it: cells whose simulation the budget cuts off stay *unconfirmed*
+/// (`confirmed: false`, no simulated numbers) and rank by their
+/// analytic prediction — the analytic scoring pass itself is cheap
+/// enough that it always runs. The report never fails on a blown
+/// budget; it degrades.
 pub fn tune_workload(
     workload: &Workload,
     device: &Device,
@@ -301,6 +325,7 @@ pub fn tune_workload(
     top_k: usize,
     backend: &str,
     threads: usize,
+    budget: Option<Budget>,
 ) -> Result<TuneReport, String> {
     if top_k == 0 {
         return Err("top must be at least 1".to_string());
@@ -341,12 +366,19 @@ pub fn tune_workload(
 
     // Phase 3: confirm only the frontier in the cycle simulator — every
     // cell reads through the process-wide CellCache exactly like a
-    // sweep cell, so repeated tunes (and later sweeps) are warm.
+    // sweep cell, so repeated tunes (and later sweeps) are warm. Under
+    // a budget each cell confirms independently: a blown cell yields
+    // `None` and the rest keep trying (warm cells still confirm even
+    // after the deadline has technically passed — only fresh simulation
+    // is cut off by the up-front check in `measure_cached_budgeted`).
     let jobs: Vec<_> = frontier
         .iter()
         .map(|c| {
             let c = *c;
-            move || c.workload.measure_cached(device, c.point, backend)
+            move || match budget {
+                Some(b) => c.workload.measure_cached_budgeted(device, c.point, backend, b).ok(),
+                None => Some(c.workload.measure_cached(device, c.point, backend)),
+            }
         })
         .collect();
     let measured = run_parallel(jobs, threads);
@@ -355,35 +387,62 @@ pub fn tune_workload(
     let mut configs: Vec<TunedConfig> = frontier
         .iter()
         .zip(measured)
-        .map(|(c, m)| TunedConfig {
-            spec: c.workload.to_spec(),
-            point: c.point,
-            predicted: c.predicted,
-            simulated_latency: m.latency,
-            simulated_throughput: m.throughput,
-            latency_rel_err: (m.latency - c.predicted.latency).abs()
-                / c.predicted.latency.max(f64::MIN_POSITIVE),
-            throughput_rel_err: (m.throughput - c.predicted.throughput).abs()
-                / c.predicted.throughput.max(f64::MIN_POSITIVE),
-            within_calibration: bound
-                .map(|b| b.admits(c.predicted.latency, m.latency))
-                .unwrap_or(false),
+        .map(|(c, m)| match m {
+            Some(m) => TunedConfig {
+                spec: c.workload.to_spec(),
+                point: c.point,
+                predicted: c.predicted,
+                confirmed: true,
+                simulated_latency: Some(m.latency),
+                simulated_throughput: Some(m.throughput),
+                latency_rel_err: Some(
+                    (m.latency - c.predicted.latency).abs()
+                        / c.predicted.latency.max(f64::MIN_POSITIVE),
+                ),
+                throughput_rel_err: Some(
+                    (m.throughput - c.predicted.throughput).abs()
+                        / c.predicted.throughput.max(f64::MIN_POSITIVE),
+                ),
+                within_calibration: bound
+                    .map(|b| b.admits(c.predicted.latency, m.latency))
+                    .unwrap_or(false),
+            },
+            None => TunedConfig {
+                spec: c.workload.to_spec(),
+                point: c.point,
+                predicted: c.predicted,
+                confirmed: false,
+                simulated_latency: None,
+                simulated_throughput: None,
+                latency_rel_err: None,
+                throughput_rel_err: None,
+                within_calibration: false,
+            },
         })
         .collect();
-    // Final ranking by the *simulated* metric: the analytic model only
-    // decided what was worth simulating.
+    // Final ranking by the *simulated* metric where available: the
+    // analytic model only decided what was worth simulating. Configs
+    // the budget left unconfirmed rank by their prediction — and a
+    // confirmed config always outranks an unconfirmed tie.
     configs.sort_by(|a, b| {
-        let sim = |c: &TunedConfig| (c.simulated_latency, c.simulated_throughput);
-        let ((al, at), (bl, bt)) = (sim(a), sim(b));
+        let metric = |c: &TunedConfig| {
+            (
+                c.simulated_latency.unwrap_or(c.predicted.latency),
+                c.simulated_throughput.unwrap_or(c.predicted.throughput),
+            )
+        };
+        let ((al, at), (bl, bt)) = (metric(a), metric(b));
         objective
             .rank(al, at, bl, bt)
+            .then(b.confirmed.cmp(&a.confirmed))
             .then(a.point.warps.cmp(&b.point.warps))
             .then(a.point.ilp.cmp(&b.point.ilp))
             .then(a.spec.cmp(&b.spec))
     });
 
     let scored_n = scored.len();
-    let confirmed = configs.len();
+    let frontier_n = configs.len();
+    let confirmed = configs.iter().filter(|c| c.confirmed).count();
     Ok(TuneReport {
         workload: workload.to_spec(),
         family: workload.kind(),
@@ -391,7 +450,7 @@ pub fn tune_workload(
         objective,
         scored: scored_n,
         confirmed,
-        pruning_ratio: 1.0 - confirmed as f64 / scored_n as f64,
+        pruning_ratio: 1.0 - frontier_n as f64 / scored_n as f64,
         analytic_seconds,
         analytic_configs_per_sec: scored_n as f64 / analytic_seconds,
         configs,
@@ -406,7 +465,7 @@ mod tests {
     fn tune(spec: &str, objective: &str, top: usize) -> TuneReport {
         let w = Workload::parse_spec(spec).unwrap();
         let o = Objective::parse_spec(objective).unwrap();
-        tune_workload(&w, &a100(), o, top, "sim", 2).unwrap()
+        tune_workload(&w, &a100(), o, top, "sim", 2, None).unwrap()
     }
 
     #[test]
@@ -438,9 +497,10 @@ mod tests {
             "{:?}",
             top.point
         );
-        assert!(top.simulated_throughput > 950.0, "{}", top.simulated_throughput);
+        assert!(top.simulated_throughput.unwrap() > 950.0, "{top:?}");
         for c in &r.configs {
-            assert!(c.predicted.latency > 0.0 && c.simulated_latency > 0.0);
+            assert!(c.confirmed, "no budget was set: {c:?}");
+            assert!(c.predicted.latency > 0.0 && c.simulated_latency.unwrap() > 0.0);
             assert!(c.within_calibration, "{c:?}");
         }
     }
@@ -464,7 +524,8 @@ mod tests {
         // the budget-constrained winner cannot beat the unconstrained one
         let free = tune("mma fp16 f32 m16n8k16", "max-throughput", 1);
         assert!(
-            r.configs[0].simulated_throughput <= free.configs[0].simulated_throughput + 1e-9
+            r.configs[0].simulated_throughput.unwrap()
+                <= free.configs[0].simulated_throughput.unwrap() + 1e-9
         );
     }
 
@@ -493,21 +554,59 @@ mod tests {
         assert!(r.scored > r.confirmed);
         for c in &r.configs {
             assert!(c.spec.starts_with("gemm pipeline"));
-            assert!(c.simulated_throughput > 0.0);
+            assert!(c.simulated_throughput.unwrap() > 0.0);
         }
         // ranked best-first by the simulated metric
         for pair in r.configs.windows(2) {
-            assert!(pair[0].simulated_throughput >= pair[1].simulated_throughput - 1e-9);
+            assert!(
+                pair[0].simulated_throughput.unwrap()
+                    >= pair[1].simulated_throughput.unwrap() - 1e-9
+            );
         }
     }
 
     #[test]
     fn numeric_and_zero_top_are_typed_errors() {
         let w = Workload::parse_spec("numeric chain tf32 f32 4").unwrap();
-        let err = tune_workload(&w, &a100(), Objective::MaxThroughput, 4, "sim", 1).unwrap_err();
+        let err =
+            tune_workload(&w, &a100(), Objective::MaxThroughput, 4, "sim", 1, None).unwrap_err();
         assert!(err.contains("numeric"), "{err}");
         let m = Workload::parse_spec("mma fp16 f32 m16n8k16").unwrap();
-        assert!(tune_workload(&m, &a100(), Objective::MinLatency, 0, "sim", 1).is_err());
+        assert!(tune_workload(&m, &a100(), Objective::MinLatency, 0, "sim", 1, None).is_err());
+    }
+
+    #[test]
+    fn expired_budget_degrades_to_predicted_only_ranking() {
+        // a fresh workload spec not used by any other test in this
+        // module, so the process-wide cell cache holds none of its
+        // cells and the 0 ms budget cuts off every fresh simulation
+        let w = Workload::parse_spec("mma fp16 f16 m16n8k8").unwrap();
+        let r = tune_workload(
+            &w,
+            &a100(),
+            Objective::MaxThroughput,
+            4,
+            "sim",
+            2,
+            Some(Budget::from_ms(0)),
+        )
+        .unwrap();
+        assert_eq!(r.confirmed, 0, "{r:?}");
+        assert_eq!(r.configs.len(), 4, "frontier still reported");
+        for c in &r.configs {
+            assert!(!c.confirmed);
+            assert!(c.simulated_latency.is_none() && c.latency_rel_err.is_none());
+            assert!(!c.within_calibration, "no pair to check: {c:?}");
+            assert!(c.predicted.throughput > 0.0);
+        }
+        // ranked by the prediction, best first
+        for pair in r.configs.windows(2) {
+            assert!(pair[0].predicted.throughput >= pair[1].predicted.throughput - 1e-9);
+        }
+        let j = r.to_json();
+        let first = &j.get("configs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("confirmed").unwrap().as_bool(), Some(false));
+        assert!(first.get("simulated").is_none());
     }
 
     #[test]
@@ -523,6 +622,7 @@ mod tests {
             assert!(c.get("predicted").unwrap().get_f64("latency").unwrap() > 0.0);
             assert!(c.get("simulated").unwrap().get_f64("latency").unwrap() > 0.0);
             assert!(c.get_f64("latency_rel_err").is_some());
+            assert_eq!(c.get("confirmed").unwrap().as_bool(), Some(true));
         }
         let ratio = j.get_f64("pruning_ratio").unwrap();
         assert!((0.0..1.0).contains(&ratio), "{ratio}");

@@ -1,0 +1,262 @@
+//! Integration: robustness under injected faults and deadlines, over
+//! real sockets against `repro serve` subprocesses.
+//!
+//! Four contracts:
+//!   1. `store.read:err` faults degrade to misses — a chaotic replica
+//!      re-simulates and stays bit-identical to a fault-free one, and
+//!      the injections are observable in `/v1/metrics`.
+//!   2. A blown `deadline_ms` degrades plan units to the calibrated
+//!      analytic prediction (200, marked, never cached); the same plan
+//!      without a deadline serves the simulated value unmarked.
+//!   3. `sim:panic` faults surface as typed 500 `internal` responses —
+//!      the worker pool absorbs the panic and the server stays healthy.
+//!   4. `queue:full` sheds are retried by loadgen with backoff, and the
+//!      extended accounting identity still balances the books.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use tcbench::device;
+use tcbench::loadgen::{self, http_request, LoadgenConfig};
+use tcbench::util::Json;
+use tcbench::workload::{self, Workload};
+
+/// A per-test scratch tree under the target-adjacent temp dir.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tcbench_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+struct Served {
+    child: Child,
+    addr: String,
+}
+
+impl Served {
+    /// Spawn `repro serve --addr 127.0.0.1:0` plus `extra` flags (the
+    /// chaos spec, a cell store, ...) and parse the bound address from
+    /// the startup banner on stderr.
+    fn spawn(cwd: &Path, extra: &[&str]) -> Served {
+        std::fs::create_dir_all(cwd).expect("server cwd");
+        let mut args = vec!["serve", "--addr", "127.0.0.1:0", "--threads", "2"];
+        args.extend_from_slice(extra);
+        let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(&args)
+            .current_dir(cwd)
+            .stdout(Stdio::null())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn repro serve");
+        let stderr = child.stderr.take().expect("stderr piped");
+        let mut banner = String::new();
+        let mut addr = None;
+        for line in BufReader::new(stderr).lines() {
+            let line = line.expect("read server stderr");
+            banner.push_str(&line);
+            banner.push('\n');
+            if let Some(rest) = line.split("listening on http://").nth(1) {
+                let end = rest.find(|c: char| c.is_whitespace()).unwrap_or(rest.len());
+                addr = Some(rest[..end].to_string());
+                break;
+            }
+            if banner.len() > 16_384 {
+                break;
+            }
+        }
+        let addr = addr.unwrap_or_else(|| {
+            let _ = child.kill();
+            panic!("no listening banner from repro serve; stderr so far:\n{banner}")
+        });
+        Served { child, addr }
+    }
+
+    /// One round trip; the caller judges the status (faults are the
+    /// point of this file, so non-200s are data, not errors).
+    fn post(&self, path: &str, body: &str) -> (u16, Json) {
+        let (status, response) =
+            http_request(&self.addr, "POST", path, body).expect("http round trip");
+        (status, Json::parse(&response).expect("JSON body"))
+    }
+
+    fn metrics(&self) -> Json {
+        let (status, response) =
+            http_request(&self.addr, "GET", "/v1/metrics", "").expect("metrics scrape");
+        assert_eq!(status, 200);
+        Json::parse(&response).expect("JSON").get("data").expect("data").clone()
+    }
+}
+
+impl Drop for Served {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// The (latency, throughput) bit patterns of every cell in a sweep
+/// response — what must survive injected store faults untouched.
+fn cell_bits(result: &Json) -> Vec<(u64, u64)> {
+    result
+        .get("cells")
+        .expect("cells")
+        .as_arr()
+        .expect("cells array")
+        .iter()
+        .map(|c| (c.get_f64("latency").unwrap().to_bits(), c.get_f64("throughput").unwrap().to_bits()))
+        .collect()
+}
+
+fn data_of(j: &Json) -> Json {
+    assert_eq!(j.get_str("schema"), Some("tcserved/v1"), "{j}");
+    j.get("data").unwrap_or_else(|| panic!("no data in {j}")).clone()
+}
+
+#[test]
+fn store_read_faults_degrade_to_misses_and_stay_bit_identical() {
+    let base = scratch("chaos_store");
+    let cells = base.join("cells");
+    let cells_flag = cells.to_str().unwrap().to_string();
+    let sweep_body = r#"{"instr":"ldmatrix x2","device":"a100"}"#;
+
+    // fault-free replica seeds the shared store and fixes the truth
+    let bits_clean;
+    {
+        let a = Served::spawn(&base.join("a"), &["--cell-store", &cells_flag]);
+        let (status, j) = a.post("/v1/sweep", sweep_body);
+        assert_eq!(status, 200, "{j}");
+        bits_clean = cell_bits(data_of(&j).get("result").expect("result"));
+        assert!(!bits_clean.is_empty());
+    }
+
+    // chaotic replica: half its store reads fail — every injected err
+    // must degrade to a miss and re-simulate to the identical bits
+    let b = Served::spawn(
+        &base.join("b"),
+        &["--cell-store", &cells_flag, "--chaos", "store.read:err@0.5", "--chaos-seed", "3"],
+    );
+    let (status, j) = b.post("/v1/sweep", sweep_body);
+    assert_eq!(status, 200, "{j}");
+    let bits_chaotic = cell_bits(data_of(&j).get("result").expect("result"));
+    assert_eq!(bits_clean, bits_chaotic, "store faults must never change served numbers");
+
+    let m = b.metrics();
+    let chaos = m.get("chaos").expect("chaos section");
+    assert_eq!(chaos.get("enabled").and_then(Json::as_bool), Some(true), "{m}");
+    assert_eq!(chaos.get_str("spec"), Some("store.read:err@0.5"), "{m}");
+    assert!(chaos.get_u64("injected_total").unwrap() > 0, "no faults fired: {m}");
+    assert!(
+        chaos.get("by_fault").unwrap().get_u64("store.read:err").unwrap() > 0,
+        "{m}"
+    );
+    drop(b);
+
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn blown_deadlines_degrade_to_the_analytic_prediction_over_the_wire() {
+    let base = scratch("chaos_deadline");
+    let s = Served::spawn(&base, &[]);
+
+    let (status, j) = s.post(
+        "/v1/plan",
+        r#"{"workload":"mma fp16 f32 m16n8k16","device":"a100",
+            "points":[[4,2]],"backend":"native","deadline_ms":0}"#,
+    );
+    assert_eq!(status, 200, "{j}");
+    let unit = data_of(&j).get("units").expect("units").as_arr().expect("array")[0].clone();
+    let marker = unit.get("degraded").expect("degraded marker").clone();
+    assert_eq!(marker.get("predicted").and_then(Json::as_bool), Some(true), "{j}");
+    // the served numbers are bit-exactly the closed-form prediction the
+    // client could not have waited for the simulator to confirm
+    let load = Workload::parse_spec("mma fp16 f32 m16n8k16").unwrap();
+    let dev = device::by_name("a100").unwrap();
+    let pred = load.predict(&dev, workload::ExecPoint::new(4, 2)).unwrap();
+    let result = unit.get("result").expect("result");
+    assert_eq!(result.get_f64("latency"), Some(pred.latency), "{j}");
+    assert_eq!(result.get_f64("throughput"), Some(pred.throughput), "{j}");
+
+    // the degraded payload was not cached: the unhurried retry of the
+    // same plan simulates for real and serves an unmarked unit
+    let (status, j) = s.post(
+        "/v1/plan",
+        r#"{"workload":"mma fp16 f32 m16n8k16","device":"a100",
+            "points":[[4,2]],"backend":"native"}"#,
+    );
+    assert_eq!(status, 200, "{j}");
+    let unit = data_of(&j).get("units").expect("units").as_arr().expect("array")[0].clone();
+    assert!(unit.get("degraded").is_none(), "{j}");
+
+    // both metric surfaces observed the degradation
+    let m = s.metrics();
+    let rob = m.get("robustness").expect("robustness section");
+    assert!(rob.get_u64("degraded_total").unwrap() >= 1, "{m}");
+    assert!(rob.get("degraded_by_family").unwrap().get_u64("mma").unwrap() >= 1, "{m}");
+    let (status, prom) = http_request(&s.addr, "GET", "/metrics", "").expect("prometheus scrape");
+    assert_eq!(status, 200);
+    let line = prom
+        .lines()
+        .find(|l| l.starts_with("tcserved_degraded_total "))
+        .unwrap_or_else(|| panic!("tcserved_degraded_total missing:\n{prom}"));
+    assert!(!line.ends_with(" 0"), "{line}");
+}
+
+#[test]
+fn sim_panics_become_typed_internal_errors_and_the_server_survives() {
+    let base = scratch("chaos_panic");
+    let s = Served::spawn(&base, &["--chaos", "sim:panic@1.0", "--chaos-seed", "11"]);
+
+    let (status, j) = s.post("/v1/sweep", r#"{"instr":"ldmatrix x1","device":"a100"}"#);
+    assert_eq!(status, 500, "{j}");
+    let err = j.get("error").expect("error object");
+    assert_eq!(err.get_str("code"), Some("internal"), "{j}");
+
+    // the panic was absorbed by the worker, not the process: liveness
+    // and the fault ledger are both still being served
+    let (status, body) = http_request(&s.addr, "GET", "/healthz", "").expect("healthz");
+    assert_eq!(status, 200, "{body}");
+    let m = s.metrics();
+    let chaos = m.get("chaos").expect("chaos section");
+    assert!(chaos.get("by_fault").unwrap().get_u64("sim:panic").unwrap() >= 1, "{m}");
+}
+
+#[test]
+fn loadgen_retries_queue_sheds_and_the_accounting_identity_balances() {
+    let base = scratch("chaos_queue");
+    let s = Served::spawn(&base, &["--chaos", "queue:full@0.3", "--chaos-seed", "7"]);
+
+    let cfg = LoadgenConfig {
+        addr: s.addr.clone(),
+        mix: loadgen::parse_mix("plan").unwrap(),
+        concurrency: 2,
+        duration_secs: 1.5,
+        retries: 3,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(&cfg).expect("loadgen run");
+    assert!(report.requests > 0, "no traffic generated");
+    // every logical request lands in exactly one terminal bucket
+    let accounted = report.ok
+        + report.retried_ok
+        + report.rejected
+        + report.gave_up
+        + report.http_errors
+        + report.transport_errors;
+    assert_eq!(accounted, report.requests, "{report:?}");
+    assert!(report.ok + report.retried_ok > 0, "nothing succeeded under chaos: {report:?}");
+    assert_eq!(report.transport_errors, 0, "{report:?}");
+    assert!(report.attempts >= report.requests, "{report:?}");
+    // with a 30% shed rate over this many requests, retries fired; with
+    // a non-zero budget, final 503s are gave_up, never rejected
+    assert!(report.attempts > report.requests, "no retry ever fired: {report:?}");
+    assert_eq!(report.rejected, 0, "non-zero retry budget must classify 503s as gave_up");
+
+    let m = s.metrics();
+    let chaos = m.get("chaos").expect("chaos section");
+    assert!(chaos.get("by_fault").unwrap().get_u64("queue:full").unwrap() >= 1, "{m}");
+    drop(s);
+    let _ = std::fs::remove_dir_all(&base);
+}

@@ -214,7 +214,12 @@ fn loadgen_smoke_reports_latency_and_hit_rates() {
     };
     let report = loadgen::run(&cfg).expect("loadgen run");
     assert!(report.requests > 0, "no traffic generated");
-    let accounted = report.ok + report.rejected + report.http_errors + report.transport_errors;
+    let accounted = report.ok
+        + report.retried_ok
+        + report.rejected
+        + report.gave_up
+        + report.http_errors
+        + report.transport_errors;
     assert_eq!(accounted, report.requests);
     assert!(report.ok > 0, "{report:?}");
     assert_eq!(report.transport_errors, 0, "{report:?}");
